@@ -1,0 +1,67 @@
+//! `cargo bench` — regenerates every table and figure of the paper's
+//! evaluation (DESIGN.md per-experiment index) and writes the aggregate
+//! JSON report to `bench_report.json`.
+//!
+//! Criterion is unavailable offline; this is a plain `harness = false`
+//! binary over `ls_gaussian::bench`.
+//!
+//! Usage:
+//!   cargo bench                         # everything, default scale
+//!   cargo bench -- --exp fig14          # one experiment
+//!   cargo bench -- --scale 0.3 --frames 15
+
+use ls_gaussian::bench::{run_experiment, ExpOptions, ALL_EXPERIMENTS};
+use ls_gaussian::util::cli::Args;
+use ls_gaussian::util::json::Json;
+use std::time::Instant;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let opts = ExpOptions {
+        scale: args.f32_or("scale", 0.35),
+        width: args.usize_or("width", 320),
+        height: args.usize_or("height", 192),
+        frames: args.usize_or("frames", 10),
+        window: args.usize_or("window", 5),
+    };
+    println!(
+        "LS-Gaussian paper experiments | scale={} {}x{} frames={} window={}",
+        opts.scale, opts.width, opts.height, opts.frames, opts.window
+    );
+
+    let ids: Vec<String> = match args.get("exp") {
+        Some(id) => vec![id.to_string()],
+        None => {
+            let mut v: Vec<String> = ALL_EXPERIMENTS.iter().map(|s| s.to_string()).collect();
+            v.push("tab1".to_string());
+            v
+        }
+    };
+
+    let mut report = Json::obj();
+    let mut meta = Json::obj();
+    meta.set("scale", opts.scale)
+        .set("width", opts.width)
+        .set("height", opts.height)
+        .set("frames", opts.frames)
+        .set("window", opts.window);
+    report.set("options", meta);
+
+    for id in &ids {
+        let t0 = Instant::now();
+        match run_experiment(id, &opts) {
+            Some(json) => {
+                println!("[{id}] completed in {:.1}s", t0.elapsed().as_secs_f64());
+                report.set(id, json);
+            }
+            None => {
+                eprintln!("unknown experiment '{id}'; known: {ALL_EXPERIMENTS:?} + tab1");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    let out = "bench_report.json";
+    std::fs::write(out, report.to_string_pretty()).expect("writing report");
+    println!("\nwrote {out}");
+}

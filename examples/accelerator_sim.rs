@@ -1,0 +1,87 @@
+//! Hardware exploration: run one scene's workload through every
+//! architecture variant (Original / GSCore / MetaSapiens-like / LS-Gaussian
+//! with LD1/LD2 ablations) and print period, utilization and speedup —
+//! a miniature of the paper's Figs. 14/15a and Table I.
+//!
+//!     cargo run --release --example accelerator_sim -- --scene train
+
+use ls_gaussian::coordinator::{CoordinatorConfig, StreamingCoordinator, WarpMode};
+use ls_gaussian::render::{IntersectMode, Renderer};
+use ls_gaussian::scene::generate;
+use ls_gaussian::sim::{AccelConfig, AccelVariant, Accelerator, GpuModel, WorkloadTrace};
+use ls_gaussian::util::cli::Args;
+
+fn traces_for(scene_name: &str, scale: f32, frames: usize, cfg: CoordinatorConfig) -> Vec<WorkloadTrace> {
+    let scene = generate(scene_name, scale, 320, 192);
+    let poses = scene.sample_poses(frames);
+    let intr = scene.intrinsics;
+    let mut c = StreamingCoordinator::new(Renderer::new(scene.cloud, intr), cfg);
+    c.run_sequence(&poses)
+        .iter()
+        .map(|r| WorkloadTrace::from_frame(&r.trace, &intr))
+        .collect()
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let scene = args.get_or("scene", "train").to_string();
+    let scale = args.f32_or("scale", 0.2);
+    let frames = args.usize_or("frames", 10);
+
+    println!("accelerator exploration on '{scene}' (scale {scale}, {frames} frames)\n");
+
+    let dense = traces_for(&scene, scale, frames, CoordinatorConfig {
+        warp: WarpMode::None,
+        mode: IntersectMode::Aabb,
+        ..Default::default()
+    });
+    let obb = traces_for(&scene, scale, frames, CoordinatorConfig {
+        warp: WarpMode::None,
+        mode: IntersectMode::Obb,
+        ..Default::default()
+    });
+    let lsg = traces_for(&scene, scale, frames, CoordinatorConfig::default());
+
+    let gpu = GpuModel::default();
+    let t_gpu = gpu.sequence_time(&dense) / (gpu.freq_ghz * 1e9);
+    println!("edge-GPU baseline (dense AABB): {:8.1} FPS", 1.0 / t_gpu);
+
+    let cfg = AccelConfig::default();
+    let rows: [(&str, AccelVariant, &Vec<WorkloadTrace>, AccelConfig); 5] = [
+        ("Original (no streaming)", AccelVariant::ORIGINAL, &dense, cfg),
+        ("GSCore (streaming, OBB)", AccelVariant::GSCORE, &obb, cfg),
+        (
+            "MetaSapiens-like (foveated)",
+            AccelVariant::GSCORE,
+            &dense,
+            AccelConfig { raster_workload_scale: 0.45, ..cfg },
+        ),
+        ("LS-Gaussian +LD1", AccelVariant::LD1, &lsg, cfg),
+        ("LS-Gaussian full (+LD2)", AccelVariant::FULL, &lsg, cfg),
+    ];
+    println!(
+        "{:<30} {:>9} {:>9} {:>8} {:>9}",
+        "architecture", "FPS", "speedup", "util", "bubbles"
+    );
+    for (name, variant, traces, c) in rows {
+        let acc = Accelerator::new(c, variant);
+        let t = acc.sequence_period(traces) / (c.freq_ghz * 1e9);
+        let bub: f64 = traces.iter().map(|tr| acc.frame_time(tr).bubbles).sum::<f64>()
+            / traces.len() as f64;
+        println!(
+            "{:<30} {:>9.1} {:>8.2}x {:>7.1}% {:>9.0}",
+            name,
+            1.0 / t,
+            t_gpu / t,
+            acc.sequence_utilization(traces) * 100.0,
+            bub
+        );
+    }
+    println!(
+        "\narea: GSCore {:.2} mm² | LS-Gaussian {:.2} mm² (+{:.2}) | MetaSapiens {:.2} mm²",
+        ls_gaussian::sim::gscore_area(),
+        ls_gaussian::sim::lsg_total_area(ls_gaussian::sim::ReuseLevel::VtuAndGsu),
+        ls_gaussian::sim::lsg_added_area(ls_gaussian::sim::ReuseLevel::VtuAndGsu),
+        ls_gaussian::sim::area::METASAPIENS_AREA
+    );
+}

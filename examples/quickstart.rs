@@ -1,0 +1,72 @@
+//! Quickstart: generate a procedural scene, render one frame through BOTH
+//! backends (native rust rasterizer and the AOT/PJRT path), verify they
+//! agree, and write PNGs.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use ls_gaussian::metrics::psnr;
+use ls_gaussian::render::{IntersectMode, RenderConfig, Renderer};
+use ls_gaussian::runtime::PjrtRenderer;
+use ls_gaussian::scene::generate;
+use ls_gaussian::util::png::write_png;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A scene: "drjohnson"-statistics indoor cloud at 20% scale.
+    let scene = generate("drjohnson", 0.2, 320, 192);
+    println!(
+        "scene: {} ({} gaussians, {}x{})",
+        scene.preset.name,
+        scene.cloud.len(),
+        scene.intrinsics.width,
+        scene.intrinsics.height
+    );
+    let pose = scene.sample_poses(1)[0];
+
+    // 2. Native render with the paper's TAIT intersection test.
+    let renderer = Renderer::new(scene.cloud, scene.intrinsics).with_config(RenderConfig {
+        mode: IntersectMode::Tait,
+        ..Default::default()
+    });
+    let t0 = std::time::Instant::now();
+    let (native_frame, stats) = renderer.render(&pose);
+    println!(
+        "native: {} splats, {} pairs, {:.1} ms ({})",
+        stats.n_splats,
+        stats.pairs,
+        t0.elapsed().as_secs_f64() * 1e3,
+        stats.times.breakdown()
+    );
+    write_png(
+        Path::new("quickstart_native.png"),
+        native_frame.width,
+        native_frame.height,
+        &native_frame.to_rgb8(),
+    )?;
+
+    // 3. The same frame through the AOT artifacts via PJRT (L1 Pallas
+    //    kernel lowered by python/compile/aot.py, executed by the xla
+    //    crate — no Python at runtime).
+    let pjrt = PjrtRenderer::new(renderer)?;
+    println!("pjrt: platform = {}", pjrt.engine.platform());
+    let t1 = std::time::Instant::now();
+    let (pjrt_frame, _, fallback) = pjrt.render(&pose)?;
+    println!(
+        "pjrt:   rendered in {:.1} ms ({} native-fallback tiles)",
+        t1.elapsed().as_secs_f64() * 1e3,
+        fallback
+    );
+    write_png(
+        Path::new("quickstart_pjrt.png"),
+        pjrt_frame.width,
+        pjrt_frame.height,
+        &pjrt_frame.to_rgb8(),
+    )?;
+
+    // 4. The two backends must agree.
+    let p = psnr(&native_frame.rgb, &pjrt_frame.rgb);
+    println!("backend agreement: {p:.1} dB PSNR (>= 45 expected)");
+    assert!(p > 45.0, "backends diverged");
+    println!("wrote quickstart_native.png / quickstart_pjrt.png");
+    Ok(())
+}

@@ -1,0 +1,113 @@
+"""AOT lowering: jax -> HLO *text* -> artifacts/ for the rust runtime.
+
+HLO text (NOT serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids that the `xla` crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md and gen_hlo.py).
+
+Usage:  cd python && python -m compile.aot --outdir ../artifacts
+Emits one .hlo.txt per graph variant plus manifest.json describing shapes,
+which rust/src/runtime/artifacts.rs consumes.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Tile-batch variants compiled for the sparse-rendering hot path: the
+# runtime picks the smallest K that fits a tile's (DPES-culled) list.
+RASTERIZE_VARIANTS = [(16, 64), (16, 256), (16, 1024)]
+PROJECT_CHUNK = 4096
+
+
+def to_hlo_text(fn, *args) -> str:
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def build_all(outdir: str, width: int, height: int) -> dict:
+    os.makedirs(outdir, exist_ok=True)
+    manifest = {"version": 1, "tile": 16, "artifacts": {}}
+
+    def emit(name, fn, *args, meta=None):
+        text = to_hlo_text(fn, *args)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(outdir, path), "w") as f:
+            f.write(text)
+        entry = {"file": path}
+        entry.update(meta or {})
+        manifest["artifacts"][name] = entry
+        print(f"  {name}: {len(text)} chars")
+
+    for b, k in RASTERIZE_VARIANTS:
+        emit(
+            f"rasterize_b{b}_k{k}",
+            model.rasterize_tiles,
+            f32(b, k, 2),
+            f32(b, k, 3),
+            f32(b, k, 3),
+            f32(b, k),
+            f32(b, k),
+            f32(b, k),
+            f32(b, 2),
+            f32(3),
+            meta={"kind": "rasterize", "batch": b, "k": k},
+        )
+
+    emit(
+        f"project_n{PROJECT_CHUNK}",
+        model.project_gaussians,
+        f32(PROJECT_CHUNK, 3),
+        f32(PROJECT_CHUNK, 3),
+        f32(PROJECT_CHUNK, 4),
+        f32(PROJECT_CHUNK),
+        f32(PROJECT_CHUNK, 12),
+        f32(4, 4),
+        f32(6),
+        f32(3),
+        meta={"kind": "project", "chunk": PROJECT_CHUNK},
+    )
+
+    emit(
+        f"warp_{width}x{height}",
+        model.warp_frame,
+        f32(height, width, 3),
+        f32(height, width),
+        f32(height, width),
+        f32(4, 4),
+        f32(6),
+        meta={"kind": "warp", "width": width, "height": height},
+    )
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--width", type=int, default=256)
+    ap.add_argument("--height", type=int, default=192)
+    args = ap.parse_args()
+    print(f"lowering AOT artifacts into {args.outdir}")
+    build_all(args.outdir, args.width, args.height)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

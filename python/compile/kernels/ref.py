@@ -1,0 +1,94 @@
+"""Pure-jnp oracle for the Pallas rasterization kernel.
+
+Deliberately a *different formulation* from the kernel's sequential loop:
+the whole (B, K, 16, 16) alpha tensor is materialized and blending uses the
+closed-form exclusive cumulative product
+
+    T_k = prod_{j<k} (1 - alpha_j),   contribution_k = alpha_k * T_k,
+
+with early stopping expressed as "contributions freeze once T drops below
+1e-4" (the exclusive product is exact up to and including the crossing
+Gaussian, which is exactly the set the sequential loop blends).
+"""
+
+import jax.numpy as jnp
+
+from .rasterize import (
+    ALPHA_CAP,
+    ALPHA_THRESHOLD,
+    E_MAX,
+    INVALID_DEPTH,
+    T_EPS,
+    TILE,
+)
+
+
+def rasterize_reference(means, conics, colors, opacities, depths, valid, origins, bg):
+    """Reference implementation; same signature/returns as rasterize_tiles."""
+    b, k = means.shape[0], means.shape[1]
+    ix = jnp.arange(TILE, dtype=jnp.float32)
+    px = origins[:, None, None, 0] + ix[None, None, :] + 0.5  # (B,1,16)->(B,16,16) via bcast below
+    py = origins[:, None, None, 1] + ix[None, :, None] + 0.5
+    px = jnp.broadcast_to(px, (b, TILE, TILE))
+    py = jnp.broadcast_to(py, (b, TILE, TILE))
+
+    dx = px[:, None] - means[:, :, 0][:, :, None, None]  # (B,K,16,16)
+    dy = py[:, None] - means[:, :, 1][:, :, None, None]
+    ca = conics[:, :, 0][:, :, None, None]
+    cb = conics[:, :, 1][:, :, None, None]
+    cc = conics[:, :, 2][:, :, None, None]
+    e = 0.5 * (ca * dx * dx + 2.0 * cb * dx * dy + cc * dy * dy)
+    in_support = (e >= 0.0) & (e <= E_MAX)
+    alpha = jnp.minimum(opacities[:, :, None, None] * jnp.exp(-e), ALPHA_CAP)
+    alpha = jnp.where(
+        in_support & (alpha >= ALPHA_THRESHOLD) & (valid[:, :, None, None] > 0.5),
+        alpha,
+        0.0,
+    )
+
+    # Exclusive cumulative transmittance.
+    one_minus = 1.0 - alpha
+    cum = jnp.cumprod(one_minus, axis=1)  # inclusive
+    t_excl = jnp.concatenate(
+        [jnp.ones_like(cum[:, :1]), cum[:, :-1]], axis=1
+    )  # (B,K,16,16)
+    active = t_excl >= T_EPS
+    w = jnp.where(active, alpha * t_excl, 0.0)
+
+    rgb = jnp.einsum("bkxy,bkc->bxyc", w, colors)
+    z = depths[:, :, None, None]
+    dacc = jnp.sum(w * z, axis=1)
+    wacc = jnp.sum(w, axis=1)
+
+    # Final transmittance freezes at the crossing Gaussian.
+    t_incl = jnp.where(active, cum, 0.0)  # value after each processed k
+    crossed = active & (cum < T_EPS)  # (B,K,16,16)
+    any_cross = jnp.any(crossed, axis=1)
+    # Transmittance after the last *processed* Gaussian:
+    processed = active  # every active k was processed
+    last_processed_t = jnp.where(
+        jnp.any(processed, axis=1),
+        # t after the last processed index = min over processed of t_incl
+        jnp.min(jnp.where(processed, t_incl, jnp.inf), axis=1),
+        1.0,
+    )
+    trans = jnp.where(any_cross, last_processed_t, last_processed_t)
+    alpha_out = 1.0 - trans
+
+    rgb = rgb + trans[..., None] * bg[None, None, None, :]
+    depth_out = jnp.where(wacc > 1e-6, dacc / jnp.maximum(wacc, 1e-12), INVALID_DEPTH)
+
+    # Truncation depth: depth of the crossing Gaussian, else the last valid
+    # Gaussian's depth (the whole list was traversed).
+    cross_idx = jnp.argmax(crossed, axis=1)  # first True (0 if none)
+    trunc_cross = jnp.take_along_axis(
+        jnp.broadcast_to(z, crossed.shape), cross_idx[:, None], axis=1
+    )[:, 0]
+    any_valid = jnp.any(valid > 0.5, axis=1)
+    last_valid_idx = (k - 1) - jnp.argmax(jnp.flip(valid > 0.5, axis=1), axis=1)
+    last_depth = jnp.take_along_axis(depths, last_valid_idx[:, None], axis=1)[:, 0]
+    last_depth = jnp.where(any_valid, last_depth, INVALID_DEPTH)
+    trunc_out = jnp.where(
+        any_cross, trunc_cross, last_depth[:, None, None] * jnp.ones((1, TILE, TILE))
+    )
+    return rgb, alpha_out, depth_out, trunc_out

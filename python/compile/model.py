@@ -1,0 +1,167 @@
+"""L2: the jax compute graphs AOT-lowered into ``artifacts/`` and executed
+from rust via PJRT (never imported at runtime).
+
+Three graphs:
+
+* :func:`rasterize_tiles` — re-exported from the L1 Pallas kernel; the
+  request-path hot spot (sparse tile re-rendering).
+* :func:`project_gaussians` — preprocessing math for a fixed-size chunk of
+  Gaussians: world->camera, EWA covariance projection, conic, degree-1 SH
+  color. Mirrors rust/src/render/preprocess.rs exactly (same dilation,
+  Jacobian clamping and SH constants) so the two backends agree numerically.
+* :func:`warp_frame` — viewpoint transformation (Algo. 1 lines 2-4):
+  back-project, rigid transform, forward splat with a z-buffer, expressed
+  with scatter-min so it lowers to a single fused HLO module.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.rasterize import rasterize_tiles  # noqa: F401  (re-export)
+
+COV_DILATION = 0.3
+# Real SH constants, degree 0/1 (match rust/src/math/sh.rs).
+SH_C0 = 0.28209479
+SH_C1 = 0.48860251
+
+
+def quat_to_mat(q):
+    """(N,4) wxyz unit quaternions -> (N,3,3) rotation matrices."""
+    w, x, y, z = q[:, 0], q[:, 1], q[:, 2], q[:, 3]
+    return jnp.stack(
+        [
+            jnp.stack([1 - 2 * (y * y + z * z), 2 * (x * y - w * z), 2 * (x * z + w * y)], -1),
+            jnp.stack([2 * (x * y + w * z), 1 - 2 * (x * x + z * z), 2 * (y * z - w * x)], -1),
+            jnp.stack([2 * (x * z - w * y), 2 * (y * z + w * x), 1 - 2 * (x * x + y * y)], -1),
+        ],
+        -2,
+    )
+
+
+def project_gaussians(positions, scales, rotations, opacities, sh, w2c, intr, cam_pos):
+    """Project a fixed-size chunk of Gaussians.
+
+    Args:
+      positions: (N, 3), scales: (N, 3), rotations: (N, 4) wxyz,
+      opacities: (N,), sh: (N, 12) degree-1 coeffs (coeff-major, rgb-minor),
+      w2c: (4, 4) world->camera, intr: (6,) = [fx, fy, cx, cy, near, far],
+      cam_pos: (3,) camera position in world space.
+
+    Returns (means2d (N,2), cov2d (N,3), conic (N,3), depth (N,), color
+    (N,3), visible (N,) in {0,1}).
+    """
+    fx, fy, cx, cy, near, far = (intr[i] for i in range(6))
+    rot = w2c[:3, :3]
+    p_cam = positions @ rot.T + w2c[:3, 3][None, :]
+    z = p_cam[:, 2]
+    visible = (z >= near) & (z <= far)
+
+    zs = jnp.maximum(z, 1e-6)
+    mean_x = fx * p_cam[:, 0] / zs + cx
+    mean_y = fy * p_cam[:, 1] / zs + cy
+    means2d = jnp.stack([mean_x, mean_y], -1)
+
+    # World covariance R S S^T R^T.
+    r = quat_to_mat(rotations)
+    rs = r * scales[:, None, :]
+    cov3d = rs @ jnp.swapaxes(rs, 1, 2)
+
+    # EWA Jacobian with frustum-edge clamping (2*cx = width).
+    lim_x = 1.3 * cx / fx
+    lim_y = 1.3 * cy / fy
+    tx = jnp.clip(p_cam[:, 0] / zs, -lim_x, lim_x) * zs
+    ty = jnp.clip(p_cam[:, 1] / zs, -lim_y, lim_y) * zs
+    zero = jnp.zeros_like(zs)
+    j = jnp.stack(
+        [
+            jnp.stack([fx / zs, zero, -fx * tx / (zs * zs)], -1),
+            jnp.stack([zero, fy / zs, -fy * ty / (zs * zs)], -1),
+            jnp.stack([zero, zero, zero], -1),
+        ],
+        -2,
+    )  # (N,3,3)
+    t = j @ rot[None, :, :]
+    cov2 = t @ cov3d @ jnp.swapaxes(t, 1, 2)
+    a = cov2[:, 0, 0] + COV_DILATION
+    bb = cov2[:, 0, 1]
+    c = cov2[:, 1, 1] + COV_DILATION
+    det = a * c - bb * bb
+    visible = visible & (det > 1e-12)
+    inv = 1.0 / jnp.where(det > 1e-12, det, 1.0)
+    conic = jnp.stack([c * inv, -bb * inv, a * inv], -1)
+
+    # Degree-1 SH color along the view direction.
+    d = positions - cam_pos[None, :]
+    d = d / jnp.maximum(jnp.linalg.norm(d, axis=-1, keepdims=True), 1e-9)
+    basis = jnp.stack(
+        [
+            jnp.full_like(d[:, 0], SH_C0),
+            -SH_C1 * d[:, 1],
+            SH_C1 * d[:, 2],
+            -SH_C1 * d[:, 0],
+        ],
+        -1,
+    )  # (N,4)
+    coeffs = sh.reshape(sh.shape[0], 4, 3)
+    color = jnp.einsum("nc,ncr->nr", basis, coeffs) + 0.5
+    color = jnp.maximum(color, 0.0)
+
+    return (
+        means2d,
+        jnp.stack([a, bb, c], -1),
+        conic,
+        z,
+        color,
+        visible.astype(jnp.float32),
+    )
+
+
+def warp_frame(rgb, depth, valid, ref2tgt, intr):
+    """Forward-splat reprojection with a z-buffer (Algo. 1 lines 2-4).
+
+    Args:
+      rgb: (H, W, 3), depth: (H, W), valid: (H, W) in {0,1},
+      ref2tgt: (4, 4) ref-camera -> tgt-camera rigid transform,
+      intr: (6,) = [fx, fy, cx, cy, near, far].
+
+    Returns (rgb_t (H,W,3), depth_t (H,W), filled (H,W) in {0,1}).
+    Only `valid` pixels are splatted (background/mask handling lives in the
+    rust coordinator, which owns the policy).
+    """
+    h, w = depth.shape
+    fx, fy, cx, cy, near, _far = (intr[i] for i in range(6))
+    ys, xs = jnp.meshgrid(jnp.arange(h, dtype=jnp.float32), jnp.arange(w, dtype=jnp.float32), indexing="ij")
+    px = xs + 0.5
+    py = ys + 0.5
+    x_cam = (px - cx) / fx * depth
+    y_cam = (py - cy) / fy * depth
+    p = jnp.stack([x_cam, y_cam, depth, jnp.ones_like(depth)], -1)  # (H,W,4)
+    pt = jnp.einsum("ij,hwj->hwi", ref2tgt, p)
+    zt = pt[..., 2]
+    ok = (valid > 0.5) & (zt > near)
+    ut = fx * pt[..., 0] / jnp.maximum(zt, 1e-6) + cx
+    vt = fy * pt[..., 1] / jnp.maximum(zt, 1e-6) + cy
+    txi = jnp.floor(ut).astype(jnp.int32)
+    tyi = jnp.floor(vt).astype(jnp.int32)
+    inb = ok & (txi >= 0) & (tyi >= 0) & (txi < w) & (tyi < h)
+    flat_idx = jnp.where(inb, tyi * w + txi, 0)
+
+    big = jnp.float32(1e30)
+    z_src = jnp.where(inb, zt, big).reshape(-1)
+    zmin = jnp.full((h * w,), big, jnp.float32).at[flat_idx.reshape(-1)].min(
+        z_src, mode="drop"
+    )
+    # A source pixel wins if its z equals the buffered min at its target.
+    winner = inb & (zt <= zmin[flat_idx] + 0.0)
+    rgb_t = (
+        jnp.zeros((h * w, 3), jnp.float32)
+        .at[flat_idx.reshape(-1)]
+        .max(
+            jnp.where(winner.reshape(-1, 1), rgb.reshape(-1, 3), -1.0),
+            mode="drop",
+        )
+    )
+    rgb_t = jnp.maximum(rgb_t, 0.0).reshape(h, w, 3)
+    filled = (zmin < big).astype(jnp.float32).reshape(h, w)
+    depth_t = jnp.where(zmin < big, zmin, jnp.inf).reshape(h, w)
+    return rgb_t, depth_t, filled

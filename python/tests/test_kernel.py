@@ -1,0 +1,186 @@
+"""L1 correctness: Pallas kernel vs the pure-jnp oracle.
+
+This is the core correctness signal of the compile path — the same kernel
+body is what the AOT artifacts embed, so agreement here + the rust-side
+parity test closes the loop.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.rasterize import (
+    ALPHA_THRESHOLD,
+    T_EPS,
+    TILE,
+    rasterize_tiles,
+)
+from compile.kernels.ref import rasterize_reference
+
+
+def make_inputs(rng, b=2, k=8, opacity_range=(0.05, 0.99), spread=24.0):
+    """Random but well-conditioned tile batches."""
+    origins = rng.uniform(0, 64, size=(b, 2)).astype(np.float32) // 16 * 16
+    means = (
+        origins[:, None, :]
+        + rng.uniform(-spread * 0.25, TILE + spread * 0.25, size=(b, k, 2))
+    ).astype(np.float32)
+    # Random SPD conics via random 2x2 A: conic = A A^T scaled.
+    a = rng.normal(size=(b, k, 2, 2)).astype(np.float32)
+    spd = a @ np.swapaxes(a, -1, -2) + 0.05 * np.eye(2, dtype=np.float32)
+    # Normalize so splats are a few pixels wide: conic ~ inverse cov.
+    cov = spd * rng.uniform(2.0, 40.0, size=(b, k, 1, 1)).astype(np.float32)
+    det = cov[..., 0, 0] * cov[..., 1, 1] - cov[..., 0, 1] ** 2
+    conics = np.stack(
+        [cov[..., 1, 1] / det, -cov[..., 0, 1] / det, cov[..., 0, 0] / det], -1
+    ).astype(np.float32)
+    colors = rng.uniform(0, 1, size=(b, k, 3)).astype(np.float32)
+    opac = rng.uniform(*opacity_range, size=(b, k)).astype(np.float32)
+    depths = np.sort(rng.uniform(0.5, 20.0, size=(b, k)).astype(np.float32), axis=1)
+    valid = (rng.uniform(size=(b, k)) > 0.2).astype(np.float32)
+    bg = rng.uniform(0, 1, size=(3,)).astype(np.float32)
+    return means, conics, colors, opac, depths, valid, origins, bg
+
+
+def run_both(args):
+    out_k = rasterize_tiles(*[jnp.asarray(x) for x in args])
+    out_r = rasterize_reference(*[jnp.asarray(x) for x in args])
+    return [np.asarray(x) for x in out_k], [np.asarray(x) for x in out_r]
+
+
+def assert_match(out_k, out_r, tol=1e-5):
+    names = ["rgb", "alpha", "depth", "trunc"]
+    for name, a, b in zip(names, out_k, out_r):
+        finite = np.isfinite(b)
+        np.testing.assert_array_equal(np.isfinite(a), finite, err_msg=name)
+        np.testing.assert_allclose(
+            a[finite], b[finite], rtol=1e-4, atol=tol, err_msg=name
+        )
+
+
+class TestKernelVsOracle:
+    def test_basic_agreement(self):
+        rng = np.random.default_rng(0)
+        args = make_inputs(rng, b=4, k=16)
+        out_k, out_r = run_both(args)
+        assert_match(out_k, out_r)
+
+    def test_empty_tiles_render_background(self):
+        rng = np.random.default_rng(1)
+        args = list(make_inputs(rng, b=2, k=4))
+        args[5] = np.zeros_like(args[5])  # all invalid
+        out_k, out_r = run_both(args)
+        assert_match(out_k, out_r)
+        bg = args[7]
+        np.testing.assert_allclose(out_k[0][0, 0, 0], bg, atol=1e-6)
+        assert out_k[1].max() == 0.0  # alpha
+        assert np.isinf(out_k[2]).all()  # depth invalid
+
+    def test_opaque_stack_early_stops(self):
+        rng = np.random.default_rng(2)
+        b, k = 1, 32
+        origins = np.zeros((b, 2), np.float32)
+        means = np.tile(np.array([[8.0, 8.0]], np.float32), (k, 1))[None]
+        conics = np.tile(np.array([[0.02, 0.0, 0.02]], np.float32), (k, 1))[None]
+        colors = rng.uniform(0, 1, (b, k, 3)).astype(np.float32)
+        opac = np.full((b, k), 0.95, np.float32)
+        depths = np.linspace(1.0, 4.0, k, dtype=np.float32)[None]
+        valid = np.ones((b, k), np.float32)
+        bg = np.zeros(3, np.float32)
+        args = (means, conics, colors, opac, depths, valid, origins, bg)
+        out_k, out_r = run_both(args)
+        assert_match(out_k, out_r)
+        # Early stop fires within the first few gaussians at the tile
+        # center (corners see lower alpha and stop later).
+        assert out_k[3][0, 8, 8] < 1.5, out_k[3][0, 8, 8]
+        assert out_k[3].max() < 4.0  # everyone stops before the list ends
+        assert out_k[1].min() > 1.0 - T_EPS * 2
+
+    def test_single_faint_gaussian_below_threshold(self):
+        rng = np.random.default_rng(3)
+        args = list(make_inputs(rng, b=1, k=1, opacity_range=(1e-4, ALPHA_THRESHOLD * 0.9)))
+        out_k, out_r = run_both(args)
+        assert_match(out_k, out_r)
+        assert out_k[1].max() == 0.0
+
+    def test_blending_formula_known_case(self):
+        # Two flat gaussians at a pixel: C = a1 c1 + a2 (1-a1) c2 + T bg.
+        b, k = 1, 2
+        origins = np.zeros((b, 2), np.float32)
+        means = np.array([[[8.0, 8.0], [8.0, 8.0]]], np.float32)
+        conics = np.full((b, k, 3), 0.0, np.float32)
+        conics[..., 0] = 1e-6
+        conics[..., 2] = 1e-6  # ~flat over the tile
+        colors = np.array([[[1.0, 0.0, 0.0], [0.0, 0.0, 1.0]]], np.float32)
+        opac = np.array([[0.5, 0.8]], np.float32)
+        depths = np.array([[1.0, 2.0]], np.float32)
+        valid = np.ones((b, k), np.float32)
+        bg = np.array([0.0, 1.0, 0.0], np.float32)
+        out_k, _ = run_both((means, conics, colors, opac, depths, valid, origins, bg))
+        c = out_k[0][0, 8, 8]
+        np.testing.assert_allclose(c[0], 0.5, atol=1e-3)
+        np.testing.assert_allclose(c[2], 0.8 * 0.5, atol=1e-3)
+        np.testing.assert_allclose(c[1], 0.1, atol=1e-3)  # T=0.1 * green bg
+
+    def test_padding_is_inert(self):
+        rng = np.random.default_rng(4)
+        args = list(make_inputs(rng, b=2, k=8))
+        # Same inputs padded to k=32 with garbage in the invalid region.
+        pad = 24
+        padded = []
+        for i, x in enumerate(args[:6]):
+            g = rng.normal(size=(x.shape[0], pad) + x.shape[2:]).astype(np.float32)
+            if i == 4:  # depths must stay sorted-ish; padding is masked anyway
+                g = np.abs(g) + 100.0
+            padded.append(np.concatenate([x, g], axis=1))
+        padded[5][:, 8:] = 0.0  # valid=0 for padding
+        out_small, _ = run_both(tuple(args))
+        out_padded, _ = run_both(tuple(padded) + (args[6], args[7]))
+        assert_match(out_padded, out_small)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.integers(1, 4),
+    k=st.integers(1, 24),
+    lo=st.floats(0.01, 0.5),
+)
+def test_kernel_matches_oracle_fuzz(seed, b, k, lo):
+    """Hypothesis sweep over batch sizes, list lengths and opacity ranges."""
+    rng = np.random.default_rng(seed)
+    args = make_inputs(rng, b=b, k=k, opacity_range=(lo, min(lo + 0.5, 0.99)))
+    out_k, out_r = run_both(args)
+    assert_match(out_k, out_r)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_transmittance_invariants_fuzz(seed):
+    """alpha in [0,1]; depth finite iff something blended; rgb bounded."""
+    rng = np.random.default_rng(seed)
+    args = make_inputs(rng, b=2, k=12)
+    out_k, _ = run_both(args)
+    rgb, alpha, depth, trunc = out_k
+    assert (alpha >= 0).all() and (alpha <= 1.0).all()
+    assert (rgb >= -1e-6).all() and (rgb <= 2.0).all()
+    blended = alpha > 1e-6
+    assert np.isfinite(depth[blended]).all()
+    assert (depth[blended] > 0).all()
+
+
+def test_jit_compiles_once():
+    """rasterize_tiles must be jit-stable (no per-call retrace explosions)."""
+    rng = np.random.default_rng(7)
+    args = make_inputs(rng, b=2, k=8)
+    jargs = [jnp.asarray(x) for x in args]
+    out1 = rasterize_tiles(*jargs)
+    out2 = rasterize_tiles(*jargs)
+    for a, b in zip(out1, out2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

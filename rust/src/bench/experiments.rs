@@ -1,0 +1,702 @@
+//! The paper's evaluation, experiment by experiment. Each function prints
+//! the same rows/series the paper reports and returns a JSON record that
+//! the bench binary aggregates into `bench_report.json` (the source for
+//! EXPERIMENTS.md).
+//!
+//! Paper-vs-measured anchors live in DESIGN.md §Per-experiment index.
+
+use super::{f1, f2, pct, speedup, ExpOptions, Table};
+use crate::coordinator::{CoordinatorConfig, StreamingCoordinator, WarpMode};
+use crate::metrics::{psnr, ssim};
+use crate::render::{Frame, IntersectMode, RenderConfig, Renderer};
+use crate::scene::{generate, Pose, Scene, REAL_SCENES, SYNTHETIC_SCENES};
+use crate::sim::{AccelConfig, AccelVariant, Accelerator, GpuModel, ReuseLevel, WorkloadTrace};
+use crate::util::json::Json;
+use crate::warp::{reproject, TileWarpPolicy};
+
+// ---------------------------------------------------------------- helpers
+
+fn scene_and_poses(name: &str, opts: &ExpOptions) -> (Scene, Vec<Pose>) {
+    let scene = generate(name, opts.scale, opts.width, opts.height);
+    let poses = scene.sample_poses(opts.frames);
+    (scene, poses)
+}
+
+fn renderer_for(scene: &Scene, mode: IntersectMode) -> Renderer {
+    Renderer::new(scene.cloud.clone(), scene.intrinsics).with_config(RenderConfig {
+        mode,
+        ..Default::default()
+    })
+}
+
+/// Run a coordinator config over a scene and collect hardware traces.
+pub fn collect_traces(name: &str, opts: &ExpOptions, cfg: CoordinatorConfig) -> Vec<WorkloadTrace> {
+    let (scene, poses) = scene_and_poses(name, opts);
+    let intr = scene.intrinsics;
+    let mut c = StreamingCoordinator::new(Renderer::new(scene.cloud, intr), cfg);
+    c.run_sequence(&poses)
+        .iter()
+        .map(|r| WorkloadTrace::from_frame(&r.trace, &intr))
+        .collect()
+}
+
+fn dense_cfg(mode: IntersectMode) -> CoordinatorConfig {
+    CoordinatorConfig {
+        warp: WarpMode::None,
+        mode,
+        ..Default::default()
+    }
+}
+
+fn lsg_cfg(window: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        window,
+        ..Default::default()
+    }
+}
+
+/// GPU-model mean frame time (cycles) for a trace sequence.
+fn gpu_cycles(model: &GpuModel, traces: &[WorkloadTrace]) -> f64 {
+    model.sequence_time(traces)
+}
+
+// ------------------------------------------------------------ experiments
+
+/// Fig. 3: stage breakdown + stall fractions of the original pipeline.
+pub fn fig3_bottlenecks(opts: &ExpOptions) -> Json {
+    let mut table = Table::new(
+        "Fig.3 — 3DGS bottlenecks: stage shares + stalls (dense AABB baseline)",
+        &["scene", "preprocess", "sort", "raster", "inter-block idle", "intra-block bubble"],
+    );
+    let gpu = GpuModel::default();
+    let acc = Accelerator::new(AccelConfig::default(), AccelVariant::GSCORE);
+    let mut report = Json::obj();
+    for name in REAL_SCENES {
+        let traces = collect_traces(name, opts, dense_cfg(IntersectMode::Aabb));
+        let (mut pp, mut sort, mut raster, mut idle, mut bub) = (0.0, 0.0, 0.0, 0.0, 0.0);
+        for t in &traces {
+            let ft = gpu.frame_time(t);
+            pp += ft.preprocess;
+            sort += ft.sort;
+            raster += ft.raster;
+            idle += ft.raster_idle_frac;
+            let af = acc.frame_time(t);
+            bub += af.bubbles / (af.vru_busy + af.bubbles).max(1.0);
+        }
+        let total = pp + sort + raster;
+        let n = traces.len() as f64;
+        table.row(&[
+            name.to_string(),
+            pct(pp / total),
+            pct(sort / total),
+            pct(raster / total),
+            pct(idle / n),
+            pct(bub / n),
+        ]);
+        let mut row = Json::obj();
+        row.set("preprocess_frac", pp / total)
+            .set("sort_frac", sort / total)
+            .set("raster_frac", raster / total)
+            .set("idle_frac", idle / n)
+            .set("bubble_frac", bub / n);
+        report.set(name, row);
+    }
+    table.print();
+    report
+}
+
+/// Fig. 4a: overlap-pixel proportion between consecutive frames.
+pub fn fig4a_overlap(opts: &ExpOptions) -> Json {
+    let mut table = Table::new(
+        "Fig.4a — proportion of reusable (overlap) pixels between consecutive frames",
+        &["scene", "overlap"],
+    );
+    let mut report = Json::obj();
+    for name in REAL_SCENES.iter().chain(["chair", "lego"].iter()) {
+        let (scene, poses) = scene_and_poses(name, opts);
+        let r = renderer_for(&scene, IntersectMode::Aabb);
+        let mut fracs = Vec::new();
+        let mut prev: Option<(Frame, Pose)> = None;
+        for pose in poses.iter().take(opts.frames.min(6)) {
+            let (frame, _) = r.render(pose);
+            if let Some((pf, pp)) = &prev {
+                let w = reproject(pf, &scene.intrinsics, pp, pose);
+                fracs.push(w.filled as f64 / (w.frame.width * w.frame.height) as f64);
+            }
+            prev = Some((frame, *pose));
+        }
+        let mean = crate::metrics::mean(&fracs);
+        table.row(&[name.to_string(), pct(mean)]);
+        report.set(name, mean);
+    }
+    table.print();
+    report
+}
+
+/// Fig. 4b: AABB-predicted vs actually-contributing Gaussian-tile pairs.
+pub fn fig4b_pairs(opts: &ExpOptions) -> Json {
+    let mut table = Table::new(
+        "Fig.4b — AABB pairs vs actually contributing pairs (drjohnson)",
+        &["frame", "AABB pairs", "actual pairs", "inflation"],
+    );
+    let (scene, poses) = scene_and_poses("drjohnson", opts);
+    let r = renderer_for(&scene, IntersectMode::Aabb);
+    let mut report = Json::obj();
+    let mut ratios = Vec::new();
+    for (i, pose) in poses.iter().take(opts.frames.min(5)).enumerate() {
+        let (_, stats) = r.render(pose);
+        let actual = stats.total_contributing();
+        let ratio = stats.pairs as f64 / actual.max(1) as f64;
+        ratios.push(ratio);
+        table.row(&[
+            format!("{i}"),
+            format!("{}", stats.pairs),
+            format!("{actual}"),
+            speedup(ratio),
+        ]);
+    }
+    table.print();
+    report.set("mean_inflation", crate::metrics::mean(&ratios));
+    report
+}
+
+/// Fig. 5: distribution of per-tile covered-Gaussian counts ("train").
+pub fn fig5_tile_load(opts: &ExpOptions) -> Json {
+    let (scene, poses) = scene_and_poses("train", opts);
+    let r = renderer_for(&scene, IntersectMode::Aabb);
+    let (_, stats) = r.render(&poses[0]);
+    let counts = &stats.per_tile_pairs;
+    let max = *counts.iter().max().unwrap_or(&0) as f64;
+    let buckets = 8usize;
+    // Log-ish buckets as in the paper's grouping.
+    let edges: Vec<u32> = (0..=buckets)
+        .map(|i| ((max + 1.0).powf(i as f64 / buckets as f64) - 1.0) as u32)
+        .collect();
+    let mut table = Table::new(
+        "Fig.5 — per-tile covered-Gaussian distribution (train, frame 0)",
+        &["tile-load bucket", "tiles", "share"],
+    );
+    let mut report = Json::obj();
+    for w in edges.windows(2) {
+        let (lo, hi) = (w[0], w[1].max(w[0] + 1));
+        let n = counts.iter().filter(|&&c| c >= lo && c < hi).count();
+        table.row(&[
+            format!("[{lo}, {hi})"),
+            format!("{n}"),
+            pct(n as f64 / counts.len() as f64),
+        ]);
+        report.set(&format!("bucket_{lo}_{hi}"), n);
+    }
+    let p50 = crate::metrics::percentile(&counts.iter().map(|&c| c as f32).collect::<Vec<_>>(), 50.0);
+    let p99 = crate::metrics::percentile(&counts.iter().map(|&c| c as f32).collect::<Vec<_>>(), 99.0);
+    table.row(&["p99 / p50".into(), format!("{p99:.0} / {p50:.0}"), speedup(p99 as f64 / p50.max(1.0) as f64)]);
+    table.print();
+    report.set("p50", p50).set("p99", p99);
+    report
+}
+
+/// Fig. 7: PSNR vs consecutive-warp count for PW / TW / TW+mask (chair).
+pub fn fig7_inpainting(opts: &ExpOptions) -> Json {
+    let chain = 8usize.min(opts.frames.saturating_sub(1)).max(3);
+    let mut table = Table::new(
+        "Fig.7 — inpainting strategies on 'chair': PSNR (dB) vs warp count",
+        &["warps", "PW", "TW", "TW w/ mask"],
+    );
+    let strategies: [(&str, WarpMode, bool); 3] = [
+        ("PW", WarpMode::PixelInpaint, false),
+        ("TW", WarpMode::Tile, false),
+        ("TW w/ mask", WarpMode::Tile, true),
+    ];
+    let (scene, poses) = scene_and_poses("chair", opts);
+    let dense = renderer_for(&scene, IntersectMode::Tait);
+    let mut series: Vec<Vec<f64>> = vec![Vec::new(); 3];
+    for (si, (_, warp, mask)) in strategies.iter().enumerate() {
+        let mut c = StreamingCoordinator::new(
+            renderer_for(&scene, IntersectMode::Tait),
+            CoordinatorConfig {
+                window: chain + 1, // never re-key inside the chain
+                warp: *warp,
+                policy: TileWarpPolicy {
+                    mask_interpolated: *mask,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        for (i, pose) in poses.iter().take(chain + 1).enumerate() {
+            let out = c.process(pose);
+            if i == 0 {
+                continue;
+            }
+            let (ref_frame, _) = dense.render(pose);
+            series[si].push(psnr(&out.frame.rgb, &ref_frame.rgb));
+        }
+    }
+    let mut report = Json::obj();
+    for w in 0..chain {
+        table.row(&[
+            format!("{}", w + 1),
+            f1(series[0][w]),
+            f1(series[1][w]),
+            f1(series[2][w]),
+        ]);
+    }
+    table.print();
+    report
+        .set("pw", series[0].clone())
+        .set("tw", series[1].clone())
+        .set("tw_mask", series[2].clone());
+    report
+}
+
+/// Fig. 9: Gaussian-tile pairs + speedup across intersection tests.
+pub fn fig9_intersection(opts: &ExpOptions) -> Json {
+    let modes = [
+        IntersectMode::Aabb,
+        IntersectMode::Obb,
+        IntersectMode::Adr,
+        IntersectMode::Exact,
+        IntersectMode::Tait,
+    ];
+    let mut table = Table::new(
+        "Fig.9 — intersection tests: pairs (rel. AABB) and speedup (rel. AABB)",
+        &["scene", "test", "pairs", "pairs ratio", "speedup"],
+    );
+    let gpu = GpuModel::default();
+    let mut report = Json::obj();
+    for name in ["drjohnson", "train", "garden", "chair"] {
+        let mut base_pairs = 0.0f64;
+        let mut base_time = 0.0f64;
+        let mut scene_rep = Json::obj();
+        for mode in modes {
+            let traces = collect_traces(name, &ExpOptions { frames: 3, ..*opts }, dense_cfg(mode));
+            let pairs: f64 =
+                traces.iter().map(|t| t.total_pairs() as f64).sum::<f64>() / traces.len() as f64;
+            let time = gpu_cycles(&gpu, &traces);
+            if mode == IntersectMode::Aabb {
+                base_pairs = pairs;
+                base_time = time;
+            }
+            table.row(&[
+                name.to_string(),
+                mode.name().to_string(),
+                format!("{pairs:.0}"),
+                f2(pairs / base_pairs),
+                speedup(base_time / time),
+            ]);
+            let mut m = Json::obj();
+            m.set("pairs", pairs).set("speedup", base_time / time);
+            scene_rep.set(mode.name(), m);
+        }
+        report.set(name, scene_rep);
+    }
+    table.print();
+    report
+}
+
+/// Fig. 11a: rendering quality, TWSR vs Potamoi-style pixel warping, n=6.
+///
+/// The paper reports losses against ground-truth photographs; here the
+/// dense TAIT render *is* the ground truth, so we report PSNR/SSIM of each
+/// sparse method against it — the paper's claim maps to "TWSR stays close
+/// to dense while Potamoi-style PW drifts far" (ΔPSNR gap ≈ 5–6 dB).
+pub fn fig11_quality(opts: &ExpOptions) -> Json {
+    let n = 6usize;
+    let mut table = Table::new(
+        "Fig.11a — quality vs dense render on Synthetic-NeRF (window n=6)",
+        &["scene", "TWSR PSNR", "TWSR SSIM", "Potamoi-PW PSNR", "Potamoi-PW SSIM"],
+    );
+    let mut report = Json::obj();
+    let mut agg = [0.0f64; 4];
+    let scenes: Vec<&str> = SYNTHETIC_SCENES.to_vec();
+    for name in &scenes {
+        let (scene, poses) = scene_and_poses(name, &ExpOptions { frames: n + 1, ..*opts });
+        let dense = renderer_for(&scene, IntersectMode::Tait);
+        let mut vals = [0.0f64; 4]; // twsr psnr, twsr ssim, pw psnr, pw ssim
+        for (vi, warp) in [WarpMode::Tile, WarpMode::PixelInpaint].iter().enumerate() {
+            let mut c = StreamingCoordinator::new(
+                renderer_for(&scene, IntersectMode::Tait),
+                CoordinatorConfig {
+                    window: n,
+                    warp: *warp,
+                    ..Default::default()
+                },
+            );
+            let mut psnrs = Vec::new();
+            let mut ssims = Vec::new();
+            for (i, pose) in poses.iter().enumerate() {
+                let out = c.process(pose);
+                if i == 0 {
+                    continue; // key frame matches by construction
+                }
+                let (ref_frame, _) = dense.render(pose);
+                psnrs.push(psnr(&out.frame.rgb, &ref_frame.rgb));
+                ssims.push(ssim(
+                    &out.frame.rgb,
+                    &ref_frame.rgb,
+                    scene.intrinsics.width,
+                    scene.intrinsics.height,
+                ));
+            }
+            vals[vi * 2] = crate::metrics::mean(&psnrs);
+            vals[vi * 2 + 1] = crate::metrics::mean(&ssims);
+        }
+        table.row(&[
+            name.to_string(),
+            f1(vals[0]),
+            format!("{:.3}", vals[1]),
+            f1(vals[2]),
+            format!("{:.3}", vals[3]),
+        ]);
+        for i in 0..4 {
+            agg[i] += vals[i] / scenes.len() as f64;
+        }
+        let mut m = Json::obj();
+        m.set("twsr_psnr", vals[0])
+            .set("twsr_ssim", vals[1])
+            .set("potamoi_psnr", vals[2])
+            .set("potamoi_ssim", vals[3]);
+        report.set(name, m);
+    }
+    table.row(&[
+        "AVERAGE".into(),
+        f1(agg[0]),
+        format!("{:.3}", agg[1]),
+        f1(agg[2]),
+        format!("{:.3}", agg[3]),
+    ]);
+    table.print();
+    println!(
+        "(TWSR-vs-Potamoi PSNR gap: {:.1} dB; SSIM gap: {:.3})",
+        agg[0] - agg[2],
+        agg[1] - agg[3]
+    );
+    let mut m = Json::obj();
+    m.set("twsr_psnr", agg[0])
+        .set("twsr_ssim", agg[1])
+        .set("potamoi_psnr", agg[2])
+        .set("potamoi_ssim", agg[3]);
+    report.set("average", m);
+    report
+}
+
+/// Fig. 12a: speedup + PSNR vs warping window n on real scenes.
+pub fn fig12_window(opts: &ExpOptions) -> Json {
+    let mut table = Table::new(
+        "Fig.12a — warping window sweep on real scenes (speedup vs dense, PSNR w/ vs w/o TWSR)",
+        &["scene", "n", "speedup", "PSNR (dB)"],
+    );
+    let gpu = GpuModel::default();
+    let mut report = Json::obj();
+    for name in ["playroom", "drjohnson", "train", "garden"] {
+        let base = collect_traces(name, opts, dense_cfg(IntersectMode::Aabb));
+        let t_base = gpu_cycles(&gpu, &base);
+        let (scene, poses) = scene_and_poses(name, opts);
+        let dense = renderer_for(&scene, IntersectMode::Tait);
+        let mut scene_rep = Json::obj();
+        for n in [2usize, 4, 6, 8] {
+            let mut c = StreamingCoordinator::new(
+                renderer_for(&scene, IntersectMode::Tait),
+                lsg_cfg(n),
+            );
+            let mut psnrs = Vec::new();
+            let mut traces = Vec::new();
+            for pose in &poses {
+                let out = c.process(pose);
+                let (ref_frame, _) = dense.render(pose);
+                psnrs.push(psnr(&out.frame.rgb, &ref_frame.rgb));
+                traces.push(WorkloadTrace::from_frame(&out.trace, &scene.intrinsics));
+            }
+            let sp = t_base / gpu_cycles(&gpu, &traces);
+            let q = crate::metrics::mean(&psnrs);
+            table.row(&[name.to_string(), format!("{n}"), speedup(sp), f1(q)]);
+            let mut m = Json::obj();
+            m.set("speedup", sp).set("psnr", q);
+            scene_rep.set(&format!("n{n}"), m);
+        }
+        report.set(name, scene_rep);
+    }
+    table.print();
+    report
+}
+
+/// Fig. 13a: GPU-level speedups vs prior works, per dataset.
+pub fn fig13a_gpu(opts: &ExpOptions) -> Json {
+    let gpu = GpuModel::default();
+    // SeeLe's fused/specialized kernels: modeled as a rasterization
+    // efficiency factor on top of accurate intersection (DESIGN.md
+    // substitution log).
+    let seele_gpu = GpuModel {
+        raster_efficiency: 0.75,
+        ..Default::default()
+    };
+    let mut table = Table::new(
+        "Fig.13a — GPU (Jetson-class model) speedup over dense AABB baseline",
+        &["scene", "AdR-Gaussian", "SeeLe", "LS-Gaussian (ours)"],
+    );
+    let mut report = Json::obj();
+    let mut sums = [0.0f64; 3];
+    for name in REAL_SCENES {
+        let base = gpu_cycles(&gpu, &collect_traces(name, opts, dense_cfg(IntersectMode::Aabb)));
+        let adr = gpu_cycles(&gpu, &collect_traces(name, opts, dense_cfg(IntersectMode::Adr)));
+        let seele = seele_gpu
+            .sequence_time(&collect_traces(name, opts, dense_cfg(IntersectMode::Tait)));
+        let lsg = gpu_cycles(&gpu, &collect_traces(name, opts, lsg_cfg(opts.window)));
+        let row = [base / adr, base / seele, base / lsg];
+        table.row(&[
+            name.to_string(),
+            speedup(row[0]),
+            speedup(row[1]),
+            speedup(row[2]),
+        ]);
+        for i in 0..3 {
+            sums[i] += row[i] / REAL_SCENES.len() as f64;
+        }
+        let mut m = Json::obj();
+        m.set("adr", row[0]).set("seele", row[1]).set("lsg", row[2]);
+        report.set(name, m);
+    }
+    table.row(&[
+        "AVERAGE".into(),
+        speedup(sums[0]),
+        speedup(sums[1]),
+        speedup(sums[2]),
+    ]);
+    table.print();
+    let mut m = Json::obj();
+    m.set("adr", sums[0]).set("seele", sums[1]).set("lsg", sums[2]);
+    report.set("average", m);
+    report
+}
+
+/// Fig. 13b: algorithmic ablation (+TWSR, +TAIT, +DPES) on real scenes.
+pub fn fig13b_ablation(opts: &ExpOptions) -> Json {
+    let gpu = GpuModel::default();
+    let mut table = Table::new(
+        "Fig.13b — ablation on real scenes (speedup over dense AABB)",
+        &["scene", "+TWSR", "+TWSR+TAIT", "+TWSR+TAIT+DPES"],
+    );
+    let mut report = Json::obj();
+    for name in REAL_SCENES {
+        let base = gpu_cycles(&gpu, &collect_traces(name, opts, dense_cfg(IntersectMode::Aabb)));
+        let twsr = gpu_cycles(
+            &gpu,
+            &collect_traces(
+                name,
+                opts,
+                CoordinatorConfig {
+                    window: opts.window,
+                    mode: IntersectMode::Aabb,
+                    dpes: false,
+                    ..Default::default()
+                },
+            ),
+        );
+        let tait = gpu_cycles(
+            &gpu,
+            &collect_traces(
+                name,
+                opts,
+                CoordinatorConfig {
+                    window: opts.window,
+                    mode: IntersectMode::Tait,
+                    dpes: false,
+                    ..Default::default()
+                },
+            ),
+        );
+        let dpes = gpu_cycles(&gpu, &collect_traces(name, opts, lsg_cfg(opts.window)));
+        table.row(&[
+            name.to_string(),
+            speedup(base / twsr),
+            speedup(base / tait),
+            speedup(base / dpes),
+        ]);
+        let mut m = Json::obj();
+        m.set("twsr", base / twsr)
+            .set("twsr_tait", base / tait)
+            .set("full", base / dpes);
+        report.set(name, m);
+    }
+    table.print();
+    report
+}
+
+/// Fig. 14: accelerator speedups over the GPU baseline.
+pub fn fig14_accel(opts: &ExpOptions) -> Json {
+    let gpu = GpuModel::default();
+    let cfg = AccelConfig::default();
+    let mut table = Table::new(
+        "Fig.14 — accelerator speedup over GPU baseline (area-normalized comparators)",
+        &["scene", "GSCore", "MetaSapiens", "LS-Gaussian (ours)"],
+    );
+    let mut report = Json::obj();
+    let mut sums = [0.0f64; 3];
+    // Paper compares on Synthetic-NeRF + T&T + DB scenes.
+    let scenes = ["chair", "lego", "train", "truck", "playroom", "drjohnson"];
+    for name in scenes {
+        let base_traces = collect_traces(name, opts, dense_cfg(IntersectMode::Aabb));
+        // GPU cycles normalized by clock -> time; accelerator at its clock.
+        let t_gpu = gpu.sequence_time(&base_traces) / (gpu.freq_ghz * 1e9);
+        let gscore_traces = collect_traces(name, opts, dense_cfg(IntersectMode::Obb));
+        let gscore = Accelerator::new(cfg, AccelVariant::GSCORE);
+        let t_gscore = gscore.sequence_period(&gscore_traces) / (cfg.freq_ghz * 1e9);
+        // MetaSapiens: efficiency-aware pruning + foveation shrink both the
+        // primitive set (sort) and the blend work (raster); streaming units.
+        let meta = Accelerator::new(
+            AccelConfig {
+                raster_workload_scale: 0.45,
+                sort_workload_scale: 0.55,
+                ..cfg
+            },
+            AccelVariant::GSCORE,
+        );
+        let t_meta = meta.sequence_period(&base_traces) / (cfg.freq_ghz * 1e9);
+        let lsg_traces = collect_traces(name, opts, lsg_cfg(opts.window));
+        let lsg = Accelerator::new(cfg, AccelVariant::FULL);
+        let t_lsg = lsg.sequence_period(&lsg_traces) / (cfg.freq_ghz * 1e9);
+        let row = [t_gpu / t_gscore, t_gpu / t_meta, t_gpu / t_lsg];
+        table.row(&[
+            name.to_string(),
+            speedup(row[0]),
+            speedup(row[1]),
+            speedup(row[2]),
+        ]);
+        for i in 0..3 {
+            sums[i] += row[i] / scenes.len() as f64;
+        }
+        let mut m = Json::obj();
+        m.set("gscore", row[0]).set("metasapiens", row[1]).set("lsg", row[2]);
+        report.set(name, m);
+    }
+    table.row(&[
+        "AVERAGE".into(),
+        speedup(sums[0]),
+        speedup(sums[1]),
+        speedup(sums[2]),
+    ]);
+    table.print();
+    let mut m = Json::obj();
+    m.set("gscore", sums[0]).set("metasapiens", sums[1]).set("lsg", sums[2]);
+    report.set("average", m);
+    report
+}
+
+/// Fig. 15a: accelerator ablation — base, +LD1 (inter-block), +LD2.
+pub fn fig15a_ldu(opts: &ExpOptions) -> Json {
+    let gpu = GpuModel::default();
+    let cfg = AccelConfig::default();
+    let mut table = Table::new(
+        "Fig.15a — LDU ablation (speedup over GPU baseline)",
+        &["scene", "base (streaming)", "+LD1", "+LD1+LD2"],
+    );
+    let mut report = Json::obj();
+    for name in ["train", "garden", "drjohnson", "chair"] {
+        let base_traces = collect_traces(name, opts, dense_cfg(IntersectMode::Aabb));
+        let t_gpu = gpu.sequence_time(&base_traces) / (gpu.freq_ghz * 1e9);
+        let lsg_traces = collect_traces(name, opts, lsg_cfg(opts.window));
+        let mut row = Vec::new();
+        for variant in [AccelVariant::GSCORE, AccelVariant::LD1, AccelVariant::FULL] {
+            let acc = Accelerator::new(cfg, variant);
+            let t = acc.sequence_period(&lsg_traces) / (cfg.freq_ghz * 1e9);
+            row.push(t_gpu / t);
+        }
+        table.row(&[
+            name.to_string(),
+            speedup(row[0]),
+            speedup(row[1]),
+            speedup(row[2]),
+        ]);
+        let mut m = Json::obj();
+        m.set("base", row[0]).set("ld1", row[1]).set("ld2", row[2]);
+        report.set(name, m);
+    }
+    table.print();
+    report
+}
+
+/// Fig. 15b: area savings from LDU hardware reuse.
+pub fn fig15b_area(_opts: &ExpOptions) -> Json {
+    let mut table = Table::new(
+        "Fig.15b — added area of augmented units (16 nm), with hardware reuse",
+        &["reuse level", "added mm²", "savings", "total mm²"],
+    );
+    let mut report = Json::obj();
+    for (label, lvl) in [
+        ("none", ReuseLevel::None),
+        ("VTU counters+comparators", ReuseLevel::VtuCounters),
+        ("+ GSU workload sort", ReuseLevel::VtuAndGsu),
+    ] {
+        let added = crate::sim::lsg_added_area(lvl);
+        table.row(&[
+            label.to_string(),
+            format!("{added:.3}"),
+            pct(lvl.savings()),
+            format!("{:.2}", crate::sim::lsg_total_area(lvl)),
+        ]);
+        let mut m = Json::obj();
+        m.set("added_mm2", added)
+            .set("total_mm2", crate::sim::lsg_total_area(lvl));
+        report.set(label, m);
+    }
+    table.print();
+    println!(
+        "(GSCore baseline {:.2} mm²; MetaSapiens {:.2} mm²; Jetson-class GPU ≈{:.0} mm²)",
+        crate::sim::gscore_area(),
+        crate::sim::area::METASAPIENS_AREA,
+        crate::sim::area::JETSON_GPU_AREA
+    );
+    report
+}
+
+/// Table I: rasterization-core utilization, Original vs LS-Gaussian.
+pub fn tab1_utilization(opts: &ExpOptions) -> Json {
+    let cfg = AccelConfig::default();
+    let groups: [(&str, &[&str]); 4] = [
+        ("Synthetic", &["chair", "lego"]),
+        ("T&T", &["train", "truck"]),
+        ("DB", &["playroom", "drjohnson"]),
+        ("Mip", &["room", "garden"]),
+    ];
+    let mut table = Table::new(
+        "Table I — rasterization core utilization (%)",
+        &["method", "Synthetic", "T&T", "DB", "Mip", "Average"],
+    );
+    let mut report = Json::obj();
+    for (label, variant, lsg_algo) in [
+        ("Original", AccelVariant::ORIGINAL, false),
+        ("LS-Gaussian", AccelVariant::FULL, true),
+    ] {
+        let mut per_ds = Vec::new();
+        for (_, scenes) in groups.iter() {
+            let mut u = 0.0;
+            for name in *scenes {
+                let traces = if lsg_algo {
+                    collect_traces(name, opts, lsg_cfg(opts.window))
+                } else {
+                    collect_traces(name, opts, dense_cfg(IntersectMode::Aabb))
+                };
+                u += Accelerator::new(cfg, variant).sequence_utilization(&traces)
+                    / scenes.len() as f64;
+            }
+            per_ds.push(u);
+        }
+        let avg = per_ds.iter().sum::<f64>() / per_ds.len() as f64;
+        table.row(&[
+            label.to_string(),
+            f1(per_ds[0] * 100.0),
+            f1(per_ds[1] * 100.0),
+            f1(per_ds[2] * 100.0),
+            f1(per_ds[3] * 100.0),
+            f1(avg * 100.0),
+        ]);
+        let mut m = Json::obj();
+        for ((ds, _), v) in groups.iter().zip(&per_ds) {
+            m.set(ds, *v);
+        }
+        m.set("average", avg);
+        report.set(label, m);
+    }
+    table.print();
+    report
+}

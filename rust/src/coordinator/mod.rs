@@ -1,0 +1,11 @@
+//! L3 coordination layer: the streaming frame scheduler (window-n cadence,
+//! TWSR + DPES orchestration) and the Load Distribution Unit's assignment
+//! policies (paper Sec. V).
+
+pub mod ldu;
+pub mod scheduler;
+
+pub use ldu::{assign_balanced, assign_naive, order_light_to_heavy, BlockAssignment};
+pub use scheduler::{
+    CoordinatorConfig, FrameKind, FrameResult, FrameTrace, StreamingCoordinator, WarpMode,
+};

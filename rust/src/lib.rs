@@ -1,0 +1,45 @@
+//! # LS-Gaussian
+//!
+//! Reproduction of *"No Redundancy, No Stall: Lightweight Streaming 3D
+//! Gaussian Splatting for Real-time Rendering"* (LS-Gaussian, 2025) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the streaming coordinator, the full 3DGS render
+//!   pipeline, the warp subsystem (TWSR / DPES), the two-stage intersection
+//!   test (TAIT), the load-distribution unit (LDU), and a cycle-level
+//!   accelerator simulator reproducing the paper's hardware evaluation.
+//! * **L2 (`python/compile/model.py`)** — jax projection / rasterization /
+//!   warp graphs, AOT-lowered to HLO text under `artifacts/`.
+//! * **L1 (`python/compile/kernels/`)** — the Pallas tile-rasterization
+//!   kernel the L2 graph calls; checked against a pure-jnp oracle.
+//!
+//! The request path is pure rust: [`runtime`] loads the AOT artifacts via
+//! PJRT (`xla` crate) and [`render`] provides a native fallback that the
+//! tests hold to numeric agreement with the PJRT path.
+//!
+//! Entry points: [`render::Renderer`] for single frames,
+//! [`coordinator::StreamingCoordinator`] for real-time sequences, and
+//! [`sim`] for the hardware evaluation.
+
+pub mod bench;
+pub mod coordinator;
+pub mod math;
+pub mod metrics;
+pub mod render;
+pub mod runtime;
+pub mod scene;
+pub mod sim;
+pub mod util;
+pub mod warp;
+
+/// Side length (pixels) of a rasterization tile, fixed to 16 as in 3DGS.
+pub const TILE: usize = 16;
+/// Pixels per tile.
+pub const TILE_PIXELS: usize = TILE * TILE;
+/// Opacity threshold below which a Gaussian does not contribute (1/255).
+pub const ALPHA_THRESHOLD: f32 = 1.0 / 255.0;
+/// Transmittance threshold at which a pixel is considered fully rendered.
+pub const TRANSMITTANCE_EPS: f32 = 1e-4;
+/// Default re-render threshold: re-render a tile when more than 1/6 of its
+/// pixels are missing after reprojection (Sec. IV-A / V-A).
+pub const RERENDER_MISSING_FRACTION: f32 = 1.0 / 6.0;

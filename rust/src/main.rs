@@ -1,0 +1,190 @@
+//! `ls-gaussian` — the L3 leader binary.
+//!
+//! Subcommands:
+//!   render   — render one frame of a named scene to PNG (native or pjrt)
+//!   stream   — run the streaming coordinator over a trajectory, report FPS
+//!   bench    — run one paper experiment (see DESIGN.md per-experiment index)
+//!   sim      — run the accelerator model over a scene and print the report
+//!   scenes   — list the built-in procedural scenes
+//!
+//! Examples:
+//!   ls-gaussian render --scene drjohnson --out frame.png
+//!   ls-gaussian stream --scene train --frames 60 --window 5
+//!   ls-gaussian bench --exp fig14
+//!   ls-gaussian sim --scene garden --variant full
+
+use ls_gaussian::bench::{run_experiment, ExpOptions};
+use ls_gaussian::coordinator::{CoordinatorConfig, StreamingCoordinator, WarpMode};
+use ls_gaussian::render::{IntersectMode, RenderConfig, Renderer};
+use ls_gaussian::scene::{generate, ALL_SCENES};
+use ls_gaussian::sim::{AccelConfig, AccelVariant, Accelerator, GpuModel, WorkloadTrace};
+use ls_gaussian::util::cli::Args;
+use ls_gaussian::util::png::write_png;
+use std::path::Path;
+use std::time::Instant;
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = if argv.is_empty() { "help".to_string() } else { argv.remove(0) };
+    let args = Args::parse(argv);
+    match cmd.as_str() {
+        "render" => cmd_render(&args),
+        "stream" => cmd_stream(&args),
+        "bench" => cmd_bench(&args),
+        "sim" => cmd_sim(&args),
+        "scenes" => {
+            println!("built-in procedural scenes:");
+            for s in ALL_SCENES {
+                println!("  {s} ({})", ls_gaussian::scene::dataset_of(s));
+            }
+        }
+        _ => {
+            println!(
+                "usage: ls-gaussian <render|stream|bench|sim|scenes> [--options]\n\
+                 see the doc comment in rust/src/main.rs"
+            );
+        }
+    }
+}
+
+fn common_opts(args: &Args) -> (String, f32, usize, usize) {
+    (
+        args.get_or("scene", "drjohnson").to_string(),
+        args.f32_or("scale", 0.2),
+        args.usize_or("width", 320),
+        args.usize_or("height", 192),
+    )
+}
+
+fn mode_of(args: &Args) -> IntersectMode {
+    IntersectMode::parse(args.get_or("intersect", "tait")).unwrap_or(IntersectMode::Tait)
+}
+
+fn cmd_render(args: &Args) {
+    let (scene_name, scale, w, h) = common_opts(args);
+    let scene = generate(&scene_name, scale, w, h);
+    let pose = scene.sample_poses(1)[0];
+    let renderer = Renderer::new(scene.cloud, scene.intrinsics).with_config(RenderConfig {
+        mode: mode_of(args),
+        ..Default::default()
+    });
+    let t0 = Instant::now();
+    let (frame, stats) = if args.get_or("backend", "native") == "pjrt" {
+        let pjrt = ls_gaussian::runtime::PjrtRenderer::new(renderer).expect("pjrt init");
+        let (f, s, fallback) = pjrt.render(&pose).expect("pjrt render");
+        println!("backend: pjrt ({} fallback tiles)", fallback);
+        (f, s)
+    } else {
+        renderer.render(&pose)
+    };
+    let dt = t0.elapsed();
+    println!(
+        "{scene_name}: {} gaussians -> {} splats, {} pairs, {:.1} ms",
+        stats.n_gaussians,
+        stats.n_splats,
+        stats.pairs,
+        dt.as_secs_f64() * 1e3
+    );
+    let out = args.get_or("out", "frame.png");
+    write_png(Path::new(out), frame.width, frame.height, &frame.to_rgb8()).expect("write png");
+    println!("wrote {out}");
+}
+
+fn cmd_stream(args: &Args) {
+    let (scene_name, scale, w, h) = common_opts(args);
+    let frames = args.usize_or("frames", 30);
+    let scene = generate(&scene_name, scale, w, h);
+    let poses = scene.sample_poses(frames);
+    let cfg = CoordinatorConfig {
+        window: args.usize_or("window", 5),
+        warp: match args.get_or("warp", "tile") {
+            "none" => WarpMode::None,
+            "pixel" => WarpMode::Pixel,
+            _ => WarpMode::Tile,
+        },
+        mode: mode_of(args),
+        dpes: !args.flag("no-dpes"),
+        ..Default::default()
+    };
+    let mut c = StreamingCoordinator::new(Renderer::new(scene.cloud, scene.intrinsics), cfg);
+    if args.get_or("backend", "native") == "pjrt" {
+        c = c.with_pjrt(ls_gaussian::runtime::PjrtEngine::new(None).expect("pjrt init"));
+        println!("backend: pjrt");
+    }
+    let t0 = Instant::now();
+    let results = c.run_sequence(&poses);
+    let dt = t0.elapsed().as_secs_f64();
+    let gpu = GpuModel::default();
+    let traces: Vec<WorkloadTrace> = results
+        .iter()
+        .map(|r| WorkloadTrace::from_frame(&r.trace, &scene.intrinsics))
+        .collect();
+    let skipped: f32 = results
+        .iter()
+        .filter_map(|r| r.trace.warp.as_ref().map(|w| w.skip_fraction()))
+        .sum::<f32>()
+        / results.len().max(1) as f32;
+    println!(
+        "{frames} frames in {dt:.2}s wall ({:.1} FPS native) | modeled edge-GPU {:.1} FPS | mean tile-skip {:.0}%",
+        frames as f64 / dt,
+        gpu.fps(gpu.sequence_time(&traces)),
+        skipped * 100.0
+    );
+}
+
+fn cmd_bench(args: &Args) {
+    let opts = ExpOptions {
+        scale: args.f32_or("scale", 0.35),
+        width: args.usize_or("width", 320),
+        height: args.usize_or("height", 192),
+        frames: args.usize_or("frames", 10),
+        window: args.usize_or("window", 5),
+    };
+    let id = args.get_or("exp", "fig14");
+    match run_experiment(id, &opts) {
+        Some(_) => {}
+        None => eprintln!("unknown experiment '{id}'"),
+    }
+}
+
+fn cmd_sim(args: &Args) {
+    let (scene_name, scale, w, h) = common_opts(args);
+    let scene = generate(&scene_name, scale, w, h);
+    let poses = scene.sample_poses(args.usize_or("frames", 10));
+    let intr = scene.intrinsics;
+    let mut c = StreamingCoordinator::new(
+        Renderer::new(scene.cloud, intr),
+        CoordinatorConfig::default(),
+    );
+    let traces: Vec<WorkloadTrace> = c
+        .run_sequence(&poses)
+        .iter()
+        .map(|r| WorkloadTrace::from_frame(&r.trace, &intr))
+        .collect();
+    let variant = match args.get_or("variant", "full") {
+        "original" => AccelVariant::ORIGINAL,
+        "gscore" => AccelVariant::GSCORE,
+        "ld1" => AccelVariant::LD1,
+        _ => AccelVariant::FULL,
+    };
+    let acc = Accelerator::new(AccelConfig::default(), variant);
+    println!("scene {scene_name}, variant {variant:?}");
+    for (i, t) in traces.iter().enumerate() {
+        let ft = acc.frame_time(t);
+        println!(
+            "frame {i:2} {:12?} period={:8.0}cy latency={:8.0}cy util={:4.1}% bubbles={:6.0}cy",
+            t.kind,
+            ft.period(),
+            ft.latency,
+            ft.utilization * 100.0,
+            ft.bubbles
+        );
+    }
+    println!(
+        "mean: period {:.0} cycles ({:.1} FPS @ {:.1} GHz), utilization {:.1}%",
+        acc.sequence_period(&traces),
+        acc.config.freq_ghz * 1e9 / acc.sequence_period(&traces),
+        acc.config.freq_ghz,
+        acc.sequence_utilization(&traces) * 100.0
+    );
+}

@@ -1,0 +1,115 @@
+//! Closed-form eigendecomposition of symmetric 2×2 matrices — the core of
+//! every intersection test: the projected Gaussian's 2D covariance
+//! Σ' = [[a, b], [b, c]] has eigenvalues λ₁ ≥ λ₂ defining the splat's
+//! semi-major/minor axes (paper Sec. IV-C, Eq. 4).
+
+use super::vec::Vec2;
+
+/// Eigenvalues (λ₁ ≥ λ₂) and the unit eigenvector of λ₁.
+#[derive(Clone, Copy, Debug)]
+pub struct Eigen2 {
+    pub l1: f32,
+    pub l2: f32,
+    /// Unit eigenvector of λ₁ (major-axis direction).
+    pub v1: Vec2,
+}
+
+/// Eigenvalues of [[a, b], [b, c]], λ₁ ≥ λ₂. Uses the stable midpoint ±
+/// radius form; clamps the discriminant at zero against rounding.
+#[inline]
+pub fn eigvals2x2(a: f32, b: f32, c: f32) -> (f32, f32) {
+    let mid = 0.5 * (a + c);
+    let half_diff = 0.5 * (a - c);
+    let radius = (half_diff * half_diff + b * b).max(0.0).sqrt();
+    (mid + radius, mid - radius)
+}
+
+/// Full decomposition including the major-axis direction.
+pub fn eigen2x2(a: f32, b: f32, c: f32) -> Eigen2 {
+    let (l1, l2) = eigvals2x2(a, b, c);
+    // Eigenvector for l1: (b, l1 - a) or (l1 - c, b); pick the better
+    // conditioned one.
+    let v = if b.abs() > 1e-12 {
+        if (l1 - a).abs() > (l1 - c).abs() {
+            Vec2::new(b, l1 - a)
+        } else {
+            Vec2::new(l1 - c, b)
+        }
+    } else if a >= c {
+        Vec2::new(1.0, 0.0)
+    } else {
+        Vec2::new(0.0, 1.0)
+    };
+    Eigen2 {
+        l1,
+        l2,
+        v1: v.normalized(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn diagonal_matrix() {
+        let (l1, l2) = eigvals2x2(3.0, 0.0, 1.0);
+        assert_eq!((l1, l2), (3.0, 1.0));
+        let e = eigen2x2(3.0, 0.0, 1.0);
+        assert!((e.v1.x.abs() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn swapped_diagonal() {
+        let e = eigen2x2(1.0, 0.0, 3.0);
+        assert_eq!((e.l1, e.l2), (3.0, 1.0));
+        assert!((e.v1.y.abs() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn known_offdiagonal() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1, v1 = (1,1)/sqrt2.
+        let e = eigen2x2(2.0, 1.0, 2.0);
+        assert!((e.l1 - 3.0).abs() < 1e-5);
+        assert!((e.l2 - 1.0).abs() < 1e-5);
+        assert!((e.v1.x.abs() - e.v1.y.abs()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn eigenvector_property_holds() {
+        check("A v1 = l1 v1 for random PSD matrices", 512, |rng| {
+            // Build a random symmetric PSD matrix R D Rᵀ.
+            let theta = rng.range(0.0, std::f32::consts::TAU);
+            let (s, c) = theta.sin_cos();
+            let d1 = rng.range(0.01, 100.0);
+            let d2 = rng.range(0.01, 100.0);
+            let a = c * c * d1 + s * s * d2;
+            let b = s * c * (d1 - d2);
+            let cc = s * s * d1 + c * c * d2;
+            let e = eigen2x2(a, b, cc);
+            // λ₁ must equal max(d1,d2) and the eigen equation must hold.
+            assert!((e.l1 - d1.max(d2)).abs() < 1e-2 * d1.max(d2).max(1.0));
+            let av = Vec2::new(a * e.v1.x + b * e.v1.y, b * e.v1.x + cc * e.v1.y);
+            let lv = e.v1 * e.l1;
+            assert!(
+                (av - lv).norm() < 1e-2 * e.l1.max(1.0),
+                "residual {:?}",
+                (av - lv).norm()
+            );
+        });
+    }
+
+    #[test]
+    fn trace_and_det_invariants() {
+        check("l1+l2 = trace, l1*l2 = det", 512, |rng| {
+            let a = rng.range(0.0, 50.0);
+            let c = rng.range(0.0, 50.0);
+            let b = rng.range(-10.0, 10.0);
+            let (l1, l2) = eigvals2x2(a, b, c);
+            assert!((l1 + l2 - (a + c)).abs() < 1e-3 * (a + c).abs().max(1.0));
+            assert!((l1 * l2 - (a * c - b * b)).abs() < 2e-2 * (a * c).abs().max(1.0));
+            assert!(l1 >= l2);
+        });
+    }
+}

@@ -1,0 +1,73 @@
+//! Fast `exp(-e)` for the rasterization hot loop.
+//!
+//! Density evaluation (Eq. 1) calls exp once per (pixel, Gaussian) pair;
+//! after support culling it is the single largest cost in the native
+//! rasterizer (EXPERIMENTS.md §Perf). This range-reduced polynomial
+//! (2⁻ⁿ·P(r), |r| ≤ ln2/2, 5th-order) has ≤ 3e-6 relative error over the
+//! domain the rasterizer uses (e ∈ [0, 4.5]) — far below the 1/255 alpha
+//! quantum — at roughly a third of `expf`'s latency.
+
+/// exp(-e) for e ∈ [0, ~87]. Max relative error ≈ 3e-6.
+#[inline(always)]
+pub fn fast_exp_neg(e: f32) -> f32 {
+    debug_assert!(e >= 0.0);
+    const LOG2E: f32 = std::f32::consts::LOG2_E;
+    const LN2: f32 = std::f32::consts::LN_2;
+    let x = -e;
+    // Round-to-nearest via the 1.5·2²³ magic constant (baseline x86-64 has
+    // no roundss; `f32::round` would be a libm call in this loop).
+    const MAGIC: f32 = 12_582_912.0; // 1.5 * 2^23
+    let n = (x * LOG2E + MAGIC) - MAGIC;
+    let r = x - n * LN2; // |r| <= ln2/2
+    // exp(r) ≈ 5th-order Taylor (remainder r⁶/720 ≤ 2.4e-6 relative).
+    let p = 1.0
+        + r * (1.0
+            + r * (0.5 + r * (1.0 / 6.0 + r * (1.0 / 24.0 + r * (1.0 / 120.0)))));
+    // Scale by 2^n through the exponent bits (n ≥ -126 here).
+    let bits = (((n as i32) + 127) << 23) as u32;
+    p * f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn matches_libm_on_raster_domain() {
+        check("fast_exp_neg accuracy", 2048, |rng| {
+            let e = rng.range(0.0, 4.5);
+            let want = (-e).exp();
+            let got = fast_exp_neg(e);
+            let rel = ((got - want) / want).abs();
+            assert!(rel < 5e-6, "e={e}: {got} vs {want} (rel {rel})");
+        });
+    }
+
+    #[test]
+    fn endpoints() {
+        assert!((fast_exp_neg(0.0) - 1.0).abs() < 1e-6);
+        let want = (-4.5f32).exp();
+        assert!((fast_exp_neg(4.5) - want).abs() / want < 5e-6);
+    }
+
+    #[test]
+    fn monotone_decreasing() {
+        let mut last = f32::INFINITY;
+        for i in 0..450 {
+            let v = fast_exp_neg(i as f32 * 0.01);
+            assert!(v <= last + 1e-7, "not monotone at {i}");
+            last = v;
+        }
+    }
+
+    #[test]
+    fn larger_arguments_do_not_blow_up() {
+        // Outside the raster domain but reachable via odd conics: stays
+        // finite and tiny.
+        for e in [10.0f32, 40.0, 80.0] {
+            let v = fast_exp_neg(e);
+            assert!(v.is_finite() && v >= 0.0 && v < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,263 @@
+//! Row-major 3×3 and 4×4 f32 matrices: rotation/covariance algebra for
+//! Gaussian projection and camera transforms.
+
+use super::vec::{Vec3, Vec4};
+use std::ops::Mul;
+
+/// Row-major 3×3 matrix.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Mat3 {
+    pub m: [[f32; 3]; 3],
+}
+
+/// Row-major 4×4 matrix.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Mat4 {
+    pub m: [[f32; 4]; 4],
+}
+
+impl Mat3 {
+    pub const IDENTITY: Mat3 = Mat3 {
+        m: [[1.0, 0.0, 0.0], [0.0, 1.0, 0.0], [0.0, 0.0, 1.0]],
+    };
+
+    pub fn from_rows(r0: Vec3, r1: Vec3, r2: Vec3) -> Mat3 {
+        Mat3 {
+            m: [
+                [r0.x, r0.y, r0.z],
+                [r1.x, r1.y, r1.z],
+                [r2.x, r2.y, r2.z],
+            ],
+        }
+    }
+
+    pub fn from_cols(c0: Vec3, c1: Vec3, c2: Vec3) -> Mat3 {
+        Mat3::from_rows(c0, c1, c2).transpose()
+    }
+
+    pub fn diag(d: Vec3) -> Mat3 {
+        Mat3 {
+            m: [[d.x, 0.0, 0.0], [0.0, d.y, 0.0], [0.0, 0.0, d.z]],
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> Vec3 {
+        Vec3::new(self.m[i][0], self.m[i][1], self.m[i][2])
+    }
+
+    #[inline]
+    pub fn col(&self, j: usize) -> Vec3 {
+        Vec3::new(self.m[0][j], self.m[1][j], self.m[2][j])
+    }
+
+    pub fn transpose(&self) -> Mat3 {
+        Mat3::from_rows(self.col(0), self.col(1), self.col(2))
+    }
+
+    pub fn det(&self) -> f32 {
+        let m = &self.m;
+        m[0][0] * (m[1][1] * m[2][2] - m[1][2] * m[2][1])
+            - m[0][1] * (m[1][0] * m[2][2] - m[1][2] * m[2][0])
+            + m[0][2] * (m[1][0] * m[2][1] - m[1][1] * m[2][0])
+    }
+
+    /// Inverse; returns None when |det| is tiny.
+    pub fn inverse(&self) -> Option<Mat3> {
+        let d = self.det();
+        if d.abs() < 1e-12 {
+            return None;
+        }
+        let inv_d = 1.0 / d;
+        let m = &self.m;
+        let mut out = [[0.0f32; 3]; 3];
+        out[0][0] = (m[1][1] * m[2][2] - m[1][2] * m[2][1]) * inv_d;
+        out[0][1] = (m[0][2] * m[2][1] - m[0][1] * m[2][2]) * inv_d;
+        out[0][2] = (m[0][1] * m[1][2] - m[0][2] * m[1][1]) * inv_d;
+        out[1][0] = (m[1][2] * m[2][0] - m[1][0] * m[2][2]) * inv_d;
+        out[1][1] = (m[0][0] * m[2][2] - m[0][2] * m[2][0]) * inv_d;
+        out[1][2] = (m[0][2] * m[1][0] - m[0][0] * m[1][2]) * inv_d;
+        out[2][0] = (m[1][0] * m[2][1] - m[1][1] * m[2][0]) * inv_d;
+        out[2][1] = (m[0][1] * m[2][0] - m[0][0] * m[2][1]) * inv_d;
+        out[2][2] = (m[0][0] * m[1][1] - m[0][1] * m[1][0]) * inv_d;
+        Some(Mat3 { m: out })
+    }
+}
+
+impl Mul<Vec3> for Mat3 {
+    type Output = Vec3;
+    #[inline]
+    fn mul(self, v: Vec3) -> Vec3 {
+        Vec3::new(self.row(0).dot(v), self.row(1).dot(v), self.row(2).dot(v))
+    }
+}
+
+impl Mul<Mat3> for Mat3 {
+    type Output = Mat3;
+    fn mul(self, o: Mat3) -> Mat3 {
+        let mut out = [[0.0f32; 3]; 3];
+        for (i, row) in out.iter_mut().enumerate() {
+            for (j, cell) in row.iter_mut().enumerate() {
+                *cell = self.row(i).dot(o.col(j));
+            }
+        }
+        Mat3 { m: out }
+    }
+}
+
+impl Mat4 {
+    pub const IDENTITY: Mat4 = Mat4 {
+        m: [
+            [1.0, 0.0, 0.0, 0.0],
+            [0.0, 1.0, 0.0, 0.0],
+            [0.0, 0.0, 1.0, 0.0],
+            [0.0, 0.0, 0.0, 1.0],
+        ],
+    };
+
+    /// Rigid transform from rotation + translation: x ↦ R·x + t.
+    pub fn from_rt(r: Mat3, t: Vec3) -> Mat4 {
+        Mat4 {
+            m: [
+                [r.m[0][0], r.m[0][1], r.m[0][2], t.x],
+                [r.m[1][0], r.m[1][1], r.m[1][2], t.y],
+                [r.m[2][0], r.m[2][1], r.m[2][2], t.z],
+                [0.0, 0.0, 0.0, 1.0],
+            ],
+        }
+    }
+
+    pub fn rotation(&self) -> Mat3 {
+        Mat3 {
+            m: [
+                [self.m[0][0], self.m[0][1], self.m[0][2]],
+                [self.m[1][0], self.m[1][1], self.m[1][2]],
+                [self.m[2][0], self.m[2][1], self.m[2][2]],
+            ],
+        }
+    }
+
+    pub fn translation(&self) -> Vec3 {
+        Vec3::new(self.m[0][3], self.m[1][3], self.m[2][3])
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> Vec4 {
+        Vec4::new(self.m[i][0], self.m[i][1], self.m[i][2], self.m[i][3])
+    }
+
+    /// Transform a point (w = 1).
+    #[inline]
+    pub fn transform_point(&self, p: Vec3) -> Vec3 {
+        let v = p.extend(1.0);
+        Vec3::new(self.row(0).dot(v), self.row(1).dot(v), self.row(2).dot(v))
+    }
+
+    /// Transform a direction (w = 0).
+    #[inline]
+    pub fn transform_dir(&self, d: Vec3) -> Vec3 {
+        let v = d.extend(0.0);
+        Vec3::new(self.row(0).dot(v), self.row(1).dot(v), self.row(2).dot(v))
+    }
+
+    /// Inverse of a rigid transform (R orthonormal): [Rᵀ | -Rᵀt].
+    pub fn rigid_inverse(&self) -> Mat4 {
+        let rt = self.rotation().transpose();
+        let t = self.translation();
+        Mat4::from_rt(rt, -(rt * t))
+    }
+}
+
+impl Mul<Mat4> for Mat4 {
+    type Output = Mat4;
+    fn mul(self, o: Mat4) -> Mat4 {
+        let mut out = [[0.0f32; 4]; 4];
+        for (i, row) in out.iter_mut().enumerate() {
+            for (j, cell) in row.iter_mut().enumerate() {
+                *cell = (0..4).map(|k| self.m[i][k] * o.m[k][j]).sum();
+            }
+        }
+        Mat4 { m: out }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::quat::Quat;
+
+    fn mat3_close(a: Mat3, b: Mat3, eps: f32) -> bool {
+        (0..3).all(|i| (0..3).all(|j| (a.m[i][j] - b.m[i][j]).abs() < eps))
+    }
+
+    #[test]
+    fn identity_mul() {
+        let v = Vec3::new(1.0, -2.0, 3.0);
+        assert_eq!(Mat3::IDENTITY * v, v);
+        let m = Mat3::from_rows(
+            Vec3::new(1.0, 2.0, 3.0),
+            Vec3::new(0.0, 1.0, 4.0),
+            Vec3::new(5.0, 6.0, 0.0),
+        );
+        assert!(mat3_close(m * Mat3::IDENTITY, m, 1e-6));
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let m = Mat3::from_rows(
+            Vec3::new(1.0, 2.0, 3.0),
+            Vec3::new(0.0, 1.0, 4.0),
+            Vec3::new(5.0, 6.0, 0.0),
+        );
+        let inv = m.inverse().unwrap();
+        assert!(mat3_close(m * inv, Mat3::IDENTITY, 1e-4));
+    }
+
+    #[test]
+    fn singular_has_no_inverse() {
+        let m = Mat3::from_rows(Vec3::X, Vec3::X, Vec3::Z);
+        assert!(m.inverse().is_none());
+    }
+
+    #[test]
+    fn det_of_diag() {
+        assert_eq!(Mat3::diag(Vec3::new(2.0, 3.0, 4.0)).det(), 24.0);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = Mat3::from_rows(
+            Vec3::new(1.0, 2.0, 3.0),
+            Vec3::new(4.0, 5.0, 6.0),
+            Vec3::new(7.0, 8.0, 9.0),
+        );
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn mat4_point_vs_dir() {
+        let t = Mat4::from_rt(Mat3::IDENTITY, Vec3::new(1.0, 2.0, 3.0));
+        assert_eq!(t.transform_point(Vec3::ZERO), Vec3::new(1.0, 2.0, 3.0));
+        assert_eq!(t.transform_dir(Vec3::X), Vec3::X);
+    }
+
+    #[test]
+    fn rigid_inverse_roundtrip() {
+        let r = Quat::from_axis_angle(Vec3::new(1.0, 2.0, 0.5).normalized(), 0.7).to_mat3();
+        let t = Mat4::from_rt(r, Vec3::new(3.0, -1.0, 2.0));
+        let p = Vec3::new(0.5, 0.25, -4.0);
+        let back = t.rigid_inverse().transform_point(t.transform_point(p));
+        assert!((back - p).norm() < 1e-5);
+    }
+
+    #[test]
+    fn mat4_compose_matches_sequential() {
+        let r = Quat::from_axis_angle(Vec3::Z, 0.3).to_mat3();
+        let a = Mat4::from_rt(r, Vec3::new(1.0, 0.0, 0.0));
+        let b = Mat4::from_rt(Mat3::IDENTITY, Vec3::new(0.0, 2.0, 0.0));
+        let p = Vec3::new(1.0, 1.0, 1.0);
+        let seq = a.transform_point(b.transform_point(p));
+        let composed = (a * b).transform_point(p);
+        assert!((seq - composed).norm() < 1e-5);
+    }
+}

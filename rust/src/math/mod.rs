@@ -1,0 +1,17 @@
+//! Geometry and numeric substrates for the 3DGS pipeline: small fixed-size
+//! linear algebra, quaternions, spherical harmonics, 2×2 symmetric
+//! eigendecomposition and Morton (Z-order) codes.
+
+pub mod eigen;
+pub mod fexp;
+pub mod mat;
+pub mod morton;
+pub mod quat;
+pub mod sh;
+pub mod vec;
+
+pub use eigen::{eigvals2x2, Eigen2};
+pub use mat::{Mat3, Mat4};
+pub use morton::{morton_decode2, morton_encode2};
+pub use quat::Quat;
+pub use vec::{Vec2, Vec3, Vec4};

@@ -1,0 +1,196 @@
+//! Unit quaternions for Gaussian orientations and camera poses, including
+//! slerp for trajectory interpolation (the paper interpolates sparse
+//! real-world camera paths into continuous 90 FPS sequences, Sec. VI-A).
+
+use super::mat::Mat3;
+use super::vec::Vec3;
+
+/// Quaternion w + xi + yj + zk.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Quat {
+    pub w: f32,
+    pub x: f32,
+    pub y: f32,
+    pub z: f32,
+}
+
+impl Quat {
+    pub const IDENTITY: Quat = Quat { w: 1.0, x: 0.0, y: 0.0, z: 0.0 };
+
+    pub fn new(w: f32, x: f32, y: f32, z: f32) -> Quat {
+        Quat { w, x, y, z }
+    }
+
+    pub fn from_axis_angle(axis: Vec3, angle: f32) -> Quat {
+        let a = axis.normalized();
+        let (s, c) = (angle * 0.5).sin_cos();
+        Quat { w: c, x: a.x * s, y: a.y * s, z: a.z * s }
+    }
+
+    pub fn dot(self, o: Quat) -> f32 {
+        self.w * o.w + self.x * o.x + self.y * o.y + self.z * o.z
+    }
+
+    pub fn norm(self) -> f32 {
+        self.dot(self).sqrt()
+    }
+
+    pub fn normalized(self) -> Quat {
+        let n = self.norm();
+        if n > 1e-12 {
+            Quat { w: self.w / n, x: self.x / n, y: self.y / n, z: self.z / n }
+        } else {
+            Quat::IDENTITY
+        }
+    }
+
+    pub fn conj(self) -> Quat {
+        Quat { w: self.w, x: -self.x, y: -self.y, z: -self.z }
+    }
+
+    /// Hamilton product.
+    pub fn mul(self, o: Quat) -> Quat {
+        Quat {
+            w: self.w * o.w - self.x * o.x - self.y * o.y - self.z * o.z,
+            x: self.w * o.x + self.x * o.w + self.y * o.z - self.z * o.y,
+            y: self.w * o.y - self.x * o.z + self.y * o.w + self.z * o.x,
+            z: self.w * o.z + self.x * o.y - self.y * o.x + self.z * o.w,
+        }
+    }
+
+    /// Rotate a vector.
+    pub fn rotate(self, v: Vec3) -> Vec3 {
+        self.to_mat3() * v
+    }
+
+    /// Rotation matrix of the (assumed unit) quaternion.
+    pub fn to_mat3(self) -> Mat3 {
+        let Quat { w, x, y, z } = self.normalized();
+        Mat3 {
+            m: [
+                [
+                    1.0 - 2.0 * (y * y + z * z),
+                    2.0 * (x * y - w * z),
+                    2.0 * (x * z + w * y),
+                ],
+                [
+                    2.0 * (x * y + w * z),
+                    1.0 - 2.0 * (x * x + z * z),
+                    2.0 * (y * z - w * x),
+                ],
+                [
+                    2.0 * (x * z - w * y),
+                    2.0 * (y * z + w * x),
+                    1.0 - 2.0 * (x * x + y * y),
+                ],
+            ],
+        }
+    }
+
+    /// Spherical linear interpolation (shortest arc).
+    pub fn slerp(self, other: Quat, t: f32) -> Quat {
+        let mut b = other;
+        let mut cos = self.dot(other);
+        if cos < 0.0 {
+            // Take the shorter path.
+            b = Quat { w: -b.w, x: -b.x, y: -b.y, z: -b.z };
+            cos = -cos;
+        }
+        if cos > 0.9995 {
+            // Nearly parallel: nlerp.
+            return Quat {
+                w: self.w + (b.w - self.w) * t,
+                x: self.x + (b.x - self.x) * t,
+                y: self.y + (b.y - self.y) * t,
+                z: self.z + (b.z - self.z) * t,
+            }
+            .normalized();
+        }
+        let theta = cos.clamp(-1.0, 1.0).acos();
+        let sin = theta.sin();
+        let wa = ((1.0 - t) * theta).sin() / sin;
+        let wb = (t * theta).sin() / sin;
+        Quat {
+            w: self.w * wa + b.w * wb,
+            x: self.x * wa + b.x * wb,
+            y: self.y * wa + b.y * wb,
+            z: self.z * wa + b.z * wb,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_rotates_nothing() {
+        let v = Vec3::new(1.0, 2.0, 3.0);
+        assert!((Quat::IDENTITY.rotate(v) - v).norm() < 1e-6);
+    }
+
+    #[test]
+    fn axis_angle_quarter_turn() {
+        let q = Quat::from_axis_angle(Vec3::Z, std::f32::consts::FRAC_PI_2);
+        let v = q.rotate(Vec3::X);
+        assert!((v - Vec3::Y).norm() < 1e-5, "{v:?}");
+    }
+
+    #[test]
+    fn rotation_matrix_orthonormal() {
+        let q = Quat::from_axis_angle(Vec3::new(1.0, 1.0, 0.3), 1.1);
+        let m = q.to_mat3();
+        let should_be_i = m * m.transpose();
+        for i in 0..3 {
+            for j in 0..3 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((should_be_i.m[i][j] - want).abs() < 1e-5);
+            }
+        }
+        assert!((m.det() - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn mul_composes_rotations() {
+        let a = Quat::from_axis_angle(Vec3::Z, 0.4);
+        let b = Quat::from_axis_angle(Vec3::X, 0.9);
+        let v = Vec3::new(0.2, -1.0, 0.7);
+        let seq = a.rotate(b.rotate(v));
+        let composed = a.mul(b).rotate(v);
+        assert!((seq - composed).norm() < 1e-5);
+    }
+
+    #[test]
+    fn slerp_endpoints_and_midpoint() {
+        let a = Quat::from_axis_angle(Vec3::Z, 0.0);
+        let b = Quat::from_axis_angle(Vec3::Z, 1.0);
+        assert!((a.slerp(b, 0.0).dot(a).abs() - 1.0).abs() < 1e-5);
+        assert!((a.slerp(b, 1.0).dot(b).abs() - 1.0).abs() < 1e-5);
+        let mid = a.slerp(b, 0.5);
+        let expect = Quat::from_axis_angle(Vec3::Z, 0.5);
+        assert!((mid.dot(expect).abs() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn slerp_takes_short_path() {
+        let a = Quat::from_axis_angle(Vec3::Z, 0.1);
+        let b_long = Quat::from_axis_angle(Vec3::Z, 0.3);
+        let b_neg = Quat { w: -b_long.w, x: -b_long.x, y: -b_long.y, z: -b_long.z };
+        // Interpolating toward the negated quaternion must give the same rotation.
+        let m1 = a.slerp(b_long, 0.5).to_mat3();
+        let m2 = a.slerp(b_neg, 0.5).to_mat3();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!((m1.m[i][j] - m2.m[i][j]).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn conj_inverts_unit_rotation() {
+        let q = Quat::from_axis_angle(Vec3::new(0.3, 0.8, -0.2), 0.77);
+        let v = Vec3::new(1.0, 2.0, 3.0);
+        let back = q.conj().rotate(q.rotate(v));
+        assert!((back - v).norm() < 1e-5);
+    }
+}

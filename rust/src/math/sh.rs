@@ -1,0 +1,173 @@
+//! Real spherical harmonics evaluation (degrees 0–3), matching the
+//! reference 3DGS convention: per-Gaussian SH coefficients encode
+//! view-dependent color; preprocessing evaluates them along the
+//! camera→Gaussian direction.
+
+use super::vec::Vec3;
+
+/// Number of SH coefficients for a maximum degree (per color channel).
+pub const fn num_coeffs(degree: usize) -> usize {
+    (degree + 1) * (degree + 1)
+}
+
+// Real SH constants (as in the 3DGS reference implementation).
+const C0: f32 = 0.282_094_79;
+const C1: f32 = 0.488_602_51;
+const C2: [f32; 5] = [1.092_548_4, -1.092_548_4, 0.315_391_57, -1.092_548_4, 0.546_274_2];
+const C3: [f32; 7] = [
+    -0.590_043_6,
+    2.890_611_4,
+    -0.457_045_8,
+    0.373_176_33,
+    -0.457_045_8,
+    1.445_305_7,
+    -0.590_043_6,
+];
+
+/// Evaluate the SH basis functions at unit direction `d` into `out`
+/// (length = num_coeffs(degree)).
+pub fn eval_basis(degree: usize, d: Vec3, out: &mut [f32]) {
+    assert!(degree <= 3, "SH degree {degree} unsupported");
+    assert_eq!(out.len(), num_coeffs(degree));
+    out[0] = C0;
+    if degree == 0 {
+        return;
+    }
+    let (x, y, z) = (d.x, d.y, d.z);
+    out[1] = -C1 * y;
+    out[2] = C1 * z;
+    out[3] = -C1 * x;
+    if degree == 1 {
+        return;
+    }
+    let (xx, yy, zz) = (x * x, y * y, z * z);
+    let (xy, yz, xz) = (x * y, y * z, x * z);
+    out[4] = C2[0] * xy;
+    out[5] = C2[1] * yz;
+    out[6] = C2[2] * (2.0 * zz - xx - yy);
+    out[7] = C2[3] * xz;
+    out[8] = C2[4] * (xx - yy);
+    if degree == 2 {
+        return;
+    }
+    out[9] = C3[0] * y * (3.0 * xx - yy);
+    out[10] = C3[1] * xy * z;
+    out[11] = C3[2] * y * (4.0 * zz - xx - yy);
+    out[12] = C3[3] * z * (2.0 * zz - 3.0 * xx - 3.0 * yy);
+    out[13] = C3[4] * x * (4.0 * zz - xx - yy);
+    out[14] = C3[5] * z * (xx - yy);
+    out[15] = C3[6] * x * (xx - 3.0 * yy);
+}
+
+/// Evaluate an RGB color from interleaved coefficients
+/// (`coeffs[c * 3 + channel]`) at direction `d`, with the 3DGS +0.5 offset
+/// and clamp-to-positive.
+pub fn eval_color(degree: usize, coeffs: &[f32], d: Vec3) -> Vec3 {
+    let n = num_coeffs(degree);
+    debug_assert_eq!(coeffs.len(), n * 3);
+    let mut basis = [0.0f32; 16];
+    eval_basis(degree, d, &mut basis[..n]);
+    let mut rgb = Vec3::ZERO;
+    for (i, &b) in basis[..n].iter().enumerate() {
+        rgb += Vec3::new(coeffs[i * 3], coeffs[i * 3 + 1], coeffs[i * 3 + 2]) * b;
+    }
+    rgb += Vec3::splat(0.5); // 3DGS convention
+    rgb.max(Vec3::ZERO)
+}
+
+/// Degree-0 inverse: the coefficient that yields `color` from any direction.
+pub fn dc_from_color(color: Vec3) -> Vec3 {
+    (color - Vec3::splat(0.5)) / C0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn rand_dir(rng: &mut Rng) -> Vec3 {
+        loop {
+            let v = Vec3::new(rng.normal(), rng.normal(), rng.normal());
+            if v.norm() > 1e-3 {
+                return v.normalized();
+            }
+        }
+    }
+
+    #[test]
+    fn coeff_counts() {
+        assert_eq!(num_coeffs(0), 1);
+        assert_eq!(num_coeffs(1), 4);
+        assert_eq!(num_coeffs(2), 9);
+        assert_eq!(num_coeffs(3), 16);
+    }
+
+    #[test]
+    fn degree0_is_isotropic() {
+        let dc = dc_from_color(Vec3::new(0.8, 0.3, 0.1));
+        let coeffs = [dc.x, dc.y, dc.z];
+        let c1 = eval_color(0, &coeffs, Vec3::X);
+        let c2 = eval_color(0, &coeffs, Vec3::new(-0.3, 0.5, 0.8).normalized());
+        assert!((c1 - c2).norm() < 1e-6);
+        assert!((c1 - Vec3::new(0.8, 0.3, 0.1)).norm() < 1e-5);
+    }
+
+    #[test]
+    fn basis_orthonormality_monte_carlo() {
+        // ∫ Y_i Y_j dΩ = δ_ij; with uniform sphere samples the estimator is
+        // 4π E[Y_i Y_j]. Loose tolerance — MC with 60k samples.
+        let mut rng = Rng::new(123);
+        let n = num_coeffs(2);
+        let samples = 60_000;
+        let mut acc = vec![0.0f64; n * n];
+        let mut basis = vec![0.0f32; n];
+        for _ in 0..samples {
+            let d = rand_dir(&mut rng);
+            eval_basis(2, d, &mut basis);
+            for i in 0..n {
+                for j in 0..n {
+                    acc[i * n + j] += (basis[i] * basis[j]) as f64;
+                }
+            }
+        }
+        let norm = 4.0 * std::f64::consts::PI / samples as f64;
+        for i in 0..n {
+            for j in 0..n {
+                let v = acc[i * n + j] * norm;
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (v - want).abs() < 0.05,
+                    "gram[{i}][{j}] = {v} (want {want})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eval_color_never_negative() {
+        check("SH color clamped at zero", 256, |rng| {
+            let n = num_coeffs(3);
+            let coeffs: Vec<f32> = (0..n * 3).map(|_| rng.range(-2.0, 2.0)).collect();
+            let d = {
+                let v = Vec3::new(rng.normal(), rng.normal(), rng.normal());
+                if v.norm() > 1e-3 { v.normalized() } else { Vec3::Z }
+            };
+            let c = eval_color(3, &coeffs, d);
+            assert!(c.x >= 0.0 && c.y >= 0.0 && c.z >= 0.0);
+        });
+    }
+
+    #[test]
+    fn degree3_smooth_in_direction() {
+        // Small direction change ⇒ small color change (continuity).
+        let mut rng = Rng::new(9);
+        let n = num_coeffs(3);
+        let coeffs: Vec<f32> = (0..n * 3).map(|_| rng.range(-0.5, 0.5)).collect();
+        let d0 = Vec3::new(0.6, 0.5, 0.62).normalized();
+        let d1 = (d0 + Vec3::new(1e-4, -1e-4, 1e-4)).normalized();
+        let c0 = eval_color(3, &coeffs, d0);
+        let c1 = eval_color(3, &coeffs, d1);
+        assert!((c0 - c1).norm() < 1e-2);
+    }
+}

@@ -1,0 +1,58 @@
+//! Peak signal-to-noise ratio over float RGB buffers in [0, 1].
+
+/// Mean squared error between two equal-length buffers.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "buffer size mismatch");
+    assert!(!a.is_empty());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// PSNR in dB (peak = 1.0). Identical buffers → +inf is capped at 99 dB so
+/// tables stay printable.
+pub fn psnr(a: &[f32], b: &[f32]) -> f64 {
+    let e = mse(a, b);
+    if e < 1e-12 {
+        return 99.0;
+    }
+    (-10.0 * e.log10()).min(99.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_is_capped() {
+        let a = vec![0.5f32; 300];
+        assert_eq!(psnr(&a, &a), 99.0);
+    }
+
+    #[test]
+    fn known_value() {
+        // Uniform error of 0.1 ⇒ MSE = 0.01 ⇒ PSNR = 20 dB.
+        let a = vec![0.5f32; 100];
+        let b = vec![0.6f32; 100];
+        assert!((psnr(&a, &b) - 20.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn monotone_in_error() {
+        let a = vec![0.5f32; 100];
+        let b1 = vec![0.52f32; 100];
+        let b2 = vec![0.6f32; 100];
+        assert!(psnr(&a, &b1) > psnr(&a, &b2));
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_lengths_panic() {
+        mse(&[0.0], &[0.0, 1.0]);
+    }
+}

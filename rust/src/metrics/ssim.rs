@@ -1,0 +1,147 @@
+//! Structural similarity (SSIM), the standard single-scale formulation
+//! (Wang et al. 2004): 11×11 Gaussian window (σ = 1.5), C1 = (0.01)²,
+//! C2 = (0.03)², computed on luminance.
+
+const WIN: usize = 11;
+const SIGMA: f32 = 1.5;
+const C1: f64 = 0.0001; // (0.01 * L)², L = 1
+const C2: f64 = 0.0009; // (0.03 * L)²
+
+fn gaussian_kernel() -> [f32; WIN] {
+    let mut k = [0.0f32; WIN];
+    let c = (WIN / 2) as f32;
+    let mut sum = 0.0;
+    for (i, v) in k.iter_mut().enumerate() {
+        let d = i as f32 - c;
+        *v = (-d * d / (2.0 * SIGMA * SIGMA)).exp();
+        sum += *v;
+    }
+    for v in k.iter_mut() {
+        *v /= sum;
+    }
+    k
+}
+
+/// Luminance (Rec. 601) of an RGB buffer.
+fn luminance(rgb: &[f32]) -> Vec<f32> {
+    rgb.chunks_exact(3)
+        .map(|p| 0.299 * p[0] + 0.587 * p[1] + 0.114 * p[2])
+        .collect()
+}
+
+/// Separable Gaussian blur with edge clamping.
+fn blur(img: &[f32], w: usize, h: usize) -> Vec<f32> {
+    let k = gaussian_kernel();
+    let r = WIN / 2;
+    let mut tmp = vec![0.0f32; w * h];
+    for y in 0..h {
+        for x in 0..w {
+            let mut acc = 0.0;
+            for (i, &kv) in k.iter().enumerate() {
+                let xx = (x + i).saturating_sub(r).min(w - 1);
+                acc += kv * img[y * w + xx];
+            }
+            tmp[y * w + x] = acc;
+        }
+    }
+    let mut out = vec![0.0f32; w * h];
+    for y in 0..h {
+        for x in 0..w {
+            let mut acc = 0.0;
+            for (i, &kv) in k.iter().enumerate() {
+                let yy = (y + i).saturating_sub(r).min(h - 1);
+                acc += kv * tmp[yy * w + x];
+            }
+            out[y * w + x] = acc;
+        }
+    }
+    out
+}
+
+/// Mean SSIM between two RGB frames (range [−1, 1], 1 = identical).
+pub fn ssim(rgb_a: &[f32], rgb_b: &[f32], w: usize, h: usize) -> f64 {
+    assert_eq!(rgb_a.len(), w * h * 3);
+    assert_eq!(rgb_b.len(), w * h * 3);
+    let a = luminance(rgb_a);
+    let b = luminance(rgb_b);
+    let mu_a = blur(&a, w, h);
+    let mu_b = blur(&b, w, h);
+    let aa: Vec<f32> = a.iter().map(|x| x * x).collect();
+    let bb: Vec<f32> = b.iter().map(|x| x * x).collect();
+    let ab: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x * y).collect();
+    let s_aa = blur(&aa, w, h);
+    let s_bb = blur(&bb, w, h);
+    let s_ab = blur(&ab, w, h);
+
+    let mut total = 0.0f64;
+    for i in 0..w * h {
+        let ma = mu_a[i] as f64;
+        let mb = mu_b[i] as f64;
+        let va = (s_aa[i] as f64 - ma * ma).max(0.0);
+        let vb = (s_bb[i] as f64 - mb * mb).max(0.0);
+        let cov = s_ab[i] as f64 - ma * mb;
+        let v = ((2.0 * ma * mb + C1) * (2.0 * cov + C2))
+            / ((ma * ma + mb * mb + C1) * (va + vb + C2));
+        total += v;
+    }
+    total / (w * h) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn noise_image(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n * 3).map(|_| rng.f32()).collect()
+    }
+
+    #[test]
+    fn identical_images_score_one() {
+        let mut rng = Rng::new(1);
+        let img = noise_image(&mut rng, 64 * 48);
+        let s = ssim(&img, &img, 64, 48);
+        assert!((s - 1.0).abs() < 1e-6, "{s}");
+    }
+
+    #[test]
+    fn independent_noise_scores_low() {
+        let mut rng = Rng::new(2);
+        let a = noise_image(&mut rng, 64 * 48);
+        let b = noise_image(&mut rng, 64 * 48);
+        let s = ssim(&a, &b, 64, 48);
+        assert!(s < 0.2, "{s}");
+    }
+
+    #[test]
+    fn small_noise_beats_large_noise() {
+        let mut rng = Rng::new(3);
+        let a = noise_image(&mut rng, 64 * 48);
+        let b_small: Vec<f32> = a.iter().map(|&v| (v + rng.normal() * 0.02).clamp(0.0, 1.0)).collect();
+        let b_big: Vec<f32> = a.iter().map(|&v| (v + rng.normal() * 0.2).clamp(0.0, 1.0)).collect();
+        let s_small = ssim(&a, &b_small, 64, 48);
+        let s_big = ssim(&a, &b_big, 64, 48);
+        assert!(s_small > s_big, "{s_small} vs {s_big}");
+        assert!(s_small > 0.9);
+    }
+
+    #[test]
+    fn constant_shift_penalized_lightly() {
+        // SSIM is less sensitive to luminance shifts than to structure.
+        let mut rng = Rng::new(4);
+        let a = noise_image(&mut rng, 64 * 48);
+        let b: Vec<f32> = a.iter().map(|&v| (v * 0.9 + 0.05).clamp(0.0, 1.0)).collect();
+        let s = ssim(&a, &b, 64, 48);
+        assert!(s > 0.8, "{s}");
+    }
+
+    #[test]
+    fn kernel_normalized() {
+        let k = gaussian_kernel();
+        let sum: f32 = k.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+        // Symmetric, peaked at center.
+        assert_eq!(k[0], k[WIN - 1]);
+        assert!(k[WIN / 2] > k[0]);
+    }
+}

@@ -1,0 +1,281 @@
+//! Binning + sorting stage (paper Sec. II-A "Sorting"): expand each splat
+//! into (tile, splat) pairs via the configured intersection test, then
+//! depth-sort each tile's list. Equivalent to 3DGS's global
+//! (tile | quantized-depth) radix sort, implemented as counting-sort by
+//! tile followed by per-tile unstable sort on quantized depth.
+//!
+//! Two paper features hook in here:
+//! * **tile masks** (TWSR, Sec. IV-A): tiles satisfied by warping are
+//!   dropped *before* pair expansion, so their sorting cost vanishes;
+//! * **depth limits** (DPES, Sec. IV-B): splats beyond a tile's predicted
+//!   early-stop depth are dropped from that tile's list before sorting.
+
+use super::intersect::{tiles_for_splat, IntersectCost, IntersectMode};
+use super::preprocess::Splat;
+
+/// Per-tile splat lists, depth-sorted.
+#[derive(Clone, Debug, Default)]
+pub struct TileBins {
+    /// Offsets into `entries`, len = num_tiles + 1.
+    pub offsets: Vec<u32>,
+    /// Splat indices (into the preprocess output), depth-sorted per tile.
+    pub entries: Vec<u32>,
+    /// Cost counters accumulated over all splats.
+    pub cost: IntersectCost,
+}
+
+impl TileBins {
+    #[inline]
+    pub fn tile(&self, t: usize) -> &[u32] {
+        &self.entries[self.offsets[t] as usize..self.offsets[t + 1] as usize]
+    }
+
+    pub fn num_tiles(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    /// Total Gaussian-tile pairs (the Fig. 4b / Fig. 9 metric).
+    pub fn num_pairs(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Per-tile pair counts (the Fig. 5 histogram input).
+    pub fn per_tile_counts(&self) -> Vec<u32> {
+        (0..self.num_tiles())
+            .map(|t| self.offsets[t + 1] - self.offsets[t])
+            .collect()
+    }
+}
+
+/// Options for binning.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BinOptions<'a> {
+    /// If set, only tiles with `mask[t] == true` receive pairs (TWSR).
+    pub tile_mask: Option<&'a [bool]>,
+    /// If set, splats with depth > limit\[t\] are excluded from tile t
+    /// (DPES depth culling). `f32::INFINITY` = no limit.
+    pub depth_limits: Option<&'a [f32]>,
+}
+
+/// Build depth-sorted per-tile bins.
+pub fn bin_splats(
+    splats: &[Splat],
+    mode: IntersectMode,
+    grid: (usize, usize),
+    opts: BinOptions,
+) -> TileBins {
+    let num_tiles = grid.0 * grid.1;
+    if let Some(m) = opts.tile_mask {
+        assert_eq!(m.len(), num_tiles, "tile mask size mismatch");
+    }
+    if let Some(d) = opts.depth_limits {
+        assert_eq!(d.len(), num_tiles, "depth limit size mismatch");
+    }
+
+    // Pass 1: expand pairs.
+    let mut pairs: Vec<(u32, u32)> = Vec::with_capacity(splats.len() * 2);
+    let mut scratch: Vec<u32> = Vec::with_capacity(64);
+    let mut cost = IntersectCost::default();
+    for (si, splat) in splats.iter().enumerate() {
+        scratch.clear();
+        let c = tiles_for_splat(mode, splat, grid, &mut scratch);
+        cost.candidates += c.candidates;
+        cost.heavy_ops += c.heavy_ops;
+        for &t in &scratch {
+            if let Some(m) = opts.tile_mask {
+                if !m[t as usize] {
+                    continue;
+                }
+            }
+            if let Some(d) = opts.depth_limits {
+                if splat.depth > d[t as usize] {
+                    continue;
+                }
+            }
+            pairs.push((t, si as u32));
+        }
+    }
+    cost.emitted = pairs.len() as u64;
+
+    // Pass 2: counting sort by tile.
+    let mut counts = vec![0u32; num_tiles + 1];
+    for &(t, _) in &pairs {
+        counts[t as usize + 1] += 1;
+    }
+    let mut offsets = counts;
+    for i in 1..offsets.len() {
+        offsets[i] += offsets[i - 1];
+    }
+    let mut entries = vec![0u32; pairs.len()];
+    let mut cursor = offsets.clone();
+    for &(t, s) in &pairs {
+        let at = cursor[t as usize];
+        entries[at as usize] = s;
+        cursor[t as usize] += 1;
+    }
+
+    // Pass 3: per-tile depth sort (quantized u32 keys, like 3DGS radix).
+    for t in 0..num_tiles {
+        let seg = &mut entries[offsets[t] as usize..offsets[t + 1] as usize];
+        seg.sort_unstable_by_key(|&s| quantize_depth(splats[s as usize].depth));
+    }
+
+    TileBins {
+        offsets,
+        entries,
+        cost,
+    }
+}
+
+/// Monotone quantization of depth to u32 (positive depths; matches the
+/// 3DGS pipeline's fixed-point radix keys).
+#[inline]
+pub fn quantize_depth(z: f32) -> u32 {
+    // Positive finite z ⇒ IEEE bits are monotone.
+    debug_assert!(z >= 0.0);
+    z.to_bits()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::{sh, Quat, Vec3};
+    use crate::render::preprocess::preprocess;
+    use crate::scene::{generate, Camera, GaussianCloud, Intrinsics, Pose};
+
+    fn test_setup() -> (Vec<Splat>, (usize, usize)) {
+        let scene = generate("chair", 0.05, 320, 240);
+        let cam = Camera::new(scene.intrinsics, scene.sample_poses(1)[0]);
+        let splats = preprocess(&scene.cloud, &cam);
+        (splats, scene.intrinsics.tile_grid())
+    }
+
+    #[test]
+    fn offsets_consistent() {
+        let (splats, grid) = test_setup();
+        let bins = bin_splats(&splats, IntersectMode::Aabb, grid, BinOptions::default());
+        assert_eq!(bins.num_tiles(), grid.0 * grid.1);
+        assert_eq!(*bins.offsets.last().unwrap() as usize, bins.entries.len());
+        for t in 0..bins.num_tiles() {
+            assert!(bins.offsets[t] <= bins.offsets[t + 1]);
+        }
+        assert!(bins.num_pairs() > 0);
+    }
+
+    #[test]
+    fn tiles_sorted_by_depth() {
+        let (splats, grid) = test_setup();
+        let bins = bin_splats(&splats, IntersectMode::Tait, grid, BinOptions::default());
+        for t in 0..bins.num_tiles() {
+            let seg = bins.tile(t);
+            for w in seg.windows(2) {
+                assert!(
+                    splats[w[0] as usize].depth <= splats[w[1] as usize].depth,
+                    "tile {t} not depth-sorted"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tait_produces_fewer_pairs_than_aabb() {
+        let (splats, grid) = test_setup();
+        let aabb = bin_splats(&splats, IntersectMode::Aabb, grid, BinOptions::default());
+        let tait = bin_splats(&splats, IntersectMode::Tait, grid, BinOptions::default());
+        assert!(
+            tait.num_pairs() < aabb.num_pairs(),
+            "tait {} vs aabb {}",
+            tait.num_pairs(),
+            aabb.num_pairs()
+        );
+    }
+
+    #[test]
+    fn tile_mask_drops_masked_tiles() {
+        let (splats, grid) = test_setup();
+        let mut mask = vec![false; grid.0 * grid.1];
+        // Only render the center tile row.
+        for col in 0..grid.0 {
+            mask[(grid.1 / 2) * grid.0 + col] = true;
+        }
+        let bins = bin_splats(
+            &splats,
+            IntersectMode::Aabb,
+            grid,
+            BinOptions {
+                tile_mask: Some(&mask),
+                depth_limits: None,
+            },
+        );
+        for t in 0..bins.num_tiles() {
+            if !mask[t] {
+                assert!(bins.tile(t).is_empty(), "masked tile {t} has pairs");
+            }
+        }
+        let full = bin_splats(&splats, IntersectMode::Aabb, grid, BinOptions::default());
+        assert!(bins.num_pairs() < full.num_pairs());
+    }
+
+    #[test]
+    fn depth_limits_cull_far_splats() {
+        let (splats, grid) = test_setup();
+        let full = bin_splats(&splats, IntersectMode::Aabb, grid, BinOptions::default());
+        // Median splat depth as a limit everywhere.
+        let mut depths: Vec<f32> = splats.iter().map(|s| s.depth).collect();
+        depths.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = depths[depths.len() / 2];
+        let limits = vec![med; grid.0 * grid.1];
+        let culled = bin_splats(
+            &splats,
+            IntersectMode::Aabb,
+            grid,
+            BinOptions {
+                tile_mask: None,
+                depth_limits: Some(&limits),
+            },
+        );
+        assert!(culled.num_pairs() < full.num_pairs());
+        for t in 0..culled.num_tiles() {
+            for &s in culled.tile(t) {
+                assert!(splats[s as usize].depth <= med);
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_depth_monotone() {
+        let mut last = 0u32;
+        for z in [0.01f32, 0.5, 1.0, 2.5, 10.0, 999.0] {
+            let q = quantize_depth(z);
+            assert!(q > last);
+            last = q;
+        }
+    }
+
+    #[test]
+    fn empty_splats_ok() {
+        let bins = bin_splats(&[], IntersectMode::Tait, (4, 4), BinOptions::default());
+        assert_eq!(bins.num_pairs(), 0);
+        assert_eq!(bins.num_tiles(), 16);
+    }
+
+    #[test]
+    fn single_splat_lands_in_expected_tile() {
+        let mut cloud = GaussianCloud::with_capacity(1, 0);
+        let dc = sh::dc_from_color(Vec3::new(0.5, 0.5, 0.5));
+        cloud.push(
+            Vec3::new(0.0, 0.0, 5.0),
+            Vec3::splat(0.02),
+            Quat::IDENTITY,
+            0.9,
+            &[dc.x, dc.y, dc.z],
+        );
+        let cam = Camera::new(Intrinsics::from_fov(320, 240, 1.2), Pose::IDENTITY);
+        let splats = preprocess(&cloud, &cam);
+        let grid = cam.intrinsics.tile_grid();
+        let bins = bin_splats(&splats, IntersectMode::Exact, grid, BinOptions::default());
+        // Pixel (160,120) → tile (10, 7) on a 20-wide grid.
+        let center_tile = 7 * grid.0 + 10;
+        assert!(!bins.tile(center_tile).is_empty());
+    }
+}

@@ -1,0 +1,162 @@
+//! Frame buffers produced by the rasterizer: color, alpha, estimated depth
+//! and the *truncated* depth map that DPES (Sec. IV-B) reprojects to
+//! predict early-stopping positions in the next frame.
+
+use crate::TILE;
+
+/// Marks a pixel with no valid depth (nothing rendered there).
+pub const INVALID_DEPTH: f32 = f32::INFINITY;
+
+/// A rendered (or warped) frame.
+#[derive(Clone, Debug)]
+pub struct Frame {
+    pub width: usize,
+    pub height: usize,
+    /// RGB, row-major, 3 floats per pixel, linear [0,1].
+    pub rgb: Vec<f32>,
+    /// Accumulated opacity 1−T per pixel.
+    pub alpha: Vec<f32>,
+    /// Opacity-weighted mean depth of contributing Gaussians
+    /// (INVALID_DEPTH where alpha ≈ 0). The paper's real-time depth
+    /// estimate (Sec. IV-A).
+    pub depth: Vec<f32>,
+    /// Depth at which traversal stopped: the early-stopping depth, or the
+    /// depth of the last traversed Gaussian (Sec. IV-B).
+    pub trunc_depth: Vec<f32>,
+    /// Per-pixel validity for warping: false = hole / masked-out pixel.
+    pub valid: Vec<bool>,
+}
+
+impl Frame {
+    pub fn new(width: usize, height: usize) -> Frame {
+        let n = width * height;
+        Frame {
+            width,
+            height,
+            rgb: vec![0.0; n * 3],
+            alpha: vec![0.0; n],
+            depth: vec![INVALID_DEPTH; n],
+            trunc_depth: vec![INVALID_DEPTH; n],
+            valid: vec![false; n],
+        }
+    }
+
+    #[inline]
+    pub fn idx(&self, x: usize, y: usize) -> usize {
+        y * self.width + x
+    }
+
+    #[inline]
+    pub fn rgb_at(&self, x: usize, y: usize) -> [f32; 3] {
+        let i = self.idx(x, y) * 3;
+        [self.rgb[i], self.rgb[i + 1], self.rgb[i + 2]]
+    }
+
+    #[inline]
+    pub fn set_rgb(&mut self, x: usize, y: usize, c: [f32; 3]) {
+        let i = self.idx(x, y) * 3;
+        self.rgb[i] = c[0];
+        self.rgb[i + 1] = c[1];
+        self.rgb[i + 2] = c[2];
+    }
+
+    /// Tile grid dimensions (ceil).
+    pub fn tile_grid(&self) -> (usize, usize) {
+        (self.width.div_ceil(TILE), self.height.div_ceil(TILE))
+    }
+
+    /// Pixel bounds (x0, y0, x1, y1) of tile index `t` (exclusive end,
+    /// clamped to the frame).
+    pub fn tile_bounds(&self, t: usize) -> (usize, usize, usize, usize) {
+        let (tx, _) = self.tile_grid();
+        let tcol = t % tx;
+        let trow = t / tx;
+        let x0 = tcol * TILE;
+        let y0 = trow * TILE;
+        (
+            x0,
+            y0,
+            (x0 + TILE).min(self.width),
+            (y0 + TILE).min(self.height),
+        )
+    }
+
+    /// Count of valid pixels inside tile `t`.
+    pub fn tile_valid_count(&self, t: usize) -> usize {
+        let (x0, y0, x1, y1) = self.tile_bounds(t);
+        let mut n = 0;
+        for y in y0..y1 {
+            for x in x0..x1 {
+                if self.valid[self.idx(x, y)] {
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+
+    /// Total pixels inside tile `t` (edge tiles may be partial).
+    pub fn tile_pixel_count(&self, t: usize) -> usize {
+        let (x0, y0, x1, y1) = self.tile_bounds(t);
+        (x1 - x0) * (y1 - y0)
+    }
+
+    /// 8-bit RGB for image output.
+    pub fn to_rgb8(&self) -> Vec<u8> {
+        crate::util::png::to_u8_rgb(&self.rgb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_bounds_cover_frame_exactly() {
+        let f = Frame::new(100, 50); // not multiples of 16
+        let (tx, ty) = f.tile_grid();
+        assert_eq!((tx, ty), (7, 4));
+        let mut covered = vec![0u8; 100 * 50];
+        for t in 0..tx * ty {
+            let (x0, y0, x1, y1) = f.tile_bounds(t);
+            assert!(x1 <= 100 && y1 <= 50);
+            for y in y0..y1 {
+                for x in x0..x1 {
+                    covered[y * 100 + x] += 1;
+                }
+            }
+        }
+        assert!(covered.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn valid_counting() {
+        let mut f = Frame::new(32, 32);
+        assert_eq!(f.tile_valid_count(0), 0);
+        assert_eq!(f.tile_pixel_count(0), 256);
+        for y in 0..8 {
+            for x in 0..16 {
+                let i = f.idx(x, y);
+                f.valid[i] = true;
+            }
+        }
+        assert_eq!(f.tile_valid_count(0), 128);
+        assert_eq!(f.tile_valid_count(1), 0);
+    }
+
+    #[test]
+    fn rgb_accessors() {
+        let mut f = Frame::new(4, 4);
+        f.set_rgb(2, 3, [0.1, 0.2, 0.3]);
+        assert_eq!(f.rgb_at(2, 3), [0.1, 0.2, 0.3]);
+        assert_eq!(f.rgb_at(0, 0), [0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn edge_tile_is_partial() {
+        let f = Frame::new(100, 50);
+        let (tx, ty) = f.tile_grid();
+        let last = tx * ty - 1;
+        assert_eq!(f.tile_pixel_count(last), (100 - 6 * 16) * (50 - 3 * 16));
+    }
+}

@@ -1,0 +1,484 @@
+//! Gaussian–tile intersection tests (paper Sec. IV-C).
+//!
+//! Five interchangeable tests, ordered from cheapest/loosest to most
+//! accurate:
+//!
+//! * [`IntersectMode::Aabb`] — reference 3DGS: circumscribed square of the
+//!   3σ circle. Massive over-coverage for elongated splats (Fig. 4b).
+//! * [`IntersectMode::Adr`] — AdR-Gaussian-style adaptive radius: same
+//!   square but with the opacity-aware radius (Eq. 4 major axis only).
+//! * [`IntersectMode::Obb`] — GSCore-style oriented-bounding-box test:
+//!   SAT between each candidate tile and the splat's 3σ OBB.
+//! * [`IntersectMode::Tait`] — the paper's two-stage test: opacity-aware
+//!   tight bounding box (Eqs. 4–6) then the minor-axis distance rejection
+//!   (Eq. 7).
+//! * [`IntersectMode::Exact`] — FlashGS-like oracle: exact rectangle vs
+//!   opacity-aware ellipse intersection (convex 1D minimizations on the
+//!   rect boundary). Used as ground truth in tests and Fig. 9.
+//!
+//! Note on Eq. 7: as printed ("reject when |l|cosθ + r > R_minor") the test
+//! would also reject tiles that do intersect the ellipse. We implement the
+//! sound version — reject when the *minimum* minor-axis distance over the
+//! tile, |l·m̂| − r, exceeds R_minor — which preserves the paper's claim
+//! that TAIT keeps a (slight) superset of the exact pairs.
+
+use super::preprocess::Splat;
+use crate::math::Vec2;
+use crate::TILE;
+
+/// Which intersection test the preprocessing stage runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum IntersectMode {
+    Aabb,
+    Adr,
+    Obb,
+    Tait,
+    Exact,
+}
+
+impl IntersectMode {
+    pub const ALL: [IntersectMode; 5] = [
+        IntersectMode::Aabb,
+        IntersectMode::Adr,
+        IntersectMode::Obb,
+        IntersectMode::Tait,
+        IntersectMode::Exact,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            IntersectMode::Aabb => "AABB(3DGS)",
+            IntersectMode::Adr => "AdR",
+            IntersectMode::Obb => "OBB(GSCore)",
+            IntersectMode::Tait => "TAIT(ours)",
+            IntersectMode::Exact => "Exact(FlashGS)",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<IntersectMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "aabb" => Some(IntersectMode::Aabb),
+            "adr" => Some(IntersectMode::Adr),
+            "obb" => Some(IntersectMode::Obb),
+            "tait" => Some(IntersectMode::Tait),
+            "exact" => Some(IntersectMode::Exact),
+            _ => None,
+        }
+    }
+}
+
+/// Per-call cost counters, consumed by the GPU/accelerator models: how many
+/// candidate tiles each stage touched and how many "heavy" geometric ops
+/// (sqrt/ln/exp-class) ran.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IntersectCost {
+    pub candidates: u64,
+    pub emitted: u64,
+    pub heavy_ops: u64,
+}
+
+/// Tile circumcircle radius (half-diagonal of a 16 px tile).
+pub const TILE_CIRCUM_R: f32 = (TILE as f32) * std::f32::consts::SQRT_2 * 0.5;
+
+#[derive(Clone, Copy)]
+struct TileRange {
+    x0: i32,
+    y0: i32,
+    x1: i32, // inclusive
+    y1: i32, // inclusive
+}
+
+/// Tiles covered by an axis-aligned pixel box, clamped to the grid.
+fn range_from_box(
+    min: Vec2,
+    max: Vec2,
+    grid: (usize, usize),
+) -> Option<TileRange> {
+    let (tx, ty) = grid;
+    let x0 = (min.x / TILE as f32).floor() as i64;
+    let y0 = (min.y / TILE as f32).floor() as i64;
+    let x1 = (max.x / TILE as f32).floor() as i64;
+    let y1 = (max.y / TILE as f32).floor() as i64;
+    if x1 < 0 || y1 < 0 || x0 >= tx as i64 || y0 >= ty as i64 {
+        return None;
+    }
+    Some(TileRange {
+        x0: x0.max(0) as i32,
+        y0: y0.max(0) as i32,
+        x1: x1.min(tx as i64 - 1) as i32,
+        y1: y1.min(ty as i64 - 1) as i32,
+    })
+}
+
+#[inline]
+fn tile_center(col: i32, row: i32) -> Vec2 {
+    Vec2::new(
+        col as f32 * TILE as f32 + TILE as f32 * 0.5,
+        row as f32 * TILE as f32 + TILE as f32 * 0.5,
+    )
+}
+
+/// Emit the tile indices `splat` maps to under `mode` into `out`
+/// (as row-major tile indices), returning cost counters.
+pub fn tiles_for_splat(
+    mode: IntersectMode,
+    splat: &Splat,
+    grid: (usize, usize),
+    out: &mut Vec<u32>,
+) -> IntersectCost {
+    let mut cost = IntersectCost::default();
+    let (tx, _) = grid;
+    match mode {
+        IntersectMode::Aabb => {
+            let r = splat.radius3_sigma();
+            cost.heavy_ops += 1; // sqrt
+            if let Some(tr) = range_from_box(
+                splat.mean - Vec2::new(r, r),
+                splat.mean + Vec2::new(r, r),
+                grid,
+            ) {
+                for row in tr.y0..=tr.y1 {
+                    for col in tr.x0..=tr.x1 {
+                        out.push((row as u32) * tx as u32 + col as u32);
+                    }
+                }
+                let n = ((tr.x1 - tr.x0 + 1) * (tr.y1 - tr.y0 + 1)) as u64;
+                cost.candidates += n;
+                cost.emitted += n;
+            }
+        }
+        IntersectMode::Adr => {
+            let (r_maj, _) = splat.effective_radii();
+            cost.heavy_ops += 2; // ln + sqrt
+            if let Some(tr) = range_from_box(
+                splat.mean - Vec2::new(r_maj, r_maj),
+                splat.mean + Vec2::new(r_maj, r_maj),
+                grid,
+            ) {
+                for row in tr.y0..=tr.y1 {
+                    for col in tr.x0..=tr.x1 {
+                        out.push((row as u32) * tx as u32 + col as u32);
+                    }
+                }
+                let n = ((tr.x1 - tr.x0 + 1) * (tr.y1 - tr.y0 + 1)) as u64;
+                cost.candidates += n;
+                cost.emitted += n;
+            }
+        }
+        IntersectMode::Obb => {
+            // GSCore: OBB with 3σ half-extents, SAT per candidate tile.
+            let r_maj = 3.0 * splat.l1.sqrt();
+            let r_min = 3.0 * splat.l2.sqrt();
+            cost.heavy_ops += 2;
+            let u = splat.axis; // major dir
+            let v = u.perp();
+            // AABB of the OBB.
+            let ex = (u.x * r_maj).abs() + (v.x * r_min).abs();
+            let ey = (u.y * r_maj).abs() + (v.y * r_min).abs();
+            if let Some(tr) = range_from_box(
+                splat.mean - Vec2::new(ex, ey),
+                splat.mean + Vec2::new(ex, ey),
+                grid,
+            ) {
+                for row in tr.y0..=tr.y1 {
+                    for col in tr.x0..=tr.x1 {
+                        cost.candidates += 1;
+                        if obb_intersects_tile(splat.mean, u, r_maj, r_min, col, row) {
+                            out.push((row as u32) * tx as u32 + col as u32);
+                            cost.emitted += 1;
+                        }
+                    }
+                }
+            }
+        }
+        IntersectMode::Tait => {
+            // Stage 1: opacity-aware tight bbox (Eqs. 4–6).
+            let rho = splat.trunc_rho();
+            cost.heavy_ops += 4; // ln, sqrt ×3 (paper replaces GSCore's dual OIU with sqrt+log units)
+            let half_w = rho * splat.cov.0.max(0.0).sqrt();
+            let half_h = rho * splat.cov.2.max(0.0).sqrt();
+            let r_min = rho * splat.l2.sqrt();
+            let minor = splat.axis.perp();
+            if let Some(tr) = range_from_box(
+                splat.mean - Vec2::new(half_w, half_h),
+                splat.mean + Vec2::new(half_w, half_h),
+                grid,
+            ) {
+                for row in tr.y0..=tr.y1 {
+                    for col in tr.x0..=tr.x1 {
+                        cost.candidates += 1;
+                        // Stage 2 (Eq. 7, sound form): minimal distance of
+                        // the tile to the major axis exceeds R_minor ⇒ out.
+                        let l = tile_center(col, row) - splat.mean;
+                        let d_minor = l.dot(minor).abs();
+                        if d_minor - TILE_CIRCUM_R > r_min {
+                            continue;
+                        }
+                        out.push((row as u32) * tx as u32 + col as u32);
+                        cost.emitted += 1;
+                    }
+                }
+            }
+        }
+        IntersectMode::Exact => {
+            // Oracle: exact ellipse { d : dᵀ Σ'⁻¹ d ≤ ρ² } vs tile rect.
+            let rho = splat.trunc_rho();
+            let rho2 = rho * rho;
+            cost.heavy_ops += 8; // full analytical geometry per splat
+            let half_w = rho * splat.cov.0.max(0.0).sqrt();
+            let half_h = rho * splat.cov.2.max(0.0).sqrt();
+            if let Some(tr) = range_from_box(
+                splat.mean - Vec2::new(half_w, half_h),
+                splat.mean + Vec2::new(half_w, half_h),
+                grid,
+            ) {
+                for row in tr.y0..=tr.y1 {
+                    for col in tr.x0..=tr.x1 {
+                        cost.candidates += 1;
+                        cost.heavy_ops += 4;
+                        if ellipse_intersects_tile(splat, rho2, col, row) {
+                            out.push((row as u32) * tx as u32 + col as u32);
+                            cost.emitted += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    cost
+}
+
+/// SAT: oriented box (center, axes u/v, half-extents a/b) vs the
+/// axis-aligned tile rect.
+fn obb_intersects_tile(center: Vec2, u: Vec2, a: f32, b: f32, col: i32, row: i32) -> bool {
+    let v = u.perp();
+    let c = tile_center(col, row) - center;
+    let ht = TILE as f32 * 0.5;
+    // Axes to test: x, y (tile) and u, v (OBB).
+    // Tile x-axis:
+    if c.x.abs() > ht + (u.x * a).abs() + (v.x * b).abs() {
+        return false;
+    }
+    if c.y.abs() > ht + (u.y * a).abs() + (v.y * b).abs() {
+        return false;
+    }
+    // OBB u-axis: project tile half-extents onto u.
+    if c.dot(u).abs() > a + ht * (u.x.abs() + u.y.abs()) {
+        return false;
+    }
+    if c.dot(v).abs() > b + ht * (v.x.abs() + v.y.abs()) {
+        return false;
+    }
+    true
+}
+
+/// Exact test: does the level-set ellipse dᵀQd ≤ ρ² (Q = conic) intersect
+/// tile (col, row)? Minimizes the quadratic form over the rect — interior
+/// check + four 1D convex minimizations on the edges.
+fn ellipse_intersects_tile(splat: &Splat, rho2: f32, col: i32, row: i32) -> bool {
+    let (qa, qb, qc) = splat.conic;
+    let x0 = col as f32 * TILE as f32 - splat.mean.x;
+    let y0 = row as f32 * TILE as f32 - splat.mean.y;
+    let x1 = x0 + TILE as f32;
+    let y1 = y0 + TILE as f32;
+    // Center of ellipse inside rect?
+    if x0 <= 0.0 && 0.0 <= x1 && y0 <= 0.0 && 0.0 <= y1 {
+        return true;
+    }
+    let q = |x: f32, y: f32| qa * x * x + 2.0 * qb * x * y + qc * y * y;
+    // Min over each edge: edge x = const ⇒ f(y) = qa x² + 2 qb x y + qc y²,
+    // argmin y* = -qb x / qc clamped to [y0, y1]; symmetric for y edges.
+    let mut best = f32::MAX;
+    for x in [x0, x1] {
+        let y_star = (-qb * x / qc).clamp(y0, y1);
+        best = best.min(q(x, y_star));
+    }
+    for y in [y0, y1] {
+        let x_star = (-qb * y / qa).clamp(x0, x1);
+        best = best.min(q(x_star, y));
+    }
+    best <= rho2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::{sh, Quat, Vec3};
+    use crate::render::preprocess::preprocess;
+    use crate::scene::{Camera, GaussianCloud, Intrinsics, Pose};
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn splat_for(scale: Vec3, rot_angle: f32, opacity: f32, offset: Vec2) -> Splat {
+        let mut cloud = GaussianCloud::with_capacity(1, 0);
+        let dc = sh::dc_from_color(Vec3::new(0.7, 0.7, 0.7));
+        // Position so the projection lands at center + offset.
+        let intr = Intrinsics::from_fov(640, 480, 1.2);
+        let z = 5.0f32;
+        let x = offset.x * z / intr.fx;
+        let y = offset.y * z / intr.fy;
+        cloud.push(
+            Vec3::new(x, y, z),
+            scale,
+            Quat::from_axis_angle(Vec3::Z, rot_angle),
+            opacity,
+            &[dc.x, dc.y, dc.z],
+        );
+        let cam = Camera::new(intr, Pose::IDENTITY);
+        preprocess(&cloud, &cam)[0]
+    }
+
+    fn run(mode: IntersectMode, s: &Splat) -> Vec<u32> {
+        let mut out = Vec::new();
+        tiles_for_splat(mode, s, (40, 30), &mut out);
+        out.sort_unstable();
+        out
+    }
+
+    #[test]
+    fn small_splat_covers_center_tile() {
+        let s = splat_for(Vec3::splat(0.02), 0.0, 0.9, Vec2::ZERO);
+        for mode in IntersectMode::ALL {
+            let tiles = run(mode, &s);
+            // Center pixel (320,240) → tile col 20, row 15 → idx 15*40+20.
+            assert!(
+                tiles.contains(&(15 * 40 + 20)),
+                "{} missing center tile: {tiles:?}",
+                mode.name()
+            );
+        }
+    }
+
+    #[test]
+    fn aabb_is_superset_of_exact() {
+        // ellipse ⊂ 3σ circle ⊂ circumscribed square ⇒ AABB ⊇ Exact.
+        // (OBB is *not* a subset of the AABB square: its corners reach
+        // √(a²+b²) > a from the center.)
+        check("aabb ⊇ exact", 128, |rng| {
+            let s = rand_splat(rng);
+            let aabb = run(IntersectMode::Aabb, &s);
+            for t in run(IntersectMode::Exact, &s) {
+                assert!(aabb.contains(&t), "Exact emitted {t} not in AABB");
+            }
+        });
+    }
+
+    #[test]
+    fn obb_is_superset_of_exact() {
+        check("obb ⊇ exact", 128, |rng| {
+            let s = rand_splat(rng);
+            let obb = run(IntersectMode::Obb, &s);
+            for t in run(IntersectMode::Exact, &s) {
+                assert!(obb.contains(&t), "Exact emitted {t} not in OBB");
+            }
+        });
+    }
+
+    #[test]
+    fn tait_is_superset_of_exact() {
+        // The paper's central soundness claim: TAIT keeps (almost exactly)
+        // the true pairs. Our sound Eq. 7 makes it a strict superset.
+        check("tait ⊇ exact", 256, |rng| {
+            let s = rand_splat(rng);
+            let tait = run(IntersectMode::Tait, &s);
+            let exact = run(IntersectMode::Exact, &s);
+            for t in &exact {
+                assert!(tait.contains(t), "exact tile {t} missing from TAIT");
+            }
+        });
+    }
+
+    #[test]
+    fn exact_matches_pixel_level_alpha() {
+        // A tile is "actually intersecting" iff some pixel center in it has
+        // α ≥ 1/255; Exact should match up to center-vs-area discretization
+        // (it may keep a tile whose corners graze the ellipse between
+        // pixel centers — never drop a contributing one).
+        check("exact ⊇ pixel-level", 64, |rng| {
+            let s = rand_splat(rng);
+            let exact = run(IntersectMode::Exact, &s);
+            for row in 0..30i32 {
+                for col in 0..40i32 {
+                    let mut hit = false;
+                    'px: for py in 0..TILE {
+                        for px in 0..TILE {
+                            let p = Vec2::new(
+                                (col * TILE as i32 + px as i32) as f32 + 0.5,
+                                (row * TILE as i32 + py as i32) as f32 + 0.5,
+                            );
+                            if s.alpha_at(p) >= crate::ALPHA_THRESHOLD {
+                                hit = true;
+                                break 'px;
+                            }
+                        }
+                    }
+                    if hit {
+                        let idx = row as u32 * 40 + col as u32;
+                        assert!(
+                            exact.contains(&idx),
+                            "pixel-contributing tile ({col},{row}) dropped by Exact"
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn elongated_gaussian_tait_much_tighter_than_aabb() {
+        // The Fig. 4b/9 effect: a long thin diagonal splat.
+        let s = splat_for(Vec3::new(0.8, 0.01, 0.01), 0.78, 0.8, Vec2::ZERO);
+        let aabb = run(IntersectMode::Aabb, &s).len();
+        let tait = run(IntersectMode::Tait, &s).len();
+        let exact = run(IntersectMode::Exact, &s).len();
+        assert!(
+            (aabb as f32) > 3.0 * tait as f32,
+            "aabb {aabb} vs tait {tait}"
+        );
+        assert!(tait as f32 <= 1.6 * exact as f32 + 2.0, "tait {tait} vs exact {exact}");
+    }
+
+    #[test]
+    fn low_opacity_shrinks_adr_and_tait() {
+        let hi = splat_for(Vec3::new(0.4, 0.05, 0.05), 0.3, 0.95, Vec2::ZERO);
+        let lo = splat_for(Vec3::new(0.4, 0.05, 0.05), 0.3, 0.02, Vec2::ZERO);
+        assert!(run(IntersectMode::Adr, &lo).len() < run(IntersectMode::Adr, &hi).len());
+        assert!(run(IntersectMode::Tait, &lo).len() <= run(IntersectMode::Tait, &hi).len());
+        // AABB ignores opacity entirely.
+        assert_eq!(
+            run(IntersectMode::Aabb, &lo).len(),
+            run(IntersectMode::Aabb, &hi).len()
+        );
+    }
+
+    #[test]
+    fn offscreen_splat_emits_nothing() {
+        let mut s = splat_for(Vec3::splat(0.05), 0.0, 0.9, Vec2::ZERO);
+        s.mean = Vec2::new(-500.0, -500.0);
+        for mode in IntersectMode::ALL {
+            assert!(run(mode, &s).is_empty(), "{}", mode.name());
+        }
+    }
+
+    #[test]
+    fn cost_counters_populated() {
+        let s = splat_for(Vec3::new(0.3, 0.05, 0.05), 0.5, 0.9, Vec2::ZERO);
+        let mut out = Vec::new();
+        let c = tiles_for_splat(IntersectMode::Tait, &s, (40, 30), &mut out);
+        assert_eq!(c.emitted as usize, out.len());
+        assert!(c.candidates >= c.emitted);
+        assert!(c.heavy_ops > 0);
+    }
+
+    fn rand_splat(rng: &mut Rng) -> Splat {
+        let scale = Vec3::new(
+            rng.range(0.01, 0.6),
+            rng.range(0.01, 0.2),
+            rng.range(0.01, 0.2),
+        );
+        let angle = rng.range(0.0, std::f32::consts::PI);
+        let opacity = rng.range(0.02, 0.99);
+        let off = Vec2::new(rng.range(-300.0, 300.0), rng.range(-220.0, 220.0));
+        splat_for(scale, angle, opacity, off)
+    }
+}

@@ -1,0 +1,420 @@
+//! The full 3DGS rendering pipeline (paper Sec. II-A):
+//! preprocess → bin/sort → rasterize, with pluggable intersection tests
+//! (Sec. IV-C) and the sparse-rendering hooks TWSR/DPES need (Sec. IV-A/B).
+//!
+//! [`Renderer::render`] is the dense path (the GPU baseline);
+//! [`Renderer::render_sparse`] re-renders only the tiles a warp could not
+//! fill; [`Renderer::render_pixels`] is the pixel-warping baseline
+//! (Potamoi-style) that re-renders missing pixels but cannot skip
+//! preprocessing/sorting for partially-valid tiles.
+
+pub mod binning;
+pub mod framebuffer;
+pub mod intersect;
+pub mod preprocess;
+pub mod rasterize;
+
+pub use binning::{bin_splats, BinOptions, TileBins};
+pub use framebuffer::{Frame, INVALID_DEPTH};
+pub use intersect::{IntersectCost, IntersectMode};
+pub use preprocess::{preprocess, Splat};
+pub use rasterize::{rasterize_tile, TileRasterOut};
+
+use crate::math::Vec3;
+use crate::scene::{Camera, GaussianCloud, Intrinsics, Pose};
+use crate::util::pool::parallel_for;
+use crate::util::timer::StageTimes;
+use std::cell::UnsafeCell;
+use std::time::Instant;
+
+/// Renderer configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct RenderConfig {
+    /// Intersection test; `Aabb` reproduces original 3DGS, `Tait` is the
+    /// paper's.
+    pub mode: IntersectMode,
+    /// Worker threads for rasterization (0 = all cores).
+    pub threads: usize,
+    /// Background color blended under residual transmittance.
+    pub background: Vec3,
+}
+
+impl Default for RenderConfig {
+    fn default() -> Self {
+        RenderConfig {
+            mode: IntersectMode::Aabb,
+            threads: 0,
+            background: Vec3::ZERO,
+        }
+    }
+}
+
+/// Everything the hardware models and benches need to know about one
+/// rendered frame.
+#[derive(Clone, Debug, Default)]
+pub struct RenderStats {
+    /// Gaussians in the cloud.
+    pub n_gaussians: usize,
+    /// Splats surviving culling.
+    pub n_splats: usize,
+    /// Gaussian-tile pairs after the intersection test (sorted workload).
+    pub pairs: usize,
+    /// Intersection-test cost counters.
+    pub cost: IntersectCost,
+    /// Per-tile pair counts (sorting workload; Fig. 5).
+    pub per_tile_pairs: Vec<u32>,
+    /// Per-tile traversal lengths (effective rasterization workload after
+    /// early stopping).
+    pub per_tile_traversed: Vec<u32>,
+    /// Per-tile actually-contributing splat counts (Fig. 4b).
+    pub per_tile_contributing: Vec<u32>,
+    /// Per-tile α-blend operation counts (VRU work).
+    pub per_tile_blend_ops: Vec<u64>,
+    /// Wall-clock per stage.
+    pub times: StageTimes,
+}
+
+impl RenderStats {
+    pub fn total_contributing(&self) -> u64 {
+        self.per_tile_contributing.iter().map(|&c| c as u64).sum()
+    }
+
+    pub fn total_traversed(&self) -> u64 {
+        self.per_tile_traversed.iter().map(|&c| c as u64).sum()
+    }
+
+    pub fn total_blend_ops(&self) -> u64 {
+        self.per_tile_blend_ops.iter().sum()
+    }
+}
+
+/// Shared-container wrapper for tile-parallel writes.
+///
+/// SAFETY invariant: concurrent users must write disjoint regions — the
+/// pipeline hands each worker distinct tile indices, tiles never overlap
+/// ([`Frame::tile_bounds`] partitions the frame) and each stats slot is
+/// indexed by tile.
+struct TileShared<'a, T>(&'a UnsafeCell<T>);
+unsafe impl<T> Sync for TileShared<'_, T> {}
+
+impl<T> TileShared<'_, T> {
+    /// SAFETY: caller must guarantee disjoint writes (see type docs).
+    /// A method (not field access) so edition-2021 closures capture the
+    /// whole Sync wrapper rather than the raw `&UnsafeCell`.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn get(&self) -> &mut T {
+        &mut *self.0.get()
+    }
+}
+
+/// The native (pure-rust) 3DGS renderer.
+#[derive(Clone, Debug)]
+pub struct Renderer {
+    pub cloud: GaussianCloud,
+    pub intrinsics: Intrinsics,
+    pub config: RenderConfig,
+}
+
+impl Renderer {
+    pub fn new(cloud: GaussianCloud, intrinsics: Intrinsics) -> Renderer {
+        Renderer {
+            cloud,
+            intrinsics,
+            config: RenderConfig::default(),
+        }
+    }
+
+    pub fn with_config(mut self, config: RenderConfig) -> Renderer {
+        self.config = config;
+        self
+    }
+
+    fn threads(&self) -> usize {
+        if self.config.threads == 0 {
+            crate::util::pool::default_threads()
+        } else {
+            self.config.threads
+        }
+    }
+
+    /// Dense render of a full frame.
+    pub fn render(&self, pose: &Pose) -> (Frame, RenderStats) {
+        let mut frame = Frame::new(self.intrinsics.width, self.intrinsics.height);
+        let stats = self.render_into(pose, &mut frame, None, None, false);
+        (frame, stats)
+    }
+
+    /// Sparse re-render (TWSR): only tiles with `tile_mask[t] == true` are
+    /// rendered (fully), optionally applying DPES per-tile depth limits.
+    /// Other tiles keep their (warped/interpolated) contents.
+    pub fn render_sparse(
+        &self,
+        pose: &Pose,
+        frame: &mut Frame,
+        tile_mask: &[bool],
+        depth_limits: Option<&[f32]>,
+    ) -> RenderStats {
+        self.render_into(pose, frame, Some(tile_mask), depth_limits, false)
+    }
+
+    /// Pixel-sparse render (PWSR baseline): every tile containing at least
+    /// one invalid pixel is preprocessed + sorted (pair expansion can NOT
+    /// be skipped — the paper's core criticism of pixel warping), but only
+    /// invalid pixels are blended.
+    pub fn render_pixels(&self, pose: &Pose, frame: &mut Frame) -> RenderStats {
+        let grid = self.intrinsics.tile_grid();
+        let mask: Vec<bool> = (0..grid.0 * grid.1)
+            .map(|t| frame.tile_valid_count(t) < frame.tile_pixel_count(t))
+            .collect();
+        self.render_into(pose, frame, Some(&mask), None, true)
+    }
+
+    fn render_into(
+        &self,
+        pose: &Pose,
+        frame: &mut Frame,
+        tile_mask: Option<&[bool]>,
+        depth_limits: Option<&[f32]>,
+        only_invalid: bool,
+    ) -> RenderStats {
+        let camera = Camera::new(self.intrinsics, *pose);
+        let grid = self.intrinsics.tile_grid();
+        let num_tiles = grid.0 * grid.1;
+        let mut times = StageTimes::new();
+
+        let t0 = Instant::now();
+        let mut splats = preprocess(&self.cloud, &camera);
+        // DPES global depth cull (Sec. IV-B / Fig. 13b): every tile to be
+        // rendered has a predicted early-stop bound; splats beyond the
+        // maximum bound over active tiles can contribute nowhere, so they
+        // are dropped before binning — this is the paper's "saving
+        // preprocessing and sorting overhead through depth-based culling".
+        if let Some(limits) = depth_limits {
+            let global = (0..num_tiles)
+                .filter(|&t| tile_mask.map(|m| m[t]).unwrap_or(true))
+                .map(|t| limits[t])
+                .fold(f32::NEG_INFINITY, f32::max);
+            if global.is_finite() {
+                splats.retain(|s| s.depth <= global);
+            }
+        }
+        times.add("1_preprocess", t0.elapsed());
+
+        let t1 = Instant::now();
+        let bins = bin_splats(
+            &splats,
+            self.config.mode,
+            grid,
+            BinOptions {
+                tile_mask,
+                depth_limits,
+            },
+        );
+        times.add("2_sort", t1.elapsed());
+
+        let t2 = Instant::now();
+        let mut traversed = vec![0u32; num_tiles];
+        let mut contributing = vec![0u32; num_tiles];
+        let mut blend_ops = vec![0u64; num_tiles];
+        {
+            let frame_cell = UnsafeCell::new(std::mem::replace(frame, Frame::new(0, 0)));
+            let shared = TileShared(&frame_cell);
+            let trav_cell = UnsafeCell::new(std::mem::take(&mut traversed));
+            let contr_cell = UnsafeCell::new(std::mem::take(&mut contributing));
+            let blops_cell = UnsafeCell::new(std::mem::take(&mut blend_ops));
+            let trav = TileShared(&trav_cell);
+            let contr = TileShared(&contr_cell);
+            let blops = TileShared(&blops_cell);
+            let bg = self.config.background;
+            parallel_for(num_tiles, self.threads(), |t| {
+                if tile_mask.map(|m| !m[t]).unwrap_or(false) {
+                    return; // masked-out tile: leave warped contents alone
+                }
+                // SAFETY: tile t writes only its own pixels / stats slot t.
+                let frame = unsafe { shared.get() };
+                let ids = bins.tile(t);
+                let out = rasterize_tile(&splats, ids, frame, t, bg, only_invalid);
+                unsafe {
+                    trav.get()[t] = out.traversed;
+                    contr.get()[t] = out.contributing;
+                    blops.get()[t] = out.blend_ops;
+                }
+            });
+            *frame = frame_cell.into_inner();
+            traversed = trav_cell.into_inner();
+            contributing = contr_cell.into_inner();
+            blend_ops = blops_cell.into_inner();
+        }
+        times.add("3_rasterize", t2.elapsed());
+
+        RenderStats {
+            n_gaussians: self.cloud.len(),
+            n_splats: splats.len(),
+            pairs: bins.num_pairs(),
+            cost: bins.cost,
+            per_tile_pairs: bins.per_tile_counts(),
+            per_tile_traversed: traversed,
+            per_tile_contributing: contributing,
+            per_tile_blend_ops: blend_ops,
+            times,
+        }
+    }
+
+    /// Preprocess + bin only (no rasterization) — used by benches that
+    /// need pair counts and by the coordinator's planning path. Applies
+    /// the same DPES global depth cull as the render path.
+    pub fn plan(&self, pose: &Pose, opts: BinOptions) -> (Vec<Splat>, TileBins) {
+        let camera = Camera::new(self.intrinsics, *pose);
+        let mut splats = preprocess(&self.cloud, &camera);
+        if let Some(limits) = opts.depth_limits {
+            let global = (0..limits.len())
+                .filter(|&t| opts.tile_mask.map(|m| m[t]).unwrap_or(true))
+                .map(|t| limits[t])
+                .fold(f32::NEG_INFINITY, f32::max);
+            if global.is_finite() {
+                splats.retain(|s| s.depth <= global);
+            }
+        }
+        let bins = bin_splats(&splats, self.config.mode, self.intrinsics.tile_grid(), opts);
+        (splats, bins)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scene::generate;
+
+    fn renderer(scene_name: &str) -> (Renderer, Vec<Pose>) {
+        let scene = generate(scene_name, 0.03, 256, 192);
+        let poses = scene.sample_poses(3);
+        (Renderer::new(scene.cloud, scene.intrinsics), poses)
+    }
+
+    #[test]
+    fn dense_render_produces_content() {
+        let (r, poses) = renderer("chair");
+        let (frame, stats) = r.render(&poses[0]);
+        assert!(stats.n_splats > 100);
+        assert!(stats.pairs > stats.n_splats / 4);
+        // Some pixels must be lit.
+        let lit = frame.rgb.iter().filter(|&&v| v > 0.05).count();
+        assert!(lit > 500, "only {lit} lit channel values");
+        // Depth must be finite where alpha is high.
+        for i in 0..frame.alpha.len() {
+            if frame.alpha[i] > 0.5 {
+                assert!(frame.depth[i].is_finite());
+                assert!(frame.trunc_depth[i].is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let (mut r, poses) = renderer("room");
+        r.config.threads = 1;
+        let (f1, _) = r.render(&poses[0]);
+        r.config.threads = 8;
+        let (f8, _) = r.render(&poses[0]);
+        assert_eq!(f1.rgb, f8.rgb);
+        assert_eq!(f1.depth, f8.depth);
+    }
+
+    #[test]
+    fn tait_visually_matches_aabb() {
+        // The intersection test must not change the image (it only removes
+        // non-contributing pairs) — PSNR should be extremely high.
+        let (mut r, poses) = renderer("train");
+        r.config.mode = IntersectMode::Aabb;
+        let (fa, sa) = r.render(&poses[0]);
+        r.config.mode = IntersectMode::Tait;
+        let (ft, st) = r.render(&poses[0]);
+        assert!(st.pairs < sa.pairs, "TAIT should cut pairs");
+        let mse: f64 = fa
+            .rgb
+            .iter()
+            .zip(&ft.rgb)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / fa.rgb.len() as f64;
+        let psnr = -10.0 * (mse.max(1e-12)).log10();
+        assert!(psnr > 40.0, "TAIT changed the image: psnr {psnr:.1} dB");
+    }
+
+    #[test]
+    fn sparse_render_only_touches_masked_tiles() {
+        let (r, poses) = renderer("chair");
+        let (dense, _) = r.render(&poses[0]);
+        let grid = r.intrinsics.tile_grid();
+        let num_tiles = grid.0 * grid.1;
+        // Start from a poisoned frame, re-render only even tiles.
+        let mut frame = Frame::new(256, 192);
+        for v in frame.rgb.iter_mut() {
+            *v = -7.0;
+        }
+        let mask: Vec<bool> = (0..num_tiles).map(|t| t % 2 == 0).collect();
+        r.render_sparse(&poses[0], &mut frame, &mask, None);
+        for t in 0..num_tiles {
+            let (x0, y0, x1, y1) = frame.tile_bounds(t);
+            for y in y0..y1 {
+                for x in x0..x1 {
+                    let i = frame.idx(x, y) * 3;
+                    if mask[t] {
+                        assert!(
+                            (frame.rgb[i] - dense.rgb[i]).abs() < 1e-5,
+                            "masked tile {t} differs from dense"
+                        );
+                    } else {
+                        assert_eq!(frame.rgb[i], -7.0, "unmasked tile {t} was touched");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stats_shapes_match_grid() {
+        let (r, poses) = renderer("truck");
+        let (_, stats) = r.render(&poses[0]);
+        let n = r.intrinsics.num_tiles();
+        assert_eq!(stats.per_tile_pairs.len(), n);
+        assert_eq!(stats.per_tile_traversed.len(), n);
+        assert_eq!(stats.per_tile_contributing.len(), n);
+        assert!(stats.total_contributing() <= stats.total_traversed());
+    }
+
+    #[test]
+    fn early_stopping_reduces_traversal_below_pairs() {
+        // Tile-level early stop only fires when EVERY pixel of a tile
+        // saturates; build a deterministic opaque stack covering the frame.
+        use crate::math::{sh, Quat};
+        let mut cloud = GaussianCloud::with_capacity(50, 0);
+        let dc = sh::dc_from_color(Vec3::new(0.6, 0.6, 0.6));
+        for i in 0..50 {
+            cloud.push(
+                Vec3::new(0.0, 0.0, 2.0 + 0.05 * i as f32),
+                Vec3::splat(4.0), // covers the whole frustum
+                Quat::IDENTITY,
+                0.95,
+                &[dc.x, dc.y, dc.z],
+            );
+        }
+        let intr = crate::scene::Intrinsics::from_fov(128, 128, 1.2);
+        let r = Renderer::new(cloud, intr);
+        let (_, stats) = r.render(&Pose::IDENTITY);
+        assert!(
+            stats.total_traversed() < stats.pairs as u64 / 2,
+            "early stopping ineffective: traversed {} pairs {}",
+            stats.total_traversed(),
+            stats.pairs
+        );
+    }
+
+    #[test]
+    fn plan_matches_render_pairs() {
+        let (r, poses) = renderer("room");
+        let (_, bins) = r.plan(&poses[0], BinOptions::default());
+        let (_, stats) = r.render(&poses[0]);
+        assert_eq!(bins.num_pairs(), stats.pairs);
+    }
+}

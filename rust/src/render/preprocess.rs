@@ -1,0 +1,313 @@
+//! Preprocessing stage (paper Sec. II-A, Fig. 2): frustum culling,
+//! 3D→2D projection of Gaussian centers and covariances, SH color
+//! evaluation, and the per-splat quantities every intersection test needs.
+
+use crate::math::{eigen::eigen2x2, sh, Mat3, Vec2, Vec3};
+use crate::scene::{Camera, GaussianCloud};
+use crate::ALPHA_THRESHOLD;
+
+/// A Gaussian projected into screen space.
+#[derive(Clone, Copy, Debug)]
+pub struct Splat {
+    /// Index into the source cloud.
+    pub id: u32,
+    /// Pixel-space center μ'.
+    pub mean: Vec2,
+    /// 2D covariance Σ' = [[a, b], [b, c]] (pixels²).
+    pub cov: (f32, f32, f32),
+    /// Conic (inverse covariance) [[ia, ib], [ib, ic]].
+    pub conic: (f32, f32, f32),
+    /// Camera-space depth (z).
+    pub depth: f32,
+    /// View-evaluated RGB color.
+    pub color: Vec3,
+    /// Opacity o.
+    pub opacity: f32,
+    /// Eigenvalues of Σ' (λ₁ ≥ λ₂) and unit major-axis direction.
+    pub l1: f32,
+    pub l2: f32,
+    pub axis: Vec2,
+}
+
+impl Splat {
+    /// 3σ radius used by the baseline AABB test (Sec. IV-C source 1–2).
+    #[inline]
+    pub fn radius3_sigma(&self) -> f32 {
+        3.0 * self.l1.sqrt()
+    }
+
+    /// Mahalanobis truncation radius ρ = min(3, √(2·ln(o/τ))): the
+    /// opacity-aware distance (in σ units) at which density decays to the
+    /// 1/255 threshold (paper Eq. 4), capped at the 3σ support the
+    /// reference rasterizer assumes.
+    #[inline]
+    pub fn trunc_rho(&self) -> f32 {
+        (2.0 * (self.opacity / ALPHA_THRESHOLD).max(1.0).ln())
+            .sqrt()
+            .min(3.0)
+    }
+
+    /// Opacity-aware effective radii (paper Eq. 4): distance at which the
+    /// splat's density decays to the 1/255 threshold, capped at 3σ.
+    #[inline]
+    pub fn effective_radii(&self) -> (f32, f32) {
+        let rho = self.trunc_rho();
+        (rho * self.l1.sqrt(), rho * self.l2.sqrt())
+    }
+
+    /// Evaluate α at pixel p (Eq. 1). Support is truncated at 3σ
+    /// (Mahalanobis), matching the reference pipeline's bounding
+    /// assumption — this keeps every intersection test a sound cover of
+    /// the pixels that can actually blend.
+    #[inline]
+    pub fn alpha_at(&self, p: Vec2) -> f32 {
+        let d = p - self.mean;
+        let e = 0.5 * (self.conic.0 * d.x * d.x + 2.0 * self.conic.1 * d.x * d.y + self.conic.2 * d.y * d.y);
+        if !(0.0..=4.5).contains(&e) {
+            return 0.0; // outside 3σ support (e = ρ²/2 = 4.5) or degenerate
+        }
+        // NB: plain expf — glibc's vectorized expf (~3 ns) beat the
+        // polynomial fast-exp on this host (EXPERIMENTS.md §Perf, reverted).
+        (self.opacity * (-e).exp()).min(0.999)
+    }
+}
+
+/// Dilation added to the projected covariance diagonal (3DGS convention:
+/// anti-aliasing floor of 0.3 px²).
+pub const COV_DILATION: f32 = 0.3;
+
+/// Project every visible Gaussian. Returns splats in cloud order
+/// (stable ids, culled entries dropped).
+pub fn preprocess(cloud: &GaussianCloud, camera: &Camera) -> Vec<Splat> {
+    let w2c = camera.pose.world_to_camera();
+    let rot = w2c.rotation();
+    let intr = &camera.intrinsics;
+    let cam_pos = camera.pose.position;
+    let mut out = Vec::with_capacity(cloud.len() / 2);
+    let margin = 0.15 * intr.width.max(intr.height) as f32; // guard band
+
+    for i in 0..cloud.len() {
+        let p_world = cloud.position(i);
+        let p_cam = w2c.transform_point(p_world);
+        // Frustum cull: behind near plane or beyond far plane.
+        if p_cam.z < intr.near || p_cam.z > intr.far {
+            continue;
+        }
+        let mean = intr.project(p_cam);
+        // Guard-band cull in pixel space (cheap; exact per-tile tests later).
+        if mean.x < -margin
+            || mean.y < -margin
+            || mean.x > intr.width as f32 + margin
+            || mean.y > intr.height as f32 + margin
+        {
+            // Large splats can still reach the frame; keep anything whose
+            // 3σ disc could touch it.
+            let cov3d = cloud.covariance3d(i);
+            let (a, b, c) = project_cov(&cov3d, &rot, p_cam, intr);
+            let r = 3.0 * eigen2x2(a, b, c).l1.sqrt();
+            if mean.x + r < 0.0
+                || mean.y + r < 0.0
+                || mean.x - r > intr.width as f32
+                || mean.y - r > intr.height as f32
+            {
+                continue;
+            }
+            push_splat(&mut out, cloud, i, mean, (a, b, c), p_cam.z, cam_pos);
+            continue;
+        }
+        let cov3d = cloud.covariance3d(i);
+        let cov2d = project_cov(&cov3d, &rot, p_cam, intr);
+        push_splat(&mut out, cloud, i, mean, cov2d, p_cam.z, cam_pos);
+    }
+    out
+}
+
+fn push_splat(
+    out: &mut Vec<Splat>,
+    cloud: &GaussianCloud,
+    i: usize,
+    mean: Vec2,
+    (a, b, c): (f32, f32, f32),
+    depth: f32,
+    cam_pos: Vec3,
+) {
+    let det = a * c - b * b;
+    if det <= 1e-12 || !det.is_finite() {
+        return;
+    }
+    let inv = 1.0 / det;
+    let conic = (c * inv, -b * inv, a * inv);
+    let e = eigen2x2(a, b, c);
+    let opacity = cloud.opacity(i);
+    if opacity < ALPHA_THRESHOLD {
+        return; // can never pass the blend threshold
+    }
+    let dir = (cloud.position(i) - cam_pos).normalized();
+    let color = sh::eval_color(cloud.sh_degree, cloud.sh_coeffs(i), dir);
+    out.push(Splat {
+        id: i as u32,
+        mean,
+        cov: (a, b, c),
+        conic,
+        depth,
+        color,
+        opacity,
+        l1: e.l1.max(1e-8),
+        l2: e.l2.max(1e-8),
+        axis: e.v1,
+    });
+}
+
+/// EWA splatting covariance projection: Σ' = J W Σ Wᵀ Jᵀ + dilation·I,
+/// with J the Jacobian of the perspective projection at the center.
+fn project_cov(
+    cov3d: &Mat3,
+    w2c_rot: &Mat3,
+    p_cam: Vec3,
+    intr: &crate::scene::Intrinsics,
+) -> (f32, f32, f32) {
+    // Clamp the tangent to the frustum edge (3DGS limits the Jacobian
+    // blow-up near the image border).
+    let lim_x = 1.3 * (intr.width as f32 * 0.5) / intr.fx;
+    let lim_y = 1.3 * (intr.height as f32 * 0.5) / intr.fy;
+    let tx = (p_cam.x / p_cam.z).clamp(-lim_x, lim_x) * p_cam.z;
+    let ty = (p_cam.y / p_cam.z).clamp(-lim_y, lim_y) * p_cam.z;
+    let z = p_cam.z;
+    let j = Mat3 {
+        m: [
+            [intr.fx / z, 0.0, -intr.fx * tx / (z * z)],
+            [0.0, intr.fy / z, -intr.fy * ty / (z * z)],
+            [0.0, 0.0, 0.0],
+        ],
+    };
+    let t = j * *w2c_rot;
+    let cov = t * *cov3d * t.transpose();
+    (
+        cov.m[0][0] + COV_DILATION,
+        cov.m[0][1],
+        cov.m[1][1] + COV_DILATION,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::Quat;
+    use crate::scene::{Intrinsics, Pose};
+
+    /// One Gaussian straight ahead of a canonical camera.
+    fn single(scale: Vec3, rot: Quat, opacity: f32) -> (GaussianCloud, Camera) {
+        let mut cloud = GaussianCloud::with_capacity(1, 0);
+        let dc = sh::dc_from_color(Vec3::new(1.0, 0.5, 0.25));
+        cloud.push(Vec3::new(0.0, 0.0, 5.0), scale, rot, opacity, &[dc.x, dc.y, dc.z]);
+        let cam = Camera::new(
+            Intrinsics::from_fov(640, 480, 1.2),
+            Pose::IDENTITY, // camera at origin looking +z
+        );
+        (cloud, cam)
+    }
+
+    #[test]
+    fn center_projects_to_principal_point() {
+        let (cloud, cam) = single(Vec3::splat(0.1), Quat::IDENTITY, 0.9);
+        let splats = preprocess(&cloud, &cam);
+        assert_eq!(splats.len(), 1);
+        let s = &splats[0];
+        assert!((s.mean.x - 320.0).abs() < 1e-3 && (s.mean.y - 240.0).abs() < 1e-3);
+        assert!((s.depth - 5.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn isotropic_cov_scales_with_focal_over_depth() {
+        let (cloud, cam) = single(Vec3::splat(0.1), Quat::IDENTITY, 0.9);
+        let s = &preprocess(&cloud, &cam)[0];
+        // On-axis: σ_px ≈ fx * σ_world / z.
+        let fx = cam.intrinsics.fx;
+        let want = (fx * 0.1 / 5.0).powi(2) + COV_DILATION;
+        assert!((s.cov.0 - want).abs() < 0.05 * want, "{} vs {want}", s.cov.0);
+        assert!((s.cov.2 - want).abs() < 0.05 * want);
+        assert!(s.cov.1.abs() < 0.05 * want);
+    }
+
+    #[test]
+    fn behind_camera_is_culled() {
+        let mut cloud = GaussianCloud::with_capacity(1, 0);
+        cloud.push(
+            Vec3::new(0.0, 0.0, -5.0),
+            Vec3::splat(0.1),
+            Quat::IDENTITY,
+            0.9,
+            &[0.0, 0.0, 0.0],
+        );
+        let cam = Camera::new(Intrinsics::from_fov(640, 480, 1.2), Pose::IDENTITY);
+        assert!(preprocess(&cloud, &cam).is_empty());
+    }
+
+    #[test]
+    fn far_offscreen_is_culled() {
+        let mut cloud = GaussianCloud::with_capacity(1, 0);
+        cloud.push(
+            Vec3::new(100.0, 0.0, 5.0), // way off the right edge
+            Vec3::splat(0.05),
+            Quat::IDENTITY,
+            0.9,
+            &[0.0, 0.0, 0.0],
+        );
+        let cam = Camera::new(Intrinsics::from_fov(640, 480, 1.2), Pose::IDENTITY);
+        assert!(preprocess(&cloud, &cam).is_empty());
+    }
+
+    #[test]
+    fn transparent_is_culled() {
+        let (cloud, cam) = single(Vec3::splat(0.1), Quat::IDENTITY, 0.003);
+        assert!(preprocess(&cloud, &cam).is_empty());
+    }
+
+    #[test]
+    fn alpha_peaks_at_center_and_decays() {
+        let (cloud, cam) = single(Vec3::splat(0.1), Quat::IDENTITY, 0.8);
+        let s = &preprocess(&cloud, &cam)[0];
+        let a0 = s.alpha_at(s.mean);
+        assert!((a0 - 0.8).abs() < 1e-3);
+        let a1 = s.alpha_at(s.mean + Vec2::new(5.0, 0.0));
+        let a2 = s.alpha_at(s.mean + Vec2::new(10.0, 0.0));
+        assert!(a0 > a1 && a1 > a2);
+    }
+
+    #[test]
+    fn effective_radius_smaller_than_3sigma_for_low_opacity() {
+        let (cloud, cam) = single(Vec3::splat(0.1), Quat::IDENTITY, 0.05);
+        let s = &preprocess(&cloud, &cam)[0];
+        let (r_maj, _) = s.effective_radii();
+        // sqrt(2 ln(0.05*255)) ≈ 2.26 < 3 ⇒ opacity-aware radius shrinks.
+        assert!(r_maj < s.radius3_sigma());
+    }
+
+    #[test]
+    fn alpha_at_effective_radius_equals_threshold() {
+        // opacity 0.3 keeps ρ = √(2·ln(0.3·255)) ≈ 2.94 under the 3σ cap,
+        // so the radius is exactly the τ level set.
+        let (cloud, cam) = single(Vec3::new(0.3, 0.05, 0.05), Quat::IDENTITY, 0.3);
+        let s = &preprocess(&cloud, &cam)[0];
+        let (r_maj, r_min) = s.effective_radii();
+        // Along the major axis at distance r_maj, α should be ≈ 1/255.
+        let p_maj = s.mean + s.axis * r_maj;
+        let a = s.alpha_at(p_maj);
+        assert!(
+            (a - ALPHA_THRESHOLD).abs() < 0.2 * ALPHA_THRESHOLD,
+            "a={a} vs {ALPHA_THRESHOLD}"
+        );
+        let p_min = s.mean + s.axis.perp() * r_min;
+        let a2 = s.alpha_at(p_min);
+        assert!((a2 - ALPHA_THRESHOLD).abs() < 0.2 * ALPHA_THRESHOLD);
+    }
+
+    #[test]
+    fn elongated_gaussian_has_anisotropic_eigenvalues() {
+        let (cloud, cam) = single(Vec3::new(0.5, 0.02, 0.02), Quat::IDENTITY, 0.9);
+        let s = &preprocess(&cloud, &cam)[0];
+        assert!(s.l1 / s.l2 > 50.0, "l1={} l2={}", s.l1, s.l2);
+        // Major axis should be ~horizontal.
+        assert!(s.axis.x.abs() > 0.99, "{:?}", s.axis);
+    }
+}

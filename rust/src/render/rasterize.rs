@@ -1,0 +1,373 @@
+//! Tile rasterization (paper Sec. II-A, Eqs. 1–2): front-to-back α-blending
+//! of the tile's depth-sorted splats with per-pixel early stopping, plus
+//! the two depth outputs the warp subsystem needs:
+//!
+//! * `depth` — opacity-weighted mean depth of contributing Gaussians (the
+//!   paper's real-time depth estimate, Sec. IV-A);
+//! * `trunc_depth` — the early-stopping depth, or the depth of the last
+//!   traversed Gaussian (Sec. IV-B; reprojected by DPES).
+
+use super::framebuffer::{Frame, INVALID_DEPTH};
+use super::preprocess::Splat;
+use crate::math::Vec3;
+use crate::{ALPHA_THRESHOLD, TILE, TRANSMITTANCE_EPS};
+
+/// Minimum accumulated opacity for a pixel's depth/color to be considered
+/// a valid warp source.
+pub const VALID_ALPHA: f32 = 0.5;
+
+/// Per-tile rasterization statistics, consumed by the hardware models.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TileRasterOut {
+    /// Splats that contributed (α ≥ 1/255 at ≥1 still-active pixel) — the
+    /// "actual intersecting pairs" of Fig. 4b.
+    pub contributing: u32,
+    /// Splats traversed before every pixel saturated (the tile's effective
+    /// workload; equals the list length when no early stop fires).
+    pub traversed: u32,
+    /// Total α-blend operations across pixels (VRU work).
+    pub blend_ops: u64,
+}
+
+/// Rasterize one tile's splat list into `frame`.
+///
+/// `only_invalid` renders just the pixels currently marked invalid
+/// (pixel-warping baselines); tile warping always re-renders whole tiles.
+pub fn rasterize_tile(
+    splats: &[Splat],
+    ids: &[u32],
+    frame: &mut Frame,
+    tile: usize,
+    background: Vec3,
+    only_invalid: bool,
+) -> TileRasterOut {
+    let (x0, y0, x1, y1) = frame.tile_bounds(tile);
+    let w = x1 - x0;
+    let h = y1 - y0;
+    let n_px = w * h;
+    debug_assert!(n_px <= TILE * TILE);
+
+    // Per-pixel accumulators (tile-local).
+    let mut trans = [1.0f32; TILE * TILE];
+    let mut color = [[0.0f32; 3]; TILE * TILE];
+    let mut depth_acc = [0.0f32; TILE * TILE];
+    let mut weight = [0.0f32; TILE * TILE];
+    let mut trunc = [INVALID_DEPTH; TILE * TILE];
+    let mut skip = [false; TILE * TILE];
+
+    let mut active = 0usize;
+    for py in 0..h {
+        for px in 0..w {
+            let li = py * w + px;
+            if only_invalid && frame.valid[frame.idx(x0 + px, y0 + py)] {
+                skip[li] = true;
+            } else {
+                active += 1;
+            }
+        }
+    }
+    if active == 0 {
+        return TileRasterOut::default();
+    }
+
+    let mut out = TileRasterOut::default();
+    let mut last_depth = INVALID_DEPTH;
+
+    for &sid in ids {
+        let s = &splats[sid as usize];
+        out.traversed += 1;
+        last_depth = s.depth;
+        let mut contributed = false;
+
+        // Per-row support interval (perf: EXPERIMENTS.md §Perf). The set
+        // {x : α(x,y) ≥ τ} is where e = ½ dᵀQd ≤ e_max with
+        // e_max = ½·ρ_trunc² (α at the ρ boundary equals τ exactly), an
+        // interval in x per row: a·dx² + 2b·dy·dx + (c·dy² − 2e_max) ≤ 0.
+        // Pixels outside contribute exactly 0, so skipping them leaves the
+        // output bit-identical while cutting most α evaluations.
+        let (qa, qb, qc) = s.conic;
+        let rho = s.trunc_rho();
+        let two_emax = rho * rho; // 2·e_max
+        let inv_qa = 1.0 / qa;
+
+        // Vertical support: |dy| ≤ ρ·√Σyy (the level set's y-extent), so
+        // rows outside never have a real root — skip them without solving.
+        let dy_max = rho * s.cov.2.max(0.0).sqrt();
+        let py_lo = ((s.mean.y - dy_max - 0.5) - y0 as f32).ceil().max(0.0) as usize;
+        let py_hi_f = (s.mean.y + dy_max - 0.5) - y0 as f32;
+        if py_hi_f < 0.0 || py_lo >= h {
+            continue;
+        }
+        let py_hi = (py_hi_f.floor() as usize).min(h - 1);
+
+        for py in py_lo..=py_hi {
+            let y = (y0 + py) as f32 + 0.5;
+            let dy = y - s.mean.y;
+            let bdy = qb * dy;
+            let disc = bdy * bdy - qa * (qc * dy * dy - two_emax);
+            if disc <= 0.0 {
+                continue; // row entirely outside the splat's support
+            }
+            let sq = disc.sqrt();
+            let dx_lo = (-bdy - sq) * inv_qa;
+            let dx_hi = (-bdy + sq) * inv_qa;
+            // Pixel-center x = x0 + px + 0.5; solve for px bounds.
+            let px_lo = (s.mean.x + dx_lo - 0.5 - x0 as f32).ceil().max(0.0) as usize;
+            let px_hi_f = s.mean.x + dx_hi - 0.5 - x0 as f32;
+            if px_hi_f < 0.0 || px_lo >= w {
+                continue;
+            }
+            let px_hi = (px_hi_f.floor() as usize).min(w - 1);
+
+            // Row-hoisted quadratic: e(dx) = ½qa·dx² + (qb·dy)·dx + ½qc·dy².
+            let ha = 0.5 * qa;
+            let hb = qb * dy;
+            let hc = 0.5 * qc * dy * dy;
+            let row = py * w;
+            for px in px_lo..=px_hi {
+                let li = row + px;
+                // SAFETY: li < h*w ≤ TILE² by construction of the ranges.
+                unsafe {
+                    if *skip.get_unchecked(li)
+                        || *trans.get_unchecked(li) < TRANSMITTANCE_EPS
+                    {
+                        continue;
+                    }
+                    let dx = (x0 + px) as f32 + 0.5 - s.mean.x;
+                    let e = (ha * dx + hb) * dx + hc;
+                    out.blend_ops += 1;
+                    if e < 0.0 {
+                        continue;
+                    }
+                    let alpha = (s.opacity * (-e).exp()).min(0.999);
+                    if alpha < ALPHA_THRESHOLD {
+                        continue;
+                    }
+                    contributed = true;
+                    let t = *trans.get_unchecked(li);
+                    let wgt = alpha * t;
+                    let c = color.get_unchecked_mut(li);
+                    c[0] += s.color.x * wgt;
+                    c[1] += s.color.y * wgt;
+                    c[2] += s.color.z * wgt;
+                    *depth_acc.get_unchecked_mut(li) += s.depth * wgt;
+                    *weight.get_unchecked_mut(li) += wgt;
+                    let nt = t * (1.0 - alpha);
+                    *trans.get_unchecked_mut(li) = nt;
+                    if nt < TRANSMITTANCE_EPS {
+                        // Early stop: record the truncation depth.
+                        *trunc.get_unchecked_mut(li) = s.depth;
+                        active -= 1;
+                    }
+                }
+            }
+        }
+        if contributed {
+            out.contributing += 1;
+        }
+        if active == 0 {
+            break; // whole tile saturated — the tile-level early stop
+        }
+    }
+
+    // Write back.
+    for py in 0..h {
+        for px in 0..w {
+            let li = py * w + px;
+            if skip[li] {
+                continue;
+            }
+            let gi = frame.idx(x0 + px, y0 + py);
+            let t = trans[li];
+            let a = 1.0 - t;
+            frame.rgb[gi * 3] = color[li][0] + t * background.x;
+            frame.rgb[gi * 3 + 1] = color[li][1] + t * background.y;
+            frame.rgb[gi * 3 + 2] = color[li][2] + t * background.z;
+            frame.alpha[gi] = a;
+            frame.depth[gi] = if weight[li] > 1e-6 {
+                depth_acc[li] / weight[li]
+            } else {
+                INVALID_DEPTH
+            };
+            // Truncation depth: early-stop depth if it fired, else the last
+            // traversed Gaussian's depth (Sec. IV-B).
+            frame.trunc_depth[gi] = if trunc[li] != INVALID_DEPTH {
+                trunc[li]
+            } else {
+                last_depth
+            };
+            frame.valid[gi] = a >= VALID_ALPHA;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::{sh, Quat};
+    use crate::render::binning::{bin_splats, BinOptions};
+    use crate::render::intersect::IntersectMode;
+    use crate::render::preprocess::preprocess;
+    use crate::scene::{Camera, GaussianCloud, Intrinsics, Pose};
+
+    /// Cloud with gaussians at given (pos, scale, opacity, color).
+    fn make(gs: &[(Vec3, f32, f32, Vec3)]) -> (Vec<Splat>, Frame, (usize, usize)) {
+        let mut cloud = GaussianCloud::with_capacity(gs.len(), 0);
+        for (pos, scale, o, color) in gs {
+            let dc = sh::dc_from_color(*color);
+            cloud.push(*pos, Vec3::splat(*scale), Quat::IDENTITY, *o, &[dc.x, dc.y, dc.z]);
+        }
+        let intr = Intrinsics::from_fov(64, 64, 1.2);
+        let cam = Camera::new(intr, Pose::IDENTITY);
+        let splats = preprocess(&cloud, &cam);
+        (splats, Frame::new(64, 64), intr.tile_grid())
+    }
+
+    fn render_all(splats: &[Splat], frame: &mut Frame, grid: (usize, usize)) -> Vec<TileRasterOut> {
+        let bins = bin_splats(splats, IntersectMode::Exact, grid, BinOptions::default());
+        (0..bins.num_tiles())
+            .map(|t| rasterize_tile(splats, bins.tile(t), frame, t, Vec3::ZERO, false))
+            .collect()
+    }
+
+    #[test]
+    fn opaque_gaussian_renders_its_color() {
+        let red = Vec3::new(1.0, 0.0, 0.0);
+        let (splats, mut frame, grid) = make(&[(Vec3::new(0.0, 0.0, 2.0), 0.5, 0.99, red)]);
+        render_all(&splats, &mut frame, grid);
+        // Center pixel should be ≈ red (big opaque splat on black bg).
+        let c = frame.rgb_at(32, 32);
+        assert!(c[0] > 0.9 && c[1] < 0.1 && c[2] < 0.1, "{c:?}");
+        assert!(frame.alpha[frame.idx(32, 32)] > 0.95);
+        assert!((frame.depth[frame.idx(32, 32)] - 2.0).abs() < 1e-2);
+        assert!(frame.valid[frame.idx(32, 32)]);
+    }
+
+    #[test]
+    fn front_occludes_back() {
+        let red = Vec3::new(1.0, 0.0, 0.0);
+        let blue = Vec3::new(0.0, 0.0, 1.0);
+        let (splats, mut frame, grid) = make(&[
+            (Vec3::new(0.0, 0.0, 4.0), 1.0, 0.99, blue), // back
+            (Vec3::new(0.0, 0.0, 2.0), 0.5, 0.99, red),  // front
+        ]);
+        render_all(&splats, &mut frame, grid);
+        let c = frame.rgb_at(32, 32);
+        assert!(c[0] > 0.9 && c[2] < 0.1, "front red should win: {c:?}");
+    }
+
+    #[test]
+    fn blending_order_is_depth_not_insertion() {
+        // Same as above but inserted front-first: result must be identical.
+        let red = Vec3::new(1.0, 0.0, 0.0);
+        let blue = Vec3::new(0.0, 0.0, 1.0);
+        let (s1, mut f1, g1) = make(&[
+            (Vec3::new(0.0, 0.0, 2.0), 0.5, 0.99, red),
+            (Vec3::new(0.0, 0.0, 4.0), 1.0, 0.99, blue),
+        ]);
+        render_all(&s1, &mut f1, g1);
+        let (s2, mut f2, g2) = make(&[
+            (Vec3::new(0.0, 0.0, 4.0), 1.0, 0.99, blue),
+            (Vec3::new(0.0, 0.0, 2.0), 0.5, 0.99, red),
+        ]);
+        render_all(&s2, &mut f2, g2);
+        for i in 0..f1.rgb.len() {
+            assert!((f1.rgb[i] - f2.rgb[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn semitransparent_blend_matches_formula() {
+        let red = Vec3::new(1.0, 0.0, 0.0);
+        let blue = Vec3::new(0.0, 0.0, 1.0);
+        // Two wide flat gaussians, front α≈0.5, back α≈0.8 at center.
+        let (splats, mut frame, grid) = make(&[
+            (Vec3::new(0.0, 0.0, 2.0), 1.5, 0.5, red),
+            (Vec3::new(0.0, 0.0, 4.0), 3.0, 0.8, blue),
+        ]);
+        render_all(&splats, &mut frame, grid);
+        let c = frame.rgb_at(32, 32);
+        // C = 0.5·red + 0.5·0.8·blue (center of both).
+        assert!((c[0] - 0.5).abs() < 0.03, "{c:?}");
+        assert!((c[2] - 0.4).abs() < 0.05, "{c:?}");
+    }
+
+    #[test]
+    fn early_stop_truncates_traversal() {
+        // A stack of opaque gaussians: traversal must stop long before 40.
+        let gs: Vec<(Vec3, f32, f32, Vec3)> = (0..40)
+            .map(|i| {
+                (
+                    Vec3::new(0.0, 0.0, 2.0 + i as f32 * 0.1),
+                    2.0,
+                    0.95,
+                    Vec3::new(0.5, 0.5, 0.5),
+                )
+            })
+            .collect();
+        let (splats, mut frame, grid) = make(&gs);
+        let outs = render_all(&splats, &mut frame, grid);
+        let center_tile = (32 / TILE) * grid.0 + (32 / TILE);
+        let o = outs[center_tile];
+        assert!(o.traversed < 40, "traversed {}", o.traversed);
+        // Early-stop depth should be near the front of the stack.
+        let td = frame.trunc_depth[frame.idx(32, 32)];
+        assert!(td < 2.6, "trunc depth {td}");
+    }
+
+    #[test]
+    fn empty_tile_is_background() {
+        let (splats, mut frame, grid) =
+            make(&[(Vec3::new(0.0, 0.0, 2.0), 0.05, 0.9, Vec3::ONE)]);
+        let bins = bin_splats(&splats, IntersectMode::Exact, grid, BinOptions::default());
+        for t in 0..bins.num_tiles() {
+            rasterize_tile(&splats, bins.tile(t), &mut frame, t, Vec3::new(0.1, 0.2, 0.3), false);
+        }
+        // Corner pixel: far from the tiny splat.
+        let c = frame.rgb_at(0, 0);
+        assert!((c[0] - 0.1).abs() < 1e-5 && (c[1] - 0.2).abs() < 1e-5);
+        assert!(!frame.valid[0]);
+        assert_eq!(frame.depth[0], INVALID_DEPTH);
+    }
+
+    #[test]
+    fn only_invalid_preserves_valid_pixels() {
+        let red = Vec3::new(1.0, 0.0, 0.0);
+        let (splats, mut frame, grid) = make(&[(Vec3::new(0.0, 0.0, 2.0), 1.0, 0.99, red)]);
+        // Pretend warping already filled the left half of the center tile.
+        for y in 32..40 {
+            for x in 32..40 {
+                let i = frame.idx(x, y);
+                frame.valid[i] = true;
+                frame.set_rgb(x, y, [0.0, 1.0, 0.0]); // green placeholder
+            }
+        }
+        let bins = bin_splats(&splats, IntersectMode::Exact, grid, BinOptions::default());
+        for t in 0..bins.num_tiles() {
+            rasterize_tile(&splats, bins.tile(t), &mut frame, t, Vec3::ZERO, true);
+        }
+        // Warped pixels untouched; missing pixels rendered red.
+        assert_eq!(frame.rgb_at(33, 33), [0.0, 1.0, 0.0]);
+        assert!(frame.rgb_at(20, 20)[0] > 0.5);
+    }
+
+    #[test]
+    fn contributing_counts_bounded_by_traversed() {
+        let gs: Vec<(Vec3, f32, f32, Vec3)> = (0..10)
+            .map(|i| {
+                (
+                    Vec3::new(i as f32 * 0.2 - 1.0, 0.0, 3.0),
+                    0.3,
+                    0.5,
+                    Vec3::new(0.5, 0.5, 0.5),
+                )
+            })
+            .collect();
+        let (splats, mut frame, grid) = make(&gs);
+        let outs = render_all(&splats, &mut frame, grid);
+        for o in outs {
+            assert!(o.contributing <= o.traversed);
+        }
+    }
+}

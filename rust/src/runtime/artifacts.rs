@@ -1,0 +1,162 @@
+//! Artifact registry: locates `artifacts/`, parses `manifest.json` (written
+//! by `python/compile/aot.py`) and resolves the right AOT variant for a
+//! request (e.g. the smallest rasterize batch whose K fits a tile list).
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT-lowered graph.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub path: PathBuf,
+    pub kind: String,
+    /// rasterize: tile batch size B.
+    pub batch: usize,
+    /// rasterize: padded Gaussian list length K.
+    pub k: usize,
+    /// project: chunk size N.
+    pub chunk: usize,
+    /// warp: frame dims.
+    pub width: usize,
+    pub height: usize,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+/// Search for the artifacts directory: explicit arg, `$LSG_ARTIFACTS`, or
+/// `artifacts/` walking up from the current dir (so tests work from the
+/// crate root and examples from anywhere inside the repo).
+pub fn find_artifacts_dir(explicit: Option<&Path>) -> Result<PathBuf> {
+    if let Some(p) = explicit {
+        return Ok(p.to_path_buf());
+    }
+    if let Ok(env) = std::env::var("LSG_ARTIFACTS") {
+        return Ok(PathBuf::from(env));
+    }
+    let mut dir = std::env::current_dir()?;
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return Ok(cand);
+        }
+        if !dir.pop() {
+            bail!(
+                "artifacts/manifest.json not found; run `make artifacts` \
+                 (or set LSG_ARTIFACTS)"
+            );
+        }
+    }
+}
+
+impl ArtifactManifest {
+    /// Load and validate the manifest.
+    pub fn load(dir: &Path) -> Result<ArtifactManifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+        let arts = json
+            .get("artifacts")
+            .context("manifest missing 'artifacts'")?;
+        let obj = match arts {
+            Json::Obj(m) => m,
+            _ => bail!("manifest 'artifacts' is not an object"),
+        };
+        let mut entries = Vec::new();
+        for (name, e) in obj {
+            let file = e.str_or("file", "");
+            if file.is_empty() {
+                bail!("artifact {name} missing 'file'");
+            }
+            let path = dir.join(file);
+            if !path.exists() {
+                bail!("artifact file {path:?} missing — re-run `make artifacts`");
+            }
+            entries.push(ArtifactEntry {
+                name: name.clone(),
+                path,
+                kind: e.str_or("kind", "").to_string(),
+                batch: e.f64_or("batch", 0.0) as usize,
+                k: e.f64_or("k", 0.0) as usize,
+                chunk: e.f64_or("chunk", 0.0) as usize,
+                width: e.f64_or("width", 0.0) as usize,
+                height: e.f64_or("height", 0.0) as usize,
+            });
+        }
+        if entries.is_empty() {
+            bail!("manifest has no artifacts");
+        }
+        Ok(ArtifactManifest {
+            dir: dir.to_path_buf(),
+            entries,
+        })
+    }
+
+    /// Rasterize variants sorted by K ascending.
+    pub fn rasterize_variants(&self) -> Vec<&ArtifactEntry> {
+        let mut v: Vec<&ArtifactEntry> =
+            self.entries.iter().filter(|e| e.kind == "rasterize").collect();
+        v.sort_by_key(|e| e.k);
+        v
+    }
+
+    /// Smallest rasterize variant with k >= needed.
+    pub fn rasterize_for(&self, needed_k: usize) -> Option<&ArtifactEntry> {
+        self.rasterize_variants()
+            .into_iter()
+            .find(|e| e.k >= needed_k)
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn loads_repo_manifest_when_present() {
+        let Some(dir) = repo_artifacts() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert!(!m.rasterize_variants().is_empty());
+        // Variant selection: smallest fitting K.
+        let ks: Vec<usize> = m.rasterize_variants().iter().map(|e| e.k).collect();
+        assert!(ks.windows(2).all(|w| w[0] < w[1]));
+        let pick = m.rasterize_for(ks[0] + 1).unwrap();
+        assert!(pick.k >= ks[0] + 1);
+        assert!(m.rasterize_for(usize::MAX - 1).is_none());
+    }
+
+    #[test]
+    fn rejects_missing_dir() {
+        let res = ArtifactManifest::load(Path::new("/nonexistent/xyz"));
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn rejects_bad_manifest() {
+        let dir = std::env::temp_dir().join("lsg_bad_manifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{\"artifacts\": {}}").unwrap();
+        assert!(ArtifactManifest::load(&dir).is_err());
+        std::fs::write(dir.join("manifest.json"), "not json").unwrap();
+        assert!(ArtifactManifest::load(&dir).is_err());
+    }
+}

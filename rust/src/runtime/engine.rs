@@ -1,0 +1,204 @@
+//! PJRT execution engine: compiles the AOT HLO-text artifacts once and
+//! executes them from the rust request path (no Python anywhere).
+//!
+//! Mirrors /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`. Executables
+//! are shape-monomorphic, so tile lists are padded to the compiled K and
+//! batched in groups of B tiles (DESIGN.md §Key design decisions #2).
+
+use super::artifacts::{find_artifacts_dir, ArtifactManifest};
+use crate::math::Vec3;
+use crate::render::binning::TileBins;
+use crate::render::framebuffer::{Frame, INVALID_DEPTH};
+use crate::render::preprocess::Splat;
+use crate::render::rasterize::VALID_ALPHA;
+use crate::TILE;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// PJRT engine: one CPU client + lazily compiled executables.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    pub manifest: ArtifactManifest,
+    compiled: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtEngine {
+    /// Create the engine, locating artifacts automatically when `dir` is
+    /// None (see [`find_artifacts_dir`]).
+    pub fn new(dir: Option<&Path>) -> Result<PjrtEngine> {
+        let dir = find_artifacts_dir(dir)?;
+        let manifest = ArtifactManifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtEngine {
+            client,
+            manifest,
+            compiled: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) an artifact by name.
+    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.compiled.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self
+            .manifest
+            .by_name(name)
+            .with_context(|| format!("unknown artifact '{name}'"))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            entry
+                .path
+                .to_str()
+                .context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing {:?}", entry.path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?,
+        );
+        self.compiled
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Rasterize `tiles` (indices into the frame's tile grid) through the
+    /// AOT kernel, writing color/alpha/depth/trunc/valid into `frame`.
+    ///
+    /// Tiles whose (already DPES-culled) list exceeds the largest compiled
+    /// K are returned for the caller to fall back on the native path.
+    pub fn render_tiles(
+        &self,
+        splats: &[Splat],
+        bins: &TileBins,
+        tiles: &[usize],
+        frame: &mut Frame,
+        background: Vec3,
+    ) -> Result<Vec<usize>> {
+        let variants = self.manifest.rasterize_variants();
+        if variants.is_empty() {
+            bail!("no rasterize artifacts in manifest");
+        }
+        let k_max = variants.last().unwrap().k;
+        let mut overflow = Vec::new();
+        let mut runnable: Vec<usize> = Vec::new();
+        for &t in tiles {
+            if bins.tile(t).len() > k_max {
+                overflow.push(t);
+            } else {
+                runnable.push(t);
+            }
+        }
+        // Group by required variant so each batch pads minimally, longest
+        // lists first (better packing).
+        runnable.sort_by_key(|&t| std::cmp::Reverse(bins.tile(t).len()));
+        let b = variants[0].batch;
+        for chunk in runnable.chunks(b) {
+            let need = chunk.iter().map(|&t| bins.tile(t).len()).max().unwrap_or(0);
+            let entry = self
+                .manifest
+                .rasterize_for(need)
+                .expect("overflow filtered above");
+            self.run_batch(entry.name.clone(), entry.batch, entry.k, splats, bins, chunk, frame, background)?;
+        }
+        Ok(overflow)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_batch(
+        &self,
+        name: String,
+        b: usize,
+        k: usize,
+        splats: &[Splat],
+        bins: &TileBins,
+        tiles: &[usize],
+        frame: &mut Frame,
+        background: Vec3,
+    ) -> Result<()> {
+        assert!(tiles.len() <= b);
+        let (grid_x, _) = frame.tile_grid();
+        let mut means = vec![0.0f32; b * k * 2];
+        let mut conics = vec![0.0f32; b * k * 3];
+        let mut colors = vec![0.0f32; b * k * 3];
+        let mut opac = vec![0.0f32; b * k];
+        let mut depths = vec![0.0f32; b * k];
+        let mut valid = vec![0.0f32; b * k];
+        let mut origins = vec![0.0f32; b * 2];
+
+        for (bi, &t) in tiles.iter().enumerate() {
+            origins[bi * 2] = (t % grid_x * TILE) as f32;
+            origins[bi * 2 + 1] = (t / grid_x * TILE) as f32;
+            for (ki, &sid) in bins.tile(t).iter().enumerate() {
+                let s = &splats[sid as usize];
+                let o = bi * k + ki;
+                means[o * 2] = s.mean.x;
+                means[o * 2 + 1] = s.mean.y;
+                conics[o * 3] = s.conic.0;
+                conics[o * 3 + 1] = s.conic.1;
+                conics[o * 3 + 2] = s.conic.2;
+                colors[o * 3] = s.color.x;
+                colors[o * 3 + 1] = s.color.y;
+                colors[o * 3 + 2] = s.color.z;
+                opac[o] = s.opacity;
+                depths[o] = s.depth;
+                valid[o] = 1.0;
+            }
+        }
+        let bg = [background.x, background.y, background.z];
+
+        let exe = self.executable(&name)?;
+        let inputs = [
+            xla::Literal::vec1(&means).reshape(&[b as i64, k as i64, 2])?,
+            xla::Literal::vec1(&conics).reshape(&[b as i64, k as i64, 3])?,
+            xla::Literal::vec1(&colors).reshape(&[b as i64, k as i64, 3])?,
+            xla::Literal::vec1(&opac).reshape(&[b as i64, k as i64])?,
+            xla::Literal::vec1(&depths).reshape(&[b as i64, k as i64])?,
+            xla::Literal::vec1(&valid).reshape(&[b as i64, k as i64])?,
+            xla::Literal::vec1(&origins).reshape(&[b as i64, 2])?,
+            xla::Literal::vec1(&bg).reshape(&[3])?,
+        ];
+        let result = exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let (rgb_l, alpha_l, depth_l, trunc_l) = result.to_tuple4()?;
+        let rgb = rgb_l.to_vec::<f32>()?;
+        let alpha = alpha_l.to_vec::<f32>()?;
+        let depth = depth_l.to_vec::<f32>()?;
+        let trunc = trunc_l.to_vec::<f32>()?;
+
+        for (bi, &t) in tiles.iter().enumerate() {
+            let (x0, y0, x1, y1) = frame.tile_bounds(t);
+            for py in 0..(y1 - y0) {
+                for px in 0..(x1 - x0) {
+                    let src = bi * TILE * TILE + py * TILE + px;
+                    let gi = frame.idx(x0 + px, y0 + py);
+                    frame.rgb[gi * 3] = rgb[src * 3];
+                    frame.rgb[gi * 3 + 1] = rgb[src * 3 + 1];
+                    frame.rgb[gi * 3 + 2] = rgb[src * 3 + 2];
+                    frame.alpha[gi] = alpha[src];
+                    frame.depth[gi] = sanitize(depth[src]);
+                    frame.trunc_depth[gi] = sanitize(trunc[src]);
+                    frame.valid[gi] = alpha[src] >= VALID_ALPHA;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn sanitize(v: f32) -> f32 {
+    if v.is_finite() {
+        v
+    } else {
+        INVALID_DEPTH
+    }
+}

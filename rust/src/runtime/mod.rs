@@ -1,0 +1,72 @@
+//! L3 runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `make artifacts`) and executes them via PJRT on the request
+//! path. Python never runs at serving time.
+//!
+//! [`PjrtEngine`] is the low-level loader/executor; [`PjrtRenderer`] is a
+//! drop-in frame renderer that routes the rasterization hot spot through
+//! the AOT kernel (native preprocessing + binning, which are the
+//! coordinator's own domain). Integration tests in `rust/tests/` hold the
+//! PJRT and native backends to numeric agreement.
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{find_artifacts_dir, ArtifactEntry, ArtifactManifest};
+pub use engine::PjrtEngine;
+
+use crate::render::{BinOptions, Frame, RenderStats, Renderer};
+use crate::scene::Pose;
+use anyhow::Result;
+
+/// A renderer that executes tile rasterization through the PJRT artifacts.
+pub struct PjrtRenderer {
+    pub native: Renderer,
+    pub engine: PjrtEngine,
+}
+
+impl PjrtRenderer {
+    /// Wrap a native renderer; artifacts are auto-located.
+    pub fn new(native: Renderer) -> Result<PjrtRenderer> {
+        Ok(PjrtRenderer {
+            native,
+            engine: PjrtEngine::new(None)?,
+        })
+    }
+
+    /// Dense render with the rasterization hot path on PJRT. Tiles whose
+    /// lists exceed the largest compiled K fall back to the native
+    /// rasterizer (reported in the stats; rare at evaluation scales).
+    pub fn render(&self, pose: &Pose) -> Result<(Frame, RenderStats, usize)> {
+        let (splats, bins) = self.native.plan(pose, BinOptions::default());
+        let mut frame = Frame::new(self.native.intrinsics.width, self.native.intrinsics.height);
+        let tiles: Vec<usize> = (0..bins.num_tiles()).collect();
+        let overflow = self.engine.render_tiles(
+            &splats,
+            &bins,
+            &tiles,
+            &mut frame,
+            self.native.config.background,
+        )?;
+        let n_fallback = overflow.len();
+        for t in overflow {
+            crate::render::rasterize_tile(
+                &splats,
+                bins.tile(t),
+                &mut frame,
+                t,
+                self.native.config.background,
+                false,
+            );
+        }
+        // Assemble stats equivalent to the native pipeline's planning view.
+        let stats = RenderStats {
+            n_gaussians: self.native.cloud.len(),
+            n_splats: splats.len(),
+            pairs: bins.num_pairs(),
+            cost: bins.cost,
+            per_tile_pairs: bins.per_tile_counts(),
+            ..Default::default()
+        };
+        Ok((frame, stats, n_fallback))
+    }
+}

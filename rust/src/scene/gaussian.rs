@@ -1,0 +1,265 @@
+//! Structure-of-arrays storage for a 3D Gaussian cloud.
+//!
+//! Matches the reference 3DGS parameterization: position μ, scale s
+//! (linear, per-axis), rotation q, opacity o (post-sigmoid, in [0,1]) and
+//! per-channel SH coefficients. SoA keeps preprocessing vectorizable and is
+//! the layout the AOT artifacts consume.
+
+use crate::math::{Mat3, Quat, Vec3};
+
+/// A cloud of N Gaussians, SoA layout.
+#[derive(Clone, Debug, Default)]
+pub struct GaussianCloud {
+    /// World-space centers, xyz interleaved (len 3N).
+    pub positions: Vec<f32>,
+    /// Per-axis linear scales (len 3N).
+    pub scales: Vec<f32>,
+    /// Unit quaternions wxyz (len 4N).
+    pub rotations: Vec<f32>,
+    /// Opacities in [0,1] (len N).
+    pub opacities: Vec<f32>,
+    /// SH degree (0..=3).
+    pub sh_degree: usize,
+    /// SH coefficients, per Gaussian: num_coeffs(sh_degree) * 3 floats,
+    /// coefficient-major, channel-minor (len N * n_coeffs * 3).
+    pub sh: Vec<f32>,
+}
+
+impl GaussianCloud {
+    pub fn with_capacity(n: usize, sh_degree: usize) -> GaussianCloud {
+        GaussianCloud {
+            positions: Vec::with_capacity(3 * n),
+            scales: Vec::with_capacity(3 * n),
+            rotations: Vec::with_capacity(4 * n),
+            opacities: Vec::with_capacity(n),
+            sh_degree,
+            sh: Vec::with_capacity(n * crate::math::sh::num_coeffs(sh_degree) * 3),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.opacities.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.opacities.is_empty()
+    }
+
+    pub fn sh_stride(&self) -> usize {
+        crate::math::sh::num_coeffs(self.sh_degree) * 3
+    }
+
+    #[inline]
+    pub fn position(&self, i: usize) -> Vec3 {
+        Vec3::new(
+            self.positions[3 * i],
+            self.positions[3 * i + 1],
+            self.positions[3 * i + 2],
+        )
+    }
+
+    #[inline]
+    pub fn scale(&self, i: usize) -> Vec3 {
+        Vec3::new(self.scales[3 * i], self.scales[3 * i + 1], self.scales[3 * i + 2])
+    }
+
+    #[inline]
+    pub fn rotation(&self, i: usize) -> Quat {
+        Quat::new(
+            self.rotations[4 * i],
+            self.rotations[4 * i + 1],
+            self.rotations[4 * i + 2],
+            self.rotations[4 * i + 3],
+        )
+    }
+
+    #[inline]
+    pub fn opacity(&self, i: usize) -> f32 {
+        self.opacities[i]
+    }
+
+    #[inline]
+    pub fn sh_coeffs(&self, i: usize) -> &[f32] {
+        let s = self.sh_stride();
+        &self.sh[i * s..(i + 1) * s]
+    }
+
+    /// World-space 3D covariance Σ = R S Sᵀ Rᵀ.
+    pub fn covariance3d(&self, i: usize) -> Mat3 {
+        let r = self.rotation(i).to_mat3();
+        let s = self.scale(i);
+        let rs = r * Mat3::diag(s);
+        rs * rs.transpose()
+    }
+
+    /// Append one Gaussian. `sh` must have sh_stride() entries.
+    pub fn push(&mut self, pos: Vec3, scale: Vec3, rot: Quat, opacity: f32, sh: &[f32]) {
+        assert_eq!(sh.len(), self.sh_stride(), "SH coefficient count mismatch");
+        debug_assert!((0.0..=1.0).contains(&opacity));
+        self.positions.extend_from_slice(&[pos.x, pos.y, pos.z]);
+        self.scales.extend_from_slice(&[scale.x, scale.y, scale.z]);
+        let q = rot.normalized();
+        self.rotations.extend_from_slice(&[q.w, q.x, q.y, q.z]);
+        self.opacities.push(opacity);
+        self.sh.extend_from_slice(sh);
+    }
+
+    /// Append all Gaussians from another cloud (must share sh_degree).
+    pub fn extend(&mut self, other: &GaussianCloud) {
+        assert_eq!(self.sh_degree, other.sh_degree);
+        self.positions.extend_from_slice(&other.positions);
+        self.scales.extend_from_slice(&other.scales);
+        self.rotations.extend_from_slice(&other.rotations);
+        self.opacities.extend_from_slice(&other.opacities);
+        self.sh.extend_from_slice(&other.sh);
+    }
+
+    /// Axis-aligned bounds of all centers; None when empty.
+    pub fn bounds(&self) -> Option<(Vec3, Vec3)> {
+        if self.is_empty() {
+            return None;
+        }
+        let mut lo = self.position(0);
+        let mut hi = lo;
+        for i in 1..self.len() {
+            let p = self.position(i);
+            lo = lo.min(p);
+            hi = hi.max(p);
+        }
+        Some((lo, hi))
+    }
+
+    /// Sanity checks used by tests and after IO: finite values, unit
+    /// quaternions, opacities in range.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.len();
+        if self.positions.len() != 3 * n
+            || self.scales.len() != 4 * n - n
+            || self.rotations.len() != 4 * n
+            || self.sh.len() != n * self.sh_stride()
+        {
+            return Err("array length mismatch".into());
+        }
+        for (name, arr) in [
+            ("positions", &self.positions),
+            ("scales", &self.scales),
+            ("rotations", &self.rotations),
+            ("opacities", &self.opacities),
+            ("sh", &self.sh),
+        ] {
+            if let Some(i) = arr.iter().position(|v| !v.is_finite()) {
+                return Err(format!("non-finite value in {name}[{i}]"));
+            }
+        }
+        for i in 0..n {
+            let o = self.opacities[i];
+            if !(0.0..=1.0).contains(&o) {
+                return Err(format!("opacity[{i}] = {o} out of range"));
+            }
+            let q = self.rotation(i);
+            if (q.norm() - 1.0).abs() > 1e-3 {
+                return Err(format!("rotation[{i}] not unit (norm {})", q.norm()));
+            }
+            let s = self.scale(i);
+            if s.x <= 0.0 || s.y <= 0.0 || s.z <= 0.0 {
+                return Err(format!("scale[{i}] not positive: {s:?}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> GaussianCloud {
+        let mut c = GaussianCloud::with_capacity(2, 0);
+        c.push(
+            Vec3::new(0.0, 1.0, 2.0),
+            Vec3::splat(0.1),
+            Quat::IDENTITY,
+            0.9,
+            &[0.3, 0.2, 0.1],
+        );
+        c.push(
+            Vec3::new(-1.0, 0.0, 3.0),
+            Vec3::new(0.2, 0.1, 0.05),
+            Quat::from_axis_angle(Vec3::Z, 0.5),
+            0.5,
+            &[0.0, 0.4, 0.8],
+        );
+        c
+    }
+
+    #[test]
+    fn push_and_access() {
+        let c = tiny();
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.position(1), Vec3::new(-1.0, 0.0, 3.0));
+        assert_eq!(c.opacity(0), 0.9);
+        assert_eq!(c.sh_coeffs(1), &[0.0, 0.4, 0.8]);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn covariance_isotropic_for_identity() {
+        let c = tiny();
+        let cov = c.covariance3d(0);
+        // scale 0.1 ⇒ Σ = 0.01 I
+        for i in 0..3 {
+            for j in 0..3 {
+                let want = if i == j { 0.01 } else { 0.0 };
+                assert!((cov.m[i][j] - want).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn covariance_is_symmetric_psd() {
+        let c = tiny();
+        let cov = c.covariance3d(1);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!((cov.m[i][j] - cov.m[j][i]).abs() < 1e-6);
+            }
+        }
+        // PSD: xᵀΣx ≥ 0 for a few x.
+        for x in [Vec3::X, Vec3::Y, Vec3::Z, Vec3::new(1.0, -1.0, 0.5)] {
+            assert!((cov * x).dot(x) >= -1e-6);
+        }
+    }
+
+    #[test]
+    fn bounds_cover_all() {
+        let c = tiny();
+        let (lo, hi) = c.bounds().unwrap();
+        assert_eq!(lo, Vec3::new(-1.0, 0.0, 2.0));
+        assert_eq!(hi, Vec3::new(0.0, 1.0, 3.0));
+        assert!(GaussianCloud::default().bounds().is_none());
+    }
+
+    #[test]
+    fn validate_catches_bad_opacity() {
+        let mut c = tiny();
+        c.opacities[0] = 1.5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_nan() {
+        let mut c = tiny();
+        c.positions[2] = f32::NAN;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn extend_concatenates() {
+        let mut a = tiny();
+        let b = tiny();
+        a.extend(&b);
+        assert_eq!(a.len(), 4);
+        assert_eq!(a.position(2), b.position(0));
+        a.validate().unwrap();
+    }
+}

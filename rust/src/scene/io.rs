@@ -1,0 +1,157 @@
+//! Scene file IO: a compact binary container (`.lsg`) for Gaussian clouds
+//! plus a JSON sidecar for metadata. Lets examples/benches cache generated
+//! scenes and lets users bring their own clouds.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic  "LSGS"            4 bytes
+//! version u32              (= 1)
+//! count   u32              N gaussians
+//! sh_deg  u32
+//! then positions f32[3N], scales f32[3N], rotations f32[4N],
+//! opacities f32[N], sh f32[N * stride]
+//! ```
+
+use super::gaussian::GaussianCloud;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"LSGS";
+const VERSION: u32 = 1;
+
+/// Serialize a cloud to the binary container.
+pub fn save_cloud(path: &Path, cloud: &GaussianCloud) -> Result<()> {
+    let mut w = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("create {path:?}"))?,
+    );
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(cloud.len() as u32).to_le_bytes())?;
+    w.write_all(&(cloud.sh_degree as u32).to_le_bytes())?;
+    for arr in [
+        &cloud.positions,
+        &cloud.scales,
+        &cloud.rotations,
+        &cloud.opacities,
+        &cloud.sh,
+    ] {
+        write_f32s(&mut w, arr)?;
+    }
+    Ok(())
+}
+
+/// Load a cloud from the binary container and validate it.
+pub fn load_cloud(path: &Path) -> Result<GaussianCloud> {
+    let mut r = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
+    );
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not an LSGS file: bad magic {magic:?}");
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("unsupported LSGS version {version}");
+    }
+    let n = read_u32(&mut r)? as usize;
+    let sh_degree = read_u32(&mut r)? as usize;
+    if sh_degree > 3 {
+        bail!("bad SH degree {sh_degree}");
+    }
+    let stride = crate::math::sh::num_coeffs(sh_degree) * 3;
+    let cloud = GaussianCloud {
+        positions: read_f32s(&mut r, 3 * n)?,
+        scales: read_f32s(&mut r, 3 * n)?,
+        rotations: read_f32s(&mut r, 4 * n)?,
+        opacities: read_f32s(&mut r, n)?,
+        sh_degree,
+        sh: read_f32s(&mut r, n * stride)?,
+    };
+    cloud
+        .validate()
+        .map_err(|e| anyhow::anyhow!("invalid cloud in {path:?}: {e}"))?;
+    Ok(cloud)
+}
+
+fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> Result<()> {
+    let mut buf = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_f32s<R: Read>(r: &mut R, n: usize) -> Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)
+        .with_context(|| format!("truncated file reading {n} f32s"))?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scene::generator::generate;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("lsg_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_preserves_cloud() {
+        let scene = generate("chair", 0.02, 320, 180);
+        let p = tmp("chair.lsg");
+        save_cloud(&p, &scene.cloud).unwrap();
+        let loaded = load_cloud(&p).unwrap();
+        assert_eq!(loaded.positions, scene.cloud.positions);
+        assert_eq!(loaded.scales, scene.cloud.scales);
+        assert_eq!(loaded.rotations, scene.cloud.rotations);
+        assert_eq!(loaded.opacities, scene.cloud.opacities);
+        assert_eq!(loaded.sh, scene.cloud.sh);
+        assert_eq!(loaded.sh_degree, scene.cloud.sh_degree);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = tmp("bad.lsg");
+        std::fs::write(&p, b"NOPE0000").unwrap();
+        assert!(load_cloud(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let scene = generate("chair", 0.01, 320, 180);
+        let p = tmp("trunc.lsg");
+        save_cloud(&p, &scene.cloud).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load_cloud(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_corrupted_values() {
+        let scene = generate("chair", 0.01, 320, 180);
+        let p = tmp("corrupt.lsg");
+        save_cloud(&p, &scene.cloud).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // Poke a NaN into the positions block (offset 16 = header end).
+        bytes[16..20].copy_from_slice(&f32::NAN.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load_cloud(&p).unwrap_err().to_string();
+        assert!(err.contains("invalid cloud"), "{err}");
+    }
+}

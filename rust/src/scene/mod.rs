@@ -1,0 +1,16 @@
+//! Scene substrate: Gaussian cloud storage, cameras + trajectories, and the
+//! procedural scene generators that stand in for the paper's trained
+//! Synthetic-NeRF / Tanks&Temples / Deep Blending / Mip-NeRF 360 scenes
+//! (see DESIGN.md substitution log).
+
+pub mod camera;
+pub mod gaussian;
+pub mod generator;
+pub mod io;
+
+pub use camera::{Camera, Intrinsics, Pose, Trajectory};
+pub use gaussian::GaussianCloud;
+pub use generator::{
+    dataset_of, generate, preset_by_name, Scene, SceneKind, ScenePreset, ALL_SCENES, REAL_SCENES,
+    SYNTHETIC_SCENES,
+};

@@ -1,0 +1,115 @@
+//! Silicon-area model (16 nm FinFET), reproducing the paper's Sec. VI-A
+//! hardware-implementation numbers and Fig. 15b reuse analysis:
+//!
+//! * scaled GSCore baseline: **1.45 mm²**;
+//! * LS-Gaussian additions without any reuse: interpolation unit, 16 KB
+//!   counter buffer, sqrt+log operator (minus the removed dual OIUs),
+//!   VTU datapath, LDU logic;
+//! * reusing the VTU counter buffer + comparators for LD1 saves 32% of the
+//!   added area; further reusing the GSU for workload sorting reaches 36%,
+//!   landing at **+0.39 mm²** (total 1.84 mm²).
+
+/// One architectural sub-unit with its area in mm² (16 nm).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Unit {
+    pub name: &'static str,
+    pub mm2: f64,
+}
+
+/// GSCore baseline breakdown, scaled to 16 nm (total 1.45 mm²).
+pub const GSCORE_UNITS: [Unit; 4] = [
+    Unit { name: "CCU (incl. dual OIU)", mm2: 0.34 },
+    Unit { name: "GSU", mm2: 0.48 },
+    Unit { name: "VRU array", mm2: 0.55 },
+    Unit { name: "control + NoC", mm2: 0.08 },
+];
+
+/// LS-Gaussian augmented modules, before any hardware reuse.
+pub const LSG_ADDED_UNITS: [Unit; 5] = [
+    // TAIT stage-1 operators replace GSCore's dual OIUs: net +0.02.
+    Unit { name: "sqrt+log operator (CCU)", mm2: 0.02 },
+    Unit { name: "interpolation unit (VTU)", mm2: 0.09 },
+    Unit { name: "16KB counter buffer", mm2: 0.13 },
+    Unit { name: "VTU transform datapath", mm2: 0.23 },
+    Unit { name: "LDU logic (counters+compare+sort)", mm2: 0.14 },
+];
+
+/// Reuse levels of Fig. 15b.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReuseLevel {
+    /// Every augmented module gets dedicated silicon.
+    None,
+    /// LDU reuses the VTU counter buffer + comparators (−32%).
+    VtuCounters,
+    /// ... plus the GSU for workload sorting (−36% total).
+    VtuAndGsu,
+}
+
+impl ReuseLevel {
+    /// Fraction of the added area saved at this reuse level (paper
+    /// Sec. VI-D: 32%, then 36%).
+    pub fn savings(&self) -> f64 {
+        match self {
+            ReuseLevel::None => 0.0,
+            ReuseLevel::VtuCounters => 0.32,
+            ReuseLevel::VtuAndGsu => 0.36,
+        }
+    }
+}
+
+/// Total GSCore area (mm²).
+pub fn gscore_area() -> f64 {
+    GSCORE_UNITS.iter().map(|u| u.mm2).sum()
+}
+
+/// Added area of the LS-Gaussian units at a reuse level (mm²).
+pub fn lsg_added_area(reuse: ReuseLevel) -> f64 {
+    let raw: f64 = LSG_ADDED_UNITS.iter().map(|u| u.mm2).sum();
+    raw * (1.0 - reuse.savings())
+}
+
+/// Total LS-Gaussian area (mm²).
+pub fn lsg_total_area(reuse: ReuseLevel) -> f64 {
+    gscore_area() + lsg_added_area(reuse)
+}
+
+/// Reference areas of the comparison points in the paper (mm²).
+pub const METASAPIENS_AREA: f64 = 2.73;
+pub const JETSON_GPU_AREA: f64 = 350.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gscore_matches_paper() {
+        assert!((gscore_area() - 1.45).abs() < 1e-9, "{}", gscore_area());
+    }
+
+    #[test]
+    fn full_reuse_lands_at_paper_total() {
+        // Paper: +0.39 mm² over 1.45 ⇒ 1.84 mm² total.
+        let added = lsg_added_area(ReuseLevel::VtuAndGsu);
+        assert!((added - 0.39).abs() < 0.015, "added {added}");
+        let total = lsg_total_area(ReuseLevel::VtuAndGsu);
+        assert!((total - 1.84).abs() < 0.02, "total {total}");
+    }
+
+    #[test]
+    fn reuse_monotonically_shrinks_area() {
+        let a0 = lsg_added_area(ReuseLevel::None);
+        let a1 = lsg_added_area(ReuseLevel::VtuCounters);
+        let a2 = lsg_added_area(ReuseLevel::VtuAndGsu);
+        assert!(a0 > a1 && a1 > a2);
+        // Savings fractions match the paper.
+        assert!(((a0 - a1) / a0 - 0.32).abs() < 1e-6);
+        assert!(((a0 - a2) / a0 - 0.36).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stays_far_below_gpu_and_metasapiens() {
+        let total = lsg_total_area(ReuseLevel::VtuAndGsu);
+        assert!(total < METASAPIENS_AREA);
+        assert!(total < JETSON_GPU_AREA / 100.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Hardware models: the edge-GPU baseline (Fig. 13), the streaming
+//! accelerator with its ablations (Figs. 14/15a, Table I) and the 16 nm
+//! area model (Fig. 15b). All models consume [`trace::WorkloadTrace`]s
+//! produced by the real renderer/coordinator — never synthetic workloads —
+//! so the co-design loop stays closed.
+
+pub mod accel;
+pub mod area;
+pub mod gpu;
+pub mod trace;
+
+pub use accel::{AccelConfig, AccelFrameTime, AccelVariant, Accelerator};
+pub use area::{gscore_area, lsg_added_area, lsg_total_area, ReuseLevel};
+pub use gpu::{GpuFrameTime, GpuModel};
+pub use trace::WorkloadTrace;

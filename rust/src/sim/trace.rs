@@ -1,0 +1,111 @@
+//! Workload traces: the interface between the real renderer/coordinator and
+//! the hardware models. The simulator never re-derives workloads — it
+//! consumes what the algorithms actually produced, so algorithm changes
+//! propagate into hardware numbers exactly as in the paper's co-design loop
+//! (DESIGN.md §Key design decisions).
+
+use crate::coordinator::{FrameKind, FrameTrace};
+use crate::scene::Intrinsics;
+
+/// Per-frame workload snapshot for the GPU / accelerator models.
+#[derive(Clone, Debug)]
+pub struct WorkloadTrace {
+    /// Splats that survived culling (CCU / preprocessing work).
+    pub n_splats: usize,
+    /// Heavy geometric ops performed by the intersection test.
+    pub heavy_ops: u64,
+    /// Candidate tiles the intersection test inspected.
+    pub candidates: u64,
+    /// Per-tile sorted pair counts (GSU work).
+    pub per_tile_pairs: Vec<u32>,
+    /// Per-tile effective traversal counts after early stopping (VRU work).
+    pub per_tile_traversed: Vec<u32>,
+    /// Per-tile α-blend operations.
+    pub per_tile_blend_ops: Vec<u64>,
+    /// Tiles rendered this frame (None = all, i.e. a full frame).
+    pub rerender_mask: Option<Vec<bool>>,
+    /// Pixels carried by viewpoint transformation (VTU work).
+    pub warped_pixels: usize,
+    /// Pixels filled by the interpolation unit.
+    pub inpainted_pixels: usize,
+    /// Tile grid.
+    pub grid: (usize, usize),
+    /// How the frame was produced.
+    pub kind: FrameKind,
+}
+
+impl WorkloadTrace {
+    /// Assemble from a coordinator frame trace.
+    pub fn from_frame(trace: &FrameTrace, intr: &Intrinsics) -> WorkloadTrace {
+        let n_px = intr.num_pixels();
+        WorkloadTrace {
+            n_splats: trace.render.n_splats,
+            heavy_ops: trace.render.cost.heavy_ops,
+            candidates: trace.render.cost.candidates,
+            per_tile_pairs: trace.render.per_tile_pairs.clone(),
+            per_tile_traversed: trace.render.per_tile_traversed.clone(),
+            per_tile_blend_ops: trace.render.per_tile_blend_ops.clone(),
+            rerender_mask: trace.warp.as_ref().map(|w| w.rerender_mask.clone()),
+            warped_pixels: (trace.warped_fraction * n_px as f32) as usize,
+            inpainted_pixels: trace.warp.as_ref().map(|w| w.inpainted_pixels).unwrap_or(0),
+            grid: intr.tile_grid(),
+            kind: trace.kind,
+        }
+    }
+
+    pub fn num_tiles(&self) -> usize {
+        self.grid.0 * self.grid.1
+    }
+
+    pub fn total_pairs(&self) -> u64 {
+        self.per_tile_pairs.iter().map(|&p| p as u64).sum()
+    }
+
+    pub fn total_traversed(&self) -> u64 {
+        self.per_tile_traversed.iter().map(|&p| p as u64).sum()
+    }
+
+    pub fn total_blend_ops(&self) -> u64 {
+        self.per_tile_blend_ops.iter().sum()
+    }
+
+    /// Tiles that actually run through GSU+VRU this frame.
+    pub fn active_tiles(&self) -> Vec<usize> {
+        match &self.rerender_mask {
+            Some(m) => (0..self.num_tiles()).filter(|&t| m[t]).collect(),
+            None => (0..self.num_tiles()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{CoordinatorConfig, StreamingCoordinator};
+    use crate::render::Renderer;
+    use crate::scene::generate;
+
+    #[test]
+    fn from_frame_roundtrips_counts() {
+        let s = generate("room", 0.03, 128, 128);
+        let poses = s.sample_poses(3);
+        let intr = s.intrinsics;
+        let mut c = StreamingCoordinator::new(
+            Renderer::new(s.cloud, intr),
+            CoordinatorConfig::default(),
+        );
+        let results = c.run_sequence(&poses);
+        let full = WorkloadTrace::from_frame(&results[0].trace, &intr);
+        assert_eq!(full.kind, FrameKind::Full);
+        assert!(full.rerender_mask.is_none());
+        assert_eq!(full.active_tiles().len(), full.num_tiles());
+        assert_eq!(full.total_pairs() as usize, results[0].trace.render.pairs);
+        assert_eq!(full.warped_pixels, 0);
+
+        let warped = WorkloadTrace::from_frame(&results[1].trace, &intr);
+        assert_eq!(warped.kind, FrameKind::Warped);
+        assert!(warped.rerender_mask.is_some());
+        assert!(warped.active_tiles().len() < warped.num_tiles());
+        assert!(warped.warped_pixels > 0);
+    }
+}

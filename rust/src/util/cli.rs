@@ -1,0 +1,115 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positionals and
+//! subcommands. The binary in `main.rs` builds its command tree from this.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: subcommand path, options, flags, positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.options.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, name: &str, default: f32) -> f32 {
+        self.get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn options_and_flags() {
+        // NB: a bare `--name` followed by a non-dashed token binds as an
+        // option (`--verbose out.png` would parse as verbose="out.png"),
+        // so flags go last or use `--key=value` forms.
+        let a = parse("render out.png --scene train --frames=10 --verbose");
+        assert_eq!(a.positional, vec!["render", "out.png"]);
+        assert_eq!(a.get("scene"), Some("train"));
+        assert_eq!(a.usize_or("frames", 0), 10);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn flag_before_option() {
+        let a = parse("--fast --n 5");
+        assert!(a.flag("fast"));
+        assert_eq!(a.usize_or("n", 0), 5);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.usize_or("n", 3), 3);
+        assert_eq!(a.f32_or("x", 1.5), 1.5);
+        assert_eq!(a.get_or("mode", "native"), "native");
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // "--shift -3" : "-3" does not start with "--" so it is a value.
+        let a = parse("--shift -3");
+        assert_eq!(a.get("shift"), Some("-3"));
+    }
+}

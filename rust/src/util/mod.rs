@@ -1,0 +1,17 @@
+//! Infrastructure substrates: deterministic RNG, JSON, CLI parsing, thread
+//! pool, property-test harness, image IO, timers.
+//!
+//! These exist because the build is fully offline: the usual crates
+//! (`rand`, `serde_json`, `clap`, `rayon`, `criterion`, `proptest`,
+//! `image`) are not in the vendored set, so the repo carries minimal,
+//! well-tested replacements.
+
+pub mod cli;
+pub mod json;
+pub mod png;
+pub mod pool;
+pub mod proptest;
+pub mod rng;
+pub mod timer;
+
+pub use rng::Rng;

@@ -1,0 +1,95 @@
+//! Minimal PNG (8-bit RGB, zlib via flate2) and PPM writers for dumping
+//! rendered frames. Only what the examples/benches need — no reading.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write an 8-bit RGB PNG. `rgb` is row-major, 3 bytes/pixel.
+pub fn write_png(path: &Path, width: usize, height: usize, rgb: &[u8]) -> std::io::Result<()> {
+    assert_eq!(rgb.len(), width * height * 3, "rgb buffer size mismatch");
+    let mut file = std::io::BufWriter::new(std::fs::File::create(path)?);
+    file.write_all(b"\x89PNG\r\n\x1a\n")?;
+
+    // IHDR
+    let mut ihdr = Vec::with_capacity(13);
+    ihdr.extend_from_slice(&(width as u32).to_be_bytes());
+    ihdr.extend_from_slice(&(height as u32).to_be_bytes());
+    ihdr.extend_from_slice(&[8, 2, 0, 0, 0]); // bit depth 8, color type 2 (RGB)
+    write_chunk(&mut file, b"IHDR", &ihdr)?;
+
+    // IDAT: filter byte 0 (None) per scanline, zlib-compressed.
+    let mut raw = Vec::with_capacity(height * (1 + width * 3));
+    for y in 0..height {
+        raw.push(0u8);
+        raw.extend_from_slice(&rgb[y * width * 3..(y + 1) * width * 3]);
+    }
+    let mut enc = flate2::write::ZlibEncoder::new(Vec::new(), flate2::Compression::fast());
+    enc.write_all(&raw)?;
+    let compressed = enc.finish()?;
+    write_chunk(&mut file, b"IDAT", &compressed)?;
+    write_chunk(&mut file, b"IEND", &[])?;
+    Ok(())
+}
+
+fn write_chunk<W: Write>(w: &mut W, kind: &[u8; 4], data: &[u8]) -> std::io::Result<()> {
+    w.write_all(&(data.len() as u32).to_be_bytes())?;
+    w.write_all(kind)?;
+    w.write_all(data)?;
+    let mut hasher = crc32fast::Hasher::new();
+    hasher.update(kind);
+    hasher.update(data);
+    w.write_all(&hasher.finalize().to_be_bytes())?;
+    Ok(())
+}
+
+/// Write a binary PPM (P6) — trivially inspectable fallback format.
+pub fn write_ppm(path: &Path, width: usize, height: usize, rgb: &[u8]) -> std::io::Result<()> {
+    assert_eq!(rgb.len(), width * height * 3);
+    let mut file = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write!(file, "P6\n{width} {height}\n255\n")?;
+    file.write_all(rgb)
+}
+
+/// Convert an f32 RGB buffer in [0,1] to 8-bit sRGB-ish bytes (plain clamp
+/// + scale; the paper's quality metrics operate in linear space anyway).
+pub fn to_u8_rgb(rgb_f32: &[f32]) -> Vec<u8> {
+    rgb_f32
+        .iter()
+        .map(|&v| (v.clamp(0.0, 1.0) * 255.0 + 0.5) as u8)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn png_has_signature_and_iend() {
+        let dir = std::env::temp_dir().join("lsg_png_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.png");
+        let rgb: Vec<u8> = (0..4 * 3 * 3).map(|i| (i * 7 % 256) as u8).collect();
+        write_png(&p, 4, 3, &rgb).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert_eq!(&bytes[..8], b"\x89PNG\r\n\x1a\n");
+        assert_eq!(&bytes[bytes.len() - 8..bytes.len() - 4], b"IEND");
+    }
+
+    #[test]
+    fn ppm_roundtrip_header() {
+        let dir = std::env::temp_dir().join("lsg_png_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.ppm");
+        let rgb = vec![0u8; 2 * 2 * 3];
+        write_ppm(&p, 2, 2, &rgb).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert!(bytes.starts_with(b"P6\n2 2\n255\n"));
+        assert_eq!(bytes.len(), 11 + 12);
+    }
+
+    #[test]
+    fn to_u8_clamps() {
+        let v = to_u8_rgb(&[-0.5, 0.0, 0.5, 1.0, 2.0]);
+        assert_eq!(v, vec![0, 0, 128, 255, 255]);
+    }
+}

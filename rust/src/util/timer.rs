@@ -1,0 +1,141 @@
+//! Per-stage timing: scoped timers and an accumulating breakdown used by
+//! the pipeline to report preprocessing / sorting / rasterization splits
+//! (paper Fig. 3) and by the bench harness for the speedup tables.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Accumulates wall-clock time per named stage.
+#[derive(Default, Debug, Clone)]
+pub struct StageTimes {
+    totals: BTreeMap<&'static str, Duration>,
+    counts: BTreeMap<&'static str, u64>,
+}
+
+impl StageTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `stage`.
+    pub fn time<T>(&mut self, stage: &'static str, f: impl FnOnce() -> T) -> T {
+        let start = Instant::now();
+        let out = f();
+        self.add(stage, start.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, stage: &'static str, d: Duration) {
+        *self.totals.entry(stage).or_default() += d;
+        *self.counts.entry(stage).or_default() += 1;
+    }
+
+    pub fn merge(&mut self, other: &StageTimes) {
+        for (k, v) in &other.totals {
+            *self.totals.entry(k).or_default() += *v;
+        }
+        for (k, c) in &other.counts {
+            *self.counts.entry(k).or_default() += *c;
+        }
+    }
+
+    pub fn total(&self, stage: &str) -> Duration {
+        self.totals.get(stage).copied().unwrap_or_default()
+    }
+
+    pub fn seconds(&self, stage: &str) -> f64 {
+        self.total(stage).as_secs_f64()
+    }
+
+    pub fn grand_total(&self) -> Duration {
+        self.totals.values().sum()
+    }
+
+    pub fn stages(&self) -> impl Iterator<Item = (&'static str, Duration)> + '_ {
+        self.totals.iter().map(|(k, v)| (*k, *v))
+    }
+
+    /// Render a one-line breakdown like `preprocess 12.1ms (18%) | sort ...`.
+    pub fn breakdown(&self) -> String {
+        let total = self.grand_total().as_secs_f64().max(1e-12);
+        self.totals
+            .iter()
+            .map(|(k, v)| {
+                format!(
+                    "{k} {:.2}ms ({:.0}%)",
+                    v.as_secs_f64() * 1e3,
+                    v.as_secs_f64() / total * 100.0
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(" | ")
+    }
+}
+
+/// Measure the best-of-n wall time of a closure (bench helper).
+pub fn best_of<T>(n: usize, mut f: impl FnMut() -> T) -> (Duration, T) {
+    assert!(n > 0);
+    let mut best = Duration::MAX;
+    let mut out = None;
+    for _ in 0..n {
+        let start = Instant::now();
+        let v = f();
+        let el = start.elapsed();
+        if el < best {
+            best = el;
+        }
+        out = Some(v);
+    }
+    (best, out.unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let mut t = StageTimes::new();
+        t.add("sort", Duration::from_millis(5));
+        t.add("sort", Duration::from_millis(7));
+        t.add("raster", Duration::from_millis(3));
+        assert_eq!(t.total("sort"), Duration::from_millis(12));
+        assert_eq!(t.grand_total(), Duration::from_millis(15));
+    }
+
+    #[test]
+    fn time_returns_value() {
+        let mut t = StageTimes::new();
+        let v = t.time("x", || 42);
+        assert_eq!(v, 42);
+        assert!(t.total("x") > Duration::ZERO);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = StageTimes::new();
+        a.add("s", Duration::from_millis(1));
+        let mut b = StageTimes::new();
+        b.add("s", Duration::from_millis(2));
+        b.add("t", Duration::from_millis(4));
+        a.merge(&b);
+        assert_eq!(a.total("s"), Duration::from_millis(3));
+        assert_eq!(a.total("t"), Duration::from_millis(4));
+    }
+
+    #[test]
+    fn breakdown_contains_stages() {
+        let mut t = StageTimes::new();
+        t.add("preprocess", Duration::from_millis(1));
+        t.add("sort", Duration::from_millis(1));
+        let s = t.breakdown();
+        assert!(s.contains("preprocess") && s.contains("sort"));
+    }
+
+    #[test]
+    fn best_of_returns_min() {
+        let (d, v) = best_of(3, || 7u32);
+        assert_eq!(v, 7);
+        assert!(d < Duration::from_secs(1));
+    }
+}

@@ -1,0 +1,148 @@
+//! Depth Prediction for Early Stopping — **DPES** (paper Sec. IV-B,
+//! Algo. 1 line 10).
+//!
+//! The truncated depth recorded during the reference render (early-stop
+//! depth, or depth of the last traversed Gaussian) is reprojected into the
+//! target view; the per-tile *maximum* over valid reprojected pixels bounds
+//! how deep the target render can possibly need to traverse. Gaussians
+//! beyond that bound are culled before sorting, and the per-tile bound
+//! doubles as the workload estimate the LDU balances (Sec. V-B).
+
+use super::reproject::WarpedFrame;
+use crate::render::framebuffer::INVALID_DEPTH;
+
+/// Safety factor applied to predicted depth bounds: reprojection lands on
+/// discrete pixels, so a small slack avoids over-culling at tile borders.
+pub const DEPTH_SLACK: f32 = 1.05;
+
+/// Per-tile early-stop depth limits from a warped frame. Tiles that will
+/// be re-rendered but have no valid reprojected depth get `INFINITY`
+/// (no culling — typically disocclusions).
+pub fn predict_depth_limits(warped: &WarpedFrame) -> Vec<f32> {
+    let frame = &warped.frame;
+    let (tx, ty) = frame.tile_grid();
+    let mut limits = vec![f32::NEG_INFINITY; tx * ty];
+    let w = frame.width;
+    for t in 0..tx * ty {
+        let (x0, y0, x1, y1) = frame.tile_bounds(t);
+        let mut m = f32::NEG_INFINITY;
+        for y in y0..y1 {
+            for x in x0..x1 {
+                let d = warped.trunc_depth[y * w + x];
+                if d != INVALID_DEPTH && d.is_finite() && d > m {
+                    m = d;
+                }
+            }
+        }
+        limits[t] = if m == f32::NEG_INFINITY {
+            f32::INFINITY
+        } else {
+            m * DEPTH_SLACK
+        };
+    }
+    limits
+}
+
+/// Estimated per-tile workload under depth limits: the number of pairs
+/// whose splat depth passes the tile's bound. Used by the LDU when exact
+/// sorted lists are not yet available.
+pub fn estimate_workloads(per_tile_pairs: &[u32], limits: &[f32], median_depth: f32) -> Vec<u32> {
+    // Cheap model: tiles with a finite limit below the scene median keep
+    // roughly the fraction limit/median of their pairs (depth is roughly
+    // uniform near the camera); unlimited tiles keep everything.
+    per_tile_pairs
+        .iter()
+        .zip(limits)
+        .map(|(&n, &lim)| {
+            if lim.is_finite() && median_depth > 0.0 {
+                let frac = (lim / (2.0 * median_depth)).clamp(0.05, 1.0);
+                ((n as f32) * frac).ceil() as u32
+            } else {
+                n
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::render::framebuffer::Frame;
+
+    fn warped_with_trunc(trunc: Vec<f32>, w: usize, h: usize) -> WarpedFrame {
+        WarpedFrame {
+            frame: Frame::new(w, h),
+            filled_mask: vec![true; w * h],
+            filled: w * h,
+            trunc_depth: trunc,
+        }
+    }
+
+    #[test]
+    fn takes_max_per_tile_with_slack() {
+        let (w, h) = (32, 16); // 2×1 tiles
+        let mut trunc = vec![INVALID_DEPTH; w * h];
+        // Tile 0: depths 2.0 and 5.0 → limit 5.0·slack.
+        trunc[0] = 2.0;
+        trunc[5 * w + 7] = 5.0;
+        // Tile 1: nothing → INFINITY.
+        let warped = warped_with_trunc(trunc, w, h);
+        let limits = predict_depth_limits(&warped);
+        assert_eq!(limits.len(), 2);
+        assert!((limits[0] - 5.0 * DEPTH_SLACK).abs() < 1e-5);
+        assert_eq!(limits[1], f32::INFINITY);
+    }
+
+    #[test]
+    fn ignores_invalid_depths() {
+        let (w, h) = (16, 16);
+        let mut trunc = vec![INVALID_DEPTH; w * h];
+        trunc[3] = f32::NAN; // must not poison the max
+        trunc[4] = 3.0;
+        let warped = warped_with_trunc(trunc, w, h);
+        let limits = predict_depth_limits(&warped);
+        assert!((limits[0] - 3.0 * DEPTH_SLACK).abs() < 1e-5);
+    }
+
+    #[test]
+    fn workload_estimate_scales_with_limit() {
+        let pairs = vec![100, 100, 100];
+        let limits = vec![1.0, f32::INFINITY, 10.0];
+        let est = estimate_workloads(&pairs, &limits, 5.0);
+        assert!(est[0] < est[1]);
+        assert_eq!(est[1], 100);
+        assert_eq!(est[2], 100); // limit ≥ 2·median → full
+    }
+
+    #[test]
+    fn end_to_end_culling_reduces_pairs() {
+        // Render a scene, warp identity, predict limits, re-bin with them:
+        // pair count must not grow, and must shrink when early stops fired.
+        use crate::render::{BinOptions, Renderer};
+        use crate::scene::generate;
+        let scene = generate("drjohnson", 0.05, 128, 128);
+        let pose = scene.sample_poses(1)[0];
+        let r = Renderer::new(scene.cloud, scene.intrinsics);
+        let (frame, stats) = r.render(&pose);
+        let warped = super::super::reproject::reproject(
+            &frame,
+            &r.intrinsics,
+            &pose,
+            &pose,
+        );
+        let limits = predict_depth_limits(&warped);
+        let (_, bins) = r.plan(
+            &pose,
+            BinOptions {
+                tile_mask: None,
+                depth_limits: Some(&limits),
+            },
+        );
+        assert!(
+            bins.num_pairs() <= stats.pairs,
+            "depth culling added pairs?! {} > {}",
+            bins.num_pairs(),
+            stats.pairs
+        );
+    }
+}

@@ -1,0 +1,200 @@
+//! Tile inpainting (paper Sec. IV-A): tiles with few missing pixels sit in
+//! regions of smooth depth/color, so holes are filled by distance-weighted
+//! interpolation from the tile's filled pixels (falling back to an
+//! expanding neighborhood search for degenerate cases).
+
+use crate::render::framebuffer::Frame;
+
+/// Fill every unfilled pixel of tile `t` by interpolating the filled ones.
+/// `filled` is the per-pixel fill mask from the warp; inpainted pixels are
+/// marked filled afterwards. When `mask_interpolated` is set (the paper's
+/// no-cumulative-error mask), inpainted pixels keep `valid = false` so they
+/// never seed the next warp; otherwise they become regular valid pixels.
+///
+/// Returns the number of pixels inpainted.
+pub fn inpaint_tile(
+    frame: &mut Frame,
+    filled: &mut [bool],
+    t: usize,
+    mask_interpolated: bool,
+) -> usize {
+    let (x0, y0, x1, y1) = frame.tile_bounds(t);
+    let w = frame.width;
+
+    // Gather filled samples of this tile.
+    let mut samples: Vec<(f32, f32, [f32; 3], f32)> = Vec::new(); // x, y, rgb, depth
+    for y in y0..y1 {
+        for x in x0..x1 {
+            if filled[y * w + x] {
+                samples.push((
+                    x as f32,
+                    y as f32,
+                    frame.rgb_at(x, y),
+                    frame.depth[y * w + x],
+                ));
+            }
+        }
+    }
+
+    let mut holes: Vec<(usize, usize)> = Vec::new();
+    for y in y0..y1 {
+        for x in x0..x1 {
+            if !filled[y * w + x] {
+                holes.push((x, y));
+            }
+        }
+    }
+    if holes.is_empty() {
+        return 0;
+    }
+
+    for &(hx, hy) in &holes {
+        let (rgb, depth) = if samples.is_empty() {
+            // Degenerate: empty tile — borrow from the nearest filled pixel
+            // anywhere in the frame via an expanding ring search.
+            nearest_filled(frame, filled, hx, hy)
+                .map(|(sx, sy)| {
+                    (
+                        frame.rgb_at(sx, sy),
+                        frame.depth[sy * w + sx],
+                    )
+                })
+                .unwrap_or(([0.0, 0.0, 0.0], f32::INFINITY))
+        } else {
+            // Inverse-distance-squared interpolation over tile samples.
+            let mut acc = [0.0f32; 3];
+            let mut dacc = 0.0f32;
+            let mut wsum = 0.0f32;
+            for &(sx, sy, c, d) in &samples {
+                let dx = sx - hx as f32;
+                let dy = sy - hy as f32;
+                let wgt = 1.0 / (dx * dx + dy * dy + 1e-3);
+                acc[0] += c[0] * wgt;
+                acc[1] += c[1] * wgt;
+                acc[2] += c[2] * wgt;
+                if d.is_finite() {
+                    dacc += d * wgt;
+                }
+                wsum += wgt;
+            }
+            (
+                [acc[0] / wsum, acc[1] / wsum, acc[2] / wsum],
+                if dacc > 0.0 { dacc / wsum } else { f32::INFINITY },
+            )
+        };
+        let i = hy * w + hx;
+        frame.set_rgb(hx, hy, rgb);
+        frame.depth[i] = depth;
+        frame.alpha[i] = 0.9; // plausible content, distinguishes from bg
+        // The no-cumulative-error mask: interpolated pixels are "blank"
+        // for future warps (Sec. IV-A) but displayable now.
+        frame.valid[i] = !mask_interpolated;
+        filled[i] = true;
+    }
+    holes.len()
+}
+
+/// Expanding square-ring search for the nearest filled pixel.
+fn nearest_filled(
+    frame: &Frame,
+    filled: &[bool],
+    cx: usize,
+    cy: usize,
+) -> Option<(usize, usize)> {
+    let w = frame.width as i64;
+    let h = frame.height as i64;
+    let (cx, cy) = (cx as i64, cy as i64);
+    for r in 1..w.max(h) {
+        for dy in -r..=r {
+            for dx in -r..=r {
+                if dx.abs() != r && dy.abs() != r {
+                    continue; // ring only
+                }
+                let x = cx + dx;
+                let y = cy + dy;
+                if x >= 0 && y >= 0 && x < w && y < h && filled[(y * w + x) as usize] {
+                    return Some((x as usize, y as usize));
+                }
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gradient_frame() -> (Frame, Vec<bool>) {
+        let mut f = Frame::new(32, 32);
+        let mut filled = vec![false; 32 * 32];
+        for y in 0..32 {
+            for x in 0..32 {
+                let i = f.idx(x, y);
+                f.set_rgb(x, y, [x as f32 / 32.0, y as f32 / 32.0, 0.5]);
+                f.depth[i] = 2.0 + x as f32 * 0.01;
+                f.alpha[i] = 1.0;
+                f.valid[i] = true;
+                filled[i] = true;
+            }
+        }
+        (f, filled)
+    }
+
+    #[test]
+    fn interpolates_smooth_gradient_accurately() {
+        let (mut f, mut filled) = gradient_frame();
+        // Punch a few holes in tile 0.
+        for &(x, y) in &[(5usize, 5usize), (8, 3), (12, 12)] {
+            let i = f.idx(x, y);
+            filled[i] = false;
+            f.set_rgb(x, y, [0.0, 0.0, 0.0]);
+            f.valid[i] = false;
+        }
+        let n = inpaint_tile(&mut f, &mut filled, 0, false);
+        assert_eq!(n, 3);
+        let c = f.rgb_at(5, 5);
+        assert!((c[0] - 5.0 / 32.0).abs() < 0.12, "{c:?}");
+        assert!((c[1] - 5.0 / 32.0).abs() < 0.12, "{c:?}");
+        assert!(f.valid[f.idx(5, 5)]);
+        assert!(filled[f.idx(5, 5)]);
+        // Depth interpolated to something nearby.
+        assert!((f.depth[f.idx(5, 5)] - 2.05).abs() < 0.1);
+    }
+
+    #[test]
+    fn mask_keeps_inpainted_pixels_invalid() {
+        let (mut f, mut filled) = gradient_frame();
+        let i = f.idx(4, 4);
+        filled[i] = false;
+        f.valid[i] = false;
+        inpaint_tile(&mut f, &mut filled, 0, true);
+        assert!(!f.valid[i], "masked inpainted pixel must stay non-valid");
+        assert!(filled[i], "but it is filled for display");
+        assert!(f.alpha[i] > 0.5);
+    }
+
+    #[test]
+    fn full_tile_is_noop() {
+        let (mut f, mut filled) = gradient_frame();
+        let before = f.rgb.clone();
+        assert_eq!(inpaint_tile(&mut f, &mut filled, 0, false), 0);
+        assert_eq!(f.rgb, before);
+    }
+
+    #[test]
+    fn empty_tile_borrows_from_neighbors() {
+        let (mut f, mut filled) = gradient_frame();
+        // Empty the whole tile 0 (16×16 top-left).
+        for y in 0..16 {
+            for x in 0..16 {
+                filled[f.idx(x, y)] = false;
+            }
+        }
+        let n = inpaint_tile(&mut f, &mut filled, 0, false);
+        assert_eq!(n, 256);
+        // Color should come from just outside the tile (x or y = 16).
+        let c = f.rgb_at(15, 15);
+        assert!(c[0] > 0.3 && c[0] < 0.7, "{c:?}");
+    }
+}

@@ -1,0 +1,231 @@
+//! Tile-Warping-based Sparse Rendering — **TWSR** (paper Sec. IV-A,
+//! Algo. 1 lines 5–13).
+//!
+//! After reprojection, each 16×16 tile is classified by its count of
+//! missing pixels:
+//!
+//! * ≤ N₀ (default 1/6 of the tile) missing → **interpolate** the holes and
+//!   skip preprocessing, sorting and rasterization for the tile entirely;
+//! * otherwise → **re-render** the whole tile for fidelity.
+//!
+//! With [`TileWarpPolicy::mask_interpolated`] set, interpolated pixels are
+//! excluded from seeding the next warp (the paper's no-cumulative-error
+//! mask) — quality then *improves* with longer warp windows because masked
+//! regions keep getting re-rendered.
+
+use super::inpaint::inpaint_tile;
+use super::reproject::WarpedFrame;
+use crate::render::framebuffer::Frame;
+use crate::RERENDER_MISSING_FRACTION;
+
+/// Per-tile decision of the TWSR classifier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TileDecision {
+    /// Tile fully satisfied by warped pixels (no holes).
+    Complete,
+    /// Few holes: interpolated, all stages skipped.
+    Interpolated,
+    /// Too many holes: full tile re-render.
+    Rerender,
+}
+
+/// TWSR policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct TileWarpPolicy {
+    /// Maximum fraction of missing pixels for interpolation (N₀/256).
+    pub missing_threshold: f32,
+    /// Exclude interpolated pixels from the next warp (the paper's mask).
+    pub mask_interpolated: bool,
+}
+
+impl Default for TileWarpPolicy {
+    fn default() -> Self {
+        TileWarpPolicy {
+            missing_threshold: RERENDER_MISSING_FRACTION,
+            mask_interpolated: true,
+        }
+    }
+}
+
+/// Outcome of applying TWSR to a warped frame.
+#[derive(Clone, Debug)]
+pub struct TileWarpOutcome {
+    /// Per-tile decision.
+    pub decisions: Vec<TileDecision>,
+    /// Re-render mask consumed by [`crate::render::Renderer::render_sparse`].
+    pub rerender_mask: Vec<bool>,
+    /// Pixels filled by interpolation.
+    pub inpainted_pixels: usize,
+}
+
+impl TileWarpOutcome {
+    pub fn num_rerender(&self) -> usize {
+        self.rerender_mask.iter().filter(|&&m| m).count()
+    }
+
+    pub fn num_interpolated(&self) -> usize {
+        self.decisions
+            .iter()
+            .filter(|d| **d == TileDecision::Interpolated)
+            .count()
+    }
+
+    /// Fraction of tiles that skip the whole pipeline.
+    pub fn skip_fraction(&self) -> f32 {
+        1.0 - self.num_rerender() as f32 / self.decisions.len().max(1) as f32
+    }
+}
+
+/// Classify all tiles of a warped frame, interpolating the nearly-complete
+/// ones in place. The caller then runs `render_sparse` with
+/// `outcome.rerender_mask` (plus DPES depth limits) to fill the rest.
+pub fn tile_warp(warped: &mut WarpedFrame, policy: &TileWarpPolicy) -> TileWarpOutcome {
+    let frame: &mut Frame = &mut warped.frame;
+    let (tx, ty) = frame.tile_grid();
+    let num_tiles = tx * ty;
+    let mut decisions = vec![TileDecision::Complete; num_tiles];
+    let mut rerender_mask = vec![false; num_tiles];
+    let mut inpainted = 0usize;
+
+    for t in 0..num_tiles {
+        let (x0, y0, x1, y1) = frame.tile_bounds(t);
+        let total = (x1 - x0) * (y1 - y0);
+        let mut missing = 0usize;
+        for y in y0..y1 {
+            for x in x0..x1 {
+                if !warped.filled_mask[y * frame.width + x] {
+                    missing += 1;
+                }
+            }
+        }
+        if missing == 0 {
+            decisions[t] = TileDecision::Complete;
+        } else if (missing as f32) <= policy.missing_threshold * total as f32 {
+            inpainted += inpaint_tile(frame, &mut warped.filled_mask, t, policy.mask_interpolated);
+            decisions[t] = TileDecision::Interpolated;
+        } else {
+            decisions[t] = TileDecision::Rerender;
+            rerender_mask[t] = true;
+        }
+    }
+
+    TileWarpOutcome {
+        decisions,
+        rerender_mask,
+        inpainted_pixels: inpainted,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::render::framebuffer::INVALID_DEPTH;
+
+    /// WarpedFrame with a given per-tile number of holes.
+    fn warped_with_holes(holes_per_tile: &[usize]) -> WarpedFrame {
+        let (tx, ty) = (4usize, 3usize);
+        let w = tx * 16;
+        let h = ty * 16;
+        let mut frame = Frame::new(w, h);
+        let mut filled = vec![true; w * h];
+        for (t, &holes) in holes_per_tile.iter().enumerate() {
+            let (x0, y0, x1, y1) = frame.tile_bounds(t);
+            let mut placed = 0;
+            'place: for y in y0..y1 {
+                for x in x0..x1 {
+                    let i = y * w + x;
+                    if placed < holes {
+                        filled[i] = false;
+                        placed += 1;
+                    } else {
+                        frame.set_rgb(x, y, [0.4, 0.5, 0.6]);
+                        frame.depth[i] = 3.0;
+                        frame.alpha[i] = 1.0;
+                        frame.valid[i] = true;
+                    }
+                    if placed >= holes && x == x1 - 1 && y == y1 - 1 {
+                        break 'place;
+                    }
+                }
+            }
+        }
+        WarpedFrame {
+            frame,
+            trunc_depth: vec![INVALID_DEPTH; w * h],
+            filled: filled.iter().filter(|&&f| f).count(),
+            filled_mask: filled,
+        }
+    }
+
+    #[test]
+    fn classification_matches_threshold() {
+        // 256-pixel tiles; N0 = 256/6 ≈ 42.7.
+        let mut warped = warped_with_holes(&[0, 10, 42, 43, 100, 256, 0, 0, 0, 0, 0, 0]);
+        let out = tile_warp(&mut warped, &TileWarpPolicy::default());
+        assert_eq!(out.decisions[0], TileDecision::Complete);
+        assert_eq!(out.decisions[1], TileDecision::Interpolated);
+        assert_eq!(out.decisions[2], TileDecision::Interpolated);
+        assert_eq!(out.decisions[3], TileDecision::Rerender);
+        assert_eq!(out.decisions[4], TileDecision::Rerender);
+        assert_eq!(out.decisions[5], TileDecision::Rerender);
+        assert_eq!(out.num_rerender(), 3);
+        assert_eq!(out.inpainted_pixels, 10 + 42);
+    }
+
+    #[test]
+    fn interpolated_tiles_are_fully_filled() {
+        let mut warped = warped_with_holes(&[20, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0]);
+        tile_warp(&mut warped, &TileWarpPolicy::default());
+        assert!(warped.filled_mask.iter().all(|&f| f) || warped.filled_mask[0..256].iter().all(|&f| f));
+        // Tile 0 pixels must be filled now.
+        let (x0, y0, x1, y1) = warped.frame.tile_bounds(0);
+        for y in y0..y1 {
+            for x in x0..x1 {
+                assert!(warped.filled_mask[y * warped.frame.width + x]);
+            }
+        }
+    }
+
+    #[test]
+    fn mask_policy_controls_validity_of_inpainted() {
+        for mask in [true, false] {
+            let mut warped = warped_with_holes(&[20, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0]);
+            // Identify a hole before warping.
+            let hole = warped.filled_mask.iter().position(|&f| !f).unwrap();
+            let out = tile_warp(
+                &mut warped,
+                &TileWarpPolicy {
+                    missing_threshold: RERENDER_MISSING_FRACTION,
+                    mask_interpolated: mask,
+                },
+            );
+            assert_eq!(out.num_interpolated(), 1);
+            assert_eq!(
+                warped.frame.valid[hole],
+                !mask,
+                "mask={mask}: inpainted validity wrong"
+            );
+        }
+    }
+
+    #[test]
+    fn skip_fraction_counts_non_rerendered() {
+        let mut warped = warped_with_holes(&[0, 0, 0, 0, 0, 0, 100, 100, 100, 0, 0, 0]);
+        let out = tile_warp(&mut warped, &TileWarpPolicy::default());
+        assert_eq!(out.num_rerender(), 3);
+        assert!((out.skip_fraction() - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn custom_threshold_respected() {
+        let mut warped = warped_with_holes(&[5, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0]);
+        let out = tile_warp(
+            &mut warped,
+            &TileWarpPolicy {
+                missing_threshold: 0.01, // 2.56 px — 5 holes exceeds it
+                mask_interpolated: true,
+            },
+        );
+        assert_eq!(out.decisions[0], TileDecision::Rerender);
+    }
+}

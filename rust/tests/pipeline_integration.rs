@@ -1,0 +1,292 @@
+//! Cross-module integration tests: full pipeline behaviours that no single
+//! module's unit tests can see — warp→classify→sparse-render chains,
+//! coordinator↔simulator coupling, scene IO round trips through the
+//! renderer, and failure injection at the subsystem boundaries.
+
+use ls_gaussian::coordinator::{
+    assign_balanced, order_light_to_heavy, CoordinatorConfig, FrameKind, StreamingCoordinator,
+    WarpMode,
+};
+use ls_gaussian::metrics::{psnr, ssim};
+use ls_gaussian::render::{BinOptions, Frame, IntersectMode, RenderConfig, Renderer};
+use ls_gaussian::scene::{generate, io, Pose};
+use ls_gaussian::sim::{AccelConfig, AccelVariant, Accelerator, GpuModel, WorkloadTrace};
+use ls_gaussian::warp::{predict_depth_limits, reproject, tile_warp, TileWarpPolicy};
+
+fn small(name: &str) -> (ls_gaussian::scene::Scene, Vec<Pose>) {
+    let scene = generate(name, 0.06, 160, 128);
+    let poses = scene.sample_poses(12);
+    (scene, poses)
+}
+
+#[test]
+fn manual_warp_chain_equals_coordinator() {
+    // Driving the warp primitives by hand must produce the same frames as
+    // the coordinator (the coordinator adds no hidden magic).
+    let (scene, poses) = small("room");
+    let renderer = Renderer::new(scene.cloud.clone(), scene.intrinsics).with_config(RenderConfig {
+        mode: IntersectMode::Tait,
+        ..Default::default()
+    });
+    let mut coord = StreamingCoordinator::new(
+        Renderer::new(scene.cloud.clone(), scene.intrinsics).with_config(renderer.config),
+        CoordinatorConfig::default(),
+    );
+    let c0 = coord.process(&poses[0]);
+    let c1 = coord.process(&poses[1]);
+
+    // Manual: dense frame 0, then warp→classify→DPES→sparse.
+    let (f0, _) = renderer.render(&poses[0]);
+    assert_eq!(f0.rgb, c0.frame.rgb);
+    let mut warped = reproject(&f0, &scene.intrinsics, &poses[0], &poses[1]);
+    let limits = predict_depth_limits(&warped);
+    let outcome = tile_warp(&mut warped, &TileWarpPolicy::default());
+    let mut f1 = warped.frame;
+    f1.trunc_depth.copy_from_slice(&warped.trunc_depth);
+    renderer.render_sparse(&poses[1], &mut f1, &outcome.rerender_mask, Some(&limits));
+    assert_eq!(f1.rgb, c1.frame.rgb, "manual chain diverged from coordinator");
+}
+
+#[test]
+fn quality_holds_over_long_sequence() {
+    // 12 frames with window 5: every frame stays close to dense reference.
+    let (scene, poses) = small("playroom");
+    let dense = Renderer::new(scene.cloud.clone(), scene.intrinsics).with_config(RenderConfig {
+        mode: IntersectMode::Tait,
+        ..Default::default()
+    });
+    let mut coord = StreamingCoordinator::new(
+        Renderer::new(scene.cloud.clone(), scene.intrinsics),
+        CoordinatorConfig::default(),
+    );
+    for (i, pose) in poses.iter().enumerate() {
+        let out = coord.process(pose);
+        let (ref_frame, _) = dense.render(pose);
+        let p = psnr(&out.frame.rgb, &ref_frame.rgb);
+        let s = ssim(
+            &out.frame.rgb,
+            &ref_frame.rgb,
+            scene.intrinsics.width,
+            scene.intrinsics.height,
+        );
+        assert!(p > 24.0, "frame {i}: psnr {p:.1}");
+        assert!(s > 0.80, "frame {i}: ssim {s:.3}");
+    }
+}
+
+#[test]
+fn mask_beats_no_mask_on_long_chains() {
+    // The paper's Fig. 7 claim: the no-cumulative-error mask prevents
+    // quality decay over long warp chains.
+    let (scene, poses) = small("chair");
+    let dense = Renderer::new(scene.cloud.clone(), scene.intrinsics).with_config(RenderConfig {
+        mode: IntersectMode::Tait,
+        ..Default::default()
+    });
+    let run = |mask: bool| -> f64 {
+        let mut coord = StreamingCoordinator::new(
+            Renderer::new(scene.cloud.clone(), scene.intrinsics),
+            CoordinatorConfig {
+                window: 12, // one long chain
+                policy: TileWarpPolicy {
+                    mask_interpolated: mask,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        let mut last = 0.0;
+        for pose in &poses {
+            let out = coord.process(pose);
+            let (ref_frame, _) = dense.render(pose);
+            last = psnr(&out.frame.rgb, &ref_frame.rgb);
+        }
+        last // quality at the END of the chain
+    };
+    let with_mask = run(true);
+    let without = run(false);
+    assert!(
+        with_mask >= without - 0.3,
+        "mask should not lose to no-mask at chain end: {with_mask:.1} vs {without:.1}"
+    );
+}
+
+#[test]
+fn scene_io_roundtrip_renders_identically() {
+    let (scene, poses) = small("truck");
+    let path = std::env::temp_dir().join("lsg_integration_truck.lsg");
+    io::save_cloud(&path, &scene.cloud).unwrap();
+    let loaded = io::load_cloud(&path).unwrap();
+    let r1 = Renderer::new(scene.cloud.clone(), scene.intrinsics);
+    let r2 = Renderer::new(loaded, scene.intrinsics);
+    let (f1, _) = r1.render(&poses[0]);
+    let (f2, _) = r2.render(&poses[0]);
+    assert_eq!(f1.rgb, f2.rgb);
+}
+
+#[test]
+fn coordinator_traces_drive_simulator_consistently() {
+    // Trace totals seen by the simulator must equal renderer stats, and
+    // LS-Gaussian must beat the original architecture on its own traces.
+    let (scene, poses) = small("garden");
+    let intr = scene.intrinsics;
+    let mut coord = StreamingCoordinator::new(
+        Renderer::new(scene.cloud, intr),
+        CoordinatorConfig::default(),
+    );
+    let results = coord.run_sequence(&poses);
+    let traces: Vec<WorkloadTrace> = results
+        .iter()
+        .map(|r| WorkloadTrace::from_frame(&r.trace, &intr))
+        .collect();
+    for (r, t) in results.iter().zip(&traces) {
+        assert_eq!(t.total_pairs() as usize, r.trace.render.pairs);
+    }
+    let orig = Accelerator::new(AccelConfig::default(), AccelVariant::ORIGINAL);
+    let full = Accelerator::new(AccelConfig::default(), AccelVariant::FULL);
+    assert!(full.sequence_period(&traces) < orig.sequence_period(&traces));
+    assert!(full.sequence_utilization(&traces) > orig.sequence_utilization(&traces));
+}
+
+#[test]
+fn gpu_model_monotone_in_workload() {
+    // More Gaussians ⇒ more modeled time (sanity of the whole chain).
+    let gpu = GpuModel::default();
+    // Heavy-tailed cluster sampling means nearby scales can reorder; the
+    // invariant is monotonicity across a decisive scale gap.
+    let mut times = Vec::new();
+    for scale in [0.02f32, 0.1, 0.5] {
+        let scene = generate("train", scale, 160, 128);
+        let pose = scene.sample_poses(1)[0];
+        let intr = scene.intrinsics;
+        let mut c = StreamingCoordinator::new(
+            Renderer::new(scene.cloud, intr),
+            CoordinatorConfig {
+                warp: WarpMode::None,
+                mode: IntersectMode::Aabb,
+                ..Default::default()
+            },
+        );
+        let r = c.process(&pose);
+        times.push(gpu.frame_time(&WorkloadTrace::from_frame(&r.trace, &intr)).total());
+    }
+    assert!(times[0] < times[1] && times[1] < times[2], "{times:?}");
+}
+
+#[test]
+fn empty_scene_does_not_crash_pipeline() {
+    // Failure injection: a cloud with zero visible Gaussians.
+    let mut scene = generate("room", 0.02, 96, 96);
+    // Move everything far behind the far plane.
+    for p in scene.cloud.positions.iter_mut().skip(2).step_by(3) {
+        *p = 1e7;
+    }
+    let mut coord = StreamingCoordinator::new(
+        Renderer::new(scene.cloud.clone(), scene.intrinsics),
+        CoordinatorConfig::default(),
+    );
+    for pose in scene.trajectory.sample(3, 90.0, 1.8, 1.0) {
+        let out = coord.process(&pose);
+        assert!(out.frame.rgb.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn all_invalid_reference_frame_forces_full_rerender() {
+    // Failure injection: a reference frame with zero usable pixels (e.g.
+    // tracking loss) must degrade to a full re-render, not warp garbage.
+    let (scene, poses) = small("drjohnson");
+    let renderer = Renderer::new(scene.cloud.clone(), scene.intrinsics);
+    let mut dead = Frame::new(scene.intrinsics.width, scene.intrinsics.height);
+    for a in dead.alpha.iter_mut() {
+        *a = 0.9; // not background, not valid: masked-like
+    }
+    let mut warped = reproject(&dead, &scene.intrinsics, &poses[0], &poses[1]);
+    assert_eq!(warped.filled, 0, "nothing should be warpable");
+    let outcome = tile_warp(&mut warped, &TileWarpPolicy::default());
+    assert_eq!(
+        outcome.num_rerender(),
+        scene.intrinsics.num_tiles(),
+        "all tiles must re-render"
+    );
+    let mut frame = warped.frame;
+    renderer.render_sparse(&poses[1], &mut frame, &outcome.rerender_mask, None);
+    let (dense, _) = renderer.render(&poses[1]);
+    assert_eq!(frame.rgb, dense.rgb);
+}
+
+#[test]
+fn ldu_assignment_respects_morton_grouping_end_to_end() {
+    let (scene, poses) = small("garden");
+    let renderer = Renderer::new(scene.cloud, scene.intrinsics);
+    let (_, stats) = renderer.render(&poses[0]);
+    let grid = scene.intrinsics.tile_grid();
+    let asg = assign_balanced(&stats.per_tile_traversed, grid, 8);
+    assert!(asg.is_partition(grid.0 * grid.1));
+    assert!(asg.imbalance() < 1.8, "imbalance {:.2}", asg.imbalance());
+    let ordered = order_light_to_heavy(asg, &stats.per_tile_traversed);
+    for blk in &ordered.blocks {
+        for w in blk.windows(2) {
+            assert!(
+                stats.per_tile_traversed[w[0] as usize] <= stats.per_tile_traversed[w[1] as usize]
+            );
+        }
+    }
+}
+
+#[test]
+fn window_one_equals_dense_rendering() {
+    // window=1 means every frame is a key frame: output must be identical
+    // to plain dense rendering.
+    let (scene, poses) = small("room");
+    let dense = Renderer::new(scene.cloud.clone(), scene.intrinsics).with_config(RenderConfig {
+        mode: IntersectMode::Tait,
+        ..Default::default()
+    });
+    let mut coord = StreamingCoordinator::new(
+        Renderer::new(scene.cloud.clone(), scene.intrinsics),
+        CoordinatorConfig {
+            window: 1,
+            ..Default::default()
+        },
+    );
+    for pose in poses.iter().take(3) {
+        let out = coord.process(pose);
+        assert_eq!(out.trace.kind, FrameKind::Full);
+        let (f, _) = dense.render(pose);
+        assert_eq!(out.frame.rgb, f.rgb);
+    }
+}
+
+#[test]
+fn bin_options_interactions() {
+    // tile_mask ∧ depth_limits compose monotonically.
+    let (scene, poses) = small("train");
+    let renderer = Renderer::new(scene.cloud, scene.intrinsics);
+    let grid = scene.intrinsics.tile_grid();
+    let n = grid.0 * grid.1;
+    let mask: Vec<bool> = (0..n).map(|t| t % 3 != 0).collect();
+    let limits = vec![scene.preset.extent * 0.8; n];
+    let dense = renderer.plan(&poses[0], BinOptions::default()).1.num_pairs();
+    let masked = renderer
+        .plan(
+            &poses[0],
+            BinOptions {
+                tile_mask: Some(&mask),
+                depth_limits: None,
+            },
+        )
+        .1
+        .num_pairs();
+    let both = renderer
+        .plan(
+            &poses[0],
+            BinOptions {
+                tile_mask: Some(&mask),
+                depth_limits: Some(&limits),
+            },
+        )
+        .1
+        .num_pairs();
+    assert!(both <= masked && masked <= dense, "{both} {masked} {dense}");
+}

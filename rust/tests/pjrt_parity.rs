@@ -1,0 +1,102 @@
+//! Integration: the PJRT backend (AOT-lowered Pallas kernel executed via
+//! the `xla` crate) must numerically agree with the native rust
+//! rasterizer. This closes the three-layer loop: L1 kernel == jnp oracle
+//! (pytest) and L1-via-PJRT == native rust (here) ⇒ all backends agree.
+//!
+//! Requires `make artifacts`; tests self-skip (with a loud message) when
+//! artifacts are absent so `cargo test` stays runnable pre-build.
+
+use ls_gaussian::metrics::psnr;
+use ls_gaussian::render::{IntersectMode, RenderConfig, Renderer};
+use ls_gaussian::runtime::{ArtifactManifest, PjrtRenderer};
+use ls_gaussian::scene::generate;
+
+fn artifacts_present() -> bool {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if ArtifactManifest::load(&dir).is_ok() {
+        std::env::set_var("LSG_ARTIFACTS", &dir);
+        true
+    } else {
+        eprintln!("SKIP: artifacts missing — run `make artifacts` first");
+        false
+    }
+}
+
+#[test]
+fn pjrt_matches_native_rasterizer() {
+    if !artifacts_present() {
+        return;
+    }
+    let scene = generate("chair", 0.02, 128, 96);
+    let pose = scene.sample_poses(1)[0];
+    let native = Renderer::new(scene.cloud, scene.intrinsics).with_config(RenderConfig {
+        mode: IntersectMode::Tait,
+        ..Default::default()
+    });
+    let (nf, ns) = native.render(&pose);
+    let pjrt = PjrtRenderer::new(native).expect("pjrt engine");
+    let (pf, ps, fallback) = pjrt.render(&pose).expect("pjrt render");
+
+    assert_eq!(ns.pairs, ps.pairs, "planning paths diverged");
+    eprintln!("fallback tiles: {fallback}");
+
+    // Color agreement: tight PSNR (float-assoc differences only).
+    let p = psnr(&nf.rgb, &pf.rgb);
+    assert!(p > 45.0, "PJRT vs native color diverged: {p:.1} dB");
+
+    // Alpha + validity agreement.
+    let mut max_da = 0.0f32;
+    for i in 0..nf.alpha.len() {
+        max_da = max_da.max((nf.alpha[i] - pf.alpha[i]).abs());
+    }
+    assert!(max_da < 1e-3, "alpha diverged: {max_da}");
+    let valid_mismatch = nf
+        .valid
+        .iter()
+        .zip(&pf.valid)
+        .filter(|(a, b)| a != b)
+        .count();
+    assert!(
+        valid_mismatch < nf.valid.len() / 200,
+        "{valid_mismatch} validity mismatches"
+    );
+
+    // Depth agreement where both are finite.
+    let mut checked = 0;
+    for i in 0..nf.depth.len() {
+        if nf.depth[i].is_finite() && pf.depth[i].is_finite() {
+            let rel = (nf.depth[i] - pf.depth[i]).abs() / nf.depth[i].max(1.0);
+            assert!(rel < 1e-3, "depth diverged at {i}: {} vs {}", nf.depth[i], pf.depth[i]);
+            checked += 1;
+        }
+    }
+    assert!(checked > 100, "too few finite-depth pixels compared");
+}
+
+#[test]
+fn pjrt_handles_multiple_poses() {
+    if !artifacts_present() {
+        return;
+    }
+    let scene = generate("room", 0.015, 128, 96);
+    let poses = scene.sample_poses(3);
+    let native = Renderer::new(scene.cloud, scene.intrinsics);
+    let pjrt = PjrtRenderer::new(native).expect("pjrt engine");
+    for pose in &poses {
+        let (frame, stats, _) = pjrt.render(pose).expect("render");
+        assert!(stats.n_splats > 50);
+        let lit = frame.rgb.iter().filter(|&&v| v > 0.05).count();
+        assert!(lit > 100, "frame mostly empty: {lit}");
+    }
+}
+
+#[test]
+fn engine_reports_platform() {
+    if !artifacts_present() {
+        return;
+    }
+    let engine = ls_gaussian::runtime::PjrtEngine::new(None).expect("engine");
+    let platform = engine.platform();
+    assert!(!platform.is_empty());
+    eprintln!("PJRT platform: {platform}");
+}
