@@ -34,6 +34,7 @@ fn main() {
         None => {
             let mut v: Vec<String> = ALL_EXPERIMENTS.iter().map(|s| s.to_string()).collect();
             v.push("tab1".to_string());
+            v.push("streaming".to_string());
             v
         }
     };
@@ -52,6 +53,13 @@ fn main() {
         match run_experiment(id, &opts) {
             Some(json) => {
                 println!("[{id}] completed in {:.1}s", t0.elapsed().as_secs_f64());
+                if id == "streaming" {
+                    // Machine-readable steady-state record: the repo's
+                    // streaming perf trajectory across PRs.
+                    std::fs::write("BENCH_streaming.json", json.to_string_pretty())
+                        .expect("writing BENCH_streaming.json");
+                    println!("wrote BENCH_streaming.json");
+                }
                 report.set(id, json);
             }
             None => {

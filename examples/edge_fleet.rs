@@ -1,19 +1,18 @@
 //! Multi-camera edge deployment: the paper motivates LS-Gaussian with
 //! embodied agents that render the same scene continuously from moving
-//! viewpoints. This example runs several independent camera streams
-//! (e.g. a robot's surround rig) over one shared scene, each with its own
-//! streaming coordinator, scheduled on a bounded worker pool — the shape
-//! of a real edge deployment where compute is the scarce resource.
+//! viewpoints. This example serves several camera streams (e.g. a robot's
+//! surround rig) through one [`StreamServer`]: one immutable shared scene,
+//! one persistent worker pool, N concurrent `StreamSession`s — the shape
+//! of a real edge deployment where compute is the scarce resource and the
+//! scene must never be duplicated per viewer.
 //!
 //!     cargo run --release --example edge_fleet -- --cameras 4 --frames 24
 
-use ls_gaussian::coordinator::{CoordinatorConfig, StreamingCoordinator};
-use ls_gaussian::render::{IntersectMode, RenderConfig, Renderer};
-use ls_gaussian::scene::generate;
+use ls_gaussian::coordinator::{CoordinatorConfig, StreamServer};
+use ls_gaussian::render::IntersectMode;
+use ls_gaussian::scene::{generate, Pose, SceneAssets};
 use ls_gaussian::sim::{GpuModel, WorkloadTrace};
 use ls_gaussian::util::cli::Args;
-use ls_gaussian::util::pool::WorkerPool;
-use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 fn main() {
@@ -22,65 +21,60 @@ fn main() {
     let frames = args.usize_or("frames", 24);
     let scale = args.f32_or("scale", 0.15);
 
-    let scene = Arc::new(generate("garden", scale, 256, 160));
+    let scene = generate("garden", scale, 256, 160);
     println!(
-        "edge fleet: {cameras} cameras x {frames} frames over '{}' ({} gaussians)",
+        "edge fleet: {cameras} cameras x {frames} frames over '{}' ({} gaussians, shared once)",
         scene.preset.name,
         scene.cloud.len()
     );
 
-    // Each camera gets a phase-shifted trajectory (a surround rig).
-    let pool = WorkerPool::new(cameras.min(ls_gaussian::util::pool::default_threads()));
-    let results: Arc<Mutex<Vec<(usize, f64, f64, Vec<WorkloadTrace>)>>> =
-        Arc::new(Mutex::new(Vec::new()));
-    let t0 = Instant::now();
-    for cam in 0..cameras {
-        let scene = Arc::clone(&scene);
-        let results = Arc::clone(&results);
-        pool.submit(move || {
-            let all_poses = scene.sample_poses(frames * cameras);
-            let poses: Vec<_> = all_poses[cam * frames..(cam + 1) * frames].to_vec();
-            let renderer = Renderer::new(scene.cloud.clone(), scene.intrinsics).with_config(
-                RenderConfig {
-                    mode: IntersectMode::Tait,
-                    threads: 1, // one core per stream: fleet-style packing
-                    ..Default::default()
-                },
-            );
-            let mut c = StreamingCoordinator::new(renderer, CoordinatorConfig {
-                threads: 1,
-                ..Default::default()
-            });
-            let t = Instant::now();
-            let frames_out = c.run_sequence(&poses);
-            let dt = t.elapsed().as_secs_f64();
-            let skip = frames_out
-                .iter()
-                .filter_map(|r| r.trace.warp.as_ref().map(|w| w.skip_fraction() as f64))
-                .sum::<f64>()
-                / frames_out.len() as f64;
-            let traces = frames_out
-                .iter()
-                .map(|r| WorkloadTrace::from_frame(&r.trace, &scene.intrinsics))
-                .collect();
-            results.lock().unwrap().push((cam, dt, skip, traces));
-        });
+    // One server: one Arc<SceneAssets>, one pool, N sessions.
+    let assets = SceneAssets::from_scene(&scene);
+    let mut server = StreamServer::new(
+        assets,
+        CoordinatorConfig {
+            mode: IntersectMode::Tait,
+            threads: 1, // one core per stream: fleet-style packing
+            ..Default::default()
+        },
+    );
+    for _ in 0..cameras {
+        server.add_session();
     }
-    pool.wait_idle();
+
+    // Each camera gets a phase-shifted trajectory (a surround rig).
+    let all_poses = scene.sample_poses(frames * cameras);
+    let cam_poses: Vec<&[Pose]> = (0..cameras)
+        .map(|c| &all_poses[c * frames..(c + 1) * frames])
+        .collect();
+
+    let mut traces: Vec<Vec<WorkloadTrace>> = vec![Vec::new(); cameras];
+    let mut skip = vec![0.0f64; cameras];
+    let t0 = Instant::now();
+    for f in 0..frames {
+        let step_poses: Vec<Pose> = (0..cameras).map(|c| cam_poses[c][f]).collect();
+        let results = server.step_all(&step_poses);
+        for (c, r) in results.iter().enumerate() {
+            skip[c] += r
+                .trace
+                .warp
+                .as_ref()
+                .map(|w| w.skip_fraction() as f64)
+                .unwrap_or(0.0)
+                / frames as f64;
+            traces[c].push(WorkloadTrace::from_frame(&r.trace, &scene.intrinsics));
+        }
+    }
     let wall = t0.elapsed().as_secs_f64();
 
     let gpu = GpuModel::default();
-    let mut rows = results.lock().unwrap();
-    rows.sort_by_key(|r| r.0);
     let mut total_modeled = 0.0;
-    for (cam, dt, skip, traces) in rows.iter() {
-        let fps_model = gpu.fps(gpu.sequence_time(traces));
+    for c in 0..cameras {
+        let fps_model = gpu.fps(gpu.sequence_time(&traces[c]));
         total_modeled += fps_model;
         println!(
-            "cam {cam}: {:5.1} FPS wall | modeled edge-GPU {:6.1} FPS | tile-skip {:4.0}%",
-            frames as f64 / dt,
-            fps_model,
-            skip * 100.0
+            "cam {c}: modeled edge-GPU {fps_model:6.1} FPS | mean tile-skip {:4.0}%",
+            skip[c] * 100.0
         );
     }
     println!(

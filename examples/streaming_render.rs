@@ -14,6 +14,7 @@
 use ls_gaussian::coordinator::{CoordinatorConfig, FrameKind, StreamingCoordinator};
 use ls_gaussian::metrics::psnr;
 use ls_gaussian::render::{IntersectMode, RenderConfig, Renderer};
+#[cfg(feature = "pjrt")]
 use ls_gaussian::runtime::PjrtEngine;
 use ls_gaussian::scene::generate;
 use ls_gaussian::sim::{AccelConfig, AccelVariant, Accelerator, GpuModel, WorkloadTrace};
@@ -28,7 +29,8 @@ fn main() -> anyhow::Result<()> {
     let scene_name = args.get_or("scene", "playroom").to_string();
     let frames = args.usize_or("frames", 40);
     let scale = args.f32_or("scale", 0.2);
-    let use_pjrt = args.get_or("backend", "pjrt") == "pjrt";
+    let use_pjrt =
+        cfg!(feature = "pjrt") && args.get_or("backend", "pjrt") == "pjrt";
 
     let scene = generate(&scene_name, scale, 320, 192);
     let poses = scene.sample_poses(frames);
@@ -46,8 +48,10 @@ fn main() -> anyhow::Result<()> {
             ..Default::default()
         })
     };
+    #[allow(unused_mut)]
     let mut coordinator =
         StreamingCoordinator::new(mk_renderer(), CoordinatorConfig::default());
+    #[cfg(feature = "pjrt")]
     if use_pjrt {
         let engine = PjrtEngine::new(None)?;
         println!("PJRT platform: {}", engine.platform());

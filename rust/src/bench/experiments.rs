@@ -6,13 +6,13 @@
 //! Paper-vs-measured anchors live in DESIGN.md §Per-experiment index.
 
 use super::{f1, f2, pct, speedup, ExpOptions, Table};
-use crate::coordinator::{CoordinatorConfig, StreamingCoordinator, WarpMode};
+use crate::coordinator::{CoordinatorConfig, StreamServer, StreamingCoordinator, WarpMode};
 use crate::metrics::{psnr, ssim};
 use crate::render::{Frame, IntersectMode, RenderConfig, Renderer};
-use crate::scene::{generate, Pose, Scene, REAL_SCENES, SYNTHETIC_SCENES};
+use crate::scene::{generate, Pose, Scene, SceneAssets, REAL_SCENES, SYNTHETIC_SCENES};
 use crate::sim::{AccelConfig, AccelVariant, Accelerator, GpuModel, ReuseLevel, WorkloadTrace};
 use crate::util::json::Json;
-use crate::warp::{reproject, TileWarpPolicy};
+use crate::warp::{predict_depth_limits, reproject, tile_warp, TileWarpPolicy};
 
 // ---------------------------------------------------------------- helpers
 
@@ -646,6 +646,145 @@ pub fn fig15b_area(_opts: &ExpOptions) -> Json {
         crate::sim::area::METASAPIENS_AREA,
         crate::sim::area::JETSON_GPU_AREA
     );
+    report
+}
+
+/// Streaming steady state: frames/sec and per-stage times for 1, 4 and 16
+/// concurrent `StreamSession`s over one shared scene (the session-core
+/// redesign's headline numbers), plus a 1-session comparison against the
+/// seed's per-frame-allocation behavior. Written to `BENCH_streaming.json`
+/// by the bench binary — the repo's streaming perf trajectory.
+pub fn streaming_sessions(opts: &ExpOptions) -> Json {
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    let scene_name = "drjohnson";
+    let scene = generate(scene_name, opts.scale, opts.width, opts.height);
+    let assets = SceneAssets::from_scene(&scene);
+    let frames = opts.frames.max(12);
+    let warmup = opts.window.max(2).min(frames / 2);
+    let cfg = CoordinatorConfig {
+        window: opts.window,
+        threads: 1, // one core per stream: isolates per-frame overheads
+        ..Default::default()
+    };
+
+    let mut table = Table::new(
+        "Streaming steady state — concurrent sessions over one shared scene",
+        &["sessions", "total FPS", "per-session FPS", "pre ms", "sort ms", "raster ms"],
+    );
+    let mut report = Json::obj();
+    report
+        .set("scene", scene_name)
+        .set("frames_per_session", frames)
+        .set("warmup_frames", warmup);
+
+    let mut sessions_rep = Json::obj();
+    for &n_sessions in &[1usize, 4, 16] {
+        let mut server = StreamServer::new(Arc::clone(&assets), cfg);
+        for _ in 0..n_sessions {
+            server.add_session();
+        }
+        // Phase-shifted trajectories: a surround rig over one scene.
+        let all = scene.sample_poses(frames * n_sessions);
+        let step_poses = |f: usize| -> Vec<Pose> {
+            (0..n_sessions).map(|c| all[c * frames + f]).collect()
+        };
+        for f in 0..warmup {
+            server.advance_all(&step_poses(f));
+        }
+        let (mut pre, mut sort, mut raster) = (0.0f64, 0.0f64, 0.0f64);
+        let measured = frames - warmup;
+        let t0 = Instant::now();
+        for f in warmup..frames {
+            for s in server.advance_all(&step_poses(f)) {
+                pre += s.pass.t_preprocess.as_secs_f64();
+                sort += s.pass.t_sort.as_secs_f64();
+                raster += s.pass.t_rasterize.as_secs_f64();
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let total_frames = (measured * n_sessions) as f64;
+        let fps_total = total_frames / wall;
+        let fps_per_session = measured as f64 / wall;
+        table.row(&[
+            format!("{n_sessions}"),
+            f1(fps_total),
+            f1(fps_per_session),
+            f2(pre / total_frames * 1e3),
+            f2(sort / total_frames * 1e3),
+            f2(raster / total_frames * 1e3),
+        ]);
+        let mut m = Json::obj();
+        m.set("fps_total", fps_total)
+            .set("fps_per_session", fps_per_session)
+            .set("preprocess_ms", pre / total_frames * 1e3)
+            .set("sort_ms", sort / total_frames * 1e3)
+            .set("rasterize_ms", raster / total_frames * 1e3);
+        sessions_rep.set(&format!("{n_sessions}"), m);
+    }
+    report.set("sessions", sessions_rep);
+
+    // 1-session steady state vs the seed's per-frame-allocation behavior:
+    // fresh frame/scratch/warp buffers every frame, driven through the
+    // allocating compat wrappers (reproject / tile_warp /
+    // predict_depth_limits / render_sparse).
+    let poses = scene.sample_poses(frames);
+    let renderer = Renderer::from_assets(Arc::clone(&assets)).with_config(RenderConfig {
+        mode: cfg.mode,
+        threads: 1,
+        ..Default::default()
+    });
+    let alloc_lap = || {
+        let mut prev: Option<(Frame, Pose)> = None;
+        for (i, pose) in poses.iter().enumerate() {
+            if i % cfg.window == 0 || prev.is_none() {
+                let (frame, _) = renderer.render(pose);
+                prev = Some((frame, *pose));
+            } else {
+                let (pf, pp) = prev.as_ref().unwrap();
+                let mut warped = reproject(pf, &scene.intrinsics, pp, pose);
+                let limits = predict_depth_limits(&warped);
+                let outcome = tile_warp(&mut warped, &cfg.policy);
+                let mut frame = warped.frame;
+                frame.trunc_depth.copy_from_slice(&warped.trunc_depth);
+                renderer.render_sparse(pose, &mut frame, &outcome.rerender_mask, Some(&limits));
+                prev = Some((frame, *pose));
+            }
+        }
+    };
+    alloc_lap(); // warm caches
+    let (t_alloc, _) = crate::util::timer::best_of(3, alloc_lap);
+
+    let mut session = crate::coordinator::StreamSession::new(
+        Arc::clone(&assets),
+        Arc::new(crate::util::pool::WorkerPool::new(1)),
+        cfg,
+    );
+    for pose in &poses {
+        session.step(pose); // warm the arenas
+    }
+    let (t_reuse, _) = crate::util::timer::best_of(3, || {
+        session.reset();
+        for pose in &poses {
+            session.step(pose);
+        }
+    });
+
+    let fps_alloc = poses.len() as f64 / t_alloc.as_secs_f64();
+    let fps_reuse = poses.len() as f64 / t_reuse.as_secs_f64();
+    let mut cmp = Table::new(
+        "Per-frame allocation (seed behavior) vs persistent FrameScratch (1 session)",
+        &["variant", "FPS", "speedup"],
+    );
+    cmp.row(&["alloc-per-frame".into(), f1(fps_alloc), speedup(1.0)]);
+    cmp.row(&["reused-scratch".into(), f1(fps_reuse), speedup(fps_reuse / fps_alloc)]);
+    table.print();
+    cmp.print();
+    report
+        .set("baseline_alloc_fps", fps_alloc)
+        .set("reused_scratch_fps", fps_reuse)
+        .set("alloc_speedup", fps_reuse / fps_alloc);
     report
 }
 

@@ -107,7 +107,10 @@ pub const ALL_EXPERIMENTS: [&str; 13] = [
     "fig3", "fig4a", "fig4b", "fig5", "fig7", "fig9", "fig11", "fig12", "fig13a", "fig13b",
     "fig14", "fig15a", "fig15b",
 ];
-// tab1 runs as part of fig14's sweep but is addressable too.
+// tab1 runs as part of fig14's sweep but is addressable too; "streaming"
+// (the session-core steady-state benchmark, written to
+// BENCH_streaming.json) is addressable and in the bench binary's default
+// set but is not a paper figure.
 
 /// Run one experiment by id; returns its JSON report.
 pub fn run_experiment(id: &str, opts: &ExpOptions) -> Option<Json> {
@@ -127,6 +130,7 @@ pub fn run_experiment(id: &str, opts: &ExpOptions) -> Option<Json> {
         "fig15a" => e::fig15a_ldu(opts),
         "fig15b" => e::fig15b_area(opts),
         "tab1" => e::tab1_utilization(opts),
+        "streaming" => e::streaming_sessions(opts),
         _ => return None,
     };
     Some(json)

@@ -1,11 +1,16 @@
-//! L3 coordination layer: the streaming frame scheduler (window-n cadence,
-//! TWSR + DPES orchestration) and the Load Distribution Unit's assignment
-//! policies (paper Sec. V).
+//! L3 coordination layer: the per-viewer streaming session (window-n
+//! cadence, TWSR + DPES orchestration), the multi-session stream server,
+//! the single-stream coordinator wrapper, and the Load Distribution Unit's
+//! assignment policies (paper Sec. V).
 
 pub mod ldu;
 pub mod scheduler;
+pub mod server;
+pub mod session;
 
 pub use ldu::{assign_balanced, assign_naive, order_light_to_heavy, BlockAssignment};
-pub use scheduler::{
-    CoordinatorConfig, FrameKind, FrameResult, FrameTrace, StreamingCoordinator, WarpMode,
+pub use scheduler::StreamingCoordinator;
+pub use server::StreamServer;
+pub use session::{
+    CoordinatorConfig, FrameKind, FrameResult, FrameTrace, StepSummary, StreamSession, WarpMode,
 };

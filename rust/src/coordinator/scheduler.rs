@@ -1,352 +1,67 @@
-//! The streaming frame coordinator: LS-Gaussian's end-to-end per-frame
-//! control loop (paper Fig. 1 / Algo. 1 / Sec. V-A).
-//!
-//! Frame cadence follows the warping window n: one **full** render, then
-//! n−1 **warped** frames, each produced by
-//!
-//! 1. reprojecting the previous output into the new viewpoint,
-//! 2. TWSR tile classification (+ inpainting of nearly-complete tiles),
-//! 3. DPES per-tile depth-limit prediction,
-//! 4. sparse re-render of the remaining tiles (with depth culling),
-//!
-//! then the cycle restarts. Every frame also emits a [`FrameTrace`] that
-//! the hardware models consume, keeping the co-design loop closed: any
-//! algorithm change propagates into the simulated speedups exactly as in
-//! the paper.
+//! The streaming frame coordinator — now a thin single-stream wrapper
+//! over [`StreamSession`] (see `session.rs` for the per-frame control
+//! loop and `server.rs` for the multi-viewer server). Kept so the seed
+//! API (`StreamingCoordinator::new(renderer, config)` → `process` /
+//! `run_sequence`) and every bench/example built on it keep working
+//! unchanged.
 
-use crate::render::{Frame, IntersectMode, RenderConfig, RenderStats, Renderer};
+use super::session::{CoordinatorConfig, FrameResult, StreamSession};
+use crate::render::Renderer;
 use crate::scene::{Intrinsics, Pose};
-use crate::warp::{predict_depth_limits, reproject, tile_warp, TileWarpOutcome, TileWarpPolicy};
-use crate::warp::pixel_warp::pixel_warp;
 
-/// How the coordinator produced a frame.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum FrameKind {
-    /// Dense render (window boundary, or warping disabled).
-    Full,
-    /// TWSR warped + sparse re-render.
-    Warped,
-    /// PWSR baseline (pixel-level fill).
-    PixelWarped,
-}
-
-/// Warping strategy for the sequence.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum WarpMode {
-    /// Always render densely (the GPU baseline).
-    None,
-    /// Tile warping (the paper's TWSR).
-    Tile,
-    /// Pixel warping with per-pixel re-rendering of holes (a strong PWSR
-    /// baseline: preprocessing/sorting can't be skipped per-tile).
-    Pixel,
-    /// Potamoi-style pixel warping: holes are *inpainted from neighbors*
-    /// without re-rendering, trusting every reprojection — the paper's
-    /// Fig. 7 "PW" curve and Fig. 11 comparator ("pixel-based inpainting
-    /// ignores potentially invalid reprojections ... floating pixels").
-    /// Preprocessing + sorting still run in full (Potamoi's limited
-    /// speedup, Sec. VI-B).
-    PixelInpaint,
-}
-
-/// Coordinator configuration.
-#[derive(Clone, Copy, Debug)]
-pub struct CoordinatorConfig {
-    /// Warping window n: one full render every n frames (n=5 default,
-    /// Sec. VI-B). n ≤ 1 disables warping.
-    pub window: usize,
-    /// Warping strategy.
-    pub warp: WarpMode,
-    /// TWSR policy (threshold + no-cumulative-error mask).
-    pub policy: TileWarpPolicy,
-    /// Intersection test (paper default: TAIT).
-    pub mode: IntersectMode,
-    /// Enable DPES depth-limit culling on sparse renders.
-    pub dpes: bool,
-    /// Rasterization threads (0 = all cores).
-    pub threads: usize,
-}
-
-impl Default for CoordinatorConfig {
-    fn default() -> Self {
-        CoordinatorConfig {
-            window: 5,
-            warp: WarpMode::Tile,
-            policy: TileWarpPolicy::default(),
-            mode: IntersectMode::Tait,
-            dpes: true,
-            threads: 0,
-        }
-    }
-}
-
-/// Per-frame trace for the hardware models and benches.
-#[derive(Clone, Debug)]
-pub struct FrameTrace {
-    pub kind: FrameKind,
-    /// Render stats of whatever was rendered this frame (dense or sparse).
-    pub render: RenderStats,
-    /// TWSR outcome (None on full frames).
-    pub warp: Option<TileWarpOutcome>,
-    /// DPES limits used (None when disabled or full frame).
-    pub depth_limits: Option<Vec<f32>>,
-    /// Fraction of pixels carried by warping (0 on full frames).
-    pub warped_fraction: f32,
-}
-
-/// One produced frame.
-pub struct FrameResult {
-    pub frame: Frame,
-    pub trace: FrameTrace,
-}
-
-/// The streaming coordinator. Owns the renderer and the warp state
-/// (previous output + pose).
+/// The single-stream coordinator. Owns one [`StreamSession`] (renderer +
+/// warp state + persistent scratch arenas).
 pub struct StreamingCoordinator {
-    pub renderer: Renderer,
-    pub config: CoordinatorConfig,
-    /// When set, tile rasterization executes through the AOT artifacts via
-    /// PJRT (the full three-layer path); tiles exceeding the largest
-    /// compiled K fall back to the native rasterizer.
-    pjrt: Option<crate::runtime::PjrtEngine>,
-    prev: Option<(Frame, Pose)>,
-    frame_idx: usize,
+    session: StreamSession,
 }
 
 impl StreamingCoordinator {
     pub fn new(renderer: Renderer, config: CoordinatorConfig) -> StreamingCoordinator {
-        let mut renderer = renderer;
-        renderer.config = RenderConfig {
-            mode: config.mode,
-            threads: config.threads,
-            ..renderer.config
-        };
         StreamingCoordinator {
-            renderer,
-            config,
-            pjrt: None,
-            prev: None,
-            frame_idx: 0,
+            session: StreamSession::from_renderer(renderer, config),
         }
     }
 
     /// Route the rasterization hot path through PJRT (AOT artifacts).
+    #[cfg(feature = "pjrt")]
     pub fn with_pjrt(mut self, engine: crate::runtime::PjrtEngine) -> StreamingCoordinator {
-        self.pjrt = Some(engine);
+        self.session = self.session.with_pjrt(engine);
         self
     }
 
     pub fn uses_pjrt(&self) -> bool {
-        self.pjrt.is_some()
+        #[cfg(feature = "pjrt")]
+        if self.session.pjrt.is_some() {
+            return true;
+        }
+        false
     }
 
-    /// Render (dense or sparse) through the configured backend.
-    fn backend_render(
-        &self,
-        pose: &Pose,
-        frame: &mut Frame,
-        tile_mask: Option<&[bool]>,
-        depth_limits: Option<&[f32]>,
-    ) -> RenderStats {
-        let Some(engine) = &self.pjrt else {
-            return match tile_mask {
-                Some(mask) => self.renderer.render_sparse(pose, frame, mask, depth_limits),
-                None => {
-                    let (f, s) = self.renderer.render(pose);
-                    *frame = f;
-                    s
-                }
-            };
-        };
-        // PJRT path: native planning, AOT-kernel rasterization.
-        let (splats, bins) = self.renderer.plan(
-            pose,
-            crate::render::BinOptions {
-                tile_mask,
-                depth_limits,
-            },
-        );
-        let tiles: Vec<usize> = match tile_mask {
-            Some(m) => (0..bins.num_tiles()).filter(|&t| m[t]).collect(),
-            None => (0..bins.num_tiles()).collect(),
-        };
-        let overflow = engine
-            .render_tiles(&splats, &bins, &tiles, frame, self.renderer.config.background)
-            .expect("PJRT execution failed");
-        for t in overflow {
-            crate::render::rasterize_tile(
-                &splats,
-                bins.tile(t),
-                frame,
-                t,
-                self.renderer.config.background,
-                false,
-            );
-        }
-        // Traversal counters are not observable through the AOT kernel;
-        // report pair counts as the (upper-bound) workload.
-        RenderStats {
-            n_gaussians: self.renderer.cloud.len(),
-            n_splats: splats.len(),
-            pairs: bins.num_pairs(),
-            cost: bins.cost,
-            per_tile_pairs: bins.per_tile_counts(),
-            per_tile_traversed: bins.per_tile_counts(),
-            per_tile_blend_ops: bins
-                .per_tile_counts()
-                .iter()
-                .map(|&c| c as u64 * crate::TILE_PIXELS as u64)
-                .collect(),
-            ..Default::default()
-        }
+    pub fn renderer(&self) -> &Renderer {
+        self.session.renderer()
     }
 
     pub fn intrinsics(&self) -> &Intrinsics {
-        &self.renderer.intrinsics
+        self.session.intrinsics()
+    }
+
+    /// The underlying per-viewer session.
+    pub fn session(&self) -> &StreamSession {
+        &self.session
+    }
+
+    pub fn session_mut(&mut self) -> &mut StreamSession {
+        &mut self.session
     }
 
     /// Reset the warp chain (e.g. scene cut).
     pub fn reset(&mut self) {
-        self.prev = None;
-        self.frame_idx = 0;
+        self.session.reset();
     }
 
     /// Process the next viewpoint in the stream.
     pub fn process(&mut self, pose: &Pose) -> FrameResult {
-        let full = self.config.warp == WarpMode::None
-            || self.config.window <= 1
-            || self.prev.is_none()
-            || self.frame_idx % self.config.window == 0;
-        let result = if full {
-            self.full_frame(pose)
-        } else {
-            match self.config.warp {
-                WarpMode::Tile => self.tile_warped_frame(pose),
-                WarpMode::Pixel => self.pixel_warped_frame(pose),
-                WarpMode::PixelInpaint => self.pixel_inpaint_frame(pose),
-                WarpMode::None => unreachable!(),
-            }
-        };
-        self.frame_idx += 1;
-        self.prev = Some((result.frame.clone(), *pose));
-        result
-    }
-
-    fn full_frame(&mut self, pose: &Pose) -> FrameResult {
-        let mut frame = Frame::new(self.renderer.intrinsics.width, self.renderer.intrinsics.height);
-        let render = self.backend_render(pose, &mut frame, None, None);
-        FrameResult {
-            frame,
-            trace: FrameTrace {
-                kind: FrameKind::Full,
-                render,
-                warp: None,
-                depth_limits: None,
-                warped_fraction: 0.0,
-            },
-        }
-    }
-
-    fn tile_warped_frame(&mut self, pose: &Pose) -> FrameResult {
-        let (prev_frame, prev_pose) = self.prev.as_ref().unwrap();
-        let mut warped = reproject(prev_frame, &self.renderer.intrinsics, prev_pose, pose);
-        let warped_fraction =
-            warped.filled as f32 / (warped.frame.width * warped.frame.height) as f32;
-
-        // DPES limits must be computed BEFORE inpainting mutates the frame.
-        let depth_limits = if self.config.dpes {
-            Some(predict_depth_limits(&warped))
-        } else {
-            None
-        };
-
-        let outcome = tile_warp(&mut warped, &self.config.policy);
-
-        // Carry warped truncation depths into the output frame so the next
-        // DPES round chains; sparse rendering overwrites its own tiles.
-        let mut frame = warped.frame;
-        frame.trunc_depth.copy_from_slice(&warped.trunc_depth);
-
-        let render = self.backend_render(
-            pose,
-            &mut frame,
-            Some(&outcome.rerender_mask),
-            depth_limits.as_deref(),
-        );
-
-        FrameResult {
-            frame,
-            trace: FrameTrace {
-                kind: FrameKind::Warped,
-                render,
-                warp: Some(outcome),
-                depth_limits,
-                warped_fraction,
-            },
-        }
-    }
-
-    fn pixel_inpaint_frame(&mut self, pose: &Pose) -> FrameResult {
-        let (prev_frame, prev_pose) = self.prev.as_ref().unwrap();
-        let mut warped = reproject(prev_frame, &self.renderer.intrinsics, prev_pose, pose);
-        let warped_fraction =
-            warped.filled as f32 / (warped.frame.width * warped.frame.height) as f32;
-        // Fill EVERY hole by interpolation — no re-rendering at all — and
-        // trust every filled pixel for the next warp (no mask). This is
-        // what accumulates Potamoi's floating-pixel artifacts.
-        let outcome = tile_warp(
-            &mut warped,
-            &TileWarpPolicy {
-                missing_threshold: 1.0, // everything interpolates
-                mask_interpolated: false,
-            },
-        );
-        let mut frame = warped.frame;
-        frame.trunc_depth.copy_from_slice(&warped.trunc_depth);
-        // Potamoi still pays full preprocessing + sorting (pair expansion
-        // cannot be skipped at tile level): plan densely for the cost
-        // trace, rasterize nothing.
-        let (splats, bins) = self
-            .renderer
-            .plan(pose, crate::render::BinOptions::default());
-        let render = RenderStats {
-            n_gaussians: self.renderer.cloud.len(),
-            n_splats: splats.len(),
-            pairs: bins.num_pairs(),
-            cost: bins.cost,
-            per_tile_pairs: bins.per_tile_counts(),
-            per_tile_traversed: vec![0; bins.num_tiles()],
-            per_tile_blend_ops: vec![0; bins.num_tiles()],
-            ..Default::default()
-        };
-        FrameResult {
-            frame,
-            trace: FrameTrace {
-                kind: FrameKind::PixelWarped,
-                render,
-                warp: Some(outcome),
-                depth_limits: None,
-                warped_fraction,
-            },
-        }
-    }
-
-    fn pixel_warped_frame(&mut self, pose: &Pose) -> FrameResult {
-        let (prev_frame, prev_pose) = self.prev.as_ref().unwrap();
-        let mut warped = reproject(prev_frame, &self.renderer.intrinsics, prev_pose, pose);
-        let warped_fraction =
-            warped.filled as f32 / (warped.frame.width * warped.frame.height) as f32;
-        let stats = pixel_warp(&self.renderer, pose, &mut warped);
-        FrameResult {
-            frame: warped.frame,
-            trace: FrameTrace {
-                kind: FrameKind::PixelWarped,
-                render: stats.render,
-                warp: None,
-                depth_limits: None,
-                warped_fraction,
-            },
-        }
+        self.session.process(pose)
     }
 
     /// Run a whole pose sequence, returning all traces (and optionally all
@@ -358,8 +73,10 @@ impl StreamingCoordinator {
 
 #[cfg(test)]
 mod tests {
+    use super::super::session::{FrameKind, WarpMode};
     use super::*;
     use crate::metrics::psnr;
+    use crate::render::RenderConfig;
     use crate::scene::generate;
 
     fn coordinator(scene: &str, cfg: CoordinatorConfig) -> (StreamingCoordinator, Vec<Pose>) {
@@ -418,8 +135,8 @@ mod tests {
     #[test]
     fn warped_frames_close_to_dense() {
         let (mut c, poses) = coordinator("playroom", CoordinatorConfig::default());
-        let dense = Renderer::new(c.renderer.cloud.clone(), *c.intrinsics())
-            .with_config(c.renderer.config);
+        let dense = Renderer::new(c.renderer().cloud().clone(), *c.intrinsics())
+            .with_config(c.renderer().config);
         let results = c.run_sequence(&poses[..5]);
         for (i, r) in results.iter().enumerate() {
             let (ref_frame, _) = dense.render(&poses[i]);

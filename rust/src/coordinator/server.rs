@@ -1,0 +1,210 @@
+//! Multi-session stream server: N concurrent viewers over one scene.
+//!
+//! The ROADMAP's north star is serving many users per scene; the seed's
+//! coordinator structurally forbade that (it *owned* the `GaussianCloud`).
+//! A [`StreamServer`] holds one immutable `Arc<SceneAssets>` and one
+//! persistent [`WorkerPool`], and multiplexes any number of
+//! [`StreamSession`]s over them. Each session keeps its own pose history,
+//! frame double-buffer and scratch arenas, so sessions step concurrently
+//! with zero sharing beyond the read-only scene and the pool.
+//!
+//! [`StreamServer::step_all`] advances every session one frame in
+//! parallel (one scoped thread per session; tile-level parallelism inside
+//! each render shares the pool). Because gang dispatch on the pool always
+//! has the *calling* thread participating, sessions can never deadlock
+//! waiting on each other's tile work.
+
+use super::session::{CoordinatorConfig, FrameResult, StepSummary, StreamSession};
+use crate::scene::{Pose, SceneAssets};
+use crate::util::pool::{default_threads, WorkerPool};
+use std::sync::Arc;
+
+/// Serves N concurrent [`StreamSession`]s over one scene and one pool.
+pub struct StreamServer {
+    scene: Arc<SceneAssets>,
+    pool: Arc<WorkerPool>,
+    config: CoordinatorConfig,
+    sessions: Vec<StreamSession>,
+}
+
+impl StreamServer {
+    /// New server with a private worker pool.
+    pub fn new(scene: Arc<SceneAssets>, config: CoordinatorConfig) -> StreamServer {
+        StreamServer::with_pool(
+            scene,
+            config,
+            Arc::new(WorkerPool::new(default_threads().saturating_sub(1).max(1))),
+        )
+    }
+
+    /// New server sharing an existing pool.
+    pub fn with_pool(
+        scene: Arc<SceneAssets>,
+        config: CoordinatorConfig,
+        pool: Arc<WorkerPool>,
+    ) -> StreamServer {
+        StreamServer {
+            scene,
+            pool,
+            config,
+            sessions: Vec::new(),
+        }
+    }
+
+    /// Open a new viewer session; returns its id (index).
+    pub fn add_session(&mut self) -> usize {
+        self.sessions.push(StreamSession::new(
+            Arc::clone(&self.scene),
+            Arc::clone(&self.pool),
+            self.config,
+        ));
+        self.sessions.len() - 1
+    }
+
+    /// Open a session with a per-viewer config override.
+    pub fn add_session_with(&mut self, config: CoordinatorConfig) -> usize {
+        self.sessions
+            .push(StreamSession::new(Arc::clone(&self.scene), Arc::clone(&self.pool), config));
+        self.sessions.len() - 1
+    }
+
+    pub fn num_sessions(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn scene(&self) -> &Arc<SceneAssets> {
+        &self.scene
+    }
+
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
+    }
+
+    pub fn session(&self, id: usize) -> &StreamSession {
+        &self.sessions[id]
+    }
+
+    pub fn session_mut(&mut self, id: usize) -> &mut StreamSession {
+        &mut self.sessions[id]
+    }
+
+    /// Advance every session one frame concurrently (one pose per
+    /// session), collecting per-session [`FrameResult`]s whose
+    /// [`FrameTrace`](super::FrameTrace)s feed the `sim::` models.
+    pub fn step_all(&mut self, poses: &[Pose]) -> Vec<FrameResult> {
+        assert_eq!(
+            poses.len(),
+            self.sessions.len(),
+            "one pose per session expected"
+        );
+        let mut results: Vec<Option<FrameResult>> = Vec::new();
+        results.resize_with(self.sessions.len(), || None);
+        std::thread::scope(|s| {
+            for ((sess, pose), slot) in self
+                .sessions
+                .iter_mut()
+                .zip(poses)
+                .zip(results.iter_mut())
+            {
+                s.spawn(move || {
+                    *slot = Some(sess.process(pose));
+                });
+            }
+        });
+        results.into_iter().map(|r| r.unwrap()).collect()
+    }
+
+    /// Advance every session one frame concurrently on the lean
+    /// allocation-free path (no traces, no frame clones); read frames
+    /// back via [`StreamServer::session`]. Returns per-session summaries.
+    pub fn advance_all(&mut self, poses: &[Pose]) -> Vec<StepSummary> {
+        assert_eq!(
+            poses.len(),
+            self.sessions.len(),
+            "one pose per session expected"
+        );
+        let mut summaries: Vec<StepSummary> = vec![StepSummary::default(); self.sessions.len()];
+        std::thread::scope(|s| {
+            for ((sess, pose), slot) in self
+                .sessions
+                .iter_mut()
+                .zip(poses)
+                .zip(summaries.iter_mut())
+            {
+                s.spawn(move || {
+                    sess.step(pose);
+                    *slot = *sess.last_summary();
+                });
+            }
+        });
+        summaries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::FrameKind;
+    use crate::scene::generate;
+
+    #[test]
+    fn sessions_share_one_scene() {
+        let s = generate("room", 0.03, 96, 96);
+        let assets = SceneAssets::from_scene(&s);
+        let mut server = StreamServer::new(Arc::clone(&assets), CoordinatorConfig::default());
+        for _ in 0..3 {
+            server.add_session();
+        }
+        assert_eq!(server.num_sessions(), 3);
+        for id in 0..3 {
+            assert!(std::ptr::eq(
+                server.session(id).renderer().scene.cloud.positions.as_ptr(),
+                assets.cloud.positions.as_ptr()
+            ));
+        }
+    }
+
+    #[test]
+    fn step_all_advances_every_session() {
+        let s = generate("chair", 0.03, 96, 96);
+        let poses = s.sample_poses(4);
+        let mut server = StreamServer::new(SceneAssets::from_scene(&s), CoordinatorConfig::default());
+        for _ in 0..4 {
+            server.add_session();
+        }
+        // Frame 0: everyone renders a key frame at its own pose.
+        let per_session: Vec<Pose> = poses.clone();
+        let results = server.step_all(&per_session);
+        assert_eq!(results.len(), 4);
+        for r in &results {
+            assert_eq!(r.trace.kind, FrameKind::Full);
+            assert!(r.frame.rgb.iter().any(|&v| v > 0.05));
+        }
+        // Frame 1: warped.
+        let results = server.step_all(&per_session);
+        for r in &results {
+            assert_eq!(r.trace.kind, FrameKind::Warped);
+        }
+    }
+
+    #[test]
+    fn advance_all_matches_step_all_frames() {
+        let s = generate("room", 0.03, 96, 96);
+        let poses = s.sample_poses(6);
+        let assets = SceneAssets::from_scene(&s);
+        let mut a = StreamServer::new(Arc::clone(&assets), CoordinatorConfig::default());
+        let mut b = StreamServer::new(assets, CoordinatorConfig::default());
+        a.add_session();
+        a.add_session();
+        b.add_session();
+        b.add_session();
+        for pose in &poses {
+            let pair = [*pose, *pose];
+            let results = a.step_all(&pair);
+            b.advance_all(&pair);
+            for id in 0..2 {
+                assert_eq!(results[id].frame.rgb, b.session(id).frame().rgb);
+            }
+        }
+    }
+}

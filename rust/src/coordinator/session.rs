@@ -1,0 +1,594 @@
+//! Per-viewer streaming session: LS-Gaussian's end-to-end per-frame
+//! control loop (paper Fig. 1 / Algo. 1 / Sec. V-A), re-cast as a
+//! long-lived state machine over shared scene assets.
+//!
+//! Frame cadence follows the warping window n: one **full** render, then
+//! n−1 **warped** frames, each produced by
+//!
+//! 1. reprojecting the previous output into the new viewpoint,
+//! 2. TWSR tile classification (+ inpainting of nearly-complete tiles),
+//! 3. DPES per-tile depth-limit prediction,
+//! 4. sparse re-render of the remaining tiles (with depth culling),
+//!
+//! then the cycle restarts.
+//!
+//! A [`StreamSession`] owns everything per-viewer — pose history, a
+//! double-buffered output [`Frame`] pair, a persistent render
+//! [`FrameScratch`] arena and the warp/inpaint/classification buffers —
+//! while the scene itself lives in a shared `Arc<SceneAssets>`. The lean
+//! [`StreamSession::step`] path renders a steady-state warped frame with
+//! **zero heap allocations** (see the `zero_alloc` integration test);
+//! [`StreamSession::process`] additionally assembles the full
+//! [`FrameTrace`] the hardware models consume, keeping the co-design loop
+//! closed exactly as in the paper.
+
+use crate::render::{
+    Frame, FrameScratch, IntersectMode, PassSummary, RenderConfig, RenderPass, RenderStats,
+    Renderer,
+};
+use crate::scene::{Intrinsics, Pose, SceneAssets};
+use crate::util::pool::WorkerPool;
+use crate::warp::{
+    classify_and_inpaint, predict_depth_limits_into, reproject_into, InpaintScratch,
+    TileClassSummary, TileDecision, TileWarpOutcome, TileWarpPolicy, WarpScratch,
+};
+use std::sync::Arc;
+
+/// How the coordinator produced a frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Dense render (window boundary, or warping disabled).
+    Full,
+    /// TWSR warped + sparse re-render.
+    Warped,
+    /// PWSR baseline (pixel-level fill).
+    PixelWarped,
+}
+
+/// Warping strategy for the sequence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WarpMode {
+    /// Always render densely (the GPU baseline).
+    None,
+    /// Tile warping (the paper's TWSR).
+    Tile,
+    /// Pixel warping with per-pixel re-rendering of holes (a strong PWSR
+    /// baseline: preprocessing/sorting can't be skipped per-tile).
+    Pixel,
+    /// Potamoi-style pixel warping: holes are *inpainted from neighbors*
+    /// without re-rendering, trusting every reprojection — the paper's
+    /// Fig. 7 "PW" curve and Fig. 11 comparator ("pixel-based inpainting
+    /// ignores potentially invalid reprojections ... floating pixels").
+    /// Preprocessing + sorting still run in full (Potamoi's limited
+    /// speedup, Sec. VI-B).
+    PixelInpaint,
+}
+
+/// Session configuration (kept under the seed's `CoordinatorConfig` name —
+/// it configures one stream, coordinated or served).
+#[derive(Clone, Copy, Debug)]
+pub struct CoordinatorConfig {
+    /// Warping window n: one full render every n frames (n=5 default,
+    /// Sec. VI-B). n ≤ 1 disables warping.
+    pub window: usize,
+    /// Warping strategy.
+    pub warp: WarpMode,
+    /// TWSR policy (threshold + no-cumulative-error mask).
+    pub policy: TileWarpPolicy,
+    /// Intersection test (paper default: TAIT).
+    pub mode: IntersectMode,
+    /// Enable DPES depth-limit culling on sparse renders.
+    pub dpes: bool,
+    /// Rasterization threads (0 = all cores).
+    pub threads: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            window: 5,
+            warp: WarpMode::Tile,
+            policy: TileWarpPolicy::default(),
+            mode: IntersectMode::Tait,
+            dpes: true,
+            threads: 0,
+        }
+    }
+}
+
+/// Per-frame trace for the hardware models and benches.
+#[derive(Clone, Debug)]
+pub struct FrameTrace {
+    pub kind: FrameKind,
+    /// Render stats of whatever was rendered this frame (dense or sparse).
+    pub render: RenderStats,
+    /// TWSR outcome (None on full frames).
+    pub warp: Option<TileWarpOutcome>,
+    /// DPES limits used (None when disabled or full frame).
+    pub depth_limits: Option<Vec<f32>>,
+    /// Fraction of pixels carried by warping (0 on full frames).
+    pub warped_fraction: f32,
+}
+
+/// One produced frame.
+pub struct FrameResult {
+    pub frame: Frame,
+    pub trace: FrameTrace,
+}
+
+/// Copyable per-frame summary of the lean [`StreamSession::step`] path.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepSummary {
+    /// How the frame was produced (Full on the very first step).
+    pub kind: Option<FrameKind>,
+    /// Pipeline summary of whatever was rendered (dense or sparse).
+    pub pass: PassSummary,
+    /// Fraction of pixels carried by warping.
+    pub warped_fraction: f32,
+    /// TWSR classification counts (zeroed on full frames).
+    pub tiles: TileClassSummary,
+    /// Whether DPES limits were applied this frame.
+    pub used_dpes: bool,
+}
+
+/// A per-viewer streaming session over shared scene assets.
+pub struct StreamSession {
+    renderer: Renderer,
+    pub config: CoordinatorConfig,
+    /// When set, tile rasterization executes through the AOT artifacts via
+    /// PJRT (the full three-layer path); tiles exceeding the largest
+    /// compiled K fall back to the native rasterizer.
+    #[cfg(feature = "pjrt")]
+    pub(crate) pjrt: Option<crate::runtime::PjrtEngine>,
+    /// Persistent render-pipeline arena.
+    scratch: FrameScratch,
+    /// Persistent reprojection buffers.
+    warp: WarpScratch,
+    inpaint: InpaintScratch,
+    /// TWSR outputs, reused across frames.
+    rerender_mask: Vec<bool>,
+    decisions: Vec<TileDecision>,
+    /// DPES limits, reused across frames.
+    depth_limits: Vec<f32>,
+    /// Current output frame (after `step`, holds the newest render).
+    frame: Frame,
+    /// Previous output frame (the warp reference).
+    prev: Frame,
+    last_pose: Pose,
+    has_prev: bool,
+    frame_idx: usize,
+    last: StepSummary,
+}
+
+impl StreamSession {
+    /// Build a session over shared assets, sharing the given worker pool.
+    pub fn new(
+        scene: Arc<SceneAssets>,
+        pool: Arc<WorkerPool>,
+        config: CoordinatorConfig,
+    ) -> StreamSession {
+        StreamSession::from_renderer(Renderer::from_assets(scene).with_pool(pool), config)
+    }
+
+    /// Build a session around an existing renderer (the coordinator-compat
+    /// path). The renderer's intersection mode / thread count are aligned
+    /// with the session config, as the seed coordinator did.
+    pub fn from_renderer(renderer: Renderer, config: CoordinatorConfig) -> StreamSession {
+        let mut renderer = renderer;
+        renderer.config = RenderConfig {
+            mode: config.mode,
+            threads: config.threads,
+            ..renderer.config
+        };
+        let (w, h) = (renderer.intrinsics().width, renderer.intrinsics().height);
+        StreamSession {
+            renderer,
+            config,
+            #[cfg(feature = "pjrt")]
+            pjrt: None,
+            scratch: FrameScratch::new(),
+            warp: WarpScratch::default(),
+            inpaint: InpaintScratch::default(),
+            rerender_mask: Vec::new(),
+            decisions: Vec::new(),
+            depth_limits: Vec::new(),
+            frame: Frame::new(w, h),
+            prev: Frame::new(w, h),
+            last_pose: Pose::IDENTITY,
+            has_prev: false,
+            frame_idx: 0,
+            last: StepSummary::default(),
+        }
+    }
+
+    /// Route the rasterization hot path through PJRT (AOT artifacts).
+    #[cfg(feature = "pjrt")]
+    pub fn with_pjrt(mut self, engine: crate::runtime::PjrtEngine) -> StreamSession {
+        self.pjrt = Some(engine);
+        self
+    }
+
+    pub fn intrinsics(&self) -> &Intrinsics {
+        self.renderer.intrinsics()
+    }
+
+    pub fn renderer(&self) -> &Renderer {
+        &self.renderer
+    }
+
+    /// The newest output frame (valid after the first `step`/`process`).
+    pub fn frame(&self) -> &Frame {
+        &self.frame
+    }
+
+    /// Summary of the last step (pipeline counters + timings, no vectors).
+    pub fn last_summary(&self) -> &StepSummary {
+        &self.last
+    }
+
+    /// Reset the warp chain (e.g. scene cut).
+    pub fn reset(&mut self) {
+        self.has_prev = false;
+        self.frame_idx = 0;
+    }
+
+    /// Process the next viewpoint, rendering into the session's internal
+    /// frame. This is the lean streaming path: a steady-state TWSR warped
+    /// frame performs zero heap allocations (buffers are reused, the
+    /// worker pool is persistent, and no trace vectors are cloned).
+    pub fn step(&mut self, pose: &Pose) -> FrameKind {
+        // Double-buffer: self.frame (last output) becomes the warp
+        // reference, the older buffer becomes the render target.
+        std::mem::swap(&mut self.frame, &mut self.prev);
+        let full = self.config.warp == WarpMode::None
+            || self.config.window <= 1
+            || !self.has_prev
+            || self.frame_idx % self.config.window == 0;
+        let kind = if full {
+            self.full_frame(pose)
+        } else {
+            match self.config.warp {
+                WarpMode::Tile => self.tile_warped_frame(pose),
+                WarpMode::Pixel => self.pixel_warped_frame(pose),
+                WarpMode::PixelInpaint => self.pixel_inpaint_frame(pose),
+                WarpMode::None => unreachable!(),
+            }
+        };
+        self.last.kind = Some(kind);
+        self.frame_idx += 1;
+        self.last_pose = *pose;
+        self.has_prev = true;
+        kind
+    }
+
+    /// Process the next viewpoint and assemble the full trace + an owned
+    /// frame (the coordinator/bench path; clones per-tile vectors).
+    pub fn process(&mut self, pose: &Pose) -> FrameResult {
+        let kind = self.step(pose);
+        let render = crate::render::stats_from_scratch(&self.last.pass, &self.scratch);
+        let warp = match kind {
+            FrameKind::Full => None,
+            FrameKind::PixelWarped if self.config.warp == WarpMode::Pixel => None,
+            _ => Some(TileWarpOutcome {
+                decisions: self.decisions.clone(),
+                rerender_mask: self.rerender_mask.clone(),
+                inpainted_pixels: self.last.tiles.inpainted_pixels,
+            }),
+        };
+        let depth_limits = if self.last.used_dpes {
+            Some(self.depth_limits.clone())
+        } else {
+            None
+        };
+        FrameResult {
+            frame: self.frame.clone(),
+            trace: FrameTrace {
+                kind,
+                render,
+                warp,
+                depth_limits,
+                warped_fraction: self.last.warped_fraction,
+            },
+        }
+    }
+
+    /// Run a whole pose sequence, returning all traces (and the frames).
+    pub fn run_sequence(&mut self, poses: &[Pose]) -> Vec<FrameResult> {
+        poses.iter().map(|p| self.process(p)).collect()
+    }
+
+    fn full_frame(&mut self, pose: &Pose) -> FrameKind {
+        self.last.pass = self.backend_render(pose, RenderPass::Dense);
+        self.last.warped_fraction = 0.0;
+        self.last.tiles = TileClassSummary::default();
+        self.last.used_dpes = false;
+        FrameKind::Full
+    }
+
+    fn tile_warped_frame(&mut self, pose: &Pose) -> FrameKind {
+        let intr = *self.renderer.intrinsics();
+        reproject_into(
+            &self.prev,
+            &intr,
+            &self.last_pose,
+            pose,
+            &mut self.frame,
+            &mut self.warp,
+        );
+        self.last.warped_fraction =
+            self.warp.filled as f32 / (intr.width * intr.height) as f32;
+
+        // DPES limits must be computed BEFORE inpainting mutates the frame.
+        self.last.used_dpes = self.config.dpes;
+        if self.config.dpes {
+            predict_depth_limits_into(&self.frame, &self.warp.trunc_depth, &mut self.depth_limits);
+        }
+
+        self.last.tiles = classify_and_inpaint(
+            &mut self.frame,
+            &mut self.warp.filled_mask,
+            &self.config.policy,
+            &mut self.rerender_mask,
+            &mut self.decisions,
+            &mut self.inpaint,
+        );
+
+        // Carry warped truncation depths into the output frame so the next
+        // DPES round chains; sparse rendering overwrites its own tiles.
+        self.frame.trunc_depth.copy_from_slice(&self.warp.trunc_depth);
+
+        self.last.pass = self.sparse_render(pose);
+        FrameKind::Warped
+    }
+
+    /// Sparse pass over `self.rerender_mask` (+ DPES limits), through
+    /// whichever backend is configured. Split out so the borrow of the
+    /// mask/limits fields stays disjoint from the scratch/frame borrows.
+    fn sparse_render(&mut self, pose: &Pose) -> PassSummary {
+        let limits = if self.last.used_dpes {
+            Some(self.depth_limits.as_slice())
+        } else {
+            None
+        };
+        #[cfg(feature = "pjrt")]
+        if let Some(engine) = self.pjrt.as_ref() {
+            return Self::pjrt_render(
+                &self.renderer,
+                engine,
+                &mut self.scratch,
+                &mut self.frame,
+                pose,
+                Some(&self.rerender_mask),
+                limits,
+            );
+        }
+        self.renderer.execute(
+            pose,
+            &mut self.frame,
+            RenderPass::SparseTiles {
+                mask: &self.rerender_mask,
+                depth_limits: limits,
+            },
+            &mut self.scratch,
+        )
+    }
+
+    fn backend_render(&mut self, pose: &Pose, pass: RenderPass) -> PassSummary {
+        // InvalidPixels never routes through PJRT (the PWSR baseline is
+        // native-only, as in the seed).
+        #[cfg(feature = "pjrt")]
+        if !matches!(pass, RenderPass::InvalidPixels) {
+            if let Some(engine) = self.pjrt.as_ref() {
+                let (mask, limits) = match pass {
+                    RenderPass::SparseTiles { mask, depth_limits } => (Some(mask), depth_limits),
+                    _ => (None, None),
+                };
+                return Self::pjrt_render(
+                    &self.renderer,
+                    engine,
+                    &mut self.scratch,
+                    &mut self.frame,
+                    pose,
+                    mask,
+                    limits,
+                );
+            }
+        }
+        self.renderer
+            .execute(pose, &mut self.frame, pass, &mut self.scratch)
+    }
+
+    /// PJRT path: native planning, AOT-kernel rasterization, native
+    /// fallback for tiles exceeding the largest compiled K. Takes the
+    /// session's parts explicitly so the caller can borrow its mask/limit
+    /// buffers alongside.
+    #[cfg(feature = "pjrt")]
+    #[allow(clippy::too_many_arguments)]
+    fn pjrt_render(
+        renderer: &Renderer,
+        engine: &crate::runtime::PjrtEngine,
+        scratch: &mut FrameScratch,
+        frame: &mut Frame,
+        pose: &Pose,
+        tile_mask: Option<&[bool]>,
+        depth_limits: Option<&[f32]>,
+    ) -> PassSummary {
+        let summary = renderer.plan_into(
+            pose,
+            crate::render::BinOptions {
+                tile_mask,
+                depth_limits,
+            },
+            scratch,
+        );
+        let bins = &scratch.bins;
+        let splats = &scratch.splats;
+        let tiles: Vec<usize> = match tile_mask {
+            Some(m) => (0..bins.num_tiles()).filter(|&t| m[t]).collect(),
+            None => (0..bins.num_tiles()).collect(),
+        };
+        let overflow = engine
+            .render_tiles(splats, bins, &tiles, frame, renderer.config.background)
+            .expect("PJRT execution failed");
+        for t in overflow {
+            crate::render::rasterize_tile(
+                splats,
+                bins.tile(t),
+                frame,
+                t,
+                renderer.config.background,
+                false,
+            );
+        }
+        // Traversal counters are not observable through the AOT kernel;
+        // report pair counts as the (upper-bound) workload.
+        let num_tiles = bins.num_tiles();
+        scratch.reset_stats(num_tiles);
+        for t in 0..num_tiles {
+            let n = scratch.bins.offsets[t + 1] - scratch.bins.offsets[t];
+            scratch.traversed[t] = n;
+            scratch.blend_ops[t] = n as u64 * crate::TILE_PIXELS as u64;
+        }
+        summary
+    }
+
+    fn pixel_inpaint_frame(&mut self, pose: &Pose) -> FrameKind {
+        let intr = *self.renderer.intrinsics();
+        reproject_into(
+            &self.prev,
+            &intr,
+            &self.last_pose,
+            pose,
+            &mut self.frame,
+            &mut self.warp,
+        );
+        self.last.warped_fraction =
+            self.warp.filled as f32 / (intr.width * intr.height) as f32;
+        // Fill EVERY hole by interpolation — no re-rendering at all — and
+        // trust every filled pixel for the next warp (no mask). This is
+        // what accumulates Potamoi's floating-pixel artifacts.
+        self.last.tiles = classify_and_inpaint(
+            &mut self.frame,
+            &mut self.warp.filled_mask,
+            &TileWarpPolicy {
+                missing_threshold: 1.0, // everything interpolates
+                mask_interpolated: false,
+            },
+            &mut self.rerender_mask,
+            &mut self.decisions,
+            &mut self.inpaint,
+        );
+        self.frame.trunc_depth.copy_from_slice(&self.warp.trunc_depth);
+        // Potamoi still pays full preprocessing + sorting (pair expansion
+        // cannot be skipped at tile level): plan densely for the cost
+        // trace, rasterize nothing.
+        self.last.pass = self.renderer.plan_into(
+            pose,
+            crate::render::BinOptions::default(),
+            &mut self.scratch,
+        );
+        let num_tiles = self.scratch.bins.num_tiles();
+        self.scratch.reset_stats(num_tiles);
+        self.last.used_dpes = false;
+        FrameKind::PixelWarped
+    }
+
+    fn pixel_warped_frame(&mut self, pose: &Pose) -> FrameKind {
+        let intr = *self.renderer.intrinsics();
+        reproject_into(
+            &self.prev,
+            &intr,
+            &self.last_pose,
+            pose,
+            &mut self.frame,
+            &mut self.warp,
+        );
+        let n_px = intr.width * intr.height;
+        self.last.warped_fraction = self.warp.filled as f32 / n_px as f32;
+        // PWSR treats every warped pixel (incl. background) as final
+        // content: mark filled pixels valid so the pipeline only touches
+        // true holes, then trust everything for the next warp.
+        for i in 0..n_px {
+            self.frame.valid[i] = self.warp.filled_mask[i];
+        }
+        self.last.pass = self.backend_render(pose, RenderPass::InvalidPixels);
+        self.warp.filled_mask.fill(true);
+        self.last.tiles = TileClassSummary::default();
+        self.last.used_dpes = false;
+        FrameKind::PixelWarped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::psnr;
+    use crate::scene::generate;
+
+    fn session(scene: &str, cfg: CoordinatorConfig) -> (StreamSession, Vec<Pose>) {
+        let s = generate(scene, 0.04, 160, 128);
+        let poses = s.sample_poses(10);
+        let assets = SceneAssets::from_scene(&s);
+        let pool = Arc::new(WorkerPool::new(2));
+        (StreamSession::new(assets, pool, cfg), poses)
+    }
+
+    #[test]
+    fn step_and_process_agree() {
+        let (mut a, poses) = session("room", CoordinatorConfig::default());
+        let (mut b, _) = session("room", CoordinatorConfig::default());
+        for pose in &poses {
+            let kind = a.step(pose);
+            let result = b.process(pose);
+            assert_eq!(kind, result.trace.kind);
+            assert_eq!(a.frame().rgb, result.frame.rgb);
+        }
+    }
+
+    #[test]
+    fn warped_steps_stay_close_to_dense(){
+        let (mut s, poses) = session("playroom", CoordinatorConfig::default());
+        let dense = Renderer::from_assets(Arc::clone(&s.renderer().scene)).with_config(
+            RenderConfig {
+                mode: IntersectMode::Tait,
+                ..Default::default()
+            },
+        );
+        for pose in poses.iter().take(5) {
+            s.step(pose);
+            let (ref_frame, _) = dense.render(pose);
+            let p = psnr(&s.frame().rgb, &ref_frame.rgb);
+            assert!(p > 24.0, "psnr {p:.1} dB");
+        }
+    }
+
+    #[test]
+    fn summary_tracks_cadence_and_work() {
+        let (mut s, poses) = session("drjohnson", CoordinatorConfig::default());
+        let mut full_pairs = 0usize;
+        for (i, pose) in poses.iter().take(5).enumerate() {
+            let kind = s.step(pose);
+            let sum = *s.last_summary();
+            if i == 0 {
+                assert_eq!(kind, FrameKind::Full);
+                full_pairs = sum.pass.pairs;
+                assert_eq!(sum.warped_fraction, 0.0);
+            } else {
+                assert_eq!(kind, FrameKind::Warped);
+                assert!(sum.pass.pairs < full_pairs, "warped should sort fewer pairs");
+                assert!(sum.warped_fraction > 0.5);
+                assert!(sum.tiles.rerender > 0 || sum.tiles.complete > 0);
+                assert!(sum.used_dpes);
+            }
+        }
+    }
+
+    #[test]
+    fn reset_restarts_cadence() {
+        let (mut s, poses) = session("room", CoordinatorConfig::default());
+        s.step(&poses[0]);
+        s.step(&poses[1]);
+        s.reset();
+        assert_eq!(s.step(&poses[2]), FrameKind::Full);
+    }
+}

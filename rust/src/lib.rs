@@ -2,24 +2,35 @@
 //!
 //! Reproduction of *"No Redundancy, No Stall: Lightweight Streaming 3D
 //! Gaussian Splatting for Real-time Rendering"* (LS-Gaussian, 2025) as a
-//! three-layer rust + JAX + Pallas stack:
+//! three-layer rust + JAX + Pallas stack, organized as a session-oriented
+//! streaming core (see `docs/ARCHITECTURE.md` for the layer diagram):
 //!
-//! * **L3 (this crate)** — the streaming coordinator, the full 3DGS render
-//!   pipeline, the warp subsystem (TWSR / DPES), the two-stage intersection
-//!   test (TAIT), the load-distribution unit (LDU), and a cycle-level
-//!   accelerator simulator reproducing the paper's hardware evaluation.
+//! * **L3 (this crate)** — an immutable shared [`scene::SceneAssets`]
+//!   rendered by the unified [`render::RenderPass`] pipeline
+//!   (preprocess → DPES global cull → bin/sort → tile rasterization on a
+//!   persistent [`util::pool::WorkerPool`]), driven per viewer by a
+//!   [`coordinator::StreamSession`] (TWSR / DPES warp loop with
+//!   persistent [`render::FrameScratch`] arenas — steady-state warped
+//!   frames allocate nothing), multiplexed by
+//!   [`coordinator::StreamServer`] for N concurrent viewers per scene,
+//!   plus the two-stage intersection test (TAIT), the load-distribution
+//!   unit (LDU), and a cycle-level accelerator simulator reproducing the
+//!   paper's hardware evaluation.
 //! * **L2 (`python/compile/model.py`)** — jax projection / rasterization /
 //!   warp graphs, AOT-lowered to HLO text under `artifacts/`.
 //! * **L1 (`python/compile/kernels/`)** — the Pallas tile-rasterization
 //!   kernel the L2 graph calls; checked against a pure-jnp oracle.
 //!
-//! The request path is pure rust: [`runtime`] loads the AOT artifacts via
-//! PJRT (`xla` crate) and [`render`] provides a native fallback that the
-//! tests hold to numeric agreement with the PJRT path.
+//! The request path is pure rust: with the `pjrt` feature, [`runtime`]
+//! loads the AOT artifacts via PJRT (`xla` crate) and the native
+//! [`render`] pipeline doubles as a fallback that the tests hold to
+//! numeric agreement with the PJRT path.
 //!
 //! Entry points: [`render::Renderer`] for single frames,
-//! [`coordinator::StreamingCoordinator`] for real-time sequences, and
-//! [`sim`] for the hardware evaluation.
+//! [`coordinator::StreamSession`] for one real-time stream,
+//! [`coordinator::StreamServer`] for many concurrent streams over one
+//! scene, [`coordinator::StreamingCoordinator`] as the seed-compatible
+//! single-stream wrapper, and [`sim`] for the hardware evaluation.
 
 pub mod bench;
 pub mod coordinator;

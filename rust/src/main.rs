@@ -69,12 +69,21 @@ fn cmd_render(args: &Args) {
         ..Default::default()
     });
     let t0 = Instant::now();
-    let (frame, stats) = if args.get_or("backend", "native") == "pjrt" {
+    let want_pjrt = args.get_or("backend", "native") == "pjrt";
+    #[cfg(feature = "pjrt")]
+    let (frame, stats) = if want_pjrt {
         let pjrt = ls_gaussian::runtime::PjrtRenderer::new(renderer).expect("pjrt init");
         let (f, s, fallback) = pjrt.render(&pose).expect("pjrt render");
         println!("backend: pjrt ({} fallback tiles)", fallback);
         (f, s)
     } else {
+        renderer.render(&pose)
+    };
+    #[cfg(not(feature = "pjrt"))]
+    let (frame, stats) = {
+        if want_pjrt {
+            eprintln!("pjrt feature not enabled in this build; rendering natively");
+        }
         renderer.render(&pose)
     };
     let dt = t0.elapsed();
@@ -106,10 +115,16 @@ fn cmd_stream(args: &Args) {
         dpes: !args.flag("no-dpes"),
         ..Default::default()
     };
+    #[allow(unused_mut)]
     let mut c = StreamingCoordinator::new(Renderer::new(scene.cloud, scene.intrinsics), cfg);
     if args.get_or("backend", "native") == "pjrt" {
-        c = c.with_pjrt(ls_gaussian::runtime::PjrtEngine::new(None).expect("pjrt init"));
-        println!("backend: pjrt");
+        #[cfg(feature = "pjrt")]
+        {
+            c = c.with_pjrt(ls_gaussian::runtime::PjrtEngine::new(None).expect("pjrt init"));
+            println!("backend: pjrt");
+        }
+        #[cfg(not(feature = "pjrt"))]
+        eprintln!("pjrt feature not enabled in this build; streaming natively");
     }
     let t0 = Instant::now();
     let results = c.run_sequence(&poses);

@@ -57,13 +57,36 @@ pub struct BinOptions<'a> {
     pub depth_limits: Option<&'a [f32]>,
 }
 
-/// Build depth-sorted per-tile bins.
+/// Build depth-sorted per-tile bins (allocates fresh buffers; the
+/// streaming hot path uses [`bin_splats_into`] with reused ones).
 pub fn bin_splats(
     splats: &[Splat],
     mode: IntersectMode,
     grid: (usize, usize),
     opts: BinOptions,
 ) -> TileBins {
+    let mut bins = TileBins::default();
+    let mut pairs = Vec::with_capacity(splats.len() * 2);
+    let mut tile_ids = Vec::with_capacity(64);
+    let mut cursor = Vec::new();
+    bin_splats_into(splats, mode, grid, opts, &mut bins, &mut pairs, &mut tile_ids, &mut cursor);
+    bins
+}
+
+/// [`bin_splats`] into caller-owned buffers, all cleared and refilled:
+/// `out` receives the bins; `pairs`, `tile_ids` and `cursor` are working
+/// memory. Allocation-free once capacities are warm.
+#[allow(clippy::too_many_arguments)]
+pub fn bin_splats_into(
+    splats: &[Splat],
+    mode: IntersectMode,
+    grid: (usize, usize),
+    opts: BinOptions,
+    out: &mut TileBins,
+    pairs: &mut Vec<(u32, u32)>,
+    tile_ids: &mut Vec<u32>,
+    cursor: &mut Vec<u32>,
+) {
     let num_tiles = grid.0 * grid.1;
     if let Some(m) = opts.tile_mask {
         assert_eq!(m.len(), num_tiles, "tile mask size mismatch");
@@ -73,15 +96,14 @@ pub fn bin_splats(
     }
 
     // Pass 1: expand pairs.
-    let mut pairs: Vec<(u32, u32)> = Vec::with_capacity(splats.len() * 2);
-    let mut scratch: Vec<u32> = Vec::with_capacity(64);
+    pairs.clear();
     let mut cost = IntersectCost::default();
     for (si, splat) in splats.iter().enumerate() {
-        scratch.clear();
-        let c = tiles_for_splat(mode, splat, grid, &mut scratch);
+        tile_ids.clear();
+        let c = tiles_for_splat(mode, splat, grid, tile_ids);
         cost.candidates += c.candidates;
         cost.heavy_ops += c.heavy_ops;
-        for &t in &scratch {
+        for &t in tile_ids.iter() {
             if let Some(m) = opts.tile_mask {
                 if !m[t as usize] {
                     continue;
@@ -98,33 +120,33 @@ pub fn bin_splats(
     cost.emitted = pairs.len() as u64;
 
     // Pass 2: counting sort by tile.
-    let mut counts = vec![0u32; num_tiles + 1];
-    for &(t, _) in &pairs {
-        counts[t as usize + 1] += 1;
+    let offsets = &mut out.offsets;
+    offsets.clear();
+    offsets.resize(num_tiles + 1, 0);
+    for &(t, _) in pairs.iter() {
+        offsets[t as usize + 1] += 1;
     }
-    let mut offsets = counts;
     for i in 1..offsets.len() {
         offsets[i] += offsets[i - 1];
     }
-    let mut entries = vec![0u32; pairs.len()];
-    let mut cursor = offsets.clone();
-    for &(t, s) in &pairs {
+    let entries = &mut out.entries;
+    entries.clear();
+    entries.resize(pairs.len(), 0);
+    cursor.clear();
+    cursor.extend_from_slice(offsets);
+    for &(t, s) in pairs.iter() {
         let at = cursor[t as usize];
         entries[at as usize] = s;
         cursor[t as usize] += 1;
     }
 
-    // Pass 3: per-tile depth sort (quantized u32 keys, like 3DGS radix).
+    // Pass 3: per-tile depth sort (quantized u32 keys, like 3DGS radix;
+    // `sort_unstable` is in-place and does not allocate).
     for t in 0..num_tiles {
         let seg = &mut entries[offsets[t] as usize..offsets[t + 1] as usize];
         seg.sort_unstable_by_key(|&s| quantize_depth(splats[s as usize].depth));
     }
-
-    TileBins {
-        offsets,
-        entries,
-        cost,
-    }
+    out.cost = cost;
 }
 
 /// Monotone quantization of depth to u32 (positive depths; matches the

@@ -41,6 +41,17 @@ impl Frame {
         }
     }
 
+    /// Reset to the pristine `Frame::new` state in place (no allocation):
+    /// black, transparent, invalid depths. The streaming warp path reuses
+    /// one target frame across frames instead of reallocating it.
+    pub fn reset(&mut self) {
+        self.rgb.fill(0.0);
+        self.alpha.fill(0.0);
+        self.depth.fill(INVALID_DEPTH);
+        self.trunc_depth.fill(INVALID_DEPTH);
+        self.valid.fill(false);
+    }
+
     #[inline]
     pub fn idx(&self, x: usize, y: usize) -> usize {
         y * self.width + x

@@ -2,29 +2,39 @@
 //! preprocess → bin/sort → rasterize, with pluggable intersection tests
 //! (Sec. IV-C) and the sparse-rendering hooks TWSR/DPES need (Sec. IV-A/B).
 //!
-//! [`Renderer::render`] is the dense path (the GPU baseline);
-//! [`Renderer::render_sparse`] re-renders only the tiles a warp could not
-//! fill; [`Renderer::render_pixels`] is the pixel-warping baseline
-//! (Potamoi-style) that re-renders missing pixels but cannot skip
-//! preprocessing/sorting for partially-valid tiles.
+//! One pipeline, three passes: [`Renderer::execute`] runs any
+//! [`RenderPass`] (`Dense` / `SparseTiles` / `InvalidPixels`) through a
+//! shared planning stage (preprocess + DPES global depth cull + bin/sort)
+//! and a tile-parallel rasterization stage dispatched on the renderer's
+//! persistent [`WorkerPool`]. Per-frame working memory lives in a caller
+//! [`FrameScratch`] arena so steady-state streaming frames allocate
+//! nothing. [`Renderer::render`], [`Renderer::render_sparse`] and
+//! [`Renderer::render_pixels`] remain as thin wrappers with the seed
+//! crate's exact signatures and bit-identical output.
 
 pub mod binning;
 pub mod framebuffer;
 pub mod intersect;
+pub mod pass;
 pub mod preprocess;
 pub mod rasterize;
+pub mod scratch;
 
-pub use binning::{bin_splats, BinOptions, TileBins};
+pub use binning::{bin_splats, bin_splats_into, BinOptions, TileBins};
 pub use framebuffer::{Frame, INVALID_DEPTH};
 pub use intersect::{IntersectCost, IntersectMode};
-pub use preprocess::{preprocess, Splat};
+pub use pass::{PassSummary, RenderPass};
+pub use preprocess::{preprocess, preprocess_into, Splat};
 pub use rasterize::{rasterize_tile, TileRasterOut};
+pub use scratch::FrameScratch;
 
 use crate::math::Vec3;
-use crate::scene::{Camera, GaussianCloud, Intrinsics, Pose};
-use crate::util::pool::parallel_for;
+use crate::scene::{Camera, Pose, SceneAssets};
+use crate::scene::{GaussianCloud, Intrinsics};
+use crate::util::pool::{default_threads, WorkerPool};
 use crate::util::timer::StageTimes;
 use std::cell::UnsafeCell;
+use std::sync::{Arc, OnceLock};
 use std::time::Instant;
 
 /// Renderer configuration.
@@ -92,35 +102,87 @@ impl RenderStats {
 ///
 /// SAFETY invariant: concurrent users must write disjoint regions — the
 /// pipeline hands each worker distinct tile indices, tiles never overlap
-/// ([`Frame::tile_bounds`] partitions the frame) and each stats slot is
-/// indexed by tile.
+/// ([`Frame::tile_bounds`] partitions the frame).
 struct TileShared<'a, T>(&'a UnsafeCell<T>);
 unsafe impl<T> Sync for TileShared<'_, T> {}
 
 impl<T> TileShared<'_, T> {
     /// SAFETY: caller must guarantee disjoint writes (see type docs).
-    /// A method (not field access) so edition-2021 closures capture the
-    /// whole Sync wrapper rather than the raw `&UnsafeCell`.
     #[allow(clippy::mut_from_ref)]
     unsafe fn get(&self) -> &mut T {
         &mut *self.0.get()
     }
 }
 
-/// The native (pure-rust) 3DGS renderer.
-#[derive(Clone, Debug)]
+/// View an exclusive borrow as an `UnsafeCell` so disjoint tile workers
+/// can share it without the seed's `std::mem::replace(frame, Frame::new)`
+/// swap hack (which left a 0×0 placeholder frame panicking on any stray
+/// access).
+///
+/// SAFETY: `UnsafeCell<T>` is documented to have the same in-memory
+/// representation as `T`.
+fn as_shared<T>(r: &mut T) -> &UnsafeCell<T> {
+    unsafe { &*(r as *mut T as *const UnsafeCell<T>) }
+}
+
+/// Base pointers for the per-tile statistics slabs; workers write only
+/// their own tile slot.
+#[derive(Clone, Copy)]
+struct StatSlabs {
+    traversed: *mut u32,
+    contributing: *mut u32,
+    blend_ops: *mut u64,
+}
+// SAFETY: each worker writes only index t of each slab, and tiles are
+// distributed disjointly.
+unsafe impl Sync for StatSlabs {}
+
+/// The native (pure-rust) 3DGS renderer: a shared immutable scene plus a
+/// persistent worker pool. Cloning a renderer shares both.
 pub struct Renderer {
-    pub cloud: GaussianCloud,
-    pub intrinsics: Intrinsics,
+    /// Immutable scene, shared with every other viewer of it.
+    pub scene: Arc<SceneAssets>,
     pub config: RenderConfig,
+    /// Long-lived rasterization workers, materialized on first parallel
+    /// render (so single-threaded unit tests never spawn a pool).
+    pool: OnceLock<Arc<WorkerPool>>,
+}
+
+impl Clone for Renderer {
+    fn clone(&self) -> Renderer {
+        let pool = OnceLock::new();
+        if let Some(p) = self.pool.get() {
+            let _ = pool.set(Arc::clone(p));
+        }
+        Renderer {
+            scene: Arc::clone(&self.scene),
+            config: self.config,
+            pool,
+        }
+    }
+}
+
+impl std::fmt::Debug for Renderer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Renderer")
+            .field("n_gaussians", &self.scene.cloud.len())
+            .field("intrinsics", &self.scene.intrinsics)
+            .field("config", &self.config)
+            .finish()
+    }
 }
 
 impl Renderer {
     pub fn new(cloud: GaussianCloud, intrinsics: Intrinsics) -> Renderer {
+        Renderer::from_assets(Arc::new(SceneAssets::new(cloud, intrinsics)))
+    }
+
+    /// Build over shared scene assets (the multi-session path).
+    pub fn from_assets(scene: Arc<SceneAssets>) -> Renderer {
         Renderer {
-            cloud,
-            intrinsics,
+            scene,
             config: RenderConfig::default(),
+            pool: OnceLock::new(),
         }
     }
 
@@ -129,18 +191,47 @@ impl Renderer {
         self
     }
 
+    /// Share an existing worker pool (e.g. the `StreamServer`'s) instead
+    /// of lazily creating a private one. Always honors `pool`, replacing
+    /// any pool this renderer already materialized.
+    pub fn with_pool(self, pool: Arc<WorkerPool>) -> Renderer {
+        let cell = OnceLock::new();
+        let _ = cell.set(pool);
+        Renderer {
+            scene: self.scene,
+            config: self.config,
+            pool: cell,
+        }
+    }
+
+    #[inline]
+    pub fn cloud(&self) -> &GaussianCloud {
+        &self.scene.cloud
+    }
+
+    #[inline]
+    pub fn intrinsics(&self) -> &Intrinsics {
+        &self.scene.intrinsics
+    }
+
     fn threads(&self) -> usize {
         if self.config.threads == 0 {
-            crate::util::pool::default_threads()
+            default_threads()
         } else {
             self.config.threads
         }
     }
 
+    fn pool(&self) -> &Arc<WorkerPool> {
+        self.pool
+            .get_or_init(|| Arc::new(WorkerPool::new(default_threads().saturating_sub(1).max(1))))
+    }
+
     /// Dense render of a full frame.
     pub fn render(&self, pose: &Pose) -> (Frame, RenderStats) {
-        let mut frame = Frame::new(self.intrinsics.width, self.intrinsics.height);
-        let stats = self.render_into(pose, &mut frame, None, None, false);
+        let mut frame = Frame::new(self.intrinsics().width, self.intrinsics().height);
+        let mut scratch = FrameScratch::new();
+        let stats = self.render_with(pose, &mut frame, RenderPass::Dense, &mut scratch);
         (frame, stats)
     }
 
@@ -154,7 +245,16 @@ impl Renderer {
         tile_mask: &[bool],
         depth_limits: Option<&[f32]>,
     ) -> RenderStats {
-        self.render_into(pose, frame, Some(tile_mask), depth_limits, false)
+        let mut scratch = FrameScratch::new();
+        self.render_with(
+            pose,
+            frame,
+            RenderPass::SparseTiles {
+                mask: tile_mask,
+                depth_limits,
+            },
+            &mut scratch,
+        )
     }
 
     /// Pixel-sparse render (PWSR baseline): every tile containing at least
@@ -162,121 +262,200 @@ impl Renderer {
     /// be skipped — the paper's core criticism of pixel warping), but only
     /// invalid pixels are blended.
     pub fn render_pixels(&self, pose: &Pose, frame: &mut Frame) -> RenderStats {
-        let grid = self.intrinsics.tile_grid();
-        let mask: Vec<bool> = (0..grid.0 * grid.1)
-            .map(|t| frame.tile_valid_count(t) < frame.tile_pixel_count(t))
-            .collect();
-        self.render_into(pose, frame, Some(&mask), None, true)
+        let mut scratch = FrameScratch::new();
+        self.render_with(pose, frame, RenderPass::InvalidPixels, &mut scratch)
     }
 
-    fn render_into(
+    /// Execute a pass and assemble the full (allocating) [`RenderStats`]
+    /// from the scratch slabs — the trace/compat path.
+    pub fn render_with(
         &self,
         pose: &Pose,
         frame: &mut Frame,
-        tile_mask: Option<&[bool]>,
-        depth_limits: Option<&[f32]>,
-        only_invalid: bool,
+        pass: RenderPass,
+        scratch: &mut FrameScratch,
     ) -> RenderStats {
-        let camera = Camera::new(self.intrinsics, *pose);
-        let grid = self.intrinsics.tile_grid();
-        let num_tiles = grid.0 * grid.1;
-        let mut times = StageTimes::new();
+        let summary = self.execute(pose, frame, pass, scratch);
+        stats_from_scratch(&summary, scratch)
+    }
 
-        let t0 = Instant::now();
-        let mut splats = preprocess(&self.cloud, &camera);
-        // DPES global depth cull (Sec. IV-B / Fig. 13b): every tile to be
-        // rendered has a predicted early-stop bound; splats beyond the
-        // maximum bound over active tiles can contribute nowhere, so they
-        // are dropped before binning — this is the paper's "saving
-        // preprocessing and sorting overhead through depth-based culling".
-        if let Some(limits) = depth_limits {
-            let global = (0..num_tiles)
-                .filter(|&t| tile_mask.map(|m| m[t]).unwrap_or(true))
-                .map(|t| limits[t])
-                .fold(f32::NEG_INFINITY, f32::max);
-            if global.is_finite() {
-                splats.retain(|s| s.depth <= global);
+    /// The unified pipeline: plan (preprocess + global DPES cull +
+    /// bin/sort) then rasterize the pass's tiles in parallel on the
+    /// persistent pool. Per-tile outputs land in `scratch`; the returned
+    /// [`PassSummary`] is `Copy`. Zero heap allocations once `scratch` and
+    /// `frame` capacities are warm.
+    pub fn execute(
+        &self,
+        pose: &Pose,
+        frame: &mut Frame,
+        pass: RenderPass,
+        scratch: &mut FrameScratch,
+    ) -> PassSummary {
+        let grid = self.intrinsics().tile_grid();
+        let num_tiles = grid.0 * grid.1;
+
+        // Resolve the pass into the planning inputs. InvalidPixels derives
+        // its tile mask from the frame's current validity.
+        let mut pixel_mask = std::mem::take(&mut scratch.pixel_mask);
+        if matches!(pass, RenderPass::InvalidPixels) {
+            pixel_mask.clear();
+            pixel_mask
+                .extend((0..num_tiles).map(|t| frame.tile_valid_count(t) < frame.tile_pixel_count(t)));
+        }
+        let (tile_mask, depth_limits, only_invalid): (Option<&[bool]>, Option<&[f32]>, bool) =
+            match pass {
+                RenderPass::Dense => (None, None, false),
+                RenderPass::SparseTiles { mask, depth_limits } => (Some(mask), depth_limits, false),
+                RenderPass::InvalidPixels => (Some(&pixel_mask), None, true),
+            };
+
+        let mut summary = self.plan_pass(pose, tile_mask, depth_limits, scratch);
+
+        let t2 = Instant::now();
+        scratch.reset_stats(num_tiles);
+        let threads = self.threads().min(num_tiles.max(1));
+        {
+            let splats = &scratch.splats;
+            let bins = &scratch.bins;
+            let shared_frame = TileShared(as_shared(frame));
+            let slabs = StatSlabs {
+                traversed: scratch.traversed.as_mut_ptr(),
+                contributing: scratch.contributing.as_mut_ptr(),
+                blend_ops: scratch.blend_ops.as_mut_ptr(),
+            };
+            let bg = self.config.background;
+            let body = |t: usize| {
+                if tile_mask.map(|m| !m[t]).unwrap_or(false) {
+                    return; // masked-out tile: leave warped contents alone
+                }
+                // SAFETY: tile t writes only its own pixels / stats slot t.
+                let frame = unsafe { shared_frame.get() };
+                let out = rasterize_tile(splats, bins.tile(t), frame, t, bg, only_invalid);
+                unsafe {
+                    *slabs.traversed.add(t) = out.traversed;
+                    *slabs.contributing.add(t) = out.contributing;
+                    *slabs.blend_ops.add(t) = out.blend_ops;
+                }
+            };
+            if threads <= 1 {
+                for t in 0..num_tiles {
+                    body(t);
+                }
+            } else {
+                self.pool().parallel_for(num_tiles, threads, body);
             }
         }
-        times.add("1_preprocess", t0.elapsed());
+        summary.t_rasterize = t2.elapsed();
+
+        scratch.pixel_mask = pixel_mask;
+        summary
+    }
+
+    /// Shared planning stage: preprocess into the scratch splat buffer,
+    /// apply the DPES *global* depth cull (Sec. IV-B / Fig. 13b — splats
+    /// beyond the maximum predicted early-stop bound over active tiles can
+    /// contribute nowhere, so they are dropped before binning), then
+    /// bin + depth-sort. Used identically by `execute` and `plan_into`,
+    /// folding the seed's duplicated cull in `render_into`/`plan`.
+    fn plan_pass(
+        &self,
+        pose: &Pose,
+        tile_mask: Option<&[bool]>,
+        depth_limits: Option<&[f32]>,
+        scratch: &mut FrameScratch,
+    ) -> PassSummary {
+        let camera = Camera::new(*self.intrinsics(), *pose);
+        let grid = self.intrinsics().tile_grid();
+
+        let t0 = Instant::now();
+        preprocess_into(&self.scene.cloud, &camera, &mut scratch.splats);
+        global_depth_cull(&mut scratch.splats, tile_mask, depth_limits);
+        let t_preprocess = t0.elapsed();
 
         let t1 = Instant::now();
-        let bins = bin_splats(
-            &splats,
+        bin_splats_into(
+            &scratch.splats,
             self.config.mode,
             grid,
             BinOptions {
                 tile_mask,
                 depth_limits,
             },
+            &mut scratch.bins,
+            &mut scratch.pairs,
+            &mut scratch.tile_ids,
+            &mut scratch.cursor,
         );
-        times.add("2_sort", t1.elapsed());
+        let t_sort = t1.elapsed();
 
-        let t2 = Instant::now();
-        let mut traversed = vec![0u32; num_tiles];
-        let mut contributing = vec![0u32; num_tiles];
-        let mut blend_ops = vec![0u64; num_tiles];
-        {
-            let frame_cell = UnsafeCell::new(std::mem::replace(frame, Frame::new(0, 0)));
-            let shared = TileShared(&frame_cell);
-            let trav_cell = UnsafeCell::new(std::mem::take(&mut traversed));
-            let contr_cell = UnsafeCell::new(std::mem::take(&mut contributing));
-            let blops_cell = UnsafeCell::new(std::mem::take(&mut blend_ops));
-            let trav = TileShared(&trav_cell);
-            let contr = TileShared(&contr_cell);
-            let blops = TileShared(&blops_cell);
-            let bg = self.config.background;
-            parallel_for(num_tiles, self.threads(), |t| {
-                if tile_mask.map(|m| !m[t]).unwrap_or(false) {
-                    return; // masked-out tile: leave warped contents alone
-                }
-                // SAFETY: tile t writes only its own pixels / stats slot t.
-                let frame = unsafe { shared.get() };
-                let ids = bins.tile(t);
-                let out = rasterize_tile(&splats, ids, frame, t, bg, only_invalid);
-                unsafe {
-                    trav.get()[t] = out.traversed;
-                    contr.get()[t] = out.contributing;
-                    blops.get()[t] = out.blend_ops;
-                }
-            });
-            *frame = frame_cell.into_inner();
-            traversed = trav_cell.into_inner();
-            contributing = contr_cell.into_inner();
-            blend_ops = blops_cell.into_inner();
+        PassSummary {
+            n_gaussians: self.scene.cloud.len(),
+            n_splats: scratch.splats.len(),
+            pairs: scratch.bins.num_pairs(),
+            cost: scratch.bins.cost,
+            t_preprocess,
+            t_sort,
+            t_rasterize: std::time::Duration::ZERO,
         }
-        times.add("3_rasterize", t2.elapsed());
+    }
 
-        RenderStats {
-            n_gaussians: self.cloud.len(),
-            n_splats: splats.len(),
-            pairs: bins.num_pairs(),
-            cost: bins.cost,
-            per_tile_pairs: bins.per_tile_counts(),
-            per_tile_traversed: traversed,
-            per_tile_contributing: contributing,
-            per_tile_blend_ops: blend_ops,
-            times,
-        }
+    /// Preprocess + bin only (no rasterization) into a caller scratch —
+    /// used by the PJRT backend and the Potamoi cost-trace path.
+    pub fn plan_into(
+        &self,
+        pose: &Pose,
+        opts: BinOptions,
+        scratch: &mut FrameScratch,
+    ) -> PassSummary {
+        self.plan_pass(pose, opts.tile_mask, opts.depth_limits, scratch)
     }
 
     /// Preprocess + bin only (no rasterization) — used by benches that
     /// need pair counts and by the coordinator's planning path. Applies
     /// the same DPES global depth cull as the render path.
     pub fn plan(&self, pose: &Pose, opts: BinOptions) -> (Vec<Splat>, TileBins) {
-        let camera = Camera::new(self.intrinsics, *pose);
-        let mut splats = preprocess(&self.cloud, &camera);
-        if let Some(limits) = opts.depth_limits {
-            let global = (0..limits.len())
-                .filter(|&t| opts.tile_mask.map(|m| m[t]).unwrap_or(true))
-                .map(|t| limits[t])
-                .fold(f32::NEG_INFINITY, f32::max);
-            if global.is_finite() {
-                splats.retain(|s| s.depth <= global);
-            }
+        let mut scratch = FrameScratch::new();
+        self.plan_into(pose, opts, &mut scratch);
+        (scratch.splats, scratch.bins)
+    }
+}
+
+/// DPES global depth cull over the active tiles (shared planning helper).
+pub fn global_depth_cull(
+    splats: &mut Vec<Splat>,
+    tile_mask: Option<&[bool]>,
+    depth_limits: Option<&[f32]>,
+) {
+    if let Some(limits) = depth_limits {
+        let global = limits
+            .iter()
+            .enumerate()
+            .filter(|(t, _)| tile_mask.map(|m| m[*t]).unwrap_or(true))
+            .map(|(_, &l)| l)
+            .fold(f32::NEG_INFINITY, f32::max);
+        if global.is_finite() {
+            splats.retain(|s| s.depth <= global);
         }
-        let bins = bin_splats(&splats, self.config.mode, self.intrinsics.tile_grid(), opts);
-        (splats, bins)
+    }
+}
+
+/// Build the full (allocating) stats record from a pass summary plus the
+/// scratch slabs it filled.
+pub fn stats_from_scratch(summary: &PassSummary, scratch: &FrameScratch) -> RenderStats {
+    let mut times = StageTimes::new();
+    times.add("1_preprocess", summary.t_preprocess);
+    times.add("2_sort", summary.t_sort);
+    times.add("3_rasterize", summary.t_rasterize);
+    RenderStats {
+        n_gaussians: summary.n_gaussians,
+        n_splats: summary.n_splats,
+        pairs: summary.pairs,
+        cost: summary.cost,
+        per_tile_pairs: scratch.bins.per_tile_counts(),
+        per_tile_traversed: scratch.traversed.clone(),
+        per_tile_contributing: scratch.contributing.clone(),
+        per_tile_blend_ops: scratch.blend_ops.clone(),
+        times,
     }
 }
 
@@ -345,7 +524,7 @@ mod tests {
     fn sparse_render_only_touches_masked_tiles() {
         let (r, poses) = renderer("chair");
         let (dense, _) = r.render(&poses[0]);
-        let grid = r.intrinsics.tile_grid();
+        let grid = r.intrinsics().tile_grid();
         let num_tiles = grid.0 * grid.1;
         // Start from a poisoned frame, re-render only even tiles.
         let mut frame = Frame::new(256, 192);
@@ -376,7 +555,7 @@ mod tests {
     fn stats_shapes_match_grid() {
         let (r, poses) = renderer("truck");
         let (_, stats) = r.render(&poses[0]);
-        let n = r.intrinsics.num_tiles();
+        let n = r.intrinsics().num_tiles();
         assert_eq!(stats.per_tile_pairs.len(), n);
         assert_eq!(stats.per_tile_traversed.len(), n);
         assert_eq!(stats.per_tile_contributing.len(), n);
@@ -416,5 +595,21 @@ mod tests {
         let (_, bins) = r.plan(&poses[0], BinOptions::default());
         let (_, stats) = r.render(&poses[0]);
         assert_eq!(bins.num_pairs(), stats.pairs);
+    }
+
+    #[test]
+    fn execute_reusing_scratch_matches_wrappers() {
+        // The same scratch driven through all three passes must reproduce
+        // the fresh-scratch wrappers bit-for-bit.
+        let (r, poses) = renderer("room");
+        let mut scratch = FrameScratch::new();
+        let mut frame = Frame::new(256, 192);
+        for pose in &poses {
+            r.execute(pose, &mut frame, RenderPass::Dense, &mut scratch);
+            let (reference, _) = r.render(pose);
+            assert_eq!(frame.rgb, reference.rgb);
+            assert_eq!(frame.depth, reference.depth);
+            assert_eq!(frame.valid, reference.valid);
+        }
     }
 }

@@ -1,0 +1,63 @@
+//! The unified render-pass descriptor.
+//!
+//! The seed pipeline hid three render paths behind
+//! `render_into(pose, frame, Option<mask>, Option<limits>, bool)`; the
+//! streaming redesign replaces that tangle with one explicit descriptor
+//! executed by a single pipeline ([`crate::render::Renderer::execute`]):
+//!
+//! * [`RenderPass::Dense`] — the full-frame GPU baseline;
+//! * [`RenderPass::SparseTiles`] — TWSR: only masked tiles run, optionally
+//!   depth-culled per DPES limits (paper Sec. IV-A/B);
+//! * [`RenderPass::InvalidPixels`] — the PWSR baseline: every tile with at
+//!   least one invalid pixel is preprocessed + sorted (pair expansion can
+//!   NOT be skipped — the paper's core criticism of pixel warping), but
+//!   only invalid pixels are blended.
+
+use super::intersect::IntersectCost;
+use std::time::Duration;
+
+/// What one pipeline execution should render.
+#[derive(Clone, Copy, Debug)]
+pub enum RenderPass<'a> {
+    /// Dense render of the full frame.
+    Dense,
+    /// Sparse tile re-render (TWSR), with optional DPES depth limits.
+    SparseTiles {
+        /// Only tiles with `mask[t] == true` are rendered; others keep
+        /// their (warped/interpolated) contents.
+        mask: &'a [bool],
+        /// Per-tile early-stop depth bounds (`f32::INFINITY` = no limit).
+        depth_limits: Option<&'a [f32]>,
+    },
+    /// Re-render only pixels currently marked invalid, touching every tile
+    /// that contains at least one such pixel.
+    InvalidPixels,
+}
+
+/// Small, copyable summary of one pipeline execution. Per-tile slabs
+/// (pairs / traversed / contributing / blend ops) stay in the
+/// [`crate::render::FrameScratch`] the pass ran with; clone them into a
+/// full [`crate::render::RenderStats`] only when a trace is wanted.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PassSummary {
+    /// Gaussians in the cloud.
+    pub n_gaussians: usize,
+    /// Splats surviving culling (after the shared DPES global cull).
+    pub n_splats: usize,
+    /// Gaussian-tile pairs after the intersection test.
+    pub pairs: usize,
+    /// Intersection-test cost counters.
+    pub cost: IntersectCost,
+    /// Wall-clock of the preprocessing stage (incl. global depth cull).
+    pub t_preprocess: Duration,
+    /// Wall-clock of the binning + sorting stage.
+    pub t_sort: Duration,
+    /// Wall-clock of the rasterization stage.
+    pub t_rasterize: Duration,
+}
+
+impl PassSummary {
+    pub fn total_time(&self) -> Duration {
+        self.t_preprocess + self.t_sort + self.t_rasterize
+    }
+}

@@ -79,11 +79,20 @@ pub const COV_DILATION: f32 = 0.3;
 /// Project every visible Gaussian. Returns splats in cloud order
 /// (stable ids, culled entries dropped).
 pub fn preprocess(cloud: &GaussianCloud, camera: &Camera) -> Vec<Splat> {
+    let mut out = Vec::with_capacity(cloud.len() / 2);
+    preprocess_into(cloud, camera, &mut out);
+    out
+}
+
+/// [`preprocess`] into a caller-owned buffer (cleared first). The
+/// streaming hot path reuses one buffer across frames, so a steady-state
+/// frame allocates nothing here once its capacity is warm.
+pub fn preprocess_into(cloud: &GaussianCloud, camera: &Camera, out: &mut Vec<Splat>) {
+    out.clear();
     let w2c = camera.pose.world_to_camera();
     let rot = w2c.rotation();
     let intr = &camera.intrinsics;
     let cam_pos = camera.pose.position;
-    let mut out = Vec::with_capacity(cloud.len() / 2);
     let margin = 0.15 * intr.width.max(intr.height) as f32; // guard band
 
     for i in 0..cloud.len() {
@@ -112,14 +121,13 @@ pub fn preprocess(cloud: &GaussianCloud, camera: &Camera) -> Vec<Splat> {
             {
                 continue;
             }
-            push_splat(&mut out, cloud, i, mean, (a, b, c), p_cam.z, cam_pos);
+            push_splat(out, cloud, i, mean, (a, b, c), p_cam.z, cam_pos);
             continue;
         }
         let cov3d = cloud.covariance3d(i);
         let cov2d = project_cov(&cov3d, &rot, p_cam, intr);
-        push_splat(&mut out, cloud, i, mean, cov2d, p_cam.z, cam_pos);
+        push_splat(out, cloud, i, mean, cov2d, p_cam.z, cam_pos);
     }
-    out
 }
 
 fn push_splat(

@@ -1,0 +1,55 @@
+//! Persistent per-frame scratch arena.
+//!
+//! LS-Gaussian's premise is *streaming*: a camera renders the same scene
+//! continuously, so per-frame working memory should persist, not be
+//! rebuilt (paper Sec. IV). [`FrameScratch`] owns every buffer the render
+//! pipeline touches per frame — the splat buffer, the pair/bin buffers of
+//! the sorting stage, and the per-tile statistics slabs — and is reused
+//! across frames: after a warm-up frame or two, a steady-state pass
+//! performs **zero hot-path heap allocations** (verified by the
+//! `zero_alloc` integration test). Each `StreamSession` owns one arena;
+//! the one-shot `Renderer::render*` wrappers allocate a fresh arena per
+//! call, reproducing the seed behavior bit-for-bit.
+
+use super::binning::TileBins;
+use super::preprocess::Splat;
+
+/// Reusable working memory for [`crate::render::Renderer::execute`].
+#[derive(Clone, Debug, Default)]
+pub struct FrameScratch {
+    /// Preprocessed splats (culled, projected), in cloud order.
+    pub splats: Vec<Splat>,
+    /// Depth-sorted per-tile bins (offsets/entries reused across frames).
+    pub bins: TileBins,
+    /// Pair-expansion buffer for the binning stage.
+    pub(crate) pairs: Vec<(u32, u32)>,
+    /// Per-splat tile-id scratch for the intersection test.
+    pub(crate) tile_ids: Vec<u32>,
+    /// Counting-sort cursor.
+    pub(crate) cursor: Vec<u32>,
+    /// Per-tile splats traversed before early stop (VRU workload).
+    pub traversed: Vec<u32>,
+    /// Per-tile actually-contributing splat counts.
+    pub contributing: Vec<u32>,
+    /// Per-tile α-blend operation counts.
+    pub blend_ops: Vec<u64>,
+    /// Tile mask computed by [`crate::render::RenderPass::InvalidPixels`].
+    pub(crate) pixel_mask: Vec<bool>,
+}
+
+impl FrameScratch {
+    pub fn new() -> FrameScratch {
+        FrameScratch::default()
+    }
+
+    /// Reset the per-tile statistic slabs to zeros of length `num_tiles`
+    /// (allocation-free once capacity is warm).
+    pub(crate) fn reset_stats(&mut self, num_tiles: usize) {
+        self.traversed.clear();
+        self.traversed.resize(num_tiles, 0);
+        self.contributing.clear();
+        self.contributing.resize(num_tiles, 0);
+        self.blend_ops.clear();
+        self.blend_ops.resize(num_tiles, 0);
+    }
+}

@@ -7,23 +7,34 @@
 //! the AOT kernel (native preprocessing + binning, which are the
 //! coordinator's own domain). Integration tests in `rust/tests/` hold the
 //! PJRT and native backends to numeric agreement.
+//!
+//! Everything touching the `xla` crate is gated behind the default-off
+//! `pjrt` cargo feature so the tier-1 build runs offline; the artifact
+//! manifest loader stays available either way.
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 
 pub use artifacts::{find_artifacts_dir, ArtifactEntry, ArtifactManifest};
+#[cfg(feature = "pjrt")]
 pub use engine::PjrtEngine;
 
+#[cfg(feature = "pjrt")]
 use crate::render::{BinOptions, Frame, RenderStats, Renderer};
+#[cfg(feature = "pjrt")]
 use crate::scene::Pose;
+#[cfg(feature = "pjrt")]
 use anyhow::Result;
 
 /// A renderer that executes tile rasterization through the PJRT artifacts.
+#[cfg(feature = "pjrt")]
 pub struct PjrtRenderer {
     pub native: Renderer,
     pub engine: PjrtEngine,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtRenderer {
     /// Wrap a native renderer; artifacts are auto-located.
     pub fn new(native: Renderer) -> Result<PjrtRenderer> {
@@ -38,7 +49,7 @@ impl PjrtRenderer {
     /// rasterizer (reported in the stats; rare at evaluation scales).
     pub fn render(&self, pose: &Pose) -> Result<(Frame, RenderStats, usize)> {
         let (splats, bins) = self.native.plan(pose, BinOptions::default());
-        let mut frame = Frame::new(self.native.intrinsics.width, self.native.intrinsics.height);
+        let mut frame = Frame::new(self.native.intrinsics().width, self.native.intrinsics().height);
         let tiles: Vec<usize> = (0..bins.num_tiles()).collect();
         let overflow = self.engine.render_tiles(
             &splats,
@@ -60,7 +71,7 @@ impl PjrtRenderer {
         }
         // Assemble stats equivalent to the native pipeline's planning view.
         let stats = RenderStats {
-            n_gaussians: self.native.cloud.len(),
+            n_gaussians: self.native.cloud().len(),
             n_splats: splats.len(),
             pairs: bins.num_pairs(),
             cost: bins.cost,

@@ -1,0 +1,60 @@
+//! Immutable, shareable scene assets.
+//!
+//! The streaming redesign splits scene *ownership* out of the renderer and
+//! coordinator: a [`SceneAssets`] is built once per scene and shared across
+//! every concurrent viewer via `Arc` — N `StreamSession`s over one scene
+//! hold N pointers to one Gaussian cloud, not N copies. The cloud is
+//! immutable after construction; anything per-viewer (pose history, frame
+//! buffers, scratch arenas) lives in the session.
+
+use super::camera::Intrinsics;
+use super::gaussian::GaussianCloud;
+use super::generator::Scene;
+use std::sync::Arc;
+
+/// Everything the render pipeline needs to know about a scene, immutable
+/// and shared between all sessions viewing it.
+#[derive(Clone, Debug)]
+pub struct SceneAssets {
+    pub cloud: GaussianCloud,
+    pub intrinsics: Intrinsics,
+}
+
+impl SceneAssets {
+    pub fn new(cloud: GaussianCloud, intrinsics: Intrinsics) -> SceneAssets {
+        SceneAssets { cloud, intrinsics }
+    }
+
+    /// Wrap into the shared handle the session/server layer consumes.
+    pub fn into_shared(self) -> Arc<SceneAssets> {
+        Arc::new(self)
+    }
+
+    /// Shared assets from a generated scene (clones the cloud once).
+    pub fn from_scene(scene: &Scene) -> Arc<SceneAssets> {
+        Arc::new(SceneAssets {
+            cloud: scene.cloud.clone(),
+            intrinsics: scene.intrinsics,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scene::generate;
+
+    #[test]
+    fn shared_assets_point_at_one_cloud() {
+        let scene = generate("chair", 0.02, 64, 64);
+        let assets = SceneAssets::from_scene(&scene);
+        let a = Arc::clone(&assets);
+        let b = Arc::clone(&assets);
+        assert_eq!(a.cloud.len(), scene.cloud.len());
+        assert!(std::ptr::eq(
+            a.cloud.positions.as_ptr(),
+            b.cloud.positions.as_ptr()
+        ));
+        assert_eq!(Arc::strong_count(&assets), 3);
+    }
+}

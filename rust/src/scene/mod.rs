@@ -3,11 +3,13 @@
 //! Synthetic-NeRF / Tanks&Temples / Deep Blending / Mip-NeRF 360 scenes
 //! (see DESIGN.md substitution log).
 
+pub mod assets;
 pub mod camera;
 pub mod gaussian;
 pub mod generator;
 pub mod io;
 
+pub use assets::SceneAssets;
 pub use camera::{Camera, Intrinsics, Pose, Trajectory};
 pub use gaussian::GaussianCloud;
 pub use generator::{

@@ -1,12 +1,21 @@
-//! Scoped thread pool + parallel-for (rayon/tokio are unavailable offline).
+//! Long-lived worker pool + parallel-for (rayon/tokio are unavailable
+//! offline).
 //!
-//! The coordinator's rasterization blocks and the bench harness use
-//! [`parallel_for`] for data parallelism and [`WorkerPool`] for the
-//! streaming pipeline's long-lived stage workers.
+//! The streaming redesign (ISSUE 1) moved all tile-level parallelism off
+//! per-call `std::thread::scope` spawns and onto a persistent
+//! [`WorkerPool`]: [`WorkerPool::parallel_for`] dispatches a *gang task*
+//! (a raw borrowed closure + an atomic work counter) to the already-parked
+//! workers, so a steady-state frame performs **zero heap allocations and
+//! zero thread spawns** for its rasterization fan-out. The pool also keeps
+//! the original boxed-job queue ([`WorkerPool::submit`] /
+//! [`WorkerPool::wait_idle`]) for coarse pipeline jobs.
+//!
+//! The free [`parallel_for`] (scoped spawn per call) remains for one-shot
+//! callers that have no pool at hand.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Number of worker threads to use by default (physical parallelism).
 pub fn default_threads() -> usize {
@@ -15,10 +24,9 @@ pub fn default_threads() -> usize {
         .unwrap_or(4)
 }
 
-/// Run `f(i)` for every i in 0..n using `threads` OS threads with dynamic
-/// (chunk-stealing) scheduling. `f` must be Sync; per-item outputs should go
-/// through interior mutability or be written to disjoint slice regions by
-/// the caller (see [`parallel_map`]).
+/// Run `f(i)` for every i in 0..n using `threads` scoped OS threads with
+/// dynamic (chunk-stealing) scheduling. Spawns threads per call — prefer
+/// [`WorkerPool::parallel_for`] on hot paths.
 pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, threads: usize, f: F) {
     if n == 0 {
         return;
@@ -70,74 +78,286 @@ pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(
     out.into_iter().map(|x| x.unwrap()).collect()
 }
 
-/// A long-lived pool of workers consuming boxed jobs; used by the streaming
-/// coordinator for pipeline stages.
-pub struct WorkerPool {
-    tx: Option<mpsc::Sender<Job>>,
-    handles: Vec<std::thread::JoinHandle<()>>,
-    pending: Arc<(Mutex<usize>, std::sync::Condvar)>,
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A borrowed data-parallel task published to the workers: an erased
+/// closure pointer plus a shared work counter. Lives only for the duration
+/// of one [`WorkerPool::parallel_for`] call (the caller blocks until every
+/// joined worker has left the task before the borrow ends).
+#[derive(Clone, Copy)]
+struct Gang {
+    /// Type-erased `&F` where `F: Fn(usize) + Sync`.
+    data: *const (),
+    /// Monomorphized trampoline re-typing `data` and calling it.
+    call: unsafe fn(*const (), usize),
+    /// Shared index counter (points into the caller's stack frame).
+    next: *const AtomicUsize,
+    n: usize,
+    chunk: usize,
+}
+// SAFETY: the pointers target `Sync` data owned by the dispatching caller,
+// which outlives every worker's use of them (see `parallel_for`'s
+// completion wait).
+unsafe impl Send for Gang {}
+
+unsafe fn gang_call<F: Fn(usize) + Sync>(data: *const (), i: usize) {
+    (*(data as *const F))(i)
 }
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
+struct State {
+    jobs: VecDeque<Job>,
+    /// Queued + currently running boxed jobs.
+    jobs_pending: usize,
+    gang: Option<Gang>,
+    /// Bumped per gang so a worker never re-joins a task it already left.
+    gang_epoch: u64,
+    /// Workers currently executing the gang task.
+    gang_active: usize,
+    /// Remaining worker slots for the current gang (caps parallelism).
+    gang_slots: usize,
+    shutdown: bool,
+}
+
+struct Inner {
+    state: Mutex<State>,
+    /// Workers park here waiting for jobs or gang tasks.
+    work_cv: Condvar,
+    /// Callers park here waiting for gang completion / queue idle / a free
+    /// gang slot.
+    done_cv: Condvar,
+}
+
+/// A persistent pool of parked worker threads. One pool serves both the
+/// tile-parallel render fan-out (`parallel_for`, allocation-free) and
+/// coarse boxed jobs (`submit` + `wait_idle`). Shared across all
+/// `StreamSession`s of a `StreamServer`.
+pub struct WorkerPool {
+    inner: Arc<Inner>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
+}
 
 impl WorkerPool {
     pub fn new(threads: usize) -> WorkerPool {
         let threads = threads.max(1);
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let pending = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let inner = Arc::new(Inner {
+            state: Mutex::new(State {
+                jobs: VecDeque::new(),
+                jobs_pending: 0,
+                gang: None,
+                gang_epoch: 0,
+                gang_active: 0,
+                gang_slots: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
         let mut handles = Vec::new();
         for _ in 0..threads {
-            let rx = Arc::clone(&rx);
-            let pending = Arc::clone(&pending);
-            handles.push(std::thread::spawn(move || loop {
-                let job = {
-                    let guard = rx.lock().unwrap();
-                    guard.recv()
-                };
-                match job {
-                    Ok(job) => {
-                        job();
-                        let (lock, cv) = &*pending;
-                        let mut p = lock.lock().unwrap();
-                        *p -= 1;
-                        cv.notify_all();
-                    }
-                    Err(_) => break,
-                }
-            }));
+            let inner = Arc::clone(&inner);
+            handles.push(std::thread::spawn(move || worker_loop(&inner)));
         }
         WorkerPool {
-            tx: Some(tx),
+            inner,
             handles,
-            pending,
+            threads,
         }
     }
 
-    /// Submit a job.
-    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
-        let (lock, _) = &*self.pending;
-        *lock.lock().unwrap() += 1;
-        self.tx
-            .as_ref()
-            .expect("pool shut down")
-            .send(Box::new(f))
-            .expect("worker died");
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
-    /// Block until every submitted job has completed.
+    /// Submit a boxed job (allocates; for coarse pipeline work).
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let mut st = self.inner.state.lock().unwrap();
+        assert!(!st.shutdown, "pool shut down");
+        st.jobs.push_back(Box::new(f));
+        st.jobs_pending += 1;
+        drop(st);
+        self.inner.work_cv.notify_one();
+    }
+
+    /// Block until every submitted boxed job has completed.
     pub fn wait_idle(&self) {
-        let (lock, cv) = &*self.pending;
-        let mut p = lock.lock().unwrap();
-        while *p > 0 {
-            p = cv.wait(p).unwrap();
+        let mut st = self.inner.state.lock().unwrap();
+        while st.jobs_pending > 0 {
+            st = self.inner.done_cv.wait(st).unwrap();
+        }
+    }
+
+    /// Run `f(i)` for every i in 0..n across the parked workers with
+    /// dynamic chunk-stealing, using at most `max_threads` threads in
+    /// total (the calling thread participates and guarantees progress even
+    /// when every worker is busy elsewhere). Allocation-free: the closure
+    /// is borrowed, not boxed. If another caller's gang currently occupies
+    /// the workers, the call falls back to inline execution instead of
+    /// sleeping — concurrent sessions never serialize on the pool.
+    pub fn parallel_for<F: Fn(usize) + Sync>(&self, n: usize, max_threads: usize, f: F) {
+        if n == 0 {
+            return;
+        }
+        let total = max_threads.max(1).min(n);
+        if total == 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let worker_slots = (total - 1).min(self.threads);
+        let next = AtomicUsize::new(0);
+        let chunk = (n / (total * 8)).max(1);
+        let gang = Gang {
+            data: &f as *const F as *const (),
+            call: gang_call::<F>,
+            next: &next as *const AtomicUsize,
+            n,
+            chunk,
+        };
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            if st.gang.is_some() {
+                // Workers are busy with another caller's gang: run inline
+                // rather than sleeping for the slot (the caller is the
+                // progress guarantee either way).
+                drop(st);
+                for i in 0..n {
+                    f(i);
+                }
+                return;
+            }
+            st.gang = Some(gang);
+            st.gang_epoch += 1;
+            st.gang_slots = worker_slots;
+            drop(st);
+            self.inner.work_cv.notify_all();
+        }
+        // From here on, `f` and `next` are published to the workers: the
+        // guard guarantees — even if `f` panics below — that we wait for
+        // every joined worker to leave and clear the slot before this
+        // stack frame (and the borrows in `gang`) dies.
+        let _guard = GangGuard(&self.inner);
+        // The caller drains the counter too: progress never depends on a
+        // worker being free.
+        loop {
+            let start = next.fetch_add(chunk, Ordering::Relaxed);
+            if start >= n {
+                break;
+            }
+            let end = (start + chunk).min(n);
+            for i in start..end {
+                f(i);
+            }
+        }
+    }
+}
+
+/// Completion guard for a published gang: waits out every joined worker
+/// and frees the slot, on both the normal path and caller unwind (a panic
+/// in the task must not leave workers holding dangling pointers, nor wedge
+/// the pool).
+struct GangGuard<'a>(&'a Inner);
+
+impl Drop for GangGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.0.state.lock().unwrap();
+        while st.gang_active > 0 {
+            st = self.0.done_cv.wait(st).unwrap();
+        }
+        st.gang = None;
+        st.gang_slots = 0;
+        drop(st);
+        self.0.done_cv.notify_all();
+    }
+}
+
+/// Worker-side guard: the active count must drop even if the gang task
+/// panics on this worker (the thread dies, but the dispatching caller must
+/// not hang waiting for it).
+struct ActiveGuard<'a>(&'a Inner);
+
+impl Drop for ActiveGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.0.state.lock().unwrap();
+        st.gang_active -= 1;
+        if st.gang_active == 0 {
+            self.0.done_cv.notify_all();
+        }
+    }
+}
+
+enum Work {
+    Job(Job),
+    Gang(Gang, u64),
+}
+
+fn worker_loop(inner: &Inner) {
+    let mut last_epoch = 0u64;
+    loop {
+        let work = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                // Drain queued jobs even during shutdown (drop joins after
+                // running what was submitted, as the seed pool did).
+                if let Some(job) = st.jobs.pop_front() {
+                    break Work::Job(job);
+                }
+                if st.shutdown {
+                    return;
+                }
+                if let Some(g) = st.gang {
+                    if st.gang_epoch != last_epoch && st.gang_slots > 0 {
+                        st.gang_slots -= 1;
+                        st.gang_active += 1;
+                        break Work::Gang(g, st.gang_epoch);
+                    }
+                }
+                st = inner.work_cv.wait(st).unwrap();
+            }
+        };
+        match work {
+            Work::Job(job) => {
+                job();
+                let mut st = inner.state.lock().unwrap();
+                st.jobs_pending -= 1;
+                if st.jobs_pending == 0 {
+                    inner.done_cv.notify_all();
+                }
+            }
+            Work::Gang(g, epoch) => {
+                last_epoch = epoch;
+                // Decrements gang_active even if the task panics below.
+                let _active = ActiveGuard(inner);
+                // SAFETY: the dispatching caller keeps the closure and the
+                // counter alive until `gang_active` returns to 0, which it
+                // observes under the same lock that guarded our join.
+                unsafe {
+                    let next = &*g.next;
+                    loop {
+                        let start = next.fetch_add(g.chunk, Ordering::Relaxed);
+                        if start >= g.n {
+                            break;
+                        }
+                        let end = (start + g.chunk).min(g.n);
+                        for i in start..end {
+                            (g.call)(g.data, i);
+                        }
+                    }
+                }
+            }
         }
     }
 }
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        self.tx.take();
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.inner.work_cv.notify_all();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -193,5 +413,69 @@ mod tests {
         let pool = WorkerPool::new(2);
         pool.submit(|| std::thread::sleep(std::time::Duration::from_millis(10)));
         drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn pool_parallel_for_visits_all_once() {
+        let pool = WorkerPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..2000).map(|_| AtomicUsize::new(0)).collect();
+        for _ in 0..5 {
+            // repeated dispatches reuse the same parked workers
+            pool.parallel_for(2000, 8, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 5));
+    }
+
+    #[test]
+    fn pool_parallel_for_single_thread_is_inline() {
+        let pool = WorkerPool::new(4);
+        let count = AtomicUsize::new(0);
+        pool.parallel_for(100, 1, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn pool_parallel_for_concurrent_callers() {
+        // Two threads dispatching gangs on one pool must both complete
+        // (the caller always participates, so no deadlock).
+        let pool = Arc::new(WorkerPool::new(2));
+        let total = Arc::new(AtomicU64::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = Arc::clone(&pool);
+                let total = Arc::clone(&total);
+                s.spawn(move || {
+                    for _ in 0..20 {
+                        pool.parallel_for(64, 4, |i| {
+                            total.fetch_add(i as u64, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 20 * (63 * 64 / 2) as u64);
+    }
+
+    #[test]
+    fn pool_mixes_jobs_and_gangs() {
+        let pool = WorkerPool::new(3);
+        let jobs = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let jobs = Arc::clone(&jobs);
+            pool.submit(move || {
+                jobs.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        let count = AtomicUsize::new(0);
+        pool.parallel_for(500, 4, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        pool.wait_idle();
+        assert_eq!(count.load(Ordering::Relaxed), 500);
+        assert_eq!(jobs.load(Ordering::Relaxed), 10);
     }
 }

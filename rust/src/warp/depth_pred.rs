@@ -19,16 +19,29 @@ pub const DEPTH_SLACK: f32 = 1.05;
 /// be re-rendered but have no valid reprojected depth get `INFINITY`
 /// (no culling — typically disocclusions).
 pub fn predict_depth_limits(warped: &WarpedFrame) -> Vec<f32> {
-    let frame = &warped.frame;
+    let mut limits = Vec::new();
+    predict_depth_limits_into(&warped.frame, &warped.trunc_depth, &mut limits);
+    limits
+}
+
+/// [`predict_depth_limits`] into a caller-owned buffer (cleared first;
+/// allocation-free once warm). `trunc_depth` is the reprojected
+/// truncated-depth map of `frame`.
+pub fn predict_depth_limits_into(
+    frame: &crate::render::Frame,
+    trunc_depth: &[f32],
+    limits: &mut Vec<f32>,
+) {
     let (tx, ty) = frame.tile_grid();
-    let mut limits = vec![f32::NEG_INFINITY; tx * ty];
+    limits.clear();
+    limits.resize(tx * ty, f32::NEG_INFINITY);
     let w = frame.width;
     for t in 0..tx * ty {
         let (x0, y0, x1, y1) = frame.tile_bounds(t);
         let mut m = f32::NEG_INFINITY;
         for y in y0..y1 {
             for x in x0..x1 {
-                let d = warped.trunc_depth[y * w + x];
+                let d = trunc_depth[y * w + x];
                 if d != INVALID_DEPTH && d.is_finite() && d > m {
                     m = d;
                 }
@@ -40,7 +53,6 @@ pub fn predict_depth_limits(warped: &WarpedFrame) -> Vec<f32> {
             m * DEPTH_SLACK
         };
     }
-    limits
 }
 
 /// Estimated per-tile workload under depth limits: the number of pairs
@@ -126,7 +138,7 @@ mod tests {
         let (frame, stats) = r.render(&pose);
         let warped = super::super::reproject::reproject(
             &frame,
-            &r.intrinsics,
+            r.intrinsics(),
             &pose,
             &pose,
         );

@@ -5,6 +5,25 @@
 
 use crate::render::framebuffer::Frame;
 
+/// Reusable sample/hole buffers for [`inpaint_tile_with`]; a
+/// `StreamSession` keeps one so steady-state inpainting allocates nothing.
+#[derive(Clone, Debug, Default)]
+pub struct InpaintScratch {
+    samples: Vec<(f32, f32, [f32; 3], f32)>, // x, y, rgb, depth
+    holes: Vec<(u32, u32)>,
+}
+
+/// Fill every unfilled pixel of tile `t` by interpolating the filled ones
+/// (compat wrapper over [`inpaint_tile_with`] with fresh scratch).
+pub fn inpaint_tile(
+    frame: &mut Frame,
+    filled: &mut [bool],
+    t: usize,
+    mask_interpolated: bool,
+) -> usize {
+    inpaint_tile_with(frame, filled, t, mask_interpolated, &mut InpaintScratch::default())
+}
+
 /// Fill every unfilled pixel of tile `t` by interpolating the filled ones.
 /// `filled` is the per-pixel fill mask from the warp; inpainted pixels are
 /// marked filled afterwards. When `mask_interpolated` is set (the paper's
@@ -12,17 +31,19 @@ use crate::render::framebuffer::Frame;
 /// never seed the next warp; otherwise they become regular valid pixels.
 ///
 /// Returns the number of pixels inpainted.
-pub fn inpaint_tile(
+pub fn inpaint_tile_with(
     frame: &mut Frame,
     filled: &mut [bool],
     t: usize,
     mask_interpolated: bool,
+    scratch: &mut InpaintScratch,
 ) -> usize {
     let (x0, y0, x1, y1) = frame.tile_bounds(t);
     let w = frame.width;
 
     // Gather filled samples of this tile.
-    let mut samples: Vec<(f32, f32, [f32; 3], f32)> = Vec::new(); // x, y, rgb, depth
+    let samples = &mut scratch.samples;
+    samples.clear();
     for y in y0..y1 {
         for x in x0..x1 {
             if filled[y * w + x] {
@@ -36,11 +57,12 @@ pub fn inpaint_tile(
         }
     }
 
-    let mut holes: Vec<(usize, usize)> = Vec::new();
+    let holes = &mut scratch.holes;
+    holes.clear();
     for y in y0..y1 {
         for x in x0..x1 {
             if !filled[y * w + x] {
-                holes.push((x, y));
+                holes.push((x as u32, y as u32));
             }
         }
     }
@@ -48,7 +70,8 @@ pub fn inpaint_tile(
         return 0;
     }
 
-    for &(hx, hy) in &holes {
+    for &(hx, hy) in holes.iter() {
+        let (hx, hy) = (hx as usize, hy as usize);
         let (rgb, depth) = if samples.is_empty() {
             // Degenerate: empty tile — borrow from the nearest filled pixel
             // anywhere in the frame via an expanding ring search.
@@ -65,7 +88,7 @@ pub fn inpaint_tile(
             let mut acc = [0.0f32; 3];
             let mut dacc = 0.0f32;
             let mut wsum = 0.0f32;
-            for &(sx, sy, c, d) in &samples {
+            for &(sx, sy, c, d) in samples.iter() {
                 let dx = sx - hx as f32;
                 let dy = sy - hy as f32;
                 let wgt = 1.0 / (dx * dx + dy * dy + 1e-3);

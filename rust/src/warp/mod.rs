@@ -1,12 +1,14 @@
 //! Viewpoint transformation and sparse rendering (paper Sec. IV, Algo. 1):
 //!
-//! * [`reproject`] — back-project the reference frame with its estimated
-//!   depth, rigidly transform, forward-splat onto the target view with a
-//!   z-buffer (Algo. 1 lines 2–4), carrying the truncated-depth map.
-//! * [`tile_warp`] — **TWSR**: per-tile classification (interpolate vs
-//!   re-render, threshold N₀ = 1/6 missing), with the optional
-//!   no-cumulative-error **mask** that bars interpolated pixels from
-//!   seeding later warps.
+//! * [`reproject`] / [`reproject_into`] — back-project the reference frame
+//!   with its estimated depth, rigidly transform, forward-splat onto the
+//!   target view with a z-buffer (Algo. 1 lines 2–4), carrying the
+//!   truncated-depth map. The `_into` form targets a caller frame +
+//!   [`WarpScratch`], the streaming allocation-free path.
+//! * [`tile_warp`] / [`classify_and_inpaint`] — **TWSR**: per-tile
+//!   classification (interpolate vs re-render, threshold N₀ = 1/6
+//!   missing), with the optional no-cumulative-error **mask** that bars
+//!   interpolated pixels from seeding later warps.
 //! * [`pixel_warp`] — **PWSR** baseline (Potamoi-style): per-pixel fill,
 //!   no tile-level skipping.
 //! * [`depth_pred`] — **DPES**: per-tile early-stop depth prediction from
@@ -18,8 +20,11 @@ pub mod pixel_warp;
 pub mod reproject;
 pub mod tile_warp;
 
-pub use depth_pred::predict_depth_limits;
-pub use inpaint::inpaint_tile;
+pub use depth_pred::{predict_depth_limits, predict_depth_limits_into};
+pub use inpaint::{inpaint_tile, inpaint_tile_with, InpaintScratch};
 pub use pixel_warp::pixel_warp;
-pub use reproject::{reproject, WarpedFrame};
-pub use tile_warp::{tile_warp, TileDecision, TileWarpOutcome, TileWarpPolicy};
+pub use reproject::{reproject, reproject_into, WarpScratch, WarpedFrame};
+pub use tile_warp::{
+    classify_and_inpaint, tile_warp, TileClassSummary, TileDecision, TileWarpOutcome,
+    TileWarpPolicy,
+};

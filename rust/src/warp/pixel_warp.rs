@@ -44,7 +44,7 @@ pub fn pixel_warp(renderer: &Renderer, pose: &Pose, warped: &mut WarpedFrame) ->
         }
     }
 
-    let grid = renderer.intrinsics.tile_grid();
+    let grid = renderer.intrinsics().tile_grid();
     let touched_tiles = (0..grid.0 * grid.1)
         .filter(|&t| frame.tile_valid_count(t) < frame.tile_pixel_count(t))
         .count();
@@ -76,7 +76,7 @@ mod tests {
         let poses = scene.sample_poses(2);
         let r = Renderer::new(scene.cloud, scene.intrinsics);
         let (ref_frame, _) = r.render(&poses[0]);
-        let mut warped = reproject(&ref_frame, &r.intrinsics, &poses[0], &poses[1]);
+        let mut warped = reproject(&ref_frame, r.intrinsics(), &poses[0], &poses[1]);
         let holes_before = warped.filled_mask.iter().filter(|&&f| !f).count();
         assert!(holes_before > 0, "need holes for this test");
         let stats = pixel_warp(&r, &poses[1], &mut warped);
@@ -94,7 +94,7 @@ mod tests {
         let r = Renderer::new(scene.cloud, scene.intrinsics);
         let (ref_frame, _) = r.render(&poses[0]);
         let (_, dense_stats) = r.render(&poses[5]);
-        let mut warped = reproject(&ref_frame, &r.intrinsics, &poses[0], &poses[5]);
+        let mut warped = reproject(&ref_frame, r.intrinsics(), &poses[0], &poses[5]);
         let stats = pixel_warp(&r, &poses[5], &mut warped);
         // Sparse pair count is bounded by dense but nonzero whenever any
         // tile had holes.
@@ -109,7 +109,7 @@ mod tests {
         let r = Renderer::new(scene.cloud, scene.intrinsics);
         let (ref_frame, _) = r.render(&poses[0]);
         let (dense, _) = r.render(&poses[2]);
-        let mut warped = reproject(&ref_frame, &r.intrinsics, &poses[0], &poses[2]);
+        let mut warped = reproject(&ref_frame, r.intrinsics(), &poses[0], &poses[2]);
         pixel_warp(&r, &poses[2], &mut warped);
         let p = crate::metrics::psnr(&warped.frame.rgb, &dense.rgb);
         assert!(p > 22.0, "PWSR too far from dense: {p:.1} dB");

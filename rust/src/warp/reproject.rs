@@ -34,18 +34,60 @@ pub struct WarpedFrame {
     pub filled: usize,
 }
 
-/// Reproject `reference` (rendered at `ref_pose`) into `tgt_pose`.
+/// Persistent reprojection buffers (z-buffer, truncated-depth map, fill
+/// mask). A `StreamSession` keeps one across its whole lifetime so
+/// steady-state warps allocate nothing.
+#[derive(Clone, Debug, Default)]
+pub struct WarpScratch {
+    pub(crate) zbuf: Vec<f32>,
+    /// Reprojected truncated depths (input to DPES).
+    pub trunc_depth: Vec<f32>,
+    /// Per-pixel fill mask (input to the TWSR classifier).
+    pub filled_mask: Vec<bool>,
+    /// Number of pixels the last warp filled.
+    pub filled: usize,
+}
+
+/// Reproject `reference` (rendered at `ref_pose`) into `tgt_pose`,
+/// allocating fresh buffers (compat wrapper over [`reproject_into`]).
 pub fn reproject(
     reference: &Frame,
     intr: &Intrinsics,
     ref_pose: &Pose,
     tgt_pose: &Pose,
 ) -> WarpedFrame {
+    let mut out = Frame::new(reference.width, reference.height);
+    let mut ws = WarpScratch::default();
+    reproject_into(reference, intr, ref_pose, tgt_pose, &mut out, &mut ws);
+    WarpedFrame {
+        frame: out,
+        trunc_depth: ws.trunc_depth,
+        filled_mask: ws.filled_mask,
+        filled: ws.filled,
+    }
+}
+
+/// Reproject into a caller-owned target frame + scratch, both reset in
+/// place (allocation-free once warm). `out` must match the reference
+/// dimensions.
+pub fn reproject_into(
+    reference: &Frame,
+    intr: &Intrinsics,
+    ref_pose: &Pose,
+    tgt_pose: &Pose,
+    out: &mut Frame,
+    ws: &mut WarpScratch,
+) {
     let w = reference.width;
     let h = reference.height;
-    let mut out = Frame::new(w, h);
-    let mut zbuf = vec![f32::INFINITY; w * h];
-    let mut trunc = vec![INVALID_DEPTH; w * h];
+    debug_assert_eq!((out.width, out.height), (w, h), "warp target size mismatch");
+    out.reset();
+    ws.zbuf.clear();
+    ws.zbuf.resize(w * h, f32::INFINITY);
+    ws.trunc_depth.clear();
+    ws.trunc_depth.resize(w * h, INVALID_DEPTH);
+    let zbuf = &mut ws.zbuf;
+    let trunc = &mut ws.trunc_depth;
 
     // Compose ref-camera → world → tgt-camera once.
     let ref2world = ref_pose.camera_to_world();
@@ -110,18 +152,14 @@ pub fn reproject(
             }
         }
     }
-    let filled_mask: Vec<bool> = zbuf.iter().map(|&z| z != f32::INFINITY).collect();
-    for &f in &filled_mask {
+    ws.filled_mask.clear();
+    ws.filled_mask.extend(zbuf.iter().map(|&z| z != f32::INFINITY));
+    for &f in &ws.filled_mask {
         if f {
             filled += 1;
         }
     }
-    WarpedFrame {
-        frame: out,
-        trunc_depth: trunc,
-        filled_mask,
-        filled,
-    }
+    ws.filled = filled;
 }
 
 impl WarpedFrame {

@@ -13,7 +13,7 @@
 //! mask) — quality then *improves* with longer warp windows because masked
 //! regions keep getting re-rendered.
 
-use super::inpaint::inpaint_tile;
+use super::inpaint::{inpaint_tile_with, InpaintScratch};
 use super::reproject::WarpedFrame;
 use crate::render::framebuffer::Frame;
 use crate::RERENDER_MISSING_FRACTION;
@@ -76,16 +76,57 @@ impl TileWarpOutcome {
     }
 }
 
+/// Copyable per-frame summary of the TWSR classification (the trace-free
+/// counterpart of [`TileWarpOutcome`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TileClassSummary {
+    pub complete: u32,
+    pub interpolated: u32,
+    pub rerender: u32,
+    pub inpainted_pixels: usize,
+}
+
 /// Classify all tiles of a warped frame, interpolating the nearly-complete
-/// ones in place. The caller then runs `render_sparse` with
+/// ones in place (compat wrapper over [`classify_and_inpaint`] with fresh
+/// buffers). The caller then runs a sparse pass with
 /// `outcome.rerender_mask` (plus DPES depth limits) to fill the rest.
 pub fn tile_warp(warped: &mut WarpedFrame, policy: &TileWarpPolicy) -> TileWarpOutcome {
-    let frame: &mut Frame = &mut warped.frame;
+    let mut decisions = Vec::new();
+    let mut rerender_mask = Vec::new();
+    let summary = classify_and_inpaint(
+        &mut warped.frame,
+        &mut warped.filled_mask,
+        policy,
+        &mut rerender_mask,
+        &mut decisions,
+        &mut InpaintScratch::default(),
+    );
+    TileWarpOutcome {
+        decisions,
+        rerender_mask,
+        inpainted_pixels: summary.inpainted_pixels,
+    }
+}
+
+/// The TWSR classification core over caller-owned buffers: `decisions` and
+/// `rerender_mask` are cleared and refilled, interpolated tiles are
+/// inpainted in place through `scratch`. Allocation-free once capacities
+/// are warm — the `StreamSession` steady-state path.
+pub fn classify_and_inpaint(
+    frame: &mut Frame,
+    filled_mask: &mut [bool],
+    policy: &TileWarpPolicy,
+    rerender_mask: &mut Vec<bool>,
+    decisions: &mut Vec<TileDecision>,
+    scratch: &mut InpaintScratch,
+) -> TileClassSummary {
     let (tx, ty) = frame.tile_grid();
     let num_tiles = tx * ty;
-    let mut decisions = vec![TileDecision::Complete; num_tiles];
-    let mut rerender_mask = vec![false; num_tiles];
-    let mut inpainted = 0usize;
+    decisions.clear();
+    decisions.resize(num_tiles, TileDecision::Complete);
+    rerender_mask.clear();
+    rerender_mask.resize(num_tiles, false);
+    let mut summary = TileClassSummary::default();
 
     for t in 0..num_tiles {
         let (x0, y0, x1, y1) = frame.tile_bounds(t);
@@ -93,27 +134,26 @@ pub fn tile_warp(warped: &mut WarpedFrame, policy: &TileWarpPolicy) -> TileWarpO
         let mut missing = 0usize;
         for y in y0..y1 {
             for x in x0..x1 {
-                if !warped.filled_mask[y * frame.width + x] {
+                if !filled_mask[y * frame.width + x] {
                     missing += 1;
                 }
             }
         }
         if missing == 0 {
             decisions[t] = TileDecision::Complete;
+            summary.complete += 1;
         } else if (missing as f32) <= policy.missing_threshold * total as f32 {
-            inpainted += inpaint_tile(frame, &mut warped.filled_mask, t, policy.mask_interpolated);
+            summary.inpainted_pixels +=
+                inpaint_tile_with(frame, filled_mask, t, policy.mask_interpolated, scratch);
             decisions[t] = TileDecision::Interpolated;
+            summary.interpolated += 1;
         } else {
             decisions[t] = TileDecision::Rerender;
             rerender_mask[t] = true;
+            summary.rerender += 1;
         }
     }
-
-    TileWarpOutcome {
-        decisions,
-        rerender_mask,
-        inpainted_pixels: inpainted,
-    }
+    summary
 }
 
 #[cfg(test)]

@@ -3,8 +3,11 @@
 //! rasterizer. This closes the three-layer loop: L1 kernel == jnp oracle
 //! (pytest) and L1-via-PJRT == native rust (here) ⇒ all backends agree.
 //!
-//! Requires `make artifacts`; tests self-skip (with a loud message) when
-//! artifacts are absent so `cargo test` stays runnable pre-build.
+//! Requires `make artifacts` and the `pjrt` cargo feature (the `xla`
+//! dependency is not in the offline registry); tests self-skip (with a
+//! loud message) when artifacts are absent so `cargo test` stays runnable
+//! pre-build.
+#![cfg(feature = "pjrt")]
 
 use ls_gaussian::metrics::psnr;
 use ls_gaussian::render::{IntersectMode, RenderConfig, Renderer};

@@ -1,0 +1,189 @@
+//! Integration tests for the session-oriented streaming core (ISSUE 1):
+//! RenderPass/wrapper parity, FrameScratch reuse determinism, coordinator
+//! ↔ session equivalence, and the multi-session StreamServer against solo
+//! sessions — including that per-session traces still drive the hardware
+//! models.
+
+use ls_gaussian::coordinator::{
+    CoordinatorConfig, FrameKind, StreamServer, StreamSession, StreamingCoordinator,
+};
+use ls_gaussian::render::{Frame, FrameScratch, RenderPass, Renderer};
+use ls_gaussian::scene::{generate, Pose, Scene, SceneAssets};
+use ls_gaussian::sim::{GpuModel, WorkloadTrace};
+use ls_gaussian::util::pool::WorkerPool;
+use std::sync::Arc;
+
+fn small(name: &str) -> (Scene, Vec<Pose>) {
+    let scene = generate(name, 0.05, 160, 128);
+    let poses = scene.sample_poses(10);
+    (scene, poses)
+}
+
+fn assert_frames_equal(a: &Frame, b: &Frame, what: &str) {
+    assert_eq!(a.rgb, b.rgb, "{what}: rgb diverged");
+    assert_eq!(a.alpha, b.alpha, "{what}: alpha diverged");
+    assert_eq!(a.depth, b.depth, "{what}: depth diverged");
+    assert_eq!(a.trunc_depth, b.trunc_depth, "{what}: trunc_depth diverged");
+    assert_eq!(a.valid, b.valid, "{what}: valid diverged");
+}
+
+#[test]
+fn dense_pass_matches_render_wrapper_bit_for_bit() {
+    let (scene, poses) = small("room");
+    let r = Renderer::new(scene.cloud, scene.intrinsics);
+    let mut scratch = FrameScratch::new();
+    let mut frame = Frame::new(160, 128);
+    for pose in &poses[..3] {
+        r.execute(pose, &mut frame, RenderPass::Dense, &mut scratch);
+        let (reference, _) = r.render(pose);
+        assert_frames_equal(&frame, &reference, "dense");
+    }
+}
+
+#[test]
+fn sparse_pass_matches_render_sparse_wrapper_bit_for_bit() {
+    let (scene, poses) = small("drjohnson");
+    let r = Renderer::new(scene.cloud, scene.intrinsics);
+    let n = scene.intrinsics.num_tiles();
+    let mask: Vec<bool> = (0..n).map(|t| t % 3 != 1).collect();
+    let limits = vec![scene.preset.extent * 0.9; n];
+
+    let mut scratch = FrameScratch::new();
+    let mut via_pass = Frame::new(160, 128);
+    r.execute(&poses[0], &mut via_pass, RenderPass::Dense, &mut scratch);
+    let mut via_wrapper = via_pass.clone();
+
+    r.execute(
+        &poses[1],
+        &mut via_pass,
+        RenderPass::SparseTiles {
+            mask: &mask,
+            depth_limits: Some(&limits),
+        },
+        &mut scratch,
+    );
+    r.render_sparse(&poses[1], &mut via_wrapper, &mask, Some(&limits));
+    assert_frames_equal(&via_pass, &via_wrapper, "sparse");
+}
+
+#[test]
+fn invalid_pixels_pass_matches_render_pixels_wrapper_bit_for_bit() {
+    let (scene, poses) = small("chair");
+    let r = Renderer::new(scene.cloud, scene.intrinsics);
+    let mut scratch = FrameScratch::new();
+
+    // Build a partially-valid frame (dense render, then poke holes).
+    let (mut via_pass, _) = r.render(&poses[0]);
+    for i in (0..via_pass.valid.len()).step_by(7) {
+        via_pass.valid[i] = false;
+    }
+    let mut via_wrapper = via_pass.clone();
+
+    r.execute(&poses[1], &mut via_pass, RenderPass::InvalidPixels, &mut scratch);
+    r.render_pixels(&poses[1], &mut via_wrapper);
+    assert_frames_equal(&via_pass, &via_wrapper, "invalid-pixels");
+}
+
+#[test]
+fn one_scratch_across_ten_frames_matches_fresh_scratch() {
+    // Determinism of arena reuse: a single FrameScratch driven through 10
+    // frames must produce exactly what per-frame fresh scratches produce.
+    let (scene, poses) = small("garden");
+    let r = Renderer::new(scene.cloud, scene.intrinsics);
+    let mut reused = FrameScratch::new();
+    let mut frame = Frame::new(160, 128);
+    for pose in &poses {
+        r.execute(pose, &mut frame, RenderPass::Dense, &mut reused);
+        let mut fresh_frame = Frame::new(160, 128);
+        let mut fresh = FrameScratch::new();
+        r.execute(pose, &mut fresh_frame, RenderPass::Dense, &mut fresh);
+        assert_frames_equal(&frame, &fresh_frame, "scratch reuse");
+        assert_eq!(reused.bins.entries, fresh.bins.entries);
+        assert_eq!(reused.traversed, fresh.traversed);
+        assert_eq!(reused.contributing, fresh.contributing);
+        assert_eq!(reused.blend_ops, fresh.blend_ops);
+    }
+}
+
+#[test]
+fn session_reproduces_coordinator_sequence() {
+    // The wrapper adds no behavior: session.process == coordinator.process.
+    let (scene, poses) = small("playroom");
+    let assets = SceneAssets::from_scene(&scene);
+    let mut coord = StreamingCoordinator::new(
+        Renderer::from_assets(Arc::clone(&assets)),
+        CoordinatorConfig::default(),
+    );
+    let mut session = StreamSession::new(
+        Arc::clone(&assets),
+        Arc::new(WorkerPool::new(2)),
+        CoordinatorConfig::default(),
+    );
+    for pose in &poses {
+        let a = coord.process(pose);
+        let b = session.process(pose);
+        assert_eq!(a.trace.kind, b.trace.kind);
+        assert_eq!(a.trace.render.pairs, b.trace.render.pairs);
+        assert_frames_equal(&a.frame, &b.frame, "coordinator vs session");
+    }
+}
+
+#[test]
+fn two_server_sessions_each_match_a_solo_session() {
+    // Two sessions over one shared scene, stepped concurrently, must be
+    // frame-for-frame identical to two solo sessions on their own scenes.
+    let (scene, poses) = small("room");
+    let assets = SceneAssets::from_scene(&scene);
+    let cfg = CoordinatorConfig::default();
+
+    let mut server = StreamServer::new(Arc::clone(&assets), cfg);
+    server.add_session();
+    server.add_session();
+
+    let mut solo_a =
+        StreamSession::new(Arc::clone(&assets), Arc::new(WorkerPool::new(2)), cfg);
+    let mut solo_b =
+        StreamSession::new(Arc::clone(&assets), Arc::new(WorkerPool::new(2)), cfg);
+
+    // Session B runs the trajectory reversed so the two streams diverge.
+    let rev: Vec<Pose> = poses.iter().rev().copied().collect();
+    for (pa, pb) in poses.iter().zip(&rev) {
+        let results = server.step_all(&[*pa, *pb]);
+        let ra = solo_a.process(pa);
+        let rb = solo_b.process(pb);
+        assert_frames_equal(&results[0].frame, &ra.frame, "server session 0");
+        assert_frames_equal(&results[1].frame, &rb.frame, "server session 1");
+        assert_eq!(results[0].trace.kind, ra.trace.kind);
+        assert_eq!(results[1].trace.kind, rb.trace.kind);
+    }
+}
+
+#[test]
+fn four_concurrent_sessions_feed_the_hardware_models() {
+    // Acceptance: ≥4 concurrent sessions against one Arc<SceneAssets>,
+    // with per-session FrameTraces consumable by sim:: models.
+    let (scene, poses) = small("drjohnson");
+    let assets = SceneAssets::from_scene(&scene);
+    let mut server = StreamServer::new(Arc::clone(&assets), CoordinatorConfig::default());
+    for _ in 0..4 {
+        server.add_session();
+    }
+    let mut per_session: Vec<Vec<WorkloadTrace>> = vec![Vec::new(); 4];
+    for pose in poses.iter().take(6) {
+        let step = [*pose; 4];
+        for (sid, r) in server.step_all(&step).iter().enumerate() {
+            per_session[sid].push(WorkloadTrace::from_frame(&r.trace, &scene.intrinsics));
+        }
+    }
+    let gpu = GpuModel::default();
+    for traces in &per_session {
+        assert_eq!(traces.len(), 6);
+        assert_eq!(traces[0].kind, FrameKind::Full);
+        assert_eq!(traces[1].kind, FrameKind::Warped);
+        assert!(traces[1].rerender_mask.is_some());
+        let t = gpu.sequence_time(traces);
+        assert!(t.is_finite() && t > 0.0);
+        // Warped frames must show the sparse-work reduction end to end.
+        assert!(traces[1].total_pairs() < traces[0].total_pairs());
+    }
+}
