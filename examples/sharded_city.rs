@@ -1,0 +1,105 @@
+//! City-scale streaming over spatial shards: a scene deliberately larger
+//! than the residency budget, served through a `ShardedScene` whose LRU
+//! keeps only the shards the current viewpoint can see. This is the shape
+//! of the ROADMAP's "clouds larger than one node's memory" deployment:
+//! the catalog (KBs) is always resident, the Gaussians (MBs+) page in and
+//! out per frame, and rendering stays bit-identical to the monolithic
+//! path (rust/tests/shard_parity.rs).
+//!
+//!     cargo run --release --example sharded_city -- --scale 0.6 --frames 48 --budget-pct 35
+//!
+//! Prints per-frame resident-set/evict stats plus the steady-state
+//! summary.
+
+use ls_gaussian::coordinator::{CoordinatorConfig, StreamServer};
+use ls_gaussian::math::Vec3;
+use ls_gaussian::render::IntersectMode;
+use ls_gaussian::scene::{generate, Pose};
+use ls_gaussian::shard::{partition_cloud, MemoryShardStore, ShardedScene};
+use ls_gaussian::util::cli::Args;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let scale = args.f32_or("scale", 0.6);
+    let frames = args.usize_or("frames", 48);
+    let budget_pct = args.usize_or("budget-pct", 35);
+    let target = args.usize_or("target-splats", 2048);
+
+    // A large outdoor scene: heavy-tailed clusters over a wide extent.
+    let scene = generate("garden", scale, 256, 160);
+    let shards = partition_cloud(&scene.cloud, target);
+    let total_bytes: usize = shards.iter().map(|(_, s)| s.bytes).sum();
+    let budget = total_bytes * budget_pct / 100;
+    let sharded = Arc::new(ShardedScene::from_store(
+        Box::new(MemoryShardStore::new(shards)),
+        scene.intrinsics,
+        budget,
+    ));
+    println!(
+        "sharded city: {} gaussians in {} shards ({:.1} MiB total), \
+         residency budget {:.1} MiB ({budget_pct}%)",
+        scene.cloud.len(),
+        sharded.num_shards(),
+        total_bytes as f64 / (1 << 20) as f64,
+        budget as f64 / (1 << 20) as f64,
+    );
+
+    let mut server = StreamServer::new(
+        Arc::clone(&sharded),
+        CoordinatorConfig {
+            mode: IntersectMode::Tait,
+            ..Default::default()
+        },
+    );
+    server.add_session();
+
+    // A surveying sweep: the camera circles the scene looking across it,
+    // so the visible shard set rotates and the LRU has real work to do.
+    let e = scene.preset.extent;
+    let poses: Vec<Pose> = (0..frames)
+        .map(|k| {
+            let a = k as f32 / frames as f32 * std::f32::consts::TAU;
+            let eye = Vec3::new(e * 0.55 * a.cos(), -e * 0.2, e * 0.55 * a.sin());
+            let target = Vec3::new(-e * 0.8 * a.cos(), 0.0, -e * 0.8 * a.sin());
+            Pose::look_at(eye, target, Vec3::new(0.0, -1.0, 0.0))
+        })
+        .collect();
+
+    println!(
+        "{:>5} {:>5} {:>8} {:>8} {:>6} {:>6} {:>12} {:>9}",
+        "frame", "kind", "visible", "resident", "loads", "evicts", "res bytes", "cull µs"
+    );
+    let t0 = Instant::now();
+    for (f, pose) in poses.iter().enumerate() {
+        let summaries = server.advance_all(&[*pose]);
+        let s = summaries[0];
+        let sh = s.pass.shards;
+        println!(
+            "{:>5} {:>5} {:>4}/{:<3} {:>8} {:>6} {:>6} {:>12} {:>9.0}",
+            f,
+            match s.kind {
+                Some(k) => format!("{k:?}").chars().take(4).collect::<String>(),
+                None => "-".into(),
+            },
+            sh.visible,
+            sh.total,
+            sh.resident,
+            sh.loaded,
+            sh.evicted,
+            sh.resident_bytes,
+            sh.t_cull.as_secs_f64() * 1e6,
+        );
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let (loads, evictions) = sharded.residency_counters();
+    println!(
+        "\n{} frames in {wall:.2}s ({:.1} FPS) | lifetime loads {loads}, \
+         evictions {evictions} | scene never fully resident: \
+         budget {budget_pct}% of {:.1} MiB",
+        frames,
+        frames as f64 / wall,
+        total_bytes as f64 / (1 << 20) as f64,
+    );
+}

@@ -779,12 +779,76 @@ pub fn streaming_sessions(opts: &ExpOptions) -> Json {
     );
     cmp.row(&["alloc-per-frame".into(), f1(fps_alloc), speedup(1.0)]);
     cmp.row(&["reused-scratch".into(), f1(fps_reuse), speedup(fps_reuse / fps_alloc)]);
+
+    // Sharded steady state: the same scene behind a ShardedScene with a
+    // deliberately undersized residency budget (40% of scene bytes), so
+    // the trajectory records shard-cull overhead and residency churn
+    // alongside the monolithic numbers.
+    use crate::shard::{partition_cloud, MemoryShardStore, ShardedScene};
+    let target = (scene.cloud.len() / 24).max(512);
+    let shards = partition_cloud(&scene.cloud, target);
+    let total_bytes: usize = shards.iter().map(|(_, s)| s.bytes).sum();
+    let budget = total_bytes * 2 / 5;
+    let sharded = Arc::new(ShardedScene::from_store(
+        Box::new(MemoryShardStore::new(shards)),
+        scene.intrinsics,
+        budget,
+    ));
+    let n_shards = sharded.num_shards();
+    let mut server = StreamServer::new(Arc::clone(&sharded), cfg);
+    server.add_session();
+    let shard_poses = scene.sample_poses(frames);
+    for pose in shard_poses.iter().take(warmup) {
+        server.advance_all(&[*pose]);
+    }
+    let (mut visible, mut loaded, mut evicted) = (0u64, 0u64, 0u64);
+    let mut cull_s = 0.0f64;
+    let t0 = Instant::now();
+    for pose in shard_poses.iter().skip(warmup) {
+        for s in server.advance_all(&[*pose]) {
+            visible += s.pass.shards.visible as u64;
+            loaded += s.pass.shards.loaded as u64;
+            evicted += s.pass.shards.evicted as u64;
+            cull_s += s.pass.shards.t_cull.as_secs_f64();
+        }
+    }
+    let shard_wall = t0.elapsed().as_secs_f64();
+    let shard_frames = (frames - warmup) as f64;
+    let fps_sharded = shard_frames / shard_wall;
+    let mut sh_table = Table::new(
+        "Sharded steady state — 1 session, 40% residency budget",
+        &["shards", "FPS", "visible/frame", "loads/frame", "evicts/frame", "cull ms"],
+    );
+    sh_table.row(&[
+        format!("{n_shards}"),
+        f1(fps_sharded),
+        f1(visible as f64 / shard_frames),
+        f2(loaded as f64 / shard_frames),
+        f2(evicted as f64 / shard_frames),
+        f2(cull_s / shard_frames * 1e3),
+    ]);
+
     table.print();
     cmp.print();
+    sh_table.print();
+    let (total_loads, total_evictions) = sharded.residency_counters();
+    let mut sh = Json::obj();
+    sh.set("shards", n_shards)
+        .set("target_splats", target)
+        .set("budget_bytes", budget)
+        .set("total_bytes", total_bytes)
+        .set("fps", fps_sharded)
+        .set("visible_per_frame", visible as f64 / shard_frames)
+        .set("loads_per_frame", loaded as f64 / shard_frames)
+        .set("evicts_per_frame", evicted as f64 / shard_frames)
+        .set("cull_ms", cull_s / shard_frames * 1e3)
+        .set("lifetime_loads", total_loads as f64)
+        .set("lifetime_evictions", total_evictions as f64);
     report
         .set("baseline_alloc_fps", fps_alloc)
         .set("reused_scratch_fps", fps_reuse)
-        .set("alloc_speedup", fps_reuse / fps_alloc);
+        .set("alloc_speedup", fps_reuse / fps_alloc)
+        .set("sharded", sh);
     report
 }
 

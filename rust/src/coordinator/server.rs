@@ -15,13 +15,17 @@
 //! waiting on each other's tile work.
 
 use super::session::{CoordinatorConfig, FrameResult, StepSummary, StreamSession};
-use crate::scene::{Pose, SceneAssets};
+use crate::scene::Pose;
+use crate::shard::SceneHandle;
 use crate::util::pool::{default_threads, WorkerPool};
 use std::sync::Arc;
 
 /// Serves N concurrent [`StreamSession`]s over one scene and one pool.
+/// The scene may be monolithic (`Arc<SceneAssets>`) or sharded
+/// (`Arc<ShardedScene>` with byte-budgeted residency) — sessions are
+/// oblivious to which.
 pub struct StreamServer {
-    scene: Arc<SceneAssets>,
+    scene: SceneHandle,
     pool: Arc<WorkerPool>,
     config: CoordinatorConfig,
     sessions: Vec<StreamSession>,
@@ -29,7 +33,7 @@ pub struct StreamServer {
 
 impl StreamServer {
     /// New server with a private worker pool.
-    pub fn new(scene: Arc<SceneAssets>, config: CoordinatorConfig) -> StreamServer {
+    pub fn new(scene: impl Into<SceneHandle>, config: CoordinatorConfig) -> StreamServer {
         StreamServer::with_pool(
             scene,
             config,
@@ -39,12 +43,12 @@ impl StreamServer {
 
     /// New server sharing an existing pool.
     pub fn with_pool(
-        scene: Arc<SceneAssets>,
+        scene: impl Into<SceneHandle>,
         config: CoordinatorConfig,
         pool: Arc<WorkerPool>,
     ) -> StreamServer {
         StreamServer {
-            scene,
+            scene: scene.into(),
             pool,
             config,
             sessions: Vec::new(),
@@ -54,7 +58,7 @@ impl StreamServer {
     /// Open a new viewer session; returns its id (index).
     pub fn add_session(&mut self) -> usize {
         self.sessions.push(StreamSession::new(
-            Arc::clone(&self.scene),
+            self.scene.clone(),
             Arc::clone(&self.pool),
             self.config,
         ));
@@ -64,7 +68,7 @@ impl StreamServer {
     /// Open a session with a per-viewer config override.
     pub fn add_session_with(&mut self, config: CoordinatorConfig) -> usize {
         self.sessions
-            .push(StreamSession::new(Arc::clone(&self.scene), Arc::clone(&self.pool), config));
+            .push(StreamSession::new(self.scene.clone(), Arc::clone(&self.pool), config));
         self.sessions.len() - 1
     }
 
@@ -72,7 +76,7 @@ impl StreamServer {
         self.sessions.len()
     }
 
-    pub fn scene(&self) -> &Arc<SceneAssets> {
+    pub fn scene(&self) -> &SceneHandle {
         &self.scene
     }
 
@@ -145,7 +149,7 @@ impl StreamServer {
 mod tests {
     use super::*;
     use crate::coordinator::FrameKind;
-    use crate::scene::generate;
+    use crate::scene::{generate, SceneAssets};
 
     #[test]
     fn sessions_share_one_scene() {
@@ -158,7 +162,7 @@ mod tests {
         assert_eq!(server.num_sessions(), 3);
         for id in 0..3 {
             assert!(std::ptr::eq(
-                server.session(id).renderer().scene.cloud.positions.as_ptr(),
+                server.session(id).renderer().assets().cloud.positions.as_ptr(),
                 assets.cloud.positions.as_ptr()
             ));
         }

@@ -26,7 +26,8 @@ use crate::render::{
     Frame, FrameScratch, IntersectMode, PassSummary, RenderConfig, RenderPass, RenderStats,
     Renderer,
 };
-use crate::scene::{Intrinsics, Pose, SceneAssets};
+use crate::scene::{Intrinsics, Pose};
+use crate::shard::SceneHandle;
 use crate::util::pool::WorkerPool;
 use crate::warp::{
     classify_and_inpaint, predict_depth_limits_into, reproject_into, InpaintScratch,
@@ -161,13 +162,14 @@ pub struct StreamSession {
 }
 
 impl StreamSession {
-    /// Build a session over shared assets, sharing the given worker pool.
+    /// Build a session over a shared scene — monolithic `Arc<SceneAssets>`
+    /// or sharded `Arc<ShardedScene>` — sharing the given worker pool.
     pub fn new(
-        scene: Arc<SceneAssets>,
+        scene: impl Into<SceneHandle>,
         pool: Arc<WorkerPool>,
         config: CoordinatorConfig,
     ) -> StreamSession {
-        StreamSession::from_renderer(Renderer::from_assets(scene).with_pool(pool), config)
+        StreamSession::from_renderer(Renderer::from_handle(scene).with_pool(pool), config)
     }
 
     /// Build a session around an existing renderer (the coordinator-compat
@@ -523,7 +525,7 @@ impl StreamSession {
 mod tests {
     use super::*;
     use crate::metrics::psnr;
-    use crate::scene::generate;
+    use crate::scene::{generate, SceneAssets};
 
     fn session(scene: &str, cfg: CoordinatorConfig) -> (StreamSession, Vec<Pose>) {
         let s = generate(scene, 0.04, 160, 128);
@@ -548,7 +550,7 @@ mod tests {
     #[test]
     fn warped_steps_stay_close_to_dense(){
         let (mut s, poses) = session("playroom", CoordinatorConfig::default());
-        let dense = Renderer::from_assets(Arc::clone(&s.renderer().scene)).with_config(
+        let dense = Renderer::from_assets(Arc::clone(s.renderer().assets())).with_config(
             RenderConfig {
                 mode: IntersectMode::Tait,
                 ..Default::default()

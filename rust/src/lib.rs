@@ -6,8 +6,11 @@
 //! streaming core (see `docs/ARCHITECTURE.md` for the layer diagram):
 //!
 //! * **L3 (this crate)** — an immutable shared [`scene::SceneAssets`]
+//!   (or a spatially partitioned [`shard::ShardedScene`] with
+//!   byte-budgeted LRU residency, behind one [`shard::SceneHandle`])
 //!   rendered by the unified [`render::RenderPass`] pipeline
-//!   (preprocess → DPES global cull → bin/sort → tile rasterization on a
+//!   (preprocess — fanned out per visible shard when sharded — → DPES
+//!   global cull → bin/sort → tile rasterization on a
 //!   persistent [`util::pool::WorkerPool`]), driven per viewer by a
 //!   [`coordinator::StreamSession`] (TWSR / DPES warp loop with
 //!   persistent [`render::FrameScratch`] arenas — steady-state warped
@@ -39,6 +42,7 @@ pub mod metrics;
 pub mod render;
 pub mod runtime;
 pub mod scene;
+pub mod shard;
 pub mod sim;
 pub mod util;
 pub mod warp;

@@ -1,6 +1,12 @@
-//! Morton (Z-order) codes for tile coordinates. The Load Distribution Unit
-//! traverses tiles in Morton order so spatially adjacent tiles land in the
-//! same rasterization block, improving Gaussian-fetch locality (Sec. V-B).
+//! Morton (Z-order) codes. Two users:
+//!
+//! * 2D codes order image tiles so the Load Distribution Unit hands
+//!   spatially adjacent tiles to the same rasterization block, improving
+//!   Gaussian-fetch locality (Sec. V-B);
+//! * 3D codes key the spatial cells of the scene-sharding subsystem
+//!   (`crate::shard`): Gaussians sorted by the Morton code of their grid
+//!   cell land in contiguous shards, so a shard is a compact spatial
+//!   region and whole-shard frustum culling stays tight.
 
 /// Interleave the low 16 bits of x and y: (x,y) → 32-bit Morton code.
 #[inline]
@@ -34,6 +40,46 @@ fn compact1by1(mut v: u32) -> u32 {
     v
 }
 
+/// Interleave the low 21 bits of x, y and z: (x,y,z) → 63-bit Morton code.
+/// Shard cell keys: sorting Gaussians by this code gives the space-filling
+/// order the partitioner chunks into shards.
+#[inline]
+pub fn morton_encode3(x: u32, y: u32, z: u32) -> u64 {
+    part1by2(x) | (part1by2(y) << 1) | (part1by2(z) << 2)
+}
+
+/// Inverse of [`morton_encode3`].
+#[inline]
+pub fn morton_decode3(code: u64) -> (u32, u32, u32) {
+    (
+        compact1by2(code),
+        compact1by2(code >> 1),
+        compact1by2(code >> 2),
+    )
+}
+
+#[inline]
+fn part1by2(v: u32) -> u64 {
+    let mut v = (v & 0x1f_ffff) as u64;
+    v = (v | (v << 32)) & 0x1f00000000ffff;
+    v = (v | (v << 16)) & 0x1f0000ff0000ff;
+    v = (v | (v << 8)) & 0x100f00f00f00f00f;
+    v = (v | (v << 4)) & 0x10c30c30c30c30c3;
+    v = (v | (v << 2)) & 0x1249249249249249;
+    v
+}
+
+#[inline]
+fn compact1by2(mut v: u64) -> u32 {
+    v &= 0x1249249249249249;
+    v = (v | (v >> 2)) & 0x10c30c30c30c30c3;
+    v = (v | (v >> 4)) & 0x100f00f00f00f00f;
+    v = (v | (v >> 8)) & 0x1f0000ff0000ff;
+    v = (v | (v >> 16)) & 0x1f00000000ffff;
+    v = (v | (v >> 32)) & 0x1f_ffff;
+    v as u32
+}
+
 /// Tile indices of a grid (w×h tiles) sorted in Morton order.
 pub fn morton_order(w: usize, h: usize) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..w * h).collect();
@@ -63,6 +109,66 @@ mod tests {
             let y = (rng.next_u64() & 0xffff) as u32;
             assert_eq!(morton_decode2(morton_encode2(x, y)), (x, y));
         });
+    }
+
+    #[test]
+    fn known_codes_3d() {
+        assert_eq!(morton_encode3(0, 0, 0), 0);
+        assert_eq!(morton_encode3(1, 0, 0), 0b001);
+        assert_eq!(morton_encode3(0, 1, 0), 0b010);
+        assert_eq!(morton_encode3(0, 0, 1), 0b100);
+        assert_eq!(morton_encode3(1, 1, 1), 0b111);
+        assert_eq!(morton_encode3(2, 0, 0), 0b001000);
+        assert_eq!(morton_encode3(7, 7, 7), 0o777);
+    }
+
+    #[test]
+    fn encode3_decode3_bijection() {
+        check("morton3 roundtrip", 1024, |rng| {
+            let x = (rng.next_u64() & 0x1f_ffff) as u32;
+            let y = (rng.next_u64() & 0x1f_ffff) as u32;
+            let z = (rng.next_u64() & 0x1f_ffff) as u32;
+            assert_eq!(morton_decode3(morton_encode3(x, y, z)), (x, y, z));
+        });
+        // Full 21-bit corners.
+        let m = 0x1f_ffff;
+        assert_eq!(morton_decode3(morton_encode3(m, m, m)), (m, m, m));
+    }
+
+    #[test]
+    fn encode3_orders_octants_before_cells() {
+        // Z-order property: every cell of the low octant precedes every
+        // cell of the high octant (the partitioner depends on this to get
+        // spatially compact chunks).
+        for (lo, hi) in [((3, 3, 3), (4, 0, 0)), ((7, 7, 7), (8, 8, 8))] {
+            assert!(
+                morton_encode3(lo.0, lo.1, lo.2) < morton_encode3(hi.0, hi.1, hi.2),
+                "{lo:?} !< {hi:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn encode3_locality_better_than_row_major() {
+        // Consecutive Morton codes should map to nearby cells on average.
+        let g = 8u32;
+        let mut cells: Vec<(u32, u32, u32)> = Vec::new();
+        for x in 0..g {
+            for y in 0..g {
+                for z in 0..g {
+                    cells.push((x, y, z));
+                }
+            }
+        }
+        cells.sort_by_key(|&(x, y, z)| morton_encode3(x, y, z));
+        let dist = |a: (u32, u32, u32), b: (u32, u32, u32)| {
+            (a.0 as i64 - b.0 as i64).abs()
+                + (a.1 as i64 - b.1 as i64).abs()
+                + (a.2 as i64 - b.2 as i64).abs()
+        };
+        let total: i64 = cells.windows(2).map(|w| dist(w[0], w[1])).sum();
+        let avg = total as f64 / (cells.len() - 1) as f64;
+        assert!(avg < 3.0, "morton3 locality too poor: {avg}");
     }
 
     #[test]

@@ -31,6 +31,7 @@ pub use scratch::FrameScratch;
 use crate::math::Vec3;
 use crate::scene::{Camera, Pose, SceneAssets};
 use crate::scene::{GaussianCloud, Intrinsics};
+use crate::shard::{SceneHandle, ShardStats, ShardedScene};
 use crate::util::pool::{default_threads, WorkerPool};
 use crate::util::timer::StageTimes;
 use std::cell::UnsafeCell;
@@ -80,6 +81,8 @@ pub struct RenderStats {
     pub per_tile_contributing: Vec<u32>,
     /// Per-tile α-blend operation counts (VRU work).
     pub per_tile_blend_ops: Vec<u64>,
+    /// Shard-stage counters (all zeros for monolithic scenes).
+    pub shards: ShardStats,
     /// Wall-clock per stage.
     pub times: StageTimes,
 }
@@ -137,11 +140,20 @@ struct StatSlabs {
 // distributed disjointly.
 unsafe impl Sync for StatSlabs {}
 
-/// The native (pure-rust) 3DGS renderer: a shared immutable scene plus a
-/// persistent worker pool. Cloning a renderer shares both.
+/// Base pointer for the per-shard splat buffers of the sharded
+/// preprocessing fan-out; worker k writes only slot k.
+#[derive(Clone, Copy)]
+struct ShardSlots(*mut Vec<Splat>);
+// SAFETY: slots are written disjointly (one shard index per worker call).
+unsafe impl Sync for ShardSlots {}
+unsafe impl Send for ShardSlots {}
+
+/// The native (pure-rust) 3DGS renderer: a shared immutable scene —
+/// monolithic or sharded, behind one [`SceneHandle`] — plus a persistent
+/// worker pool. Cloning a renderer shares both.
 pub struct Renderer {
     /// Immutable scene, shared with every other viewer of it.
-    pub scene: Arc<SceneAssets>,
+    pub handle: SceneHandle,
     pub config: RenderConfig,
     /// Long-lived rasterization workers, materialized on first parallel
     /// render (so single-threaded unit tests never spawn a pool).
@@ -155,7 +167,7 @@ impl Clone for Renderer {
             let _ = pool.set(Arc::clone(p));
         }
         Renderer {
-            scene: Arc::clone(&self.scene),
+            handle: self.handle.clone(),
             config: self.config,
             pool,
         }
@@ -165,8 +177,9 @@ impl Clone for Renderer {
 impl std::fmt::Debug for Renderer {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Renderer")
-            .field("n_gaussians", &self.scene.cloud.len())
-            .field("intrinsics", &self.scene.intrinsics)
+            .field("n_gaussians", &self.handle.num_gaussians())
+            .field("sharded", &self.handle.is_sharded())
+            .field("intrinsics", self.handle.intrinsics())
             .field("config", &self.config)
             .finish()
     }
@@ -179,8 +192,13 @@ impl Renderer {
 
     /// Build over shared scene assets (the multi-session path).
     pub fn from_assets(scene: Arc<SceneAssets>) -> Renderer {
+        Renderer::from_handle(scene)
+    }
+
+    /// Build over any scene handle — monolithic assets or a sharded scene.
+    pub fn from_handle(handle: impl Into<SceneHandle>) -> Renderer {
         Renderer {
-            scene,
+            handle: handle.into(),
             config: RenderConfig::default(),
             pool: OnceLock::new(),
         }
@@ -198,20 +216,31 @@ impl Renderer {
         let cell = OnceLock::new();
         let _ = cell.set(pool);
         Renderer {
-            scene: self.scene,
+            handle: self.handle,
             config: self.config,
             pool: cell,
         }
     }
 
+    /// The monolithic scene assets. Panics for sharded scenes — callers
+    /// that can see shards should match on [`Renderer::handle`].
+    #[inline]
+    pub fn assets(&self) -> &Arc<SceneAssets> {
+        self.handle
+            .monolithic()
+            .expect("sharded scene has no monolithic SceneAssets")
+    }
+
+    /// The monolithic cloud (panics for sharded scenes, see
+    /// [`Renderer::assets`]).
     #[inline]
     pub fn cloud(&self) -> &GaussianCloud {
-        &self.scene.cloud
+        &self.assets().cloud
     }
 
     #[inline]
     pub fn intrinsics(&self) -> &Intrinsics {
-        &self.scene.intrinsics
+        self.handle.intrinsics()
     }
 
     fn threads(&self) -> usize {
@@ -351,12 +380,16 @@ impl Renderer {
         summary
     }
 
-    /// Shared planning stage: preprocess into the scratch splat buffer,
-    /// apply the DPES *global* depth cull (Sec. IV-B / Fig. 13b — splats
-    /// beyond the maximum predicted early-stop bound over active tiles can
-    /// contribute nowhere, so they are dropped before binning), then
-    /// bin + depth-sort. Used identically by `execute` and `plan_into`,
-    /// folding the seed's duplicated cull in `render_into`/`plan`.
+    /// Shared planning stage: preprocess into the scratch splat buffer
+    /// (monolithic: one pass over the cloud; sharded: frustum-cull the
+    /// catalog, pin the visible shards resident, fan preprocessing out
+    /// per shard on the worker pool and merge back into exact cloud
+    /// order), apply the DPES *global* depth cull (Sec. IV-B / Fig. 13b —
+    /// splats beyond the maximum predicted early-stop bound over active
+    /// tiles can contribute nowhere, so they are dropped before binning),
+    /// then bin + depth-sort. Used identically by `execute` and
+    /// `plan_into`, folding the seed's duplicated cull in
+    /// `render_into`/`plan`.
     fn plan_pass(
         &self,
         pose: &Pose,
@@ -368,7 +401,13 @@ impl Renderer {
         let grid = self.intrinsics().tile_grid();
 
         let t0 = Instant::now();
-        preprocess_into(&self.scene.cloud, &camera, &mut scratch.splats);
+        let shards = match &self.handle {
+            SceneHandle::Monolithic(assets) => {
+                preprocess_into(&assets.cloud, &camera, &mut scratch.splats);
+                ShardStats::default()
+            }
+            SceneHandle::Sharded(scene) => self.preprocess_sharded(scene, &camera, scratch),
+        };
         global_depth_cull(&mut scratch.splats, tile_mask, depth_limits);
         let t_preprocess = t0.elapsed();
 
@@ -389,14 +428,76 @@ impl Renderer {
         let t_sort = t1.elapsed();
 
         PassSummary {
-            n_gaussians: self.scene.cloud.len(),
+            n_gaussians: self.handle.num_gaussians(),
             n_splats: scratch.splats.len(),
             pairs: scratch.bins.num_pairs(),
             cost: scratch.bins.cost,
             t_preprocess,
             t_sort,
             t_rasterize: std::time::Duration::ZERO,
+            shards,
         }
+    }
+
+    /// The sharded preprocessing fan-out: select + pin the visible shard
+    /// working set, preprocess each resident shard in parallel on the
+    /// pool (one splat buffer per shard, ids remapped to the monolithic
+    /// cloud's), then merge sorted-by-id so the splat buffer is
+    /// **bit-identical** to what monolithic preprocessing of the full
+    /// cloud would produce (per-splat math only reads the Gaussian's own
+    /// data and the camera; the catalog cull is provably conservative).
+    /// Everything downstream — global cull, binning, rasterization — is
+    /// then untouched by sharding.
+    fn preprocess_sharded(
+        &self,
+        scene: &ShardedScene,
+        camera: &Camera,
+        scratch: &mut FrameScratch,
+    ) -> ShardStats {
+        let stats = scene.acquire_visible(
+            &camera.pose,
+            &mut scratch.visible_shards,
+            &mut scratch.resident_shards,
+        );
+        let n = scratch.resident_shards.len();
+        while scratch.shard_splats.len() < n {
+            scratch.shard_splats.push(Vec::new());
+        }
+        {
+            let shards = &scratch.resident_shards;
+            let slots = ShardSlots(scratch.shard_splats.as_mut_ptr());
+            let body = |k: usize| {
+                // SAFETY: each k writes only its own buffer slot.
+                let buf = unsafe { &mut *slots.0.add(k) };
+                let shard = &shards[k];
+                preprocess_into(&shard.cloud, camera, buf);
+                for s in buf.iter_mut() {
+                    s.id = shard.global_ids[s.id as usize];
+                }
+            };
+            let threads = self.threads().min(n.max(1));
+            if threads <= 1 || n <= 1 {
+                for k in 0..n {
+                    body(k);
+                }
+            } else {
+                self.pool().parallel_for(n, threads, body);
+            }
+        }
+        // Each per-shard stream is ascending in (unique) global id, so a
+        // k-way merge rebuilds exact monolithic cloud order in
+        // O(S log k) without re-sorting — and without allocating once
+        // the heap/cursor scratch is warm.
+        merge_shard_splats(
+            &scratch.shard_splats[..n],
+            &mut scratch.merge_cursors,
+            &mut scratch.merge_heap,
+            &mut scratch.splats,
+        );
+        debug_assert!(scratch.splats.windows(2).all(|w| w[0].id < w[1].id));
+        // Release the frame's pins so evicted shards actually free.
+        scratch.resident_shards.clear();
+        stats
     }
 
     /// Preprocess + bin only (no rasterization) into a caller scratch —
@@ -418,6 +519,77 @@ impl Renderer {
         self.plan_into(pose, opts, &mut scratch);
         (scratch.splats, scratch.bins)
     }
+}
+
+/// K-way merge of id-sorted per-shard splat streams into `out` (cleared
+/// first), ordered by ascending global id — byte-for-byte the buffer
+/// monolithic preprocessing would have produced. `cursors` and `heap` are
+/// caller scratch; nothing allocates once their capacities are warm.
+fn merge_shard_splats(
+    bufs: &[Vec<Splat>],
+    cursors: &mut Vec<u32>,
+    heap: &mut Vec<(u32, u32)>,
+    out: &mut Vec<Splat>,
+) {
+    out.clear();
+    cursors.clear();
+    cursors.resize(bufs.len(), 0);
+    heap.clear();
+    for (k, b) in bufs.iter().enumerate() {
+        if let Some(s) = b.first() {
+            heap_push(heap, (s.id, k as u32));
+        }
+    }
+    while let Some((_, k)) = heap_pop(heap) {
+        let k = k as usize;
+        let c = cursors[k] as usize;
+        out.push(bufs[k][c]);
+        cursors[k] = (c + 1) as u32;
+        if let Some(s) = bufs[k].get(c + 1) {
+            heap_push(heap, (s.id, k as u32));
+        }
+    }
+}
+
+/// Min-heap push on a scratch Vec (ids are unique, so ties can't occur).
+fn heap_push(h: &mut Vec<(u32, u32)>, v: (u32, u32)) {
+    h.push(v);
+    let mut i = h.len() - 1;
+    while i > 0 {
+        let p = (i - 1) / 2;
+        if h[p] <= h[i] {
+            break;
+        }
+        h.swap(p, i);
+        i = p;
+    }
+}
+
+/// Min-heap pop on a scratch Vec.
+fn heap_pop(h: &mut Vec<(u32, u32)>) -> Option<(u32, u32)> {
+    if h.is_empty() {
+        return None;
+    }
+    let last = h.len() - 1;
+    h.swap(0, last);
+    let v = h.pop().unwrap();
+    let mut i = 0;
+    loop {
+        let (l, r) = (2 * i + 1, 2 * i + 2);
+        let mut m = i;
+        if l < h.len() && h[l] < h[m] {
+            m = l;
+        }
+        if r < h.len() && h[r] < h[m] {
+            m = r;
+        }
+        if m == i {
+            break;
+        }
+        h.swap(i, m);
+        i = m;
+    }
+    Some(v)
 }
 
 /// DPES global depth cull over the active tiles (shared planning helper).
@@ -443,6 +615,9 @@ pub fn global_depth_cull(
 /// scratch slabs it filled.
 pub fn stats_from_scratch(summary: &PassSummary, scratch: &FrameScratch) -> RenderStats {
     let mut times = StageTimes::new();
+    if summary.shards.total > 0 {
+        times.add("0_shard_cull", summary.shards.t_cull);
+    }
     times.add("1_preprocess", summary.t_preprocess);
     times.add("2_sort", summary.t_sort);
     times.add("3_rasterize", summary.t_rasterize);
@@ -455,6 +630,7 @@ pub fn stats_from_scratch(summary: &PassSummary, scratch: &FrameScratch) -> Rend
         per_tile_traversed: scratch.traversed.clone(),
         per_tile_contributing: scratch.contributing.clone(),
         per_tile_blend_ops: scratch.blend_ops.clone(),
+        shards: summary.shards,
         times,
     }
 }
@@ -587,6 +763,19 @@ mod tests {
             stats.total_traversed(),
             stats.pairs
         );
+    }
+
+    #[test]
+    fn merge_heap_orders_ids() {
+        let mut h = Vec::new();
+        for v in [5u32, 1, 9, 3, 7, 2] {
+            heap_push(&mut h, (v, v));
+        }
+        let mut got = Vec::new();
+        while let Some((id, _)) = heap_pop(&mut h) {
+            got.push(id);
+        }
+        assert_eq!(got, vec![1, 2, 3, 5, 7, 9]);
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //!   only invalid pixels are blended.
 
 use super::intersect::IntersectCost;
+use crate::shard::ShardStats;
 use std::time::Duration;
 
 /// What one pipeline execution should render.
@@ -54,6 +55,8 @@ pub struct PassSummary {
     pub t_sort: Duration,
     /// Wall-clock of the rasterization stage.
     pub t_rasterize: Duration,
+    /// Shard-stage counters (all zeros for monolithic scenes).
+    pub shards: ShardStats,
 }
 
 impl PassSummary {

@@ -76,6 +76,18 @@ impl Splat {
 /// anti-aliasing floor of 0.3 px²).
 pub const COV_DILATION: f32 = 0.3;
 
+/// Fraction of the larger frame dimension used as the pixel-space guard
+/// band around the frame during culling.
+pub const GUARD_BAND_FRAC: f32 = 0.15;
+
+/// Pixel-space guard-band margin for a frame. The shard-level frustum
+/// cull (`crate::shard::FrustumCull`) must use exactly this margin to stay
+/// a conservative over-approximation of the per-Gaussian cull below.
+#[inline]
+pub fn guard_margin(intr: &crate::scene::Intrinsics) -> f32 {
+    GUARD_BAND_FRAC * intr.width.max(intr.height) as f32
+}
+
 /// Project every visible Gaussian. Returns splats in cloud order
 /// (stable ids, culled entries dropped).
 pub fn preprocess(cloud: &GaussianCloud, camera: &Camera) -> Vec<Splat> {
@@ -93,7 +105,7 @@ pub fn preprocess_into(cloud: &GaussianCloud, camera: &Camera, out: &mut Vec<Spl
     let rot = w2c.rotation();
     let intr = &camera.intrinsics;
     let cam_pos = camera.pose.position;
-    let margin = 0.15 * intr.width.max(intr.height) as f32; // guard band
+    let margin = guard_margin(intr); // guard band
 
     for i in 0..cloud.len() {
         let p_world = cloud.position(i);

@@ -13,12 +13,27 @@
 
 use super::binning::TileBins;
 use super::preprocess::Splat;
+use crate::shard::ShardAssets;
+use std::sync::Arc;
 
 /// Reusable working memory for [`crate::render::Renderer::execute`].
 #[derive(Clone, Debug, Default)]
 pub struct FrameScratch {
     /// Preprocessed splats (culled, projected), in cloud order.
     pub splats: Vec<Splat>,
+    /// Sharded scenes only: visible shard ids this frame.
+    pub(crate) visible_shards: Vec<usize>,
+    /// Sharded scenes only: pinned working set (cleared after planning so
+    /// evicted shards actually release their memory).
+    pub(crate) resident_shards: Vec<Arc<ShardAssets>>,
+    /// Sharded scenes only: per-shard splat buffers for the preprocessing
+    /// fan-out, merged into `splats`; buffers persist across frames.
+    pub(crate) shard_splats: Vec<Vec<Splat>>,
+    /// Sharded scenes only: (next splat id, shard index) min-heap and
+    /// per-shard cursors for the k-way merge of the id-sorted per-shard
+    /// splat streams.
+    pub(crate) merge_heap: Vec<(u32, u32)>,
+    pub(crate) merge_cursors: Vec<u32>,
     /// Depth-sorted per-tile bins (offsets/entries reused across frames).
     pub bins: TileBins,
     /// Pair-expansion buffer for the binning stage.

@@ -10,6 +10,7 @@
 use super::camera::Intrinsics;
 use super::gaussian::GaussianCloud;
 use super::generator::Scene;
+use crate::math::Vec3;
 use std::sync::Arc;
 
 /// Everything the render pipeline needs to know about a scene, immutable
@@ -18,11 +19,26 @@ use std::sync::Arc;
 pub struct SceneAssets {
     pub cloud: GaussianCloud,
     pub intrinsics: Intrinsics,
+    /// Axis-aligned bounds of all Gaussian centers, computed once at
+    /// construction (`GaussianCloud::bounds()` is an O(n) scan — callers
+    /// should read this field, not re-derive it per use). None when empty.
+    bounds: Option<(Vec3, Vec3)>,
 }
 
 impl SceneAssets {
     pub fn new(cloud: GaussianCloud, intrinsics: Intrinsics) -> SceneAssets {
-        SceneAssets { cloud, intrinsics }
+        let bounds = cloud.bounds();
+        SceneAssets {
+            cloud,
+            intrinsics,
+            bounds,
+        }
+    }
+
+    /// Cached center bounds (computed once in [`SceneAssets::new`]).
+    #[inline]
+    pub fn bounds(&self) -> Option<(Vec3, Vec3)> {
+        self.bounds
     }
 
     /// Wrap into the shared handle the session/server layer consumes.
@@ -32,10 +48,7 @@ impl SceneAssets {
 
     /// Shared assets from a generated scene (clones the cloud once).
     pub fn from_scene(scene: &Scene) -> Arc<SceneAssets> {
-        Arc::new(SceneAssets {
-            cloud: scene.cloud.clone(),
-            intrinsics: scene.intrinsics,
-        })
+        Arc::new(SceneAssets::new(scene.cloud.clone(), scene.intrinsics))
     }
 }
 
@@ -56,5 +69,17 @@ mod tests {
             b.cloud.positions.as_ptr()
         ));
         assert_eq!(Arc::strong_count(&assets), 3);
+    }
+
+    #[test]
+    fn bounds_cached_at_construction() {
+        let scene = generate("room", 0.02, 64, 64);
+        let assets = SceneAssets::from_scene(&scene);
+        assert_eq!(assets.bounds(), scene.cloud.bounds());
+        let empty = SceneAssets::new(
+            crate::scene::GaussianCloud::default(),
+            scene.intrinsics,
+        );
+        assert!(empty.bounds().is_none());
     }
 }

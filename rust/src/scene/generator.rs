@@ -536,10 +536,12 @@ mod tests {
         let indoor = generate("room", 0.1, 320, 180);
         let outdoor = generate("garden", 0.1, 320, 180);
         let p99 = |c: &GaussianCloud| {
+            // Bounds once, not per Gaussian (the scan is O(n)).
+            let diag = c.bounds().map(|(lo, hi)| (hi - lo).norm()).unwrap_or(1.0);
             let mut m: Vec<f32> = (0..c.len())
                 .map(|i| {
                     let s = c.scale(i);
-                    s.x.max(s.y).max(s.z) / c.bounds().map(|(lo, hi)| (hi - lo).norm()).unwrap_or(1.0)
+                    s.x.max(s.y).max(s.z) / diag
                 })
                 .collect();
             m.sort_by(|a, b| a.partial_cmp(b).unwrap());

@@ -1,0 +1,129 @@
+//! Per-shard scene data: an independent sub-cloud plus the summary the
+//! catalog keeps even while the shard is cold (AABB, byte size, max scale).
+
+use crate::math::Vec3;
+use crate::scene::GaussianCloud;
+
+/// One resident shard: a spatially compact sub-cloud of the scene.
+///
+/// `cloud` holds the shard's Gaussians with *local* indices 0..n;
+/// `global_ids[i]` maps local index i back to the Gaussian's index in the
+/// monolithic cloud. Ids are strictly ascending within a shard, so a
+/// shard's preprocessed splat stream is already sorted by global id and
+/// the pipeline's merge stage can rebuild the exact monolithic splat
+/// order (the basis of the bit-identical parity guarantee).
+#[derive(Clone, Debug)]
+pub struct ShardAssets {
+    pub cloud: GaussianCloud,
+    /// Local index → index in the monolithic cloud, strictly ascending.
+    pub global_ids: Vec<u32>,
+    /// AABB of the shard's Gaussian centers, computed once.
+    pub bounds: (Vec3, Vec3),
+    /// Largest per-axis scale in the shard: 3·max_scale bounds every
+    /// member's 3σ world-space radius (rotations don't change singular
+    /// values), which pads the catalog's frustum test.
+    pub max_scale: f32,
+    /// Heap bytes this shard pins while resident (residency accounting).
+    pub bytes: usize,
+}
+
+impl ShardAssets {
+    /// Build from a sub-cloud and its (ascending) global id map, deriving
+    /// the cached summary. Panics on an empty sub-cloud — the partitioner
+    /// never emits one.
+    pub fn new(cloud: GaussianCloud, global_ids: Vec<u32>) -> ShardAssets {
+        assert_eq!(cloud.len(), global_ids.len(), "id map length mismatch");
+        assert!(!cloud.is_empty(), "empty shard");
+        debug_assert!(global_ids.windows(2).all(|w| w[0] < w[1]));
+        let bounds = cloud.bounds().expect("non-empty shard has bounds");
+        let mut max_scale = 0.0f32;
+        for i in 0..cloud.len() {
+            let s = cloud.scale(i);
+            max_scale = max_scale.max(s.x).max(s.y).max(s.z);
+        }
+        let bytes = (cloud.positions.len()
+            + cloud.scales.len()
+            + cloud.rotations.len()
+            + cloud.opacities.len()
+            + cloud.sh.len()
+            + global_ids.len())
+            * 4;
+        ShardAssets {
+            cloud,
+            global_ids,
+            bounds,
+            max_scale,
+            bytes,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cloud.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cloud.is_empty()
+    }
+
+    /// The catalog entry for this shard.
+    pub fn meta(&self, id: usize, key: u64) -> ShardMeta {
+        ShardMeta {
+            id,
+            key,
+            len: self.len(),
+            bytes: self.bytes,
+            bounds: self.bounds,
+            max_scale: self.max_scale,
+        }
+    }
+}
+
+/// Always-in-memory summary of one shard; what the catalog culls against
+/// and the residency manager budgets with, independent of whether the
+/// shard's Gaussians are currently loaded.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardMeta {
+    pub id: usize,
+    /// Morton-3D code of the shard's first cell (shards are ordered by it).
+    pub key: u64,
+    pub len: usize,
+    pub bytes: usize,
+    pub bounds: (Vec3, Vec3),
+    pub max_scale: f32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::Quat;
+
+    #[test]
+    fn summary_derived_from_cloud() {
+        let mut c = GaussianCloud::with_capacity(2, 0);
+        c.push(
+            Vec3::new(1.0, 2.0, 3.0),
+            Vec3::new(0.1, 0.4, 0.2),
+            Quat::IDENTITY,
+            0.5,
+            &[0.0; 3],
+        );
+        c.push(
+            Vec3::new(-1.0, 0.0, 5.0),
+            Vec3::splat(0.05),
+            Quat::IDENTITY,
+            0.5,
+            &[0.0; 3],
+        );
+        let n_floats = c.positions.len()
+            + c.scales.len()
+            + c.rotations.len()
+            + c.opacities.len()
+            + c.sh.len();
+        let s = ShardAssets::new(c, vec![3, 17]);
+        assert_eq!(s.bounds.0, Vec3::new(-1.0, 0.0, 3.0));
+        assert_eq!(s.bounds.1, Vec3::new(1.0, 2.0, 5.0));
+        assert_eq!(s.max_scale, 0.4);
+        assert_eq!(s.bytes, (n_floats + 2) * 4);
+        assert_eq!(s.meta(7, 42).id, 7);
+    }
+}

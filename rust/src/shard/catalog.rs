@@ -1,0 +1,219 @@
+//! Shard catalog: always-in-memory shard summaries plus the whole-shard
+//! visibility query.
+//!
+//! The cull must be **provably conservative** with respect to the
+//! per-Gaussian cull in `render::preprocess` — a culled shard may not
+//! contain a single Gaussian that preprocessing would keep, because the
+//! sharded pipeline's bit-identity guarantee rests on the merged splat
+//! set equalling the monolithic one. The derivation:
+//!
+//! Preprocessing keeps a Gaussian only if (a) its camera-space depth z is
+//! in `[near, far]`, and (b) its projected center is inside the
+//! guard-band box `[-m, w+m]×[-m, h+m]` *or* its 3σ pixel disc of radius
+//! r touches the frame. Either way, a kept Gaussian satisfies
+//! `mean.x ≥ -(m + r)`, `mean.x ≤ w + m + r` (and the same in y).
+//!
+//! The pixel radius is bounded: `r = 3·√λ₁` with
+//! `λ₁ ≤ ‖J‖²·s_max² + 0.3` (EWA projection `Σ' = J W Σ Wᵀ Jᵀ + 0.3·I`;
+//! `W` is a rotation, `s_max` the largest axis scale in the shard), and
+//! the clamped Jacobian obeys `‖J‖ ≤ C/z` with
+//! `C = √(fx²(1+limx²) + fy²(1+limy²))`, `limx = 1.3·w/(2fx)` (the exact
+//! tangent clamp preprocessing applies). So
+//! `r ≤ 3·C·s_max/z + 3·√0.3 =: 3·C·s_max/z + K`.
+//!
+//! Substituting into `mean.x = fx·x/z + cx ≥ -(m + r)` and multiplying by
+//! `z > 0` makes the keep-possible region a half-space, **linear** in the
+//! camera-space center p:
+//!
+//! `fx·p.x + (cx + m + K)·p.z + 3·C·s_max ≥ 0`
+//!
+//! A linear bound over a convex set is checked at its extreme points, so
+//! testing the 8 corners of the shard's AABB (which contains every
+//! center) suffices: if all corners violate one side's inequality, every
+//! member is culled on that side (centers with z < near are culled by the
+//! depth test anyway, keeping the argument airtight for corners behind
+//! the camera). Near/far use the raw corner depths — centers are inside
+//! the AABB, so `max z < near` or `min z > far` culls all of them.
+
+use super::assets::ShardMeta;
+use crate::math::{Mat4, Vec3};
+use crate::render::preprocess::{guard_margin, COV_DILATION};
+use crate::scene::{Intrinsics, Pose};
+
+/// The always-resident index of a sharded scene: per-shard summaries in
+/// Morton order, plus the conservative visibility query.
+#[derive(Clone, Debug, Default)]
+pub struct ShardCatalog {
+    metas: Vec<ShardMeta>,
+}
+
+impl ShardCatalog {
+    pub fn new(metas: Vec<ShardMeta>) -> ShardCatalog {
+        debug_assert!(metas.iter().enumerate().all(|(i, m)| m.id == i));
+        ShardCatalog { metas }
+    }
+
+    pub fn len(&self) -> usize {
+        self.metas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.metas.is_empty()
+    }
+
+    pub fn metas(&self) -> &[ShardMeta] {
+        &self.metas
+    }
+
+    pub fn meta(&self, id: usize) -> &ShardMeta {
+        &self.metas[id]
+    }
+
+    /// Total Gaussians across all shards.
+    pub fn total_gaussians(&self) -> usize {
+        self.metas.iter().map(|m| m.len).sum()
+    }
+
+    /// Total bytes across all shards (the monolithic-resident footprint).
+    pub fn total_bytes(&self) -> usize {
+        self.metas.iter().map(|m| m.bytes).sum()
+    }
+
+    /// Ids of every shard that may contribute to a frame at `pose`,
+    /// appended to `out` (cleared first) in ascending id order.
+    /// Allocation-free once `out`'s capacity is warm.
+    pub fn visible_into(&self, intr: &Intrinsics, pose: &Pose, out: &mut Vec<usize>) {
+        out.clear();
+        let cull = FrustumCull::new(intr, pose);
+        for m in &self.metas {
+            if cull.may_contribute(m.bounds, m.max_scale) {
+                out.push(m.id);
+            }
+        }
+    }
+}
+
+/// One pose's conservative whole-shard frustum test (see module docs for
+/// the proof sketch).
+pub struct FrustumCull {
+    w2c: Mat4,
+    near: f32,
+    far: f32,
+    /// `C` of the Jacobian bound `‖J‖ ≤ C/z`.
+    c_jac: f32,
+    fx: f32,
+    fy: f32,
+    /// z-coefficients of the four side half-spaces:
+    /// left `fx·x + ax_lo·z ≥ -pad`, right `fx·x - ax_hi·z ≤ pad`, etc.
+    ax_lo: f32,
+    ax_hi: f32,
+    ay_lo: f32,
+    ay_hi: f32,
+}
+
+impl FrustumCull {
+    pub fn new(intr: &Intrinsics, pose: &Pose) -> FrustumCull {
+        let m = guard_margin(intr);
+        let k = 3.0 * COV_DILATION.sqrt();
+        let limx = 1.3 * (intr.width as f32 * 0.5) / intr.fx;
+        let limy = 1.3 * (intr.height as f32 * 0.5) / intr.fy;
+        let c_jac = (intr.fx * intr.fx * (1.0 + limx * limx)
+            + intr.fy * intr.fy * (1.0 + limy * limy))
+            .sqrt();
+        FrustumCull {
+            w2c: pose.world_to_camera(),
+            near: intr.near,
+            far: intr.far,
+            c_jac,
+            fx: intr.fx,
+            fy: intr.fy,
+            ax_lo: intr.cx + m + k,
+            ax_hi: intr.width as f32 - intr.cx + m + k,
+            ay_lo: intr.cy + m + k,
+            ay_hi: intr.height as f32 - intr.cy + m + k,
+        }
+    }
+
+    /// False only when provably no Gaussian with center in `bounds` and
+    /// per-axis scale ≤ `max_scale` survives the per-Gaussian cull.
+    pub fn may_contribute(&self, bounds: (Vec3, Vec3), max_scale: f32) -> bool {
+        let (lo, hi) = bounds;
+        let pad = 3.0 * self.c_jac * max_scale;
+        let mut z_min = f32::INFINITY;
+        let mut z_max = f32::NEG_INFINITY;
+        // Side-test accumulators: max of each half-space's linear form.
+        let (mut l, mut r, mut t, mut b) = (
+            f32::NEG_INFINITY,
+            f32::NEG_INFINITY,
+            f32::NEG_INFINITY,
+            f32::NEG_INFINITY,
+        );
+        for i in 0..8 {
+            let p = self.w2c.transform_point(Vec3::new(
+                if i & 1 == 0 { lo.x } else { hi.x },
+                if i & 2 == 0 { lo.y } else { hi.y },
+                if i & 4 == 0 { lo.z } else { hi.z },
+            ));
+            z_min = z_min.min(p.z);
+            z_max = z_max.max(p.z);
+            l = l.max(self.fx * p.x + self.ax_lo * p.z);
+            r = r.max(-self.fx * p.x + self.ax_hi * p.z);
+            t = t.max(self.fy * p.y + self.ay_lo * p.z);
+            b = b.max(-self.fy * p.y + self.ay_hi * p.z);
+        }
+        if z_max < self.near || z_min > self.far {
+            return false; // every center outside the depth range
+        }
+        // A side culls the shard when the linear keep-possible form is
+        // negative over the whole box (max over corners < -pad).
+        l >= -pad && r >= -pad && t >= -pad && b >= -pad
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::Vec3;
+
+    fn cull() -> FrustumCull {
+        FrustumCull::new(&Intrinsics::from_fov(320, 240, 1.2), &Pose::IDENTITY)
+    }
+
+    fn unit_box(center: Vec3) -> (Vec3, Vec3) {
+        (center - Vec3::splat(0.5), center + Vec3::splat(0.5))
+    }
+
+    #[test]
+    fn box_ahead_is_visible() {
+        assert!(cull().may_contribute(unit_box(Vec3::new(0.0, 0.0, 5.0)), 0.1));
+    }
+
+    #[test]
+    fn box_behind_camera_is_culled() {
+        assert!(!cull().may_contribute(unit_box(Vec3::new(0.0, 0.0, -5.0)), 0.1));
+    }
+
+    #[test]
+    fn box_beyond_far_is_culled() {
+        assert!(!cull().may_contribute(unit_box(Vec3::new(0.0, 0.0, 2000.0)), 0.1));
+    }
+
+    #[test]
+    fn box_far_off_axis_is_culled_but_large_scale_keeps_it() {
+        let c = cull();
+        let b = unit_box(Vec3::new(-400.0, 0.0, 5.0));
+        assert!(!c.may_contribute(b, 0.01));
+        // A huge Gaussian there could still splat into the frame.
+        assert!(c.may_contribute(b, 500.0));
+    }
+
+    #[test]
+    fn rotated_pose_culls_what_is_now_behind() {
+        let intr = Intrinsics::from_fov(320, 240, 1.2);
+        // Camera turned 180°: +z world is now behind it.
+        let pose = Pose::look_at(Vec3::ZERO, Vec3::new(0.0, 0.0, -1.0), Vec3::new(0.0, -1.0, 0.0));
+        let c = FrustumCull::new(&intr, &pose);
+        assert!(!c.may_contribute(unit_box(Vec3::new(0.0, 0.0, 5.0)), 0.1));
+        assert!(c.may_contribute(unit_box(Vec3::new(0.0, 0.0, -5.0)), 0.1));
+    }
+}

@@ -1,0 +1,46 @@
+//! Spatial scene sharding: serve clouds larger than one node's memory.
+//!
+//! The streaming server's unit of scene data stops being the whole
+//! `GaussianCloud` and becomes a **shard** — a Morton-3D-ordered spatial
+//! cell group with its own AABB, byte size and scale summary:
+//!
+//! * [`partition_cloud`] splits a cloud into shards of roughly
+//!   `target_splats` Gaussians along a Z-order space-filling curve
+//!   ([`crate::math::morton_encode3`]), so each shard is spatially
+//!   compact;
+//! * [`ShardCatalog`] keeps the always-resident per-shard summaries and
+//!   answers the per-pose visibility query with a **provably
+//!   conservative** whole-shard frustum cull (a culled shard contains no
+//!   Gaussian the per-Gaussian preprocess cull would keep — see
+//!   `catalog.rs` for the proof sketch);
+//! * [`ShardStore`] is the backing source of shard bytes —
+//!   [`MemoryShardStore`] for scenes that fit, [`FileShardStore`] (over
+//!   the `.lsg` container of `scene::io`) for scenes that don't;
+//! * [`ShardResidency`] is the byte-budgeted LRU deciding which shards
+//!   are warm: the *resident set*, not the scene, bounds memory;
+//! * [`ShardedScene`] ties the four together and [`SceneHandle`] lets
+//!   every layer above (renderer, session, server) take either a
+//!   monolithic `Arc<SceneAssets>` or an `Arc<ShardedScene>` through one
+//!   enum.
+//!
+//! The render pipeline's planning stage fans preprocessing out per
+//! resident+visible shard on the shared `WorkerPool`, then merges the
+//! per-shard splat streams back into exact monolithic cloud order — so a
+//! sharded render is **bit-identical** to the monolithic render of the
+//! same scene (`rust/tests/shard_parity.rs` enforces this for every
+//! `ALL_SCENES` entry). Per-frame shard counters ([`ShardStats`]) ride
+//! the existing summary/trace types into the sim models and benches.
+
+pub mod assets;
+pub mod catalog;
+pub mod partition;
+pub mod residency;
+pub mod scene;
+
+pub use assets::{ShardAssets, ShardMeta};
+pub use catalog::{FrustumCull, ShardCatalog};
+pub use partition::{partition_cloud, ShardConfig};
+pub use residency::{
+    EnsureOutcome, FileShardStore, MemoryShardStore, ShardResidency, ShardStore,
+};
+pub use scene::{SceneHandle, ShardStats, ShardedScene};

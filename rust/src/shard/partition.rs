@@ -1,0 +1,199 @@
+//! Spatial partitioning: monolithic cloud → Morton-3D-ordered shards.
+//!
+//! Gaussians are quantized into a g³ grid over the cloud's bounds, sorted
+//! by the Morton code of their cell, and packed greedily into shards of
+//! roughly `target_splats` Gaussians, cutting at cell boundaries where
+//! possible. Z-order makes consecutive cells spatial neighbors, so each
+//! shard is a compact region with a tight AABB — exactly what the
+//! whole-shard frustum cull and locality-aware residency fetch need
+//! (STREAMINGGS's voxel-grouped streaming unit, applied server-side).
+
+use super::assets::ShardAssets;
+use crate::math::{morton_encode3, Vec3};
+use crate::scene::GaussianCloud;
+
+/// Partitioning + residency parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardConfig {
+    /// Target Gaussians per shard; shards close at the first cell boundary
+    /// past this count (hard-capped at 2× mid-cell).
+    pub target_splats: usize,
+    /// Residency byte budget; `usize::MAX` keeps everything resident.
+    pub budget_bytes: usize,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            target_splats: 4096,
+            budget_bytes: usize::MAX,
+        }
+    }
+}
+
+/// Morton cell key for each Gaussian under a g³ grid over `bounds`.
+fn cell_keys(cloud: &GaussianCloud, bounds: (Vec3, Vec3), g: u32) -> Vec<u64> {
+    let (lo, hi) = bounds;
+    let ext = hi - lo;
+    let inv = Vec3::new(
+        g as f32 / ext.x.max(1e-9),
+        g as f32 / ext.y.max(1e-9),
+        g as f32 / ext.z.max(1e-9),
+    );
+    (0..cloud.len())
+        .map(|i| {
+            let p = cloud.position(i) - lo;
+            let q = |v: f32| (v as u32).min(g - 1);
+            morton_encode3(
+                q(p.x * inv.x),
+                q(p.y * inv.y),
+                q(p.z * inv.z),
+            )
+        })
+        .collect()
+}
+
+/// Grid resolution: cells ~4× finer than shards so the greedy packer can
+/// cut near cell boundaries, clamped to the 21-bit Morton range.
+fn grid_for(n: usize, target: usize) -> u32 {
+    let want_cells = (n.max(1) as f64 / target.max(1) as f64) * 4.0;
+    let g = want_cells.cbrt().ceil() as u32;
+    g.clamp(1, 1 << 21)
+}
+
+/// Partition a cloud into Morton-ordered spatial shards of roughly
+/// `target_splats` Gaussians each, returned with the Morton key of each
+/// shard's first cell. Every Gaussian lands in exactly one shard; within
+/// a shard, global ids stay ascending (cloud order).
+pub fn partition_cloud(cloud: &GaussianCloud, target_splats: usize) -> Vec<(u64, ShardAssets)> {
+    assert!(!cloud.is_empty(), "cannot partition an empty cloud");
+    let target = target_splats.max(1);
+    let bounds = cloud.bounds().expect("non-empty cloud");
+    let g = grid_for(cloud.len(), target);
+    let keys = cell_keys(cloud, bounds, g);
+
+    // Morton order with index tiebreak: deterministic, cell-contiguous.
+    let mut order: Vec<u32> = (0..cloud.len() as u32).collect();
+    order.sort_unstable_by_key(|&i| (keys[i as usize], i));
+
+    let mut shards: Vec<(u64, ShardAssets)> = Vec::new();
+    let mut members: Vec<u32> = Vec::with_capacity(target);
+    let mut shard_key = keys[order[0] as usize];
+    let mut flush = |members: &mut Vec<u32>, key: u64| {
+        if members.is_empty() {
+            return;
+        }
+        // Ascending global ids: the per-shard splat streams then merge
+        // back into exact monolithic order.
+        members.sort_unstable();
+        let mut sub = GaussianCloud::with_capacity(members.len(), cloud.sh_degree);
+        for &gi in members.iter() {
+            let i = gi as usize;
+            // Raw array copies, NOT `push`: push re-normalizes the
+            // quaternion, which would perturb bits and break the
+            // sharded-vs-monolithic bit-identity guarantee.
+            sub.positions.extend_from_slice(&cloud.positions[3 * i..3 * i + 3]);
+            sub.scales.extend_from_slice(&cloud.scales[3 * i..3 * i + 3]);
+            sub.rotations.extend_from_slice(&cloud.rotations[4 * i..4 * i + 4]);
+            sub.opacities.push(cloud.opacities[i]);
+            sub.sh.extend_from_slice(cloud.sh_coeffs(i));
+        }
+        let ids = std::mem::take(members);
+        shards.push((key, ShardAssets::new(sub, ids)));
+    };
+
+    for (k, &i) in order.iter().enumerate() {
+        members.push(i);
+        let at_end = k + 1 == order.len();
+        let cell_boundary =
+            at_end || keys[order[k + 1] as usize] != keys[i as usize];
+        // Close the shard at a cell boundary once full, or mid-cell at 2×
+        // target (one cell denser than 2× target still splits cleanly).
+        if at_end
+            || (cell_boundary && members.len() >= target)
+            || members.len() >= 2 * target
+        {
+            flush(&mut members, shard_key);
+            if !at_end {
+                shard_key = keys[order[k + 1] as usize];
+            }
+        }
+    }
+    shards
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scene::generate;
+
+    #[test]
+    fn partition_covers_every_gaussian_once() {
+        let scene = generate("train", 0.05, 64, 64);
+        let shards: Vec<_> = partition_cloud(&scene.cloud, 300)
+            .into_iter()
+            .map(|(_, s)| s)
+            .collect();
+        assert!(shards.len() > 3, "only {} shards", shards.len());
+        let mut seen = vec![false; scene.cloud.len()];
+        for s in &shards {
+            for &gi in &s.global_ids {
+                assert!(!seen[gi as usize], "gaussian {gi} in two shards");
+                seen[gi as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&v| v), "some gaussians unassigned");
+    }
+
+    #[test]
+    fn shards_respect_size_caps() {
+        let scene = generate("garden", 0.05, 64, 64);
+        let target = 256;
+        let shards: Vec<_> = partition_cloud(&scene.cloud, target)
+            .into_iter()
+            .map(|(_, s)| s)
+            .collect();
+        for s in &shards {
+            assert!(s.len() <= 2 * target, "shard of {} exceeds 2x target", s.len());
+        }
+    }
+
+    #[test]
+    fn shard_data_matches_source() {
+        let scene = generate("chair", 0.03, 64, 64);
+        let shards: Vec<_> = partition_cloud(&scene.cloud, 200)
+            .into_iter()
+            .map(|(_, s)| s)
+            .collect();
+        for s in &shards {
+            s.cloud.validate().unwrap();
+            for (li, &gi) in s.global_ids.iter().enumerate() {
+                assert_eq!(s.cloud.position(li), scene.cloud.position(gi as usize));
+                assert_eq!(s.cloud.opacity(li), scene.cloud.opacity(gi as usize));
+                assert_eq!(s.cloud.sh_coeffs(li), scene.cloud.sh_coeffs(gi as usize));
+            }
+        }
+    }
+
+    #[test]
+    fn shards_are_spatially_compact() {
+        // Mean shard AABB diagonal must be well below the scene diagonal —
+        // the point of Morton packing (random assignment would give ~1×).
+        let scene = generate("room", 0.1, 64, 64);
+        let (lo, hi) = scene.cloud.bounds().unwrap();
+        let scene_diag = (hi - lo).norm();
+        let shards: Vec<_> = partition_cloud(&scene.cloud, 256)
+            .into_iter()
+            .map(|(_, s)| s)
+            .collect();
+        let mean_diag: f32 = shards
+            .iter()
+            .map(|s| (s.bounds.1 - s.bounds.0).norm())
+            .sum::<f32>()
+            / shards.len() as f32;
+        assert!(
+            mean_diag < 0.75 * scene_diag,
+            "shards not compact: {mean_diag} vs scene {scene_diag}"
+        );
+    }
+}

@@ -1,0 +1,537 @@
+//! Shard residency: where shard bytes live and which shards are warm.
+//!
+//! A [`ShardStore`] is the backing source of shard data — in memory for
+//! scenes that fit, file-backed (over the `.lsg` container of
+//! `scene::io`) for clouds larger than one node's allocation. The
+//! [`ShardResidency`] LRU keeps the *resident set* under a byte budget:
+//! every frame pins the shards the catalog marked visible, loads the cold
+//! ones, and evicts least-recently-used unpinned shards until the budget
+//! holds again. The visible working set is never evicted mid-frame, so a
+//! too-small budget degrades to transient overshoot rather than a failed
+//! render.
+
+use super::assets::{ShardAssets, ShardMeta};
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Source of shard data. Implementations must be cheap to query for
+/// metadata (always in memory) and able to materialize any shard on
+/// demand.
+pub trait ShardStore: Send + Sync {
+    fn num_shards(&self) -> usize;
+    fn metas(&self) -> &[ShardMeta];
+    /// Materialize one shard (cheap Arc clone for memory stores, disk IO
+    /// for file stores).
+    fn load(&self, id: usize) -> Result<Arc<ShardAssets>>;
+}
+
+/// All shards held in memory; `load` is an Arc clone. The baseline store
+/// for scenes that fit in RAM — residency still bounds how much of it the
+/// render path touches per frame.
+pub struct MemoryShardStore {
+    shards: Vec<Arc<ShardAssets>>,
+    metas: Vec<ShardMeta>,
+}
+
+impl MemoryShardStore {
+    /// Build from partitioned shards with their Morton keys (see
+    /// [`super::partition::partition_cloud`]).
+    pub fn new(shards: Vec<(u64, ShardAssets)>) -> MemoryShardStore {
+        let metas = shards
+            .iter()
+            .enumerate()
+            .map(|(id, (key, s))| s.meta(id, *key))
+            .collect();
+        MemoryShardStore {
+            shards: shards.into_iter().map(|(_, s)| Arc::new(s)).collect(),
+            metas,
+        }
+    }
+}
+
+impl ShardStore for MemoryShardStore {
+    fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn metas(&self) -> &[ShardMeta] {
+        &self.metas
+    }
+
+    fn load(&self, id: usize) -> Result<Arc<ShardAssets>> {
+        self.shards
+            .get(id)
+            .cloned()
+            .with_context(|| format!("shard {id} out of range"))
+    }
+}
+
+const IDS_MAGIC: &[u8; 4] = b"LSGI";
+const CATALOG_MAGIC: &[u8; 4] = b"LSGC";
+const CATALOG_VERSION: u32 = 1;
+const CATALOG_FILE: &str = "catalog.lsgc";
+
+/// File-backed store: one `.lsg` cloud container plus one `.ids` sidecar
+/// per shard under a directory, and a `catalog.lsgc` sidecar holding
+/// every [`ShardMeta`] so a server can [`FileShardStore::open`] the
+/// directory later without touching a single shard's Gaussians. This is
+/// the "scene larger than one node's memory" path — the exporting
+/// process is the last one that ever needs the full cloud; afterwards
+/// only the resident set is materialized.
+pub struct FileShardStore {
+    dir: PathBuf,
+    metas: Vec<ShardMeta>,
+}
+
+impl FileShardStore {
+    fn cloud_path(dir: &Path, id: usize) -> PathBuf {
+        dir.join(format!("shard_{id:05}.lsg"))
+    }
+
+    fn ids_path(dir: &Path, id: usize) -> PathBuf {
+        dir.join(format!("shard_{id:05}.ids"))
+    }
+
+    /// Write every shard of a partition to `dir` (plus the catalog
+    /// sidecar) and return the store reading them back.
+    pub fn export(dir: &Path, shards: &[(u64, ShardAssets)]) -> Result<FileShardStore> {
+        std::fs::create_dir_all(dir).with_context(|| format!("create {dir:?}"))?;
+        let mut metas = Vec::with_capacity(shards.len());
+        for (id, (key, s)) in shards.iter().enumerate() {
+            crate::scene::io::save_cloud(&Self::cloud_path(dir, id), &s.cloud)?;
+            let mut w = std::io::BufWriter::new(std::fs::File::create(Self::ids_path(dir, id))?);
+            w.write_all(IDS_MAGIC)?;
+            w.write_all(&(s.global_ids.len() as u32).to_le_bytes())?;
+            for gi in &s.global_ids {
+                w.write_all(&gi.to_le_bytes())?;
+            }
+            metas.push(s.meta(id, *key));
+        }
+        write_catalog(&dir.join(CATALOG_FILE), &metas)?;
+        Ok(FileShardStore {
+            dir: dir.to_path_buf(),
+            metas,
+        })
+    }
+
+    /// Open an exported shard directory by reading only its catalog
+    /// sidecar — no shard data is loaded. This is how a fresh process
+    /// (or another node) serves a scene it never held in memory.
+    pub fn open(dir: &Path) -> Result<FileShardStore> {
+        let metas = read_catalog(&dir.join(CATALOG_FILE))?;
+        for m in &metas {
+            let p = Self::cloud_path(dir, m.id);
+            if !p.exists() {
+                bail!("catalog lists shard {} but {p:?} is missing", m.id);
+            }
+        }
+        Ok(FileShardStore {
+            dir: dir.to_path_buf(),
+            metas,
+        })
+    }
+}
+
+/// Serialize the catalog: magic, version, count, then per shard
+/// (id-ordered): key u64, len u32, bytes u64, max_scale f32, bounds
+/// lo/hi 6×f32 (little-endian).
+fn write_catalog(path: &Path, metas: &[ShardMeta]) -> Result<()> {
+    let mut w = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("create {path:?}"))?,
+    );
+    w.write_all(CATALOG_MAGIC)?;
+    w.write_all(&CATALOG_VERSION.to_le_bytes())?;
+    w.write_all(&(metas.len() as u32).to_le_bytes())?;
+    for m in metas {
+        w.write_all(&m.key.to_le_bytes())?;
+        w.write_all(&(m.len as u32).to_le_bytes())?;
+        w.write_all(&(m.bytes as u64).to_le_bytes())?;
+        w.write_all(&m.max_scale.to_le_bytes())?;
+        for v in [m.bounds.0, m.bounds.1] {
+            w.write_all(&v.x.to_le_bytes())?;
+            w.write_all(&v.y.to_le_bytes())?;
+            w.write_all(&v.z.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+fn read_catalog(path: &Path) -> Result<Vec<ShardMeta>> {
+    let mut r = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
+    );
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != CATALOG_MAGIC {
+        bail!("not a shard catalog: bad magic {magic:?}");
+    }
+    let version = read_u32(&mut r)?;
+    if version != CATALOG_VERSION {
+        bail!("unsupported shard catalog version {version}");
+    }
+    let n = read_u32(&mut r)? as usize;
+    let mut metas = Vec::with_capacity(n);
+    for id in 0..n {
+        let key = read_u64(&mut r)?;
+        let len = read_u32(&mut r)? as usize;
+        let bytes = read_u64(&mut r)? as usize;
+        let max_scale = read_f32(&mut r)?;
+        let mut b = [0.0f32; 6];
+        for v in b.iter_mut() {
+            *v = read_f32(&mut r)?;
+        }
+        if !(b.iter().all(|v| v.is_finite()) && max_scale.is_finite() && max_scale >= 0.0) {
+            bail!("non-finite catalog entry for shard {id}");
+        }
+        metas.push(ShardMeta {
+            id,
+            key,
+            len,
+            bytes,
+            bounds: (
+                crate::math::Vec3::new(b[0], b[1], b[2]),
+                crate::math::Vec3::new(b[3], b[4], b[5]),
+            ),
+            max_scale,
+        });
+    }
+    Ok(metas)
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_f32<R: Read>(r: &mut R) -> Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+impl ShardStore for FileShardStore {
+    fn num_shards(&self) -> usize {
+        self.metas.len()
+    }
+
+    fn metas(&self) -> &[ShardMeta] {
+        &self.metas
+    }
+
+    fn load(&self, id: usize) -> Result<Arc<ShardAssets>> {
+        let cloud = crate::scene::io::load_cloud(&Self::cloud_path(&self.dir, id))?;
+        let path = Self::ids_path(&self.dir, id);
+        let mut r = std::io::BufReader::new(
+            std::fs::File::open(&path).with_context(|| format!("open {path:?}"))?,
+        );
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != IDS_MAGIC {
+            bail!("not a shard id file: bad magic {magic:?}");
+        }
+        let mut nb = [0u8; 4];
+        r.read_exact(&mut nb)?;
+        let n = u32::from_le_bytes(nb) as usize;
+        if n != cloud.len() {
+            bail!("id count {n} != cloud len {} in {path:?}", cloud.len());
+        }
+        let mut buf = vec![0u8; n * 4];
+        r.read_exact(&mut buf)
+            .with_context(|| format!("truncated id file {path:?}"))?;
+        let ids: Vec<u32> = buf
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Arc::new(ShardAssets::new(cloud, ids)))
+    }
+}
+
+/// Per-`ensure` outcome: what churned this frame.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EnsureOutcome {
+    /// Shards loaded from the store this call.
+    pub loaded: u32,
+    /// Shards evicted this call.
+    pub evicted: u32,
+    /// Resident shards after the call.
+    pub resident: u32,
+    /// Resident bytes after the call.
+    pub resident_bytes: u64,
+}
+
+struct ResidentEntry {
+    assets: Arc<ShardAssets>,
+    last_used: u64,
+}
+
+/// LRU residency manager over a [`ShardStore`], bounded by a byte budget.
+pub struct ShardResidency {
+    budget_bytes: usize,
+    entries: Vec<Option<ResidentEntry>>,
+    clock: u64,
+    resident_bytes: usize,
+    resident_count: usize,
+    /// Lifetime counters (observability + tests).
+    pub total_loads: u64,
+    pub total_evictions: u64,
+}
+
+impl ShardResidency {
+    pub fn new(budget_bytes: usize, num_shards: usize) -> ShardResidency {
+        ShardResidency {
+            budget_bytes,
+            entries: (0..num_shards).map(|_| None).collect(),
+            clock: 0,
+            resident_bytes: 0,
+            resident_count: 0,
+            total_loads: 0,
+            total_evictions: 0,
+        }
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.resident_bytes
+    }
+
+    pub fn resident_count(&self) -> usize {
+        self.resident_count
+    }
+
+    /// Pass 1 of a frame (call under the residency lock): bump the frame
+    /// clock, pin the already-resident ids (pushing their assets onto
+    /// `out`), and append the cold ids to `cold`. The caller then loads
+    /// the cold shards **without holding the lock** (store IO must not
+    /// serialize other sessions' planning stages) and finishes with
+    /// [`ShardResidency::commit`].
+    pub fn pin_warm(
+        &mut self,
+        ids: &[usize],
+        out: &mut Vec<Arc<ShardAssets>>,
+        cold: &mut Vec<usize>,
+    ) {
+        self.clock += 1;
+        for &id in ids {
+            match &mut self.entries[id] {
+                Some(e) => {
+                    e.last_used = self.clock;
+                    out.push(Arc::clone(&e.assets));
+                }
+                None => cold.push(id),
+            }
+        }
+    }
+
+    /// Pass 2 of a frame (call under the residency lock): insert the
+    /// shards the caller loaded (if a racing session committed a copy
+    /// first, keep that copy and drop ours), pin + push them onto `out`,
+    /// then evict LRU unpinned shards until the budget holds (or only
+    /// pinned shards remain — the visible set itself may overshoot an
+    /// undersized budget; rendering always proceeds). `out` therefore
+    /// holds warm shards first and loaded ones after, in no particular id
+    /// order — the pipeline's merge stage orders by splat id, not by
+    /// shard.
+    pub fn commit(
+        &mut self,
+        loaded: &[(usize, Arc<ShardAssets>)],
+        out: &mut Vec<Arc<ShardAssets>>,
+    ) -> EnsureOutcome {
+        let mut outcome = EnsureOutcome::default();
+        for (id, assets) in loaded {
+            let slot = &mut self.entries[*id];
+            if slot.is_none() {
+                self.resident_bytes += assets.bytes;
+                self.resident_count += 1;
+                outcome.loaded += 1;
+                self.total_loads += 1;
+                *slot = Some(ResidentEntry {
+                    assets: Arc::clone(assets),
+                    last_used: self.clock,
+                });
+            } else if let Some(e) = slot.as_mut() {
+                e.last_used = self.clock;
+            }
+            out.push(Arc::clone(&slot.as_ref().unwrap().assets));
+        }
+        // Evict coldest unpinned shards until within budget.
+        while self.resident_bytes > self.budget_bytes {
+            let victim = self
+                .entries
+                .iter()
+                .enumerate()
+                .filter_map(|(id, e)| e.as_ref().map(|e| (id, e.last_used)))
+                .filter(|&(_, used)| used < self.clock)
+                .min_by_key(|&(_, used)| used)
+                .map(|(id, _)| id);
+            match victim {
+                Some(id) => {
+                    let e = self.entries[id].take().unwrap();
+                    self.resident_bytes -= e.assets.bytes;
+                    self.resident_count -= 1;
+                    outcome.evicted += 1;
+                    self.total_evictions += 1;
+                }
+                None => break, // everything left is pinned this frame
+            }
+        }
+        outcome.resident = self.resident_count as u32;
+        outcome.resident_bytes = self.resident_bytes as u64;
+        outcome
+    }
+
+    /// One-lock convenience (tests + single-session callers): pin warm
+    /// ids, load cold ones from `store` (retrying each failed load once —
+    /// scene data is load-bearing, but one transient IO hiccup should not
+    /// be), and commit.
+    pub fn ensure(
+        &mut self,
+        ids: &[usize],
+        store: &dyn ShardStore,
+        out: &mut Vec<Arc<ShardAssets>>,
+    ) -> Result<EnsureOutcome> {
+        let mut cold = Vec::new();
+        self.pin_warm(ids, out, &mut cold);
+        let loaded = load_shards(store, &cold)?;
+        Ok(self.commit(&loaded, out))
+    }
+}
+
+/// Load `ids` from the store, retrying each failure once (transient IO).
+pub fn load_shards(
+    store: &dyn ShardStore,
+    ids: &[usize],
+) -> Result<Vec<(usize, Arc<ShardAssets>)>> {
+    let mut loaded = Vec::with_capacity(ids.len());
+    for &id in ids {
+        let assets = store
+            .load(id)
+            .or_else(|_| store.load(id))
+            .with_context(|| format!("loading shard {id} (after one retry)"))?;
+        loaded.push((id, assets));
+    }
+    Ok(loaded)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scene::generate;
+    use crate::shard::partition::partition_cloud;
+
+    fn store() -> MemoryShardStore {
+        let scene = generate("room", 0.05, 64, 64);
+        MemoryShardStore::new(partition_cloud(&scene.cloud, 200))
+    }
+
+    #[test]
+    fn unlimited_budget_keeps_everything() {
+        let st = store();
+        let n = st.num_shards();
+        let mut res = ShardResidency::new(usize::MAX, n);
+        let ids: Vec<usize> = (0..n).collect();
+        let mut out = Vec::new();
+        let o = res.ensure(&ids, &st, &mut out).unwrap();
+        assert_eq!(o.loaded as usize, n);
+        assert_eq!(o.evicted, 0);
+        assert_eq!(res.resident_count(), n);
+        assert_eq!(out.len(), n);
+    }
+
+    #[test]
+    fn tight_budget_evicts_lru() {
+        let st = store();
+        let n = st.num_shards();
+        assert!(n >= 4, "need a few shards, got {n}");
+        let bytes: usize = st.metas().iter().map(|m| m.bytes).sum();
+        let mut res = ShardResidency::new(bytes / 2, n);
+        let mut out = Vec::new();
+        // Frame 1: first half; frame 2: second half — frame 2 must evict
+        // frame 1's shards.
+        let o1 = res.ensure(&(0..n / 2).collect::<Vec<_>>(), &st, &mut out).unwrap();
+        out.clear();
+        let o2 = res.ensure(&(n / 2..n).collect::<Vec<_>>(), &st, &mut out).unwrap();
+        assert_eq!(o1.loaded as usize, n / 2);
+        assert!(o2.evicted > 0, "no evictions under 50% budget");
+        // Post-eviction residency never exceeds the larger of the budget
+        // and the bytes pinned this frame (pins are never evicted).
+        let pinned: usize = st.metas()[n / 2..].iter().map(|m| m.bytes).sum();
+        assert!(res.resident_bytes() <= (bytes / 2).max(pinned));
+        // Touched-this-frame shards were never evicted.
+        for (i, a) in out.iter().enumerate() {
+            assert_eq!(a.global_ids, st.load(n / 2 + i).unwrap().global_ids);
+        }
+    }
+
+    #[test]
+    fn pinned_set_may_overshoot_budget() {
+        let st = store();
+        let n = st.num_shards();
+        let mut res = ShardResidency::new(1, n); // absurd budget
+        let mut out = Vec::new();
+        let ids: Vec<usize> = (0..n).collect();
+        let o = res.ensure(&ids, &st, &mut out).unwrap();
+        // Everything pinned: nothing evictable, render still possible.
+        assert_eq!(o.resident as usize, n);
+        assert_eq!(out.len(), n);
+        // Next frame pinning only shard 0 lets the rest go.
+        out.clear();
+        let o2 = res.ensure(&[0], &st, &mut out).unwrap();
+        assert_eq!(o2.evicted as usize, n - 1);
+        assert_eq!(res.resident_count(), 1);
+    }
+
+    #[test]
+    fn file_store_roundtrips_shards() {
+        let scene = generate("chair", 0.03, 64, 64);
+        let shards = partition_cloud(&scene.cloud, 200);
+        let dir = std::env::temp_dir().join("lsg_shard_store_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let fs = FileShardStore::export(&dir, &shards).unwrap();
+        assert_eq!(fs.num_shards(), shards.len());
+        for (id, (key, s)) in shards.iter().enumerate() {
+            let loaded = fs.load(id).unwrap();
+            assert_eq!(loaded.global_ids, s.global_ids);
+            assert_eq!(loaded.cloud.positions, s.cloud.positions);
+            assert_eq!(loaded.cloud.sh, s.cloud.sh);
+            assert_eq!(fs.metas()[id].key, *key);
+            assert_eq!(loaded.bounds, s.bounds);
+        }
+    }
+
+    #[test]
+    fn open_reads_catalog_without_shard_data() {
+        let scene = generate("chair", 0.03, 64, 64);
+        let shards = partition_cloud(&scene.cloud, 200);
+        let dir = std::env::temp_dir().join("lsg_shard_open_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let exported = FileShardStore::export(&dir, &shards).unwrap();
+        // A "fresh process": only the directory path survives.
+        let opened = FileShardStore::open(&dir).unwrap();
+        assert_eq!(opened.num_shards(), exported.num_shards());
+        for (a, b) in opened.metas().iter().zip(exported.metas()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.key, b.key);
+            assert_eq!(a.len, b.len);
+            assert_eq!(a.bytes, b.bytes);
+            assert_eq!(a.bounds, b.bounds);
+            assert_eq!(a.max_scale, b.max_scale);
+        }
+        // And it can still materialize shards on demand.
+        let s0 = opened.load(0).unwrap();
+        assert_eq!(s0.global_ids, shards[0].1.global_ids);
+        // Opening a directory without a catalog fails cleanly.
+        assert!(FileShardStore::open(&dir.join("nope")).is_err());
+    }
+}

@@ -1,0 +1,304 @@
+//! The sharded scene: catalog + store + residency behind one handle the
+//! render/session/server layers consume interchangeably with a monolithic
+//! `Arc<SceneAssets>`.
+
+use super::assets::ShardAssets;
+use super::catalog::ShardCatalog;
+use super::partition::{partition_cloud, ShardConfig};
+use super::residency::{MemoryShardStore, ShardResidency, ShardStore};
+use crate::scene::{GaussianCloud, Intrinsics, Pose, SceneAssets};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Per-frame shard-stage counters, carried through `PassSummary` →
+/// `StepSummary` / `RenderStats` → `FrameTrace` → `WorkloadTrace` so the
+/// sim models and benches see the new pipeline stage. All zeros for
+/// monolithic scenes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardStats {
+    /// Shards in the scene (0 = monolithic).
+    pub total: u32,
+    /// Shards the frustum cull kept for this frame.
+    pub visible: u32,
+    /// Shards loaded from the store this frame.
+    pub loaded: u32,
+    /// Shards evicted this frame.
+    pub evicted: u32,
+    /// Resident shards after this frame.
+    pub resident: u32,
+    /// Resident bytes after this frame.
+    pub resident_bytes: u64,
+    /// Wall-clock of the shard cull + residency stage.
+    pub t_cull: Duration,
+}
+
+/// A scene served as spatial shards: an always-resident [`ShardCatalog`],
+/// a [`ShardStore`] holding the actual Gaussian data, and a byte-budgeted
+/// [`ShardResidency`] deciding which shards are warm. Shared across
+/// sessions via `Arc` exactly like `SceneAssets`; the residency manager
+/// is the only mutable state and sits behind a `Mutex` held only for the
+/// pin/evict bookkeeping — never across store IO or preprocessing.
+pub struct ShardedScene {
+    catalog: ShardCatalog,
+    store: Box<dyn ShardStore>,
+    residency: Mutex<ShardResidency>,
+    intrinsics: Intrinsics,
+    total_gaussians: usize,
+    total_bytes: usize,
+}
+
+impl std::fmt::Debug for ShardedScene {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardedScene")
+            .field("shards", &self.catalog.len())
+            .field("n_gaussians", &self.total_gaussians)
+            .field("total_bytes", &self.total_bytes)
+            .field("intrinsics", &self.intrinsics)
+            .finish()
+    }
+}
+
+impl ShardedScene {
+    /// Partition a monolithic cloud into a sharded scene over an
+    /// in-memory store.
+    pub fn partition(
+        cloud: &GaussianCloud,
+        intrinsics: Intrinsics,
+        cfg: &ShardConfig,
+    ) -> ShardedScene {
+        let store = MemoryShardStore::new(partition_cloud(cloud, cfg.target_splats));
+        ShardedScene::from_store(Box::new(store), intrinsics, cfg.budget_bytes)
+    }
+
+    /// Wrap an existing store (e.g. a [`super::FileShardStore`] over an
+    /// exported partition) with a residency budget.
+    pub fn from_store(
+        store: Box<dyn ShardStore>,
+        intrinsics: Intrinsics,
+        budget_bytes: usize,
+    ) -> ShardedScene {
+        let catalog = ShardCatalog::new(store.metas().to_vec());
+        let total_gaussians = catalog.total_gaussians();
+        let total_bytes = catalog.total_bytes();
+        let residency = Mutex::new(ShardResidency::new(budget_bytes, catalog.len()));
+        ShardedScene {
+            catalog,
+            store,
+            residency,
+            intrinsics,
+            total_gaussians,
+            total_bytes,
+        }
+    }
+
+    pub fn intrinsics(&self) -> &Intrinsics {
+        &self.intrinsics
+    }
+
+    pub fn catalog(&self) -> &ShardCatalog {
+        &self.catalog
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.catalog.len()
+    }
+
+    pub fn total_gaussians(&self) -> usize {
+        self.total_gaussians
+    }
+
+    /// Bytes if every shard were resident at once (what a monolithic
+    /// scene would pin).
+    pub fn total_bytes(&self) -> usize {
+        self.total_bytes
+    }
+
+    /// Lifetime residency counters: (loads, evictions).
+    pub fn residency_counters(&self) -> (u64, u64) {
+        let r = self.residency.lock().unwrap();
+        (r.total_loads, r.total_evictions)
+    }
+
+    /// Select and pin the shard working set for a frame at `pose`:
+    /// frustum-cull the catalog into `ids`, make those shards resident
+    /// (loading/evicting per the budget), and push their assets onto
+    /// `out` in id order. Returns the frame's [`ShardStats`]. Both output
+    /// buffers are cleared first; allocation-free once their capacities
+    /// (and the resident set) are warm.
+    pub fn acquire_visible(
+        &self,
+        pose: &Pose,
+        ids: &mut Vec<usize>,
+        out: &mut Vec<Arc<ShardAssets>>,
+    ) -> ShardStats {
+        let t0 = Instant::now();
+        self.catalog.visible_into(&self.intrinsics, pose, ids);
+        out.clear();
+        // Two-phase residency: pin warm shards under the lock, perform
+        // store IO for cold ones with the lock RELEASED (so one session's
+        // cold-region turn never serializes the other sessions' planning
+        // stages), then commit + evict under the lock. Steady state
+        // (`cold` empty) allocates nothing. A shard that still fails to
+        // load after the retry is fatal: the render API is infallible and
+        // scene data is as load-bearing as program text.
+        let mut cold = Vec::new();
+        let outcome = {
+            let mut res = self.residency.lock().unwrap();
+            res.pin_warm(ids, out, &mut cold);
+            if cold.is_empty() {
+                res.commit(&[], out)
+            } else {
+                drop(res);
+                let loaded = super::residency::load_shards(self.store.as_ref(), &cold)
+                    .expect("shard store failed to materialize a visible shard");
+                let mut res = self.residency.lock().unwrap();
+                res.commit(&loaded, out)
+            }
+        };
+        ShardStats {
+            total: self.catalog.len() as u32,
+            visible: ids.len() as u32,
+            loaded: outcome.loaded,
+            evicted: outcome.evicted,
+            resident: outcome.resident,
+            resident_bytes: outcome.resident_bytes,
+            t_cull: t0.elapsed(),
+        }
+    }
+
+    /// Shared handle for the session/server layer.
+    pub fn into_shared(self) -> Arc<ShardedScene> {
+        Arc::new(self)
+    }
+}
+
+/// One scene reference for every layer above `scene/`: either a
+/// monolithic `Arc<SceneAssets>` (the PR-1 shape) or an
+/// `Arc<ShardedScene>`. Sessions, servers and renderers take
+/// `impl Into<SceneHandle>`, so existing monolithic call sites compile
+/// unchanged.
+#[derive(Clone, Debug)]
+pub enum SceneHandle {
+    Monolithic(Arc<SceneAssets>),
+    Sharded(Arc<ShardedScene>),
+}
+
+impl SceneHandle {
+    pub fn intrinsics(&self) -> &Intrinsics {
+        match self {
+            SceneHandle::Monolithic(a) => &a.intrinsics,
+            SceneHandle::Sharded(s) => s.intrinsics(),
+        }
+    }
+
+    /// Total Gaussians in the scene (resident or not).
+    pub fn num_gaussians(&self) -> usize {
+        match self {
+            SceneHandle::Monolithic(a) => a.cloud.len(),
+            SceneHandle::Sharded(s) => s.total_gaussians(),
+        }
+    }
+
+    pub fn is_sharded(&self) -> bool {
+        matches!(self, SceneHandle::Sharded(_))
+    }
+
+    /// The monolithic assets, if this handle is monolithic.
+    pub fn monolithic(&self) -> Option<&Arc<SceneAssets>> {
+        match self {
+            SceneHandle::Monolithic(a) => Some(a),
+            SceneHandle::Sharded(_) => None,
+        }
+    }
+
+    /// The sharded scene, if this handle is sharded.
+    pub fn sharded(&self) -> Option<&Arc<ShardedScene>> {
+        match self {
+            SceneHandle::Monolithic(_) => None,
+            SceneHandle::Sharded(s) => Some(s),
+        }
+    }
+}
+
+impl From<Arc<SceneAssets>> for SceneHandle {
+    fn from(a: Arc<SceneAssets>) -> SceneHandle {
+        SceneHandle::Monolithic(a)
+    }
+}
+
+impl From<SceneAssets> for SceneHandle {
+    fn from(a: SceneAssets) -> SceneHandle {
+        SceneHandle::Monolithic(Arc::new(a))
+    }
+}
+
+impl From<Arc<ShardedScene>> for SceneHandle {
+    fn from(s: Arc<ShardedScene>) -> SceneHandle {
+        SceneHandle::Sharded(s)
+    }
+}
+
+impl From<ShardedScene> for SceneHandle {
+    fn from(s: ShardedScene) -> SceneHandle {
+        SceneHandle::Sharded(Arc::new(s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scene::generate;
+
+    #[test]
+    fn partition_preserves_totals() {
+        let scene = generate("truck", 0.04, 96, 96);
+        let sharded = ShardedScene::partition(
+            &scene.cloud,
+            scene.intrinsics,
+            &ShardConfig {
+                target_splats: 250,
+                ..Default::default()
+            },
+        );
+        assert_eq!(sharded.total_gaussians(), scene.cloud.len());
+        assert!(sharded.num_shards() > 2);
+        let handle: SceneHandle = sharded.into();
+        assert!(handle.is_sharded());
+        assert_eq!(handle.num_gaussians(), scene.cloud.len());
+    }
+
+    #[test]
+    fn acquire_visible_pins_working_set() {
+        let scene = generate("room", 0.04, 96, 96);
+        let pose = scene.sample_poses(1)[0];
+        let sharded = ShardedScene::partition(
+            &scene.cloud,
+            scene.intrinsics,
+            &ShardConfig {
+                target_splats: 200,
+                ..Default::default()
+            },
+        );
+        let (mut ids, mut out) = (Vec::new(), Vec::new());
+        let stats = sharded.acquire_visible(&pose, &mut ids, &mut out);
+        assert_eq!(stats.total as usize, sharded.num_shards());
+        assert!(stats.visible > 0, "nothing visible from a scene pose");
+        assert_eq!(out.len(), ids.len());
+        assert_eq!(stats.loaded, stats.visible, "first frame loads all visible");
+        // Second frame at the same pose: warm, no loads.
+        let stats2 = sharded.acquire_visible(&pose, &mut ids, &mut out);
+        assert_eq!(stats2.loaded, 0);
+        assert_eq!(stats2.visible, stats.visible);
+    }
+
+    #[test]
+    fn monolithic_handle_reports_scene() {
+        let scene = generate("chair", 0.03, 64, 64);
+        let assets = SceneAssets::from_scene(&scene);
+        let h: SceneHandle = Arc::clone(&assets).into();
+        assert!(!h.is_sharded());
+        assert_eq!(h.num_gaussians(), scene.cloud.len());
+        assert!(h.monolithic().is_some());
+        assert!(h.sharded().is_none());
+    }
+}

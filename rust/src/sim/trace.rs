@@ -6,6 +6,7 @@
 
 use crate::coordinator::{FrameKind, FrameTrace};
 use crate::scene::Intrinsics;
+use crate::shard::ShardStats;
 
 /// Per-frame workload snapshot for the GPU / accelerator models.
 #[derive(Clone, Debug)]
@@ -32,6 +33,9 @@ pub struct WorkloadTrace {
     pub grid: (usize, usize),
     /// How the frame was produced.
     pub kind: FrameKind,
+    /// Shard-stage counters (visible/resident/evicted + cull time; all
+    /// zeros for monolithic scenes).
+    pub shards: ShardStats,
 }
 
 impl WorkloadTrace {
@@ -50,6 +54,7 @@ impl WorkloadTrace {
             inpainted_pixels: trace.warp.as_ref().map(|w| w.inpainted_pixels).unwrap_or(0),
             grid: intr.tile_grid(),
             kind: trace.kind,
+            shards: trace.render.shards,
         }
     }
 
