@@ -35,6 +35,7 @@ fn main() {
             let mut v: Vec<String> = ALL_EXPERIMENTS.iter().map(|s| s.to_string()).collect();
             v.push("tab1".to_string());
             v.push("streaming".to_string());
+            v.push("sched".to_string());
             v
         }
     };
@@ -59,6 +60,13 @@ fn main() {
                     std::fs::write("BENCH_streaming.json", json.to_string_pretty())
                         .expect("writing BENCH_streaming.json");
                     println!("wrote BENCH_streaming.json");
+                }
+                if id == "sched" {
+                    // Imbalanced-session pacing record (lockstep barrier
+                    // vs deadline-paced scheduler).
+                    std::fs::write("BENCH_sched.json", json.to_string_pretty())
+                        .expect("writing BENCH_sched.json");
+                    println!("wrote BENCH_sched.json");
                 }
                 report.set(id, json);
             }

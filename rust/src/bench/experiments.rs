@@ -852,6 +852,197 @@ pub fn streaming_sessions(opts: &ExpOptions) -> Json {
     report
 }
 
+/// `sched` steady state: multi-session throughput and per-session
+/// lateness under a deliberately imbalanced viewer mix — one 4×-pixels
+/// session plus three small ones over the same scene — comparing the
+/// lockstep barrier driver (the old `step_all` semantics: every round
+/// waits for the slowest viewer) against the deadline-paced
+/// [`SessionScheduler`](crate::coordinator::SessionScheduler). The
+/// paper's "no stall" claim at session granularity: under pacing, the
+/// small sessions' p99 lateness stays bounded near their own interval
+/// while the big session churns; under the barrier, their effective
+/// frame interval is the big session's step time. Written to
+/// `BENCH_sched.json` by the bench binary.
+pub fn sched_pacing(opts: &ExpOptions) -> Json {
+    use crate::coordinator::{SchedConfig, SessionScheduler, StreamSession};
+    use crate::util::pool::{default_threads, WorkerPool};
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    let scene_name = "drjohnson";
+    let small_scene = generate(scene_name, opts.scale, opts.width, opts.height);
+    let big_scene = generate(scene_name, opts.scale, opts.width * 2, opts.height * 2);
+    let small_assets = SceneAssets::from_scene(&small_scene);
+    let big_assets = SceneAssets::from_scene(&big_scene);
+    let frames = opts.frames.max(12);
+    let n_small = 3usize;
+    let cfg = CoordinatorConfig {
+        window: opts.window,
+        threads: 1, // one core per stream step: the pool slots are the
+        // session-level parallelism under test
+        ..Default::default()
+    };
+    let pool_threads = default_threads().saturating_sub(1).max(2);
+    let small_poses = small_scene.sample_poses(frames);
+    let big_poses = big_scene.sample_poses(frames);
+
+    // Calibrate the small-session steady-state step cost solo, then pace
+    // every session at 3x that: comfortably feasible for small viewers,
+    // structurally infeasible for the 4x-pixels one.
+    let calib_pool = Arc::new(WorkerPool::new(pool_threads));
+    let mut calib = StreamSession::new(Arc::clone(&small_assets), calib_pool, cfg);
+    for p in &small_poses {
+        calib.step(p); // warm arenas + caches
+    }
+    let t0 = Instant::now();
+    for p in &small_poses {
+        calib.step(p);
+    }
+    let small_step = t0.elapsed() / small_poses.len() as u32;
+    let interval = small_step * 3;
+
+    let build = |pool: &Arc<WorkerPool>| -> (SessionScheduler, usize, Vec<usize>) {
+        let mut sched = SessionScheduler::new(
+            Arc::clone(pool),
+            SchedConfig {
+                frame_interval: interval,
+                prefetch: false, // monolithic scenes here; keep idle capacity honest
+            },
+        );
+        let big_id = sched.add_paced(
+            StreamSession::new(Arc::clone(&big_assets), Arc::clone(pool), cfg),
+            interval,
+        );
+        let small_ids: Vec<usize> = (0..n_small)
+            .map(|_| {
+                sched.add_paced(
+                    StreamSession::new(Arc::clone(&small_assets), Arc::clone(pool), cfg),
+                    interval,
+                )
+            })
+            .collect();
+        (sched, big_id, small_ids)
+    };
+
+    // --- Lockstep barrier: rounds of submit-all-then-drain. The round's
+    // wall time is the small sessions' effective frame interval.
+    let pool = Arc::new(WorkerPool::new(pool_threads));
+    let (mut lockstep, big_id, small_ids) = build(&pool);
+    let push_round = |s: &mut SessionScheduler, big: usize, small: &[usize], f: usize| {
+        s.push_pose(big, big_poses[f]);
+        for &id in small {
+            s.push_pose(id, small_poses[f]);
+        }
+    };
+    let warmup = 2.min(frames / 2);
+    for f in 0..warmup {
+        push_round(&mut lockstep, big_id, &small_ids, f);
+        lockstep.advance_all_pending();
+    }
+    let mut round_ms: Vec<f32> = Vec::new();
+    let t0 = Instant::now();
+    for f in warmup..frames {
+        push_round(&mut lockstep, big_id, &small_ids, f);
+        let r0 = Instant::now();
+        lockstep.advance_all_pending();
+        round_ms.push(r0.elapsed().as_secs_f32() * 1e3);
+    }
+    let lockstep_wall = t0.elapsed().as_secs_f64();
+    let lockstep_frames = ((frames - warmup) * (n_small + 1)) as f64;
+    let lock_p50 = crate::metrics::percentile(&round_ms, 50.0);
+    let lock_p99 = crate::metrics::percentile(&round_ms, 99.0);
+
+    // --- Deadline-paced: warmed exactly like the lockstep arm (cold
+    // first full renders + arena growth excluded from both), then all
+    // remaining poses queued up front so sessions pace themselves; small
+    // viewers are never gated on the big one. Stats come from the
+    // measured outcomes only, so neither arm's warmup contaminates them.
+    let pool = Arc::new(WorkerPool::new(pool_threads));
+    let (mut paced, big_id, small_ids) = build(&pool);
+    for f in 0..warmup {
+        push_round(&mut paced, big_id, &small_ids, f);
+        paced.advance_all_pending();
+    }
+    for f in warmup..frames {
+        push_round(&mut paced, big_id, &small_ids, f);
+    }
+    let cap = interval * frames as u32 * 20 + Duration::from_secs(2);
+    let t0 = Instant::now();
+    let done = paced.run_for(cap);
+    let paced_wall = t0.elapsed().as_secs_f64();
+    let mut small_late_ms: Vec<f32> = Vec::new();
+    let mut big_late_ms: Vec<f32> = Vec::new();
+    let mut small_stalls = 0u64;
+    for (id, s) in &done {
+        let ms = s.sched.lateness.as_secs_f32() * 1e3;
+        if *id == big_id {
+            big_late_ms.push(ms);
+        } else {
+            small_late_ms.push(ms);
+            if s.sched.stalled {
+                small_stalls += 1;
+            }
+        }
+    }
+    let small_steps = small_late_ms.len() as u64;
+    let big_steps = big_late_ms.len() as u64;
+    // run_for is capped: guard the percentiles in case a queue was cut off.
+    if small_late_ms.is_empty() {
+        small_late_ms.push(0.0);
+    }
+    if big_late_ms.is_empty() {
+        big_late_ms.push(0.0);
+    }
+    let small_p99 = crate::metrics::percentile(&small_late_ms, 99.0);
+    let big_p99 = crate::metrics::percentile(&big_late_ms, 99.0);
+
+    let interval_ms = interval.as_secs_f64() * 1e3;
+    let mut table = Table::new(
+        "sched — imbalanced sessions (1 big 4x-pixels + 3 small), lockstep barrier vs deadline pacing",
+        &["driver", "small eff. interval / p99 lateness (ms)", "target (ms)", "total FPS"],
+    );
+    table.row(&[
+        "lockstep barrier".into(),
+        format!("{lock_p50:.2} p50 / {lock_p99:.2} p99 round"),
+        f2(interval_ms),
+        f1(lockstep_frames / lockstep_wall),
+    ]);
+    table.row(&[
+        "deadline-paced".into(),
+        format!("{small_p99:.2} p99 lateness"),
+        f2(interval_ms),
+        f1(done.len() as f64 / paced_wall),
+    ]);
+    table.print();
+    println!(
+        "(small sessions: {small_steps} steps, {small_stalls} stalls; big session: {big_steps} steps, p99 lateness {big_p99:.1} ms)"
+    );
+
+    let mut report = Json::obj();
+    report
+        .set("scene", scene_name)
+        .set("frames_per_session", frames)
+        .set("small_sessions", n_small)
+        .set("pool_threads", pool_threads)
+        .set("interval_ms", interval_ms)
+        .set("small_step_ms", small_step.as_secs_f64() * 1e3);
+    let mut lk = Json::obj();
+    lk.set("round_p50_ms", lock_p50)
+        .set("round_p99_ms", lock_p99)
+        .set("total_fps", lockstep_frames / lockstep_wall);
+    report.set("lockstep", lk);
+    let mut pc = Json::obj();
+    pc.set("small_p99_lateness_ms", small_p99)
+        .set("big_p99_lateness_ms", big_p99)
+        .set("small_steps", small_steps)
+        .set("small_stalls", small_stalls)
+        .set("big_steps", big_steps)
+        .set("total_fps", done.len() as f64 / paced_wall)
+        .set("wall_s", paced_wall);
+    report.set("paced", pc);
+    report
+}
+
 /// Table I: rasterization-core utilization, Original vs LS-Gaussian.
 pub fn tab1_utilization(opts: &ExpOptions) -> Json {
     let cfg = AccelConfig::default();

@@ -1,0 +1,358 @@
+//! CI perf-regression gate over the streaming steady-state record.
+//!
+//! The bench binary writes `BENCH_streaming.json` every run; the repo
+//! commits a `BENCH_baseline.json` snapshot of a known-good run at the
+//! same (quick-mode) options. [`compare`] extracts the steady-state
+//! ms/frame metrics from both and fails when any regresses by more than
+//! the threshold (default 20%); [`markdown`] renders the comparison as a
+//! GitHub step-summary table. The `bench_gate` binary wires this to the
+//! filesystem and `$GITHUB_STEP_SUMMARY`, and refreshes the baseline
+//! with `--update` after intentional perf changes.
+//!
+//! A baseline marked `{"bootstrap": true}` (or containing no extractable
+//! metrics) makes the gate report the current metrics and pass — the
+//! seeding path for a machine class that has never recorded a baseline.
+
+use crate::util::json::Json;
+
+/// One compared metric (all values are ms/frame: lower is better).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GateRow {
+    pub metric: String,
+    pub baseline_ms: f64,
+    pub current_ms: f64,
+    /// current / baseline (1.0 = unchanged, >1 = slower).
+    pub ratio: f64,
+    pub regressed: bool,
+}
+
+/// Outcome of a gate run.
+#[derive(Clone, Debug, PartialEq)]
+pub enum GateOutcome {
+    /// Baseline carries no metrics: seed it from the current run.
+    Bootstrap { current: Vec<(String, f64)> },
+    /// Metric-by-metric comparison; `failed` when any row regressed,
+    /// when a baseline metric vanished from the current report
+    /// (`missing`), or when nothing could be compared at all.
+    Compared {
+        rows: Vec<GateRow>,
+        /// Baseline metrics absent from the current report — a gated
+        /// steady state silently disappearing must fail, not shrink the
+        /// table. (The opposite direction — a metric the baseline
+        /// predates — is fine and skipped.)
+        missing: Vec<String>,
+        failed: bool,
+    },
+}
+
+/// Pull the steady-state ms/frame metrics out of a streaming report
+/// (`BENCH_streaming.json` shape). Missing sections are skipped, so old
+/// baselines and new reports stay comparable on their intersection.
+pub fn extract_metrics(report: &Json) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    let mut push_fps = |name: String, fps: Option<f64>| {
+        if let Some(fps) = fps {
+            if fps > 0.0 {
+                out.push((name, 1e3 / fps));
+            }
+        }
+    };
+    if let Some(sessions) = report.get("sessions") {
+        for key in ["1", "4", "16"] {
+            push_fps(
+                format!("steady ms/frame ({key} sessions)"),
+                sessions
+                    .get(key)
+                    .and_then(|s| s.get("fps_per_session"))
+                    .and_then(Json::as_f64),
+            );
+        }
+    }
+    push_fps(
+        "steady ms/frame (reused scratch, 1 session)".to_string(),
+        report.get("reused_scratch_fps").and_then(Json::as_f64),
+    );
+    push_fps(
+        "steady ms/frame (sharded, 40% budget)".to_string(),
+        report
+            .get("sharded")
+            .and_then(|s| s.get("fps"))
+            .and_then(Json::as_f64),
+    );
+    out
+}
+
+/// Compare `current` against `baseline` at `threshold` (0.20 = fail on a
+/// >20% ms/frame regression of any shared metric).
+pub fn compare(baseline: &Json, current: &Json, threshold: f64) -> GateOutcome {
+    let current_metrics = extract_metrics(current);
+    let bootstrap = baseline
+        .get("bootstrap")
+        .and_then(Json::as_bool)
+        .unwrap_or(false);
+    let baseline_metrics = extract_metrics(baseline);
+    if bootstrap || baseline_metrics.is_empty() {
+        return GateOutcome::Bootstrap {
+            current: current_metrics,
+        };
+    }
+    let mut rows = Vec::new();
+    let mut failed = false;
+    for (name, cur) in &current_metrics {
+        let Some((_, base)) = baseline_metrics.iter().find(|(n, _)| n == name) else {
+            continue;
+        };
+        let ratio = cur / base;
+        let regressed = ratio > 1.0 + threshold;
+        failed |= regressed;
+        rows.push(GateRow {
+            metric: name.clone(),
+            baseline_ms: *base,
+            current_ms: *cur,
+            ratio,
+            regressed,
+        });
+    }
+    // A baseline metric that vanished from the current report means a
+    // gated steady state stopped being measured — fail loudly instead of
+    // silently shrinking the comparison.
+    let missing: Vec<String> = baseline_metrics
+        .iter()
+        .filter(|(n, _)| !current_metrics.iter().any(|(c, _)| c == n))
+        .map(|(n, _)| n.clone())
+        .collect();
+    failed |= !missing.is_empty();
+    // And a gate that compared nothing must not pass: a renamed report
+    // key or an empty current report would otherwise disable the gate
+    // forever.
+    failed |= rows.is_empty();
+    GateOutcome::Compared {
+        rows,
+        missing,
+        failed,
+    }
+}
+
+/// Render the outcome as a markdown comparison table (the
+/// `$GITHUB_STEP_SUMMARY` payload).
+pub fn markdown(outcome: &GateOutcome, threshold: f64) -> String {
+    use std::fmt::Write as _;
+    let mut md = String::new();
+    let _ = writeln!(md, "## Streaming perf gate (>{:.0}% = fail)\n", threshold * 100.0);
+    match outcome {
+        GateOutcome::Bootstrap { current } => {
+            let _ = writeln!(
+                md,
+                "Baseline is a bootstrap placeholder — recording current metrics, gate passes."
+            );
+            let _ = writeln!(
+                md,
+                "Refresh it with `cargo run --release --bin bench_gate -- --update` \
+                 (after the quick-mode streaming bench) and commit `BENCH_baseline.json`.\n"
+            );
+            let _ = writeln!(md, "| metric | current |");
+            let _ = writeln!(md, "|---|---|");
+            for (name, ms) in current {
+                let _ = writeln!(md, "| {name} | {ms:.3} ms |");
+            }
+        }
+        GateOutcome::Compared {
+            rows,
+            missing,
+            failed,
+        } => {
+            if rows.is_empty() {
+                let _ = writeln!(
+                    md,
+                    "**FAIL: no metric shared between baseline and current report** — \
+                     a report-shape change or an empty bench run disabled the \
+                     comparison. Regenerate both with the same quick-mode options."
+                );
+                return md;
+            }
+            let _ = writeln!(md, "| metric | baseline | current | Δ | status |");
+            let _ = writeln!(md, "|---|---|---|---|---|");
+            for r in rows {
+                let _ = writeln!(
+                    md,
+                    "| {} | {:.3} ms | {:.3} ms | {:+.1}% | {} |",
+                    r.metric,
+                    r.baseline_ms,
+                    r.current_ms,
+                    (r.ratio - 1.0) * 100.0,
+                    if r.regressed { "❌ regressed" } else { "✅" }
+                );
+            }
+            for m in missing {
+                let _ = writeln!(md, "| {m} | — | **missing** | — | ❌ not measured |");
+            }
+            let _ = writeln!(
+                md,
+                "\n**{}**",
+                if *failed {
+                    "FAIL: steady-state ms/frame regressed beyond the threshold \
+                     (or a gated metric went missing)."
+                } else {
+                    "PASS: no steady-state regression beyond the threshold."
+                }
+            );
+        }
+    }
+    md
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(fps1: f64, fps4: f64, sharded: f64) -> Json {
+        let mut sessions = Json::obj();
+        let mut s1 = Json::obj();
+        s1.set("fps_per_session", fps1);
+        let mut s4 = Json::obj();
+        s4.set("fps_per_session", fps4);
+        sessions.set("1", s1).set("4", s4);
+        let mut sh = Json::obj();
+        sh.set("fps", sharded);
+        let mut r = Json::obj();
+        r.set("sessions", sessions)
+            .set("sharded", sh)
+            .set("reused_scratch_fps", fps1);
+        r
+    }
+
+    #[test]
+    fn extracts_ms_per_frame() {
+        let m = extract_metrics(&report(100.0, 50.0, 25.0));
+        let get = |name: &str| m.iter().find(|(n, _)| n.contains(name)).unwrap().1;
+        assert!((get("1 sessions") - 10.0).abs() < 1e-9);
+        assert!((get("4 sessions") - 20.0).abs() < 1e-9);
+        assert!((get("sharded") - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn passes_within_threshold_fails_beyond() {
+        let base = report(100.0, 50.0, 25.0);
+        // 10% slower everywhere: within a 20% gate.
+        let ok = report(100.0 / 1.1, 50.0 / 1.1, 25.0 / 1.1);
+        match compare(&base, &ok, 0.20) {
+            GateOutcome::Compared { failed, rows, .. } => {
+                assert!(!failed);
+                assert_eq!(rows.len(), 4);
+            }
+            _ => panic!("expected comparison"),
+        }
+        // One metric 30% slower: fail, and only that row is marked.
+        let bad = report(100.0 / 1.3, 50.0, 25.0);
+        match compare(&base, &bad, 0.20) {
+            GateOutcome::Compared { failed, rows, .. } => {
+                assert!(failed);
+                let regressed: Vec<_> =
+                    rows.iter().filter(|r| r.regressed).map(|r| &r.metric).collect();
+                assert!(!regressed.is_empty());
+                assert!(regressed.iter().all(|m| m.contains("1 session")));
+            }
+            _ => panic!("expected comparison"),
+        }
+    }
+
+    #[test]
+    fn speedups_never_fail() {
+        let base = report(100.0, 50.0, 25.0);
+        let faster = report(200.0, 100.0, 50.0);
+        match compare(&base, &faster, 0.20) {
+            GateOutcome::Compared { failed, .. } => assert!(!failed),
+            _ => panic!("expected comparison"),
+        }
+    }
+
+    #[test]
+    fn bootstrap_baseline_passes_and_reports() {
+        let mut base = Json::obj();
+        base.set("bootstrap", true);
+        let cur = report(100.0, 50.0, 25.0);
+        let out = compare(&base, &cur, 0.20);
+        match &out {
+            GateOutcome::Bootstrap { current } => assert_eq!(current.len(), 4),
+            _ => panic!("expected bootstrap"),
+        }
+        let md = markdown(&out, 0.20);
+        assert!(md.contains("bootstrap"));
+        assert!(md.contains("--update"));
+    }
+
+    #[test]
+    fn metrics_missing_from_baseline_are_skipped() {
+        // Old baseline without the sharded section still gates the rest.
+        let mut base = report(100.0, 50.0, 25.0);
+        if let Json::Obj(m) = &mut base {
+            m.remove("sharded");
+        }
+        let cur = report(100.0, 50.0, 5.0); // sharded 5x slower but unknown to baseline
+        match compare(&base, &cur, 0.20) {
+            GateOutcome::Compared { failed, rows, .. } => {
+                assert!(!failed);
+                assert!(rows.iter().all(|r| !r.metric.contains("sharded")));
+            }
+            _ => panic!("expected comparison"),
+        }
+    }
+
+    #[test]
+    fn disjoint_metrics_fail_instead_of_passing_silently() {
+        // Baseline with metrics, current report whose keys share nothing
+        // (e.g. after a report-shape rename): the gate must fail, not
+        // report an empty PASS.
+        let base = report(100.0, 50.0, 25.0);
+        let mut cur = Json::obj();
+        cur.set("renamed_everything", 1.0);
+        match compare(&base, &cur, 0.20) {
+            GateOutcome::Compared { failed, rows, .. } => {
+                assert!(failed, "empty comparison must fail the gate");
+                assert!(rows.is_empty());
+            }
+            _ => panic!("expected comparison"),
+        }
+        let md = markdown(&compare(&base, &cur, 0.20), 0.20);
+        assert!(md.contains("FAIL"));
+    }
+
+    #[test]
+    fn metric_vanishing_from_current_report_fails() {
+        // A steady state that stops being measured must fail the gate,
+        // not silently shrink the table.
+        let base = report(100.0, 50.0, 25.0);
+        let mut cur = report(100.0, 50.0, 25.0);
+        if let Json::Obj(m) = &mut cur {
+            m.remove("sharded");
+        }
+        let out = compare(&base, &cur, 0.20);
+        match &out {
+            GateOutcome::Compared {
+                failed,
+                rows,
+                missing,
+            } => {
+                assert!(failed, "vanished metric must fail the gate");
+                assert!(!rows.is_empty(), "surviving metrics still compared");
+                assert_eq!(missing.len(), 1);
+                assert!(missing[0].contains("sharded"));
+            }
+            _ => panic!("expected comparison"),
+        }
+        let md = markdown(&out, 0.20);
+        assert!(md.contains("not measured"));
+        assert!(md.contains("FAIL"));
+    }
+
+    #[test]
+    fn markdown_flags_regressions() {
+        let base = report(100.0, 50.0, 25.0);
+        let bad = report(50.0, 50.0, 25.0);
+        let out = compare(&base, &bad, 0.20);
+        let md = markdown(&out, 0.20);
+        assert!(md.contains("regressed"));
+        assert!(md.contains("FAIL"));
+        assert!(md.contains("| metric | baseline | current |"));
+    }
+}

@@ -7,6 +7,7 @@
 //! small fixed-format table printer and the experiment registry.
 
 pub mod experiments;
+pub mod gate;
 
 use crate::util::json::Json;
 use std::fmt::Write as _;
@@ -109,8 +110,9 @@ pub const ALL_EXPERIMENTS: [&str; 13] = [
 ];
 // tab1 runs as part of fig14's sweep but is addressable too; "streaming"
 // (the session-core steady-state benchmark, written to
-// BENCH_streaming.json) is addressable and in the bench binary's default
-// set but is not a paper figure.
+// BENCH_streaming.json) and "sched" (imbalanced-session pacing steady
+// state, written to BENCH_sched.json) are addressable and in the bench
+// binary's default set but are not paper figures.
 
 /// Run one experiment by id; returns its JSON report.
 pub fn run_experiment(id: &str, opts: &ExpOptions) -> Option<Json> {
@@ -131,6 +133,7 @@ pub fn run_experiment(id: &str, opts: &ExpOptions) -> Option<Json> {
         "fig15b" => e::fig15b_area(opts),
         "tab1" => e::tab1_utilization(opts),
         "streaming" => e::streaming_sessions(opts),
+        "sched" => e::sched_pacing(opts),
         _ => return None,
     };
     Some(json)

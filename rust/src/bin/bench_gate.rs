@@ -1,0 +1,80 @@
+//! CI perf-regression gate: compare the quick-mode streaming steady
+//! state (`BENCH_streaming.json`, written by
+//! `cargo bench -- --exp streaming`) against the committed
+//! `BENCH_baseline.json` and fail (exit 1) when any steady-state
+//! ms/frame metric regresses beyond the threshold. Writes a markdown
+//! comparison table to `$GITHUB_STEP_SUMMARY` when that variable is set.
+//!
+//! Usage:
+//!   cargo run --release --bin bench_gate                    # gate at 20%
+//!   cargo run --release --bin bench_gate -- --threshold 0.3
+//!   cargo run --release --bin bench_gate -- --update        # refresh baseline
+//!
+//! `--update` copies the current `BENCH_streaming.json` into
+//! `BENCH_baseline.json` — run it after intentional perf changes and
+//! commit the result.
+
+use ls_gaussian::bench::gate::{compare, markdown, GateOutcome};
+use ls_gaussian::util::cli::Args;
+use ls_gaussian::util::json::Json;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let baseline_path = args.get_or("baseline", "BENCH_baseline.json");
+    let current_path = args.get_or("current", "BENCH_streaming.json");
+    let threshold = args.f32_or("threshold", 0.20) as f64;
+
+    let current_text = match std::fs::read_to_string(current_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!(
+                "bench_gate: cannot read {current_path}: {e}\n\
+                 run `cargo bench -- --exp streaming` first"
+            );
+            std::process::exit(2);
+        }
+    };
+    let current = match Json::parse(&current_text) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("bench_gate: {current_path} is not valid JSON: {e}");
+            std::process::exit(2);
+        }
+    };
+
+    if args.flag("update") {
+        std::fs::write(baseline_path, current.to_string_pretty())
+            .expect("writing refreshed baseline");
+        println!("bench_gate: wrote {baseline_path} from {current_path}");
+        return;
+    }
+
+    // A missing or unparsable baseline degrades to the bootstrap path
+    // (report current metrics, pass) rather than blocking CI on setup.
+    let baseline = std::fs::read_to_string(baseline_path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .unwrap_or_else(|| {
+            eprintln!("bench_gate: no usable {baseline_path}; treating as bootstrap");
+            let mut j = Json::obj();
+            j.set("bootstrap", true);
+            j
+        });
+
+    let outcome = compare(&baseline, &current, threshold);
+    let md = markdown(&outcome, threshold);
+    println!("{md}");
+    if let Ok(summary_path) = std::env::var("GITHUB_STEP_SUMMARY") {
+        use std::io::Write as _;
+        if let Ok(mut f) = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(summary_path)
+        {
+            let _ = writeln!(f, "{md}");
+        }
+    }
+    if let GateOutcome::Compared { failed: true, .. } = outcome {
+        std::process::exit(1);
+    }
+}

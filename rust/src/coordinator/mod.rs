@@ -1,15 +1,20 @@
 //! L3 coordination layer: the per-viewer streaming session (window-n
-//! cadence, TWSR + DPES orchestration), the multi-session stream server,
-//! the single-stream coordinator wrapper, and the Load Distribution Unit's
+//! cadence, TWSR + DPES orchestration), the deadline-paced multi-session
+//! scheduler, the multi-session stream server built on it, the
+//! single-stream coordinator wrapper, and the Load Distribution Unit's
 //! assignment policies (paper Sec. V).
 
+pub mod compat;
 pub mod ldu;
 pub mod scheduler;
 pub mod server;
 pub mod session;
 
+pub use compat::StreamingCoordinator;
 pub use ldu::{assign_balanced, assign_naive, order_light_to_heavy, BlockAssignment};
-pub use scheduler::StreamingCoordinator;
+pub use scheduler::{
+    SchedConfig, SchedCounters, SchedStats, SessionGuard, SessionId, SessionScheduler,
+};
 pub use server::StreamServer;
 pub use session::{
     CoordinatorConfig, FrameKind, FrameResult, FrameTrace, StepSummary, StreamSession, WarpMode,

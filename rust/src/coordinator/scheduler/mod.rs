@@ -1,0 +1,75 @@
+//! Async session scheduling: per-session pacing on the shared
+//! [`WorkerPool`](crate::util::pool::WorkerPool), replacing the lockstep
+//! scoped-thread fan-out of the original `StreamServer::step_all`.
+//!
+//! The paper's "no stall" principle is about imbalanced parallel work:
+//! whenever a barrier forces fast work to wait for slow work, hardware
+//! idles. The old server was exactly such a barrier one level above the
+//! tiles — every session advanced in lockstep, so a single slow viewer
+//! (large window, cold shards, full re-render) gated every other viewer,
+//! and S sessions × T tile threads oversubscribed the machine. The
+//! [`SessionScheduler`] removes both problems:
+//!
+//! * **Sessions are boxed jobs, not threads.** Each due session step is
+//!   submitted to the shared pool's job queue; at most `pool.threads()`
+//!   sessions execute at once, and the tile-level gang dispatch inside a
+//!   step shares the *same* workers (the caller always participates, so
+//!   session jobs can never deadlock on tile work). Total parallelism is
+//!   the pool size — never sessions × tiles.
+//! * **Per-session pacing.** Every session has a target frame interval
+//!   and a fixed-cadence deadline; a [deadline-ordered run
+//!   queue](queue::DeadlineQueue) dispatches the earliest-due session
+//!   first. A viewer that falls behind accumulates *lateness* on its own
+//!   deadline ladder — it never blocks the queue, so fast low-cost
+//!   viewers keep their cadence while a heavy one churns.
+//! * **Lateness/stall counters** ride the existing observability path:
+//!   [`SchedStats`] is stamped into each step's
+//!   [`StepSummary`](crate::coordinator::StepSummary) /
+//!   [`FrameTrace`](crate::coordinator::FrameTrace) and flows into
+//!   [`WorkloadTrace`](crate::sim::WorkloadTrace) exactly like
+//!   [`ShardStats`](crate::shard::ShardStats) does.
+//! * **Prefetch on idle.** When the pool has spare capacity, the
+//!   scheduler extrapolates each session's next pose from its history and
+//!   warms the shards about to enter the frustum
+//!   ([`ShardedScene::prefetch`](crate::shard::ShardedScene::prefetch)),
+//!   hiding `FileShardStore` latency behind otherwise-idle workers.
+//!
+//! The deterministic `step_all`/`advance_all` server API survives as thin
+//! submit-all-then-drain wrappers ([`SessionScheduler::step_all_pending`]
+//! / [`SessionScheduler::advance_all_pending`]): every session still
+//! advances exactly once per call and produces bit-identical frames to
+//! the old lockstep path, because a session step depends only on its own
+//! state and pose — never on scheduling order.
+
+pub mod queue;
+mod sched;
+
+pub use sched::{SchedConfig, SchedCounters, SessionGuard, SessionScheduler};
+
+use std::time::Duration;
+
+/// Session identifier handed out by [`SessionScheduler::add`]; ids are
+/// never reused within one scheduler.
+pub type SessionId = usize;
+
+/// Per-step scheduling counters, carried in
+/// [`StepSummary`](crate::coordinator::StepSummary) →
+/// [`FrameTrace`](crate::coordinator::FrameTrace) →
+/// [`WorkloadTrace`](crate::sim::WorkloadTrace) the same way
+/// [`ShardStats`](crate::shard::ShardStats) is. All zeros for steps
+/// driven outside a scheduler (solo sessions, coordinator wrapper);
+/// deterministic `step_all`/`advance_all` drains record only `t_step`
+/// (they have no deadline, so lateness/stall stay zero there too).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SchedStats {
+    /// Completion time past the step's deadline (zero when on time).
+    pub lateness: Duration,
+    /// The step finished more than one full interval past its deadline —
+    /// the session-level analogue of a pipeline stall.
+    pub stalled: bool,
+    /// Wall-clock spent waiting between the deadline and execution start
+    /// (run-queue + worker contention).
+    pub t_queue: Duration,
+    /// Wall-clock of the session step itself.
+    pub t_step: Duration,
+}

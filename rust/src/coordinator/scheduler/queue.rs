@@ -1,0 +1,189 @@
+//! Deadline-ordered run queue: a min-heap of `(due, seq, session)`
+//! entries. The scheduler pushes one entry per runnable session keyed by
+//! its next-due instant; [`DeadlineQueue::pop_due`] pops the earliest
+//! entry that is due at `now`, so fast sessions with near deadlines are
+//! always dispatched before slow ones with far deadlines — the
+//! session-level analogue of the tile scheduler's shortest-deadline-first
+//! mapping.
+//!
+//! Entries are invalidated *lazily*: each push carries a per-session
+//! sequence number, and the owner (the scheduler's slot control block)
+//! remembers the latest one. A popped entry whose sequence is stale —
+//! because the session was stepped through the deterministic
+//! submit-all-then-drain path, removed, or re-queued — is simply dropped.
+//! This keeps push/pop O(log n) without heap surgery.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::time::Instant;
+
+use super::SessionId;
+
+/// One queued run: due time, owning session, and the session-local
+/// sequence number that validates the entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct Entry {
+    due: Instant,
+    /// Global tiebreaker so equal deadlines pop in FIFO order.
+    order: u64,
+    id: SessionId,
+    seq: u64,
+}
+
+/// Min-heap of session run deadlines (earliest due pops first).
+#[derive(Debug, Default)]
+pub struct DeadlineQueue {
+    heap: BinaryHeap<Reverse<Entry>>,
+    order: u64,
+}
+
+impl DeadlineQueue {
+    pub fn new() -> DeadlineQueue {
+        DeadlineQueue::default()
+    }
+
+    /// Queue session `id` to run at `due`. `seq` must match the owner's
+    /// current sequence for the entry to still be valid when popped.
+    pub fn push(&mut self, id: SessionId, due: Instant, seq: u64) {
+        self.order += 1;
+        self.heap.push(Reverse(Entry {
+            due,
+            order: self.order,
+            id,
+            seq,
+        }));
+    }
+
+    /// Pop the earliest entry with `due <= now`, validating it against
+    /// `valid(id, seq)` (stale entries are discarded and the scan
+    /// continues). Returns `(id, due)`.
+    pub fn pop_due(
+        &mut self,
+        now: Instant,
+        mut valid: impl FnMut(SessionId, u64) -> bool,
+    ) -> Option<(SessionId, Instant)> {
+        while let Some(Reverse(e)) = self.heap.peek().copied() {
+            if !valid(e.id, e.seq) {
+                self.heap.pop();
+                continue;
+            }
+            if e.due > now {
+                return None;
+            }
+            self.heap.pop();
+            return Some((e.id, e.due));
+        }
+        None
+    }
+
+    /// Earliest due time among valid entries (prunes stale heads).
+    pub fn next_due(&mut self, mut valid: impl FnMut(SessionId, u64) -> bool) -> Option<Instant> {
+        while let Some(Reverse(e)) = self.heap.peek().copied() {
+            if !valid(e.id, e.seq) {
+                self.heap.pop();
+                continue;
+            }
+            return Some(e.due);
+        }
+        None
+    }
+
+    /// Rebuild the heap keeping only valid entries. Callers that never
+    /// pop (the deterministic submit-all-then-drain wrappers invalidate
+    /// entries without popping them) run this periodically so stale
+    /// entries cannot accumulate without bound.
+    pub fn compact(&mut self, mut valid: impl FnMut(SessionId, u64) -> bool) {
+        let entries = std::mem::take(&mut self.heap).into_vec();
+        self.heap = entries
+            .into_iter()
+            .filter(|Reverse(e)| valid(e.id, e.seq))
+            .collect();
+    }
+
+    /// Entries currently in the heap (including stale ones).
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn pops_in_deadline_order() {
+        let t0 = Instant::now();
+        let mut q = DeadlineQueue::new();
+        q.push(0, t0 + Duration::from_millis(30), 1);
+        q.push(1, t0 + Duration::from_millis(10), 1);
+        q.push(2, t0 + Duration::from_millis(20), 1);
+        let late = t0 + Duration::from_millis(100);
+        let mut got = Vec::new();
+        while let Some((id, _)) = q.pop_due(late, |_, _| true) {
+            got.push(id);
+        }
+        assert_eq!(got, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn respects_now() {
+        let t0 = Instant::now();
+        let mut q = DeadlineQueue::new();
+        q.push(0, t0 + Duration::from_secs(60), 1);
+        assert_eq!(q.pop_due(t0, |_, _| true), None);
+        assert_eq!(q.next_due(|_, _| true), Some(t0 + Duration::from_secs(60)));
+    }
+
+    #[test]
+    fn stale_entries_are_dropped() {
+        let t0 = Instant::now();
+        let mut q = DeadlineQueue::new();
+        q.push(0, t0, 1);
+        q.push(0, t0, 2); // re-queue invalidates seq 1
+        let mut got = Vec::new();
+        while let Some((id, _)) = q.pop_due(t0 + Duration::from_millis(1), |_, seq| seq == 2) {
+            got.push(id);
+        }
+        assert_eq!(got, vec![0]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn compact_drops_stale_entries() {
+        let t0 = Instant::now();
+        let mut q = DeadlineQueue::new();
+        for seq in 1..=100u64 {
+            q.push(0, t0, seq); // each push supersedes the previous
+        }
+        q.push(1, t0 + Duration::from_secs(1), 7);
+        assert_eq!(q.len(), 101);
+        q.compact(|id, seq| (id == 0 && seq == 100) || (id == 1 && seq == 7));
+        assert_eq!(q.len(), 2);
+        // Surviving entries still pop in deadline order.
+        let late = t0 + Duration::from_secs(2);
+        assert_eq!(q.pop_due(late, |_, _| true), Some((0, t0)));
+        assert_eq!(
+            q.pop_due(late, |_, _| true),
+            Some((1, t0 + Duration::from_secs(1)))
+        );
+    }
+
+    #[test]
+    fn equal_deadlines_pop_fifo() {
+        let t0 = Instant::now();
+        let mut q = DeadlineQueue::new();
+        for id in 0..4 {
+            q.push(id, t0, 1);
+        }
+        let mut got = Vec::new();
+        while let Some((id, _)) = q.pop_due(t0, |_, _| true) {
+            got.push(id);
+        }
+        assert_eq!(got, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,760 @@
+//! The [`SessionScheduler`]: owns sessions behind per-session locks and
+//! runs their steps as boxed jobs on the shared [`WorkerPool`], paced by
+//! a deadline-ordered run queue. See the module docs in `mod.rs` for the
+//! design rationale.
+
+use super::queue::DeadlineQueue;
+use super::{SchedStats, SessionId};
+use crate::coordinator::session::{FrameResult, StepSummary, StreamSession};
+use crate::scene::Pose;
+use crate::shard::SceneHandle;
+use crate::util::pool::WorkerPool;
+use std::collections::VecDeque;
+use std::ops::{Deref, DerefMut};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Scheduler-wide configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedConfig {
+    /// Default target frame interval for sessions added without an
+    /// explicit one (~30 Hz).
+    pub frame_interval: Duration,
+    /// Use idle pool capacity to prefetch shards predicted to enter the
+    /// frustum (no-op for monolithic scenes).
+    pub prefetch: bool,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            frame_interval: Duration::from_millis(33),
+            prefetch: true,
+        }
+    }
+}
+
+/// Lifetime per-session scheduling counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SchedCounters {
+    /// Steps completed.
+    pub steps: u64,
+    /// Steps that finished past their deadline at all.
+    pub late_steps: u64,
+    /// Steps that finished more than one interval past their deadline.
+    pub stalls: u64,
+    /// Sum of per-step lateness.
+    pub total_lateness: Duration,
+    /// Worst single-step lateness.
+    pub max_lateness: Duration,
+    /// Shards warmed for this session by predictive prefetch.
+    pub prefetched_shards: u64,
+}
+
+/// Pacing + queueing state of one session (everything the scheduler and
+/// the in-flight job coordinate through, behind one small lock).
+struct SlotCtl {
+    interval: Duration,
+    /// Deadline of the next step (fixed cadence: advances by `interval`
+    /// per completed step; restarts at `now` when a pose arrives at an
+    /// idle session past its deadline).
+    next_due: Instant,
+    /// Validates this slot's entry in the deadline queue; bumping it
+    /// invalidates any queued entry.
+    seq: u64,
+    /// A valid entry for this slot is currently in the queue.
+    queued: bool,
+    /// A step job for this slot is submitted or running.
+    inflight: bool,
+    /// Removed: never queue or run again.
+    closed: bool,
+    /// Pending viewpoints, consumed one per step.
+    poses: VecDeque<Pose>,
+    /// Last two processed poses (prefetch extrapolation).
+    history: [Option<Pose>; 2],
+    counters: SchedCounters,
+    /// A prefetch job for this slot is in flight.
+    prefetch_inflight: bool,
+}
+
+/// One scheduled session: the session itself behind its own lock, the
+/// control block, and the scene handle (for prefetch).
+struct Slot {
+    id: SessionId,
+    session: Mutex<StreamSession>,
+    ctl: Mutex<SlotCtl>,
+    scene: SceneHandle,
+}
+
+/// How a step job was driven, which decides what its [`SchedStats`]
+/// mean: paced steps have a real deadline (lateness/stall are
+/// meaningful); deterministic drains have none (only `t_step` is
+/// recorded — stamping wall-clock distance to an unused deadline would
+/// report every lockstep frame as a stall).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum StepMode {
+    /// Deadline-paced (pump/run_for).
+    Paced,
+    /// Deterministic submit-all-then-drain, lean path.
+    Drain,
+    /// Deterministic submit-all-then-drain, traced path.
+    DrainTraced,
+}
+
+/// A completed step, queued for the next drain.
+struct Outcome {
+    id: SessionId,
+    summary: StepSummary,
+    /// Present on traced (`process`) steps only.
+    result: Option<FrameResult>,
+}
+
+/// Completion channel between worker jobs and the scheduler.
+struct Shared {
+    state: Mutex<SharedState>,
+    cv: Condvar,
+}
+
+struct SharedState {
+    done: Vec<Outcome>,
+    /// Step jobs submitted but not yet completed.
+    inflight: usize,
+}
+
+/// Exclusive access to a scheduled session (a mutex guard; holding it
+/// blocks that session's next step, and only that session's).
+pub struct SessionGuard<'a>(MutexGuard<'a, StreamSession>);
+
+impl Deref for SessionGuard<'_> {
+    type Target = StreamSession;
+    fn deref(&self) -> &StreamSession {
+        &self.0
+    }
+}
+
+impl DerefMut for SessionGuard<'_> {
+    fn deref_mut(&mut self) -> &mut StreamSession {
+        &mut self.0
+    }
+}
+
+/// Runs session steps as boxed jobs on the shared pool with per-session
+/// pacing. Non-blocking [`SessionScheduler::pump`] dispatches due
+/// sessions and drains completions; blocking [`SessionScheduler::run_for`]
+/// drives the queue for a wall-clock span. The deterministic
+/// [`SessionScheduler::step_all_pending`] /
+/// [`SessionScheduler::advance_all_pending`] drivers submit every pending
+/// session at once and drain — the lockstep-compatible mode the
+/// `StreamServer` wrappers build on.
+pub struct SessionScheduler {
+    pool: Arc<WorkerPool>,
+    config: SchedConfig,
+    /// Indexed by [`SessionId`]; removed sessions leave a `None` so ids
+    /// are never reused.
+    slots: Vec<Option<Arc<Slot>>>,
+    queue: DeadlineQueue,
+    shared: Arc<Shared>,
+    /// Paced outcomes set aside by a deterministic drain (the two modes
+    /// must not contaminate each other's returns); handed back on the
+    /// next pump/run_for drain.
+    stashed: Vec<Outcome>,
+}
+
+impl SessionScheduler {
+    pub fn new(pool: Arc<WorkerPool>, config: SchedConfig) -> SessionScheduler {
+        SessionScheduler {
+            pool,
+            config,
+            slots: Vec::new(),
+            queue: DeadlineQueue::new(),
+            shared: Arc::new(Shared {
+                state: Mutex::new(SharedState {
+                    done: Vec::new(),
+                    inflight: 0,
+                }),
+                cv: Condvar::new(),
+            }),
+            stashed: Vec::new(),
+        }
+    }
+
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
+    }
+
+    pub fn config(&self) -> &SchedConfig {
+        &self.config
+    }
+
+    /// Add a session with the scheduler's default frame interval.
+    pub fn add(&mut self, session: StreamSession) -> SessionId {
+        self.add_paced(session, self.config.frame_interval)
+    }
+
+    /// Add a session with an explicit target frame interval.
+    pub fn add_paced(&mut self, session: StreamSession, interval: Duration) -> SessionId {
+        let id = self.slots.len();
+        let scene = session.renderer().handle.clone();
+        self.slots.push(Some(Arc::new(Slot {
+            id,
+            session: Mutex::new(session),
+            ctl: Mutex::new(SlotCtl {
+                interval,
+                next_due: Instant::now(),
+                seq: 0,
+                queued: false,
+                inflight: false,
+                closed: false,
+                poses: VecDeque::new(),
+                history: [None, None],
+                counters: SchedCounters::default(),
+                prefetch_inflight: false,
+            }),
+            scene,
+        })));
+        id
+    }
+
+    /// Remove a session mid-run: it stops being scheduled immediately,
+    /// pending poses are dropped, and the call waits for any in-flight
+    /// step to finish so the session is quiescent on return. Returns
+    /// false for unknown/already-removed ids.
+    pub fn remove(&mut self, id: SessionId) -> bool {
+        let slot = match self.slots.get(id).and_then(|s| s.as_ref()) {
+            Some(s) => Arc::clone(s),
+            None => return false,
+        };
+        {
+            let mut ctl = slot.ctl.lock().unwrap();
+            ctl.closed = true;
+            ctl.seq += 1; // invalidate any queued entry
+            ctl.queued = false;
+            ctl.poses.clear();
+        }
+        loop {
+            {
+                let ctl = slot.ctl.lock().unwrap();
+                if !ctl.inflight && !ctl.prefetch_inflight {
+                    break;
+                }
+            }
+            let st = self.shared.state.lock().unwrap();
+            let _ = self
+                .shared
+                .cv
+                .wait_timeout(st, Duration::from_millis(1))
+                .unwrap();
+        }
+        self.slots[id] = None;
+        true
+    }
+
+    /// Number of live sessions.
+    pub fn num_sessions(&self) -> usize {
+        self.slots.iter().flatten().count()
+    }
+
+    /// Ids of live sessions, ascending.
+    pub fn ids(&self) -> Vec<SessionId> {
+        self.slots.iter().flatten().map(|s| s.id).collect()
+    }
+
+    pub fn contains(&self, id: SessionId) -> bool {
+        self.slots.get(id).is_some_and(|s| s.is_some())
+    }
+
+    /// Lock a session for direct access (e.g. reading its latest frame).
+    /// Panics on unknown ids, like indexing.
+    pub fn session(&self, id: SessionId) -> SessionGuard<'_> {
+        let slot = self.slots[id].as_ref().expect("no such session");
+        SessionGuard(slot.session.lock().unwrap())
+    }
+
+    /// Lifetime scheduling counters for a session.
+    pub fn counters(&self, id: SessionId) -> Option<SchedCounters> {
+        let slot = self.slots.get(id).and_then(|s| s.as_ref())?;
+        Some(slot.ctl.lock().unwrap().counters)
+    }
+
+    /// Poses queued but not yet stepped for a session.
+    pub fn pending_poses(&self, id: SessionId) -> usize {
+        self.slots
+            .get(id)
+            .and_then(|s| s.as_ref())
+            .map_or(0, |slot| slot.ctl.lock().unwrap().poses.len())
+    }
+
+    /// Queue the next viewpoint for a session. Returns false for
+    /// unknown/removed ids. Deadlines pace *pending* work only: when a
+    /// pose arrives at an idle session whose deadline already passed,
+    /// the cadence restarts at `now` instead of replaying deadlines the
+    /// session had no work for (a pose arriving early keeps its future
+    /// deadline). A busy session's deadlines never reset — that is what
+    /// makes lateness accumulate.
+    pub fn push_pose(&mut self, id: SessionId, pose: Pose) -> bool {
+        let slot = match self.slots.get(id).and_then(|s| s.as_ref()) {
+            Some(s) => Arc::clone(s),
+            None => return false,
+        };
+        let mut ctl = slot.ctl.lock().unwrap();
+        if ctl.closed {
+            return false;
+        }
+        let now = Instant::now();
+        let was_idle = ctl.poses.is_empty() && !ctl.inflight;
+        ctl.poses.push_back(pose);
+        if was_idle {
+            if now > ctl.next_due {
+                ctl.next_due = now;
+            }
+            if !ctl.queued {
+                ctl.seq += 1;
+                ctl.queued = true;
+                self.queue.push(id, ctl.next_due, ctl.seq);
+            }
+        }
+        true
+    }
+
+    /// Non-blocking drive: dispatch every session due at `now` onto the
+    /// pool, kick prefetch into idle capacity, and drain completed steps.
+    /// Returns the steps that completed since the last drain (any order;
+    /// summaries carry [`SchedStats`]).
+    pub fn pump(&mut self, now: Instant) -> Vec<(SessionId, StepSummary)> {
+        self.dispatch_due(now);
+        self.maybe_prefetch();
+        // Paced outcomes a deterministic drain set aside come back first.
+        let mut out: Vec<(SessionId, StepSummary)> = self
+            .stashed
+            .drain(..)
+            .map(|o| (o.id, o.summary))
+            .collect();
+        out.extend(self.drain_done().into_iter().map(|o| (o.id, o.summary)));
+        out
+    }
+
+    /// Blocking drive: pump for `duration` of wall clock, sleeping
+    /// between deadlines, then wait out in-flight steps. Returns every
+    /// completed step. Exits early when all pose queues run dry.
+    pub fn run_for(&mut self, duration: Duration) -> Vec<(SessionId, StepSummary)> {
+        let deadline = Instant::now() + duration;
+        let mut out = Vec::new();
+        loop {
+            let now = Instant::now();
+            out.extend(self.pump(now));
+            if now >= deadline {
+                break;
+            }
+            if !self.has_pending_work() {
+                break; // every pose queue is dry and nothing is running
+            }
+            let next = {
+                let SessionScheduler { queue, slots, .. } = self;
+                queue.next_due(|id, seq| entry_valid(slots, id, seq))
+            };
+            let wake = next.unwrap_or(deadline).min(deadline);
+            let now = Instant::now();
+            if wake > now {
+                // Sleep until the next deadline, the run deadline, or a
+                // completion. The predicate is checked under the state
+                // lock, so a completion between `pump` and this wait is
+                // seen immediately instead of being a missed wakeup.
+                let st = self.shared.state.lock().unwrap();
+                let _ = self
+                    .shared
+                    .cv
+                    .wait_timeout_while(st, wake - now, |s| s.done.is_empty())
+                    .unwrap();
+            }
+        }
+        self.wait_inflight();
+        out.extend(
+            self.drain_done()
+                .into_iter()
+                .map(|o| (o.id, o.summary)),
+        );
+        out
+    }
+
+    /// Anything left to do or drain: a step in flight, an undrained
+    /// completion, or a session with queued poses.
+    fn has_pending_work(&self) -> bool {
+        {
+            let st = self.shared.state.lock().unwrap();
+            if st.inflight > 0 || !st.done.is_empty() {
+                return true;
+            }
+        }
+        self.slots.iter().flatten().any(|slot| {
+            let ctl = slot.ctl.lock().unwrap();
+            !ctl.closed && (!ctl.poses.is_empty() || ctl.inflight)
+        })
+    }
+
+    /// Deterministic lean driver: step every session that has a pending
+    /// pose exactly once (bypassing pacing), wait for all of them, and
+    /// return their summaries ordered by session id. This is the
+    /// `advance_all` compatibility mode.
+    pub fn advance_all_pending(&mut self) -> Vec<(SessionId, StepSummary)> {
+        self.drain_all(false)
+            .into_iter()
+            .map(|o| (o.id, o.summary))
+            .collect()
+    }
+
+    /// Deterministic traced driver: like
+    /// [`SessionScheduler::advance_all_pending`] but through the traced
+    /// `process` path, returning full [`FrameResult`]s ordered by session
+    /// id. This is the `step_all` compatibility mode.
+    pub fn step_all_pending(&mut self) -> Vec<(SessionId, FrameResult)> {
+        self.drain_all(true)
+            .into_iter()
+            .filter_map(|o| o.result.map(|r| (o.id, r)))
+            .collect()
+    }
+
+    /// Submit every pending session (ignoring deadlines), wait for all
+    /// completions, and return outcomes sorted by id — and ONLY the
+    /// outcomes of the steps this call submitted. Any paced step still
+    /// in flight is waited out first (so no session is skipped), and its
+    /// outcome is stashed for the next pump/run_for drain instead of
+    /// contaminating the deterministic return. Sessions consume poses in
+    /// FIFO order: if a session has poses queued from the paced mode,
+    /// this call steps the oldest one.
+    fn drain_all(&mut self, traced: bool) -> Vec<Outcome> {
+        // Quiesce the paced mode: finish in-flight steps and set their
+        // outcomes aside.
+        self.wait_inflight();
+        let leftovers = self.drain_done();
+        self.stashed.extend(leftovers);
+        let now = Instant::now();
+        {
+            let SessionScheduler {
+                slots,
+                pool,
+                shared,
+                ..
+            } = self;
+            for slot in slots.iter().flatten() {
+                let (pose, interval, due) = {
+                    let mut ctl = slot.ctl.lock().unwrap();
+                    if ctl.closed || ctl.inflight || ctl.poses.is_empty() {
+                        continue;
+                    }
+                    ctl.seq += 1; // invalidate any queued entry
+                    ctl.queued = false;
+                    ctl.inflight = true;
+                    let due = ctl.next_due.min(now);
+                    (ctl.poses.pop_front().unwrap(), ctl.interval, due)
+                };
+                let mode = if traced {
+                    StepMode::DrainTraced
+                } else {
+                    StepMode::Drain
+                };
+                submit_step(pool, shared, Arc::clone(slot), pose, due, interval, mode);
+            }
+        }
+        self.wait_inflight();
+        let mut done = self.drain_done();
+        done.sort_by_key(|o| o.id);
+        // Wrapper-driven servers invalidate queue entries without ever
+        // popping them; compact periodically so the heap stays bounded.
+        {
+            let SessionScheduler { queue, slots, .. } = self;
+            if queue.len() > 2 * slots.len() + 64 {
+                queue.compact(|id, seq| entry_valid(slots, id, seq));
+            }
+        }
+        done
+    }
+
+    /// Dispatch every queue entry due at `now` as a pool job.
+    fn dispatch_due(&mut self, now: Instant) {
+        let SessionScheduler {
+            queue,
+            slots,
+            pool,
+            shared,
+            ..
+        } = self;
+        while let Some((id, due)) = queue.pop_due(now, |id, seq| entry_valid(slots, id, seq)) {
+            let slot = match slots.get(id).and_then(|s| s.as_ref()) {
+                Some(s) => Arc::clone(s),
+                None => continue,
+            };
+            let dispatch = {
+                let mut ctl = slot.ctl.lock().unwrap();
+                ctl.queued = false;
+                if ctl.closed || ctl.inflight || ctl.poses.is_empty() {
+                    None
+                } else {
+                    ctl.inflight = true;
+                    Some((ctl.poses.pop_front().unwrap(), ctl.interval))
+                }
+            };
+            if let Some((pose, interval)) = dispatch {
+                submit_step(pool, shared, slot, pose, due, interval, StepMode::Paced);
+            }
+        }
+    }
+
+    /// Use idle pool capacity to warm shards predicted to enter each
+    /// session's frustum (pose extrapolated one frame past the newest).
+    fn maybe_prefetch(&mut self) {
+        if !self.config.prefetch {
+            return;
+        }
+        let mut budget = self.pool.idle_capacity();
+        if budget == 0 {
+            return;
+        }
+        for slot in self.slots.iter().flatten() {
+            if budget == 0 {
+                break;
+            }
+            let sharded = match &slot.scene {
+                SceneHandle::Sharded(s) => Arc::clone(s),
+                SceneHandle::Monolithic(_) => continue,
+            };
+            let predicted = {
+                let mut ctl = slot.ctl.lock().unwrap();
+                if ctl.closed || ctl.prefetch_inflight {
+                    continue;
+                }
+                let (prev, last) = match (ctl.history[0], ctl.history[1]) {
+                    (Some(a), Some(b)) => (a, b),
+                    _ => continue,
+                };
+                ctl.prefetch_inflight = true;
+                // t=2 extrapolates the prev→last motion one step forward.
+                prev.interpolate(&last, 2.0)
+            };
+            let job_slot = Arc::clone(slot);
+            let shared = Arc::clone(&self.shared);
+            self.pool.submit(move || {
+                let warmed = sharded.prefetch(&predicted);
+                {
+                    let mut ctl = job_slot.ctl.lock().unwrap();
+                    ctl.prefetch_inflight = false;
+                    ctl.counters.prefetched_shards += warmed as u64;
+                }
+                // remove() waits on the shared cv for prefetch_inflight
+                // too — wake it instead of leaving it to poll.
+                shared.cv.notify_all();
+            });
+            budget -= 1;
+        }
+    }
+
+    /// Block until no step jobs are in flight.
+    fn wait_inflight(&self) {
+        loop {
+            let st = self.shared.state.lock().unwrap();
+            if st.inflight == 0 {
+                return;
+            }
+            let _ = self
+                .shared
+                .cv
+                .wait_timeout(st, Duration::from_millis(2))
+                .unwrap();
+        }
+    }
+
+    /// Take completed outcomes and re-queue sessions that still have
+    /// pending poses at their next deadline.
+    fn drain_done(&mut self) -> Vec<Outcome> {
+        let done = {
+            let mut st = self.shared.state.lock().unwrap();
+            std::mem::take(&mut st.done)
+        };
+        let SessionScheduler { queue, slots, .. } = self;
+        for o in &done {
+            if let Some(slot) = slots.get(o.id).and_then(|s| s.as_ref()) {
+                let mut ctl = slot.ctl.lock().unwrap();
+                if !ctl.closed && !ctl.inflight && !ctl.queued && !ctl.poses.is_empty() {
+                    ctl.seq += 1;
+                    ctl.queued = true;
+                    queue.push(o.id, ctl.next_due, ctl.seq);
+                }
+            }
+        }
+        done
+    }
+}
+
+/// Queue-entry validity: the slot exists, is open, and the entry's
+/// sequence is current.
+fn entry_valid(slots: &[Option<Arc<Slot>>], id: SessionId, seq: u64) -> bool {
+    slots.get(id).and_then(|s| s.as_ref()).is_some_and(|slot| {
+        let ctl = slot.ctl.lock().unwrap();
+        ctl.queued && ctl.seq == seq && !ctl.closed
+    })
+}
+
+/// Submit one session step as a boxed pool job. The job owns an `Arc` to
+/// its slot, so removal while in flight is safe; completion updates the
+/// slot's pacing state and pushes an `Outcome` for the next drain.
+fn submit_step(
+    pool: &Arc<WorkerPool>,
+    shared: &Arc<Shared>,
+    slot: Arc<Slot>,
+    pose: Pose,
+    due: Instant,
+    interval: Duration,
+    mode: StepMode,
+) {
+    shared.state.lock().unwrap().inflight += 1;
+    let shared = Arc::clone(shared);
+    pool.submit(move || {
+        let start = Instant::now();
+        let (mut summary, mut result) = {
+            let mut sess = slot.session.lock().unwrap();
+            if mode == StepMode::DrainTraced {
+                let r = sess.process(&pose);
+                (*sess.last_summary(), Some(r))
+            } else {
+                sess.step(&pose);
+                (*sess.last_summary(), None)
+            }
+        };
+        let finish = Instant::now();
+        let paced = mode == StepMode::Paced;
+        let lateness = finish.saturating_duration_since(due);
+        let sched = if paced {
+            SchedStats {
+                lateness,
+                stalled: lateness > interval,
+                t_queue: start.saturating_duration_since(due),
+                t_step: finish.duration_since(start),
+            }
+        } else {
+            // No real deadline in the deterministic drains: record the
+            // step cost only.
+            SchedStats {
+                t_step: finish.duration_since(start),
+                ..SchedStats::default()
+            }
+        };
+        summary.sched = sched;
+        if let Some(r) = result.as_mut() {
+            r.trace.sched = sched;
+        }
+        {
+            let mut ctl = slot.ctl.lock().unwrap();
+            ctl.inflight = false;
+            ctl.history[0] = ctl.history[1];
+            ctl.history[1] = Some(pose);
+            // Paced: fixed-cadence ladder. Drained: next paced deadline
+            // starts one interval after this step finished.
+            ctl.next_due = if paced {
+                due + ctl.interval
+            } else {
+                finish + ctl.interval
+            };
+            let c = &mut ctl.counters;
+            c.steps += 1;
+            if paced {
+                if lateness > Duration::ZERO {
+                    c.late_steps += 1;
+                }
+                if sched.stalled {
+                    c.stalls += 1;
+                }
+                c.total_lateness += lateness;
+                if lateness > c.max_lateness {
+                    c.max_lateness = lateness;
+                }
+            }
+        }
+        let mut st = shared.state.lock().unwrap();
+        st.done.push(Outcome {
+            id: slot.id,
+            summary,
+            result,
+        });
+        st.inflight -= 1;
+        drop(st);
+        shared.cv.notify_all();
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::session::CoordinatorConfig;
+    use crate::scene::{generate, SceneAssets};
+
+    fn mk(pool: &Arc<WorkerPool>, w: usize, h: usize) -> (StreamSession, Vec<Pose>) {
+        let s = generate("room", 0.03, w, h);
+        let poses = s.sample_poses(8);
+        let assets = SceneAssets::from_scene(&s);
+        let cfg = CoordinatorConfig {
+            threads: 1,
+            ..Default::default()
+        };
+        (StreamSession::new(assets, Arc::clone(pool), cfg), poses)
+    }
+
+    #[test]
+    fn zero_sessions_is_quiescent() {
+        let pool = Arc::new(WorkerPool::new(2));
+        let mut sched = SessionScheduler::new(pool, SchedConfig::default());
+        assert_eq!(sched.num_sessions(), 0);
+        assert!(sched.pump(Instant::now()).is_empty());
+        let t0 = Instant::now();
+        assert!(sched.run_for(Duration::from_secs(5)).is_empty());
+        assert!(
+            t0.elapsed() < Duration::from_secs(1),
+            "run_for did not exit early with no sessions"
+        );
+        assert!(sched.advance_all_pending().is_empty());
+        assert!(sched.step_all_pending().is_empty());
+    }
+
+    #[test]
+    fn paced_session_steps_through_its_poses() {
+        let pool = Arc::new(WorkerPool::new(2));
+        let mut sched = SessionScheduler::new(Arc::clone(&pool), SchedConfig::default());
+        let (session, poses) = mk(&pool, 96, 64);
+        let id = sched.add_paced(session, Duration::from_micros(100));
+        for p in &poses {
+            sched.push_pose(id, *p);
+        }
+        let done = sched.run_for(Duration::from_secs(30));
+        assert_eq!(done.len(), poses.len(), "did not drain all poses");
+        assert!(done.iter().all(|(sid, _)| *sid == id));
+        let c = sched.counters(id).unwrap();
+        assert_eq!(c.steps as usize, poses.len());
+        // The session rendered: its newest frame is non-trivial.
+        assert!(sched.session(id).frame().rgb.iter().any(|&v| v > 0.05));
+    }
+
+    #[test]
+    fn remove_mid_run_stops_scheduling() {
+        let pool = Arc::new(WorkerPool::new(2));
+        let mut sched = SessionScheduler::new(Arc::clone(&pool), SchedConfig::default());
+        let (a, poses) = mk(&pool, 96, 64);
+        let (b, _) = mk(&pool, 96, 64);
+        let ida = sched.add_paced(a, Duration::from_micros(100));
+        let idb = sched.add_paced(b, Duration::from_micros(100));
+        for p in &poses {
+            sched.push_pose(ida, *p);
+            sched.push_pose(idb, *p);
+        }
+        // Let some steps happen, then remove A.
+        let _ = sched.run_for(Duration::from_millis(30));
+        assert!(sched.remove(ida));
+        assert!(!sched.remove(ida), "double remove should be false");
+        assert!(!sched.contains(ida));
+        assert!(!sched.push_pose(ida, poses[0]), "push to removed session");
+        let done = sched.run_for(Duration::from_secs(30));
+        assert!(
+            done.iter().all(|(sid, _)| *sid == idb),
+            "removed session still produced steps"
+        );
+        assert_eq!(sched.num_sessions(), 1);
+        assert_eq!(sched.ids(), vec![idb]);
+    }
+}

@@ -2,22 +2,32 @@
 //!
 //! The ROADMAP's north star is serving many users per scene; the seed's
 //! coordinator structurally forbade that (it *owned* the `GaussianCloud`).
-//! A [`StreamServer`] holds one immutable `Arc<SceneAssets>` and one
-//! persistent [`WorkerPool`], and multiplexes any number of
-//! [`StreamSession`]s over them. Each session keeps its own pose history,
-//! frame double-buffer and scratch arenas, so sessions step concurrently
-//! with zero sharing beyond the read-only scene and the pool.
+//! A [`StreamServer`] holds one immutable scene handle and one persistent
+//! [`WorkerPool`], and multiplexes any number of
+//! [`StreamSession`]s over them through a [`SessionScheduler`]: sessions
+//! live behind per-session locks and their steps run as boxed jobs on the
+//! shared pool, so the machine is never oversubscribed by
+//! sessions × tiles and a slow viewer never stalls a fast one (see
+//! `scheduler/mod.rs`).
 //!
-//! [`StreamServer::step_all`] advances every session one frame in
-//! parallel (one scoped thread per session; tile-level parallelism inside
-//! each render shares the pool). Because gang dispatch on the pool always
-//! has the *calling* thread participating, sessions can never deadlock
-//! waiting on each other's tile work.
+//! Two driving modes:
+//!
+//! * **Paced** — [`StreamServer::scheduler_mut`] exposes the deadline
+//!   queue directly: push poses, `pump`/`run_for`, read per-session
+//!   lateness counters.
+//! * **Deterministic** — [`StreamServer::step_all`] /
+//!   [`StreamServer::advance_all`] advance every session exactly one
+//!   frame (submit-all-then-drain) and produce frames bit-identical to
+//!   the old lockstep scoped-thread fan-out, so tests and benches keep
+//!   their semantics. Both validate input through one shared path; the
+//!   `try_` variants return the error instead of panicking.
 
+use super::scheduler::{SchedConfig, SessionGuard, SessionScheduler};
 use super::session::{CoordinatorConfig, FrameResult, StepSummary, StreamSession};
 use crate::scene::Pose;
 use crate::shard::SceneHandle;
 use crate::util::pool::{default_threads, WorkerPool};
+use anyhow::{ensure, Result};
 use std::sync::Arc;
 
 /// Serves N concurrent [`StreamSession`]s over one scene and one pool.
@@ -26,9 +36,8 @@ use std::sync::Arc;
 /// oblivious to which.
 pub struct StreamServer {
     scene: SceneHandle,
-    pool: Arc<WorkerPool>,
     config: CoordinatorConfig,
-    sessions: Vec<StreamSession>,
+    scheduler: SessionScheduler,
 }
 
 impl StreamServer {
@@ -49,31 +58,43 @@ impl StreamServer {
     ) -> StreamServer {
         StreamServer {
             scene: scene.into(),
-            pool,
             config,
-            sessions: Vec::new(),
+            scheduler: SessionScheduler::new(pool, SchedConfig::default()),
         }
     }
 
-    /// Open a new viewer session; returns its id (index).
+    /// Open a new viewer session; returns its id.
     pub fn add_session(&mut self) -> usize {
-        self.sessions.push(StreamSession::new(
-            self.scene.clone(),
-            Arc::clone(&self.pool),
-            self.config,
-        ));
-        self.sessions.len() - 1
+        self.add_session_with(self.config)
     }
 
     /// Open a session with a per-viewer config override.
     pub fn add_session_with(&mut self, config: CoordinatorConfig) -> usize {
-        self.sessions
-            .push(StreamSession::new(self.scene.clone(), Arc::clone(&self.pool), config));
-        self.sessions.len() - 1
+        let session = StreamSession::new(
+            self.scene.clone(),
+            Arc::clone(self.scheduler.pool()),
+            config,
+        );
+        self.scheduler.add(session)
+    }
+
+    /// Open a session with a per-viewer config *and* target frame
+    /// interval (the paced mode's deadline cadence).
+    pub fn add_paced_session(
+        &mut self,
+        config: CoordinatorConfig,
+        interval: std::time::Duration,
+    ) -> usize {
+        let session = StreamSession::new(
+            self.scene.clone(),
+            Arc::clone(self.scheduler.pool()),
+            config,
+        );
+        self.scheduler.add_paced(session, interval)
     }
 
     pub fn num_sessions(&self) -> usize {
-        self.sessions.len()
+        self.scheduler.num_sessions()
     }
 
     pub fn scene(&self) -> &SceneHandle {
@@ -81,67 +102,96 @@ impl StreamServer {
     }
 
     pub fn pool(&self) -> &Arc<WorkerPool> {
-        &self.pool
+        self.scheduler.pool()
     }
 
-    pub fn session(&self, id: usize) -> &StreamSession {
-        &self.sessions[id]
+    /// The session scheduler (push poses, read lateness counters).
+    pub fn scheduler(&self) -> &SessionScheduler {
+        &self.scheduler
     }
 
-    pub fn session_mut(&mut self, id: usize) -> &mut StreamSession {
-        &mut self.sessions[id]
+    pub fn scheduler_mut(&mut self) -> &mut SessionScheduler {
+        &mut self.scheduler
     }
 
-    /// Advance every session one frame concurrently (one pose per
-    /// session), collecting per-session [`FrameResult`]s whose
-    /// [`FrameTrace`](super::FrameTrace)s feed the `sim::` models.
+    /// Lock a session for direct access (blocks only that session's next
+    /// step). Panics on unknown ids, like indexing.
+    pub fn session(&self, id: usize) -> SessionGuard<'_> {
+        self.scheduler.session(id)
+    }
+
+    /// Mutable access to a session (same guard; kept for API parity).
+    pub fn session_mut(&mut self, id: usize) -> SessionGuard<'_> {
+        self.scheduler.session(id)
+    }
+
+    /// Shared validation for the lockstep-compatible drivers.
+    fn check_poses(&self, poses: &[Pose]) -> Result<()> {
+        ensure!(
+            poses.len() == self.scheduler.num_sessions(),
+            "one pose per session expected: got {} poses for {} sessions",
+            poses.len(),
+            self.scheduler.num_sessions()
+        );
+        Ok(())
+    }
+
+    /// Advance every session one frame (one pose per session, in session
+    /// order), collecting per-session [`FrameResult`]s whose
+    /// [`FrameTrace`](super::FrameTrace)s feed the `sim::` models. Frames
+    /// are bit-identical to the pre-scheduler lockstep path: every
+    /// session still advances exactly once, and a step depends only on
+    /// its own state and pose. Errors when `poses.len()` does not match
+    /// the session count.
+    ///
+    /// Mixing with the paced mode is well-defined: in-flight paced steps
+    /// are waited out (their outcomes surface on the next scheduler
+    /// drain, not here), and sessions consume poses strictly FIFO — a
+    /// pose already queued via [`SessionScheduler::push_pose`] is
+    /// rendered before the one passed here.
+    pub fn try_step_all(&mut self, poses: &[Pose]) -> Result<Vec<FrameResult>> {
+        self.check_poses(poses)?;
+        for (id, pose) in self.scheduler.ids().into_iter().zip(poses) {
+            self.scheduler.push_pose(id, *pose);
+        }
+        Ok(self
+            .scheduler
+            .step_all_pending()
+            .into_iter()
+            .map(|(_, r)| r)
+            .collect())
+    }
+
+    /// Like [`StreamServer::try_step_all`] but panics on a pose-count
+    /// mismatch (the documented invariant of the lockstep-compatible
+    /// API).
     pub fn step_all(&mut self, poses: &[Pose]) -> Vec<FrameResult> {
-        assert_eq!(
-            poses.len(),
-            self.sessions.len(),
-            "one pose per session expected"
-        );
-        let mut results: Vec<Option<FrameResult>> = Vec::new();
-        results.resize_with(self.sessions.len(), || None);
-        std::thread::scope(|s| {
-            for ((sess, pose), slot) in self
-                .sessions
-                .iter_mut()
-                .zip(poses)
-                .zip(results.iter_mut())
-            {
-                s.spawn(move || {
-                    *slot = Some(sess.process(pose));
-                });
-            }
-        });
-        results.into_iter().map(|r| r.unwrap()).collect()
+        self.try_step_all(poses).expect("step_all")
     }
 
-    /// Advance every session one frame concurrently on the lean
-    /// allocation-free path (no traces, no frame clones); read frames
-    /// back via [`StreamServer::session`]. Returns per-session summaries.
+    /// Advance every session one frame on the lean allocation-light path
+    /// (no traces, no frame clones); read frames back via
+    /// [`StreamServer::session`]. Returns per-session summaries in
+    /// session order. Errors when `poses.len()` does not match the
+    /// session count.
+    pub fn try_advance_all(&mut self, poses: &[Pose]) -> Result<Vec<StepSummary>> {
+        self.check_poses(poses)?;
+        for (id, pose) in self.scheduler.ids().into_iter().zip(poses) {
+            self.scheduler.push_pose(id, *pose);
+        }
+        Ok(self
+            .scheduler
+            .advance_all_pending()
+            .into_iter()
+            .map(|(_, s)| s)
+            .collect())
+    }
+
+    /// Like [`StreamServer::try_advance_all`] but panics on a pose-count
+    /// mismatch (the documented invariant of the lockstep-compatible
+    /// API).
     pub fn advance_all(&mut self, poses: &[Pose]) -> Vec<StepSummary> {
-        assert_eq!(
-            poses.len(),
-            self.sessions.len(),
-            "one pose per session expected"
-        );
-        let mut summaries: Vec<StepSummary> = vec![StepSummary::default(); self.sessions.len()];
-        std::thread::scope(|s| {
-            for ((sess, pose), slot) in self
-                .sessions
-                .iter_mut()
-                .zip(poses)
-                .zip(summaries.iter_mut())
-            {
-                s.spawn(move || {
-                    sess.step(pose);
-                    *slot = *sess.last_summary();
-                });
-            }
-        });
-        summaries
+        self.try_advance_all(poses).expect("advance_all")
     }
 }
 
@@ -210,5 +260,41 @@ mod tests {
                 assert_eq!(results[id].frame.rgb, b.session(id).frame().rgb);
             }
         }
+    }
+
+    #[test]
+    fn pose_count_mismatch_is_an_error_not_a_panic() {
+        let s = generate("room", 0.03, 96, 96);
+        let poses = s.sample_poses(3);
+        let mut server = StreamServer::new(SceneAssets::from_scene(&s), CoordinatorConfig::default());
+        server.add_session();
+        server.add_session();
+        // Both wrappers share one validation path.
+        assert!(server.try_step_all(&poses).is_err());
+        assert!(server.try_advance_all(&poses).is_err());
+        let err = server.try_advance_all(&poses).unwrap_err().to_string();
+        assert!(err.contains("3 poses for 2 sessions"), "message: {err}");
+        // And a valid call still works afterwards.
+        assert_eq!(server.advance_all(&poses[..2]).len(), 2);
+    }
+
+    #[test]
+    fn paced_sessions_report_counters() {
+        let s = generate("room", 0.03, 96, 96);
+        let poses = s.sample_poses(4);
+        let mut server = StreamServer::new(SceneAssets::from_scene(&s), CoordinatorConfig::default());
+        let id = server.add_paced_session(
+            CoordinatorConfig::default(),
+            std::time::Duration::from_micros(100),
+        );
+        for p in &poses {
+            server.scheduler_mut().push_pose(id, *p);
+        }
+        let done = server
+            .scheduler_mut()
+            .run_for(std::time::Duration::from_secs(30));
+        assert_eq!(done.len(), poses.len());
+        let c = server.scheduler().counters(id).unwrap();
+        assert_eq!(c.steps as usize, poses.len());
     }
 }

@@ -109,6 +109,10 @@ pub struct FrameTrace {
     pub depth_limits: Option<Vec<f32>>,
     /// Fraction of pixels carried by warping (0 on full frames).
     pub warped_fraction: f32,
+    /// Scheduling counters (lateness/stall), stamped by the
+    /// [`SessionScheduler`](super::SessionScheduler) when the frame was
+    /// produced under it; all zeros otherwise.
+    pub sched: super::SchedStats,
 }
 
 /// One produced frame.
@@ -130,6 +134,10 @@ pub struct StepSummary {
     pub tiles: TileClassSummary,
     /// Whether DPES limits were applied this frame.
     pub used_dpes: bool,
+    /// Scheduling counters (lateness/stall), stamped by the
+    /// [`SessionScheduler`](super::SessionScheduler) when the step ran
+    /// under it; all zeros otherwise.
+    pub sched: super::SchedStats,
 }
 
 /// A per-viewer streaming session over shared scene assets.
@@ -290,6 +298,7 @@ impl StreamSession {
                 warp,
                 depth_limits,
                 warped_fraction: self.last.warped_fraction,
+                sched: super::SchedStats::default(),
             },
         }
     }

@@ -15,8 +15,11 @@
 //!   [`coordinator::StreamSession`] (TWSR / DPES warp loop with
 //!   persistent [`render::FrameScratch`] arenas — steady-state warped
 //!   frames allocate nothing), multiplexed by
-//!   [`coordinator::StreamServer`] for N concurrent viewers per scene,
-//!   plus the two-stage intersection test (TAIT), the load-distribution
+//!   [`coordinator::StreamServer`] for N concurrent viewers per scene —
+//!   scheduled by the deadline-paced [`coordinator::SessionScheduler`]
+//!   (sessions as pool jobs, per-session frame intervals, lateness
+//!   counters, prefetch-on-idle) rather than in lockstep — plus the
+//!   two-stage intersection test (TAIT), the load-distribution
 //!   unit (LDU), and a cycle-level accelerator simulator reproducing the
 //!   paper's hardware evaluation.
 //! * **L2 (`python/compile/model.py`)** — jax projection / rasterization /

@@ -391,6 +391,22 @@ impl ShardResidency {
         outcome
     }
 
+    /// Append the ids from `ids` that are not currently resident onto
+    /// `cold`, without bumping the frame clock or pinning anything.
+    /// This is the read-only first phase of a *prefetch*: the caller
+    /// loads the cold shards with the lock released and inserts them via
+    /// [`ShardResidency::commit`], which stamps them with the clock of
+    /// the most recent frame — so a prefetched shard is exactly as
+    /// eviction-protected as one the last frame pinned, and the shards
+    /// the current frame is using are never evicted to make room.
+    pub fn filter_cold(&self, ids: &[usize], cold: &mut Vec<usize>) {
+        for &id in ids {
+            if self.entries[id].is_none() {
+                cold.push(id);
+            }
+        }
+    }
+
     /// One-lock convenience (tests + single-session callers): pin warm
     /// ids, load cold ones from `store` (retrying each failed load once —
     /// scene data is load-bearing, but one transient IO hiccup should not

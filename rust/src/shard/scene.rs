@@ -166,6 +166,55 @@ impl ShardedScene {
         }
     }
 
+    /// Warm the shards visible from `pose` without rendering: the
+    /// predictive-prefetch entry point. Reuses the two-phase residency
+    /// protocol — list cold visible shards under the lock, load them
+    /// from the store with the lock *released*, commit under the lock —
+    /// so prefetch never serializes a concurrent session's planning
+    /// stage. Unlike [`ShardedScene::acquire_visible`], a failed load is
+    /// not fatal: prefetch is best-effort (the frame that actually needs
+    /// the shard will load it, with the retry-then-panic contract), and
+    /// speculative shards only ever fill spare *budget headroom* — a
+    /// prefetch never pushes residency past the byte budget the way a
+    /// pinned visible set is allowed to (that overshoot is required for
+    /// correctness; a speculative one would just be a memory spike).
+    /// Returns the number of shards loaded.
+    pub fn prefetch(&self, pose: &Pose) -> u32 {
+        let mut ids = Vec::new();
+        self.catalog.visible_into(&self.intrinsics, pose, &mut ids);
+        let mut cold = Vec::new();
+        {
+            let res = self.residency.lock().unwrap();
+            let mut all_cold = Vec::new();
+            res.filter_cold(&ids, &mut all_cold);
+            // Cap the speculative set to the budget headroom left by the
+            // resident set (cull order = predicted visibility order, so
+            // the prefix is the most likely to be needed).
+            let mut headroom = res.budget_bytes().saturating_sub(res.resident_bytes());
+            for id in all_cold {
+                let bytes = self.catalog.meta(id).bytes;
+                if bytes <= headroom {
+                    headroom -= bytes;
+                    cold.push(id);
+                }
+            }
+        }
+        if cold.is_empty() {
+            return 0;
+        }
+        let loaded = match super::residency::load_shards(self.store.as_ref(), &cold) {
+            Ok(l) => l,
+            Err(_) => return 0, // best-effort: the rendering frame retries
+        };
+        let mut scratch = Vec::new();
+        let outcome = self
+            .residency
+            .lock()
+            .unwrap()
+            .commit(&loaded, &mut scratch);
+        outcome.loaded
+    }
+
     /// Shared handle for the session/server layer.
     pub fn into_shared(self) -> Arc<ShardedScene> {
         Arc::new(self)
@@ -289,6 +338,50 @@ mod tests {
         let stats2 = sharded.acquire_visible(&pose, &mut ids, &mut out);
         assert_eq!(stats2.loaded, 0);
         assert_eq!(stats2.visible, stats.visible);
+    }
+
+    #[test]
+    fn prefetch_warms_visible_shards() {
+        let scene = generate("room", 0.04, 96, 96);
+        let pose = scene.sample_poses(1)[0];
+        let sharded = ShardedScene::partition(
+            &scene.cloud,
+            scene.intrinsics,
+            &ShardConfig {
+                target_splats: 200,
+                ..Default::default()
+            },
+        );
+        let warmed = sharded.prefetch(&pose);
+        assert!(warmed > 0, "prefetch loaded nothing");
+        // The frame at the prefetched pose then loads nothing cold.
+        let (mut ids, mut out) = (Vec::new(), Vec::new());
+        let stats = sharded.acquire_visible(&pose, &mut ids, &mut out);
+        assert_eq!(stats.loaded, 0, "prefetch did not warm the working set");
+        assert_eq!(stats.visible, warmed);
+        // Prefetching an already-warm pose is a no-op.
+        assert_eq!(sharded.prefetch(&pose), 0);
+    }
+
+    #[test]
+    fn prefetch_never_exceeds_budget() {
+        let scene = generate("room", 0.04, 96, 96);
+        let poses = scene.sample_poses(3);
+        let sharded = ShardedScene::partition(
+            &scene.cloud,
+            scene.intrinsics,
+            &ShardConfig {
+                target_splats: 200,
+                budget_bytes: 1, // absurd: zero speculative headroom
+            },
+        );
+        // The render path is allowed to overshoot (pinned visible set),
+        // but the speculative path must not add a single byte on top.
+        let (mut ids, mut out) = (Vec::new(), Vec::new());
+        let stats = sharded.acquire_visible(&poses[0], &mut ids, &mut out);
+        assert!(stats.resident > 0);
+        assert_eq!(sharded.prefetch(&poses[1]), 0);
+        assert_eq!(sharded.prefetch(&poses[2]), 0);
     }
 
     #[test]

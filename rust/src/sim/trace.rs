@@ -4,7 +4,7 @@
 //! propagate into hardware numbers exactly as in the paper's co-design loop
 //! (DESIGN.md §Key design decisions).
 
-use crate::coordinator::{FrameKind, FrameTrace};
+use crate::coordinator::{FrameKind, FrameTrace, SchedStats};
 use crate::scene::Intrinsics;
 use crate::shard::ShardStats;
 
@@ -36,6 +36,9 @@ pub struct WorkloadTrace {
     /// Shard-stage counters (visible/resident/evicted + cull time; all
     /// zeros for monolithic scenes).
     pub shards: ShardStats,
+    /// Session-scheduling counters (lateness/stall/queue wait; all zeros
+    /// for frames produced outside a `SessionScheduler`).
+    pub sched: SchedStats,
 }
 
 impl WorkloadTrace {
@@ -55,6 +58,7 @@ impl WorkloadTrace {
             grid: intr.tile_grid(),
             kind: trace.kind,
             shards: trace.render.shards,
+            sched: trace.sched,
         }
     }
 

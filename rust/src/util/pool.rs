@@ -170,6 +170,22 @@ impl WorkerPool {
         self.threads
     }
 
+    /// Boxed jobs queued or currently running (the coarse-job load).
+    pub fn pending_jobs(&self) -> usize {
+        self.inner.state.lock().unwrap().jobs_pending
+    }
+
+    /// Idle-capacity hint: worker slots not occupied by boxed jobs or a
+    /// gang task *right now*. Advisory only (the answer can be stale by
+    /// the time the caller acts on it) — used by the session scheduler to
+    /// decide whether spare capacity exists for opportunistic work such
+    /// as predictive shard prefetch.
+    pub fn idle_capacity(&self) -> usize {
+        let st = self.inner.state.lock().unwrap();
+        self.threads
+            .saturating_sub(st.jobs_pending + st.gang_active)
+    }
+
     /// Submit a boxed job (allocates; for coarse pipeline work).
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
         let mut st = self.inner.state.lock().unwrap();
@@ -458,6 +474,36 @@ mod tests {
             }
         });
         assert_eq!(total.load(Ordering::Relaxed), 4 * 20 * (63 * 64 / 2) as u64);
+    }
+
+    #[test]
+    fn idle_capacity_tracks_boxed_jobs() {
+        let pool = WorkerPool::new(2);
+        assert_eq!(pool.idle_capacity(), 2);
+        assert_eq!(pool.pending_jobs(), 0);
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        for _ in 0..2 {
+            let gate = Arc::clone(&gate);
+            pool.submit(move || {
+                let (lock, cv) = &*gate;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+            });
+        }
+        // Both workers are parked in jobs: no idle capacity.
+        while pool.idle_capacity() > 0 {
+            std::thread::yield_now();
+        }
+        assert_eq!(pool.idle_capacity(), 0);
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        pool.wait_idle();
+        assert_eq!(pool.idle_capacity(), 2);
     }
 
     #[test]
