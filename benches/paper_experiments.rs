@@ -36,6 +36,7 @@ fn main() {
             v.push("tab1".to_string());
             v.push("streaming".to_string());
             v.push("sched".to_string());
+            v.push("balance".to_string());
             v
         }
     };
@@ -67,6 +68,13 @@ fn main() {
                     std::fs::write("BENCH_sched.json", json.to_string_pretty())
                         .expect("writing BENCH_sched.json");
                     println!("wrote BENCH_sched.json");
+                }
+                if id == "balance" {
+                    // Tile-dispatch record (naive index order vs
+                    // workload-aware plan), gated alongside streaming.
+                    std::fs::write("BENCH_balance.json", json.to_string_pretty())
+                        .expect("writing BENCH_balance.json");
+                    println!("wrote BENCH_balance.json");
                 }
                 report.set(id, json);
             }

@@ -1040,6 +1040,164 @@ pub fn sched_pacing(opts: &ExpOptions) -> Json {
         .set("total_fps", done.len() as f64 / paced_wall)
         .set("wall_s", paced_wall);
     report.set("paced", pc);
+
+    // --- Predictive prefetch over a sharded scene: one paced session on
+    // an undersized residency budget; the scheduler's velocity-filtered
+    // prediction warms shards ahead of the camera, and the per-session
+    // hit/miss scoreboard says whether the predictions paid.
+    {
+        use crate::shard::{partition_cloud, MemoryShardStore, ShardedScene};
+        let target = (small_scene.cloud.len() / 24).max(512);
+        let shards = partition_cloud(&small_scene.cloud, target);
+        let total_bytes: usize = shards.iter().map(|(_, s)| s.bytes).sum();
+        let sharded = Arc::new(ShardedScene::from_store(
+            Box::new(MemoryShardStore::new(shards)),
+            small_scene.intrinsics,
+            total_bytes / 2,
+        ));
+        let n_shards = sharded.num_shards();
+        let pool = Arc::new(WorkerPool::new(pool_threads));
+        let mut sched = SessionScheduler::new(
+            Arc::clone(&pool),
+            SchedConfig {
+                frame_interval: interval,
+                prefetch: true,
+            },
+        );
+        let id = sched.add_paced(
+            StreamSession::new(Arc::clone(&sharded), Arc::clone(&pool), cfg),
+            interval,
+        );
+        // Deliver poses one at a time, giving the scheduler idle time
+        // BEFORE each arrival: with an empty mailbox the prefetcher has
+        // to velocity-filter the processed history (the path under
+        // test), and the step that then consumes the real pose scores
+        // the prediction. Queuing everything up-front would let the
+        // exact-knowledge mailbox branch short-circuit prediction.
+        for p in &small_poses {
+            let _ = sched.run_for(interval * 2);
+            sched.push_pose(id, *p);
+        }
+        let _ = sched.run_for(cap);
+        let c = sched.counters(id).unwrap();
+        println!(
+            "(prefetch over {n_shards} shards: {} warmed, {} hits / {} misses across {} steps)",
+            c.prefetched_shards, c.prefetch_hits, c.prefetch_misses, c.steps
+        );
+        let mut pf = Json::obj();
+        pf.set("shards", n_shards)
+            .set("prefetched_shards", c.prefetched_shards as f64)
+            .set("prefetch_hits", c.prefetch_hits as f64)
+            .set("prefetch_misses", c.prefetch_misses as f64)
+            .set("steps", c.steps as f64);
+        report.set("prefetch", pf);
+    }
+    report
+}
+
+/// `balance` steady state: naive (row-major index + fixed chunk, the
+/// pre-LDU pipeline) vs workload-aware tile dispatch (heavy-first plan
+/// + `(1+1/N)·W̄` partitions + steal-on-exhaust) on the generator's
+/// clustered scenes, whose per-tile workload spread exceeds 10× (Fig. 5
+/// — a few heavy tiles serialize the frame tail under naive dispatch).
+/// Dense renders every frame so the rasterization fan-out dominates;
+/// frames are bit-identical across arms (enforced in
+/// `rust/tests/dispatch.rs`), only wall-clock and balance counters
+/// differ. Written to `BENCH_balance.json` by the bench binary and
+/// gated by `bench_gate` alongside the streaming steady state.
+pub fn balance_dispatch(opts: &ExpOptions) -> Json {
+    use crate::coordinator::StreamSession;
+    use crate::render::DispatchMode;
+    use crate::util::pool::{default_threads, WorkerPool};
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    let frames = opts.frames.max(10);
+    let warmup = 2usize.min(frames / 2);
+    let threads = default_threads().clamp(2, 8);
+    let mut table = Table::new(
+        "balance — tile dispatch on clustered scenes (naive index order vs workload-aware plan)",
+        &["scene", "dispatch", "ms/frame", "tile-time imbalance*", "steals/frame", "tail ms"],
+    );
+    let mut report = Json::obj();
+    report
+        .set("frames", frames)
+        .set("threads", threads)
+        .set("warmup", warmup);
+    let mut scenes_rep = Json::obj();
+    for name in ["train", "garden"] {
+        let scene = generate(name, opts.scale, opts.width, opts.height);
+        let assets = SceneAssets::from_scene(&scene);
+        let poses = scene.sample_poses(frames);
+        let mut scene_rep = Json::obj();
+        let mut ms_by_arm = [0.0f64; 2];
+        for (ai, (label, dispatch)) in [
+            ("index", DispatchMode::Index),
+            ("workload", DispatchMode::Workload),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let cfg = CoordinatorConfig {
+                warp: WarpMode::None, // dense frames: raster fan-out dominates
+                threads,
+                dispatch: *dispatch,
+                ..Default::default()
+            };
+            let pool = Arc::new(WorkerPool::new(threads.saturating_sub(1).max(1)));
+            let mut session = StreamSession::new(Arc::clone(&assets), pool, cfg);
+            for pose in poses.iter().take(warmup) {
+                session.step(pose); // warm arenas, caches and the EWMA loop
+            }
+            let measured = frames - warmup;
+            let (mut imb, mut pred_imb, mut steals, mut tail) = (0.0f64, 0.0f64, 0u64, 0.0f64);
+            let t0 = Instant::now();
+            for pose in poses.iter().skip(warmup) {
+                session.step(pose);
+                let b = session.last_summary().pass.balance;
+                imb += b.measured_imbalance as f64;
+                pred_imb += b.predicted_imbalance as f64;
+                steals += b.steals as u64;
+                tail = tail.max(b.tail_ns as f64 / 1e6);
+            }
+            let ms_frame = t0.elapsed().as_secs_f64() * 1e3 / measured as f64;
+            ms_by_arm[ai] = ms_frame;
+            let imb_mean = imb / measured as f64;
+            table.row(&[
+                name.to_string(),
+                label.to_string(),
+                f2(ms_frame),
+                f2(imb_mean),
+                f2(steals as f64 / measured as f64),
+                f2(tail),
+            ]);
+            let mut m = Json::obj();
+            m.set("ms_per_frame", ms_frame)
+                .set("measured_imbalance", imb_mean)
+                .set(
+                    "imbalance_model",
+                    if *dispatch == DispatchMode::Workload {
+                        "planned partitions (measured tile times)"
+                    } else {
+                        "naive equal-count blocks (measured tile times; \
+                         actual index execution chunk-steals)"
+                    },
+                )
+                .set("predicted_imbalance", pred_imb / measured as f64)
+                .set("steals_per_frame", steals as f64 / measured as f64)
+                .set("tail_ms", tail);
+            scene_rep.set(label, m);
+        }
+        scene_rep.set("speedup", ms_by_arm[0] / ms_by_arm[1].max(1e-9));
+        scenes_rep.set(name, scene_rep);
+    }
+    report.set("scenes", scenes_rep);
+    table.print();
+    println!(
+        "(*) per-worker sums of measured tile times: the workload arm over its planned \
+         partitions, the index arm over the equal-count block model of naive dispatch \
+         (its real execution chunk-steals, so ms/frame is the honest wall-clock comparator)"
+    );
     report
 }
 

@@ -1,13 +1,16 @@
-//! CI perf-regression gate over the streaming steady-state record.
+//! CI perf-regression gate over the streaming + dispatch steady-state
+//! records.
 //!
-//! The bench binary writes `BENCH_streaming.json` every run; the repo
-//! commits a `BENCH_baseline.json` snapshot of a known-good run at the
-//! same (quick-mode) options. [`compare`] extracts the steady-state
-//! ms/frame metrics from both and fails when any regresses by more than
-//! the threshold (default 20%); [`markdown`] renders the comparison as a
-//! GitHub step-summary table. The `bench_gate` binary wires this to the
-//! filesystem and `$GITHUB_STEP_SUMMARY`, and refreshes the baseline
-//! with `--update` after intentional perf changes.
+//! The bench binary writes `BENCH_streaming.json` (and
+//! `BENCH_balance.json`, merged by the `bench_gate` binary under the
+//! `"balance"` key) every run; the repo commits a `BENCH_baseline.json`
+//! snapshot of a known-good run at the same (quick-mode) options.
+//! [`compare`] extracts the steady-state ms/frame metrics from both and
+//! fails when any regresses by more than the threshold (default 20%);
+//! [`markdown`] renders the comparison as a GitHub step-summary table.
+//! The `bench_gate` binary wires this to the filesystem and
+//! `$GITHUB_STEP_SUMMARY`, and refreshes the baseline with `--update`
+//! after intentional perf changes.
 //!
 //! A baseline marked `{"bootstrap": true}` (or containing no extractable
 //! metrics) makes the gate report the current metrics and pass — the
@@ -79,6 +82,26 @@ pub fn extract_metrics(report: &Json) -> Vec<(String, f64)> {
             .and_then(|s| s.get("fps"))
             .and_then(Json::as_f64),
     );
+    // Tile-dispatch steady state (BENCH_balance.json, merged under
+    // "balance" by the bench_gate binary): gate both arms per clustered
+    // scene so a regression in either the naive baseline or the
+    // workload-aware plan trips CI.
+    if let Some(balance) = report.get("balance").and_then(|b| b.get("scenes")) {
+        for scene in ["train", "garden"] {
+            for arm in ["index", "workload"] {
+                if let Some(ms) = balance
+                    .get(scene)
+                    .and_then(|s| s.get(arm))
+                    .and_then(|a| a.get("ms_per_frame"))
+                    .and_then(Json::as_f64)
+                {
+                    if ms > 0.0 {
+                        out.push((format!("balance ms/frame ({scene}, {arm})"), ms));
+                    }
+                }
+            }
+        }
+    }
     out
 }
 
@@ -228,6 +251,29 @@ mod tests {
         assert!((get("1 sessions") - 10.0).abs() < 1e-9);
         assert!((get("4 sessions") - 20.0).abs() < 1e-9);
         assert!((get("sharded") - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn extracts_balance_arm_metrics() {
+        let mut r = report(100.0, 50.0, 25.0);
+        let mut idx = Json::obj();
+        idx.set("ms_per_frame", 12.5);
+        let mut wl = Json::obj();
+        wl.set("ms_per_frame", 10.0);
+        let mut train = Json::obj();
+        train.set("index", idx).set("workload", wl);
+        let mut scenes = Json::obj();
+        scenes.set("train", train);
+        let mut bal = Json::obj();
+        bal.set("scenes", scenes);
+        r.set("balance", bal);
+        let m = extract_metrics(&r);
+        let get = |name: &str| m.iter().find(|(n, _)| n == name).unwrap().1;
+        assert!((get("balance ms/frame (train, index)") - 12.5).abs() < 1e-9);
+        assert!((get("balance ms/frame (train, workload)") - 10.0).abs() < 1e-9);
+        // Reports without the balance section still extract the rest
+        // (old baselines stay comparable on the intersection).
+        assert_eq!(extract_metrics(&report(100.0, 50.0, 25.0)).len(), 4);
     }
 
     #[test]

@@ -110,9 +110,11 @@ pub const ALL_EXPERIMENTS: [&str; 13] = [
 ];
 // tab1 runs as part of fig14's sweep but is addressable too; "streaming"
 // (the session-core steady-state benchmark, written to
-// BENCH_streaming.json) and "sched" (imbalanced-session pacing steady
-// state, written to BENCH_sched.json) are addressable and in the bench
-// binary's default set but are not paper figures.
+// BENCH_streaming.json), "sched" (imbalanced-session pacing steady
+// state, written to BENCH_sched.json) and "balance" (naive vs
+// workload-aware tile dispatch, written to BENCH_balance.json) are
+// addressable and in the bench binary's default set but are not paper
+// figures.
 
 /// Run one experiment by id; returns its JSON report.
 pub fn run_experiment(id: &str, opts: &ExpOptions) -> Option<Json> {
@@ -134,6 +136,7 @@ pub fn run_experiment(id: &str, opts: &ExpOptions) -> Option<Json> {
         "tab1" => e::tab1_utilization(opts),
         "streaming" => e::streaming_sessions(opts),
         "sched" => e::sched_pacing(opts),
+        "balance" => e::balance_dispatch(opts),
         _ => return None,
     };
     Some(json)

@@ -1,16 +1,18 @@
-//! CI perf-regression gate: compare the quick-mode streaming steady
-//! state (`BENCH_streaming.json`, written by
-//! `cargo bench -- --exp streaming`) against the committed
-//! `BENCH_baseline.json` and fail (exit 1) when any steady-state
-//! ms/frame metric regresses beyond the threshold. Writes a markdown
-//! comparison table to `$GITHUB_STEP_SUMMARY` when that variable is set.
+//! CI perf-regression gate: compare the quick-mode steady states
+//! (`BENCH_streaming.json` + `BENCH_balance.json`, written by
+//! `cargo bench -- --exp streaming` / `--exp balance`) against the
+//! committed `BENCH_baseline.json` and fail (exit 1) when any
+//! steady-state ms/frame metric regresses beyond the threshold. Writes a
+//! markdown comparison table to `$GITHUB_STEP_SUMMARY` when that
+//! variable is set.
 //!
 //! Usage:
 //!   cargo run --release --bin bench_gate                    # gate at 20%
 //!   cargo run --release --bin bench_gate -- --threshold 0.3
 //!   cargo run --release --bin bench_gate -- --update        # refresh baseline
 //!
-//! `--update` copies the current `BENCH_streaming.json` into
+//! `--update` copies the current merged record (streaming + the
+//! `"balance"` section when `BENCH_balance.json` exists) into
 //! `BENCH_baseline.json` — run it after intentional perf changes and
 //! commit the result.
 
@@ -22,6 +24,7 @@ fn main() {
     let args = Args::parse(std::env::args().skip(1));
     let baseline_path = args.get_or("baseline", "BENCH_baseline.json");
     let current_path = args.get_or("current", "BENCH_streaming.json");
+    let balance_path = args.get_or("balance", "BENCH_balance.json");
     let threshold = args.f32_or("threshold", 0.20) as f64;
 
     let current_text = match std::fs::read_to_string(current_path) {
@@ -34,13 +37,30 @@ fn main() {
             std::process::exit(2);
         }
     };
-    let current = match Json::parse(&current_text) {
+    let mut current = match Json::parse(&current_text) {
         Ok(j) => j,
         Err(e) => {
             eprintln!("bench_gate: {current_path} is not valid JSON: {e}");
             std::process::exit(2);
         }
     };
+    // Merge the tile-dispatch record when present so its per-arm
+    // ms/frame metrics ride the same gate (absent file = not measured
+    // this run; the gate then fails only if the baseline gates it).
+    match std::fs::read_to_string(balance_path) {
+        Ok(t) => match Json::parse(&t) {
+            Ok(b) => {
+                current.set("balance", b);
+            }
+            Err(e) => {
+                eprintln!("bench_gate: {balance_path} is not valid JSON: {e}");
+                std::process::exit(2);
+            }
+        },
+        Err(_) => {
+            eprintln!("bench_gate: no {balance_path}; gating streaming metrics only");
+        }
+    }
 
     if args.flag("update") {
         std::fs::write(baseline_path, current.to_string_pretty())

@@ -1,253 +1,12 @@
 //! Load Distribution Unit — **LDU** (paper Sec. V-B).
 //!
-//! Two mechanisms, ablated separately in Fig. 15a:
-//!
-//! * **LD1 (inter-block)**: tiles are walked in Morton order (spatial
-//!   locality → shared Gaussian fetches) and packed into rasterization
-//!   blocks sequentially; a tile is deferred to the next block when the
-//!   block's cumulative workload would exceed (1 + 1/N)·W̄, where W̄ is the
-//!   ideal per-block workload and N the average tiles per block.
-//! * **LD2 (intra-block)**: within each block, tiles execute light-to-heavy
-//!   so the Gaussian Sorting Unit always stays ahead of the Volume
-//!   Rendering Unit (no rasterization bubbles).
-//!
-//! Workloads come from DPES-filtered pair counts (the paper's point: raw
-//! pair counts over-estimate; early-stop-aware counts balance correctly).
+//! The assignment policies (LD1 inter-block balancing, LD2 intra-block
+//! light-to-heavy ordering) now live in the shared
+//! [`render::dispatch`](crate::render::dispatch) planner, which also
+//! drives the *software* rasterization fan-out — the simulator and the
+//! real pipeline consume one implementation. This module re-exports the
+//! hardware-model surface under its historical path.
 
-use crate::math::morton::morton_order;
-
-/// Assignment of tiles to rasterization blocks.
-#[derive(Clone, Debug)]
-pub struct BlockAssignment {
-    /// `blocks[b]` = tile indices executed by block b, in execution order.
-    pub blocks: Vec<Vec<u32>>,
-    /// Per-block total workload.
-    pub loads: Vec<u64>,
-}
-
-impl BlockAssignment {
-    /// max/mean block load — 1.0 is perfect balance.
-    pub fn imbalance(&self) -> f64 {
-        let max = self.loads.iter().copied().max().unwrap_or(0) as f64;
-        let mean = self.loads.iter().sum::<u64>() as f64 / self.loads.len().max(1) as f64;
-        if mean <= 0.0 {
-            1.0
-        } else {
-            max / mean
-        }
-    }
-
-    /// Every tile appears exactly once (validation helper).
-    pub fn is_partition(&self, num_tiles: usize) -> bool {
-        let mut seen = vec![false; num_tiles];
-        for b in &self.blocks {
-            for &t in b {
-                if seen[t as usize] {
-                    return false;
-                }
-                seen[t as usize] = true;
-            }
-        }
-        seen.iter().all(|&s| s)
-    }
-}
-
-/// Baseline mapping (original pipeline): tiles in row-major order, packed
-/// into blocks of equal *count* regardless of workload.
-pub fn assign_naive(workloads: &[u32], num_blocks: usize) -> BlockAssignment {
-    let num_tiles = workloads.len();
-    let per = num_tiles.div_ceil(num_blocks.max(1));
-    let mut blocks = Vec::with_capacity(num_blocks);
-    let mut loads = Vec::with_capacity(num_blocks);
-    for b in 0..num_blocks {
-        let lo = (b * per).min(num_tiles);
-        let hi = ((b + 1) * per).min(num_tiles);
-        let tiles: Vec<u32> = (lo as u32..hi as u32).collect();
-        loads.push(tiles.iter().map(|&t| workloads[t as usize] as u64).sum());
-        blocks.push(tiles);
-    }
-    BlockAssignment { blocks, loads }
-}
-
-/// LD1: Morton-ordered balanced packing with the (1 + 1/N)·W̄ bound.
-/// `grid` is the tile grid (tx, ty); `workloads` indexed row-major.
-pub fn assign_balanced(
-    workloads: &[u32],
-    grid: (usize, usize),
-    num_blocks: usize,
-) -> BlockAssignment {
-    let num_tiles = workloads.len();
-    assert_eq!(num_tiles, grid.0 * grid.1);
-    let num_blocks = num_blocks.max(1);
-    let total: u64 = workloads.iter().map(|&w| w as u64).sum();
-    let ideal = total as f64 / num_blocks as f64;
-    let n_avg = num_tiles as f64 / num_blocks as f64;
-    let bound = (1.0 + 1.0 / n_avg.max(1.0)) * ideal;
-
-    let order = morton_order(grid.0, grid.1);
-    let mut blocks: Vec<Vec<u32>> = vec![Vec::new(); num_blocks];
-    let mut loads = vec![0u64; num_blocks];
-    let mut b = 0usize;
-    for &t in &order {
-        let w = workloads[t] as u64;
-        // Defer to the next block when this tile would blow the bound —
-        // unless we're already in the last block (which takes the rest).
-        if b + 1 < num_blocks
-            && !blocks[b].is_empty()
-            && (loads[b] + w) as f64 > bound
-        {
-            b += 1;
-        }
-        blocks[b].push(t as u32);
-        loads[b] += w;
-    }
-    BlockAssignment { blocks, loads }
-}
-
-/// LD2: order each block's tiles light-to-heavy (in place). Returns the
-/// assignment for chaining.
-pub fn order_light_to_heavy(mut asg: BlockAssignment, workloads: &[u32]) -> BlockAssignment {
-    for b in &mut asg.blocks {
-        b.sort_by_key(|&t| workloads[t as usize]);
-    }
-    asg
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::util::proptest::check;
-
-    #[test]
-    fn naive_partitions_all_tiles() {
-        let w = vec![1u32; 100];
-        let a = assign_naive(&w, 7);
-        assert!(a.is_partition(100));
-        assert_eq!(a.blocks.len(), 7);
-    }
-
-    #[test]
-    fn balanced_partitions_all_tiles() {
-        check("balanced assignment partitions", 128, |rng| {
-            let tx = 4 + rng.below(12);
-            let ty = 4 + rng.below(12);
-            let nb = 1 + rng.below(16);
-            let w: Vec<u32> = (0..tx * ty)
-                .map(|_| rng.log_normal(3.0, 1.5) as u32)
-                .collect();
-            let a = assign_balanced(&w, (tx, ty), nb);
-            assert!(a.is_partition(tx * ty), "not a partition");
-            assert_eq!(a.blocks.len(), nb);
-        });
-    }
-
-    #[test]
-    fn balanced_beats_naive_on_skewed_loads() {
-        // Heavy-tailed per-tile loads concentrated in one image corner —
-        // the Fig. 5 situation.
-        let (tx, ty) = (16, 16);
-        let mut w = vec![4u32; tx * ty];
-        for y in 0..4 {
-            for x in 0..4 {
-                w[y * tx + x] = 800; // hot corner
-            }
-        }
-        let naive = assign_naive(&w, 16);
-        let balanced = assign_balanced(&w, (tx, ty), 16);
-        // One-pass sequential packing (hardware-friendly, as in the paper)
-        // can't fully equalize an adversarial hot corner, but must clearly
-        // beat the naive equal-count split.
-        assert!(
-            balanced.imbalance() < naive.imbalance() * 0.6,
-            "balanced {:.2} vs naive {:.2}",
-            balanced.imbalance(),
-            naive.imbalance()
-        );
-        assert!(balanced.imbalance() < 2.5);
-    }
-
-    #[test]
-    fn bound_respected_except_single_tile_blocks() {
-        check("(1+1/N)W bound", 128, |rng| {
-            let (tx, ty) = (12, 12);
-            let nb = 8;
-            let w: Vec<u32> = (0..tx * ty)
-                .map(|_| rng.log_normal(2.5, 1.2) as u32 + 1)
-                .collect();
-            let total: u64 = w.iter().map(|&x| x as u64).sum();
-            let ideal = total as f64 / nb as f64;
-            let bound = (1.0 + nb as f64 / (tx * ty) as f64).recip(); // unused; recompute below
-            let _ = bound;
-            let n_avg = (tx * ty) as f64 / nb as f64;
-            let limit = (1.0 + 1.0 / n_avg) * ideal;
-            let a = assign_balanced(&w, (tx, ty), nb);
-            for (i, (blk, &load)) in a.blocks.iter().zip(&a.loads).enumerate() {
-                // Bound can only be exceeded by a single over-heavy tile or
-                // by the final catch-all block.
-                if blk.len() > 1 && i + 1 < nb {
-                    let max_tile = blk.iter().map(|&t| w[t as usize] as u64).max().unwrap();
-                    assert!(
-                        (load as f64) <= limit + max_tile as f64,
-                        "block {i} load {load} way over limit {limit}"
-                    );
-                }
-            }
-        });
-    }
-
-    #[test]
-    fn light_to_heavy_orders_within_blocks() {
-        let w: Vec<u32> = (0..64).map(|i| (i * 37 % 100) as u32).collect();
-        let a = assign_balanced(&w, (8, 8), 4);
-        let a = order_light_to_heavy(a, &w);
-        for blk in &a.blocks {
-            for pair in blk.windows(2) {
-                assert!(w[pair[0] as usize] <= w[pair[1] as usize]);
-            }
-        }
-        assert!(a.is_partition(64));
-    }
-
-    #[test]
-    fn single_block_takes_everything() {
-        let w = vec![5u32; 30];
-        // grid 6x5
-        let a = assign_balanced(&w, (6, 5), 1);
-        assert_eq!(a.blocks[0].len(), 30);
-        assert_eq!(a.loads[0], 150);
-    }
-
-    #[test]
-    fn zero_workload_tiles_ok() {
-        let w = vec![0u32; 16];
-        let a = assign_balanced(&w, (4, 4), 4);
-        assert!(a.is_partition(16));
-        assert_eq!(a.imbalance(), 1.0); // all-zero loads → defined as balanced
-    }
-
-    #[test]
-    fn morton_grouping_keeps_blocks_spatially_compact() {
-        // With uniform loads, each block should cover a compact Z-order
-        // region: mean pairwise manhattan distance within a block must be
-        // far below that of random assignment.
-        let (tx, ty) = (16, 16);
-        let w = vec![10u32; tx * ty];
-        let a = assign_balanced(&w, (tx, ty), 8);
-        let spread = |tiles: &[u32]| {
-            let mut sum = 0.0;
-            let mut n = 0.0;
-            for (i, &t1) in tiles.iter().enumerate() {
-                for &t2 in &tiles[i + 1..] {
-                    let (x1, y1) = ((t1 as usize % tx) as f64, (t1 as usize / tx) as f64);
-                    let (x2, y2) = ((t2 as usize % tx) as f64, (t2 as usize / tx) as f64);
-                    sum += (x1 - x2).abs() + (y1 - y2).abs();
-                    n += 1.0;
-                }
-            }
-            sum / n
-        };
-        for blk in &a.blocks {
-            assert!(spread(blk) < 8.0, "block spread {:.1}", spread(blk));
-        }
-    }
-}
+pub use crate::render::dispatch::{
+    assign_balanced, assign_naive, order_light_to_heavy, BlockAssignment,
+};

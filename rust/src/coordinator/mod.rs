@@ -1,8 +1,10 @@
 //! L3 coordination layer: the per-viewer streaming session (window-n
 //! cadence, TWSR + DPES orchestration), the deadline-paced multi-session
-//! scheduler, the multi-session stream server built on it, the
-//! single-stream coordinator wrapper, and the Load Distribution Unit's
-//! assignment policies (paper Sec. V).
+//! scheduler, the multi-session stream server built on it, and the
+//! single-stream coordinator wrapper (paper Sec. V). The Load
+//! Distribution Unit's assignment policies moved into the shared
+//! [`render::dispatch`](crate::render::dispatch) planner; `ldu`
+//! re-exports them under the historical path.
 
 pub mod compat;
 pub mod ldu;

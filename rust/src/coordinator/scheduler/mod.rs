@@ -44,7 +44,7 @@
 pub mod queue;
 mod sched;
 
-pub use sched::{SchedConfig, SchedCounters, SessionGuard, SessionScheduler};
+pub use sched::{predict_pose, SchedConfig, SchedCounters, SessionGuard, SessionScheduler};
 
 use std::time::Duration;
 

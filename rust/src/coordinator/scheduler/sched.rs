@@ -6,6 +6,7 @@
 use super::queue::DeadlineQueue;
 use super::{SchedStats, SessionId};
 use crate::coordinator::session::{FrameResult, StepSummary, StreamSession};
+use crate::math::{Quat, Vec3};
 use crate::scene::Pose;
 use crate::shard::SceneHandle;
 use crate::util::pool::WorkerPool;
@@ -49,6 +50,83 @@ pub struct SchedCounters {
     pub max_lateness: Duration,
     /// Shards warmed for this session by predictive prefetch.
     pub prefetched_shards: u64,
+    /// Steps whose render loaded zero cold shards after a prefetch had
+    /// warmed something since the previous step — the prediction paid.
+    pub prefetch_hits: u64,
+    /// Steps that still had to cold-load shards despite a warming
+    /// prefetch — the prediction missed (wrong pose, or evicted again).
+    pub prefetch_misses: u64,
+}
+
+/// Poses kept per session for prefetch prediction.
+const POSE_HISTORY: usize = 4;
+
+/// Sliding window of the most recently processed poses (oldest first).
+#[derive(Clone, Copy)]
+struct PoseHistory {
+    buf: [Pose; POSE_HISTORY],
+    len: usize,
+}
+
+impl PoseHistory {
+    fn new() -> PoseHistory {
+        PoseHistory {
+            buf: [Pose::IDENTITY; POSE_HISTORY],
+            len: 0,
+        }
+    }
+
+    fn push(&mut self, p: Pose) {
+        if self.len == POSE_HISTORY {
+            self.buf.rotate_left(1);
+            self.buf[POSE_HISTORY - 1] = p;
+        } else {
+            self.buf[self.len] = p;
+            self.len += 1;
+        }
+    }
+
+    fn as_slice(&self) -> &[Pose] {
+        &self.buf[..self.len]
+    }
+}
+
+/// Predict the next pose from recent history (oldest → newest). Two
+/// poses fall back to linear extrapolation (`Pose::interpolate` at
+/// t = 2, the PR-3 mechanism); three or more apply **velocity
+/// filtering**: the translation velocity is the mean of the recent
+/// position deltas and the rotation step the normalized mean of the
+/// recent relative rotations (steps are small and sign-aligned, so the
+/// component average is an accurate allocation-free quaternion mean).
+/// Filtering smooths the frame-to-frame jitter a single pose pair
+/// carries straight into the prediction. `None` below two poses.
+pub fn predict_pose(history: &[Pose]) -> Option<Pose> {
+    let n = history.len();
+    if n < 2 {
+        return None;
+    }
+    if n == 2 {
+        return Some(history[0].interpolate(&history[1], 2.0));
+    }
+    let last = history[n - 1];
+    let steps = (n - 1) as f32;
+    let mut v = Vec3::ZERO;
+    let (mut qw, mut qx, mut qy, mut qz) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for w in history.windows(2) {
+        v = v + (w[1].position - w[0].position);
+        let dq = w[0].rotation.conj().mul(w[1].rotation).normalized();
+        // Sign-align toward the identity hemisphere before averaging.
+        let s = if dq.w < 0.0 { -1.0 } else { 1.0 };
+        qw += s * dq.w;
+        qx += s * dq.x;
+        qy += s * dq.y;
+        qz += s * dq.z;
+    }
+    let step = Quat::new(qw, qx, qy, qz).normalized();
+    Some(Pose {
+        rotation: last.rotation.mul(step).normalized(),
+        position: last.position + v * (1.0 / steps),
+    })
 }
 
 /// Pacing + queueing state of one session (everything the scheduler and
@@ -70,11 +148,14 @@ struct SlotCtl {
     closed: bool,
     /// Pending viewpoints, consumed one per step.
     poses: VecDeque<Pose>,
-    /// Last two processed poses (prefetch extrapolation).
-    history: [Option<Pose>; 2],
+    /// Recently processed poses (velocity-filtered prefetch prediction).
+    history: PoseHistory,
     counters: SchedCounters,
     /// A prefetch job for this slot is in flight.
     prefetch_inflight: bool,
+    /// A prefetch warmed ≥1 shard since the last completed step (the
+    /// next step's cold-load count decides hit vs miss).
+    prefetch_warmed: bool,
 }
 
 /// One scheduled session: the session itself behind its own lock, the
@@ -206,9 +287,10 @@ impl SessionScheduler {
                 inflight: false,
                 closed: false,
                 poses: VecDeque::new(),
-                history: [None, None],
+                history: PoseHistory::new(),
                 counters: SchedCounters::default(),
                 prefetch_inflight: false,
+                prefetch_warmed: false,
             }),
             scene,
         })));
@@ -436,7 +518,7 @@ impl SessionScheduler {
                 ..
             } = self;
             for slot in slots.iter().flatten() {
-                let (pose, interval, due) = {
+                let (pose, interval, due, judge) = {
                     let mut ctl = slot.ctl.lock().unwrap();
                     if ctl.closed || ctl.inflight || ctl.poses.is_empty() {
                         continue;
@@ -445,14 +527,15 @@ impl SessionScheduler {
                     ctl.queued = false;
                     ctl.inflight = true;
                     let due = ctl.next_due.min(now);
-                    (ctl.poses.pop_front().unwrap(), ctl.interval, due)
+                    let judge = std::mem::take(&mut ctl.prefetch_warmed);
+                    (ctl.poses.pop_front().unwrap(), ctl.interval, due, judge)
                 };
                 let mode = if traced {
                     StepMode::DrainTraced
                 } else {
                     StepMode::Drain
                 };
-                submit_step(pool, shared, Arc::clone(slot), pose, due, interval, mode);
+                submit_step(pool, shared, Arc::clone(slot), pose, due, interval, mode, judge);
             }
         }
         self.wait_inflight();
@@ -490,11 +573,12 @@ impl SessionScheduler {
                     None
                 } else {
                     ctl.inflight = true;
-                    Some((ctl.poses.pop_front().unwrap(), ctl.interval))
+                    let judge = std::mem::take(&mut ctl.prefetch_warmed);
+                    Some((ctl.poses.pop_front().unwrap(), ctl.interval, judge))
                 }
             };
-            if let Some((pose, interval)) = dispatch {
-                submit_step(pool, shared, slot, pose, due, interval, StepMode::Paced);
+            if let Some((pose, interval, judge)) = dispatch {
+                submit_step(pool, shared, slot, pose, due, interval, StepMode::Paced, judge);
             }
         }
     }
@@ -522,13 +606,21 @@ impl SessionScheduler {
                 if ctl.closed || ctl.prefetch_inflight {
                     continue;
                 }
-                let (prev, last) = match (ctl.history[0], ctl.history[1]) {
-                    (Some(a), Some(b)) => (a, b),
-                    _ => continue,
+                // Exact knowledge beats prediction: when the next pose
+                // is already queued in the mailbox, warm for it;
+                // otherwise velocity-filter the processed history
+                // (falling back to two-pose linear extrapolation).
+                let target = ctl
+                    .poses
+                    .front()
+                    .copied()
+                    .or_else(|| predict_pose(ctl.history.as_slice()));
+                let predicted = match target {
+                    Some(p) => p,
+                    None => continue,
                 };
                 ctl.prefetch_inflight = true;
-                // t=2 extrapolates the prev→last motion one step forward.
-                prev.interpolate(&last, 2.0)
+                predicted
             };
             let job_slot = Arc::clone(slot);
             let shared = Arc::clone(&self.shared);
@@ -538,6 +630,9 @@ impl SessionScheduler {
                     let mut ctl = job_slot.ctl.lock().unwrap();
                     ctl.prefetch_inflight = false;
                     ctl.counters.prefetched_shards += warmed as u64;
+                    if warmed > 0 {
+                        ctl.prefetch_warmed = true;
+                    }
                 }
                 // remove() waits on the shared cv for prefetch_inflight
                 // too — wake it instead of leaving it to poll.
@@ -596,6 +691,10 @@ fn entry_valid(slots: &[Option<Arc<Slot>>], id: SessionId, seq: u64) -> bool {
 /// Submit one session step as a boxed pool job. The job owns an `Arc` to
 /// its slot, so removal while in flight is safe; completion updates the
 /// slot's pacing state and pushes an `Outcome` for the next drain.
+/// `judge_prefetch` is the prefetch-warmed flag consumed at dispatch
+/// time: true means a prefetch completed (and loaded shards) before this
+/// step began, so its cold-load count scores the prediction.
+#[allow(clippy::too_many_arguments)]
 fn submit_step(
     pool: &Arc<WorkerPool>,
     shared: &Arc<Shared>,
@@ -604,6 +703,7 @@ fn submit_step(
     due: Instant,
     interval: Duration,
     mode: StepMode,
+    judge_prefetch: bool,
 ) {
     shared.state.lock().unwrap().inflight += 1;
     let shared = Arc::clone(shared);
@@ -644,8 +744,7 @@ fn submit_step(
         {
             let mut ctl = slot.ctl.lock().unwrap();
             ctl.inflight = false;
-            ctl.history[0] = ctl.history[1];
-            ctl.history[1] = Some(pose);
+            ctl.history.push(pose);
             // Paced: fixed-cadence ladder. Drained: next paced deadline
             // starts one interval after this step finished.
             ctl.next_due = if paced {
@@ -653,6 +752,17 @@ fn submit_step(
             } else {
                 finish + ctl.interval
             };
+            // Prefetch scoreboard: a step that BEGAN after a warming
+            // prefetch (the flag was consumed at dispatch, so a prefetch
+            // landing mid-step is judged by the next step, not this one)
+            // and loaded nothing cold means the prediction paid.
+            if judge_prefetch {
+                if summary.pass.shards.loaded == 0 {
+                    ctl.counters.prefetch_hits += 1;
+                } else {
+                    ctl.counters.prefetch_misses += 1;
+                }
+            }
             let c = &mut ctl.counters;
             c.steps += 1;
             if paced {
@@ -695,6 +805,73 @@ mod tests {
             ..Default::default()
         };
         (StreamSession::new(assets, Arc::clone(pool), cfg), poses)
+    }
+
+    #[test]
+    fn pose_history_is_a_sliding_window() {
+        let mut h = PoseHistory::new();
+        assert!(predict_pose(h.as_slice()).is_none());
+        let at = |x: f32| Pose {
+            rotation: Quat::IDENTITY,
+            position: Vec3::new(x, 0.0, 0.0),
+        };
+        h.push(at(0.0));
+        assert!(predict_pose(h.as_slice()).is_none(), "one pose is not a velocity");
+        for i in 1..6 {
+            h.push(at(i as f32));
+        }
+        let s = h.as_slice();
+        assert_eq!(s.len(), POSE_HISTORY, "window must stay bounded");
+        assert_eq!(s[0].position.x, 2.0, "oldest pose not evicted");
+        assert_eq!(s[POSE_HISTORY - 1].position.x, 5.0);
+    }
+
+    #[test]
+    fn predict_two_poses_matches_linear_extrapolation() {
+        let a = Pose {
+            rotation: Quat::IDENTITY,
+            position: Vec3::new(0.0, 0.0, 0.0),
+        };
+        let b = Pose {
+            rotation: Quat::IDENTITY,
+            position: Vec3::new(1.0, 2.0, 0.0),
+        };
+        let p = predict_pose(&[a, b]).unwrap();
+        let lin = a.interpolate(&b, 2.0);
+        assert!((p.position - lin.position).norm() < 1e-6);
+    }
+
+    #[test]
+    fn velocity_filtering_smooths_jittered_translation() {
+        // Constant velocity +1 x/frame with ±0.4 jitter on the last
+        // step: the filtered prediction must land closer to the true
+        // next position than raw two-pose extrapolation does.
+        let at = |x: f32| Pose {
+            rotation: Quat::IDENTITY,
+            position: Vec3::new(x, 0.0, 0.0),
+        };
+        let hist = [at(0.0), at(1.0), at(2.0), at(3.4)]; // jittered last step
+        let truth = 4.0f32; // underlying motion continues at +1
+        let filtered = predict_pose(&hist).unwrap().position.x;
+        let raw = hist[2].interpolate(&hist[3], 2.0).position.x;
+        assert!(
+            (filtered - truth).abs() < (raw - truth).abs(),
+            "filtered {filtered:.2} vs raw {raw:.2} (truth {truth})"
+        );
+    }
+
+    #[test]
+    fn predict_extrapolates_rotation() {
+        // Steady yaw of 0.1 rad/frame: the predicted pose continues it.
+        let spin = |i: f32| Pose {
+            rotation: Quat::from_axis_angle(Vec3::new(0.0, 1.0, 0.0), 0.1 * i),
+            position: Vec3::ZERO,
+        };
+        let hist = [spin(0.0), spin(1.0), spin(2.0)];
+        let p = predict_pose(&hist).unwrap();
+        let expect = spin(3.0);
+        let dot = p.rotation.dot(expect.rotation).abs();
+        assert!(dot > 0.9999, "rotation prediction off: |dot| = {dot}");
     }
 
     #[test]

@@ -23,8 +23,8 @@
 //! closed exactly as in the paper.
 
 use crate::render::{
-    Frame, FrameScratch, IntersectMode, PassSummary, RenderConfig, RenderPass, RenderStats,
-    Renderer,
+    DispatchMode, Frame, FrameScratch, IntersectMode, PassSummary, RenderConfig, RenderPass,
+    RenderStats, Renderer,
 };
 use crate::scene::{Intrinsics, Pose};
 use crate::shard::SceneHandle;
@@ -82,6 +82,9 @@ pub struct CoordinatorConfig {
     pub dpes: bool,
     /// Rasterization threads (0 = all cores).
     pub threads: usize,
+    /// Tile dispatch: workload-aware plan (default) or row-major index
+    /// order. Frames are bit-identical either way.
+    pub dispatch: DispatchMode,
 }
 
 impl Default for CoordinatorConfig {
@@ -93,6 +96,7 @@ impl Default for CoordinatorConfig {
             mode: IntersectMode::Tait,
             dpes: true,
             threads: 0,
+            dispatch: DispatchMode::default(),
         }
     }
 }
@@ -188,6 +192,7 @@ impl StreamSession {
         renderer.config = RenderConfig {
             mode: config.mode,
             threads: config.threads,
+            dispatch: config.dispatch,
             ..renderer.config
         };
         let (w, h) = (renderer.intrinsics().width, renderer.intrinsics().height);

@@ -1,0 +1,687 @@
+//! Workload-aware tile dispatch (paper Sec. V-B, promoted from the
+//! hardware simulator to the real render pipeline).
+//!
+//! The paper's "No Stall" contribution is a Load Distribution Unit that
+//! predicts per-tile workload and maps tiles to parallel units so no
+//! block idles. The software renderer used to fan tiles out in row-major
+//! index order with a fixed-size chunk counter, so a few heavy tiles
+//! (the generator's clustered scenes have a >10× per-tile spread, Fig. 5)
+//! serialized the tail of every frame. This module is the shared planner
+//! both worlds use:
+//!
+//! * the **hardware-model policies** ([`assign_naive`] /
+//!   [`assign_balanced`] / [`order_light_to_heavy`], formerly
+//!   `coordinator::ldu`) consumed by `sim/accel.rs` for the Fig. 15a
+//!   LDU ablation, and
+//! * the **software execution plan** ([`plan_into`]) consumed by
+//!   [`Renderer::execute`](crate::render::Renderer::execute): tiles in
+//!   heavy-first order, packed into per-worker partitions under the
+//!   paper's `(1 + 1/N)·W̄` bound, executed by
+//!   [`WorkerPool::parallel_for_plan`](crate::util::pool::WorkerPool::parallel_for_plan)
+//!   with steal-on-exhaust as the runtime fallback for what one-pass
+//!   packing cannot equalize.
+//!
+//! Workload predictions ([`predict_into`]) blend the DPES-filtered pair
+//! counts the planning stage already computed with an EWMA of the
+//! *measured* per-tile cost rate (ns per pair) from previous frames —
+//! the paper's inter-frame-continuity workload prediction, closing a
+//! real feedback loop (the EWMA slab lives in the session's persistent
+//! [`FrameScratch`](crate::render::FrameScratch); a rate, so dense,
+//! sparse and pixel passes feed one comparable signal).
+//!
+//! The plan changes **execution order only**, never output: every tile
+//! writes its own disjoint pixels, so frames stay bit-identical to
+//! index-order dispatch (enforced in `rust/tests/dispatch.rs`).
+
+use crate::math::morton::morton_order;
+use std::time::Duration;
+
+/// How `Renderer::execute` distributes tiles over the worker gang.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DispatchMode {
+    /// Row-major index order with a fixed-size chunk counter (the
+    /// pre-LDU pipeline; the naive arm of the `balance` bench).
+    Index,
+    /// Workload-aware plan: heavy-first order, `(1+1/N)·W̄`-bounded
+    /// per-worker partitions, steal-on-exhaust.
+    #[default]
+    Workload,
+}
+
+/// Per-pass load-balance counters, carried through
+/// [`PassSummary`](crate::render::PassSummary) →
+/// [`StepSummary`](crate::coordinator::StepSummary) /
+/// [`RenderStats`](crate::render::RenderStats) →
+/// [`FrameTrace`](crate::coordinator::FrameTrace) →
+/// [`WorkloadTrace`](crate::sim::WorkloadTrace), like
+/// [`ShardStats`](crate::shard::ShardStats) and
+/// [`SchedStats`](crate::coordinator::SchedStats) before it.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BalanceStats {
+    /// A workload-aware plan drove this pass (false = index dispatch).
+    pub planned: bool,
+    /// Worker partitions the pass was planned for.
+    pub workers: u32,
+    /// max/mean per-partition *predicted* load (1.0 = perfect balance).
+    pub predicted_imbalance: f32,
+    /// max/mean per-partition *measured* tile time, over the same
+    /// partitions the plan assigned (index mode: over the equal-count
+    /// blocks the naive split implies). Measures prediction + packing
+    /// quality before the steal fallback corrects the residue.
+    pub measured_imbalance: f32,
+    /// Tiles executed by a worker other than their partition's owner
+    /// (the steal-on-exhaust fallback at work; 0 in index mode).
+    pub steals: u32,
+    /// Measured time of the slowest single tile (the tail a naive
+    /// dispatcher serializes behind).
+    pub tail_ns: u64,
+    /// Wall-clock spent building the plan.
+    pub t_plan: Duration,
+}
+
+/// Hard cap on plan partitions —
+/// [`parallel_for_plan`](crate::util::pool::WorkerPool::parallel_for_plan)
+/// keeps its cursors on the caller's stack (this aliases the pool's
+/// [`MAX_PLAN_PARTS`](crate::util::pool::MAX_PLAN_PARTS)), and no
+/// machine this serves has more useful rasterization parallelism.
+pub const MAX_PLAN_WORKERS: usize = crate::util::pool::MAX_PLAN_PARTS;
+
+/// Blend per-tile predicted workloads into `out` (cleared + refilled;
+/// allocation-free once warm):
+///
+/// * `pairs(t)` — the DPES-filtered pair count from the binning stage
+///   (already mask- and depth-limit-filtered) — the pass's *static*
+///   workload proxy;
+/// * `ewma_rate[t]` — EWMA of the *measured* per-tile cost rate
+///   (ns per pair) from previous frames (`0` = no history, e.g. the
+///   first frame or a fresh one-shot scratch). A rate — not an absolute
+///   tile time — so measurements from dense, sparse and pixel passes
+///   stay comparable: a sparse pass renders fewer pairs AND takes
+///   proportionally less time, leaving the rate intact.
+///
+/// `pred[t] = pairs(t) × rate`, where a tile with history blends its own
+/// rate equally with the population mean rate (hedging single-tile
+/// timer noise) and a tile without history uses the population mean
+/// alone. Masked-out tiles predict 0 (they only cost the mask check).
+pub fn predict_into(
+    num_tiles: usize,
+    pairs: impl Fn(usize) -> u32,
+    ewma_rate: &[f32],
+    tile_mask: Option<&[bool]>,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    // Population mean rate over tiles with history.
+    let (mut rate_sum, mut rate_n) = (0.0f64, 0u32);
+    for t in 0..num_tiles {
+        let r = ewma_rate.get(t).copied().unwrap_or(0.0);
+        if r > 0.0 {
+            rate_sum += r as f64;
+            rate_n += 1;
+        }
+    }
+    let mean_rate = if rate_n > 0 {
+        (rate_sum / rate_n as f64) as f32
+    } else {
+        1.0
+    };
+    for t in 0..num_tiles {
+        if tile_mask.map(|m| !m[t]).unwrap_or(false) {
+            out.push(0.0);
+            continue;
+        }
+        let r = ewma_rate.get(t).copied().unwrap_or(0.0);
+        let p = pairs(t) as f32;
+        let rate = if r > 0.0 {
+            0.5 * r + 0.5 * mean_rate
+        } else {
+            mean_rate
+        };
+        out.push(p * rate);
+    }
+}
+
+/// Fold this frame's measured per-tile cost rates (`tile_ns[t] /
+/// pairs(t)`) into the cross-frame EWMA (α = ½). Only tiles the pass
+/// actually rasterized with a nonzero pair load update; masked-out and
+/// pair-free tiles keep their history for the next time they go live.
+pub fn update_ewma(
+    ewma_rate: &mut Vec<f32>,
+    tile_ns: &[u32],
+    pairs: impl Fn(usize) -> u32,
+    tile_mask: Option<&[bool]>,
+) {
+    if ewma_rate.len() < tile_ns.len() {
+        ewma_rate.resize(tile_ns.len(), 0.0);
+    }
+    for (t, &ns) in tile_ns.iter().enumerate() {
+        if tile_mask.map(|m| !m[t]).unwrap_or(false) {
+            continue;
+        }
+        let p = pairs(t);
+        if p == 0 {
+            continue;
+        }
+        let rate = ns as f32 / p as f32;
+        let e = ewma_rate[t];
+        ewma_rate[t] = if e > 0.0 { 0.5 * e + 0.5 * rate } else { rate };
+    }
+}
+
+/// Build the execution plan: `order` becomes a heavy-first permutation of
+/// `0..pred.len()` (ties broken by tile index, so plans are
+/// deterministic), and `parts` the `workers + 1` partition offsets into
+/// it, packed sequentially under the paper's `(1 + 1/N)·W̄` bound (W̄ =
+/// ideal per-worker load, N = average tiles per worker) with the last
+/// partition as catch-all. Returns the predicted max/mean partition
+/// imbalance. Handles the zero-tile and single-tile edges (empty
+/// partitions are fine — the executor's claim loop skips them).
+/// Allocation-free once `order`/`parts` capacities are warm.
+pub fn plan_into(pred: &[f32], workers: usize, order: &mut Vec<u32>, parts: &mut Vec<u32>) -> f32 {
+    let n = pred.len();
+    let workers = workers.clamp(1, MAX_PLAN_WORKERS);
+    order.clear();
+    order.extend(0..n as u32);
+    // Predictions are non-negative, so the IEEE bit pattern orders like
+    // the value — a total order with no NaN branch; ties break by tile
+    // index so plans are deterministic.
+    order.sort_unstable_by_key(|&t| (std::cmp::Reverse(pred[t as usize].to_bits()), t));
+
+    parts.clear();
+    parts.push(0);
+    let max_load = {
+        let ord: &[u32] = order;
+        pack_bounded(n, workers, |i| pred[ord[i] as usize] as f64, |i| parts.push(i as u32))
+    };
+    while parts.len() <= workers {
+        parts.push(n as u32);
+    }
+    let ideal = pred.iter().map(|&w| w as f64).sum::<f64>() / workers as f64;
+    if ideal > 0.0 {
+        (max_load / ideal) as f32
+    } else {
+        1.0
+    }
+}
+
+/// The shared LD1 packing core (paper Sec. V-B), used by both the
+/// software plan ([`plan_into`]) and the hardware model
+/// ([`assign_balanced`]) so the two worlds cannot diverge: walk tiles in
+/// the caller's order, accumulating load and deferring to the next of
+/// `workers` groups when the running group is non-empty and adding the
+/// tile would exceed `(1 + 1/N)·W̄` (W̄ = total/workers, N = n/workers);
+/// the last group takes the rest. `split(i)` is called with the order
+/// position starting each new group. Returns the maximum group load.
+fn pack_bounded(
+    n: usize,
+    workers: usize,
+    load_at: impl Fn(usize) -> f64,
+    mut split: impl FnMut(usize),
+) -> f64 {
+    let total: f64 = (0..n).map(&load_at).sum();
+    let ideal = total / workers.max(1) as f64;
+    let n_avg = n as f64 / workers.max(1) as f64;
+    let bound = (1.0 + 1.0 / n_avg.max(1.0)) * ideal;
+    let mut groups = 1usize;
+    let mut start = 0usize;
+    let mut load = 0.0f64;
+    let mut max_load = 0.0f64;
+    for i in 0..n {
+        let w = load_at(i);
+        if groups < workers && i > start && load + w > bound {
+            max_load = max_load.max(load);
+            split(i);
+            groups += 1;
+            start = i;
+            load = 0.0;
+        }
+        load += w;
+    }
+    max_load.max(load)
+}
+
+/// max/mean of measured per-partition tile-time sums over a plan's
+/// partitions (`order`/`parts` as produced by [`plan_into`]).
+pub fn measured_imbalance_planned(order: &[u32], parts: &[u32], tile_ns: &[u32]) -> f32 {
+    let workers = parts.len().saturating_sub(1).max(1);
+    let mut max = 0u64;
+    let mut total = 0u64;
+    for k in 0..workers {
+        let (lo, hi) = (parts[k] as usize, parts[k + 1] as usize);
+        let sum: u64 = order[lo..hi].iter().map(|&t| tile_ns[t as usize] as u64).sum();
+        max = max.max(sum);
+        total += sum;
+    }
+    imbalance_ratio(max, total, workers)
+}
+
+/// max/mean of measured per-partition tile-time sums over the
+/// equal-count index-order blocks a naive dispatch implies (the
+/// [`assign_naive`] model applied to this frame's measurements).
+pub fn measured_imbalance_naive(tile_ns: &[u32], workers: usize) -> f32 {
+    let n = tile_ns.len();
+    let workers = workers.max(1);
+    let per = n.div_ceil(workers);
+    let mut max = 0u64;
+    let mut total = 0u64;
+    for k in 0..workers {
+        let (lo, hi) = ((k * per).min(n), ((k + 1) * per).min(n));
+        let sum: u64 = tile_ns[lo..hi].iter().map(|&x| x as u64).sum();
+        max = max.max(sum);
+        total += sum;
+    }
+    imbalance_ratio(max, total, workers)
+}
+
+fn imbalance_ratio(max: u64, total: u64, workers: usize) -> f32 {
+    let mean = total as f64 / workers as f64;
+    if mean <= 0.0 {
+        1.0
+    } else {
+        (max as f64 / mean) as f32
+    }
+}
+
+// --------------------------------------------------------------------
+// Hardware-model assignment policies (paper Sec. V-B, Fig. 15a), moved
+// here from `coordinator/ldu.rs` so the simulator and the software
+// dispatcher share one planner module.
+// --------------------------------------------------------------------
+
+/// Assignment of tiles to rasterization blocks.
+#[derive(Clone, Debug)]
+pub struct BlockAssignment {
+    /// `blocks[b]` = tile indices executed by block b, in execution order.
+    pub blocks: Vec<Vec<u32>>,
+    /// Per-block total workload.
+    pub loads: Vec<u64>,
+}
+
+impl BlockAssignment {
+    /// max/mean block load — 1.0 is perfect balance.
+    pub fn imbalance(&self) -> f64 {
+        let max = self.loads.iter().copied().max().unwrap_or(0) as f64;
+        let mean = self.loads.iter().sum::<u64>() as f64 / self.loads.len().max(1) as f64;
+        if mean <= 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    /// Every tile appears exactly once (validation helper).
+    pub fn is_partition(&self, num_tiles: usize) -> bool {
+        let mut seen = vec![false; num_tiles];
+        for b in &self.blocks {
+            for &t in b {
+                if seen[t as usize] {
+                    return false;
+                }
+                seen[t as usize] = true;
+            }
+        }
+        seen.iter().all(|&s| s)
+    }
+}
+
+/// Baseline mapping (original pipeline): tiles in row-major order, packed
+/// into blocks of equal *count* regardless of workload.
+pub fn assign_naive(workloads: &[u32], num_blocks: usize) -> BlockAssignment {
+    let num_tiles = workloads.len();
+    let per = num_tiles.div_ceil(num_blocks.max(1));
+    let mut blocks = Vec::with_capacity(num_blocks);
+    let mut loads = Vec::with_capacity(num_blocks);
+    for b in 0..num_blocks {
+        let lo = (b * per).min(num_tiles);
+        let hi = ((b + 1) * per).min(num_tiles);
+        let tiles: Vec<u32> = (lo as u32..hi as u32).collect();
+        loads.push(tiles.iter().map(|&t| workloads[t as usize] as u64).sum());
+        blocks.push(tiles);
+    }
+    BlockAssignment { blocks, loads }
+}
+
+/// LD1: Morton-ordered balanced packing with the (1 + 1/N)·W̄ bound
+/// (the [`pack_bounded`] core over Morton order). `grid` is the tile
+/// grid (tx, ty); `workloads` indexed row-major.
+pub fn assign_balanced(
+    workloads: &[u32],
+    grid: (usize, usize),
+    num_blocks: usize,
+) -> BlockAssignment {
+    let num_tiles = workloads.len();
+    assert_eq!(num_tiles, grid.0 * grid.1);
+    let num_blocks = num_blocks.max(1);
+    let order = morton_order(grid.0, grid.1);
+    let mut starts = vec![0usize];
+    pack_bounded(num_tiles, num_blocks, |i| workloads[order[i]] as f64, |i| starts.push(i));
+    while starts.len() < num_blocks {
+        starts.push(num_tiles);
+    }
+    starts.push(num_tiles);
+    let mut blocks = Vec::with_capacity(num_blocks);
+    let mut loads = Vec::with_capacity(num_blocks);
+    for k in 0..num_blocks {
+        let group = &order[starts[k]..starts[k + 1]];
+        let tiles: Vec<u32> = group.iter().map(|&t| t as u32).collect();
+        loads.push(tiles.iter().map(|&t| workloads[t as usize] as u64).sum());
+        blocks.push(tiles);
+    }
+    BlockAssignment { blocks, loads }
+}
+
+/// LD2: order each block's tiles light-to-heavy (in place). Returns the
+/// assignment for chaining.
+pub fn order_light_to_heavy(mut asg: BlockAssignment, workloads: &[u32]) -> BlockAssignment {
+    for b in &mut asg.blocks {
+        b.sort_by_key(|&t| workloads[t as usize]);
+    }
+    asg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    /// `order` is a permutation of 0..n and `parts` a monotone cover of
+    /// it — the software-plan analogue of `BlockAssignment::is_partition`.
+    fn assert_plan_partitions(order: &[u32], parts: &[u32], n: usize, workers: usize) {
+        assert_eq!(order.len(), n);
+        let mut seen = vec![false; n];
+        for &t in order {
+            assert!(!seen[t as usize], "tile {t} appears twice");
+            seen[t as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "plan is not a permutation");
+        assert_eq!(parts.len(), workers.clamp(1, MAX_PLAN_WORKERS) + 1);
+        assert_eq!(parts[0], 0);
+        assert_eq!(*parts.last().unwrap() as usize, n);
+        assert!(parts.windows(2).all(|w| w[0] <= w[1]), "offsets not monotone");
+    }
+
+    #[test]
+    fn plan_is_partition_property() {
+        check("dispatch plan partitions", 128, |rng| {
+            let n = rng.below(400);
+            let workers = 1 + rng.below(16);
+            let pred: Vec<f32> = (0..n).map(|_| rng.log_normal(3.0, 1.5)).collect();
+            let (mut order, mut parts) = (Vec::new(), Vec::new());
+            let imb = plan_into(&pred, workers, &mut order, &mut parts);
+            assert_plan_partitions(&order, &parts, n, workers);
+            assert!(imb >= 0.99 || n == 0, "imbalance below 1: {imb}");
+        });
+    }
+
+    #[test]
+    fn plan_zero_and_single_tile_edges() {
+        let (mut order, mut parts) = (Vec::new(), Vec::new());
+        // Zero tiles: empty permutation, all partitions empty.
+        let imb = plan_into(&[], 8, &mut order, &mut parts);
+        assert_plan_partitions(&order, &parts, 0, 8);
+        assert_eq!(imb, 1.0);
+        // Single tile: one-element permutation in partition 0.
+        let imb = plan_into(&[42.0], 8, &mut order, &mut parts);
+        assert_plan_partitions(&order, &parts, 1, 8);
+        assert_eq!(order, vec![0]);
+        assert!(imb > 1.0, "one tile on 8 workers is maximally imbalanced");
+    }
+
+    #[test]
+    fn plan_orders_heavy_first() {
+        let pred = vec![1.0f32, 50.0, 3.0, 50.0, 0.0];
+        let (mut order, mut parts) = (Vec::new(), Vec::new());
+        plan_into(&pred, 2, &mut order, &mut parts);
+        // Heavy first; equal predictions tie-break by index.
+        assert_eq!(order, vec![1, 3, 2, 0, 4]);
+    }
+
+    #[test]
+    fn plan_beats_naive_on_hot_corner() {
+        // The Fig. 5 situation: heavy loads concentrated in one corner.
+        let (tx, ty) = (16, 16);
+        let mut pred = vec![4.0f32; tx * ty];
+        for y in 0..4 {
+            for x in 0..4 {
+                pred[y * tx + x] = 800.0;
+            }
+        }
+        let workers = 8;
+        let (mut order, mut parts) = (Vec::new(), Vec::new());
+        let planned = plan_into(&pred, workers, &mut order, &mut parts);
+        let as_u32: Vec<u32> = pred.iter().map(|&w| w as u32).collect();
+        let naive = assign_naive(&as_u32, workers).imbalance() as f32;
+        assert!(
+            planned < naive * 0.5,
+            "planned {planned:.2} vs naive {naive:.2}"
+        );
+    }
+
+    #[test]
+    fn plan_respects_bound_except_catch_all() {
+        check("(1+1/N)W plan bound", 64, |rng| {
+            let n = 64 + rng.below(200);
+            let workers = 2 + rng.below(8);
+            let pred: Vec<f32> = (0..n).map(|_| rng.log_normal(2.5, 1.2) + 1.0).collect();
+            let (mut order, mut parts) = (Vec::new(), Vec::new());
+            plan_into(&pred, workers, &mut order, &mut parts);
+            let total: f64 = pred.iter().map(|&w| w as f64).sum();
+            let ideal = total / workers as f64;
+            let limit = (1.0 + workers as f64 / n as f64) * ideal;
+            for k in 0..workers - 1 {
+                let (lo, hi) = (parts[k] as usize, parts[k + 1] as usize);
+                if hi - lo <= 1 {
+                    continue; // a single over-heavy tile may exceed alone
+                }
+                let load: f64 = order[lo..hi].iter().map(|&t| pred[t as usize] as f64).sum();
+                let max_tile = order[lo..hi]
+                    .iter()
+                    .map(|&t| pred[t as usize] as f64)
+                    .fold(0.0, f64::max);
+                assert!(
+                    load <= limit + max_tile + 1e-3,
+                    "partition {k} load {load:.1} over limit {limit:.1}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn predict_blends_history_and_pairs() {
+        let pairs = [100u32, 100, 0, 50];
+        // Tiles 0 and 3 carry measured rates (4 and 2 ns/pair), tiles 1
+        // and 2 have no history; population mean rate = 3.
+        let rates = [4.0f32, 0.0, 0.0, 2.0];
+        let mut out = Vec::new();
+        predict_into(4, |t| pairs[t], &rates, None, &mut out);
+        assert!((out[0] - 350.0).abs() < 1e-3); // 100 * (0.5*4 + 0.5*3)
+        assert!((out[1] - 300.0).abs() < 1e-3); // no history: 100 * mean
+        assert_eq!(out[2], 0.0); // no pairs → no predicted work
+        assert!((out[3] - 125.0).abs() < 1e-3); // 50 * (0.5*2 + 0.5*3)
+    }
+
+    #[test]
+    fn predict_masks_tiles_to_zero() {
+        let mut out = Vec::new();
+        let mask = [true, false, true];
+        predict_into(3, |_| 10, &[], Some(&mask), &mut out);
+        assert!(out[0] > 0.0);
+        assert_eq!(out[1], 0.0);
+        assert!(out[2] > 0.0);
+    }
+
+    #[test]
+    fn ewma_tracks_rates_and_respects_mask() {
+        let mut ewma = Vec::new();
+        // 1000 ns over 100 pairs, 500 ns over 100 pairs → rates 10, 5.
+        update_ewma(&mut ewma, &[1000, 500], |_| 100, None);
+        assert_eq!(ewma, vec![10.0, 5.0]);
+        // Tile 0 measures rate 20 → EWMA 15; tile 1 is masked out.
+        update_ewma(&mut ewma, &[2000, 0], |_| 100, Some(&[true, false]));
+        assert_eq!(ewma[0], 15.0);
+        assert_eq!(ewma[1], 5.0, "masked tile must keep its history");
+        // Pair-free tiles never update (no rate to measure).
+        update_ewma(&mut ewma, &[777, 777], |_| 0, None);
+        assert_eq!(ewma, vec![15.0, 5.0]);
+    }
+
+    #[test]
+    fn rate_ewma_is_stable_across_pass_scale() {
+        // The same tile measured through a dense pass (many pairs) and a
+        // cheap sparse pass (few pairs, proportionally less time) must
+        // keep a stable rate — absolute-time EWMA would crater the
+        // prediction after every sparse frame.
+        let mut ewma = Vec::new();
+        update_ewma(&mut ewma, &[10_000], |_| 1000, None); // dense: 10 ns/pair
+        update_ewma(&mut ewma, &[500], |_| 50, None); // sparse: 10 ns/pair
+        assert_eq!(ewma[0], 10.0);
+    }
+
+    #[test]
+    fn measured_imbalance_matches_model() {
+        // Two partitions of two tiles each: [10, 10] and [30, 10].
+        let order = [0u32, 1, 2, 3];
+        let parts = [0u32, 2, 4];
+        let tile_ns = [10u32, 10, 30, 10];
+        let imb = measured_imbalance_planned(&order, &parts, &tile_ns);
+        assert!((imb - 40.0 / 30.0).abs() < 1e-4);
+        // Naive equal-count blocks over the same measurements.
+        let naive = measured_imbalance_naive(&tile_ns, 2);
+        assert!((naive - 40.0 / 30.0).abs() < 1e-4);
+        // All-idle frame: defined as balanced.
+        assert_eq!(measured_imbalance_naive(&[0, 0], 2), 1.0);
+    }
+
+    // ---- hardware-model policies (moved from coordinator/ldu.rs) ----
+
+    #[test]
+    fn naive_partitions_all_tiles() {
+        let w = vec![1u32; 100];
+        let a = assign_naive(&w, 7);
+        assert!(a.is_partition(100));
+        assert_eq!(a.blocks.len(), 7);
+    }
+
+    #[test]
+    fn balanced_partitions_all_tiles() {
+        check("balanced assignment partitions", 128, |rng| {
+            let tx = 4 + rng.below(12);
+            let ty = 4 + rng.below(12);
+            let nb = 1 + rng.below(16);
+            let w: Vec<u32> = (0..tx * ty)
+                .map(|_| rng.log_normal(3.0, 1.5) as u32)
+                .collect();
+            let a = assign_balanced(&w, (tx, ty), nb);
+            assert!(a.is_partition(tx * ty), "not a partition");
+            assert_eq!(a.blocks.len(), nb);
+        });
+    }
+
+    #[test]
+    fn balanced_beats_naive_on_skewed_loads() {
+        // Heavy-tailed per-tile loads concentrated in one image corner —
+        // the Fig. 5 situation.
+        let (tx, ty) = (16, 16);
+        let mut w = vec![4u32; tx * ty];
+        for y in 0..4 {
+            for x in 0..4 {
+                w[y * tx + x] = 800; // hot corner
+            }
+        }
+        let naive = assign_naive(&w, 16);
+        let balanced = assign_balanced(&w, (tx, ty), 16);
+        // One-pass sequential packing (hardware-friendly, as in the paper)
+        // can't fully equalize an adversarial hot corner, but must clearly
+        // beat the naive equal-count split.
+        assert!(
+            balanced.imbalance() < naive.imbalance() * 0.6,
+            "balanced {:.2} vs naive {:.2}",
+            balanced.imbalance(),
+            naive.imbalance()
+        );
+        assert!(balanced.imbalance() < 2.5);
+    }
+
+    #[test]
+    fn bound_respected_except_single_tile_blocks() {
+        check("(1+1/N)W bound", 128, |rng| {
+            let (tx, ty) = (12, 12);
+            let nb = 8;
+            let w: Vec<u32> = (0..tx * ty)
+                .map(|_| rng.log_normal(2.5, 1.2) as u32 + 1)
+                .collect();
+            let total: u64 = w.iter().map(|&x| x as u64).sum();
+            let ideal = total as f64 / nb as f64;
+            let n_avg = (tx * ty) as f64 / nb as f64;
+            let limit = (1.0 + 1.0 / n_avg) * ideal;
+            let a = assign_balanced(&w, (tx, ty), nb);
+            for (i, (blk, &load)) in a.blocks.iter().zip(&a.loads).enumerate() {
+                // Bound can only be exceeded by a single over-heavy tile or
+                // by the final catch-all block.
+                if blk.len() > 1 && i + 1 < nb {
+                    let max_tile = blk.iter().map(|&t| w[t as usize] as u64).max().unwrap();
+                    assert!(
+                        (load as f64) <= limit + max_tile as f64,
+                        "block {i} load {load} way over limit {limit}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn light_to_heavy_orders_within_blocks() {
+        let w: Vec<u32> = (0..64).map(|i| (i * 37 % 100) as u32).collect();
+        let a = assign_balanced(&w, (8, 8), 4);
+        let a = order_light_to_heavy(a, &w);
+        for blk in &a.blocks {
+            for pair in blk.windows(2) {
+                assert!(w[pair[0] as usize] <= w[pair[1] as usize]);
+            }
+        }
+        assert!(a.is_partition(64));
+    }
+
+    #[test]
+    fn single_block_takes_everything() {
+        let w = vec![5u32; 30];
+        // grid 6x5
+        let a = assign_balanced(&w, (6, 5), 1);
+        assert_eq!(a.blocks[0].len(), 30);
+        assert_eq!(a.loads[0], 150);
+    }
+
+    #[test]
+    fn zero_workload_tiles_ok() {
+        let w = vec![0u32; 16];
+        let a = assign_balanced(&w, (4, 4), 4);
+        assert!(a.is_partition(16));
+        assert_eq!(a.imbalance(), 1.0); // all-zero loads → defined as balanced
+    }
+
+    #[test]
+    fn morton_grouping_keeps_blocks_spatially_compact() {
+        // With uniform loads, each block should cover a compact Z-order
+        // region: mean pairwise manhattan distance within a block must be
+        // far below that of random assignment.
+        let (tx, ty) = (16, 16);
+        let w = vec![10u32; tx * ty];
+        let a = assign_balanced(&w, (tx, ty), 8);
+        let spread = |tiles: &[u32]| {
+            let mut sum = 0.0;
+            let mut n = 0.0;
+            for (i, &t1) in tiles.iter().enumerate() {
+                for &t2 in &tiles[i + 1..] {
+                    let (x1, y1) = ((t1 as usize % tx) as f64, (t1 as usize / tx) as f64);
+                    let (x2, y2) = ((t2 as usize % tx) as f64, (t2 as usize / tx) as f64);
+                    sum += (x1 - x2).abs() + (y1 - y2).abs();
+                    n += 1.0;
+                }
+            }
+            sum / n
+        };
+        for blk in &a.blocks {
+            assert!(spread(blk) < 8.0, "block spread {:.1}", spread(blk));
+        }
+    }
+}

@@ -13,6 +13,7 @@
 //! crate's exact signatures and bit-identical output.
 
 pub mod binning;
+pub mod dispatch;
 pub mod framebuffer;
 pub mod intersect;
 pub mod pass;
@@ -21,6 +22,7 @@ pub mod rasterize;
 pub mod scratch;
 
 pub use binning::{bin_splats, bin_splats_into, BinOptions, TileBins};
+pub use dispatch::{BalanceStats, DispatchMode};
 pub use framebuffer::{Frame, INVALID_DEPTH};
 pub use intersect::{IntersectCost, IntersectMode};
 pub use pass::{PassSummary, RenderPass};
@@ -46,6 +48,10 @@ pub struct RenderConfig {
     pub mode: IntersectMode,
     /// Worker threads for rasterization (0 = all cores).
     pub threads: usize,
+    /// Tile dispatch: workload-aware plan (default) or row-major index
+    /// order (the pre-LDU pipeline). Either way frames are bit-identical
+    /// — the plan changes execution order, never output.
+    pub dispatch: DispatchMode,
     /// Background color blended under residual transmittance.
     pub background: Vec3,
 }
@@ -55,6 +61,7 @@ impl Default for RenderConfig {
         RenderConfig {
             mode: IntersectMode::Aabb,
             threads: 0,
+            dispatch: DispatchMode::default(),
             background: Vec3::ZERO,
         }
     }
@@ -83,6 +90,8 @@ pub struct RenderStats {
     pub per_tile_blend_ops: Vec<u64>,
     /// Shard-stage counters (all zeros for monolithic scenes).
     pub shards: ShardStats,
+    /// Tile-dispatch load-balance counters (plan quality + steals).
+    pub balance: BalanceStats,
     /// Wall-clock per stage.
     pub times: StageTimes,
 }
@@ -135,6 +144,7 @@ struct StatSlabs {
     traversed: *mut u32,
     contributing: *mut u32,
     blend_ops: *mut u64,
+    tile_ns: *mut u32,
 }
 // SAFETY: each worker writes only index t of each slab, and tiles are
 // distributed disjointly.
@@ -340,9 +350,40 @@ impl Renderer {
 
         let mut summary = self.plan_pass(pose, tile_mask, depth_limits, scratch);
 
-        let t2 = Instant::now();
         scratch.reset_stats(num_tiles);
         let threads = self.threads().min(num_tiles.max(1));
+
+        // Workload-aware dispatch plan (Sec. V-B in software): blend the
+        // DPES-filtered pair counts with the cross-frame EWMA of measured
+        // tile times, order tiles heavy-first, and pack per-worker
+        // partitions under the (1 + 1/N)·W̄ bound. Index mode keeps the
+        // pre-LDU row-major chunk counter; either way every tile writes
+        // its own disjoint pixels, so frames are bit-identical.
+        let workload = self.config.dispatch == DispatchMode::Workload;
+        let t_plan0 = Instant::now();
+        let mut predicted_imbalance = 0.0f32;
+        if workload {
+            let bins = &scratch.bins;
+            dispatch::predict_into(
+                num_tiles,
+                |t| bins.offsets[t + 1] - bins.offsets[t],
+                &scratch.ewma_tile_ns,
+                tile_mask,
+                &mut scratch.predicted,
+            );
+            predicted_imbalance = dispatch::plan_into(
+                &scratch.predicted,
+                threads,
+                &mut scratch.plan_order,
+                &mut scratch.plan_parts,
+            );
+        }
+        let t_plan = t_plan0.elapsed();
+
+        // Stamped after planning so t_rasterize and t_plan partition the
+        // dispatch stage instead of overlapping.
+        let t2 = Instant::now();
+        let mut steals = 0u32;
         {
             let splats = &scratch.splats;
             let bins = &scratch.bins;
@@ -351,12 +392,14 @@ impl Renderer {
                 traversed: scratch.traversed.as_mut_ptr(),
                 contributing: scratch.contributing.as_mut_ptr(),
                 blend_ops: scratch.blend_ops.as_mut_ptr(),
+                tile_ns: scratch.tile_ns.as_mut_ptr(),
             };
             let bg = self.config.background;
             let body = |t: usize| {
                 if tile_mask.map(|m| !m[t]).unwrap_or(false) {
                     return; // masked-out tile: leave warped contents alone
                 }
+                let t_tile = Instant::now();
                 // SAFETY: tile t writes only its own pixels / stats slot t.
                 let frame = unsafe { shared_frame.get() };
                 let out = rasterize_tile(splats, bins.tile(t), frame, t, bg, only_invalid);
@@ -364,17 +407,64 @@ impl Renderer {
                     *slabs.traversed.add(t) = out.traversed;
                     *slabs.contributing.add(t) = out.contributing;
                     *slabs.blend_ops.add(t) = out.blend_ops;
+                    *slabs.tile_ns.add(t) =
+                        t_tile.elapsed().as_nanos().min(u32::MAX as u128) as u32;
                 }
             };
             if threads <= 1 {
-                for t in 0..num_tiles {
-                    body(t);
+                if workload {
+                    // Degenerate single-partition plan: same coverage,
+                    // planned (heavy-first) order.
+                    for &t in &scratch.plan_order {
+                        body(t as usize);
+                    }
+                } else {
+                    for t in 0..num_tiles {
+                        body(t);
+                    }
                 }
+            } else if workload {
+                steals = self.pool().parallel_for_plan(
+                    &scratch.plan_order,
+                    &scratch.plan_parts,
+                    body,
+                );
             } else {
                 self.pool().parallel_for(num_tiles, threads, body);
             }
         }
         summary.t_rasterize = t2.elapsed();
+
+        // Close the prediction feedback loop (per-tile ns-per-pair rate,
+        // comparable across dense/sparse/pixel passes) and stamp the
+        // balance counters.
+        {
+            let bins = &scratch.bins;
+            dispatch::update_ewma(
+                &mut scratch.ewma_tile_ns,
+                &scratch.tile_ns,
+                |t| bins.offsets[t + 1] - bins.offsets[t],
+                tile_mask,
+            );
+        }
+        let measured_imbalance = if workload {
+            dispatch::measured_imbalance_planned(
+                &scratch.plan_order,
+                &scratch.plan_parts,
+                &scratch.tile_ns,
+            )
+        } else {
+            dispatch::measured_imbalance_naive(&scratch.tile_ns, threads)
+        };
+        summary.balance = BalanceStats {
+            planned: workload,
+            workers: threads.min(dispatch::MAX_PLAN_WORKERS) as u32,
+            predicted_imbalance,
+            measured_imbalance,
+            steals,
+            tail_ns: scratch.tile_ns.iter().map(|&x| x as u64).max().unwrap_or(0),
+            t_plan,
+        };
 
         scratch.pixel_mask = pixel_mask;
         summary
@@ -436,6 +526,7 @@ impl Renderer {
             t_sort,
             t_rasterize: std::time::Duration::ZERO,
             shards,
+            balance: BalanceStats::default(),
         }
     }
 
@@ -631,6 +722,7 @@ pub fn stats_from_scratch(summary: &PassSummary, scratch: &FrameScratch) -> Rend
         per_tile_contributing: scratch.contributing.clone(),
         per_tile_blend_ops: scratch.blend_ops.clone(),
         shards: summary.shards,
+        balance: summary.balance,
         times,
     }
 }

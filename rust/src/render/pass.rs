@@ -13,6 +13,7 @@
 //!   NOT be skipped — the paper's core criticism of pixel warping), but
 //!   only invalid pixels are blended.
 
+use super::dispatch::BalanceStats;
 use super::intersect::IntersectCost;
 use crate::shard::ShardStats;
 use std::time::Duration;
@@ -57,6 +58,9 @@ pub struct PassSummary {
     pub t_rasterize: Duration,
     /// Shard-stage counters (all zeros for monolithic scenes).
     pub shards: ShardStats,
+    /// Tile-dispatch load-balance counters (workload-aware plan quality,
+    /// steal fallback activity).
+    pub balance: BalanceStats,
 }
 
 impl PassSummary {

@@ -48,6 +48,20 @@ pub struct FrameScratch {
     pub contributing: Vec<u32>,
     /// Per-tile α-blend operation counts.
     pub blend_ops: Vec<u64>,
+    /// Per-tile measured rasterization time this pass (ns).
+    pub tile_ns: Vec<u32>,
+    /// Cross-frame EWMA of the measured per-tile cost *rate* (ns per
+    /// pair) — the workload-prediction feedback loop of the dispatch
+    /// planner. A rate, so dense, sparse and pixel passes feed one
+    /// comparable signal. Persists across frames because each
+    /// `StreamSession` owns its scratch; 0 = no history yet.
+    pub ewma_tile_ns: Vec<f32>,
+    /// Workload-aware dispatch plan of the current pass: blended per-tile
+    /// predictions, heavy-first tile permutation and per-worker partition
+    /// offsets (see [`crate::render::dispatch`]).
+    pub(crate) predicted: Vec<f32>,
+    pub(crate) plan_order: Vec<u32>,
+    pub(crate) plan_parts: Vec<u32>,
     /// Tile mask computed by [`crate::render::RenderPass::InvalidPixels`].
     pub(crate) pixel_mask: Vec<bool>,
 }
@@ -66,5 +80,7 @@ impl FrameScratch {
         self.contributing.resize(num_tiles, 0);
         self.blend_ops.clear();
         self.blend_ops.resize(num_tiles, 0);
+        self.tile_ns.clear();
+        self.tile_ns.resize(num_tiles, 0);
     }
 }

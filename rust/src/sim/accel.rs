@@ -22,7 +22,9 @@
 //! the intra-block stall of Sec. III, removed by LD2.
 
 use super::trace::WorkloadTrace;
-use crate::coordinator::ldu::{assign_balanced, assign_naive, order_light_to_heavy, BlockAssignment};
+use crate::render::dispatch::{
+    assign_balanced, assign_naive, order_light_to_heavy, BlockAssignment,
+};
 
 /// Accelerator configuration (unit throughputs).
 #[derive(Clone, Copy, Debug)]

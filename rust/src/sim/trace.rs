@@ -5,6 +5,7 @@
 //! (DESIGN.md §Key design decisions).
 
 use crate::coordinator::{FrameKind, FrameTrace, SchedStats};
+use crate::render::BalanceStats;
 use crate::scene::Intrinsics;
 use crate::shard::ShardStats;
 
@@ -39,6 +40,9 @@ pub struct WorkloadTrace {
     /// Session-scheduling counters (lateness/stall/queue wait; all zeros
     /// for frames produced outside a `SessionScheduler`).
     pub sched: SchedStats,
+    /// Tile-dispatch load-balance counters (plan quality + steal
+    /// fallback activity of the software rasterization fan-out).
+    pub balance: BalanceStats,
 }
 
 impl WorkloadTrace {
@@ -59,6 +63,7 @@ impl WorkloadTrace {
             kind: trace.kind,
             shards: trace.render.shards,
             sched: trace.sched,
+            balance: trace.render.balance,
         }
     }
 

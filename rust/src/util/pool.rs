@@ -80,9 +80,34 @@ pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Maximum partitions of a planned dispatch
+/// ([`WorkerPool::parallel_for_plan`]): the per-partition cursors live on
+/// the dispatching caller's stack, keeping the steady state
+/// allocation-free. Planners cap their partition count to this
+/// (`render::dispatch::MAX_PLAN_WORKERS` aliases it).
+pub const MAX_PLAN_PARTS: usize = 64;
+
+/// Shared state of one planned dispatch, owned by the dispatching
+/// caller's stack frame (see [`WorkerPool::parallel_for_plan`]).
+struct PlanShared {
+    /// Permutation of 0..n: the execution order.
+    order: *const u32,
+    /// Partition offsets into `order`, len `n_parts + 1`.
+    parts: *const u32,
+    n_parts: usize,
+    /// Per-partition progress cursors (offset within the partition).
+    cursors: *const AtomicUsize,
+    /// Next unclaimed partition.
+    claim: *const AtomicUsize,
+    /// Indices executed by a non-owner (the steal fallback).
+    steals: *const AtomicUsize,
+}
+
 /// A borrowed data-parallel task published to the workers: an erased
-/// closure pointer plus a shared work counter. Lives only for the duration
-/// of one [`WorkerPool::parallel_for`] call (the caller blocks until every
+/// closure pointer plus a shared work counter — or, for planned
+/// dispatches, a pointer to the caller's [`PlanShared`]. Lives only for
+/// the duration of one [`WorkerPool::parallel_for`] /
+/// [`WorkerPool::parallel_for_plan`] call (the caller blocks until every
 /// joined worker has left the task before the borrow ends).
 #[derive(Clone, Copy)]
 struct Gang {
@@ -94,6 +119,8 @@ struct Gang {
     next: *const AtomicUsize,
     n: usize,
     chunk: usize,
+    /// Planned dispatch state; null for index-order gangs.
+    plan: *const PlanShared,
 }
 // SAFETY: the pointers target `Sync` data owned by the dispatching caller,
 // which outlives every worker's use of them (see `parallel_for`'s
@@ -102,6 +129,80 @@ unsafe impl Send for Gang {}
 
 unsafe fn gang_call<F: Fn(usize) + Sync>(data: *const (), i: usize) {
     (*(data as *const F))(i)
+}
+
+/// Drain one gang task as a participant (worker or dispatching caller):
+/// index-order chunk stealing, or the plan's claim-own-partitions-then-
+/// steal protocol.
+///
+/// SAFETY: caller must guarantee the gang's pointers are alive — the
+/// dispatching caller keeps them so until `gang_active` returns to 0.
+unsafe fn drain_gang(g: &Gang) {
+    if g.plan.is_null() {
+        let next = &*g.next;
+        loop {
+            let start = next.fetch_add(g.chunk, Ordering::Relaxed);
+            if start >= g.n {
+                break;
+            }
+            let end = (start + g.chunk).min(g.n);
+            for i in start..end {
+                (g.call)(g.data, i);
+            }
+        }
+    } else {
+        drain_plan(&*g.plan, g);
+    }
+}
+
+/// Plan execution: claim whole partitions while any remain (heavy-first
+/// order inside each), then steal leftovers from other partitions one
+/// index at a time. Every index runs exactly once (each cursor value is
+/// handed out by exactly one `fetch_add`).
+unsafe fn drain_plan(p: &PlanShared, g: &Gang) {
+    let order = std::slice::from_raw_parts(p.order, g.n);
+    let parts = std::slice::from_raw_parts(p.parts, p.n_parts + 1);
+    let cursors = std::slice::from_raw_parts(p.cursors, p.n_parts);
+    let drain_partition = |k: usize| -> usize {
+        let (lo, hi) = (parts[k] as usize, parts[k + 1] as usize);
+        let len = hi - lo;
+        let mut ran = 0usize;
+        loop {
+            let c = cursors[k].fetch_add(1, Ordering::Relaxed);
+            if c >= len {
+                break;
+            }
+            // SAFETY: same contract as the enclosing fn — the caller
+            // keeps the closure alive until every participant leaves.
+            unsafe { (g.call)(g.data, order[lo + c] as usize) };
+            ran += 1;
+        }
+        ran
+    };
+    // Own phase: claim and drain whole partitions.
+    loop {
+        let k = (*p.claim).fetch_add(1, Ordering::Relaxed);
+        if k >= p.n_parts {
+            break;
+        }
+        drain_partition(k);
+    }
+    // Steal phase: sweep the other partitions until nothing is left.
+    let mut stolen = 0usize;
+    loop {
+        let mut any = false;
+        for k in 0..p.n_parts {
+            let ran = drain_partition(k);
+            stolen += ran;
+            any |= ran > 0;
+        }
+        if !any {
+            break;
+        }
+    }
+    if stolen > 0 {
+        (*p.steals).fetch_add(stolen, Ordering::Relaxed);
+    }
 }
 
 struct State {
@@ -231,24 +332,16 @@ impl WorkerPool {
             next: &next as *const AtomicUsize,
             n,
             chunk,
+            plan: std::ptr::null(),
         };
-        {
-            let mut st = self.inner.state.lock().unwrap();
-            if st.gang.is_some() {
-                // Workers are busy with another caller's gang: run inline
-                // rather than sleeping for the slot (the caller is the
-                // progress guarantee either way).
-                drop(st);
-                for i in 0..n {
-                    f(i);
-                }
-                return;
+        if !self.publish_gang(gang, worker_slots) {
+            // Workers are busy with another caller's gang: run inline
+            // rather than sleeping for the slot (the caller is the
+            // progress guarantee either way).
+            for i in 0..n {
+                f(i);
             }
-            st.gang = Some(gang);
-            st.gang_epoch += 1;
-            st.gang_slots = worker_slots;
-            drop(st);
-            self.inner.work_cv.notify_all();
+            return;
         }
         // From here on, `f` and `next` are published to the workers: the
         // guard guarantees — even if `f` panics below — that we wait for
@@ -257,16 +350,95 @@ impl WorkerPool {
         let _guard = GangGuard(&self.inner);
         // The caller drains the counter too: progress never depends on a
         // worker being free.
-        loop {
-            let start = next.fetch_add(chunk, Ordering::Relaxed);
-            if start >= n {
-                break;
-            }
-            let end = (start + chunk).min(n);
-            for i in start..end {
-                f(i);
-            }
+        unsafe { drain_gang(&gang) };
+    }
+
+    /// Execute a caller-provided dispatch plan across the parked workers:
+    /// `order` is a permutation of `0..n` (the execution order, e.g.
+    /// heavy-first) and `parts` its partition offsets (len = partitions +
+    /// 1, as built by [`crate::render::dispatch::plan_into`]). Each
+    /// participant — the calling thread always included — claims whole
+    /// partitions first, then falls back to **stealing** leftover indices
+    /// from other partitions one at a time, so a mispredicted partition
+    /// never serializes the frame tail. Returns the number of stolen
+    /// (non-owner-executed) indices.
+    ///
+    /// Allocation-free: the closure is borrowed and the plan's shared
+    /// cursors live on this call's stack (hence the
+    /// [`MAX_PLAN_PARTS`] cap). Like [`WorkerPool::parallel_for`], falls
+    /// back to inline execution (in plan order, zero steals) when another
+    /// caller's gang occupies the workers.
+    pub fn parallel_for_plan<F: Fn(usize) + Sync>(
+        &self,
+        order: &[u32],
+        parts: &[u32],
+        f: F,
+    ) -> u32 {
+        let n = order.len();
+        if n == 0 {
+            return 0;
         }
+        let n_parts = parts.len().saturating_sub(1);
+        assert!(n_parts <= MAX_PLAN_PARTS, "plan exceeds MAX_PLAN_PARTS");
+        debug_assert_eq!(parts.first().copied(), Some(0));
+        debug_assert_eq!(parts.last().copied(), Some(n as u32));
+        let run_inline = |f: &F| {
+            for &t in order {
+                f(t as usize);
+            }
+        };
+        if n_parts <= 1 {
+            run_inline(&f);
+            return 0;
+        }
+        let cursors: [AtomicUsize; MAX_PLAN_PARTS] = std::array::from_fn(|_| AtomicUsize::new(0));
+        let claim = AtomicUsize::new(0);
+        let steals = AtomicUsize::new(0);
+        let plan = PlanShared {
+            order: order.as_ptr(),
+            parts: parts.as_ptr(),
+            n_parts,
+            cursors: cursors.as_ptr(),
+            claim: &claim as *const AtomicUsize,
+            steals: &steals as *const AtomicUsize,
+        };
+        let gang = Gang {
+            data: &f as *const F as *const (),
+            call: gang_call::<F>,
+            next: std::ptr::null(),
+            n,
+            chunk: 1,
+            plan: &plan as *const PlanShared,
+        };
+        let worker_slots = (n_parts - 1).min(self.threads);
+        if !self.publish_gang(gang, worker_slots) {
+            run_inline(&f);
+            return 0;
+        }
+        // Everything `gang` points at (f, plan, cursors, claim, steals)
+        // is declared before the guard, so the guard's drop — which waits
+        // out every joined worker — runs first on unwind too.
+        let guard = GangGuard(&self.inner);
+        unsafe { drain_gang(&gang) };
+        // Wait out every joined worker BEFORE reading the steal counter
+        // (workers may still be finishing their last stolen tile).
+        drop(guard);
+        steals.load(Ordering::Relaxed) as u32
+    }
+
+    /// Publish a gang to the parked workers; false when another caller's
+    /// gang currently occupies them (the caller should run inline).
+    fn publish_gang(&self, gang: Gang, worker_slots: usize) -> bool {
+        let mut st = self.inner.state.lock().unwrap();
+        if st.gang.is_some() {
+            return false;
+        }
+        st.gang = Some(gang);
+        st.gang_epoch += 1;
+        st.gang_slots = worker_slots;
+        drop(st);
+        self.inner.work_cv.notify_all();
+        true
     }
 }
 
@@ -346,22 +518,11 @@ fn worker_loop(inner: &Inner) {
                 last_epoch = epoch;
                 // Decrements gang_active even if the task panics below.
                 let _active = ActiveGuard(inner);
-                // SAFETY: the dispatching caller keeps the closure and the
-                // counter alive until `gang_active` returns to 0, which it
-                // observes under the same lock that guarded our join.
-                unsafe {
-                    let next = &*g.next;
-                    loop {
-                        let start = next.fetch_add(g.chunk, Ordering::Relaxed);
-                        if start >= g.n {
-                            break;
-                        }
-                        let end = (start + g.chunk).min(g.n);
-                        for i in start..end {
-                            (g.call)(g.data, i);
-                        }
-                    }
-                }
+                // SAFETY: the dispatching caller keeps the closure, the
+                // counter and any plan state alive until `gang_active`
+                // returns to 0, which it observes under the same lock
+                // that guarded our join.
+                unsafe { drain_gang(&g) };
             }
         }
     }
@@ -504,6 +665,101 @@ mod tests {
         }
         pool.wait_idle();
         assert_eq!(pool.idle_capacity(), 2);
+    }
+
+    /// Equal-count 4-partition plan over 0..n in identity order.
+    fn identity_plan(n: usize, parts_n: usize) -> (Vec<u32>, Vec<u32>) {
+        let order: Vec<u32> = (0..n as u32).collect();
+        let per = n.div_ceil(parts_n);
+        let parts: Vec<u32> = (0..=parts_n).map(|k| ((k * per).min(n)) as u32).collect();
+        (order, parts)
+    }
+
+    #[test]
+    fn plan_dispatch_visits_all_once() {
+        let pool = WorkerPool::new(4);
+        let (order, parts) = identity_plan(777, 4);
+        let hits: Vec<AtomicUsize> = (0..777).map(|_| AtomicUsize::new(0)).collect();
+        for _ in 0..5 {
+            pool.parallel_for_plan(&order, &parts, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 5));
+    }
+
+    #[test]
+    fn plan_dispatch_follows_permutation() {
+        // A shuffled permutation with a single partition runs inline in
+        // exactly the plan's order.
+        let pool = WorkerPool::new(2);
+        let order: Vec<u32> = (0..64u32).rev().collect();
+        let parts = vec![0u32, 64];
+        let log = Mutex::new(Vec::new());
+        let steals = pool.parallel_for_plan(&order, &parts, |i| {
+            log.lock().unwrap().push(i as u32);
+        });
+        assert_eq!(steals, 0);
+        assert_eq!(*log.lock().unwrap(), order);
+    }
+
+    #[test]
+    fn plan_dispatch_steals_imbalanced_tail() {
+        // Partition 0 holds ALL the work, partitions 1..4 are empty: the
+        // other participants must steal from it rather than idle.
+        let pool = WorkerPool::new(4);
+        let n = 2000usize;
+        let order: Vec<u32> = (0..n as u32).collect();
+        let parts = vec![0u32, n as u32, n as u32, n as u32, n as u32];
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        let mut total_steals = 0u32;
+        for _ in 0..10 {
+            total_steals += pool.parallel_for_plan(&order, &parts, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+                // Enough work per index that workers join before the
+                // caller drains everything alone.
+                std::hint::black_box((0..50).sum::<u64>());
+            });
+        }
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 10));
+        assert!(total_steals > 0, "no steals across 10 imbalanced dispatches");
+    }
+
+    #[test]
+    fn plan_dispatch_zero_and_empty_partitions() {
+        let pool = WorkerPool::new(2);
+        assert_eq!(pool.parallel_for_plan(&[], &[0], |_| panic!("no work")), 0);
+        // Empty middle partitions are skipped.
+        let order = vec![0u32, 1];
+        let parts = vec![0u32, 1, 1, 2];
+        let count = AtomicUsize::new(0);
+        pool.parallel_for_plan(&order, &parts, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn plan_dispatch_concurrent_callers() {
+        // Concurrent planned dispatches on one pool must all complete
+        // (losers of the gang slot run inline).
+        let pool = Arc::new(WorkerPool::new(2));
+        let total = Arc::new(AtomicU64::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = Arc::clone(&pool);
+                let total = Arc::clone(&total);
+                s.spawn(move || {
+                    let (order, parts) = identity_plan(64, 4);
+                    for _ in 0..20 {
+                        pool.parallel_for_plan(&order, &parts, |i| {
+                            total.fetch_add(i as u64, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 20 * (63 * 64 / 2) as u64);
     }
 
     #[test]

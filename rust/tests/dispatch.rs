@@ -1,0 +1,227 @@
+//! Integration tests for workload-aware tile dispatch (ISSUE 4): the
+//! plan changes execution order only, never output — frames must be
+//! bit-identical to row-major index dispatch for every scene, every
+//! pass variant and both ends of the thread spectrum — plus plan
+//! permutation properties over the public planner API.
+//!
+//! The worker pool honors `LSG_POOL_THREADS` so CI can re-run this file
+//! under a 2-thread pool (steal races hide at high parallelism).
+
+use ls_gaussian::coordinator::{CoordinatorConfig, StreamSession, WarpMode};
+use ls_gaussian::render::dispatch::{plan_into, MAX_PLAN_WORKERS};
+use ls_gaussian::render::{DispatchMode, Frame, RenderConfig, Renderer};
+use ls_gaussian::scene::{generate, SceneAssets, ALL_SCENES};
+use ls_gaussian::util::pool::{default_threads, WorkerPool};
+use std::sync::Arc;
+
+/// Pool sized by `LSG_POOL_THREADS` (CI matrix) or the machine.
+fn test_pool() -> Arc<WorkerPool> {
+    let threads = std::env::var("LSG_POOL_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or_else(|| default_threads().saturating_sub(1))
+        .max(1);
+    Arc::new(WorkerPool::new(threads))
+}
+
+/// The full streaming loop (dense window-boundary frames + TWSR sparse
+/// re-renders with DPES limits) must produce bit-identical frames under
+/// workload-aware and index dispatch, on every scene, with the gang
+/// inline (threads = 1) and parallel (threads = 2).
+#[test]
+fn workload_dispatch_is_bit_identical_on_all_scenes() {
+    let pool = test_pool();
+    for name in ALL_SCENES {
+        let scene = generate(name, 0.03, 96, 64);
+        let poses = scene.sample_poses(4);
+        let assets = SceneAssets::from_scene(&scene);
+        for threads in [1usize, 2] {
+            let mk = |dispatch: DispatchMode| {
+                StreamSession::new(
+                    Arc::clone(&assets),
+                    Arc::clone(&pool),
+                    CoordinatorConfig {
+                        threads,
+                        dispatch,
+                        ..Default::default()
+                    },
+                )
+            };
+            let mut naive = mk(DispatchMode::Index);
+            let mut planned = mk(DispatchMode::Workload);
+            for (f, pose) in poses.iter().enumerate() {
+                let k1 = naive.step(pose);
+                let k2 = planned.step(pose);
+                assert_eq!(k1, k2, "{name} threads={threads} frame {f}: kind diverged");
+                assert_eq!(
+                    naive.frame().rgb,
+                    planned.frame().rgb,
+                    "{name} threads={threads} frame {f}: rgb diverged"
+                );
+                assert_eq!(
+                    naive.frame().depth,
+                    planned.frame().depth,
+                    "{name} threads={threads} frame {f}: depth diverged"
+                );
+                assert_eq!(
+                    naive.frame().valid,
+                    planned.frame().valid,
+                    "{name} threads={threads} frame {f}: validity diverged"
+                );
+            }
+        }
+    }
+}
+
+/// The InvalidPixels pass (PWSR baseline) renders through the plan too.
+#[test]
+fn pixel_pass_is_bit_identical_under_plan() {
+    let pool = test_pool();
+    let scene = generate("room", 0.04, 96, 64);
+    let poses = scene.sample_poses(5);
+    let assets = SceneAssets::from_scene(&scene);
+    for threads in [1usize, 2] {
+        let mk = |dispatch: DispatchMode| {
+            StreamSession::new(
+                Arc::clone(&assets),
+                Arc::clone(&pool),
+                CoordinatorConfig {
+                    warp: WarpMode::Pixel,
+                    threads,
+                    dispatch,
+                    ..Default::default()
+                },
+            )
+        };
+        let mut naive = mk(DispatchMode::Index);
+        let mut planned = mk(DispatchMode::Workload);
+        for pose in &poses {
+            naive.step(pose);
+            planned.step(pose);
+            assert_eq!(naive.frame().rgb, planned.frame().rgb);
+            assert_eq!(naive.frame().valid, planned.frame().valid);
+        }
+    }
+}
+
+/// Masked-out tiles stay untouched when the plan reorders execution: a
+/// poisoned frame keeps its poison exactly where the mask says.
+#[test]
+fn planned_sparse_render_leaves_masked_tiles_untouched() {
+    let scene = generate("chair", 0.03, 128, 96);
+    let pose = scene.sample_poses(1)[0];
+    let r = Renderer::new(scene.cloud, scene.intrinsics).with_config(RenderConfig {
+        dispatch: DispatchMode::Workload,
+        threads: 2,
+        ..Default::default()
+    });
+    let (dense, _) = r.render(&pose);
+    let num_tiles = scene.intrinsics.num_tiles();
+    let mut frame = Frame::new(128, 96);
+    for v in frame.rgb.iter_mut() {
+        *v = -7.0;
+    }
+    let mask: Vec<bool> = (0..num_tiles).map(|t| t % 3 == 0).collect();
+    r.render_sparse(&pose, &mut frame, &mask, None);
+    for t in 0..num_tiles {
+        let (x0, y0, x1, y1) = frame.tile_bounds(t);
+        for y in y0..y1 {
+            for x in x0..x1 {
+                let i = frame.idx(x, y) * 3;
+                if mask[t] {
+                    assert!(
+                        (frame.rgb[i] - dense.rgb[i]).abs() < 1e-5,
+                        "masked tile {t} differs from dense"
+                    );
+                } else {
+                    assert_eq!(frame.rgb[i], -7.0, "unmasked tile {t} was touched");
+                }
+            }
+        }
+    }
+}
+
+/// Balance counters ride the step summary: a planned multi-thread pass
+/// reports plan shape and measured tail, and the EWMA feedback loop
+/// kicks in after the first frame.
+#[test]
+fn balance_stats_ride_the_summary() {
+    let pool = test_pool();
+    let scene = generate("train", 0.04, 160, 96);
+    let poses = scene.sample_poses(3);
+    let assets = SceneAssets::from_scene(&scene);
+    let mut s = StreamSession::new(
+        assets,
+        pool,
+        CoordinatorConfig {
+            warp: WarpMode::None,
+            threads: 2,
+            dispatch: DispatchMode::Workload,
+            ..Default::default()
+        },
+    );
+    for (f, pose) in poses.iter().enumerate() {
+        s.step(pose);
+        let b = s.last_summary().pass.balance;
+        assert!(b.planned, "frame {f} not planned");
+        assert_eq!(b.workers, 2);
+        assert!(b.measured_imbalance >= 1.0, "frame {f}: imbalance {}", b.measured_imbalance);
+        assert!(b.tail_ns > 0, "frame {f}: no tile time measured");
+        if f > 0 {
+            // With history the prediction is a real blend; imbalance of
+            // the planned partitions must stay finite and sane.
+            assert!(b.predicted_imbalance >= 1.0);
+            assert!(b.predicted_imbalance < 64.0);
+        }
+    }
+}
+
+/// Index dispatch reports the naive block model (planned = false, no
+/// steals) so the `balance` bench arms are directly comparable.
+#[test]
+fn index_dispatch_reports_naive_model() {
+    let scene = generate("train", 0.04, 160, 96);
+    let pose = scene.sample_poses(1)[0];
+    let assets = SceneAssets::from_scene(&scene);
+    let mut s = StreamSession::new(
+        assets,
+        test_pool(),
+        CoordinatorConfig {
+            warp: WarpMode::None,
+            threads: 2,
+            dispatch: DispatchMode::Index,
+            ..Default::default()
+        },
+    );
+    s.step(&pose);
+    let b = s.last_summary().pass.balance;
+    assert!(!b.planned);
+    assert_eq!(b.steals, 0);
+    assert!(b.measured_imbalance >= 1.0);
+}
+
+/// Public-API plan permutation property, including the zero-tile and
+/// single-tile edges (the `BlockAssignment::is_partition` analogue for
+/// the software plan).
+#[test]
+fn plan_is_a_permutation_of_the_tile_set() {
+    let check = |pred: &[f32], workers: usize| {
+        let (mut order, mut parts) = (Vec::new(), Vec::new());
+        plan_into(pred, workers, &mut order, &mut parts);
+        let mut seen = vec![false; pred.len()];
+        for &t in &order {
+            assert!(!seen[t as usize], "tile {t} appears twice");
+            seen[t as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "plan dropped tiles");
+        assert_eq!(parts.len(), workers.clamp(1, MAX_PLAN_WORKERS) + 1);
+        assert_eq!(*parts.last().unwrap() as usize, pred.len());
+    };
+    check(&[], 4); // zero tiles
+    check(&[3.0], 4); // single tile
+    check(&[0.0; 7], 3); // all-idle tiles
+    let skewed: Vec<f32> = (0..300).map(|i| ((i * 7919) % 97) as f32).collect();
+    for workers in [1, 2, 5, 16, 200] {
+        check(&skewed, workers); // workers > MAX_PLAN_WORKERS clamps
+    }
+}
