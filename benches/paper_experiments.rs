@@ -37,6 +37,7 @@ fn main() {
             v.push("streaming".to_string());
             v.push("sched".to_string());
             v.push("balance".to_string());
+            v.push("fleet".to_string());
             v
         }
     };
@@ -75,6 +76,13 @@ fn main() {
                     std::fs::write("BENCH_balance.json", json.to_string_pretty())
                         .expect("writing BENCH_balance.json");
                     println!("wrote BENCH_balance.json");
+                }
+                if id == "fleet" {
+                    // Multi-scene serving record (two scenes, one global
+                    // residency budget), gated alongside streaming.
+                    std::fs::write("BENCH_fleet.json", json.to_string_pretty())
+                        .expect("writing BENCH_fleet.json");
+                    println!("wrote BENCH_fleet.json");
                 }
                 report.set(id, json);
             }

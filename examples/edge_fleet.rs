@@ -1,51 +1,82 @@
-//! Multi-camera edge deployment: the paper motivates LS-Gaussian with
-//! embodied agents that render the same scene continuously from moving
-//! viewpoints. This example serves several camera streams (e.g. a robot's
-//! surround rig) through one [`StreamServer`]: one immutable shared scene,
-//! one persistent worker pool, N concurrent `StreamSession`s — the shape
-//! of a real edge deployment where compute is the scarce resource and the
-//! scene must never be duplicated per viewer.
+//! Multi-scene edge deployment: the paper motivates LS-Gaussian with
+//! embodied agents that render continuously from moving viewpoints; a
+//! real fleet node serves *several* worlds at once (multi-robot,
+//! multi-site AV, multi-room agents). This example multiplexes two
+//! scenes through ONE [`StreamServer`]: each scene registers in the
+//! server's `SceneRegistry` behind a stable `SceneId`, camera sessions
+//! attach per scene, and a single `ResidencyGovernor` byte budget —
+//! deliberately set to 60% of the combined working sets — arbitrates
+//! which shards stay warm across both worlds (cross-scene LRU; each
+//! scene's visible set is never evicted to feed the other).
 //!
 //!     cargo run --release --example edge_fleet -- --cameras 4 --frames 24
 
-use ls_gaussian::coordinator::{CoordinatorConfig, StreamServer};
+use ls_gaussian::coordinator::CoordinatorConfig;
 use ls_gaussian::render::IntersectMode;
-use ls_gaussian::scene::{generate, Pose, SceneAssets};
+use ls_gaussian::scene::{generate, orbit_poses, Pose};
+use ls_gaussian::serve::StreamServer;
+use ls_gaussian::shard::{partition_cloud, MemoryShardStore, ShardedScene};
 use ls_gaussian::sim::{GpuModel, WorkloadTrace};
 use ls_gaussian::util::cli::Args;
+use std::sync::Arc;
 use std::time::Instant;
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
-    let cameras = args.usize_or("cameras", 4);
+    let cameras = args.usize_or("cameras", 4).max(2);
     let frames = args.usize_or("frames", 24);
     let scale = args.f32_or("scale", 0.15);
 
-    let scene = generate("garden", scale, 256, 160);
+    // Two worlds on one node.
+    let scene_names = ["garden", "train"];
+    let mut scenes = Vec::new();
+    let mut sharded = Vec::new();
+    let mut total_bytes = 0usize;
+    for name in scene_names {
+        let scene = generate(name, scale, 256, 160);
+        let shards = partition_cloud(&scene.cloud, (scene.cloud.len() / 24).max(512));
+        total_bytes += shards.iter().map(|(_, s)| s.bytes).sum::<usize>();
+        sharded.push(Arc::new(ShardedScene::from_store(
+            Box::new(MemoryShardStore::new(shards)),
+            scene.intrinsics,
+            usize::MAX, // the governor's global budget supersedes this
+        )));
+        scenes.push(scene);
+    }
+    let budget = total_bytes * 3 / 5;
     println!(
-        "edge fleet: {cameras} cameras x {frames} frames over '{}' ({} gaussians, shared once)",
-        scene.preset.name,
-        scene.cloud.len()
+        "edge fleet: {cameras} cameras x {frames} frames over '{}' + '{}' \
+         ({} + {} gaussians), ONE {:.1} MB residency budget for {:.1} MB of scenes",
+        scenes[0].preset.name,
+        scenes[1].preset.name,
+        scenes[0].cloud.len(),
+        scenes[1].cloud.len(),
+        budget as f64 / 1e6,
+        total_bytes as f64 / 1e6,
     );
 
-    // One server: one Arc<SceneAssets>, one pool, N sessions.
-    let assets = SceneAssets::from_scene(&scene);
-    let mut server = StreamServer::new(
-        assets,
+    // One server: one registry, one governor, one pool, N sessions.
+    let mut server = StreamServer::multi(
         CoordinatorConfig {
             mode: IntersectMode::Tait,
             threads: 1, // one core per stream: fleet-style packing
             ..Default::default()
         },
+        Some(budget),
     );
-    for _ in 0..cameras {
-        server.add_session();
+    let scene_ids: Vec<_> = sharded
+        .iter()
+        .map(|s| server.add_scene(Arc::clone(s)).expect("register scene"))
+        .collect();
+    // Cameras round-robin across the scenes (a mixed fleet load).
+    let cam_scene: Vec<usize> = (0..cameras).map(|c| c % scene_names.len()).collect();
+    for &s in &cam_scene {
+        server.add_session_on(scene_ids[s]);
     }
-
-    // Each camera gets a phase-shifted trajectory (a surround rig).
-    let all_poses = scene.sample_poses(frames * cameras);
-    let cam_poses: Vec<&[Pose]> = (0..cameras)
-        .map(|c| &all_poses[c * frames..(c + 1) * frames])
+    let cam_poses: Vec<Vec<Pose>> = cam_scene
+        .iter()
+        .enumerate()
+        .map(|(c, &s)| orbit_poses(scenes[s].preset.extent, frames, c as f32 * 0.6))
         .collect();
 
     let mut traces: Vec<Vec<WorkloadTrace>> = vec![Vec::new(); cameras];
@@ -62,7 +93,10 @@ fn main() {
                 .map(|w| w.skip_fraction() as f64)
                 .unwrap_or(0.0)
                 / frames as f64;
-            traces[c].push(WorkloadTrace::from_frame(&r.trace, &scene.intrinsics));
+            traces[c].push(WorkloadTrace::from_frame(
+                &r.trace,
+                &scenes[cam_scene[c]].intrinsics,
+            ));
         }
     }
     let wall = t0.elapsed().as_secs_f64();
@@ -73,14 +107,37 @@ fn main() {
         let fps_model = gpu.fps(gpu.sequence_time(&traces[c]));
         total_modeled += fps_model;
         println!(
-            "cam {c}: modeled edge-GPU {fps_model:6.1} FPS | mean tile-skip {:4.0}%",
+            "cam {c} [{}]: modeled edge-GPU {fps_model:6.1} FPS | mean tile-skip {:4.0}%",
+            scene_names[cam_scene[c]],
             skip[c] * 100.0
         );
     }
     println!(
-        "fleet: {} frames total in {wall:.2}s wall ({:.1} FPS aggregate); modeled aggregate {:.1} FPS",
+        "fleet: {} frames in {wall:.2}s wall ({:.1} FPS aggregate); modeled aggregate {:.1} FPS",
         cameras * frames,
         (cameras * frames) as f64 / wall,
         total_modeled
     );
+    // The arbitration that made it possible on one budget:
+    let gov = server.governor();
+    let gc = gov.counters();
+    println!(
+        "governor: {:.1} / {:.1} MB resident, {} evictions ({} cross-scene), {} pinned overshoots",
+        gov.resident_bytes() as f64 / 1e6,
+        budget as f64 / 1e6,
+        gc.evictions,
+        gc.cross_scene_evictions,
+        gc.pinned_overshoots
+    );
+    for (&id, name) in scene_ids.iter().zip(scene_names) {
+        let s = server.scene_stats(id);
+        println!(
+            "scene {id} [{name}]: {} sessions, {:.1} MB resident (pinned floor {:.1} MB), \
+             {} shards evicted to feed the peer",
+            s.sessions,
+            s.resident_bytes as f64 / 1e6,
+            s.pinned_bytes as f64 / 1e6,
+            s.evicted_by_peers
+        );
+    }
 }

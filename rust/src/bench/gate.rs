@@ -2,9 +2,10 @@
 //! records.
 //!
 //! The bench binary writes `BENCH_streaming.json` (and
-//! `BENCH_balance.json`, merged by the `bench_gate` binary under the
-//! `"balance"` key) every run; the repo commits a `BENCH_baseline.json`
-//! snapshot of a known-good run at the same (quick-mode) options.
+//! `BENCH_balance.json` / `BENCH_fleet.json`, merged by the `bench_gate`
+//! binary under the `"balance"` / `"fleet"` keys) every run; the repo
+//! commits a `BENCH_baseline.json` snapshot of a known-good run at the
+//! same (quick-mode) options.
 //! [`compare`] extracts the steady-state ms/frame metrics from both and
 //! fails when any regresses by more than the threshold (default 20%);
 //! [`markdown`] renders the comparison as a GitHub step-summary table.
@@ -98,6 +99,23 @@ pub fn extract_metrics(report: &Json) -> Vec<(String, f64)> {
                     if ms > 0.0 {
                         out.push((format!("balance ms/frame ({scene}, {arm})"), ms));
                     }
+                }
+            }
+        }
+    }
+    // Multi-scene serving steady state (BENCH_fleet.json, merged under
+    // "fleet"): gate each scene's per-session ms/frame so a regression
+    // in the governor's arbitration path (cross-scene eviction, stats
+    // stamping) trips CI.
+    if let Some(fleet) = report.get("fleet").and_then(|f| f.get("scenes")) {
+        for scene in ["train", "garden"] {
+            if let Some(ms) = fleet
+                .get(scene)
+                .and_then(|s| s.get("ms_per_frame"))
+                .and_then(Json::as_f64)
+            {
+                if ms > 0.0 {
+                    out.push((format!("fleet ms/frame ({scene})"), ms));
                 }
             }
         }
@@ -274,6 +292,24 @@ mod tests {
         // Reports without the balance section still extract the rest
         // (old baselines stay comparable on the intersection).
         assert_eq!(extract_metrics(&report(100.0, 50.0, 25.0)).len(), 4);
+    }
+
+    #[test]
+    fn extracts_fleet_scene_metrics() {
+        let mut r = report(100.0, 50.0, 25.0);
+        let mut train = Json::obj();
+        train.set("ms_per_frame", 7.5);
+        let mut garden = Json::obj();
+        garden.set("ms_per_frame", 9.25);
+        let mut scenes = Json::obj();
+        scenes.set("train", train).set("garden", garden);
+        let mut fleet = Json::obj();
+        fleet.set("scenes", scenes);
+        r.set("fleet", fleet);
+        let m = extract_metrics(&r);
+        let get = |name: &str| m.iter().find(|(n, _)| n == name).unwrap().1;
+        assert!((get("fleet ms/frame (train)") - 7.5).abs() < 1e-9);
+        assert!((get("fleet ms/frame (garden)") - 9.25).abs() < 1e-9);
     }
 
     #[test]

@@ -111,10 +111,11 @@ pub const ALL_EXPERIMENTS: [&str; 13] = [
 // tab1 runs as part of fig14's sweep but is addressable too; "streaming"
 // (the session-core steady-state benchmark, written to
 // BENCH_streaming.json), "sched" (imbalanced-session pacing steady
-// state, written to BENCH_sched.json) and "balance" (naive vs
-// workload-aware tile dispatch, written to BENCH_balance.json) are
-// addressable and in the bench binary's default set but are not paper
-// figures.
+// state, written to BENCH_sched.json), "balance" (naive vs
+// workload-aware tile dispatch, written to BENCH_balance.json) and
+// "fleet" (two scenes x mixed sessions under one global residency
+// budget, written to BENCH_fleet.json) are addressable and in the bench
+// binary's default set but are not paper figures.
 
 /// Run one experiment by id; returns its JSON report.
 pub fn run_experiment(id: &str, opts: &ExpOptions) -> Option<Json> {
@@ -137,6 +138,7 @@ pub fn run_experiment(id: &str, opts: &ExpOptions) -> Option<Json> {
         "streaming" => e::streaming_sessions(opts),
         "sched" => e::sched_pacing(opts),
         "balance" => e::balance_dispatch(opts),
+        "fleet" => e::fleet_serving(opts),
         _ => return None,
     };
     Some(json)

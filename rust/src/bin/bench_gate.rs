@@ -12,9 +12,11 @@
 //!   cargo run --release --bin bench_gate -- --update        # refresh baseline
 //!
 //! `--update` copies the current merged record (streaming + the
-//! `"balance"` section when `BENCH_balance.json` exists) into
-//! `BENCH_baseline.json` — run it after intentional perf changes and
-//! commit the result.
+//! `"balance"`/`"fleet"` sections when `BENCH_balance.json` /
+//! `BENCH_fleet.json` exist) into `BENCH_baseline.json` — run it after
+//! intentional perf changes and commit the result. CI runs `--update`
+//! after the gate and uploads the refreshed baseline as an artifact, so
+//! a committed bootstrap placeholder can be replaced from a real run.
 
 use ls_gaussian::bench::gate::{compare, markdown, GateOutcome};
 use ls_gaussian::util::cli::Args;
@@ -25,6 +27,7 @@ fn main() {
     let baseline_path = args.get_or("baseline", "BENCH_baseline.json");
     let current_path = args.get_or("current", "BENCH_streaming.json");
     let balance_path = args.get_or("balance", "BENCH_balance.json");
+    let fleet_path = args.get_or("fleet", "BENCH_fleet.json");
     let threshold = args.f32_or("threshold", 0.20) as f64;
 
     let current_text = match std::fs::read_to_string(current_path) {
@@ -44,21 +47,23 @@ fn main() {
             std::process::exit(2);
         }
     };
-    // Merge the tile-dispatch record when present so its per-arm
+    // Merge the tile-dispatch and fleet records when present so their
     // ms/frame metrics ride the same gate (absent file = not measured
     // this run; the gate then fails only if the baseline gates it).
-    match std::fs::read_to_string(balance_path) {
-        Ok(t) => match Json::parse(&t) {
-            Ok(b) => {
-                current.set("balance", b);
+    for (key, path) in [("balance", balance_path), ("fleet", fleet_path)] {
+        match std::fs::read_to_string(path) {
+            Ok(t) => match Json::parse(&t) {
+                Ok(section) => {
+                    current.set(key, section);
+                }
+                Err(e) => {
+                    eprintln!("bench_gate: {path} is not valid JSON: {e}");
+                    std::process::exit(2);
+                }
+            },
+            Err(_) => {
+                eprintln!("bench_gate: no {path}; gating without the '{key}' metric set");
             }
-            Err(e) => {
-                eprintln!("bench_gate: {balance_path} is not valid JSON: {e}");
-                std::process::exit(2);
-            }
-        },
-        Err(_) => {
-            eprintln!("bench_gate: no {balance_path}; gating streaming metrics only");
         }
     }
 

@@ -1,7 +1,7 @@
 //! The streaming frame coordinator — a thin single-stream wrapper over
 //! [`StreamSession`] (see `session.rs` for the per-frame control loop,
-//! `server.rs` for the multi-viewer server, and `scheduler/` for the
-//! paced multi-session scheduler). Kept so the seed API
+//! `serve/server.rs` for the multi-scene multi-viewer server, and
+//! `scheduler/` for the paced multi-session scheduler). Kept so the seed API
 //! (`StreamingCoordinator::new(renderer, config)` → `process` /
 //! `run_sequence`) and every bench/example built on it keep working
 //! unchanged.

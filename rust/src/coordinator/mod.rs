@@ -1,23 +1,21 @@
 //! L3 coordination layer: the per-viewer streaming session (window-n
 //! cadence, TWSR + DPES orchestration), the deadline-paced multi-session
-//! scheduler, the multi-session stream server built on it, and the
-//! single-stream coordinator wrapper (paper Sec. V). The Load
-//! Distribution Unit's assignment policies moved into the shared
-//! [`render::dispatch`](crate::render::dispatch) planner; `ldu`
-//! re-exports them under the historical path.
+//! scheduler, and the single-stream coordinator wrapper (paper Sec. V).
+//! The multi-session server grew into the multi-scene
+//! [`serve::StreamServer`](crate::serve::StreamServer) (re-exported here
+//! for the historical path); the Load Distribution Unit's assignment
+//! policies live in the shared
+//! [`render::dispatch`](crate::render::dispatch) planner.
 
 pub mod compat;
-pub mod ldu;
 pub mod scheduler;
-pub mod server;
 pub mod session;
 
+pub use crate::serve::StreamServer;
 pub use compat::StreamingCoordinator;
-pub use ldu::{assign_balanced, assign_naive, order_light_to_heavy, BlockAssignment};
 pub use scheduler::{
     SchedConfig, SchedCounters, SchedStats, SessionGuard, SessionId, SessionScheduler,
 };
-pub use server::StreamServer;
 pub use session::{
     CoordinatorConfig, FrameKind, FrameResult, FrameTrace, StepSummary, StreamSession, WarpMode,
 };

@@ -117,6 +117,11 @@ pub struct FrameTrace {
     /// [`SessionScheduler`](super::SessionScheduler) when the frame was
     /// produced under it; all zeros otherwise.
     pub sched: super::SchedStats,
+    /// Scene-serving counters (residency, pinned floor, cross-scene
+    /// evictions), stamped by the multi-scene
+    /// [`StreamServer`](crate::serve::StreamServer)'s traced driver;
+    /// all zeros for frames produced outside one.
+    pub scene: crate::serve::SceneStats,
 }
 
 /// One produced frame.
@@ -304,6 +309,7 @@ impl StreamSession {
                 depth_limits,
                 warped_fraction: self.last.warped_fraction,
                 sched: super::SchedStats::default(),
+                scene: crate::serve::SceneStats::default(),
             },
         }
     }

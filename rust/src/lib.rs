@@ -14,14 +14,16 @@
 //!   persistent [`util::pool::WorkerPool`]), driven per viewer by a
 //!   [`coordinator::StreamSession`] (TWSR / DPES warp loop with
 //!   persistent [`render::FrameScratch`] arenas — steady-state warped
-//!   frames allocate nothing), multiplexed by
-//!   [`coordinator::StreamServer`] for N concurrent viewers per scene —
-//!   scheduled by the deadline-paced [`coordinator::SessionScheduler`]
-//!   (sessions as pool jobs, per-session frame intervals, lateness
-//!   counters, prefetch-on-idle) rather than in lockstep — plus the
-//!   two-stage intersection test (TAIT), the load-distribution
-//!   unit (LDU), and a cycle-level accelerator simulator reproducing the
-//!   paper's hardware evaluation.
+//!   frames allocate nothing), multiplexed by the multi-scene
+//!   [`serve::StreamServer`] — N scenes behind a [`serve::SceneRegistry`]
+//!   under one global [`serve::ResidencyGovernor`] byte budget, M
+//!   viewers scheduled by the deadline-paced
+//!   [`coordinator::SessionScheduler`] (sessions as pool jobs,
+//!   per-session frame intervals, lateness counters, prefetch-on-idle)
+//!   rather than in lockstep — plus the two-stage intersection test
+//!   (TAIT), the load-distribution unit (LDU, now the shared
+//!   [`render::dispatch`] planner), and a cycle-level accelerator
+//!   simulator reproducing the paper's hardware evaluation.
 //! * **L2 (`python/compile/model.py`)** — jax projection / rasterization /
 //!   warp graphs, AOT-lowered to HLO text under `artifacts/`.
 //! * **L1 (`python/compile/kernels/`)** — the Pallas tile-rasterization
@@ -34,8 +36,8 @@
 //!
 //! Entry points: [`render::Renderer`] for single frames,
 //! [`coordinator::StreamSession`] for one real-time stream,
-//! [`coordinator::StreamServer`] for many concurrent streams over one
-//! scene, [`coordinator::StreamingCoordinator`] as the seed-compatible
+//! [`serve::StreamServer`] for many concurrent streams over one or many
+//! scenes, [`coordinator::StreamingCoordinator`] as the seed-compatible
 //! single-stream wrapper, and [`sim`] for the hardware evaluation.
 
 pub mod bench;
@@ -45,6 +47,7 @@ pub mod metrics;
 pub mod render;
 pub mod runtime;
 pub mod scene;
+pub mod serve;
 pub mod shard;
 pub mod sim;
 pub mod util;

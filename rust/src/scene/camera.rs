@@ -176,6 +176,25 @@ fn mat3_to_quat(m: Mat3) -> Quat {
     q.normalized()
 }
 
+/// A surround orbit with hard view swings: the camera circles at
+/// `0.55 × extent`, looking *across* the center and out the far side, so
+/// roughly half the scene sits behind the camera every frame and the
+/// visible shard set churns — the standard residency-stress trajectory
+/// shared by the shard/serve parity tests, the `fleet` bench and the
+/// examples (trajectory sampling at 90 FPS moves far too slowly to
+/// exercise eviction). `phase` offsets the start angle so concurrent
+/// viewers sweep different arcs.
+pub fn orbit_poses(extent: f32, n: usize, phase: f32) -> Vec<Pose> {
+    (0..n)
+        .map(|k| {
+            let a = phase + k as f32 / n as f32 * std::f32::consts::TAU;
+            let eye = Vec3::new(extent * 0.55 * a.cos(), -extent * 0.2, extent * 0.55 * a.sin());
+            let target = Vec3::new(-extent * 0.8 * a.cos(), 0.0, -extent * 0.8 * a.sin());
+            Pose::look_at(eye, target, Vec3::new(0.0, -1.0, 0.0))
+        })
+        .collect()
+}
+
 /// A camera = intrinsics + pose.
 #[derive(Clone, Copy, Debug)]
 pub struct Camera {

@@ -10,7 +10,7 @@ pub mod generator;
 pub mod io;
 
 pub use assets::SceneAssets;
-pub use camera::{Camera, Intrinsics, Pose, Trajectory};
+pub use camera::{orbit_poses, Camera, Intrinsics, Pose, Trajectory};
 pub use gaussian::GaussianCloud;
 pub use generator::{
     dataset_of, generate, preset_by_name, Scene, SceneKind, ScenePreset, ALL_SCENES, REAL_SCENES,

@@ -1,0 +1,525 @@
+//! The [`ResidencyGovernor`]: one byte budget for every scene a node
+//! serves.
+//!
+//! Per-scene residency (PR 2) bounds how much of *one* scene is warm;
+//! a multi-scene node needs the bound on the *sum*. The governor owns
+//! that global budget and implements
+//! [`ResidencyArbiter`](crate::shard::ResidencyArbiter): every attached
+//! [`ShardedScene`] lifts its local budget to `usize::MAX` and reports
+//! residency-changing events here instead, and the governor sheds
+//! over-budget bytes by cross-scene LRU —
+//!
+//! * **Pinned floors.** Each scene's most recent committed visible set
+//!   is its pinned floor; the governor never evicts it to feed another
+//!   scene's load or prefetch. When the floors alone exceed the budget,
+//!   residency overshoots (exactly like a single scene's pinned set
+//!   overshooting its local budget) rather than failing a render.
+//! * **Two-phase discipline preserved.** Scenes still pin/load/commit
+//!   against their own residency locks; the governor is told *after*
+//!   the fact and its evictions are pure bookkeeping (`Arc` drops) —
+//!   no store IO ever happens under the governor lock. Lock order is
+//!   strictly governor → scene residency, so a scene must never call
+//!   in while holding its residency lock (the `ShardedScene` paths
+//!   don't).
+//! * **Prefetch is reservation-based.** A speculative load first
+//!   reserves headroom here (`reserve_prefetch`), so racing prefetches
+//!   across scenes collectively respect the budget and speculation
+//!   never evicts anyone — a cold scene's prefetch cannot starve a hot
+//!   scene's visible set.
+
+use crate::shard::{ResidencyArbiter, ShardedScene};
+use anyhow::{bail, Result};
+use std::sync::{Arc, Mutex, Weak};
+
+/// Lifetime governor counters (observability + the serve tests'
+/// invariant probes).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GovernorCounters {
+    /// Shards the governor accounted as newly resident from frame
+    /// commits.
+    pub frame_loads: u64,
+    /// Shards reserved (and loaded) through the prefetch path.
+    pub prefetch_loads: u64,
+    /// Governor-driven evictions, total.
+    pub evictions: u64,
+    /// Evictions whose victim scene differs from the scene whose load
+    /// triggered the shed — the multi-scene arbitration actually
+    /// happening.
+    pub cross_scene_evictions: u64,
+    /// Sheds that ran out of unpinned victims (the pinned floors alone
+    /// exceed the budget; residency overshoots).
+    pub pinned_overshoots: u64,
+}
+
+/// One attached scene, as the governor sees it: a weak handle (the
+/// registry owns the scene; a dropped scene must not be kept alive by
+/// its accounting) plus the byte/stamp mirror the cross-scene LRU runs
+/// on.
+struct GovScene {
+    scene: Weak<ShardedScene>,
+    /// Per-shard byte sizes (from the catalog; avoids upgrading the
+    /// weak handle for arithmetic).
+    bytes: Vec<u64>,
+    /// Per-shard last-touch stamp on the governor clock; 0 = not
+    /// resident.
+    stamps: Vec<u64>,
+    /// The scene's pinned floor: membership in its most recent
+    /// committed visible set. Tracked explicitly (not by stamp
+    /// equality) so a prefetch reservation stamped at the same clock
+    /// never masquerades as pinned.
+    floor: Vec<bool>,
+    /// Bytes of the pinned floor.
+    pinned_bytes: u64,
+    /// Bytes the governor accounts as resident for this scene.
+    resident_bytes: u64,
+    /// Local budget to restore on detach.
+    original_budget: usize,
+    /// Shards of this scene evicted to feed *other* scenes.
+    evicted_by_peers: u64,
+}
+
+#[derive(Default)]
+struct GovInner {
+    /// Global LRU clock: one tick per committed frame across all scenes.
+    clock: u64,
+    scenes: Vec<Option<GovScene>>,
+    resident_bytes: u64,
+    counters: GovernorCounters,
+}
+
+/// Node-level residency arbiter: one global byte budget across every
+/// sharded scene attached to it. See the module docs for the protocol.
+pub struct ResidencyGovernor {
+    budget_bytes: usize,
+    inner: Mutex<GovInner>,
+}
+
+impl ResidencyGovernor {
+    pub fn new(budget_bytes: usize) -> ResidencyGovernor {
+        ResidencyGovernor {
+            budget_bytes,
+            inner: Mutex::new(GovInner::default()),
+        }
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// Bytes the governor currently accounts as resident across all
+    /// attached scenes.
+    pub fn resident_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().resident_bytes
+    }
+
+    pub fn counters(&self) -> GovernorCounters {
+        self.inner.lock().unwrap().counters
+    }
+
+    /// Scenes currently attached.
+    pub fn num_scenes(&self) -> usize {
+        self.inner.lock().unwrap().scenes.iter().flatten().count()
+    }
+
+    /// Per-scene residency view: `(resident_bytes, pinned_bytes,
+    /// evicted_by_peers)`; `None` for an unknown slot.
+    pub fn scene_residency(&self, slot: usize) -> Option<(u64, u64, u64)> {
+        let inner = self.inner.lock().unwrap();
+        let gs = inner.scenes.get(slot)?.as_ref()?;
+        Some((gs.resident_bytes, gs.pinned_bytes, gs.evicted_by_peers))
+    }
+
+    /// Attach a scene: mirror its catalog byte sizes, lift its local
+    /// budget to the governor's, account anything already resident (a
+    /// scene may have served frames before registration), and shed if
+    /// the addition overflows the global budget. Returns the slot the
+    /// scene is governed under — slots, like `SceneId`s, are **never
+    /// reused**, so a lease that raced a detach always lands on an
+    /// empty slot and no-ops instead of corrupting a successor scene's
+    /// accounting. Fails when the scene is already governed (one node
+    /// at a time).
+    pub fn attach(self: &Arc<Self>, scene: &Arc<ShardedScene>) -> Result<usize> {
+        let n = scene.num_shards();
+        let bytes: Vec<u64> = (0..n).map(|id| scene.catalog().meta(id).bytes as u64).collect();
+        let original_budget = scene.residency_budget();
+        // Publish an EMPTY mirror first, then account residency in a
+        // sync pass after the lease is visible: a frame racing the
+        // attach either commits before the pass (the pass sees it
+        // resident and accounts it) or reports through the published
+        // lease (which stamps it, and the pass skips stamped entries) —
+        // either way nothing is lost to the scan↔publication window.
+        let slot = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.scenes.push(Some(GovScene {
+                scene: Arc::downgrade(scene),
+                bytes,
+                stamps: vec![0u64; n],
+                floor: vec![false; n],
+                pinned_bytes: 0,
+                resident_bytes: 0,
+                original_budget,
+                evicted_by_peers: 0,
+            }));
+            inner.scenes.len() - 1
+        };
+        if let Err(e) = scene.attach_arbiter(Arc::clone(self) as Arc<dyn ResidencyArbiter>, slot)
+        {
+            // The scene belongs to another node; retire the slot.
+            self.inner.lock().unwrap().scenes[slot] = None;
+            bail!("attach failed: {e}");
+        }
+        {
+            let mut inner = self.inner.lock().unwrap();
+            let inner = &mut *inner;
+            inner.clock += 1;
+            let clock = inner.clock;
+            if let Some(gs) = inner.scenes.get_mut(slot).and_then(Option::as_mut) {
+                let mut resident = 0u64;
+                for id in 0..n {
+                    if gs.stamps[id] == 0 && scene.is_shard_resident(id) {
+                        gs.stamps[id] = clock;
+                        resident += gs.bytes[id];
+                    }
+                }
+                gs.resident_bytes += resident;
+                inner.resident_bytes += resident;
+            }
+            shed(inner, self.budget_bytes as u64, slot);
+        }
+        Ok(slot)
+    }
+
+    /// Detach the scene at `slot`: drop its accounting and restore its
+    /// local budget (its next frame commit evicts down to it).
+    pub fn detach(&self, slot: usize) {
+        let gs = {
+            let mut inner = self.inner.lock().unwrap();
+            let Some(gs) = inner.scenes.get_mut(slot).and_then(Option::take) else {
+                return;
+            };
+            inner.resident_bytes -= gs.resident_bytes;
+            gs
+        };
+        if let Some(scene) = gs.scene.upgrade() {
+            scene.detach_arbiter();
+            scene.set_residency_budget(gs.original_budget);
+        }
+    }
+}
+
+/// Evict globally-least-recently-touched shards until the budget holds,
+/// skipping every scene's pinned floor and anything the owning scene
+/// refuses to release (pinned by an in-flight frame). Called with the
+/// governor lock held; takes victim scenes' residency locks one at a
+/// time (bookkeeping only — never store IO). The victim scan is a
+/// linear stamp sweep per eviction, deliberately mirroring
+/// `ShardResidency::commit`'s own LRU scan — swap both for a heap when
+/// per-node shard counts outgrow it. `requester` attributes cross-scene
+/// evictions.
+fn shed(inner: &mut GovInner, budget: u64, requester: usize) {
+    // Shards a scene refused to release this shed (re-scanning them
+    // would livelock the victim loop).
+    let mut refused: Vec<(usize, u64)> = Vec::new();
+    while inner.resident_bytes > budget {
+        let mut victim: Option<(usize, usize, u64)> = None;
+        for (s, gs) in inner.scenes.iter().enumerate() {
+            let Some(gs) = gs else { continue };
+            for (id, &stamp) in gs.stamps.iter().enumerate() {
+                if stamp == 0 || gs.floor[id] {
+                    continue; // not resident / pinned floor
+                }
+                if refused.contains(&(s, id as u64)) {
+                    continue;
+                }
+                if victim.is_none_or(|(_, _, best)| stamp < best) {
+                    victim = Some((s, id, stamp));
+                }
+            }
+        }
+        let Some((s, id, _)) = victim else {
+            // Every remaining resident shard is some scene's pinned
+            // floor: overshoot, exactly like a single scene's pinned
+            // set overshooting its local budget.
+            inner.counters.pinned_overshoots += 1;
+            break;
+        };
+        let gs = inner.scenes[s].as_mut().unwrap();
+        let Some(scene) = gs.scene.upgrade() else {
+            // Scene dropped without detach: forget its accounting.
+            let gs = inner.scenes[s].take().unwrap();
+            inner.resident_bytes -= gs.resident_bytes;
+            continue;
+        };
+        match scene.evict_resident(id) {
+            Some(freed) => {
+                gs.stamps[id] = 0;
+                gs.resident_bytes -= freed as u64;
+                if s != requester {
+                    gs.evicted_by_peers += 1;
+                    inner.counters.cross_scene_evictions += 1;
+                }
+                inner.resident_bytes -= freed as u64;
+                inner.counters.evictions += 1;
+            }
+            None => refused.push((s, id as u64)),
+        }
+    }
+}
+
+impl ResidencyArbiter for ResidencyGovernor {
+    fn frame_committed(&self, slot: usize, ids: &[usize]) -> u32 {
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        inner.clock += 1;
+        let clock = inner.clock;
+        let Some(gs) = inner.scenes.get_mut(slot).and_then(Option::as_mut) else {
+            return 0; // detached mid-flight: nothing to account
+        };
+        let scene = gs.scene.upgrade();
+        let mut pinned = 0u64;
+        let mut gained = 0u64;
+        gs.floor.fill(false);
+        for &id in ids {
+            let b = gs.bytes[id];
+            if gs.stamps[id] == 0 {
+                // With several sessions on one scene, a peer scene's
+                // shed can run between this frame's residency commit
+                // and this report (the local clock already advanced, so
+                // evict_shard obliged) — re-check ground truth before
+                // accounting, or the governor double-counts the bytes
+                // and pins a ghost shard it can never evict. Under the
+                // governor lock residency only grows (all evictions
+                // happen here), so the check is stable.
+                if !scene.as_ref().is_some_and(|s| s.is_shard_resident(id)) {
+                    continue;
+                }
+                gained += b;
+                inner.counters.frame_loads += 1;
+            }
+            gs.stamps[id] = clock;
+            gs.floor[id] = true;
+            pinned += b;
+        }
+        gs.pinned_bytes = pinned;
+        gs.resident_bytes += gained;
+        inner.resident_bytes += gained;
+        let before = inner.counters.evictions;
+        shed(inner, self.budget_bytes as u64, slot);
+        (inner.counters.evictions - before) as u32
+    }
+
+    fn reserve_prefetch(&self, slot: usize, ids: &[usize]) -> Vec<usize> {
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        let headroom = (self.budget_bytes as u64).saturating_sub(inner.resident_bytes);
+        if headroom == 0 {
+            return Vec::new();
+        }
+        let Some(gs) = inner.scenes.get_mut(slot).and_then(Option::as_mut) else {
+            return Vec::new();
+        };
+        let Some(scene) = gs.scene.upgrade() else {
+            return Vec::new();
+        };
+        let mut all_cold = Vec::new();
+        scene.filter_cold_ids(ids, &mut all_cold);
+        // Greedily fill the headroom in cull order (= predicted
+        // visibility order), skipping shards that no longer fit — the
+        // same packing rule as the local prefetch path. Reservations
+        // are stamped with the current clock so they rank newest in the
+        // LRU but are NOT a pinned floor — a hot scene's next frame may
+        // still reclaim them. Clamped to ≥1:
+        // stamp 0 is the not-resident sentinel, and a prefetch may land
+        // before any frame has ever ticked the clock (stamp 0 would
+        // leak the bytes from the victim scan and double-count the
+        // shard when a frame later pins it — caught by the governor's
+        // randomized accounting simulation).
+        let clock = inner.clock.max(1);
+        let mut left = headroom;
+        let mut chosen = Vec::new();
+        for id in all_cold {
+            let b = gs.bytes[id];
+            if gs.stamps[id] != 0 || b > left {
+                continue;
+            }
+            left -= b;
+            gs.stamps[id] = clock;
+            gs.resident_bytes += b;
+            inner.resident_bytes += b;
+            inner.counters.prefetch_loads += 1;
+            chosen.push(id);
+        }
+        chosen
+    }
+
+    fn finish_prefetch(&self, slot: usize, ids: &[usize], loaded: bool) {
+        if loaded {
+            return; // reservation already matches reality
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        let Some(gs) = inner.scenes.get_mut(slot).and_then(Option::as_mut) else {
+            return;
+        };
+        let scene = gs.scene.upgrade();
+        for &id in ids {
+            if gs.stamps[id] == 0 {
+                continue;
+            }
+            // A frame may have raced the failed prefetch and actually
+            // loaded the shard; keep it accounted in that case.
+            if scene.as_ref().is_some_and(|s| s.is_shard_resident(id)) {
+                continue;
+            }
+            let b = gs.bytes[id];
+            gs.stamps[id] = 0;
+            gs.resident_bytes -= b;
+            inner.resident_bytes -= b;
+            inner.counters.prefetch_loads = inner.counters.prefetch_loads.saturating_sub(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scene::{generate, Pose};
+    use crate::shard::{partition_cloud, MemoryShardStore, ShardedScene};
+
+    fn sharded_with_budget(name: &str, budget: usize) -> Arc<ShardedScene> {
+        let scene = generate(name, 0.04, 64, 64);
+        let shards = partition_cloud(&scene.cloud, 200);
+        Arc::new(ShardedScene::from_store(
+            Box::new(MemoryShardStore::new(shards)),
+            scene.intrinsics,
+            budget,
+        ))
+    }
+
+    fn sharded(name: &str) -> Arc<ShardedScene> {
+        sharded_with_budget(name, usize::MAX)
+    }
+
+    /// The shared residency-stress orbit: residency accumulates shards
+    /// the latest frame does not pin.
+    fn orbit_poses(extent: f32, n: usize) -> Vec<Pose> {
+        crate::scene::orbit_poses(extent, n, 0.0)
+    }
+
+    #[test]
+    fn attach_accounts_existing_residency_and_detach_restores_budget() {
+        let local_budget = 123_456_789;
+        let scene = sharded_with_budget("room", local_budget);
+        let pose = generate("room", 0.04, 64, 64).sample_poses(1)[0];
+        let (mut ids, mut out) = (Vec::new(), Vec::new());
+        scene.acquire_visible(&pose, &mut ids, &mut out);
+        out.clear();
+        let resident_before = scene.resident_bytes();
+        assert!(resident_before > 0);
+
+        let gov = Arc::new(ResidencyGovernor::new(usize::MAX));
+        let slot = gov.attach(&scene).unwrap();
+        assert_eq!(gov.resident_bytes(), resident_before as u64);
+        assert_eq!(scene.residency_budget(), usize::MAX, "local budget lifted");
+        // Double attach (same or another governor) must fail.
+        assert!(gov.attach(&scene).is_err());
+        let other = Arc::new(ResidencyGovernor::new(usize::MAX));
+        assert!(other.attach(&scene).is_err());
+
+        gov.detach(slot);
+        assert_eq!(gov.resident_bytes(), 0);
+        assert_eq!(gov.num_scenes(), 0);
+        // Local budget restored; the scene is attachable again.
+        assert_eq!(scene.residency_budget(), local_budget);
+        let gov2 = Arc::new(ResidencyGovernor::new(usize::MAX));
+        assert!(gov2.attach(&scene).is_ok());
+    }
+
+    #[test]
+    fn governed_frames_shed_cross_scene_lru() {
+        let a = sharded("room");
+        let b = sharded("garden");
+        let extent_a = generate("room", 0.04, 64, 64).preset.extent;
+        let pose_b = generate("garden", 0.04, 64, 64).sample_poses(1)[0];
+        // Budget: most of A fits (its orbit sheds itself down to within
+        // one shard of the budget), so B's visible set cannot fit on top
+        // without cross-scene evictions.
+        let budget = a.total_bytes() * 9 / 10;
+        let gov = Arc::new(ResidencyGovernor::new(budget));
+        gov.attach(&a).unwrap();
+        gov.attach(&b).unwrap();
+
+        // Sweep A around its scene: most shards become resident, but
+        // only the last frame's visible set stays pinned.
+        let (mut ids, mut out) = (Vec::new(), Vec::new());
+        let orbit = orbit_poses(extent_a, 6);
+        for pose in &orbit {
+            a.acquire_visible(pose, &mut ids, &mut out);
+            out.clear();
+        }
+        assert!(
+            a.resident_bytes() > ids.iter().map(|&i| a.catalog().meta(i).bytes).sum::<usize>(),
+            "orbit left no unpinned residue to evict"
+        );
+
+        // B renders: its load must shed A's unpinned shards, not
+        // overshoot and not touch either pinned floor.
+        let stats_b = b.acquire_visible(&pose_b, &mut ids, &mut out);
+        out.clear();
+        let c = gov.counters();
+        assert!(
+            c.cross_scene_evictions > 0,
+            "no cross-scene evictions under a shared-budget squeeze"
+        );
+        assert!(stats_b.evicted > 0, "governed evictions not in ShardStats");
+        assert!(
+            gov.resident_bytes() <= budget as u64 || c.pinned_overshoots > 0,
+            "resident {} exceeds budget {budget} with victims available",
+            gov.resident_bytes()
+        );
+        // Governor accounting matches the scenes' ground truth.
+        assert_eq!(
+            gov.resident_bytes(),
+            (a.resident_bytes() + b.resident_bytes()) as u64
+        );
+        // Both pinned floors are fully resident.
+        let mut vis = Vec::new();
+        b.catalog().visible_into(b.intrinsics(), &pose_b, &mut vis);
+        assert!(vis.iter().all(|&id| b.is_shard_resident(id)));
+        vis.clear();
+        a.catalog()
+            .visible_into(a.intrinsics(), orbit.last().unwrap(), &mut vis);
+        assert!(vis.iter().all(|&id| a.is_shard_resident(id)));
+    }
+
+    #[test]
+    fn prefetch_reserves_headroom_and_never_evicts() {
+        let a = sharded("room");
+        let b = sharded("garden");
+        let scene_a = generate("room", 0.04, 64, 64);
+        let scene_b = generate("garden", 0.04, 64, 64);
+        let pose_a = scene_a.sample_poses(1)[0];
+        let pose_b = scene_b.sample_poses(1)[0];
+        let (mut ids, mut out) = (Vec::new(), Vec::new());
+        a.acquire_visible(&pose_a, &mut ids, &mut out);
+        out.clear();
+        let ws_a = a.resident_bytes();
+
+        let a = sharded("room");
+        // Budget exactly one working set: zero headroom after A's frame.
+        let gov = Arc::new(ResidencyGovernor::new(ws_a));
+        gov.attach(&a).unwrap();
+        gov.attach(&b).unwrap();
+        a.acquire_visible(&pose_a, &mut ids, &mut out);
+        out.clear();
+        let resident = gov.resident_bytes();
+        // B's speculation finds no headroom: loads nothing, evicts
+        // nothing, and A's floor is untouched.
+        assert_eq!(b.prefetch(&pose_b), 0);
+        assert_eq!(gov.resident_bytes(), resident);
+        assert_eq!(gov.counters().evictions, 0);
+        let mut vis_a = Vec::new();
+        a.catalog().visible_into(a.intrinsics(), &pose_a, &mut vis_a);
+        assert!(vis_a.iter().all(|&id| a.is_shard_resident(id)));
+    }
+}

@@ -1,0 +1,42 @@
+//! Node-level serving: many scenes, many sessions, one memory budget.
+//!
+//! The layers below this one each solved a single-scene problem:
+//! `shard/` bounds one scene's resident bytes, `coordinator/` paces one
+//! scene's sessions on a shared pool. A production fleet node serves
+//! *several* worlds at once (multi-robot, multi-site AV, multi-room
+//! embodied agents), and what binds it is memory residency — so this
+//! module is the layer that arbitrates it:
+//!
+//! * [`SceneRegistry`] — N [`SceneHandle`](crate::shard::SceneHandle)s
+//!   behind stable [`SceneId`]s; add/remove mid-run, session-ref-counted
+//!   so a scene in use can't be dropped.
+//! * [`ResidencyGovernor`] — ONE global byte budget across every
+//!   sharded scene on the node: cross-scene LRU eviction with per-scene
+//!   pinned floors (a scene's currently-visible set is never evicted to
+//!   feed another scene), the two-phase pin/load/commit protocol
+//!   preserved (no store IO under the governor lock), and
+//!   reservation-based prefetch headroom (a cold scene's speculation
+//!   can't starve a hot scene's visible set).
+//! * [`StreamServer`] — the node: sessions attach to a `SceneId` and
+//!   are paced by the existing
+//!   [`SessionScheduler`](crate::coordinator::SessionScheduler)
+//!   regardless of which scene they view.
+//! * [`SceneStats`] — per-scene serving counters (residency, pinned
+//!   floor, cross-scene evictions, global budget), stamped into
+//!   [`FrameTrace`](crate::coordinator::FrameTrace) →
+//!   [`WorkloadTrace`](crate::sim::WorkloadTrace) like `ShardStats` and
+//!   `SchedStats` before them.
+//!
+//! Correctness stance, inherited from `shard/`: residency decides only
+//! *when* bytes are loaded, never what is rendered — frames produced by
+//! a multi-scene server under a constrained global budget are
+//! bit-identical to the same sessions on independent single-scene
+//! servers (`rust/tests/serve.rs`).
+
+pub mod governor;
+pub mod registry;
+pub mod server;
+
+pub use governor::{GovernorCounters, ResidencyGovernor};
+pub use registry::{SceneId, SceneRegistry, SceneStats};
+pub use server::StreamServer;

@@ -1,0 +1,324 @@
+//! The [`SceneRegistry`]: stable [`SceneId`]s for every scene a node
+//! serves, with session ref-counting and governor attachment.
+//!
+//! The registry is the bookkeeping half of the serve layer: it hands
+//! out ids, guards removal (a scene with live sessions cannot be
+//! dropped — the sessions hold real `Arc` clones, so dropping would
+//! only leak the registry's view, not free memory; refusing keeps the
+//! node's accounting honest), and attaches every sharded scene to the
+//! node's one [`ResidencyGovernor`] so all of them share a single byte
+//! budget. Monolithic scenes register too — they just have no
+//! residency to govern.
+
+use super::governor::ResidencyGovernor;
+use crate::shard::SceneHandle;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// Identifier for a registered scene; never reused within one registry.
+pub type SceneId = usize;
+
+/// Per-scene serving statistics, aggregated from the scene's residency
+/// counters and the governor's view. Stamped into
+/// [`FrameTrace`](crate::coordinator::FrameTrace) →
+/// [`WorkloadTrace`](crate::sim::WorkloadTrace) by the multi-scene
+/// [`StreamServer`](super::StreamServer)'s traced driver; all zeros for
+/// frames produced outside one (solo sessions, monolithic scenes).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SceneStats {
+    /// The scene's id in its registry.
+    pub scene: u32,
+    /// Sessions currently attached to this scene.
+    pub sessions: u32,
+    /// Shards in the scene (0 = monolithic).
+    pub shards: u32,
+    /// Bytes of the scene resident right now.
+    pub resident_bytes: u64,
+    /// Bytes of the scene's pinned floor (its latest committed visible
+    /// set) under the governor.
+    pub pinned_bytes: u64,
+    /// Lifetime shard loads of this scene.
+    pub lifetime_loads: u64,
+    /// Lifetime shard evictions of this scene (local + governed).
+    pub lifetime_evictions: u64,
+    /// Shards of this scene evicted to feed *other* scenes.
+    pub evicted_by_peers: u64,
+    /// The node's global residency budget (`u64::MAX` = unlimited).
+    pub global_budget_bytes: u64,
+    /// Bytes resident across *all* scenes of the node.
+    pub global_resident_bytes: u64,
+}
+
+struct Registered {
+    handle: SceneHandle,
+    /// Live sessions attached to this scene (the removal guard).
+    sessions: usize,
+    /// Governor slot, for sharded scenes.
+    gov_slot: Option<usize>,
+}
+
+/// N scenes behind stable ids, sharing one residency governor.
+pub struct SceneRegistry {
+    governor: Arc<ResidencyGovernor>,
+    /// Indexed by [`SceneId`]; removed scenes leave a `None` so ids are
+    /// never reused.
+    scenes: Vec<Option<Registered>>,
+}
+
+impl SceneRegistry {
+    /// New registry whose sharded scenes share `global_budget_bytes` of
+    /// residency (`usize::MAX` = effectively unlimited).
+    pub fn new(global_budget_bytes: usize) -> SceneRegistry {
+        SceneRegistry {
+            governor: Arc::new(ResidencyGovernor::new(global_budget_bytes)),
+            scenes: Vec::new(),
+        }
+    }
+
+    pub fn governor(&self) -> &Arc<ResidencyGovernor> {
+        &self.governor
+    }
+
+    /// Register a scene. Sharded scenes are attached to the governor
+    /// (their local budget is superseded by the global one); this fails
+    /// when the scene is already governed — a `ShardedScene` serves one
+    /// node at a time.
+    pub fn add(&mut self, scene: impl Into<SceneHandle>) -> Result<SceneId> {
+        let handle = scene.into();
+        let gov_slot = match &handle {
+            SceneHandle::Sharded(s) => Some(self.governor.attach(s)?),
+            SceneHandle::Monolithic(_) => None,
+        };
+        let id = self.scenes.len();
+        self.scenes.push(Some(Registered {
+            handle,
+            sessions: 0,
+            gov_slot,
+        }));
+        Ok(id)
+    }
+
+    /// Remove a scene, detaching it from the governor and returning its
+    /// handle. Fails while sessions are attached (ref-counted removal:
+    /// close the sessions first).
+    pub fn remove(&mut self, id: SceneId) -> Result<SceneHandle> {
+        let slot = match self.scenes.get_mut(id) {
+            Some(slot) if slot.is_some() => slot,
+            _ => bail!("no such scene: {id}"),
+        };
+        let sessions = slot.as_ref().unwrap().sessions;
+        if sessions > 0 {
+            bail!("scene {id} has {sessions} live session(s); remove them first");
+        }
+        let reg = slot.take().unwrap();
+        if let Some(slot) = reg.gov_slot {
+            self.governor.detach(slot);
+        }
+        Ok(reg.handle)
+    }
+
+    pub fn get(&self, id: SceneId) -> Option<&SceneHandle> {
+        self.scenes.get(id).and_then(|s| s.as_ref()).map(|r| &r.handle)
+    }
+
+    pub fn contains(&self, id: SceneId) -> bool {
+        self.scenes.get(id).is_some_and(Option::is_some)
+    }
+
+    /// Live scenes.
+    pub fn len(&self) -> usize {
+        self.scenes.iter().flatten().count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Ids of live scenes, ascending.
+    pub fn ids(&self) -> Vec<SceneId> {
+        self.scenes
+            .iter()
+            .enumerate()
+            .filter_map(|(id, s)| s.as_ref().map(|_| id))
+            .collect()
+    }
+
+    /// Sessions attached to a scene.
+    pub fn sessions(&self, id: SceneId) -> usize {
+        self.scenes
+            .get(id)
+            .and_then(|s| s.as_ref())
+            .map_or(0, |r| r.sessions)
+    }
+
+    /// Take a session reference on a scene (blocks its removal).
+    /// Panics on unknown ids, like indexing.
+    pub fn retain(&mut self, id: SceneId) -> &SceneHandle {
+        let reg = self.scenes[id].as_mut().expect("no such scene");
+        reg.sessions += 1;
+        &reg.handle
+    }
+
+    /// Drop a session reference on a scene. No-op for unknown ids (the
+    /// scene may have raced a removal attempt that already failed).
+    pub fn release(&mut self, id: SceneId) {
+        if let Some(reg) = self.scenes.get_mut(id).and_then(|s| s.as_mut()) {
+            reg.sessions = reg.sessions.saturating_sub(1);
+        }
+    }
+
+    fn detach_all(&mut self) {
+        for reg in self.scenes.iter().flatten() {
+            if let Some(slot) = reg.gov_slot {
+                self.governor.detach(slot);
+            }
+        }
+    }
+
+    /// Aggregate the serving statistics of one scene (zeros for
+    /// monolithic scenes beyond the id/session counts).
+    pub fn scene_stats(&self, id: SceneId) -> SceneStats {
+        let Some(reg) = self.scenes.get(id).and_then(|s| s.as_ref()) else {
+            return SceneStats::default();
+        };
+        let mut stats = SceneStats {
+            scene: id as u32,
+            sessions: reg.sessions as u32,
+            global_budget_bytes: self.governor.budget_bytes() as u64,
+            global_resident_bytes: self.governor.resident_bytes(),
+            ..SceneStats::default()
+        };
+        if let SceneHandle::Sharded(s) = &reg.handle {
+            stats.shards = s.num_shards() as u32;
+            stats.resident_bytes = s.resident_bytes() as u64;
+            let (loads, evictions) = s.residency_counters();
+            stats.lifetime_loads = loads;
+            stats.lifetime_evictions = evictions;
+            if let Some((_, pinned, by_peers)) =
+                reg.gov_slot.and_then(|slot| self.governor.scene_residency(slot))
+            {
+                stats.pinned_bytes = pinned;
+                stats.evicted_by_peers = by_peers;
+            }
+        }
+        stats
+    }
+}
+
+/// Scenes outlive the node that served them: dropping a registry (or
+/// the `StreamServer` owning it) detaches every governed scene, so a
+/// still-shared `Arc<ShardedScene>` gets its local budget back and can
+/// register with another server — the single-scene server's drop
+/// semantics from before the registry existed.
+impl Drop for SceneRegistry {
+    fn drop(&mut self) {
+        self.detach_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scene::{generate, SceneAssets};
+    use crate::shard::{ShardConfig, ShardedScene};
+    use std::sync::Arc;
+
+    fn sharded(name: &str) -> ShardedScene {
+        let scene = generate(name, 0.04, 64, 64);
+        ShardedScene::partition(
+            &scene.cloud,
+            scene.intrinsics,
+            &ShardConfig {
+                target_splats: 200,
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn ids_are_stable_and_never_reused() {
+        let mut reg = SceneRegistry::new(usize::MAX);
+        let a = reg.add(sharded("room")).unwrap();
+        let b = reg.add(sharded("garden")).unwrap();
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.governor().num_scenes(), 2);
+        reg.remove(a).unwrap();
+        assert!(!reg.contains(a));
+        assert!(reg.contains(b));
+        assert_eq!(reg.governor().num_scenes(), 1);
+        let c = reg.add(sharded("chair")).unwrap();
+        assert_eq!(c, 2, "removed ids must not be reused");
+        assert_eq!(reg.ids(), vec![b, c]);
+    }
+
+    #[test]
+    fn live_sessions_block_removal() {
+        let mut reg = SceneRegistry::new(usize::MAX);
+        let id = reg.add(sharded("room")).unwrap();
+        reg.retain(id);
+        reg.retain(id);
+        assert_eq!(reg.sessions(id), 2);
+        let err = reg.remove(id).unwrap_err().to_string();
+        assert!(err.contains("2 live session"), "message: {err}");
+        reg.release(id);
+        assert!(reg.remove(id).is_err(), "one session still holds the scene");
+        reg.release(id);
+        assert!(reg.remove(id).is_ok());
+        assert!(reg.remove(id).is_err(), "double remove must fail");
+    }
+
+    #[test]
+    fn dropping_the_registry_releases_its_scenes() {
+        let s = generate("room", 0.04, 64, 64);
+        let scene = Arc::new(ShardedScene::partition(
+            &s.cloud,
+            s.intrinsics,
+            &ShardConfig {
+                target_splats: 200,
+                budget_bytes: 777_777,
+            },
+        ));
+        {
+            let mut reg = SceneRegistry::new(usize::MAX);
+            let id = reg.add(Arc::clone(&scene)).unwrap();
+            reg.retain(id); // live sessions don't leak the lease either
+            assert_eq!(scene.residency_budget(), usize::MAX);
+        }
+        // Lease released, budget restored, re-registration works.
+        assert_eq!(scene.residency_budget(), 777_777);
+        let mut reg2 = SceneRegistry::new(usize::MAX);
+        assert!(reg2.add(scene).is_ok());
+    }
+
+    #[test]
+    fn monolithic_scenes_register_without_governor() {
+        let mut reg = SceneRegistry::new(usize::MAX);
+        let s = generate("chair", 0.03, 64, 64);
+        let id = reg.add(SceneAssets::from_scene(&s)).unwrap();
+        assert_eq!(reg.governor().num_scenes(), 0);
+        let stats = reg.scene_stats(id);
+        assert_eq!(stats.scene, id as u32);
+        assert_eq!(stats.shards, 0);
+        assert_eq!(stats.resident_bytes, 0);
+    }
+
+    #[test]
+    fn scene_stats_reflect_residency() {
+        let mut reg = SceneRegistry::new(usize::MAX);
+        let scene = generate("room", 0.04, 64, 64);
+        let pose = scene.sample_poses(1)[0];
+        let id = reg.add(sharded("room")).unwrap();
+        let handle = reg.retain(id).clone();
+        let sharded = handle.sharded().unwrap();
+        let (mut ids, mut out) = (Vec::new(), Vec::new());
+        sharded.acquire_visible(&pose, &mut ids, &mut out);
+        let stats = reg.scene_stats(id);
+        assert_eq!(stats.sessions, 1);
+        assert!(stats.shards > 0);
+        assert!(stats.resident_bytes > 0);
+        assert!(stats.pinned_bytes > 0);
+        assert!(stats.lifetime_loads > 0);
+        assert_eq!(stats.global_resident_bytes, stats.resident_bytes);
+    }
+}

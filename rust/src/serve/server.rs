@@ -1,0 +1,513 @@
+//! Multi-scene, multi-session stream server: one node serving N scenes
+//! × M viewers.
+//!
+//! The PR-1 server multiplexed sessions over exactly one scene; a fleet
+//! node (multi-robot, multi-site AV, multi-room embodied agents) serves
+//! several worlds at once, and what binds them is **memory**, not
+//! compute — the scheduler already shares one [`WorkerPool`] across
+//! sessions, but each sharded scene used to evict against its own
+//! private byte budget. The rebuilt [`StreamServer`] owns a
+//! [`SceneRegistry`]: scenes register behind stable [`SceneId`]s
+//! (add/remove mid-run, ref-counted so a scene with live sessions can't
+//! be dropped), every sharded scene is attached to the node's one
+//! [`ResidencyGovernor`](super::ResidencyGovernor), and sessions attach
+//! to a `SceneId` while remaining ordinary [`SessionScheduler`] citizens
+//! — pacing, deterministic drains and prefetch-on-idle work identically
+//! whichever scene a session views (prefetch headroom is arbitrated by
+//! the governor, so a cold scene's speculation can't starve a hot
+//! scene's visible set).
+//!
+//! Two driving modes, unchanged from the single-scene server:
+//!
+//! * **Paced** — [`StreamServer::scheduler_mut`] exposes the deadline
+//!   queue directly: push poses, `pump`/`run_for`, read per-session
+//!   lateness counters.
+//! * **Deterministic** — [`StreamServer::step_all`] /
+//!   [`StreamServer::advance_all`] advance every session exactly one
+//!   frame (submit-all-then-drain, session-id order regardless of
+//!   scene). Frames are bit-identical to running the same sessions on
+//!   independent single-scene servers: residency decides only *when*
+//!   bytes are loaded, never what is rendered (enforced in
+//!   `rust/tests/serve.rs`).
+
+use super::registry::{SceneId, SceneRegistry, SceneStats};
+use super::ResidencyGovernor;
+use crate::coordinator::scheduler::{SchedConfig, SessionGuard, SessionId, SessionScheduler};
+use crate::coordinator::session::{CoordinatorConfig, FrameResult, StepSummary, StreamSession};
+use crate::scene::Pose;
+use crate::shard::SceneHandle;
+use crate::util::pool::{default_threads, WorkerPool};
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+
+/// Serves M concurrent [`StreamSession`]s over N registered scenes and
+/// one pool. Scenes may be monolithic (`Arc<SceneAssets>`) or sharded
+/// (`Arc<ShardedScene>`, all arbitrated by one global residency budget)
+/// — sessions are oblivious to which.
+pub struct StreamServer {
+    registry: SceneRegistry,
+    config: CoordinatorConfig,
+    scheduler: SessionScheduler,
+    /// Scene new sessions attach to when none is named (the first
+    /// registered scene; the single-scene constructors' compatibility
+    /// surface).
+    default_scene: Option<SceneId>,
+    /// Scene each session is attached to, indexed by [`SessionId`].
+    session_scene: Vec<Option<SceneId>>,
+}
+
+impl StreamServer {
+    /// New single-scene server with a private worker pool (the PR-1
+    /// shape: the scene registers as the default for `add_session`).
+    pub fn new(scene: impl Into<SceneHandle>, config: CoordinatorConfig) -> StreamServer {
+        StreamServer::with_pool(
+            scene,
+            config,
+            Arc::new(WorkerPool::new(default_threads().saturating_sub(1).max(1))),
+        )
+    }
+
+    /// New single-scene server sharing an existing pool. A sharded
+    /// scene's own residency budget becomes the node's global budget, so
+    /// the PR-2 semantics (evictions against the budget the scene was
+    /// built with) are preserved exactly — the governor then enforces
+    /// the same byte bound with the same pinned-visible-set floor.
+    pub fn with_pool(
+        scene: impl Into<SceneHandle>,
+        config: CoordinatorConfig,
+        pool: Arc<WorkerPool>,
+    ) -> StreamServer {
+        let handle: SceneHandle = scene.into();
+        let budget = match &handle {
+            SceneHandle::Sharded(s) => Some(s.residency_budget()),
+            SceneHandle::Monolithic(_) => None,
+        };
+        let mut server = StreamServer::multi_with_pool(config, budget, pool);
+        server
+            .add_scene(handle)
+            .expect("scene is already governed by another server");
+        server
+    }
+
+    /// New multi-scene server with no scenes yet. `global_budget_bytes`
+    /// bounds the *sum* of resident bytes across every sharded scene
+    /// later registered (`None` = unlimited); sessions then attach per
+    /// scene via [`StreamServer::add_session_on`].
+    pub fn multi(config: CoordinatorConfig, global_budget_bytes: Option<usize>) -> StreamServer {
+        StreamServer::multi_with_pool(
+            config,
+            global_budget_bytes,
+            Arc::new(WorkerPool::new(default_threads().saturating_sub(1).max(1))),
+        )
+    }
+
+    /// Multi-scene server sharing an existing pool.
+    pub fn multi_with_pool(
+        config: CoordinatorConfig,
+        global_budget_bytes: Option<usize>,
+        pool: Arc<WorkerPool>,
+    ) -> StreamServer {
+        StreamServer {
+            registry: SceneRegistry::new(global_budget_bytes.unwrap_or(usize::MAX)),
+            config,
+            scheduler: SessionScheduler::new(pool, SchedConfig::default()),
+            default_scene: None,
+            session_scene: Vec::new(),
+        }
+    }
+
+    // ---- scenes ----------------------------------------------------
+
+    /// Register a scene; the first one becomes the default target of
+    /// [`StreamServer::add_session`]. Sharded scenes join the global
+    /// residency budget; fails if the scene is already governed by
+    /// another server.
+    pub fn add_scene(&mut self, scene: impl Into<SceneHandle>) -> Result<SceneId> {
+        let id = self.registry.add(scene)?;
+        if self.default_scene.is_none() {
+            self.default_scene = Some(id);
+        }
+        Ok(id)
+    }
+
+    /// Unregister a scene (detaching it from the governor) and return
+    /// its handle. Fails while sessions are attached to it — remove
+    /// them first ([`StreamServer::remove_session`]).
+    pub fn remove_scene(&mut self, id: SceneId) -> Result<SceneHandle> {
+        let handle = self.registry.remove(id)?;
+        if self.default_scene == Some(id) {
+            self.default_scene = self.registry.ids().first().copied();
+        }
+        Ok(handle)
+    }
+
+    /// Live scenes.
+    pub fn num_scenes(&self) -> usize {
+        self.registry.len()
+    }
+
+    /// Ids of live scenes, ascending.
+    pub fn scene_ids(&self) -> Vec<SceneId> {
+        self.registry.ids()
+    }
+
+    /// The default scene's handle (single-scene compatibility surface).
+    /// Panics when no scene is registered.
+    pub fn scene(&self) -> &SceneHandle {
+        let id = self.default_scene.expect("no scene registered");
+        self.registry.get(id).expect("default scene was removed")
+    }
+
+    /// A registered scene's handle.
+    pub fn scene_handle(&self, id: SceneId) -> Option<&SceneHandle> {
+        self.registry.get(id)
+    }
+
+    /// The scene a session is attached to.
+    pub fn scene_of(&self, session: SessionId) -> Option<SceneId> {
+        self.session_scene.get(session).copied().flatten()
+    }
+
+    /// Serving statistics of one scene (residency + governor view).
+    pub fn scene_stats(&self, id: SceneId) -> SceneStats {
+        self.registry.scene_stats(id)
+    }
+
+    /// The node's residency governor (global budget, cross-scene
+    /// eviction counters).
+    pub fn governor(&self) -> &Arc<ResidencyGovernor> {
+        self.registry.governor()
+    }
+
+    /// The scene registry (read access).
+    pub fn registry(&self) -> &SceneRegistry {
+        &self.registry
+    }
+
+    // ---- sessions --------------------------------------------------
+
+    /// Open a new viewer session on the default scene; returns its id.
+    pub fn add_session(&mut self) -> SessionId {
+        self.add_session_with(self.config)
+    }
+
+    /// Open a session on the default scene with a per-viewer config
+    /// override.
+    pub fn add_session_with(&mut self, config: CoordinatorConfig) -> SessionId {
+        let scene = self.default_scene.expect("no scene registered");
+        self.add_session_on_with(scene, config)
+    }
+
+    /// Open a session on the default scene with a per-viewer config
+    /// *and* target frame interval (the paced mode's deadline cadence).
+    pub fn add_paced_session(
+        &mut self,
+        config: CoordinatorConfig,
+        interval: std::time::Duration,
+    ) -> SessionId {
+        let scene = self.default_scene.expect("no scene registered");
+        self.add_paced_session_on(scene, config, interval)
+    }
+
+    /// Open a session on a specific scene. Panics on unknown scene ids,
+    /// like indexing.
+    pub fn add_session_on(&mut self, scene: SceneId) -> SessionId {
+        self.add_session_on_with(scene, self.config)
+    }
+
+    /// Open a session on a specific scene with a per-viewer config.
+    pub fn add_session_on_with(&mut self, scene: SceneId, config: CoordinatorConfig) -> SessionId {
+        let session = self.make_session(scene, config);
+        let id = self.scheduler.add(session);
+        self.bind(id, scene);
+        id
+    }
+
+    /// Open a paced session on a specific scene.
+    pub fn add_paced_session_on(
+        &mut self,
+        scene: SceneId,
+        config: CoordinatorConfig,
+        interval: std::time::Duration,
+    ) -> SessionId {
+        let session = self.make_session(scene, config);
+        let id = self.scheduler.add_paced(session, interval);
+        self.bind(id, scene);
+        id
+    }
+
+    /// Close a session: it stops being scheduled (in-flight steps are
+    /// waited out) and its scene reference is released, unblocking
+    /// [`StreamServer::remove_scene`]. False for unknown ids.
+    pub fn remove_session(&mut self, id: SessionId) -> bool {
+        if !self.scheduler.remove(id) {
+            return false;
+        }
+        if let Some(slot) = self.session_scene.get_mut(id) {
+            if let Some(scene) = slot.take() {
+                self.registry.release(scene);
+            }
+        }
+        true
+    }
+
+    fn make_session(&mut self, scene: SceneId, config: CoordinatorConfig) -> StreamSession {
+        let handle = self.registry.retain(scene).clone();
+        StreamSession::new(handle, Arc::clone(self.scheduler.pool()), config)
+    }
+
+    fn bind(&mut self, session: SessionId, scene: SceneId) {
+        if self.session_scene.len() <= session {
+            self.session_scene.resize(session + 1, None);
+        }
+        self.session_scene[session] = Some(scene);
+    }
+
+    pub fn num_sessions(&self) -> usize {
+        self.scheduler.num_sessions()
+    }
+
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        self.scheduler.pool()
+    }
+
+    /// The session scheduler (push poses, read lateness counters).
+    pub fn scheduler(&self) -> &SessionScheduler {
+        &self.scheduler
+    }
+
+    pub fn scheduler_mut(&mut self) -> &mut SessionScheduler {
+        &mut self.scheduler
+    }
+
+    /// Lock a session for direct access (blocks only that session's next
+    /// step). Panics on unknown ids, like indexing.
+    pub fn session(&self, id: SessionId) -> SessionGuard<'_> {
+        self.scheduler.session(id)
+    }
+
+    /// Mutable access to a session (same guard; kept for API parity).
+    pub fn session_mut(&mut self, id: SessionId) -> SessionGuard<'_> {
+        self.scheduler.session(id)
+    }
+
+    // ---- deterministic drivers -------------------------------------
+
+    /// Shared validation for the lockstep-compatible drivers.
+    fn check_poses(&self, poses: &[Pose]) -> Result<()> {
+        ensure!(
+            poses.len() == self.scheduler.num_sessions(),
+            "one pose per session expected: got {} poses for {} sessions",
+            poses.len(),
+            self.scheduler.num_sessions()
+        );
+        Ok(())
+    }
+
+    /// Advance every session one frame (one pose per session, in session
+    /// order — sessions of different scenes interleave freely),
+    /// collecting per-session [`FrameResult`]s whose
+    /// [`FrameTrace`](crate::coordinator::FrameTrace)s feed the `sim::`
+    /// models; each trace carries its scene's [`SceneStats`]. Frames are
+    /// bit-identical to the pre-scheduler lockstep path and to
+    /// independent single-scene servers. Errors when `poses.len()` does
+    /// not match the session count.
+    ///
+    /// Mixing with the paced mode is well-defined: in-flight paced steps
+    /// are waited out (their outcomes surface on the next scheduler
+    /// drain, not here), and sessions consume poses strictly FIFO — a
+    /// pose already queued via [`SessionScheduler::push_pose`] is
+    /// rendered before the one passed here.
+    pub fn try_step_all(&mut self, poses: &[Pose]) -> Result<Vec<FrameResult>> {
+        self.check_poses(poses)?;
+        for (id, pose) in self.scheduler.ids().into_iter().zip(poses) {
+            self.scheduler.push_pose(id, *pose);
+        }
+        Ok(self
+            .scheduler
+            .step_all_pending()
+            .into_iter()
+            .map(|(id, mut r)| {
+                if let Some(scene) = self.scene_of(id) {
+                    r.trace.scene = self.registry.scene_stats(scene);
+                }
+                r
+            })
+            .collect())
+    }
+
+    /// Like [`StreamServer::try_step_all`] but panics on a pose-count
+    /// mismatch (the documented invariant of the lockstep-compatible
+    /// API).
+    pub fn step_all(&mut self, poses: &[Pose]) -> Vec<FrameResult> {
+        self.try_step_all(poses).expect("step_all")
+    }
+
+    /// Advance every session one frame on the lean allocation-light path
+    /// (no traces, no frame clones); read frames back via
+    /// [`StreamServer::session`]. Returns per-session summaries in
+    /// session order. Errors when `poses.len()` does not match the
+    /// session count.
+    pub fn try_advance_all(&mut self, poses: &[Pose]) -> Result<Vec<StepSummary>> {
+        self.check_poses(poses)?;
+        for (id, pose) in self.scheduler.ids().into_iter().zip(poses) {
+            self.scheduler.push_pose(id, *pose);
+        }
+        Ok(self
+            .scheduler
+            .advance_all_pending()
+            .into_iter()
+            .map(|(_, s)| s)
+            .collect())
+    }
+
+    /// Like [`StreamServer::try_advance_all`] but panics on a pose-count
+    /// mismatch (the documented invariant of the lockstep-compatible
+    /// API).
+    pub fn advance_all(&mut self, poses: &[Pose]) -> Vec<StepSummary> {
+        self.try_advance_all(poses).expect("advance_all")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::FrameKind;
+    use crate::scene::{generate, SceneAssets};
+    use crate::shard::{ShardConfig, ShardedScene};
+
+    #[test]
+    fn sessions_share_one_scene() {
+        let s = generate("room", 0.03, 96, 96);
+        let assets = SceneAssets::from_scene(&s);
+        let mut server = StreamServer::new(Arc::clone(&assets), CoordinatorConfig::default());
+        for _ in 0..3 {
+            server.add_session();
+        }
+        assert_eq!(server.num_sessions(), 3);
+        for id in 0..3 {
+            assert!(std::ptr::eq(
+                server.session(id).renderer().assets().cloud.positions.as_ptr(),
+                assets.cloud.positions.as_ptr()
+            ));
+        }
+    }
+
+    #[test]
+    fn step_all_advances_every_session() {
+        let s = generate("chair", 0.03, 96, 96);
+        let poses = s.sample_poses(4);
+        let mut server = StreamServer::new(SceneAssets::from_scene(&s), CoordinatorConfig::default());
+        for _ in 0..4 {
+            server.add_session();
+        }
+        // Frame 0: everyone renders a key frame at its own pose.
+        let per_session: Vec<Pose> = poses.clone();
+        let results = server.step_all(&per_session);
+        assert_eq!(results.len(), 4);
+        for r in &results {
+            assert_eq!(r.trace.kind, FrameKind::Full);
+            assert!(r.frame.rgb.iter().any(|&v| v > 0.05));
+        }
+        // Frame 1: warped.
+        let results = server.step_all(&per_session);
+        for r in &results {
+            assert_eq!(r.trace.kind, FrameKind::Warped);
+        }
+    }
+
+    #[test]
+    fn advance_all_matches_step_all_frames() {
+        let s = generate("room", 0.03, 96, 96);
+        let poses = s.sample_poses(6);
+        let assets = SceneAssets::from_scene(&s);
+        let mut a = StreamServer::new(Arc::clone(&assets), CoordinatorConfig::default());
+        let mut b = StreamServer::new(assets, CoordinatorConfig::default());
+        a.add_session();
+        a.add_session();
+        b.add_session();
+        b.add_session();
+        for pose in &poses {
+            let pair = [*pose, *pose];
+            let results = a.step_all(&pair);
+            b.advance_all(&pair);
+            for id in 0..2 {
+                assert_eq!(results[id].frame.rgb, b.session(id).frame().rgb);
+            }
+        }
+    }
+
+    #[test]
+    fn pose_count_mismatch_is_an_error_not_a_panic() {
+        let s = generate("room", 0.03, 96, 96);
+        let poses = s.sample_poses(3);
+        let mut server = StreamServer::new(SceneAssets::from_scene(&s), CoordinatorConfig::default());
+        server.add_session();
+        server.add_session();
+        // Both wrappers share one validation path.
+        assert!(server.try_step_all(&poses).is_err());
+        assert!(server.try_advance_all(&poses).is_err());
+        let err = server.try_advance_all(&poses).unwrap_err().to_string();
+        assert!(err.contains("3 poses for 2 sessions"), "message: {err}");
+        // And a valid call still works afterwards.
+        assert_eq!(server.advance_all(&poses[..2]).len(), 2);
+    }
+
+    #[test]
+    fn paced_sessions_report_counters() {
+        let s = generate("room", 0.03, 96, 96);
+        let poses = s.sample_poses(4);
+        let mut server = StreamServer::new(SceneAssets::from_scene(&s), CoordinatorConfig::default());
+        let id = server.add_paced_session(
+            CoordinatorConfig::default(),
+            std::time::Duration::from_micros(100),
+        );
+        for p in &poses {
+            server.scheduler_mut().push_pose(id, *p);
+        }
+        let done = server
+            .scheduler_mut()
+            .run_for(std::time::Duration::from_secs(30));
+        assert_eq!(done.len(), poses.len());
+        let c = server.scheduler().counters(id).unwrap();
+        assert_eq!(c.steps as usize, poses.len());
+    }
+
+    #[test]
+    fn sessions_attach_to_named_scenes_and_refcount_removal() {
+        let room = generate("room", 0.03, 96, 96);
+        let chair = generate("chair", 0.03, 96, 96);
+        let mut server = StreamServer::multi(CoordinatorConfig::default(), None);
+        assert_eq!(server.num_scenes(), 0);
+        let a = server.add_scene(SceneAssets::from_scene(&room)).unwrap();
+        let b = server
+            .add_scene(ShardedScene::partition(
+                &chair.cloud,
+                chair.intrinsics,
+                &ShardConfig {
+                    target_splats: 200,
+                    ..Default::default()
+                },
+            ))
+            .unwrap();
+        let sa = server.add_session_on(a);
+        let sb = server.add_session_on(b);
+        assert_eq!(server.scene_of(sa), Some(a));
+        assert_eq!(server.scene_of(sb), Some(b));
+        // Each session renders its own scene.
+        let results = server.step_all(&[room.sample_poses(1)[0], chair.sample_poses(1)[0]]);
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[1].trace.scene.scene, b as u32);
+        assert!(results[1].trace.scene.shards > 0);
+        assert_eq!(results[0].trace.scene.shards, 0, "monolithic scene");
+        // A scene with a live session cannot be removed …
+        assert!(server.remove_scene(b).is_err());
+        // … until its session is closed.
+        assert!(server.remove_session(sb));
+        assert!(server.remove_scene(b).is_ok());
+        assert_eq!(server.num_scenes(), 1);
+        assert_eq!(server.num_sessions(), 1);
+        // The remaining session still steps.
+        assert_eq!(server.advance_all(&[room.sample_poses(1)[0]]).len(), 1);
+    }
+}

@@ -41,6 +41,6 @@ pub use assets::{ShardAssets, ShardMeta};
 pub use catalog::{FrustumCull, ShardCatalog};
 pub use partition::{partition_cloud, ShardConfig};
 pub use residency::{
-    EnsureOutcome, FileShardStore, MemoryShardStore, ShardResidency, ShardStore,
+    EnsureOutcome, FileShardStore, MemoryShardStore, ShardResidency, ShardStore, StoreKind,
 };
-pub use scene::{SceneHandle, ShardStats, ShardedScene};
+pub use scene::{ResidencyArbiter, SceneHandle, ShardStats, ShardedScene};

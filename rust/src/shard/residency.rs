@@ -16,6 +16,16 @@ use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
+/// Latency class of a store's `load`: a memory store clones an `Arc`,
+/// a file store performs real IO. The per-frame `ShardStats` split
+/// their load-latency counters by this, so the prefetch budget work can
+/// consume a *measured* store-latency signal instead of guessing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StoreKind {
+    Memory,
+    File,
+}
+
 /// Source of shard data. Implementations must be cheap to query for
 /// metadata (always in memory) and able to materialize any shard on
 /// demand.
@@ -25,6 +35,11 @@ pub trait ShardStore: Send + Sync {
     /// Materialize one shard (cheap Arc clone for memory stores, disk IO
     /// for file stores).
     fn load(&self, id: usize) -> Result<Arc<ShardAssets>>;
+    /// Latency class of `load` (defaults to the cheap case so test
+    /// doubles need not care).
+    fn kind(&self) -> StoreKind {
+        StoreKind::Memory
+    }
 }
 
 /// All shards held in memory; `load` is an Arc clone. The baseline store
@@ -227,6 +242,10 @@ impl ShardStore for FileShardStore {
         &self.metas
     }
 
+    fn kind(&self) -> StoreKind {
+        StoreKind::File
+    }
+
     fn load(&self, id: usize) -> Result<Arc<ShardAssets>> {
         let cloud = crate::scene::io::load_cloud(&Self::cloud_path(&self.dir, id))?;
         let path = Self::ids_path(&self.dir, id);
@@ -302,12 +321,55 @@ impl ShardResidency {
         self.budget_bytes
     }
 
+    /// Replace the byte budget. A serve-layer governor lifts the local
+    /// budget to `usize::MAX` while it arbitrates the global one, and
+    /// restores the original on detach; the next `commit` then evicts
+    /// down to whatever is current.
+    pub fn set_budget(&mut self, bytes: usize) {
+        self.budget_bytes = bytes;
+    }
+
     pub fn resident_bytes(&self) -> usize {
         self.resident_bytes
     }
 
     pub fn resident_count(&self) -> usize {
         self.resident_count
+    }
+
+    /// Whether shard `id` is currently resident.
+    pub fn contains(&self, id: usize) -> bool {
+        self.entries[id].is_some()
+    }
+
+    /// Advance the frame clock without pinning anything: everything
+    /// currently resident stops counting as "pinned by the current
+    /// frame", so [`ShardResidency::evict_shard`] may reclaim it.
+    /// Called once at arbiter attach — it closes the pre-first-frame
+    /// window where a clock of 0 made speculative entries unevictable
+    /// (`last_used < clock` can never hold at clock 0).
+    pub fn bump_clock(&mut self) {
+        self.clock += 1;
+    }
+
+    /// Evict one specific shard on an external arbiter's order (the
+    /// serve-layer governor's cross-scene LRU). Refuses — returns `None`
+    /// — when the shard is not resident or was pinned by the current
+    /// frame clock (the visible set of a frame that raced the arbiter's
+    /// victim scan, or a just-committed prefetch), so an arbiter can
+    /// never claw back what a frame is using right now. Returns the
+    /// freed bytes.
+    pub fn evict_shard(&mut self, id: usize) -> Option<usize> {
+        match &self.entries[id] {
+            Some(e) if e.last_used < self.clock => {
+                let e = self.entries[id].take().unwrap();
+                self.resident_bytes -= e.assets.bytes;
+                self.resident_count -= 1;
+                self.total_evictions += 1;
+                Some(e.assets.bytes)
+            }
+            _ => None,
+        }
     }
 
     /// Pass 1 of a frame (call under the residency lock): bump the frame
@@ -389,6 +451,34 @@ impl ShardResidency {
         outcome.resident = self.resident_count as u32;
         outcome.resident_bytes = self.resident_bytes as u64;
         outcome
+    }
+
+    /// Variant of [`ShardResidency::commit`] for *governed speculative*
+    /// loads: entries are inserted one clock tick in the past, so an
+    /// external arbiter's [`ShardResidency::evict_shard`] can reclaim
+    /// them immediately — a hot peer scene must be able to take back
+    /// what an idle scene's prefetch reserved (the arbiter's own LRU
+    /// stamps already rank the speculation newest, so it still goes
+    /// last). Already-resident entries are left untouched (a racing
+    /// frame's pin wins), and no eviction pass runs — governed scenes
+    /// have an unlimited local budget; the arbiter owns eviction.
+    /// Returns how many shards were inserted.
+    pub fn commit_speculative(&mut self, loaded: &[(usize, Arc<ShardAssets>)]) -> u32 {
+        let mut inserted = 0;
+        for (id, assets) in loaded {
+            let slot = &mut self.entries[*id];
+            if slot.is_none() {
+                self.resident_bytes += assets.bytes;
+                self.resident_count += 1;
+                self.total_loads += 1;
+                inserted += 1;
+                *slot = Some(ResidentEntry {
+                    assets: Arc::clone(assets),
+                    last_used: self.clock.saturating_sub(1),
+                });
+            }
+        }
+        inserted
     }
 
     /// Append the ids from `ids` that are not currently resident onto

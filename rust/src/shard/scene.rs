@@ -5,8 +5,10 @@
 use super::assets::ShardAssets;
 use super::catalog::ShardCatalog;
 use super::partition::{partition_cloud, ShardConfig};
-use super::residency::{MemoryShardStore, ShardResidency, ShardStore};
+use super::residency::{MemoryShardStore, ShardResidency, ShardStore, StoreKind};
 use crate::scene::{GaussianCloud, Intrinsics, Pose, SceneAssets};
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -22,7 +24,9 @@ pub struct ShardStats {
     pub visible: u32,
     /// Shards loaded from the store this frame.
     pub loaded: u32,
-    /// Shards evicted this frame.
+    /// Shards evicted this frame (local LRU, plus governor-driven
+    /// evictions the frame's commit triggered when the scene is served
+    /// under a global budget).
     pub evicted: u32,
     /// Resident shards after this frame.
     pub resident: u32,
@@ -30,6 +34,49 @@ pub struct ShardStats {
     pub resident_bytes: u64,
     /// Wall-clock of the shard cull + residency stage.
     pub t_cull: Duration,
+    /// Wall-clock spent in `ShardStore::load` this frame for a memory
+    /// store (Arc clones; ~zero unless the allocator stalls).
+    pub t_load_mem: Duration,
+    /// Wall-clock spent in `ShardStore::load` this frame for a
+    /// file-backed store — the *measured* IO-latency signal the
+    /// store-latency-aware prefetch budget consumes.
+    pub t_load_file: Duration,
+}
+
+/// External residency arbiter: the serve layer's governor implements
+/// this to pull a scene's budget decisions up to node level (one global
+/// byte budget across every scene a server hosts). A governed scene
+/// keeps its two-phase pin/load/commit protocol and its own residency
+/// lock for bookkeeping; it merely *reports* residency-changing events
+/// through this trait, and the arbiter sheds over-budget bytes by
+/// calling back into [`ShardedScene::evict_resident`] (bookkeeping only
+/// — no store IO ever happens under the arbiter's lock). Callers must
+/// never invoke arbiter methods while holding a residency lock: the
+/// lock order is arbiter → residency, enforced by keeping every call in
+/// this trait outside the scene's own critical sections.
+pub trait ResidencyArbiter: Send + Sync {
+    /// A frame committed its visible working set `ids` (now resident).
+    /// The arbiter stamps them as the scene's pinned floor, accounts
+    /// newly-loaded bytes, and evicts cross-scene LRU shards until the
+    /// global budget holds. Returns how many shards it evicted.
+    fn frame_committed(&self, slot: usize, ids: &[usize]) -> u32;
+    /// Reserve global-budget headroom for a speculative prefetch of
+    /// `ids` (the predicted visible set): returns the cold subset that
+    /// fits, with its bytes already accounted so concurrent prefetches
+    /// across scenes collectively respect the one budget. Never evicts.
+    fn reserve_prefetch(&self, slot: usize, ids: &[usize]) -> Vec<usize>;
+    /// Settle a reservation from [`ResidencyArbiter::reserve_prefetch`]:
+    /// `loaded = false` releases the reserved bytes of shards that did
+    /// not actually become resident.
+    fn finish_prefetch(&self, slot: usize, ids: &[usize], loaded: bool);
+}
+
+/// A scene's binding to its arbiter (set while registered with one).
+#[derive(Clone)]
+struct ArbiterLease {
+    arbiter: Arc<dyn ResidencyArbiter>,
+    /// The slot the arbiter knows this scene by.
+    slot: usize,
 }
 
 /// A scene served as spatial shards: an always-resident [`ShardCatalog`],
@@ -45,6 +92,15 @@ pub struct ShardedScene {
     intrinsics: Intrinsics,
     total_gaussians: usize,
     total_bytes: usize,
+    /// Set while the scene is registered with a serve-layer governor;
+    /// budget arbitration (eviction + prefetch headroom) then happens
+    /// globally instead of against the local budget.
+    arbiter: Mutex<Option<ArbiterLease>>,
+    /// Lifetime ns spent in `ShardStore::load`, split by store kind
+    /// (render loads + prefetch loads) — the bench-facing aggregate of
+    /// the per-frame `ShardStats` latency split.
+    load_ns_mem: AtomicU64,
+    load_ns_file: AtomicU64,
 }
 
 impl std::fmt::Debug for ShardedScene {
@@ -88,6 +144,9 @@ impl ShardedScene {
             intrinsics,
             total_gaussians,
             total_bytes,
+            arbiter: Mutex::new(None),
+            load_ns_mem: AtomicU64::new(0),
+            load_ns_file: AtomicU64::new(0),
         }
     }
 
@@ -142,18 +201,38 @@ impl ShardedScene {
         // load after the retry is fatal: the render API is infallible and
         // scene data is as load-bearing as program text.
         let mut cold = Vec::new();
-        let outcome = {
+        let mut t_load = Duration::ZERO;
+        let mut outcome = {
             let mut res = self.residency.lock().unwrap();
             res.pin_warm(ids, out, &mut cold);
             if cold.is_empty() {
                 res.commit(&[], out)
             } else {
                 drop(res);
+                let tl = Instant::now();
                 let loaded = super::residency::load_shards(self.store.as_ref(), &cold)
                     .expect("shard store failed to materialize a visible shard");
+                t_load = tl.elapsed();
                 let mut res = self.residency.lock().unwrap();
                 res.commit(&loaded, out)
             }
+        };
+        self.record_load_ns(t_load);
+        // Governed scene: report the committed working set (with every
+        // residency lock released — lock order is arbiter → residency)
+        // so the governor can stamp the pinned floor and shed
+        // over-budget bytes across scenes; refresh the resident counts
+        // the shed may have changed.
+        let lease = self.arbiter.lock().unwrap().clone();
+        if let Some(lease) = lease {
+            outcome.evicted += lease.arbiter.frame_committed(lease.slot, ids);
+            let res = self.residency.lock().unwrap();
+            outcome.resident = res.resident_count() as u32;
+            outcome.resident_bytes = res.resident_bytes() as u64;
+        }
+        let (t_load_mem, t_load_file) = match self.store.kind() {
+            StoreKind::Memory => (t_load, Duration::ZERO),
+            StoreKind::File => (Duration::ZERO, t_load),
         };
         ShardStats {
             total: self.catalog.len() as u32,
@@ -163,6 +242,8 @@ impl ShardedScene {
             resident: outcome.resident,
             resident_bytes: outcome.resident_bytes,
             t_cull: t0.elapsed(),
+            t_load_mem,
+            t_load_file,
         }
     }
 
@@ -182,6 +263,27 @@ impl ShardedScene {
     pub fn prefetch(&self, pose: &Pose) -> u32 {
         let mut ids = Vec::new();
         self.catalog.visible_into(&self.intrinsics, pose, &mut ids);
+        // Governed scene: the governor owns the headroom arithmetic (one
+        // global budget across scenes — a cold scene's speculation must
+        // not starve a hot scene's visible set), reserving bytes up
+        // front so racing prefetches stay collectively under budget.
+        let lease = self.arbiter.lock().unwrap().clone();
+        if let Some(lease) = lease {
+            let cold = lease.arbiter.reserve_prefetch(lease.slot, &ids);
+            if cold.is_empty() {
+                return 0;
+            }
+            return match self.load_and_commit(&cold, true) {
+                Some(n) => {
+                    lease.arbiter.finish_prefetch(lease.slot, &cold, true);
+                    n
+                }
+                None => {
+                    lease.arbiter.finish_prefetch(lease.slot, &cold, false);
+                    0
+                }
+            };
+        }
         let mut cold = Vec::new();
         {
             let res = self.residency.lock().unwrap();
@@ -202,17 +304,121 @@ impl ShardedScene {
         if cold.is_empty() {
             return 0;
         }
-        let loaded = match super::residency::load_shards(self.store.as_ref(), &cold) {
-            Ok(l) => l,
-            Err(_) => return 0, // best-effort: the rendering frame retries
+        self.load_and_commit(&cold, false).unwrap_or(0)
+    }
+
+    /// Load `ids` from the store and commit them (prefetch tail shared
+    /// by the local and governed paths). `None` on load failure —
+    /// best-effort; the rendering frame that needs the shard retries
+    /// with the fatal contract. `speculative` selects the governed
+    /// commit variant: entries land one clock tick in the past so the
+    /// arbiter can reclaim them for a hot peer immediately, instead of
+    /// only after this scene's next frame (the local path keeps the
+    /// documented last-frame-equivalent protection).
+    fn load_and_commit(&self, ids: &[usize], speculative: bool) -> Option<u32> {
+        let tl = Instant::now();
+        let loaded = super::residency::load_shards(self.store.as_ref(), ids).ok()?;
+        self.record_load_ns(tl.elapsed());
+        let mut res = self.residency.lock().unwrap();
+        if speculative {
+            Some(res.commit_speculative(&loaded))
+        } else {
+            let mut scratch = Vec::new();
+            Some(res.commit(&loaded, &mut scratch).loaded)
+        }
+    }
+
+    /// Bank `ShardStore::load` wall-clock into the lifetime per-kind
+    /// counters (relaxed: a monotonic metric, no ordering needed).
+    fn record_load_ns(&self, t: Duration) {
+        if t.is_zero() {
+            return;
+        }
+        let ns = t.as_nanos() as u64;
+        let counter = match self.store.kind() {
+            StoreKind::Memory => &self.load_ns_mem,
+            StoreKind::File => &self.load_ns_file,
         };
-        let mut scratch = Vec::new();
-        let outcome = self
-            .residency
-            .lock()
-            .unwrap()
-            .commit(&loaded, &mut scratch);
-        outcome.loaded
+        counter.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Lifetime ns spent in `ShardStore::load` (memory-store ns,
+    /// file-store ns) — render loads and prefetch loads combined.
+    pub fn load_latency_ns(&self) -> (u64, u64) {
+        (
+            self.load_ns_mem.load(Ordering::Relaxed),
+            self.load_ns_file.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Latency class of the backing store.
+    pub fn store_kind(&self) -> StoreKind {
+        self.store.kind()
+    }
+
+    /// Current resident bytes (takes the residency lock).
+    pub fn resident_bytes(&self) -> usize {
+        self.residency.lock().unwrap().resident_bytes()
+    }
+
+    /// Local residency byte budget (the governed value is `usize::MAX`;
+    /// see [`ShardedScene::attach_arbiter`]).
+    pub fn residency_budget(&self) -> usize {
+        self.residency.lock().unwrap().budget_bytes()
+    }
+
+    /// Replace the local residency budget (the governor restores the
+    /// pre-attach budget here on detach).
+    pub fn set_residency_budget(&self, bytes: usize) {
+        self.residency.lock().unwrap().set_budget(bytes);
+    }
+
+    /// Whether shard `id` is currently resident.
+    pub fn is_shard_resident(&self, id: usize) -> bool {
+        self.residency.lock().unwrap().contains(id)
+    }
+
+    /// Append the ids from `ids` not currently resident onto `cold`
+    /// (arbiter callback; takes the residency lock).
+    pub fn filter_cold_ids(&self, ids: &[usize], cold: &mut Vec<usize>) {
+        self.residency.lock().unwrap().filter_cold(ids, cold);
+    }
+
+    /// Evict one shard on the arbiter's order. `None` when the shard is
+    /// not resident or pinned by the current frame clock (see
+    /// [`ShardResidency::evict_shard`]); `Some(bytes)` otherwise.
+    /// Bookkeeping only — no store IO.
+    pub fn evict_resident(&self, id: usize) -> Option<usize> {
+        self.residency.lock().unwrap().evict_shard(id)
+    }
+
+    /// Bind this scene to an external [`ResidencyArbiter`] under `slot`.
+    /// The local byte budget is lifted to `usize::MAX` — all eviction
+    /// pressure now comes from the arbiter's global budget. Fails if the
+    /// scene is already governed (a scene serves one node at a time).
+    pub fn attach_arbiter(&self, arbiter: Arc<dyn ResidencyArbiter>, slot: usize) -> Result<()> {
+        let mut lease = self.arbiter.lock().unwrap();
+        if lease.is_some() {
+            bail!("scene is already governed by a residency arbiter");
+        }
+        {
+            let mut res = self.residency.lock().unwrap();
+            res.set_budget(usize::MAX);
+            // No frame is in flight at attach: advance the clock so the
+            // arbiter may reclaim anything already resident (and so
+            // speculative commits are evictable even before the scene's
+            // first frame ever ticks the clock).
+            res.bump_clock();
+        }
+        *lease = Some(ArbiterLease { arbiter, slot });
+        Ok(())
+    }
+
+    /// Release the arbiter binding (the caller — the governor's detach —
+    /// restores the local budget via
+    /// [`ShardedScene::set_residency_budget`]).
+    pub fn detach_arbiter(&self) {
+        *self.arbiter.lock().unwrap() = None;
     }
 
     /// Shared handle for the session/server layer.

@@ -7,6 +7,7 @@
 use crate::coordinator::{FrameKind, FrameTrace, SchedStats};
 use crate::render::BalanceStats;
 use crate::scene::Intrinsics;
+use crate::serve::SceneStats;
 use crate::shard::ShardStats;
 
 /// Per-frame workload snapshot for the GPU / accelerator models.
@@ -43,6 +44,10 @@ pub struct WorkloadTrace {
     /// Tile-dispatch load-balance counters (plan quality + steal
     /// fallback activity of the software rasterization fan-out).
     pub balance: BalanceStats,
+    /// Scene-serving counters (multi-scene residency arbitration; all
+    /// zeros for frames produced outside a multi-scene
+    /// [`StreamServer`](crate::serve::StreamServer)).
+    pub scene: SceneStats,
 }
 
 impl WorkloadTrace {
@@ -64,6 +69,7 @@ impl WorkloadTrace {
             shards: trace.render.shards,
             sched: trace.sched,
             balance: trace.render.balance,
+            scene: trace.scene,
         }
     }
 

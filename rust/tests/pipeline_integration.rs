@@ -3,10 +3,8 @@
 //! coordinator↔simulator coupling, scene IO round trips through the
 //! renderer, and failure injection at the subsystem boundaries.
 
-use ls_gaussian::coordinator::{
-    assign_balanced, order_light_to_heavy, CoordinatorConfig, FrameKind, StreamingCoordinator,
-    WarpMode,
-};
+use ls_gaussian::coordinator::{CoordinatorConfig, FrameKind, StreamingCoordinator, WarpMode};
+use ls_gaussian::render::dispatch::{assign_balanced, order_light_to_heavy};
 use ls_gaussian::metrics::{psnr, ssim};
 use ls_gaussian::render::{BinOptions, Frame, IntersectMode, RenderConfig, Renderer};
 use ls_gaussian::scene::{generate, io, Pose};

@@ -272,3 +272,87 @@ fn sharded_session_with_prefetch_drains_cleanly() {
     let c = s.counters(id).unwrap();
     assert_eq!(c.steps as usize, poses.len());
 }
+
+/// Property: the `DeadlineQueue`'s lazy invalidation is sound — after an
+/// arbitrary interleaving of add / remove / reschedule (each push carries
+/// a fresh per-slot sequence number; remove just bumps the sequence), the
+/// pop order exactly matches the model's earliest-due-first order with
+/// FIFO tie-breaking, both for mid-stream `pop_due(now)` calls and for
+/// the final drain.
+#[test]
+fn deadline_queue_pop_order_matches_model_under_churn() {
+    use ls_gaussian::coordinator::scheduler::queue::DeadlineQueue;
+    use ls_gaussian::util::proptest::check;
+    use std::time::Instant;
+
+    const SLOTS: usize = 6;
+    check("deadline queue lazy invalidation", 192, |rng| {
+        let t0 = Instant::now();
+        let at = |ms: usize| t0 + Duration::from_millis(ms as u64);
+        let mut q = DeadlineQueue::new();
+        // Model: per-slot current sequence and, when queued, the valid
+        // entry (due, seq, push order). Stale pushes stay in the heap;
+        // only the model says what is still valid.
+        let mut seq = [0u64; SLOTS];
+        let mut queued: [Option<(usize, u64, u64)>; SLOTS] = [None; SLOTS];
+        let mut pushes = 0u64;
+        let valid = |queued: &[Option<(usize, u64, u64)>; SLOTS], id: usize, s: u64| {
+            queued[id].is_some_and(|(_, vs, _)| vs == s)
+        };
+        // The model's next pop at `now`: earliest due ≤ now, FIFO on ties
+        // (the queue breaks ties by global push order).
+        let expect_pop = |queued: &[Option<(usize, u64, u64)>; SLOTS], now_ms: usize| {
+            (0..SLOTS)
+                .filter_map(|id| queued[id].map(|(due, _, ord)| (due, ord, id)))
+                .filter(|&(due, _, _)| due <= now_ms)
+                .min()
+                .map(|(due, _, id)| (id, due))
+        };
+        for _ in 0..80 {
+            let id = rng.below(SLOTS);
+            match rng.below(4) {
+                0 | 1 => {
+                    // Add or reschedule: a fresh sequence supersedes any
+                    // queued entry for the slot.
+                    let due = rng.below(100);
+                    seq[id] += 1;
+                    pushes += 1;
+                    q.push(id, at(due), seq[id]);
+                    queued[id] = Some((due, seq[id], pushes));
+                }
+                2 => {
+                    // Remove / deterministic-drain invalidation: bump the
+                    // sequence without pushing.
+                    seq[id] += 1;
+                    queued[id] = None;
+                }
+                _ => {
+                    // Mid-stream pop at a random `now`.
+                    let now_ms = rng.below(120);
+                    let got = q.pop_due(at(now_ms), |id, s| valid(&queued, id, s));
+                    let want = expect_pop(&queued, now_ms);
+                    assert_eq!(
+                        got,
+                        want.map(|(id, due)| (id, at(due))),
+                        "pop_due(now={now_ms}) diverged from the model"
+                    );
+                    if let Some((id, _)) = got {
+                        queued[id] = None;
+                    }
+                }
+            }
+        }
+        // Final drain far in the future: full earliest-due FIFO order.
+        while let Some((id, due)) = q.pop_due(at(10_000), |id, s| valid(&queued, id, s)) {
+            let want = expect_pop(&queued, 10_000).expect("queue popped more than the model holds");
+            assert_eq!((id, due), (want.0, at(want.1)), "drain order diverged");
+            queued[id] = None;
+        }
+        assert!(
+            queued.iter().all(Option::is_none),
+            "queue dried up before the model: {queued:?}"
+        );
+        // And the queue really is empty of valid entries now.
+        assert!(q.next_due(|id, s| valid(&queued, id, s)).is_none());
+    });
+}

@@ -1,0 +1,300 @@
+//! Multi-scene serving correctness (ISSUE 5 acceptance criteria):
+//!
+//! 1. **Parity.** Frames rendered through a two-scene `StreamServer`
+//!    under a constrained global budget — with cross-scene evictions
+//!    actually observed — are bit-identical to the same sessions on two
+//!    independent single-scene servers, across every paired
+//!    `ALL_SCENES` entry. Residency (local or governed) decides only
+//!    *when* bytes load, never what is rendered.
+//! 2. **Governor invariants.** Total resident bytes across all scenes
+//!    never exceed the global budget while unpinned victims exist, the
+//!    governor's accounting matches the scenes' ground truth, and a
+//!    scene's pinned visible set is never evicted by another scene's
+//!    load or prefetch.
+//! 3. **Registry semantics.** Scenes add/remove mid-run behind stable
+//!    ids; a scene with live sessions cannot be dropped.
+//!
+//! The pool size honors `LSG_POOL_THREADS` so CI can re-run this file
+//! under a 2-thread pool, like the scheduler/dispatch suites.
+
+use ls_gaussian::coordinator::CoordinatorConfig;
+use ls_gaussian::render::Frame;
+use ls_gaussian::scene::{generate, orbit_poses as orbit, Pose, Scene, ALL_SCENES};
+use ls_gaussian::serve::StreamServer;
+use ls_gaussian::shard::{partition_cloud, MemoryShardStore, SceneHandle, ShardedScene};
+use ls_gaussian::util::pool::{default_threads, WorkerPool};
+use std::sync::Arc;
+
+/// Pool sized by `LSG_POOL_THREADS` (CI matrix) or the machine.
+fn test_pool() -> Arc<WorkerPool> {
+    let threads = std::env::var("LSG_POOL_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or_else(|| default_threads().saturating_sub(1))
+        .max(1);
+    Arc::new(WorkerPool::new(threads))
+}
+
+fn cfg() -> CoordinatorConfig {
+    CoordinatorConfig {
+        threads: 1,
+        ..Default::default()
+    }
+}
+
+/// Partition a generated scene; deterministic, so repeated calls build
+/// byte-identical shard sets (the parity tests rely on this to give the
+/// multi-scene server and the reference servers equal scenes).
+fn shard_scene(scene: &Scene, budget: usize) -> Arc<ShardedScene> {
+    let target = (scene.cloud.len() / 12).max(32);
+    let shards = partition_cloud(&scene.cloud, target);
+    Arc::new(ShardedScene::from_store(
+        Box::new(MemoryShardStore::new(shards)),
+        scene.intrinsics,
+        budget,
+    ))
+}
+
+/// The shared residency-stress orbit (`scene::orbit_poses`): hard view
+/// swings so the visible shard set churns and arbitration happens.
+fn orbit_poses(extent: f32, n: usize) -> Vec<Pose> {
+    orbit(extent, n, 0.0)
+}
+
+fn assert_frames_equal(a: &Frame, b: &Frame, what: &str) {
+    assert_eq!(a.rgb, b.rgb, "{what}: rgb diverged");
+    assert_eq!(a.alpha, b.alpha, "{what}: alpha diverged");
+    assert_eq!(a.depth, b.depth, "{what}: depth diverged");
+    assert_eq!(a.trunc_depth, b.trunc_depth, "{what}: trunc_depth diverged");
+    assert_eq!(a.valid, b.valid, "{what}: valid diverged");
+}
+
+/// Acceptance criterion 1: two-scene serving under a constrained global
+/// budget is bit-identical to independent single-scene servers, for
+/// every consecutive pair of `ALL_SCENES`.
+#[test]
+fn two_scene_server_matches_independent_servers_on_all_scene_pairs() {
+    let frames = 4;
+    let mut total_cross_evictions = 0u64;
+    for pair in ALL_SCENES.chunks(2) {
+        let (name_a, name_b) = (pair[0], *pair.last().unwrap());
+        let scene_a = generate(name_a, 0.02, 128, 96);
+        let scene_b = generate(name_b, 0.02, 128, 96);
+        let poses_a = orbit_poses(scene_a.preset.extent, frames);
+        let poses_b = orbit_poses(scene_b.preset.extent, frames);
+
+        // Multi-scene node: ONE budget at 60% of the combined working
+        // sets, so both scenes cannot be fully resident at once.
+        let sharded_a = shard_scene(&scene_a, usize::MAX);
+        let sharded_b = shard_scene(&scene_b, usize::MAX);
+        let budget = (sharded_a.total_bytes() + sharded_b.total_bytes()) * 3 / 5;
+        let mut multi =
+            StreamServer::multi_with_pool(cfg(), Some(budget), test_pool());
+        let id_a = multi.add_scene(sharded_a).unwrap();
+        let id_b = multi.add_scene(sharded_b).unwrap();
+        multi.add_session_on(id_a);
+        multi.add_session_on(id_b);
+
+        // Reference: the same sessions on independent single-scene
+        // servers with unconstrained budgets.
+        let mut solo_a =
+            StreamServer::with_pool(shard_scene(&scene_a, usize::MAX), cfg(), test_pool());
+        let mut solo_b =
+            StreamServer::with_pool(shard_scene(&scene_b, usize::MAX), cfg(), test_pool());
+        solo_a.add_session();
+        solo_b.add_session();
+
+        for f in 0..frames {
+            let results = multi.step_all(&[poses_a[f], poses_b[f]]);
+            let ra = solo_a.step_all(&[poses_a[f]]);
+            let rb = solo_b.step_all(&[poses_b[f]]);
+            assert_frames_equal(
+                &results[0].frame,
+                &ra[0].frame,
+                &format!("{name_a}+{name_b} frame {f} (scene A)"),
+            );
+            assert_frames_equal(
+                &results[1].frame,
+                &rb[0].frame,
+                &format!("{name_a}+{name_b} frame {f} (scene B)"),
+            );
+            // Traces carry the serving stats of the right scene.
+            assert_eq!(results[0].trace.scene.scene, id_a as u32);
+            assert_eq!(results[1].trace.scene.scene, id_b as u32);
+            assert!(results[0].trace.scene.shards > 0);
+            assert_eq!(
+                results[0].trace.scene.global_budget_bytes,
+                budget as u64
+            );
+            // Governed residency never exceeds the budget while unpinned
+            // victims exist (overshoot is only legal when the pinned
+            // floors alone exceed the budget).
+            let gov = multi.governor();
+            let pinned = multi.scene_stats(id_a).pinned_bytes
+                + multi.scene_stats(id_b).pinned_bytes;
+            assert!(
+                gov.resident_bytes() <= (budget as u64).max(pinned),
+                "{name_a}+{name_b}: resident {} > budget {budget} and pinned {pinned}",
+                gov.resident_bytes()
+            );
+        }
+        total_cross_evictions += multi.governor().counters().cross_scene_evictions;
+    }
+    assert!(
+        total_cross_evictions > 0,
+        "constrained global budgets never caused a cross-scene eviction"
+    );
+}
+
+/// Acceptance criterion: a scene's pinned visible set survives another
+/// scene's loads AND prefetches, and the governor's byte accounting
+/// matches the scenes' ground truth at every step.
+#[test]
+fn pinned_floor_survives_peer_loads_and_prefetch() {
+    let scene_a = generate("room", 0.04, 96, 96);
+    let scene_b = generate("garden", 0.04, 96, 96);
+    let frames = 6;
+    let poses_a = orbit_poses(scene_a.preset.extent, frames);
+    let poses_b = orbit_poses(scene_b.preset.extent, frames);
+    let sharded_a = shard_scene(&scene_a, usize::MAX);
+    let sharded_b = shard_scene(&scene_b, usize::MAX);
+    let budget = (sharded_a.total_bytes() + sharded_b.total_bytes()) / 2;
+
+    let mut server = StreamServer::multi_with_pool(cfg(), Some(budget), test_pool());
+    let id_a = server.add_scene(Arc::clone(&sharded_a)).unwrap();
+    let id_b = server.add_scene(Arc::clone(&sharded_b)).unwrap();
+    let sa = server.add_session_on(id_a);
+    let sb = server.add_session_on(id_b);
+    assert_eq!(server.scene_of(sa), Some(id_a));
+    assert_eq!(server.scene_of(sb), Some(id_b));
+
+    let mut vis = Vec::new();
+    for f in 0..frames {
+        server.step_all(&[poses_a[f], poses_b[f]]);
+        // Ground truth vs governor accounting.
+        let gov = server.governor();
+        assert_eq!(
+            gov.resident_bytes(),
+            (sharded_a.resident_bytes() + sharded_b.resident_bytes()) as u64,
+            "governor accounting diverged from the scenes at frame {f}"
+        );
+        // Both scenes' latest visible sets are fully resident: neither
+        // scene's frame (which loads + sheds) evicted the other's floor.
+        for (scene, pose, label) in [
+            (&sharded_a, &poses_a[f], "A"),
+            (&sharded_b, &poses_b[f], "B"),
+        ] {
+            vis.clear();
+            scene.catalog().visible_into(scene.intrinsics(), pose, &mut vis);
+            assert!(
+                vis.iter().all(|&id| scene.is_shard_resident(id)),
+                "scene {label}'s pinned floor was evicted at frame {f}"
+            );
+        }
+        // A peer's prefetch only fills headroom: A's floor stays
+        // resident and the budget is never exceeded by speculation.
+        let next = poses_b[(f + 1) % frames];
+        let _ = sharded_b.prefetch(&next);
+        let pinned =
+            server.scene_stats(id_a).pinned_bytes + server.scene_stats(id_b).pinned_bytes;
+        assert!(
+            server.governor().resident_bytes() <= (budget as u64).max(pinned),
+            "prefetch pushed residency past the budget at frame {f}"
+        );
+        vis.clear();
+        sharded_a
+            .catalog()
+            .visible_into(sharded_a.intrinsics(), &poses_a[f], &mut vis);
+        assert!(
+            vis.iter().all(|&id| sharded_a.is_shard_resident(id)),
+            "scene B's prefetch evicted scene A's pinned floor at frame {f}"
+        );
+    }
+    // The squeeze was real: cross-scene evictions happened.
+    assert!(server.governor().counters().cross_scene_evictions > 0);
+}
+
+/// Registry semantics: scenes add/remove mid-run behind stable ids; a
+/// scene with live sessions can't be dropped; sessions on surviving
+/// scenes keep rendering through the change.
+#[test]
+fn scenes_add_and_remove_mid_run_with_refcounting() {
+    let scene_a = generate("room", 0.03, 96, 96);
+    let scene_b = generate("chair", 0.03, 96, 96);
+    let scene_c = generate("truck", 0.03, 96, 96);
+    let mut server = StreamServer::multi_with_pool(cfg(), None, test_pool());
+
+    let id_a = server.add_scene(shard_scene(&scene_a, usize::MAX)).unwrap();
+    let id_b = server.add_scene(shard_scene(&scene_b, usize::MAX)).unwrap();
+    let sa = server.add_session_on(id_a);
+    let sb = server.add_session_on(id_b);
+    assert_eq!(server.num_scenes(), 2);
+    assert_eq!(server.governor().num_scenes(), 2);
+
+    let pa = scene_a.sample_poses(2);
+    let pb = scene_b.sample_poses(2);
+    server.step_all(&[pa[0], pb[0]]);
+
+    // Live sessions block removal; ids are stable.
+    assert!(server.remove_scene(id_b).is_err());
+    assert!(server.remove_session(sb));
+    let handle = server.remove_scene(id_b).unwrap();
+    assert!(matches!(handle, SceneHandle::Sharded(_)));
+    assert_eq!(server.num_scenes(), 1);
+    assert_eq!(server.governor().num_scenes(), 1);
+    assert!(server.scene_handle(id_b).is_none());
+    assert!(server.scene_handle(id_a).is_some());
+
+    // Add a third scene mid-run: new id, sessions attach, rendering
+    // continues for everyone.
+    let id_c = server.add_scene(shard_scene(&scene_c, usize::MAX)).unwrap();
+    assert!(id_c > id_b, "scene ids must never be reused");
+    let sc = server.add_session_on(id_c);
+    let pc = scene_c.sample_poses(1);
+    let results = server.step_all(&[pa[1], pc[0]]);
+    assert_eq!(results.len(), 2);
+    assert_eq!(server.scene_of(sa), Some(id_a));
+    assert_eq!(server.scene_of(sc), Some(id_c));
+    assert_eq!(results[1].trace.scene.scene, id_c as u32);
+    assert_eq!(results[1].trace.scene.sessions, 1);
+    // Removing an unknown session is a no-op, not a panic.
+    assert!(!server.remove_session(sb));
+}
+
+/// A monolithic and a sharded scene coexist on one node: the governor
+/// only tracks the sharded one, sessions of both render fine.
+#[test]
+fn monolithic_and_sharded_scenes_coexist() {
+    let mono = generate("playroom", 0.03, 96, 96);
+    let shrd = generate("train", 0.03, 96, 96);
+    let mut server = StreamServer::multi_with_pool(cfg(), None, test_pool());
+    let id_m = server
+        .add_scene(ls_gaussian::scene::SceneAssets::from_scene(&mono))
+        .unwrap();
+    let id_s = server.add_scene(shard_scene(&shrd, usize::MAX)).unwrap();
+    assert_eq!(server.governor().num_scenes(), 1);
+    server.add_session_on(id_m);
+    server.add_session_on(id_s);
+    let results = server.step_all(&[mono.sample_poses(1)[0], shrd.sample_poses(1)[0]]);
+    assert_eq!(results[0].trace.scene.shards, 0);
+    assert!(results[1].trace.scene.shards > 0);
+    assert!(results[0].frame.rgb.iter().any(|&v| v > 0.05));
+    assert!(results[1].frame.rgb.iter().any(|&v| v > 0.05));
+}
+
+/// A sharded scene can serve one node at a time: registering it with a
+/// second server fails cleanly.
+#[test]
+fn scene_cannot_join_two_servers() {
+    let scene = generate("room", 0.03, 96, 96);
+    let sharded = shard_scene(&scene, usize::MAX);
+    let mut one = StreamServer::multi_with_pool(cfg(), None, test_pool());
+    let mut two = StreamServer::multi_with_pool(cfg(), None, test_pool());
+    one.add_scene(Arc::clone(&sharded)).unwrap();
+    assert!(two.add_scene(Arc::clone(&sharded)).is_err());
+    assert_eq!(two.num_scenes(), 0);
+    // Releasing the first server's registration frees the scene.
+    let id = one.scene_ids()[0];
+    one.remove_scene(id).unwrap();
+    assert!(two.add_scene(sharded).is_ok());
+}

@@ -12,7 +12,6 @@
 //!    is shard-oblivious.
 
 use ls_gaussian::coordinator::{CoordinatorConfig, StreamSession};
-use ls_gaussian::math::Vec3;
 use ls_gaussian::render::{Frame, FrameScratch, RenderPass, Renderer};
 use ls_gaussian::scene::{generate, Pose, SceneAssets, ALL_SCENES};
 use ls_gaussian::shard::{
@@ -31,18 +30,9 @@ fn assert_frames_equal(a: &Frame, b: &Frame, what: &str) {
 
 /// Poses that swing the view direction hard around the scene so the
 /// visible shard set actually churns (trajectory sampling at 90 FPS moves
-/// too slowly to exercise residency).
+/// too slowly to exercise residency) — the shared `scene::orbit_poses`.
 fn orbit_poses(extent: f32, n: usize) -> Vec<Pose> {
-    (0..n)
-        .map(|k| {
-            let a = k as f32 / n as f32 * std::f32::consts::TAU;
-            let eye = Vec3::new(extent * 0.55 * a.cos(), -extent * 0.2, extent * 0.55 * a.sin());
-            // Look across the center and out the far side: roughly half
-            // the scene is behind the camera every frame.
-            let target = Vec3::new(-extent * 0.8 * a.cos(), 0.0, -extent * 0.8 * a.sin());
-            Pose::look_at(eye, target, Vec3::new(0.0, -1.0, 0.0))
-        })
-        .collect()
+    ls_gaussian::scene::orbit_poses(extent, n, 0.0)
 }
 
 #[test]
