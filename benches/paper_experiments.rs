@@ -38,6 +38,7 @@ fn main() {
             v.push("sched".to_string());
             v.push("balance".to_string());
             v.push("fleet".to_string());
+            v.push("kernels".to_string());
             v
         }
     };
@@ -83,6 +84,13 @@ fn main() {
                     std::fs::write("BENCH_fleet.json", json.to_string_pretty())
                         .expect("writing BENCH_fleet.json");
                     println!("wrote BENCH_fleet.json");
+                }
+                if id == "kernels" {
+                    // Per-pair kernel record (scalar vs 8-wide SIMD),
+                    // gated alongside streaming.
+                    std::fs::write("BENCH_kernels.json", json.to_string_pretty())
+                        .expect("writing BENCH_kernels.json");
+                    println!("wrote BENCH_kernels.json");
                 }
                 report.set(id, json);
             }

@@ -1279,6 +1279,101 @@ pub fn balance_dispatch(opts: &ExpOptions) -> Json {
     report
 }
 
+/// `kernels` steady state: the scalar reference vs the 8-wide SIMD
+/// per-pair kernels on the generator's dense clustered scenes. Dense
+/// renders every frame so the blend loop dominates; frames are
+/// bit-identical across arms (enforced in `rust/tests/kernel_parity.rs`),
+/// only wall-clock differs. The headline metric is ns per Gaussian-tile
+/// pair inside the blend kernel (`KernelStats::t_blend` over
+/// `PassSummary::pairs`), which isolates the kernel from binning/sort
+/// noise; ms/frame is reported alongside and gated by `bench_gate`.
+/// Written to `BENCH_kernels.json` by the bench binary.
+pub fn kernels_simd(opts: &ExpOptions) -> Json {
+    use crate::coordinator::StreamSession;
+    use crate::render::KernelMode;
+    use crate::util::pool::{default_threads, WorkerPool};
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    let frames = opts.frames.max(10);
+    let warmup = 2usize.min(frames / 2);
+    let threads = default_threads().clamp(2, 8);
+    let mut table = Table::new(
+        "kernels — per-pair hot loops on dense clustered scenes (scalar vs 8-wide SIMD)",
+        &["scene", "kernel", "ms/frame", "ns/pair (blend)", "masked lanes", "speedup"],
+    );
+    let mut report = Json::obj();
+    report
+        .set("frames", frames)
+        .set("threads", threads)
+        .set("warmup", warmup);
+    let mut scenes_rep = Json::obj();
+    for name in ["train", "garden"] {
+        let scene = generate(name, opts.scale, opts.width, opts.height);
+        let assets = SceneAssets::from_scene(&scene);
+        let poses = scene.sample_poses(frames);
+        let mut scene_rep = Json::obj();
+        let mut ns_by_arm = [0.0f64; 2];
+        for (ai, (label, kernel)) in [("scalar", KernelMode::Scalar), ("simd", KernelMode::Simd)]
+            .iter()
+            .enumerate()
+        {
+            let cfg = CoordinatorConfig {
+                warp: WarpMode::None, // dense frames: the blend loop dominates
+                threads,
+                kernel: *kernel,
+                ..Default::default()
+            };
+            let pool = Arc::new(WorkerPool::new(threads.saturating_sub(1).max(1)));
+            let mut session = StreamSession::new(Arc::clone(&assets), pool, cfg);
+            for pose in poses.iter().take(warmup) {
+                session.step(pose); // warm arenas and caches
+            }
+            let measured = frames - warmup;
+            let (mut pairs, mut blend_ns, mut lanes, mut masked) = (0u64, 0u64, 0u64, 0u64);
+            let t0 = Instant::now();
+            for pose in poses.iter().skip(warmup) {
+                session.step(pose);
+                let p = session.last_summary().pass;
+                pairs += p.pairs as u64;
+                blend_ns += p.kernels.t_blend.as_nanos() as u64;
+                lanes += p.kernels.lanes;
+                masked += p.kernels.masked_lanes;
+            }
+            let ms_frame = t0.elapsed().as_secs_f64() * 1e3 / measured as f64;
+            let ns_pair = blend_ns as f64 / (pairs as f64).max(1.0);
+            ns_by_arm[ai] = ns_pair;
+            let masked_frac = masked as f64 / (lanes as f64).max(1.0);
+            table.row(&[
+                name.to_string(),
+                label.to_string(),
+                f2(ms_frame),
+                f2(ns_pair),
+                pct(masked_frac),
+                if ai == 0 {
+                    "—".to_string()
+                } else {
+                    speedup(ns_by_arm[0] / ns_by_arm[1].max(1e-9))
+                },
+            ]);
+            let mut m = Json::obj();
+            m.set("ms_per_frame", ms_frame)
+                .set("ns_per_pair", ns_pair)
+                .set("pairs_per_frame", pairs as f64 / measured as f64)
+                .set("lanes_per_frame", lanes as f64 / measured as f64)
+                .set("masked_lane_fraction", masked_frac);
+            scene_rep.set(label, m);
+        }
+        // Kernel-isolated speedup: the acceptance metric for the SIMD
+        // layer (wall-clock ms/frame dilutes it with binning + sort).
+        scene_rep.set("speedup_ns_per_pair", ns_by_arm[0] / ns_by_arm[1].max(1e-9));
+        scenes_rep.set(name, scene_rep);
+    }
+    report.set("scenes", scenes_rep);
+    table.print();
+    report
+}
+
 /// `fleet` steady state: one multi-scene `StreamServer` serving two
 /// sharded scenes under ONE global residency budget set to 60% of the
 /// combined working sets, with a mixed session load (two viewers on the

@@ -2,8 +2,9 @@
 //! records.
 //!
 //! The bench binary writes `BENCH_streaming.json` (and
-//! `BENCH_balance.json` / `BENCH_fleet.json`, merged by the `bench_gate`
-//! binary under the `"balance"` / `"fleet"` keys) every run; the repo
+//! `BENCH_balance.json` / `BENCH_fleet.json` / `BENCH_kernels.json`,
+//! merged by the `bench_gate` binary under the `"balance"` / `"fleet"` /
+//! `"kernels"` keys) every run; the repo
 //! commits a `BENCH_baseline.json` snapshot of a known-good run at the
 //! same (quick-mode) options.
 //! [`compare`] extracts the steady-state ms/frame metrics from both and
@@ -98,6 +99,27 @@ pub fn extract_metrics(report: &Json) -> Vec<(String, f64)> {
                 {
                     if ms > 0.0 {
                         out.push((format!("balance ms/frame ({scene}, {arm})"), ms));
+                    }
+                }
+            }
+        }
+    }
+    // Kernel-layer steady state (BENCH_kernels.json, merged under
+    // "kernels"): gate both per-pair kernel arms per dense scene so a
+    // regression in either the scalar reference or the SIMD layer (or a
+    // lost SIMD speedup — its arm drifting up to scalar's ms/frame)
+    // trips CI.
+    if let Some(kernels) = report.get("kernels").and_then(|k| k.get("scenes")) {
+        for scene in ["train", "garden"] {
+            for arm in ["scalar", "simd"] {
+                if let Some(ms) = kernels
+                    .get(scene)
+                    .and_then(|s| s.get(arm))
+                    .and_then(|a| a.get("ms_per_frame"))
+                    .and_then(Json::as_f64)
+                {
+                    if ms > 0.0 {
+                        out.push((format!("kernels ms/frame ({scene}, {arm})"), ms));
                     }
                 }
             }
@@ -292,6 +314,26 @@ mod tests {
         // Reports without the balance section still extract the rest
         // (old baselines stay comparable on the intersection).
         assert_eq!(extract_metrics(&report(100.0, 50.0, 25.0)).len(), 4);
+    }
+
+    #[test]
+    fn extracts_kernel_arm_metrics() {
+        let mut r = report(100.0, 50.0, 25.0);
+        let mut sc = Json::obj();
+        sc.set("ms_per_frame", 8.0);
+        let mut si = Json::obj();
+        si.set("ms_per_frame", 5.0);
+        let mut train = Json::obj();
+        train.set("scalar", sc).set("simd", si);
+        let mut scenes = Json::obj();
+        scenes.set("train", train);
+        let mut k = Json::obj();
+        k.set("scenes", scenes);
+        r.set("kernels", k);
+        let m = extract_metrics(&r);
+        let get = |name: &str| m.iter().find(|(n, _)| n == name).unwrap().1;
+        assert!((get("kernels ms/frame (train, scalar)") - 8.0).abs() < 1e-9);
+        assert!((get("kernels ms/frame (train, simd)") - 5.0).abs() < 1e-9);
     }
 
     #[test]

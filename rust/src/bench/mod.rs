@@ -112,10 +112,11 @@ pub const ALL_EXPERIMENTS: [&str; 13] = [
 // (the session-core steady-state benchmark, written to
 // BENCH_streaming.json), "sched" (imbalanced-session pacing steady
 // state, written to BENCH_sched.json), "balance" (naive vs
-// workload-aware tile dispatch, written to BENCH_balance.json) and
-// "fleet" (two scenes x mixed sessions under one global residency
-// budget, written to BENCH_fleet.json) are addressable and in the bench
-// binary's default set but are not paper figures.
+// workload-aware tile dispatch, written to BENCH_balance.json), "fleet"
+// (two scenes x mixed sessions under one global residency budget,
+// written to BENCH_fleet.json) and "kernels" (scalar vs 8-wide SIMD
+// per-pair kernels, written to BENCH_kernels.json) are addressable and
+// in the bench binary's default set but are not paper figures.
 
 /// Run one experiment by id; returns its JSON report.
 pub fn run_experiment(id: &str, opts: &ExpOptions) -> Option<Json> {
@@ -139,6 +140,7 @@ pub fn run_experiment(id: &str, opts: &ExpOptions) -> Option<Json> {
         "sched" => e::sched_pacing(opts),
         "balance" => e::balance_dispatch(opts),
         "fleet" => e::fleet_serving(opts),
+        "kernels" => e::kernels_simd(opts),
         _ => return None,
     };
     Some(json)

@@ -12,8 +12,9 @@
 //!   cargo run --release --bin bench_gate -- --update        # refresh baseline
 //!
 //! `--update` copies the current merged record (streaming + the
-//! `"balance"`/`"fleet"` sections when `BENCH_balance.json` /
-//! `BENCH_fleet.json` exist) into `BENCH_baseline.json` — run it after
+//! `"balance"`/`"fleet"`/`"kernels"` sections when `BENCH_balance.json` /
+//! `BENCH_fleet.json` / `BENCH_kernels.json` exist) into
+//! `BENCH_baseline.json` — run it after
 //! intentional perf changes and commit the result. CI runs `--update`
 //! after the gate and uploads the refreshed baseline as an artifact, so
 //! a committed bootstrap placeholder can be replaced from a real run.
@@ -28,6 +29,7 @@ fn main() {
     let current_path = args.get_or("current", "BENCH_streaming.json");
     let balance_path = args.get_or("balance", "BENCH_balance.json");
     let fleet_path = args.get_or("fleet", "BENCH_fleet.json");
+    let kernels_path = args.get_or("kernels", "BENCH_kernels.json");
     let threshold = args.f32_or("threshold", 0.20) as f64;
 
     let current_text = match std::fs::read_to_string(current_path) {
@@ -50,7 +52,11 @@ fn main() {
     // Merge the tile-dispatch and fleet records when present so their
     // ms/frame metrics ride the same gate (absent file = not measured
     // this run; the gate then fails only if the baseline gates it).
-    for (key, path) in [("balance", balance_path), ("fleet", fleet_path)] {
+    for (key, path) in [
+        ("balance", balance_path),
+        ("fleet", fleet_path),
+        ("kernels", kernels_path),
+    ] {
         match std::fs::read_to_string(path) {
             Ok(t) => match Json::parse(&t) {
                 Ok(section) => {

@@ -8,7 +8,7 @@ use super::{SchedStats, SessionId};
 use crate::coordinator::session::{FrameResult, StepSummary, StreamSession};
 use crate::math::{Quat, Vec3};
 use crate::scene::Pose;
-use crate::shard::SceneHandle;
+use crate::shard::{SceneHandle, ShardedScene};
 use crate::util::pool::WorkerPool;
 use std::collections::VecDeque;
 use std::ops::{Deref, DerefMut};
@@ -56,6 +56,34 @@ pub struct SchedCounters {
     /// Steps that still had to cold-load shards despite a warming
     /// prefetch — the prediction missed (wrong pose, or evicted again).
     pub prefetch_misses: u64,
+    /// Most recent store-latency-aware prefetch cap: the max shards one
+    /// idle tick was allowed to speculatively load, sized so the IO fits
+    /// the session's pacing headroom (0 until the first capped prefetch).
+    pub prefetch_cap: u32,
+}
+
+/// Speculative shards allowed per idle tick before any store load has
+/// been measured (no latency signal yet to size the cap from).
+const DEFAULT_PREFETCH_CAP: u32 = 8;
+
+/// Upper bound on the per-tick speculative set: an effectively-free
+/// memory store would otherwise turn the cap into "everything visible".
+const MAX_PREFETCH_CAP: u32 = 64;
+
+/// Largest speculative shard count whose store IO fits in `headroom`,
+/// sized from the scene's *measured* mean `ShardStore::load` wall-clock
+/// (lifetime ns / lifetime loads). Falls back to
+/// [`DEFAULT_PREFETCH_CAP`] before the first load; always at least 1 —
+/// an idle worker can afford one shard — and at most
+/// [`MAX_PREFETCH_CAP`].
+fn prefetch_cap(headroom: Duration, scene: &ShardedScene) -> u32 {
+    let (mem_ns, file_ns) = scene.load_latency_ns();
+    let (loads, _) = scene.residency_counters();
+    if loads == 0 {
+        return DEFAULT_PREFETCH_CAP;
+    }
+    let per_shard_ns = ((mem_ns + file_ns) / loads).max(1);
+    (headroom.as_nanos() as u64 / per_shard_ns).clamp(1, MAX_PREFETCH_CAP as u64) as u32
 }
 
 /// Poses kept per session for prefetch prediction.
@@ -585,6 +613,10 @@ impl SessionScheduler {
 
     /// Use idle pool capacity to warm shards predicted to enter each
     /// session's frustum (pose extrapolated one frame past the newest).
+    /// Each tick's speculative set is capped by the measured store
+    /// latency: only as many shards as fit the session's pacing headroom
+    /// (time until its next deadline), so a slow store never turns an
+    /// "idle" prefetch into the stall it was meant to prevent.
     fn maybe_prefetch(&mut self) {
         if !self.config.prefetch {
             return;
@@ -593,6 +625,7 @@ impl SessionScheduler {
         if budget == 0 {
             return;
         }
+        let now = Instant::now();
         for slot in self.slots.iter().flatten() {
             if budget == 0 {
                 break;
@@ -601,7 +634,7 @@ impl SessionScheduler {
                 SceneHandle::Sharded(s) => Arc::clone(s),
                 SceneHandle::Monolithic(_) => continue,
             };
-            let predicted = {
+            let (predicted, cap) = {
                 let mut ctl = slot.ctl.lock().unwrap();
                 if ctl.closed || ctl.prefetch_inflight {
                     continue;
@@ -619,13 +652,22 @@ impl SessionScheduler {
                     Some(p) => p,
                     None => continue,
                 };
+                // Pending work must land by its deadline; an idle session
+                // has a whole interval before a new pose could be due.
+                let headroom = if ctl.poses.is_empty() {
+                    ctl.interval
+                } else {
+                    ctl.next_due.saturating_duration_since(now)
+                };
+                let cap = prefetch_cap(headroom, &sharded);
+                ctl.counters.prefetch_cap = cap;
                 ctl.prefetch_inflight = true;
-                predicted
+                (predicted, cap)
             };
             let job_slot = Arc::clone(slot);
             let shared = Arc::clone(&self.shared);
             self.pool.submit(move || {
-                let warmed = sharded.prefetch(&predicted);
+                let warmed = sharded.prefetch_capped(&predicted, cap);
                 {
                     let mut ctl = job_slot.ctl.lock().unwrap();
                     ctl.prefetch_inflight = false;
@@ -805,6 +847,33 @@ mod tests {
             ..Default::default()
         };
         (StreamSession::new(assets, Arc::clone(pool), cfg), poses)
+    }
+
+    #[test]
+    fn prefetch_cap_follows_measured_latency() {
+        use crate::shard::ShardConfig;
+        let scene = generate("room", 0.04, 96, 96);
+        let pose = scene.sample_poses(1)[0];
+        let sharded = ShardedScene::partition(
+            &scene.cloud,
+            scene.intrinsics,
+            &ShardConfig {
+                target_splats: 200,
+                ..Default::default()
+            },
+        );
+        // No load measured yet: no latency signal, default cap.
+        let cold = prefetch_cap(Duration::from_millis(33), &sharded);
+        assert_eq!(cold, DEFAULT_PREFETCH_CAP);
+        // Warm shards so a measured mean load latency exists.
+        assert!(sharded.prefetch(&pose) > 0);
+        // Zero headroom still affords one shard; huge headroom clamps.
+        assert_eq!(prefetch_cap(Duration::ZERO, &sharded), 1);
+        assert!(prefetch_cap(Duration::from_secs(3600), &sharded) <= MAX_PREFETCH_CAP);
+        // More headroom never shrinks the cap.
+        let tight = prefetch_cap(Duration::from_micros(50), &sharded);
+        let loose = prefetch_cap(Duration::from_millis(50), &sharded);
+        assert!(tight <= loose, "cap not monotone: {tight} > {loose}");
     }
 
     #[test]

@@ -23,8 +23,8 @@
 //! closed exactly as in the paper.
 
 use crate::render::{
-    DispatchMode, Frame, FrameScratch, IntersectMode, PassSummary, RenderConfig, RenderPass,
-    RenderStats, Renderer,
+    DispatchMode, Frame, FrameScratch, IntersectMode, KernelMode, PassSummary, RenderConfig,
+    RenderPass, RenderStats, Renderer,
 };
 use crate::scene::{Intrinsics, Pose};
 use crate::shard::SceneHandle;
@@ -85,6 +85,9 @@ pub struct CoordinatorConfig {
     /// Tile dispatch: workload-aware plan (default) or row-major index
     /// order. Frames are bit-identical either way.
     pub dispatch: DispatchMode,
+    /// Per-pair kernel implementation (SIMD default). Frames are
+    /// bit-identical either way; `LSG_FORCE_SCALAR=1` overrides.
+    pub kernel: KernelMode,
 }
 
 impl Default for CoordinatorConfig {
@@ -97,6 +100,7 @@ impl Default for CoordinatorConfig {
             dpes: true,
             threads: 0,
             dispatch: DispatchMode::default(),
+            kernel: KernelMode::default(),
         }
     }
 }
@@ -198,6 +202,7 @@ impl StreamSession {
             mode: config.mode,
             threads: config.threads,
             dispatch: config.dispatch,
+            kernel: config.kernel,
             ..renderer.config
         };
         let (w, h) = (renderer.intrinsics().width, renderer.intrinsics().height);

@@ -8,10 +8,12 @@ pub mod mat;
 pub mod morton;
 pub mod quat;
 pub mod sh;
+pub mod simd;
 pub mod vec;
 
 pub use eigen::{eigvals2x2, Eigen2};
 pub use mat::{Mat3, Mat4};
 pub use morton::{morton_decode2, morton_decode3, morton_encode2, morton_encode3};
 pub use quat::Quat;
+pub use simd::{F32x8, Mask8};
 pub use vec::{Vec2, Vec3, Vec4};

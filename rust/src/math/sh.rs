@@ -11,10 +11,13 @@ pub const fn num_coeffs(degree: usize) -> usize {
 }
 
 // Real SH constants (as in the 3DGS reference implementation).
-const C0: f32 = 0.282_094_79;
-const C1: f32 = 0.488_602_51;
-const C2: [f32; 5] = [1.092_548_4, -1.092_548_4, 0.315_391_57, -1.092_548_4, 0.546_274_2];
-const C3: [f32; 7] = [
+// pub(crate): the SIMD preprocess kernel evaluates the same basis
+// polynomials lane-wise and must use the identical constants.
+pub(crate) const C0: f32 = 0.282_094_79;
+pub(crate) const C1: f32 = 0.488_602_51;
+pub(crate) const C2: [f32; 5] =
+    [1.092_548_4, -1.092_548_4, 0.315_391_57, -1.092_548_4, 0.546_274_2];
+pub(crate) const C3: [f32; 7] = [
     -0.590_043_6,
     2.890_611_4,
     -0.457_045_8,

@@ -1,0 +1,1008 @@
+//! Portable 8-wide f32 SIMD lanes for the per-pair hot loops (ISSUE 6).
+//!
+//! `F32x8`/`Mask8` expose *only* lane-wise operations — add/sub/mul/div/
+//! sqrt/abs/neg, min/max, ordered compares and mask select — so every
+//! lane executes exactly the scalar op sequence. There is deliberately
+//! no horizontal reduction and no FMA: IEEE 754 `+ − × ÷ √` are
+//! correctly rounded, so a lane-wise kernel that keeps the scalar
+//! operation order is **bit-identical** to the scalar kernel (enforced
+//! by `tests/kernel_parity.rs`). Transcendentals (`exp`) have no such
+//! guarantee and stay scalar per lane in the callers.
+//!
+//! Bit-parity contract for `min`/`max`: the second operand must be a
+//! non-NaN value at every call site. Under that contract x86 `minps`
+//! ("return second operand on NaN"), AArch64 `FMINNM` and Rust's scalar
+//! `f32::min` (minNum) all agree bit-for-bit; with a NaN *second*
+//! operand they would not.
+//!
+//! Backends (selected at compile time, no runtime dispatch):
+//!   - x86_64 + AVX2: one `__m256`
+//!   - x86_64 baseline: two SSE2 `__m128`
+//!   - aarch64: two NEON `float32x4_t` (`vminnmq`/`vmaxnmq`, matching
+//!     the scalar FMINNM/FMAXNM that `f32::min`/`max` compile to there)
+//!   - anything else: plain `[f32; 8]` scalar fallback
+
+use std::fmt;
+use std::ops::{Add, BitAnd, BitOr, Div, Mul, Neg, Not, Sub};
+
+/// Eight f32 lanes.
+#[derive(Clone, Copy)]
+pub struct F32x8(imp::V);
+
+/// Per-lane boolean mask produced by the compare operations.
+#[derive(Clone, Copy)]
+pub struct Mask8(imp::M);
+
+impl F32x8 {
+    pub const LANES: usize = 8;
+
+    #[inline(always)]
+    pub fn splat(x: f32) -> F32x8 {
+        F32x8(imp::splat(x))
+    }
+
+    #[inline(always)]
+    pub fn from_array(a: [f32; 8]) -> F32x8 {
+        F32x8(imp::from_array(a))
+    }
+
+    #[inline(always)]
+    pub fn to_array(self) -> [f32; 8] {
+        imp::to_array(self.0)
+    }
+
+    /// `[0.0, 1.0, …, 7.0]` — exact small integers, so
+    /// `splat(base as f32) + iota()` is bitwise `(base + k) as f32` for
+    /// any pixel coordinate (all well below 2²⁴).
+    #[inline(always)]
+    pub fn iota() -> F32x8 {
+        F32x8::from_array([0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0])
+    }
+
+    /// Unaligned load of the first 8 elements of `src`.
+    #[inline(always)]
+    pub fn load(src: &[f32]) -> F32x8 {
+        assert!(src.len() >= 8, "F32x8::load needs 8 elements");
+        // SAFETY: length checked above; loads are unaligned.
+        F32x8(unsafe { imp::load(src.as_ptr()) })
+    }
+
+    /// Unaligned store into the first 8 elements of `dst`.
+    #[inline(always)]
+    pub fn store(self, dst: &mut [f32]) {
+        assert!(dst.len() >= 8, "F32x8::store needs 8 elements");
+        // SAFETY: length checked above; stores are unaligned.
+        unsafe { imp::store(dst.as_mut_ptr(), self.0) }
+    }
+
+    #[inline(always)]
+    pub fn sqrt(self) -> F32x8 {
+        F32x8(imp::sqrt(self.0))
+    }
+
+    #[inline(always)]
+    pub fn abs(self) -> F32x8 {
+        F32x8(imp::abs(self.0))
+    }
+
+    /// Lane-wise minimum. `o` must be non-NaN in every lane (see module
+    /// docs) for bit parity with scalar `f32::min`.
+    #[inline(always)]
+    pub fn min(self, o: F32x8) -> F32x8 {
+        F32x8(imp::min(self.0, o.0))
+    }
+
+    /// Lane-wise maximum. `o` must be non-NaN in every lane (see module
+    /// docs) for bit parity with scalar `f32::max`.
+    #[inline(always)]
+    pub fn max(self, o: F32x8) -> F32x8 {
+        F32x8(imp::max(self.0, o.0))
+    }
+
+    /// Ordered `<` (NaN lanes compare false, like scalar `<`).
+    #[inline(always)]
+    pub fn lt(self, o: F32x8) -> Mask8 {
+        Mask8(imp::lt(self.0, o.0))
+    }
+
+    /// Ordered `<=`.
+    #[inline(always)]
+    pub fn le(self, o: F32x8) -> Mask8 {
+        Mask8(imp::le(self.0, o.0))
+    }
+
+    /// Ordered `>`.
+    #[inline(always)]
+    pub fn gt(self, o: F32x8) -> Mask8 {
+        Mask8(imp::gt(self.0, o.0))
+    }
+
+    /// Ordered `>=`.
+    #[inline(always)]
+    pub fn ge(self, o: F32x8) -> Mask8 {
+        Mask8(imp::ge(self.0, o.0))
+    }
+
+    /// Per-lane `if m { a } else { b }` (bitwise blend; both sides are
+    /// already evaluated, so discarded lanes must be side-effect free).
+    #[inline(always)]
+    pub fn select(m: Mask8, a: F32x8, b: F32x8) -> F32x8 {
+        F32x8(imp::select(m.0, a.0, b.0))
+    }
+}
+
+impl Add for F32x8 {
+    type Output = F32x8;
+    #[inline(always)]
+    fn add(self, o: F32x8) -> F32x8 {
+        F32x8(imp::add(self.0, o.0))
+    }
+}
+
+impl Sub for F32x8 {
+    type Output = F32x8;
+    #[inline(always)]
+    fn sub(self, o: F32x8) -> F32x8 {
+        F32x8(imp::sub(self.0, o.0))
+    }
+}
+
+impl Mul for F32x8 {
+    type Output = F32x8;
+    #[inline(always)]
+    fn mul(self, o: F32x8) -> F32x8 {
+        F32x8(imp::mul(self.0, o.0))
+    }
+}
+
+impl Div for F32x8 {
+    type Output = F32x8;
+    #[inline(always)]
+    fn div(self, o: F32x8) -> F32x8 {
+        F32x8(imp::div(self.0, o.0))
+    }
+}
+
+impl Neg for F32x8 {
+    type Output = F32x8;
+    /// Sign-bit flip, bitwise identical to scalar `-x` (NaNs included).
+    #[inline(always)]
+    fn neg(self) -> F32x8 {
+        F32x8(imp::neg(self.0))
+    }
+}
+
+impl fmt::Debug for F32x8 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "F32x8({:?})", self.to_array())
+    }
+}
+
+impl Mask8 {
+    /// Lane k → bit k.
+    #[inline(always)]
+    pub fn bitmask(self) -> u32 {
+        imp::bitmask(self.0)
+    }
+
+    #[inline(always)]
+    pub fn any(self) -> bool {
+        self.bitmask() != 0
+    }
+
+    #[inline(always)]
+    pub fn all(self) -> bool {
+        self.bitmask() == 0xff
+    }
+
+    /// Number of set lanes.
+    #[inline(always)]
+    pub fn count(self) -> u32 {
+        self.bitmask().count_ones()
+    }
+
+    #[inline(always)]
+    pub fn test(self, lane: usize) -> bool {
+        debug_assert!(lane < 8);
+        (self.bitmask() >> lane) & 1 == 1
+    }
+
+    /// Mask with the first `n` lanes set (`n` is clamped to 8) — the
+    /// tail mask for partial 8-wide chunks.
+    #[inline(always)]
+    pub fn first_n(n: usize) -> Mask8 {
+        // n and the iota lanes are exact small integers in f32.
+        F32x8::iota().lt(F32x8::splat(n.min(8) as f32))
+    }
+}
+
+impl BitAnd for Mask8 {
+    type Output = Mask8;
+    #[inline(always)]
+    fn bitand(self, o: Mask8) -> Mask8 {
+        Mask8(imp::m_and(self.0, o.0))
+    }
+}
+
+impl BitOr for Mask8 {
+    type Output = Mask8;
+    #[inline(always)]
+    fn bitor(self, o: Mask8) -> Mask8 {
+        Mask8(imp::m_or(self.0, o.0))
+    }
+}
+
+impl Not for Mask8 {
+    type Output = Mask8;
+    #[inline(always)]
+    fn not(self) -> Mask8 {
+        Mask8(imp::m_not(self.0))
+    }
+}
+
+impl fmt::Debug for Mask8 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Mask8({:#010b})", self.bitmask())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// x86_64 with AVX2 compiled in: one 256-bit register.
+// ---------------------------------------------------------------------------
+#[cfg(all(target_arch = "x86_64", target_feature = "avx2"))]
+#[allow(unused_unsafe)]
+mod imp {
+    use core::arch::x86_64::*;
+
+    pub type V = __m256;
+    pub type M = __m256;
+
+    #[inline(always)]
+    pub fn splat(x: f32) -> V {
+        unsafe { _mm256_set1_ps(x) }
+    }
+
+    #[inline(always)]
+    pub fn from_array(a: [f32; 8]) -> V {
+        unsafe { _mm256_loadu_ps(a.as_ptr()) }
+    }
+
+    #[inline(always)]
+    pub fn to_array(v: V) -> [f32; 8] {
+        let mut out = [0.0f32; 8];
+        unsafe { _mm256_storeu_ps(out.as_mut_ptr(), v) };
+        out
+    }
+
+    /// SAFETY: caller guarantees 8 readable f32 at `p`.
+    #[inline(always)]
+    pub unsafe fn load(p: *const f32) -> V {
+        _mm256_loadu_ps(p)
+    }
+
+    /// SAFETY: caller guarantees 8 writable f32 at `p`.
+    #[inline(always)]
+    pub unsafe fn store(p: *mut f32, v: V) {
+        _mm256_storeu_ps(p, v)
+    }
+
+    #[inline(always)]
+    pub fn add(a: V, b: V) -> V {
+        unsafe { _mm256_add_ps(a, b) }
+    }
+
+    #[inline(always)]
+    pub fn sub(a: V, b: V) -> V {
+        unsafe { _mm256_sub_ps(a, b) }
+    }
+
+    #[inline(always)]
+    pub fn mul(a: V, b: V) -> V {
+        unsafe { _mm256_mul_ps(a, b) }
+    }
+
+    #[inline(always)]
+    pub fn div(a: V, b: V) -> V {
+        unsafe { _mm256_div_ps(a, b) }
+    }
+
+    #[inline(always)]
+    pub fn sqrt(a: V) -> V {
+        unsafe { _mm256_sqrt_ps(a) }
+    }
+
+    #[inline(always)]
+    pub fn neg(a: V) -> V {
+        unsafe { _mm256_xor_ps(a, _mm256_set1_ps(-0.0)) }
+    }
+
+    #[inline(always)]
+    pub fn abs(a: V) -> V {
+        unsafe { _mm256_andnot_ps(_mm256_set1_ps(-0.0), a) }
+    }
+
+    #[inline(always)]
+    pub fn min(a: V, b: V) -> V {
+        unsafe { _mm256_min_ps(a, b) }
+    }
+
+    #[inline(always)]
+    pub fn max(a: V, b: V) -> V {
+        unsafe { _mm256_max_ps(a, b) }
+    }
+
+    #[inline(always)]
+    pub fn lt(a: V, b: V) -> M {
+        unsafe { _mm256_cmp_ps::<_CMP_LT_OQ>(a, b) }
+    }
+
+    #[inline(always)]
+    pub fn le(a: V, b: V) -> M {
+        unsafe { _mm256_cmp_ps::<_CMP_LE_OQ>(a, b) }
+    }
+
+    #[inline(always)]
+    pub fn gt(a: V, b: V) -> M {
+        unsafe { _mm256_cmp_ps::<_CMP_GT_OQ>(a, b) }
+    }
+
+    #[inline(always)]
+    pub fn ge(a: V, b: V) -> M {
+        unsafe { _mm256_cmp_ps::<_CMP_GE_OQ>(a, b) }
+    }
+
+    #[inline(always)]
+    pub fn select(m: M, a: V, b: V) -> V {
+        // blendv picks its SECOND value where the mask bit is set.
+        unsafe { _mm256_blendv_ps(b, a, m) }
+    }
+
+    #[inline(always)]
+    pub fn m_and(a: M, b: M) -> M {
+        unsafe { _mm256_and_ps(a, b) }
+    }
+
+    #[inline(always)]
+    pub fn m_or(a: M, b: M) -> M {
+        unsafe { _mm256_or_ps(a, b) }
+    }
+
+    #[inline(always)]
+    pub fn m_not(a: M) -> M {
+        unsafe { _mm256_xor_ps(a, _mm256_castsi256_ps(_mm256_set1_epi32(-1))) }
+    }
+
+    #[inline(always)]
+    pub fn bitmask(m: M) -> u32 {
+        (unsafe { _mm256_movemask_ps(m) } as u32) & 0xff
+    }
+}
+
+// ---------------------------------------------------------------------------
+// x86_64 baseline: two SSE2 128-bit halves (SSE2 is part of the x86_64
+// ABI, so no runtime detection is needed).
+// ---------------------------------------------------------------------------
+#[cfg(all(target_arch = "x86_64", not(target_feature = "avx2")))]
+#[allow(unused_unsafe)]
+mod imp {
+    use core::arch::x86_64::*;
+
+    pub type V = (__m128, __m128);
+    pub type M = (__m128, __m128);
+
+    #[inline(always)]
+    pub fn splat(x: f32) -> V {
+        unsafe { (_mm_set1_ps(x), _mm_set1_ps(x)) }
+    }
+
+    #[inline(always)]
+    pub fn from_array(a: [f32; 8]) -> V {
+        unsafe { (_mm_loadu_ps(a.as_ptr()), _mm_loadu_ps(a.as_ptr().add(4))) }
+    }
+
+    #[inline(always)]
+    pub fn to_array(v: V) -> [f32; 8] {
+        let mut out = [0.0f32; 8];
+        unsafe {
+            _mm_storeu_ps(out.as_mut_ptr(), v.0);
+            _mm_storeu_ps(out.as_mut_ptr().add(4), v.1);
+        }
+        out
+    }
+
+    /// SAFETY: caller guarantees 8 readable f32 at `p`.
+    #[inline(always)]
+    pub unsafe fn load(p: *const f32) -> V {
+        (_mm_loadu_ps(p), _mm_loadu_ps(p.add(4)))
+    }
+
+    /// SAFETY: caller guarantees 8 writable f32 at `p`.
+    #[inline(always)]
+    pub unsafe fn store(p: *mut f32, v: V) {
+        _mm_storeu_ps(p, v.0);
+        _mm_storeu_ps(p.add(4), v.1);
+    }
+
+    #[inline(always)]
+    pub fn add(a: V, b: V) -> V {
+        unsafe { (_mm_add_ps(a.0, b.0), _mm_add_ps(a.1, b.1)) }
+    }
+
+    #[inline(always)]
+    pub fn sub(a: V, b: V) -> V {
+        unsafe { (_mm_sub_ps(a.0, b.0), _mm_sub_ps(a.1, b.1)) }
+    }
+
+    #[inline(always)]
+    pub fn mul(a: V, b: V) -> V {
+        unsafe { (_mm_mul_ps(a.0, b.0), _mm_mul_ps(a.1, b.1)) }
+    }
+
+    #[inline(always)]
+    pub fn div(a: V, b: V) -> V {
+        unsafe { (_mm_div_ps(a.0, b.0), _mm_div_ps(a.1, b.1)) }
+    }
+
+    #[inline(always)]
+    pub fn sqrt(a: V) -> V {
+        unsafe { (_mm_sqrt_ps(a.0), _mm_sqrt_ps(a.1)) }
+    }
+
+    #[inline(always)]
+    pub fn neg(a: V) -> V {
+        unsafe {
+            let s = _mm_set1_ps(-0.0);
+            (_mm_xor_ps(a.0, s), _mm_xor_ps(a.1, s))
+        }
+    }
+
+    #[inline(always)]
+    pub fn abs(a: V) -> V {
+        unsafe {
+            let s = _mm_set1_ps(-0.0);
+            (_mm_andnot_ps(s, a.0), _mm_andnot_ps(s, a.1))
+        }
+    }
+
+    #[inline(always)]
+    pub fn min(a: V, b: V) -> V {
+        unsafe { (_mm_min_ps(a.0, b.0), _mm_min_ps(a.1, b.1)) }
+    }
+
+    #[inline(always)]
+    pub fn max(a: V, b: V) -> V {
+        unsafe { (_mm_max_ps(a.0, b.0), _mm_max_ps(a.1, b.1)) }
+    }
+
+    #[inline(always)]
+    pub fn lt(a: V, b: V) -> M {
+        unsafe { (_mm_cmplt_ps(a.0, b.0), _mm_cmplt_ps(a.1, b.1)) }
+    }
+
+    #[inline(always)]
+    pub fn le(a: V, b: V) -> M {
+        unsafe { (_mm_cmple_ps(a.0, b.0), _mm_cmple_ps(a.1, b.1)) }
+    }
+
+    #[inline(always)]
+    pub fn gt(a: V, b: V) -> M {
+        unsafe { (_mm_cmpgt_ps(a.0, b.0), _mm_cmpgt_ps(a.1, b.1)) }
+    }
+
+    #[inline(always)]
+    pub fn ge(a: V, b: V) -> M {
+        unsafe { (_mm_cmpge_ps(a.0, b.0), _mm_cmpge_ps(a.1, b.1)) }
+    }
+
+    #[inline(always)]
+    pub fn select(m: M, a: V, b: V) -> V {
+        // SSE2 has no blendv: (m & a) | (!m & b).
+        unsafe {
+            (
+                _mm_or_ps(_mm_and_ps(m.0, a.0), _mm_andnot_ps(m.0, b.0)),
+                _mm_or_ps(_mm_and_ps(m.1, a.1), _mm_andnot_ps(m.1, b.1)),
+            )
+        }
+    }
+
+    #[inline(always)]
+    pub fn m_and(a: M, b: M) -> M {
+        unsafe { (_mm_and_ps(a.0, b.0), _mm_and_ps(a.1, b.1)) }
+    }
+
+    #[inline(always)]
+    pub fn m_or(a: M, b: M) -> M {
+        unsafe { (_mm_or_ps(a.0, b.0), _mm_or_ps(a.1, b.1)) }
+    }
+
+    #[inline(always)]
+    pub fn m_not(a: M) -> M {
+        unsafe {
+            let ones = _mm_castsi128_ps(_mm_set1_epi32(-1));
+            (_mm_xor_ps(a.0, ones), _mm_xor_ps(a.1, ones))
+        }
+    }
+
+    #[inline(always)]
+    pub fn bitmask(m: M) -> u32 {
+        unsafe { (_mm_movemask_ps(m.0) as u32 & 0xf) | ((_mm_movemask_ps(m.1) as u32 & 0xf) << 4) }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// aarch64: two NEON 128-bit halves. min/max use FMINNM/FMAXNM so lanes
+// match the scalar f32::min/max codegen on this architecture.
+// ---------------------------------------------------------------------------
+#[cfg(target_arch = "aarch64")]
+#[allow(unused_unsafe)]
+mod imp {
+    use core::arch::aarch64::*;
+
+    pub type V = (float32x4_t, float32x4_t);
+    pub type M = (uint32x4_t, uint32x4_t);
+
+    #[inline(always)]
+    pub fn splat(x: f32) -> V {
+        unsafe { (vdupq_n_f32(x), vdupq_n_f32(x)) }
+    }
+
+    #[inline(always)]
+    pub fn from_array(a: [f32; 8]) -> V {
+        unsafe { (vld1q_f32(a.as_ptr()), vld1q_f32(a.as_ptr().add(4))) }
+    }
+
+    #[inline(always)]
+    pub fn to_array(v: V) -> [f32; 8] {
+        let mut out = [0.0f32; 8];
+        unsafe {
+            vst1q_f32(out.as_mut_ptr(), v.0);
+            vst1q_f32(out.as_mut_ptr().add(4), v.1);
+        }
+        out
+    }
+
+    /// SAFETY: caller guarantees 8 readable f32 at `p`.
+    #[inline(always)]
+    pub unsafe fn load(p: *const f32) -> V {
+        (vld1q_f32(p), vld1q_f32(p.add(4)))
+    }
+
+    /// SAFETY: caller guarantees 8 writable f32 at `p`.
+    #[inline(always)]
+    pub unsafe fn store(p: *mut f32, v: V) {
+        vst1q_f32(p, v.0);
+        vst1q_f32(p.add(4), v.1);
+    }
+
+    #[inline(always)]
+    pub fn add(a: V, b: V) -> V {
+        unsafe { (vaddq_f32(a.0, b.0), vaddq_f32(a.1, b.1)) }
+    }
+
+    #[inline(always)]
+    pub fn sub(a: V, b: V) -> V {
+        unsafe { (vsubq_f32(a.0, b.0), vsubq_f32(a.1, b.1)) }
+    }
+
+    #[inline(always)]
+    pub fn mul(a: V, b: V) -> V {
+        unsafe { (vmulq_f32(a.0, b.0), vmulq_f32(a.1, b.1)) }
+    }
+
+    #[inline(always)]
+    pub fn div(a: V, b: V) -> V {
+        unsafe { (vdivq_f32(a.0, b.0), vdivq_f32(a.1, b.1)) }
+    }
+
+    #[inline(always)]
+    pub fn sqrt(a: V) -> V {
+        unsafe { (vsqrtq_f32(a.0), vsqrtq_f32(a.1)) }
+    }
+
+    #[inline(always)]
+    pub fn neg(a: V) -> V {
+        unsafe { (vnegq_f32(a.0), vnegq_f32(a.1)) }
+    }
+
+    #[inline(always)]
+    pub fn abs(a: V) -> V {
+        unsafe { (vabsq_f32(a.0), vabsq_f32(a.1)) }
+    }
+
+    #[inline(always)]
+    pub fn min(a: V, b: V) -> V {
+        unsafe { (vminnmq_f32(a.0, b.0), vminnmq_f32(a.1, b.1)) }
+    }
+
+    #[inline(always)]
+    pub fn max(a: V, b: V) -> V {
+        unsafe { (vmaxnmq_f32(a.0, b.0), vmaxnmq_f32(a.1, b.1)) }
+    }
+
+    #[inline(always)]
+    pub fn lt(a: V, b: V) -> M {
+        unsafe { (vcltq_f32(a.0, b.0), vcltq_f32(a.1, b.1)) }
+    }
+
+    #[inline(always)]
+    pub fn le(a: V, b: V) -> M {
+        unsafe { (vcleq_f32(a.0, b.0), vcleq_f32(a.1, b.1)) }
+    }
+
+    #[inline(always)]
+    pub fn gt(a: V, b: V) -> M {
+        unsafe { (vcgtq_f32(a.0, b.0), vcgtq_f32(a.1, b.1)) }
+    }
+
+    #[inline(always)]
+    pub fn ge(a: V, b: V) -> M {
+        unsafe { (vcgeq_f32(a.0, b.0), vcgeq_f32(a.1, b.1)) }
+    }
+
+    #[inline(always)]
+    pub fn select(m: M, a: V, b: V) -> V {
+        unsafe { (vbslq_f32(m.0, a.0, b.0), vbslq_f32(m.1, a.1, b.1)) }
+    }
+
+    #[inline(always)]
+    pub fn m_and(a: M, b: M) -> M {
+        unsafe { (vandq_u32(a.0, b.0), vandq_u32(a.1, b.1)) }
+    }
+
+    #[inline(always)]
+    pub fn m_or(a: M, b: M) -> M {
+        unsafe { (vorrq_u32(a.0, b.0), vorrq_u32(a.1, b.1)) }
+    }
+
+    #[inline(always)]
+    pub fn m_not(a: M) -> M {
+        unsafe { (vmvnq_u32(a.0), vmvnq_u32(a.1)) }
+    }
+
+    #[inline(always)]
+    pub fn bitmask(m: M) -> u32 {
+        unsafe {
+            let lo = [1u32, 2, 4, 8];
+            let hi = [16u32, 32, 64, 128];
+            let bits_lo = vld1q_u32(lo.as_ptr());
+            let bits_hi = vld1q_u32(hi.as_ptr());
+            vaddvq_u32(vandq_u32(m.0, bits_lo)) | vaddvq_u32(vandq_u32(m.1, bits_hi))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Portable scalar fallback: one scalar op per lane, which is the parity
+// reference by construction.
+// ---------------------------------------------------------------------------
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod imp {
+    pub type V = [f32; 8];
+    pub type M = u8;
+
+    #[inline(always)]
+    fn map2(a: V, b: V, f: impl Fn(f32, f32) -> f32) -> V {
+        let mut out = [0.0f32; 8];
+        for k in 0..8 {
+            out[k] = f(a[k], b[k]);
+        }
+        out
+    }
+
+    #[inline(always)]
+    fn cmp2(a: V, b: V, f: impl Fn(f32, f32) -> bool) -> M {
+        let mut m = 0u8;
+        for k in 0..8 {
+            if f(a[k], b[k]) {
+                m |= 1 << k;
+            }
+        }
+        m
+    }
+
+    #[inline(always)]
+    pub fn splat(x: f32) -> V {
+        [x; 8]
+    }
+
+    #[inline(always)]
+    pub fn from_array(a: [f32; 8]) -> V {
+        a
+    }
+
+    #[inline(always)]
+    pub fn to_array(v: V) -> [f32; 8] {
+        v
+    }
+
+    /// SAFETY: caller guarantees 8 readable f32 at `p`.
+    #[inline(always)]
+    pub unsafe fn load(p: *const f32) -> V {
+        let mut out = [0.0f32; 8];
+        for (k, o) in out.iter_mut().enumerate() {
+            *o = *p.add(k);
+        }
+        out
+    }
+
+    /// SAFETY: caller guarantees 8 writable f32 at `p`.
+    #[inline(always)]
+    pub unsafe fn store(p: *mut f32, v: V) {
+        for (k, x) in v.iter().enumerate() {
+            *p.add(k) = *x;
+        }
+    }
+
+    #[inline(always)]
+    pub fn add(a: V, b: V) -> V {
+        map2(a, b, |x, y| x + y)
+    }
+
+    #[inline(always)]
+    pub fn sub(a: V, b: V) -> V {
+        map2(a, b, |x, y| x - y)
+    }
+
+    #[inline(always)]
+    pub fn mul(a: V, b: V) -> V {
+        map2(a, b, |x, y| x * y)
+    }
+
+    #[inline(always)]
+    pub fn div(a: V, b: V) -> V {
+        map2(a, b, |x, y| x / y)
+    }
+
+    #[inline(always)]
+    pub fn sqrt(a: V) -> V {
+        a.map(|x| x.sqrt())
+    }
+
+    #[inline(always)]
+    pub fn neg(a: V) -> V {
+        a.map(|x| -x)
+    }
+
+    #[inline(always)]
+    pub fn abs(a: V) -> V {
+        a.map(|x| x.abs())
+    }
+
+    #[inline(always)]
+    pub fn min(a: V, b: V) -> V {
+        map2(a, b, |x, y| x.min(y))
+    }
+
+    #[inline(always)]
+    pub fn max(a: V, b: V) -> V {
+        map2(a, b, |x, y| x.max(y))
+    }
+
+    #[inline(always)]
+    pub fn lt(a: V, b: V) -> M {
+        cmp2(a, b, |x, y| x < y)
+    }
+
+    #[inline(always)]
+    pub fn le(a: V, b: V) -> M {
+        cmp2(a, b, |x, y| x <= y)
+    }
+
+    #[inline(always)]
+    pub fn gt(a: V, b: V) -> M {
+        cmp2(a, b, |x, y| x > y)
+    }
+
+    #[inline(always)]
+    pub fn ge(a: V, b: V) -> M {
+        cmp2(a, b, |x, y| x >= y)
+    }
+
+    #[inline(always)]
+    pub fn select(m: M, a: V, b: V) -> V {
+        let mut out = [0.0f32; 8];
+        for k in 0..8 {
+            out[k] = if (m >> k) & 1 == 1 { a[k] } else { b[k] };
+        }
+        out
+    }
+
+    #[inline(always)]
+    pub fn m_and(a: M, b: M) -> M {
+        a & b
+    }
+
+    #[inline(always)]
+    pub fn m_or(a: M, b: M) -> M {
+        a | b
+    }
+
+    #[inline(always)]
+    pub fn m_not(a: M) -> M {
+        !a
+    }
+
+    #[inline(always)]
+    pub fn bitmask(m: M) -> u32 {
+        m as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::hint::black_box;
+
+    /// Edge values for lane-wise parity checks. Subnormals, infinities
+    /// and NaN are included; the scalar reference runs on the exact same
+    /// hardware ops, so results must agree to the bit.
+    const SPECIALS: [f32; 12] = [
+        0.0,
+        -0.0,
+        1.0,
+        -1.0,
+        0.5,
+        -255.25,
+        1.0e-40, // subnormal
+        f32::MIN_POSITIVE,
+        3.0e38,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        f32::NAN,
+    ];
+
+    fn lanes_of(i: usize) -> [f32; 8] {
+        let mut a = [0.0f32; 8];
+        for (k, v) in a.iter_mut().enumerate() {
+            *v = SPECIALS[(i + k) % SPECIALS.len()];
+        }
+        a
+    }
+
+    fn assert_bits(got: [f32; 8], want: [f32; 8], what: &str) {
+        for k in 0..8 {
+            assert_eq!(
+                got[k].to_bits(),
+                want[k].to_bits(),
+                "{what} lane {k}: {} vs {}",
+                got[k],
+                want[k]
+            );
+        }
+    }
+
+    #[test]
+    fn roundtrip_and_load_store() {
+        let a = lanes_of(3);
+        assert_bits(F32x8::from_array(a).to_array(), a, "roundtrip");
+        let buf: Vec<f32> = (0..11).map(|i| i as f32 * 1.5).collect();
+        let v = F32x8::load(&buf[2..]);
+        let mut out = vec![0.0f32; 9];
+        v.store(&mut out[1..]);
+        assert_eq!(&out[1..9], &buf[2..10]);
+    }
+
+    #[test]
+    fn arithmetic_matches_scalar_bits() {
+        for i in 0..SPECIALS.len() {
+            for &s in &SPECIALS {
+                let a = lanes_of(i);
+                let (va, vb) = (F32x8::from_array(a), F32x8::splat(s));
+                let scalar = |f: fn(f32, f32) -> f32| {
+                    let mut w = [0.0f32; 8];
+                    for k in 0..8 {
+                        w[k] = f(black_box(a[k]), black_box(s));
+                    }
+                    w
+                };
+                assert_bits((va + vb).to_array(), scalar(|x, y| x + y), "add");
+                assert_bits((va - vb).to_array(), scalar(|x, y| x - y), "sub");
+                assert_bits((va * vb).to_array(), scalar(|x, y| x * y), "mul");
+                assert_bits((va / vb).to_array(), scalar(|x, y| x / y), "div");
+            }
+        }
+    }
+
+    #[test]
+    fn unary_ops_match_scalar_bits() {
+        for i in 0..SPECIALS.len() {
+            let a = lanes_of(i);
+            let va = F32x8::from_array(a);
+            let mut sq = [0.0f32; 8];
+            let mut ng = [0.0f32; 8];
+            let mut ab = [0.0f32; 8];
+            for k in 0..8 {
+                sq[k] = black_box(a[k]).sqrt();
+                ng[k] = -black_box(a[k]);
+                ab[k] = black_box(a[k]).abs();
+            }
+            assert_bits(va.sqrt().to_array(), sq, "sqrt");
+            assert_bits((-va).to_array(), ng, "neg");
+            assert_bits(va.abs().to_array(), ab, "abs");
+        }
+    }
+
+    #[test]
+    fn min_max_match_scalar_under_contract() {
+        // Contract: second operand non-NaN. First operand may be NaN.
+        for i in 0..SPECIALS.len() {
+            for &s in &SPECIALS {
+                if s.is_nan() {
+                    continue;
+                }
+                let a = lanes_of(i);
+                let (va, vb) = (F32x8::from_array(a), F32x8::splat(s));
+                let mut mn = [0.0f32; 8];
+                let mut mx = [0.0f32; 8];
+                for k in 0..8 {
+                    mn[k] = black_box(a[k]).min(black_box(s));
+                    mx[k] = black_box(a[k]).max(black_box(s));
+                }
+                assert_bits(va.min(vb).to_array(), mn, "min");
+                assert_bits(va.max(vb).to_array(), mx, "max");
+            }
+        }
+    }
+
+    #[test]
+    fn compares_match_scalar_including_nan() {
+        for i in 0..SPECIALS.len() {
+            for &s in &SPECIALS {
+                let a = lanes_of(i);
+                let (va, vb) = (F32x8::from_array(a), F32x8::splat(s));
+                let want = |f: fn(f32, f32) -> bool| {
+                    let mut m = 0u32;
+                    for k in 0..8 {
+                        if f(black_box(a[k]), black_box(s)) {
+                            m |= 1 << k;
+                        }
+                    }
+                    m
+                };
+                assert_eq!(va.lt(vb).bitmask(), want(|x, y| x < y), "lt vs {s}");
+                assert_eq!(va.le(vb).bitmask(), want(|x, y| x <= y), "le vs {s}");
+                assert_eq!(va.gt(vb).bitmask(), want(|x, y| x > y), "gt vs {s}");
+                assert_eq!(va.ge(vb).bitmask(), want(|x, y| x >= y), "ge vs {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn select_blends_per_lane() {
+        let a = F32x8::from_array([1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        let b = F32x8::splat(-1.0);
+        let m = F32x8::iota().lt(F32x8::splat(3.0)); // lanes 0..3
+        let got = F32x8::select(m, a, b).to_array();
+        assert_eq!(got, [1.0, 2.0, 3.0, -1.0, -1.0, -1.0, -1.0, -1.0]);
+        // NaN payloads survive the blend bitwise.
+        let nan = F32x8::splat(f32::NAN);
+        let picked = F32x8::select(m, nan, a).to_array();
+        assert!(picked[0].is_nan() && picked[3] == 4.0);
+    }
+
+    #[test]
+    fn mask_logic_and_queries() {
+        let lo = Mask8::first_n(3);
+        assert_eq!(lo.bitmask(), 0b0000_0111);
+        assert_eq!(lo.count(), 3);
+        assert!(lo.any() && !lo.all());
+        assert!(lo.test(2) && !lo.test(3));
+        assert_eq!((!lo).bitmask(), 0b1111_1000);
+        assert_eq!(Mask8::first_n(0).bitmask(), 0);
+        assert_eq!(Mask8::first_n(8).bitmask(), 0xff);
+        assert!(Mask8::first_n(8).all());
+        assert_eq!(Mask8::first_n(12).bitmask(), 0xff); // clamped
+        let hi = !Mask8::first_n(6);
+        assert_eq!((lo | hi).bitmask(), 0b1100_0111);
+        assert_eq!((lo & hi).bitmask(), 0);
+    }
+
+    #[test]
+    fn iota_is_exact_integers() {
+        let base = 1234usize;
+        let v = (F32x8::splat(base as f32) + F32x8::iota()).to_array();
+        for (k, x) in v.iter().enumerate() {
+            assert_eq!(x.to_bits(), ((base + k) as f32).to_bits());
+        }
+    }
+}

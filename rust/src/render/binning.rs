@@ -39,11 +39,20 @@ impl TileBins {
         self.entries.len()
     }
 
-    /// Per-tile pair counts (the Fig. 5 histogram input).
+    /// Per-tile pair counts (the Fig. 5 histogram input). Allocates —
+    /// repeated callers should reuse a buffer via
+    /// [`TileBins::per_tile_counts_into`].
     pub fn per_tile_counts(&self) -> Vec<u32> {
-        (0..self.num_tiles())
-            .map(|t| self.offsets[t + 1] - self.offsets[t])
-            .collect()
+        let mut out = Vec::new();
+        self.per_tile_counts_into(&mut out);
+        out
+    }
+
+    /// [`TileBins::per_tile_counts`] into a caller-owned buffer (cleared
+    /// first): allocation-free once the buffer's capacity is warm.
+    pub fn per_tile_counts_into(&self, out: &mut Vec<u32>) {
+        out.clear();
+        out.extend((0..self.num_tiles()).map(|t| self.offsets[t + 1] - self.offsets[t]));
     }
 }
 

@@ -1,0 +1,98 @@
+//! Kernel selection and per-pass kernel statistics (ISSUE 6).
+//!
+//! `KernelMode` picks the inner-loop implementation for both per-pair
+//! hot loops (preprocess + rasterize). `Simd` is the default; the two
+//! modes are bit-identical by construction (`tests/kernel_parity.rs`),
+//! so this knob exists for benchmarking (`kernels` bench arm) and as a
+//! CI escape hatch (`LSG_FORCE_SCALAR=1`).
+
+use std::sync::OnceLock;
+use std::time::Duration;
+
+/// Which inner-loop kernels a render pass uses.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelMode {
+    /// One pixel / one Gaussian at a time — the parity reference.
+    Scalar,
+    /// 8-wide lanes over pixel accumulators and preprocess batches
+    /// (`math::simd::F32x8`), bit-identical to `Scalar`.
+    #[default]
+    Simd,
+}
+
+/// `LSG_FORCE_SCALAR=1` pins every pass to the scalar kernels (read
+/// once: `std::env::var` allocates, and the resolve sits on the
+/// zero-alloc frame path).
+fn force_scalar() -> bool {
+    static FORCE: OnceLock<bool> = OnceLock::new();
+    *FORCE.get_or_init(|| std::env::var("LSG_FORCE_SCALAR").map(|v| v == "1").unwrap_or(false))
+}
+
+impl KernelMode {
+    /// The mode actually executed after the CI override.
+    #[inline]
+    pub fn resolve(self) -> KernelMode {
+        if force_scalar() {
+            KernelMode::Scalar
+        } else {
+            self
+        }
+    }
+}
+
+/// Kernel-layer counters for one render pass, riding
+/// `PassSummary` → `StepSummary` → `FrameTrace` like `ShardStats` and
+/// `BalanceStats`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KernelStats {
+    /// Mode the pass actually ran with (post-`resolve`).
+    pub mode: KernelMode,
+    /// SIMD lanes dispatched (preprocess batches + rasterize pixel
+    /// chunks, 8 per chunk). Zero under the scalar kernels.
+    pub lanes: u64,
+    /// Lanes that were dispatched but masked off (tail padding, skipped
+    /// or saturated pixels, culled Gaussians) — the waste metric.
+    pub masked_lanes: u64,
+    /// Time in the preprocess kernel (projection + SH).
+    pub t_preprocess: Duration,
+    /// Time in the blend kernel (tile rasterization).
+    pub t_blend: Duration,
+}
+
+impl KernelStats {
+    /// Fraction of dispatched lanes that did no useful work.
+    pub fn masked_fraction(&self) -> f64 {
+        if self.lanes == 0 {
+            0.0
+        } else {
+            self.masked_lanes as f64 / self.lanes as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_mode_is_simd() {
+        assert_eq!(KernelMode::default(), KernelMode::Simd);
+    }
+
+    #[test]
+    fn scalar_resolves_to_scalar_regardless_of_env() {
+        // The env override only ever forces Scalar, never Simd.
+        assert_eq!(KernelMode::Scalar.resolve(), KernelMode::Scalar);
+    }
+
+    #[test]
+    fn masked_fraction_handles_zero_lanes() {
+        assert_eq!(KernelStats::default().masked_fraction(), 0.0);
+        let s = KernelStats {
+            lanes: 8,
+            masked_lanes: 2,
+            ..Default::default()
+        };
+        assert!((s.masked_fraction() - 0.25).abs() < 1e-12);
+    }
+}

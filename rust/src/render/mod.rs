@@ -16,6 +16,7 @@ pub mod binning;
 pub mod dispatch;
 pub mod framebuffer;
 pub mod intersect;
+pub mod kernel;
 pub mod pass;
 pub mod preprocess;
 pub mod rasterize;
@@ -25,9 +26,10 @@ pub use binning::{bin_splats, bin_splats_into, BinOptions, TileBins};
 pub use dispatch::{BalanceStats, DispatchMode};
 pub use framebuffer::{Frame, INVALID_DEPTH};
 pub use intersect::{IntersectCost, IntersectMode};
+pub use kernel::{KernelMode, KernelStats};
 pub use pass::{PassSummary, RenderPass};
-pub use preprocess::{preprocess, preprocess_into, Splat};
-pub use rasterize::{rasterize_tile, TileRasterOut};
+pub use preprocess::{preprocess, preprocess_into, preprocess_into_simd, PreprocessStage, Splat};
+pub use rasterize::{rasterize_tile, rasterize_tile_simd, rasterize_tile_with, TileRasterOut};
 pub use scratch::FrameScratch;
 
 use crate::math::Vec3;
@@ -52,6 +54,9 @@ pub struct RenderConfig {
     /// order (the pre-LDU pipeline). Either way frames are bit-identical
     /// — the plan changes execution order, never output.
     pub dispatch: DispatchMode,
+    /// Inner-loop kernels for the two per-pair hot loops (default `Simd`;
+    /// bit-identical to `Scalar`, `LSG_FORCE_SCALAR=1` overrides).
+    pub kernel: KernelMode,
     /// Background color blended under residual transmittance.
     pub background: Vec3,
 }
@@ -62,6 +67,7 @@ impl Default for RenderConfig {
             mode: IntersectMode::Aabb,
             threads: 0,
             dispatch: DispatchMode::default(),
+            kernel: KernelMode::default(),
             background: Vec3::ZERO,
         }
     }
@@ -92,6 +98,8 @@ pub struct RenderStats {
     pub shards: ShardStats,
     /// Tile-dispatch load-balance counters (plan quality + steals).
     pub balance: BalanceStats,
+    /// Kernel-layer counters (mode, lanes, masked-lane waste, time split).
+    pub kernels: KernelStats,
     /// Wall-clock per stage.
     pub times: StageTimes,
 }
@@ -144,16 +152,21 @@ struct StatSlabs {
     traversed: *mut u32,
     contributing: *mut u32,
     blend_ops: *mut u64,
+    lanes: *mut u64,
+    masked_lanes: *mut u64,
     tile_ns: *mut u32,
 }
 // SAFETY: each worker writes only index t of each slab, and tiles are
 // distributed disjointly.
 unsafe impl Sync for StatSlabs {}
 
-/// Base pointer for the per-shard splat buffers of the sharded
-/// preprocessing fan-out; worker k writes only slot k.
+/// Base pointers for the per-shard splat buffers and preprocess stages of
+/// the sharded preprocessing fan-out; worker k writes only slot k.
 #[derive(Clone, Copy)]
-struct ShardSlots(*mut Vec<Splat>);
+struct ShardSlots {
+    splats: *mut Vec<Splat>,
+    stages: *mut PreprocessStage,
+}
 // SAFETY: slots are written disjointly (one shard index per worker call).
 unsafe impl Sync for ShardSlots {}
 unsafe impl Send for ShardSlots {}
@@ -351,6 +364,7 @@ impl Renderer {
         let mut summary = self.plan_pass(pose, tile_mask, depth_limits, scratch);
 
         scratch.reset_stats(num_tiles);
+        let kmode = self.config.kernel.resolve();
         let threads = self.threads().min(num_tiles.max(1));
 
         // Workload-aware dispatch plan (Sec. V-B in software): blend the
@@ -392,6 +406,8 @@ impl Renderer {
                 traversed: scratch.traversed.as_mut_ptr(),
                 contributing: scratch.contributing.as_mut_ptr(),
                 blend_ops: scratch.blend_ops.as_mut_ptr(),
+                lanes: scratch.lanes.as_mut_ptr(),
+                masked_lanes: scratch.masked_lanes.as_mut_ptr(),
                 tile_ns: scratch.tile_ns.as_mut_ptr(),
             };
             let bg = self.config.background;
@@ -402,11 +418,14 @@ impl Renderer {
                 let t_tile = Instant::now();
                 // SAFETY: tile t writes only its own pixels / stats slot t.
                 let frame = unsafe { shared_frame.get() };
-                let out = rasterize_tile(splats, bins.tile(t), frame, t, bg, only_invalid);
+                let out =
+                    rasterize_tile_with(kmode, splats, bins.tile(t), frame, t, bg, only_invalid);
                 unsafe {
                     *slabs.traversed.add(t) = out.traversed;
                     *slabs.contributing.add(t) = out.contributing;
                     *slabs.blend_ops.add(t) = out.blend_ops;
+                    *slabs.lanes.add(t) = out.lanes;
+                    *slabs.masked_lanes.add(t) = out.masked_lanes;
                     *slabs.tile_ns.add(t) =
                         t_tile.elapsed().as_nanos().min(u32::MAX as u128) as u32;
                 }
@@ -434,6 +453,12 @@ impl Renderer {
             }
         }
         summary.t_rasterize = t2.elapsed();
+
+        // Fold the blend kernel's per-tile lane counters into the pass
+        // kernel stats (preprocess lanes were stamped by plan_pass).
+        summary.kernels.t_blend = summary.t_rasterize;
+        summary.kernels.lanes += scratch.lanes.iter().sum::<u64>();
+        summary.kernels.masked_lanes += scratch.masked_lanes.iter().sum::<u64>();
 
         // Close the prediction feedback loop (per-tile ns-per-pair rate,
         // comparable across dense/sparse/pixel passes) and stamp the
@@ -489,14 +514,26 @@ impl Renderer {
     ) -> PassSummary {
         let camera = Camera::new(*self.intrinsics(), *pose);
         let grid = self.intrinsics().tile_grid();
+        let kmode = self.config.kernel.resolve();
 
         let t0 = Instant::now();
         let shards = match &self.handle {
             SceneHandle::Monolithic(assets) => {
-                preprocess_into(&assets.cloud, &camera, &mut scratch.splats);
+                match kmode {
+                    KernelMode::Scalar => {
+                        scratch.stage.reset();
+                        preprocess_into(&assets.cloud, &camera, &mut scratch.splats);
+                    }
+                    KernelMode::Simd => preprocess_into_simd(
+                        &assets.cloud,
+                        &camera,
+                        &mut scratch.splats,
+                        &mut scratch.stage,
+                    ),
+                }
                 ShardStats::default()
             }
-            SceneHandle::Sharded(scene) => self.preprocess_sharded(scene, &camera, scratch),
+            SceneHandle::Sharded(scene) => self.preprocess_sharded(scene, &camera, kmode, scratch),
         };
         global_depth_cull(&mut scratch.splats, tile_mask, depth_limits);
         let t_preprocess = t0.elapsed();
@@ -527,6 +564,13 @@ impl Renderer {
             t_rasterize: std::time::Duration::ZERO,
             shards,
             balance: BalanceStats::default(),
+            kernels: KernelStats {
+                mode: kmode,
+                lanes: scratch.stage.lanes,
+                masked_lanes: scratch.stage.masked_lanes,
+                t_preprocess,
+                t_blend: std::time::Duration::ZERO,
+            },
         }
     }
 
@@ -543,6 +587,7 @@ impl Renderer {
         &self,
         scene: &ShardedScene,
         camera: &Camera,
+        kmode: KernelMode,
         scratch: &mut FrameScratch,
     ) -> ShardStats {
         let stats = scene.acquire_visible(
@@ -554,14 +599,27 @@ impl Renderer {
         while scratch.shard_splats.len() < n {
             scratch.shard_splats.push(Vec::new());
         }
+        if scratch.shard_stages.len() < n {
+            scratch.shard_stages.resize(n, PreprocessStage::default());
+        }
         {
             let shards = &scratch.resident_shards;
-            let slots = ShardSlots(scratch.shard_splats.as_mut_ptr());
+            let slots = ShardSlots {
+                splats: scratch.shard_splats.as_mut_ptr(),
+                stages: scratch.shard_stages.as_mut_ptr(),
+            };
             let body = |k: usize| {
-                // SAFETY: each k writes only its own buffer slot.
-                let buf = unsafe { &mut *slots.0.add(k) };
+                // SAFETY: each k writes only its own buffer + stage slot.
+                let buf = unsafe { &mut *slots.splats.add(k) };
+                let stage = unsafe { &mut *slots.stages.add(k) };
                 let shard = &shards[k];
-                preprocess_into(&shard.cloud, camera, buf);
+                match kmode {
+                    KernelMode::Scalar => {
+                        stage.reset();
+                        preprocess_into(&shard.cloud, camera, buf);
+                    }
+                    KernelMode::Simd => preprocess_into_simd(&shard.cloud, camera, buf, stage),
+                }
                 for s in buf.iter_mut() {
                     s.id = shard.global_ids[s.id as usize];
                 }
@@ -574,6 +632,12 @@ impl Renderer {
             } else {
                 self.pool().parallel_for(n, threads, body);
             }
+        }
+        // Fold the per-shard lane counters into the pass-level stage.
+        scratch.stage.reset();
+        for st in &scratch.shard_stages[..n] {
+            scratch.stage.lanes += st.lanes;
+            scratch.stage.masked_lanes += st.masked_lanes;
         }
         // Each per-shard stream is ascending in (unique) global id, so a
         // k-way merge rebuilds exact monolithic cloud order in
@@ -712,17 +776,20 @@ pub fn stats_from_scratch(summary: &PassSummary, scratch: &FrameScratch) -> Rend
     times.add("1_preprocess", summary.t_preprocess);
     times.add("2_sort", summary.t_sort);
     times.add("3_rasterize", summary.t_rasterize);
+    let mut per_tile_pairs = Vec::with_capacity(scratch.bins.num_tiles());
+    scratch.bins.per_tile_counts_into(&mut per_tile_pairs);
     RenderStats {
         n_gaussians: summary.n_gaussians,
         n_splats: summary.n_splats,
         pairs: summary.pairs,
         cost: summary.cost,
-        per_tile_pairs: scratch.bins.per_tile_counts(),
+        per_tile_pairs,
         per_tile_traversed: scratch.traversed.clone(),
         per_tile_contributing: scratch.contributing.clone(),
         per_tile_blend_ops: scratch.blend_ops.clone(),
         shards: summary.shards,
         balance: summary.balance,
+        kernels: summary.kernels,
         times,
     }
 }

@@ -15,6 +15,7 @@
 
 use super::dispatch::BalanceStats;
 use super::intersect::IntersectCost;
+use super::kernel::KernelStats;
 use crate::shard::ShardStats;
 use std::time::Duration;
 
@@ -61,6 +62,9 @@ pub struct PassSummary {
     /// Tile-dispatch load-balance counters (workload-aware plan quality,
     /// steal fallback activity).
     pub balance: BalanceStats,
+    /// Kernel-layer counters (mode, lanes dispatched, masked-lane waste,
+    /// preprocess/blend time split).
+    pub kernels: KernelStats,
 }
 
 impl PassSummary {

@@ -2,7 +2,7 @@
 //! 3D→2D projection of Gaussian centers and covariances, SH color
 //! evaluation, and the per-splat quantities every intersection test needs.
 
-use crate::math::{eigen::eigen2x2, sh, Mat3, Vec2, Vec3};
+use crate::math::{eigen::eigen2x2, sh, F32x8, Mat3, Vec2, Vec3};
 use crate::scene::{Camera, GaussianCloud};
 use crate::ALPHA_THRESHOLD;
 
@@ -209,6 +209,438 @@ fn project_cov(
     )
 }
 
+/// SoA staging for the 8-wide preprocess kernel plus its lane counters.
+///
+/// Lives in `FrameScratch` so steady-state frames allocate nothing; the
+/// gather arrays are overwritten for every batch of 8 Gaussians.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PreprocessStage {
+    px: [f32; 8],
+    py: [f32; 8],
+    pz: [f32; 8],
+    qw: [f32; 8],
+    qx: [f32; 8],
+    qy: [f32; 8],
+    qz: [f32; 8],
+    sx: [f32; 8],
+    sy: [f32; 8],
+    sz: [f32; 8],
+    op: [f32; 8],
+    idx: [usize; 8],
+    /// Lanes dispatched (8 per batch; tail batches still dispatch 8).
+    pub lanes: u64,
+    /// Dispatched lanes that emitted no splat (culled Gaussians or tail
+    /// padding) — the kernel-waste metric.
+    pub masked_lanes: u64,
+}
+
+impl PreprocessStage {
+    /// Zero the lane counters (the gather buffers are overwritten per
+    /// batch and need no reset).
+    pub fn reset(&mut self) {
+        self.lanes = 0;
+        self.masked_lanes = 0;
+    }
+}
+
+/// Three-term dot in the exact association every `Vec3::dot` call site
+/// uses: `(a0*b0 + a1*b1) + a2*b2`. Zero operands must be passed where
+/// the scalar code multiplies by a structural zero (e.g. `Mat3::diag`
+/// columns) so the lane-wise sums stay bit-identical.
+#[inline(always)]
+fn dot3(a0: F32x8, a1: F32x8, a2: F32x8, b0: F32x8, b1: F32x8, b2: F32x8) -> F32x8 {
+    a0 * b0 + a1 * b1 + a2 * b2
+}
+
+/// `f32::clamp` mirror: `if x < min { min } else if x > max { max }`.
+/// NaN lanes pass both selects untouched, exactly like the scalar.
+#[inline(always)]
+fn clamp_v(x: F32x8, min: F32x8, max: F32x8) -> F32x8 {
+    let lo = F32x8::select(x.lt(min), min, x);
+    F32x8::select(lo.gt(max), max, lo)
+}
+
+/// 8-wide [`preprocess_into`]: batches of 8 Gaussians flow through the
+/// same projection / cull / SH pipeline lane-wise, and the survivors are
+/// emitted in cloud order.
+///
+/// Bit-parity argument (`tests/kernel_parity.rs` enforces it):
+/// * every arithmetic expression replicates the scalar code's operation
+///   order, including multiplications by structural zeros (`Mat3::diag`
+///   columns, the Jacobian's zero entries) — lane-wise IEEE ops are then
+///   bit-identical to the scalar ops;
+/// * every scalar branch becomes a NaN-faithful mask (`if x < c` →
+///   `x.lt(c)`, `clamp`/`max`/`normalized` → select chains mirroring the
+///   scalar control flow) combined at the end into one `keep` mask, so
+///   the emitted set matches the scalar cull decisions exactly;
+/// * tail batches duplicate the last Gaussian into the spare lanes; the
+///   emission loop only walks the real lanes, so duplicates never land
+///   in `out`.
+pub fn preprocess_into_simd(
+    cloud: &GaussianCloud,
+    camera: &Camera,
+    out: &mut Vec<Splat>,
+    stage: &mut PreprocessStage,
+) {
+    out.clear();
+    stage.reset();
+    let n = cloud.len();
+    if n == 0 {
+        return;
+    }
+    let w2c = camera.pose.world_to_camera();
+    let rot = w2c.rotation();
+    let intr = &camera.intrinsics;
+    let cam_pos = camera.pose.position;
+    let margin = guard_margin(intr);
+
+    let zero_v = F32x8::splat(0.0);
+    let one_v = F32x8::splat(1.0);
+    let two_v = F32x8::splat(2.0);
+    let three_v = F32x8::splat(3.0);
+    let four_v = F32x8::splat(4.0);
+    let half_v = F32x8::splat(0.5);
+
+    // View transform rows (the scalar `transform_point` dots each row
+    // with (p, 1); the w-term `m[i][3] * 1.0` is exactly `m[i][3]`).
+    let m = &w2c.m;
+    let m00_v = F32x8::splat(m[0][0]);
+    let m01_v = F32x8::splat(m[0][1]);
+    let m02_v = F32x8::splat(m[0][2]);
+    let m03_v = F32x8::splat(m[0][3]);
+    let m10_v = F32x8::splat(m[1][0]);
+    let m11_v = F32x8::splat(m[1][1]);
+    let m12_v = F32x8::splat(m[1][2]);
+    let m13_v = F32x8::splat(m[1][3]);
+    let m20_v = F32x8::splat(m[2][0]);
+    let m21_v = F32x8::splat(m[2][1]);
+    let m22_v = F32x8::splat(m[2][2]);
+    let m23_v = F32x8::splat(m[2][3]);
+    let near_v = F32x8::splat(intr.near);
+    let far_v = F32x8::splat(intr.far);
+    let fx_v = F32x8::splat(intr.fx);
+    let fy_v = F32x8::splat(intr.fy);
+    let cx_v = F32x8::splat(intr.cx);
+    let cy_v = F32x8::splat(intr.cy);
+    let neg_margin_v = F32x8::splat(-margin);
+    let w_marg_v = F32x8::splat(intr.width as f32 + margin);
+    let h_marg_v = F32x8::splat(intr.height as f32 + margin);
+    let w_v = F32x8::splat(intr.width as f32);
+    let h_v = F32x8::splat(intr.height as f32);
+    // Jacobian tangent clamp bounds (same scalar expressions as
+    // `project_cov`, splatted).
+    let lim_x = 1.3 * (intr.width as f32 * 0.5) / intr.fx;
+    let lim_y = 1.3 * (intr.height as f32 * 0.5) / intr.fy;
+    let lim_x_v = F32x8::splat(lim_x);
+    let neg_lim_x_v = F32x8::splat(-lim_x);
+    let lim_y_v = F32x8::splat(lim_y);
+    let neg_lim_y_v = F32x8::splat(-lim_y);
+    let neg_fx_v = F32x8::splat(-intr.fx);
+    let neg_fy_v = F32x8::splat(-intr.fy);
+    let dilation_v = F32x8::splat(COV_DILATION);
+    let tau_v = F32x8::splat(ALPHA_THRESHOLD);
+    let det_lo_v = F32x8::splat(1e-12);
+    let inf_v = F32x8::splat(f32::INFINITY);
+    let qeps_v = F32x8::splat(1e-12);
+    let lfloor_v = F32x8::splat(1e-8);
+    // Camera rotation block, splatted per entry (same for all lanes).
+    let rc00 = F32x8::splat(rot.m[0][0]);
+    let rc01 = F32x8::splat(rot.m[0][1]);
+    let rc02 = F32x8::splat(rot.m[0][2]);
+    let rc10 = F32x8::splat(rot.m[1][0]);
+    let rc11 = F32x8::splat(rot.m[1][1]);
+    let rc12 = F32x8::splat(rot.m[1][2]);
+    let rc20 = F32x8::splat(rot.m[2][0]);
+    let rc21 = F32x8::splat(rot.m[2][1]);
+    let rc22 = F32x8::splat(rot.m[2][2]);
+    let camx_v = F32x8::splat(cam_pos.x);
+    let camy_v = F32x8::splat(cam_pos.y);
+    let camz_v = F32x8::splat(cam_pos.z);
+    // SH basis constants (identical bits to the scalar `sh::eval_basis`).
+    let sc0_v = F32x8::splat(sh::C0);
+    let sc1_v = F32x8::splat(sh::C1);
+    let sc1n_v = F32x8::splat(-sh::C1);
+    let sc2 = [
+        F32x8::splat(sh::C2[0]),
+        F32x8::splat(sh::C2[1]),
+        F32x8::splat(sh::C2[2]),
+        F32x8::splat(sh::C2[3]),
+        F32x8::splat(sh::C2[4]),
+    ];
+    let sc3 = [
+        F32x8::splat(sh::C3[0]),
+        F32x8::splat(sh::C3[1]),
+        F32x8::splat(sh::C3[2]),
+        F32x8::splat(sh::C3[3]),
+        F32x8::splat(sh::C3[4]),
+        F32x8::splat(sh::C3[5]),
+        F32x8::splat(sh::C3[6]),
+    ];
+
+    let degree = cloud.sh_degree;
+    let ncoef = sh::num_coeffs(degree);
+    let stride = cloud.sh_stride();
+
+    let mut base = 0usize;
+    while base < n {
+        let width = (n - base).min(8);
+        for k in 0..8 {
+            // Tail lanes re-read the last Gaussian (never emitted).
+            let i = (base + k).min(n - 1);
+            stage.idx[k] = i;
+            stage.px[k] = cloud.positions[3 * i];
+            stage.py[k] = cloud.positions[3 * i + 1];
+            stage.pz[k] = cloud.positions[3 * i + 2];
+            stage.qw[k] = cloud.rotations[4 * i];
+            stage.qx[k] = cloud.rotations[4 * i + 1];
+            stage.qy[k] = cloud.rotations[4 * i + 2];
+            stage.qz[k] = cloud.rotations[4 * i + 3];
+            stage.sx[k] = cloud.scales[3 * i];
+            stage.sy[k] = cloud.scales[3 * i + 1];
+            stage.sz[k] = cloud.scales[3 * i + 2];
+            stage.op[k] = cloud.opacities[i];
+        }
+        let px = F32x8::from_array(stage.px);
+        let py = F32x8::from_array(stage.py);
+        let pz = F32x8::from_array(stage.pz);
+
+        // --- view transform: p_cam = W2C · (p, 1) ---
+        let cam_x = m00_v * px + m01_v * py + m02_v * pz + m03_v;
+        let cam_y = m10_v * px + m11_v * py + m12_v * pz + m13_v;
+        let cam_z = m20_v * px + m21_v * py + m22_v * pz + m23_v;
+
+        // Frustum cull mirror: scalar skips when z < near || z > far.
+        let keep_nf = !cam_z.lt(near_v) & !cam_z.gt(far_v);
+
+        // --- projection (fx·x/z + cx, exact scalar order) ---
+        let mean_x = fx_v * cam_x / cam_z + cx_v;
+        let mean_y = fy_v * cam_y / cam_z + cy_v;
+
+        // Guard-band test: lanes inside the band never need the rescue
+        // test; out-of-band lanes survive only if the 3σ disc reaches
+        // the frame (computed below once the radius exists).
+        let in_band = !mean_x.lt(neg_margin_v)
+            & !mean_y.lt(neg_margin_v)
+            & !mean_x.gt(w_marg_v)
+            & !mean_y.gt(h_marg_v);
+
+        // --- covariance3d = R S Sᵀ Rᵀ (quaternion renormalized exactly
+        // like `Quat::to_mat3`) ---
+        let qw = F32x8::from_array(stage.qw);
+        let qx = F32x8::from_array(stage.qx);
+        let qy = F32x8::from_array(stage.qy);
+        let qz = F32x8::from_array(stage.qz);
+        let qn = (qw * qw + qx * qx + qy * qy + qz * qz).sqrt();
+        let unit = qn.gt(qeps_v);
+        let nw = F32x8::select(unit, qw / qn, one_v);
+        let nx = F32x8::select(unit, qx / qn, zero_v);
+        let ny = F32x8::select(unit, qy / qn, zero_v);
+        let nz = F32x8::select(unit, qz / qn, zero_v);
+        let r00 = one_v - two_v * (ny * ny + nz * nz);
+        let r01 = two_v * (nx * ny - nw * nz);
+        let r02 = two_v * (nx * nz + nw * ny);
+        let r10 = two_v * (nx * ny + nw * nz);
+        let r11 = one_v - two_v * (nx * nx + nz * nz);
+        let r12 = two_v * (ny * nz - nw * nx);
+        let r20 = two_v * (nx * nz - nw * ny);
+        let r21 = two_v * (ny * nz + nw * nx);
+        let r22 = one_v - two_v * (nx * nx + ny * ny);
+        // rs = R · diag(s): columns of diag(s) carry structural zeros the
+        // scalar dot products still multiply through.
+        let sx = F32x8::from_array(stage.sx);
+        let sy = F32x8::from_array(stage.sy);
+        let sz = F32x8::from_array(stage.sz);
+        let rs00 = dot3(r00, r01, r02, sx, zero_v, zero_v);
+        let rs01 = dot3(r00, r01, r02, zero_v, sy, zero_v);
+        let rs02 = dot3(r00, r01, r02, zero_v, zero_v, sz);
+        let rs10 = dot3(r10, r11, r12, sx, zero_v, zero_v);
+        let rs11 = dot3(r10, r11, r12, zero_v, sy, zero_v);
+        let rs12 = dot3(r10, r11, r12, zero_v, zero_v, sz);
+        let rs20 = dot3(r20, r21, r22, sx, zero_v, zero_v);
+        let rs21 = dot3(r20, r21, r22, zero_v, sy, zero_v);
+        let rs22 = dot3(r20, r21, r22, zero_v, zero_v, sz);
+        // cov3d = rs · rsᵀ: symmetric with bitwise-equal mirror entries
+        // (products commute exactly), so six dots suffice.
+        let c3_00 = dot3(rs00, rs01, rs02, rs00, rs01, rs02);
+        let c3_01 = dot3(rs00, rs01, rs02, rs10, rs11, rs12);
+        let c3_02 = dot3(rs00, rs01, rs02, rs20, rs21, rs22);
+        let c3_11 = dot3(rs10, rs11, rs12, rs10, rs11, rs12);
+        let c3_12 = dot3(rs10, rs11, rs12, rs20, rs21, rs22);
+        let c3_22 = dot3(rs20, rs21, rs22, rs20, rs21, rs22);
+
+        // --- project_cov: Σ' = J W Σ Wᵀ Jᵀ + dilation·I ---
+        let tx = clamp_v(cam_x / cam_z, neg_lim_x_v, lim_x_v) * cam_z;
+        let ty = clamp_v(cam_y / cam_z, neg_lim_y_v, lim_y_v) * cam_z;
+        let z2 = cam_z * cam_z;
+        let j00 = fx_v / cam_z;
+        let j02 = neg_fx_v * tx / z2;
+        let j11 = fy_v / cam_z;
+        let j12 = neg_fy_v * ty / z2;
+        // t = J · W (J rows 0–1 carry structural zeros at [0][1]/[1][0];
+        // row 2 is all-zero and never reaches the output entries).
+        let t00 = dot3(j00, zero_v, j02, rc00, rc10, rc20);
+        let t01 = dot3(j00, zero_v, j02, rc01, rc11, rc21);
+        let t02 = dot3(j00, zero_v, j02, rc02, rc12, rc22);
+        let t10 = dot3(zero_v, j11, j12, rc00, rc10, rc20);
+        let t11 = dot3(zero_v, j11, j12, rc01, rc11, rc21);
+        let t12 = dot3(zero_v, j11, j12, rc02, rc12, rc22);
+        // M = t · cov3d (symmetric gather of cov3d columns).
+        let m00 = dot3(t00, t01, t02, c3_00, c3_01, c3_02);
+        let m01 = dot3(t00, t01, t02, c3_01, c3_11, c3_12);
+        let m02 = dot3(t00, t01, t02, c3_02, c3_12, c3_22);
+        let m10 = dot3(t10, t11, t12, c3_00, c3_01, c3_02);
+        let m11 = dot3(t10, t11, t12, c3_01, c3_11, c3_12);
+        let m12 = dot3(t10, t11, t12, c3_02, c3_12, c3_22);
+        // Σ' = M · tᵀ.
+        let cov_a = dot3(m00, m01, m02, t00, t01, t02) + dilation_v;
+        let cov_b = dot3(m00, m01, m02, t10, t11, t12);
+        let cov_c = dot3(m10, m11, m12, t10, t11, t12) + dilation_v;
+
+        // --- eigenvalues (eigvals2x2 mirror) ---
+        let mid = half_v * (cov_a + cov_c);
+        let half_diff = half_v * (cov_a - cov_c);
+        let radius = (half_diff * half_diff + cov_b * cov_b).max(zero_v).sqrt();
+        let l1 = mid + radius;
+        let l2 = mid - radius;
+
+        // Rescue test for out-of-band lanes: keep anything whose 3σ disc
+        // could still touch the frame (scalar skips when any bound fails).
+        let r3 = three_v * l1.sqrt();
+        let rescue = !(mean_x + r3).lt(zero_v)
+            & !(mean_y + r3).lt(zero_v)
+            & !(mean_x - r3).gt(w_v)
+            & !(mean_y - r3).gt(h_v);
+        let keep_band = in_band | rescue;
+
+        // --- conic (push_splat mirror) ---
+        let det = cov_a * cov_c - cov_b * cov_b;
+        // Scalar culls det <= 1e-12 or non-finite: gt() rejects NaN and
+        // -inf, lt(+inf) rejects +inf.
+        let keep_det = det.gt(det_lo_v) & det.lt(inf_v);
+        let inv = one_v / det;
+        let con_a = cov_c * inv;
+        let con_b = (-cov_b) * inv;
+        let con_c = cov_a * inv;
+        let opacity = F32x8::from_array(stage.op);
+        let keep_op = !opacity.lt(tau_v);
+
+        // --- major axis (eigen2x2 mirror, NaN lanes follow the scalar
+        // else-branches because gt/ge are false on NaN) ---
+        let cond_b = cov_b.abs().gt(F32x8::splat(1e-12));
+        let cond_d = (l1 - cov_a).abs().gt((l1 - cov_c).abs());
+        let vx_b = F32x8::select(cond_d, cov_b, l1 - cov_c);
+        let vy_b = F32x8::select(cond_d, l1 - cov_a, cov_b);
+        let cond_ac = cov_a.ge(cov_c);
+        let vx = F32x8::select(cond_b, vx_b, F32x8::select(cond_ac, one_v, zero_v));
+        let vy = F32x8::select(cond_b, vy_b, F32x8::select(cond_ac, zero_v, one_v));
+        let vn = (vx * vx + vy * vy).sqrt();
+        let v_pos = vn.gt(zero_v);
+        let axis_x = F32x8::select(v_pos, vx / vn, zero_v);
+        let axis_y = F32x8::select(v_pos, vy / vn, zero_v);
+
+        // --- SH color along the camera→Gaussian direction ---
+        let dx = px - camx_v;
+        let dy = py - camy_v;
+        let dz = pz - camz_v;
+        let dn = (dx * dx + dy * dy + dz * dz).sqrt();
+        let d_pos = dn.gt(zero_v);
+        let ux = F32x8::select(d_pos, dx / dn, zero_v);
+        let uy = F32x8::select(d_pos, dy / dn, zero_v);
+        let uz = F32x8::select(d_pos, dz / dn, zero_v);
+        let mut basis = [zero_v; 16];
+        basis[0] = sc0_v;
+        if degree >= 1 {
+            basis[1] = sc1n_v * uy;
+            basis[2] = sc1_v * uz;
+            basis[3] = sc1n_v * ux;
+        }
+        if degree >= 2 {
+            let (xx, yy, zz) = (ux * ux, uy * uy, uz * uz);
+            let (xy, yz, xz) = (ux * uy, uy * uz, ux * uz);
+            basis[4] = sc2[0] * xy;
+            basis[5] = sc2[1] * yz;
+            basis[6] = sc2[2] * (two_v * zz - xx - yy);
+            basis[7] = sc2[3] * xz;
+            basis[8] = sc2[4] * (xx - yy);
+            if degree >= 3 {
+                basis[9] = sc3[0] * uy * (three_v * xx - yy);
+                basis[10] = sc3[1] * xy * uz;
+                basis[11] = sc3[2] * uy * (four_v * zz - xx - yy);
+                basis[12] = sc3[3] * uz * (two_v * zz - three_v * xx - three_v * yy);
+                basis[13] = sc3[4] * ux * (four_v * zz - xx - yy);
+                basis[14] = sc3[5] * uz * (xx - yy);
+                basis[15] = sc3[6] * ux * (xx - three_v * yy);
+            }
+        }
+        // Accumulate exactly like eval_color: start from +0.0 and add
+        // coeff·basis per coefficient, then +0.5 and clamp at zero.
+        let mut acc_r = zero_v;
+        let mut acc_g = zero_v;
+        let mut acc_b = zero_v;
+        let mut cr = [0.0f32; 8];
+        let mut cg = [0.0f32; 8];
+        let mut cb = [0.0f32; 8];
+        for (c, &b) in basis.iter().enumerate().take(ncoef) {
+            for k in 0..8 {
+                let off = stage.idx[k] * stride + c * 3;
+                cr[k] = cloud.sh[off];
+                cg[k] = cloud.sh[off + 1];
+                cb[k] = cloud.sh[off + 2];
+            }
+            acc_r = acc_r + F32x8::from_array(cr) * b;
+            acc_g = acc_g + F32x8::from_array(cg) * b;
+            acc_b = acc_b + F32x8::from_array(cb) * b;
+        }
+        let col_r = (acc_r + half_v).max(zero_v);
+        let col_g = (acc_g + half_v).max(zero_v);
+        let col_b = (acc_b + half_v).max(zero_v);
+
+        let l1c = l1.max(lfloor_v);
+        let l2c = l2.max(lfloor_v);
+
+        // --- emit survivors in lane order (= cloud order) ---
+        let keep = keep_nf & keep_band & keep_det & keep_op;
+        let bits = keep.bitmask();
+        let mean_xa = mean_x.to_array();
+        let mean_ya = mean_y.to_array();
+        let cov_aa = cov_a.to_array();
+        let cov_ba = cov_b.to_array();
+        let cov_ca = cov_c.to_array();
+        let con_aa = con_a.to_array();
+        let con_ba = con_b.to_array();
+        let con_ca = con_c.to_array();
+        let depth_a = cam_z.to_array();
+        let col_ra = col_r.to_array();
+        let col_ga = col_g.to_array();
+        let col_ba = col_b.to_array();
+        let l1a = l1c.to_array();
+        let l2a = l2c.to_array();
+        let ax_a = axis_x.to_array();
+        let ay_a = axis_y.to_array();
+        let mut emitted = 0u64;
+        for k in 0..width {
+            if (bits >> k) & 1 == 1 {
+                out.push(Splat {
+                    id: (base + k) as u32,
+                    mean: Vec2::new(mean_xa[k], mean_ya[k]),
+                    cov: (cov_aa[k], cov_ba[k], cov_ca[k]),
+                    conic: (con_aa[k], con_ba[k], con_ca[k]),
+                    depth: depth_a[k],
+                    color: Vec3::new(col_ra[k], col_ga[k], col_ba[k]),
+                    opacity: stage.op[k],
+                    l1: l1a[k],
+                    l2: l2a[k],
+                    axis: Vec2::new(ax_a[k], ay_a[k]),
+                });
+                emitted += 1;
+            }
+        }
+        stage.lanes += 8;
+        stage.masked_lanes += 8 - emitted;
+        base += 8;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -329,5 +761,83 @@ mod tests {
         assert!(s.l1 / s.l2 > 50.0, "l1={} l2={}", s.l1, s.l2);
         // Major axis should be ~horizontal.
         assert!(s.axis.x.abs() > 0.99, "{:?}", s.axis);
+    }
+
+    #[test]
+    fn simd_preprocess_is_bit_identical() {
+        use crate::util::rng::Rng;
+        fn bits(x: f32) -> u32 {
+            x.to_bits()
+        }
+        let mut rng = Rng::new(42);
+        for &degree in &[0usize, 1, 2, 3] {
+            // 53 is not a multiple of 8 → the last batch exercises the
+            // duplicated tail lanes.
+            let n = 53;
+            let stride = sh::num_coeffs(degree) * 3;
+            let mut cloud = GaussianCloud::with_capacity(n, degree);
+            for g in 0..n {
+                let rx = rng.range(-2.0, 2.0);
+                let ry = rng.range(-2.0, 2.0);
+                let rz = rng.range(2.0, 9.0);
+                let pos = match g % 5 {
+                    0 => Vec3::new(rx, ry, rz),
+                    // Behind the camera (frustum cull).
+                    1 => Vec3::new(rx * 0.2, ry * 0.2, -3.0),
+                    // Far off-screen (guard-band + rescue cull).
+                    2 => Vec3::new(60.0, ry, 6.0),
+                    // Near the guard band.
+                    3 => Vec3::new(8.0, -6.0, 7.0),
+                    _ => Vec3::new(rx * 0.5, ry * 0.5, rz * 4.0),
+                };
+                let scale = match g % 7 {
+                    // Huge footprint: exercises the rescue path.
+                    0 => Vec3::splat(4.0),
+                    _ => Vec3::new(rng.range(0.01, 0.4), rng.range(0.01, 0.4), 0.1),
+                };
+                let opacity = if g % 11 == 0 { 0.001 } else { rng.range(0.05, 1.0) };
+                let q = Quat::new(rng.normal(), rng.normal(), rng.normal(), rng.normal());
+                let coeffs: Vec<f32> = (0..stride).map(|_| rng.range(-1.0, 1.0)).collect();
+                cloud.push(pos, scale, q, opacity, &coeffs);
+            }
+            let eye = Vec3::new(1.0, -0.5, -2.0);
+            let cams = [
+                Camera::new(Intrinsics::from_fov(128, 96, 1.0), Pose::IDENTITY),
+                Camera::new(
+                    Intrinsics::from_fov(160, 120, 1.1),
+                    Pose::look_at(eye, Vec3::new(0.0, 0.0, 6.0), Vec3::Y),
+                ),
+            ];
+            for cam in &cams {
+                let mut scalar = Vec::new();
+                preprocess_into(&cloud, cam, &mut scalar);
+                let mut simd = Vec::new();
+                let mut stage = PreprocessStage::default();
+                preprocess_into_simd(&cloud, cam, &mut simd, &mut stage);
+                assert_eq!(scalar.len(), simd.len(), "deg {degree}: splat count");
+                assert_eq!(stage.lanes, (n.div_ceil(8) * 8) as u64);
+                assert_eq!(stage.masked_lanes, stage.lanes - simd.len() as u64);
+                for (s, v) in scalar.iter().zip(&simd) {
+                    assert_eq!(s.id, v.id, "deg {degree}: id");
+                    assert_eq!(bits(s.mean.x), bits(v.mean.x), "id {}: mean.x", s.id);
+                    assert_eq!(bits(s.mean.y), bits(v.mean.y), "id {}: mean.y", s.id);
+                    assert_eq!(bits(s.cov.0), bits(v.cov.0), "id {}: cov.a", s.id);
+                    assert_eq!(bits(s.cov.1), bits(v.cov.1), "id {}: cov.b", s.id);
+                    assert_eq!(bits(s.cov.2), bits(v.cov.2), "id {}: cov.c", s.id);
+                    assert_eq!(bits(s.conic.0), bits(v.conic.0), "id {}: conic.a", s.id);
+                    assert_eq!(bits(s.conic.1), bits(v.conic.1), "id {}: conic.b", s.id);
+                    assert_eq!(bits(s.conic.2), bits(v.conic.2), "id {}: conic.c", s.id);
+                    assert_eq!(bits(s.depth), bits(v.depth), "id {}: depth", s.id);
+                    assert_eq!(bits(s.color.x), bits(v.color.x), "id {}: color.r", s.id);
+                    assert_eq!(bits(s.color.y), bits(v.color.y), "id {}: color.g", s.id);
+                    assert_eq!(bits(s.color.z), bits(v.color.z), "id {}: color.b", s.id);
+                    assert_eq!(bits(s.opacity), bits(v.opacity), "id {}: opacity", s.id);
+                    assert_eq!(bits(s.l1), bits(v.l1), "id {}: l1", s.id);
+                    assert_eq!(bits(s.l2), bits(v.l2), "id {}: l2", s.id);
+                    assert_eq!(bits(s.axis.x), bits(v.axis.x), "id {}: axis.x", s.id);
+                    assert_eq!(bits(s.axis.y), bits(v.axis.y), "id {}: axis.y", s.id);
+                }
+            }
+        }
     }
 }

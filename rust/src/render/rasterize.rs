@@ -8,8 +8,9 @@
 //!   traversed Gaussian (Sec. IV-B; reprojected by DPES).
 
 use super::framebuffer::{Frame, INVALID_DEPTH};
+use super::kernel::KernelMode;
 use super::preprocess::Splat;
-use crate::math::Vec3;
+use crate::math::{F32x8, Mask8, Vec3};
 use crate::{ALPHA_THRESHOLD, TILE, TRANSMITTANCE_EPS};
 
 /// Minimum accumulated opacity for a pixel's depth/color to be considered
@@ -27,6 +28,12 @@ pub struct TileRasterOut {
     pub traversed: u32,
     /// Total α-blend operations across pixels (VRU work).
     pub blend_ops: u64,
+    /// SIMD lanes dispatched by the blend kernel (8 per pixel chunk;
+    /// zero under the scalar kernel).
+    pub lanes: u64,
+    /// Dispatched lanes that were masked off (tail padding, skipped or
+    /// already-saturated pixels).
+    pub masked_lanes: u64,
 }
 
 /// Rasterize one tile's splat list into `frame`.
@@ -202,6 +209,253 @@ pub fn rasterize_tile(
     out
 }
 
+/// [`rasterize_tile`] with an explicit kernel choice. Both kernels are
+/// bit-identical (`tests/kernel_parity.rs`); only the counters
+/// `lanes`/`masked_lanes` differ (scalar reports zero).
+#[inline]
+pub fn rasterize_tile_with(
+    mode: KernelMode,
+    splats: &[Splat],
+    ids: &[u32],
+    frame: &mut Frame,
+    tile: usize,
+    background: Vec3,
+    only_invalid: bool,
+) -> TileRasterOut {
+    match mode {
+        KernelMode::Scalar => rasterize_tile(splats, ids, frame, tile, background, only_invalid),
+        KernelMode::Simd => rasterize_tile_simd(splats, ids, frame, tile, background, only_invalid),
+    }
+}
+
+/// 8-wide SIMD variant of [`rasterize_tile`]: per splat, the inner pixel
+/// loop processes the row's support interval in `F32x8` chunks over
+/// SoA pixel accumulators.
+///
+/// Bit-parity argument (why this equals the scalar kernel exactly):
+/// * All per-splat / per-row setup (support interval, `ha`/`hb`/`hc`)
+///   is the *same scalar code*.
+/// * Lane `k` of a chunk evaluates the identical expression tree as the
+///   scalar pixel `px + k` — same op order, no FMA, no reassociation —
+///   and `splat(x0+px) + iota()` reproduces `(x0+px+k) as f32` exactly
+///   (small integers).
+/// * `exp` has no cross-implementation bit guarantee, so α's exponential
+///   is evaluated with the scalar `f32::exp` per passing lane.
+/// * Masked lanes blend with `alpha_eff = +0.0`: the accumulators only
+///   ever hold values ≥ +0.0, so `acc + color·(+0.0·t) = acc` and
+///   `t·(1.0 − 0.0) = t` are bit-exact identities — full-lane
+///   read-modify-write stores leave masked pixels untouched bit-for-bit
+///   (this also covers the chunk tail that wraps into the next row's
+///   leading pixels and the padded region past the tile).
+/// * Scalar `if x < c { skip }` guards become `!x.lt(c)` — never the
+///   `ge` complement — so NaN lanes take the same path as scalar code.
+/// * `skip` pixels (`only_invalid`) are folded into the saturation mask
+///   by seeding their transmittance with 0.0 < `TRANSMITTANCE_EPS`; the
+///   writeback still consults the boolean `skip` array, so their frame
+///   pixels are never written.
+pub fn rasterize_tile_simd(
+    splats: &[Splat],
+    ids: &[u32],
+    frame: &mut Frame,
+    tile: usize,
+    background: Vec3,
+    only_invalid: bool,
+) -> TileRasterOut {
+    // 8 lanes of padding so a chunk starting at the last pixel can still
+    // load/store a full vector.
+    const PAD: usize = TILE * TILE + 8;
+    let (x0, y0, x1, y1) = frame.tile_bounds(tile);
+    let w = x1 - x0;
+    let h = y1 - y0;
+    let n_px = w * h;
+    debug_assert!(n_px <= TILE * TILE);
+
+    // Per-pixel accumulators, SoA (separate RGB planes for lane loads).
+    let mut trans = [1.0f32; PAD];
+    let mut col_r = [0.0f32; PAD];
+    let mut col_g = [0.0f32; PAD];
+    let mut col_b = [0.0f32; PAD];
+    let mut depth_acc = [0.0f32; PAD];
+    let mut weight = [0.0f32; PAD];
+    let mut trunc = [INVALID_DEPTH; PAD];
+    let mut skip = [false; TILE * TILE];
+
+    let mut active = 0usize;
+    for py in 0..h {
+        for px in 0..w {
+            let li = py * w + px;
+            if only_invalid && frame.valid[frame.idx(x0 + px, y0 + py)] {
+                skip[li] = true;
+                trans[li] = 0.0; // folds skip into the saturation mask
+            } else {
+                active += 1;
+            }
+        }
+    }
+    if active == 0 {
+        return TileRasterOut::default();
+    }
+
+    let mut out = TileRasterOut::default();
+    let mut last_depth = INVALID_DEPTH;
+
+    let zero_v = F32x8::splat(0.0);
+    let half_v = F32x8::splat(0.5);
+    let one_v = F32x8::splat(1.0);
+    let eps_v = F32x8::splat(TRANSMITTANCE_EPS);
+    let tau_v = F32x8::splat(ALPHA_THRESHOLD);
+    let cap_v = F32x8::splat(0.999);
+
+    for &sid in ids {
+        let s = &splats[sid as usize];
+        out.traversed += 1;
+        last_depth = s.depth;
+        let mut contributed = false;
+
+        // Identical scalar support-interval setup (see rasterize_tile).
+        let (qa, qb, qc) = s.conic;
+        let rho = s.trunc_rho();
+        let two_emax = rho * rho;
+        let inv_qa = 1.0 / qa;
+
+        let dy_max = rho * s.cov.2.max(0.0).sqrt();
+        let py_lo = ((s.mean.y - dy_max - 0.5) - y0 as f32).ceil().max(0.0) as usize;
+        let py_hi_f = (s.mean.y + dy_max - 0.5) - y0 as f32;
+        if py_hi_f < 0.0 || py_lo >= h {
+            continue;
+        }
+        let py_hi = (py_hi_f.floor() as usize).min(h - 1);
+
+        let mean_x_v = F32x8::splat(s.mean.x);
+        let opacity_v = F32x8::splat(s.opacity);
+        let color_r_v = F32x8::splat(s.color.x);
+        let color_g_v = F32x8::splat(s.color.y);
+        let color_b_v = F32x8::splat(s.color.z);
+        let depth_v = F32x8::splat(s.depth);
+
+        for py in py_lo..=py_hi {
+            let y = (y0 + py) as f32 + 0.5;
+            let dy = y - s.mean.y;
+            let bdy = qb * dy;
+            let disc = bdy * bdy - qa * (qc * dy * dy - two_emax);
+            if disc <= 0.0 {
+                continue;
+            }
+            let sq = disc.sqrt();
+            let dx_lo = (-bdy - sq) * inv_qa;
+            let dx_hi = (-bdy + sq) * inv_qa;
+            let px_lo = (s.mean.x + dx_lo - 0.5 - x0 as f32).ceil().max(0.0) as usize;
+            let px_hi_f = s.mean.x + dx_hi - 0.5 - x0 as f32;
+            if px_hi_f < 0.0 || px_lo >= w {
+                continue;
+            }
+            let px_hi = (px_hi_f.floor() as usize).min(w - 1);
+
+            let ha = 0.5 * qa;
+            let hb = qb * dy;
+            let hc = 0.5 * qc * dy * dy;
+            let ha_v = F32x8::splat(ha);
+            let hb_v = F32x8::splat(hb);
+            let hc_v = F32x8::splat(hc);
+            let row = py * w;
+
+            let mut px = px_lo;
+            while px <= px_hi {
+                let li = row + px;
+                let valid = Mask8::first_n(px_hi - px + 1);
+                out.lanes += 8;
+
+                let t = F32x8::load(&trans[li..]);
+                // Live = in the support interval, not skipped, not
+                // saturated (NaN-faithful mirror of `trans < EPS → skip`).
+                let live = valid & !t.lt(eps_v);
+                let live_n = live.count();
+                out.masked_lanes += (8 - live_n) as u64;
+                if live_n == 0 {
+                    px += 8;
+                    continue;
+                }
+                // Scalar counts a blend op per live pixel before the
+                // e < 0 rejection.
+                out.blend_ops += live_n as u64;
+
+                let px_f = F32x8::splat((x0 + px) as f32) + F32x8::iota();
+                let dx = px_f + half_v - mean_x_v;
+                let e = (ha_v * dx + hb_v) * dx + hc_v;
+                let pass = live & !e.lt(zero_v);
+
+                // exp stays scalar per lane: vector exp implementations
+                // carry no bit guarantee against f32::exp.
+                let ea = e.to_array();
+                let mut ab = [0.0f32; 8];
+                for (k, a) in ab.iter_mut().enumerate() {
+                    if pass.test(k) {
+                        *a = (-ea[k]).exp();
+                    }
+                }
+                let alpha = (opacity_v * F32x8::from_array(ab)).min(cap_v);
+                let blend = pass & !alpha.lt(tau_v);
+                if blend.any() {
+                    contributed = true;
+                }
+                let alpha_eff = F32x8::select(blend, alpha, zero_v);
+                let wgt = alpha_eff * t;
+                (F32x8::load(&col_r[li..]) + color_r_v * wgt).store(&mut col_r[li..]);
+                (F32x8::load(&col_g[li..]) + color_g_v * wgt).store(&mut col_g[li..]);
+                (F32x8::load(&col_b[li..]) + color_b_v * wgt).store(&mut col_b[li..]);
+                (F32x8::load(&depth_acc[li..]) + depth_v * wgt).store(&mut depth_acc[li..]);
+                (F32x8::load(&weight[li..]) + wgt).store(&mut weight[li..]);
+                let nt = t * (one_v - alpha_eff);
+                nt.store(&mut trans[li..]);
+
+                // Early stop: lanes whose blend just saturated them.
+                let stop = blend & nt.lt(eps_v);
+                if stop.any() {
+                    let tr = F32x8::load(&trunc[li..]);
+                    F32x8::select(stop, depth_v, tr).store(&mut trunc[li..]);
+                    active -= stop.count() as usize;
+                }
+                px += 8;
+            }
+        }
+        if contributed {
+            out.contributing += 1;
+        }
+        if active == 0 {
+            break;
+        }
+    }
+
+    // Write back (identical to the scalar kernel).
+    for py in 0..h {
+        for px in 0..w {
+            let li = py * w + px;
+            if skip[li] {
+                continue;
+            }
+            let gi = frame.idx(x0 + px, y0 + py);
+            let t = trans[li];
+            let a = 1.0 - t;
+            frame.rgb[gi * 3] = col_r[li] + t * background.x;
+            frame.rgb[gi * 3 + 1] = col_g[li] + t * background.y;
+            frame.rgb[gi * 3 + 2] = col_b[li] + t * background.z;
+            frame.alpha[gi] = a;
+            frame.depth[gi] = if weight[li] > 1e-6 {
+                depth_acc[li] / weight[li]
+            } else {
+                INVALID_DEPTH
+            };
+            frame.trunc_depth[gi] = if trunc[li] != INVALID_DEPTH {
+                trunc[li]
+            } else {
+                last_depth
+            };
+            frame.valid[gi] = a >= VALID_ALPHA;
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -350,6 +604,67 @@ mod tests {
         // Warped pixels untouched; missing pixels rendered red.
         assert_eq!(frame.rgb_at(33, 33), [0.0, 1.0, 0.0]);
         assert!(frame.rgb_at(20, 20)[0] > 0.5);
+    }
+
+    /// In-tile parity: the SIMD kernel's frame outputs AND exact
+    /// counters must match the scalar kernel bit-for-bit (the full
+    /// scene matrix lives in tests/kernel_parity.rs).
+    #[test]
+    fn simd_kernel_is_bit_identical_per_tile() {
+        let cases: Vec<Vec<(Vec3, f32, f32, Vec3)>> = vec![
+            // Mixed opacities and sizes.
+            vec![
+                (Vec3::new(0.0, 0.0, 2.0), 0.5, 0.99, Vec3::new(1.0, 0.0, 0.0)),
+                (Vec3::new(0.3, -0.2, 3.0), 1.5, 0.5, Vec3::new(0.0, 1.0, 0.0)),
+                (Vec3::new(-0.4, 0.3, 4.0), 3.0, 0.8, Vec3::new(0.0, 0.0, 1.0)),
+                (Vec3::new(0.9, 0.9, 2.5), 0.2, 0.05, Vec3::new(0.7, 0.7, 0.2)),
+            ],
+            // Opaque stack: early stop fires mid-lane.
+            (0..40)
+                .map(|i| {
+                    (
+                        Vec3::new(0.0, 0.0, 2.0 + i as f32 * 0.1),
+                        2.0,
+                        0.95,
+                        Vec3::new(0.5, 0.5, 0.5),
+                    )
+                })
+                .collect(),
+        ];
+        for gs in &cases {
+            for only_invalid in [false, true] {
+                let (splats, mut fa, grid) = make(gs);
+                let (_, mut fb, _) = make(gs);
+                if only_invalid {
+                    // Scatter valid pixels so the masked-blend path runs.
+                    for y in 0..64 {
+                        for x in 0..64 {
+                            if (x * 7 + y * 13) % 3 == 0 {
+                                let i = fa.idx(x, y);
+                                fa.valid[i] = true;
+                                fb.valid[i] = true;
+                            }
+                        }
+                    }
+                }
+                let bins = bin_splats(&splats, IntersectMode::Exact, grid, BinOptions::default());
+                let bg = Vec3::new(0.1, 0.2, 0.3);
+                for t in 0..bins.num_tiles() {
+                    let oa = rasterize_tile(&splats, bins.tile(t), &mut fa, t, bg, only_invalid);
+                    let ob =
+                        rasterize_tile_simd(&splats, bins.tile(t), &mut fb, t, bg, only_invalid);
+                    assert_eq!(oa.contributing, ob.contributing, "tile {t}");
+                    assert_eq!(oa.traversed, ob.traversed, "tile {t}");
+                    assert_eq!(oa.blend_ops, ob.blend_ops, "tile {t}");
+                }
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&fa.rgb), bits(&fb.rgb), "rgb diverged");
+                assert_eq!(bits(&fa.depth), bits(&fb.depth), "depth diverged");
+                assert_eq!(bits(&fa.trunc_depth), bits(&fb.trunc_depth));
+                assert_eq!(bits(&fa.alpha), bits(&fb.alpha));
+                assert_eq!(fa.valid, fb.valid);
+            }
+        }
     }
 
     #[test]

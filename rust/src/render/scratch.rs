@@ -12,7 +12,7 @@
 //! call, reproducing the seed behavior bit-for-bit.
 
 use super::binning::TileBins;
-use super::preprocess::Splat;
+use super::preprocess::{PreprocessStage, Splat};
 use crate::shard::ShardAssets;
 use std::sync::Arc;
 
@@ -21,6 +21,11 @@ use std::sync::Arc;
 pub struct FrameScratch {
     /// Preprocessed splats (culled, projected), in cloud order.
     pub splats: Vec<Splat>,
+    /// SIMD preprocess staging buffer + lane counters (monolithic path).
+    pub(crate) stage: PreprocessStage,
+    /// Sharded scenes only: per-shard preprocess stages for the fan-out,
+    /// summed into the pass kernel stats after the merge.
+    pub(crate) shard_stages: Vec<PreprocessStage>,
     /// Sharded scenes only: visible shard ids this frame.
     pub(crate) visible_shards: Vec<usize>,
     /// Sharded scenes only: pinned working set (cleared after planning so
@@ -48,6 +53,11 @@ pub struct FrameScratch {
     pub contributing: Vec<u32>,
     /// Per-tile α-blend operation counts.
     pub blend_ops: Vec<u64>,
+    /// Per-tile SIMD lanes dispatched by the blend kernel (zero under the
+    /// scalar kernel).
+    pub lanes: Vec<u64>,
+    /// Per-tile dispatched-but-masked lanes (kernel waste).
+    pub masked_lanes: Vec<u64>,
     /// Per-tile measured rasterization time this pass (ns).
     pub tile_ns: Vec<u32>,
     /// Cross-frame EWMA of the measured per-tile cost *rate* (ns per
@@ -80,6 +90,10 @@ impl FrameScratch {
         self.contributing.resize(num_tiles, 0);
         self.blend_ops.clear();
         self.blend_ops.resize(num_tiles, 0);
+        self.lanes.clear();
+        self.lanes.resize(num_tiles, 0);
+        self.masked_lanes.clear();
+        self.masked_lanes.resize(num_tiles, 0);
         self.tile_ns.clear();
         self.tile_ns.resize(num_tiles, 0);
     }

@@ -70,12 +70,14 @@ impl PjrtRenderer {
             );
         }
         // Assemble stats equivalent to the native pipeline's planning view.
+        let mut per_tile_pairs = Vec::with_capacity(bins.num_tiles());
+        bins.per_tile_counts_into(&mut per_tile_pairs);
         let stats = RenderStats {
             n_gaussians: self.native.cloud().len(),
             n_splats: splats.len(),
             pairs: bins.num_pairs(),
             cost: bins.cost,
-            per_tile_pairs: bins.per_tile_counts(),
+            per_tile_pairs,
             ..Default::default()
         };
         Ok((frame, stats, n_fallback))

@@ -261,6 +261,19 @@ impl ShardedScene {
     /// correctness; a speculative one would just be a memory spike).
     /// Returns the number of shards loaded.
     pub fn prefetch(&self, pose: &Pose) -> u32 {
+        self.prefetch_capped(pose, u32::MAX)
+    }
+
+    /// [`ShardedScene::prefetch`] with the speculative set additionally
+    /// capped at `max_shards` — the scheduler's store-latency-aware
+    /// budget (shards whose measured load time fits the pacing
+    /// headroom). Cull order is predicted visibility order, so the kept
+    /// prefix is the subset most likely to be needed. `max_shards == 0`
+    /// is a no-op returning 0.
+    pub fn prefetch_capped(&self, pose: &Pose, max_shards: u32) -> u32 {
+        if max_shards == 0 {
+            return 0;
+        }
         let mut ids = Vec::new();
         self.catalog.visible_into(&self.intrinsics, pose, &mut ids);
         // Governed scene: the governor owns the headroom arithmetic (one
@@ -269,7 +282,13 @@ impl ShardedScene {
         // front so racing prefetches stay collectively under budget.
         let lease = self.arbiter.lock().unwrap().clone();
         if let Some(lease) = lease {
-            let cold = lease.arbiter.reserve_prefetch(lease.slot, &ids);
+            let mut cold = lease.arbiter.reserve_prefetch(lease.slot, &ids);
+            if cold.len() > max_shards as usize {
+                // Release the reservation on the dropped tail before any
+                // store IO, so the bytes free up for other scenes now.
+                let dropped = cold.split_off(max_shards as usize);
+                lease.arbiter.finish_prefetch(lease.slot, &dropped, false);
+            }
             if cold.is_empty() {
                 return 0;
             }
@@ -294,6 +313,9 @@ impl ShardedScene {
             // the prefix is the most likely to be needed).
             let mut headroom = res.budget_bytes().saturating_sub(res.resident_bytes());
             for id in all_cold {
+                if cold.len() == max_shards as usize {
+                    break;
+                }
                 let bytes = self.catalog.meta(id).bytes;
                 if bytes <= headroom {
                     headroom -= bytes;
@@ -588,6 +610,30 @@ mod tests {
         assert!(stats.resident > 0);
         assert_eq!(sharded.prefetch(&poses[1]), 0);
         assert_eq!(sharded.prefetch(&poses[2]), 0);
+    }
+
+    #[test]
+    fn prefetch_capped_stops_at_the_cap() {
+        let scene = generate("room", 0.04, 96, 96);
+        let pose = scene.sample_poses(1)[0];
+        let sharded = ShardedScene::partition(
+            &scene.cloud,
+            scene.intrinsics,
+            &ShardConfig {
+                target_splats: 200,
+                ..Default::default()
+            },
+        );
+        assert_eq!(sharded.prefetch_capped(&pose, 0), 0, "cap 0 must be a no-op");
+        assert_eq!(sharded.resident_bytes(), 0, "cap 0 loaded something");
+        let warmed = sharded.prefetch_capped(&pose, 2);
+        assert!(warmed <= 2, "cap 2 loaded {warmed}");
+        // Uncapped prefetch then finishes the rest of the visible set.
+        let rest = sharded.prefetch(&pose);
+        let (mut ids, mut out) = (Vec::new(), Vec::new());
+        let stats = sharded.acquire_visible(&pose, &mut ids, &mut out);
+        assert_eq!(stats.loaded, 0, "capped + full prefetch left cold shards");
+        assert_eq!(warmed + rest, stats.visible);
     }
 
     #[test]

@@ -1,0 +1,261 @@
+//! Integration tests for the SIMD kernel layer (ISSUE 6): the lane-wise
+//! kernels must be **bit-identical** to the scalar reference — same op
+//! order, no FMA, no horizontal reassociation — on every scene, every
+//! intersection mode, every pass variant and both ends of the thread
+//! spectrum, plus lane-math properties the full matrix can't isolate
+//! (partial-tile tails, masked blending, mid-lane early stop).
+//!
+//! CI re-runs this file under `LSG_FORCE_SCALAR=1`: both arms then
+//! resolve to the scalar kernel and the matrix degenerates to a
+//! self-consistency check, proving the override reaches the hot loops.
+
+use ls_gaussian::coordinator::{CoordinatorConfig, StreamSession, WarpMode};
+use ls_gaussian::math::{sh, Quat, Vec3};
+use ls_gaussian::render::{
+    bin_splats, preprocess, preprocess_into_simd, rasterize_tile, rasterize_tile_simd, BinOptions,
+    Frame, IntersectMode, KernelMode, PreprocessStage, Splat,
+};
+use ls_gaussian::scene::{
+    generate, Camera, GaussianCloud, Intrinsics, Pose, SceneAssets, ALL_SCENES,
+};
+use ls_gaussian::util::pool::{default_threads, WorkerPool};
+use std::sync::Arc;
+
+/// Pool sized by `LSG_POOL_THREADS` (CI matrix) or the machine.
+fn test_pool() -> Arc<WorkerPool> {
+    let threads = std::env::var("LSG_POOL_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or_else(|| default_threads().saturating_sub(1))
+        .max(1);
+    Arc::new(WorkerPool::new(threads))
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The full streaming loop must produce bit-identical frames under the
+/// scalar and SIMD kernels: every scene, every intersection mode, the
+/// dense + TWSR-sparse cadence AND the InvalidPixels (PWSR) pass, with
+/// the gang inline (threads = 1) and parallel (threads = 2).
+#[test]
+fn simd_kernel_is_bit_identical_on_all_scenes() {
+    let pool = test_pool();
+    for name in ALL_SCENES {
+        let scene = generate(name, 0.02, 96, 64);
+        let poses = scene.sample_poses(3);
+        let assets = SceneAssets::from_scene(&scene);
+        for mode in [IntersectMode::Aabb, IntersectMode::Tait, IntersectMode::Exact] {
+            for warp in [WarpMode::Tile, WarpMode::Pixel] {
+                for threads in [1usize, 2] {
+                    let mk = |kernel: KernelMode| {
+                        StreamSession::new(
+                            Arc::clone(&assets),
+                            Arc::clone(&pool),
+                            CoordinatorConfig {
+                                warp,
+                                mode,
+                                threads,
+                                kernel,
+                                ..Default::default()
+                            },
+                        )
+                    };
+                    let mut scalar = mk(KernelMode::Scalar);
+                    let mut simd = mk(KernelMode::Simd);
+                    for (f, pose) in poses.iter().enumerate() {
+                        let k1 = scalar.step(pose);
+                        let k2 = simd.step(pose);
+                        let ctx = format!("{name} {mode:?} {warp:?} threads={threads} frame {f}");
+                        assert_eq!(k1, k2, "{ctx}: kind diverged");
+                        assert_eq!(
+                            bits(&scalar.frame().rgb),
+                            bits(&simd.frame().rgb),
+                            "{ctx}: rgb diverged"
+                        );
+                        assert_eq!(
+                            bits(&scalar.frame().depth),
+                            bits(&simd.frame().depth),
+                            "{ctx}: depth diverged"
+                        );
+                        assert_eq!(
+                            bits(&scalar.frame().trunc_depth),
+                            bits(&simd.frame().trunc_depth),
+                            "{ctx}: trunc_depth diverged"
+                        );
+                        assert_eq!(
+                            scalar.frame().valid,
+                            simd.frame().valid,
+                            "{ctx}: validity diverged"
+                        );
+                        // Workload counters feed the hardware models:
+                        // they must not drift between kernels either.
+                        let (ps, pv) = (scalar.last_summary().pass, simd.last_summary().pass);
+                        assert_eq!(ps.n_splats, pv.n_splats, "{ctx}: splat count diverged");
+                        assert_eq!(ps.pairs, pv.pairs, "{ctx}: pair count diverged");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The scalar preprocess and the 8-wide SoA preprocess emit bitwise
+/// equal splat streams on every scene, and the stage's lane counters
+/// account for every dispatched lane.
+#[test]
+fn simd_preprocess_is_bit_identical_on_all_scenes() {
+    for name in ALL_SCENES {
+        let scene = generate(name, 0.03, 128, 96);
+        for pose in scene.sample_poses(2) {
+            let cam = Camera::new(scene.intrinsics, pose);
+            let scalar = preprocess(&scene.cloud, &cam);
+            let mut simd = Vec::new();
+            let mut stage = PreprocessStage::default();
+            preprocess_into_simd(&scene.cloud, &cam, &mut simd, &mut stage);
+            assert_eq!(scalar.len(), simd.len(), "{name}: survivor count diverged");
+            for (a, b) in scalar.iter().zip(&simd) {
+                assert_eq!(a.id, b.id, "{name}: id order diverged");
+                assert_eq!(splat_bits(a), splat_bits(b), "{name}: splat {} diverged", a.id);
+            }
+            assert_eq!(stage.lanes, (scene.cloud.len().div_ceil(8) * 8) as u64, "{name}");
+            assert_eq!(stage.masked_lanes, stage.lanes - simd.len() as u64, "{name}");
+        }
+    }
+}
+
+fn splat_bits(s: &Splat) -> [u32; 17] {
+    [
+        s.mean.x.to_bits(),
+        s.mean.y.to_bits(),
+        s.cov.0.to_bits(),
+        s.cov.1.to_bits(),
+        s.cov.2.to_bits(),
+        s.conic.0.to_bits(),
+        s.conic.1.to_bits(),
+        s.conic.2.to_bits(),
+        s.depth.to_bits(),
+        s.color.x.to_bits(),
+        s.color.y.to_bits(),
+        s.color.z.to_bits(),
+        s.opacity.to_bits(),
+        s.l1.to_bits(),
+        s.l2.to_bits(),
+        s.axis.x.to_bits(),
+        s.axis.y.to_bits(),
+    ]
+}
+
+/// Render one whole frame tile-by-tile through both blend kernels and
+/// compare everything bitwise. `poison_valid` scatters pre-valid pixels
+/// and renders `only_invalid` (the PWSR masked-blend path).
+fn frame_parity(splats: &[Splat], intr: &Intrinsics, poison_valid: bool) {
+    let grid = intr.tile_grid();
+    let mut fa = Frame::new(intr.width, intr.height);
+    let mut fb = Frame::new(intr.width, intr.height);
+    if poison_valid {
+        for y in 0..intr.height {
+            for x in 0..intr.width {
+                if (x * 7 + y * 13) % 3 == 0 {
+                    let i = fa.idx(x, y);
+                    fa.valid[i] = true;
+                    fb.valid[i] = true;
+                }
+            }
+        }
+    }
+    let bins = bin_splats(splats, IntersectMode::Exact, grid, BinOptions::default());
+    let bg = Vec3::new(0.1, 0.2, 0.3);
+    for t in 0..bins.num_tiles() {
+        let oa = rasterize_tile(splats, bins.tile(t), &mut fa, t, bg, poison_valid);
+        let ob = rasterize_tile_simd(splats, bins.tile(t), &mut fb, t, bg, poison_valid);
+        assert_eq!(oa.contributing, ob.contributing, "tile {t}: contributing");
+        assert_eq!(oa.traversed, ob.traversed, "tile {t}: traversed");
+        assert_eq!(oa.blend_ops, ob.blend_ops, "tile {t}: blend ops");
+        assert!(ob.masked_lanes <= ob.lanes, "tile {t}: counter invariant");
+    }
+    assert_eq!(bits(&fa.rgb), bits(&fb.rgb), "rgb diverged");
+    assert_eq!(bits(&fa.depth), bits(&fb.depth), "depth diverged");
+    assert_eq!(bits(&fa.trunc_depth), bits(&fb.trunc_depth), "trunc diverged");
+    assert_eq!(bits(&fa.alpha), bits(&fb.alpha), "alpha diverged");
+    assert_eq!(fa.valid, fb.valid, "validity diverged");
+}
+
+/// Partial-tile tails: frame widths 97..=103 leave a right-edge tile
+/// column of 1..=7 pixels, so the first lane chunk of each row is
+/// already a tail — every masked-lane width meets the RMW stores.
+#[test]
+fn partial_tile_tails_are_bit_identical() {
+    for width in 97..=103usize {
+        let intr = Intrinsics::from_fov(width, 57, 1.2);
+        let scene = generate("train", 0.03, width, 57);
+        let cam = Camera::new(intr, scene.sample_poses(1)[0]);
+        let splats = preprocess(&scene.cloud, &cam);
+        assert!(!splats.is_empty());
+        frame_parity(&splats, &intr, false);
+        frame_parity(&splats, &intr, true);
+    }
+}
+
+/// A stack of near-opaque Gaussians on an odd-width frame: per-pixel
+/// early stop fires mid-lane (saturated lanes mask off while their
+/// neighbors keep blending) and the tile-level break must agree.
+#[test]
+fn early_stop_mid_lane_is_bit_identical() {
+    let intr = Intrinsics::from_fov(99, 57, 1.2);
+    let mut cloud = GaussianCloud::with_capacity(40, 0);
+    for i in 0..40 {
+        let dc = sh::dc_from_color(Vec3::new(0.5, 0.4, 0.3));
+        cloud.push(
+            Vec3::new((i % 5) as f32 * 0.1 - 0.2, 0.0, 2.0 + i as f32 * 0.1),
+            Vec3::splat(2.0),
+            Quat::IDENTITY,
+            0.95,
+            &[dc.x, dc.y, dc.z],
+        );
+    }
+    let cam = Camera::new(intr, Pose::IDENTITY);
+    let splats = preprocess(&cloud, &cam);
+    assert!(!splats.is_empty());
+    frame_parity(&splats, &intr, false);
+    frame_parity(&splats, &intr, true);
+}
+
+/// Kernel stats ride `PassSummary`: the resolved mode is reported, SIMD
+/// passes dispatch lanes (zero under scalar), and the waste fraction is
+/// a fraction. Written against the *resolved* mode so the CI re-run
+/// under `LSG_FORCE_SCALAR=1` still passes.
+#[test]
+fn kernel_stats_ride_the_summary() {
+    let pool = test_pool();
+    let scene = generate("room", 0.03, 96, 64);
+    let poses = scene.sample_poses(3);
+    let assets = SceneAssets::from_scene(&scene);
+    let mut s = StreamSession::new(
+        assets,
+        pool,
+        CoordinatorConfig {
+            warp: WarpMode::None,
+            threads: 2,
+            kernel: KernelMode::Simd,
+            ..Default::default()
+        },
+    );
+    let resolved = KernelMode::Simd.resolve();
+    for (f, pose) in poses.iter().enumerate() {
+        s.step(pose);
+        let k = s.last_summary().pass.kernels;
+        assert_eq!(k.mode, resolved, "frame {f}");
+        match resolved {
+            KernelMode::Simd => {
+                assert!(k.lanes > 0, "frame {f}: no lanes dispatched");
+                assert!(k.masked_lanes <= k.lanes, "frame {f}");
+                let w = k.masked_fraction();
+                assert!((0.0..=1.0).contains(&w), "frame {f}: waste {w}");
+            }
+            KernelMode::Scalar => assert_eq!(k.lanes, 0, "frame {f}"),
+        }
+        assert!(k.t_blend > std::time::Duration::ZERO, "frame {f}");
+    }
+}

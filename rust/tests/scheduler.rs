@@ -268,9 +268,13 @@ fn sharded_session_with_prefetch_drains_cleanly() {
     let done = s.run_for(Duration::from_secs(60));
     assert_eq!(done.len(), poses.len());
     assert!(s.session(id).frame().rgb.iter().any(|&v| v > 0.05));
-    // Prefetch bookkeeping is consistent (counter readable, no hang).
+    // Prefetch bookkeeping is consistent (counter readable, no hang),
+    // and any dispatched prefetch carried a bounded latency-aware cap.
     let c = s.counters(id).unwrap();
     assert_eq!(c.steps as usize, poses.len());
+    if c.prefetched_shards > 0 {
+        assert!((1..=64).contains(&c.prefetch_cap), "cap {}", c.prefetch_cap);
+    }
 }
 
 /// Property: the `DeadlineQueue`'s lazy invalidation is sound — after an

@@ -117,3 +117,20 @@ fn steady_state_full_frames_allocate_nothing() {
         }
     }
 }
+
+#[test]
+fn per_tile_counts_into_reuses_its_buffer() {
+    use ls_gaussian::render::{BinOptions, Renderer};
+    let scene = ls_gaussian::scene::generate("train", 0.04, 128, 96);
+    let pose = scene.sample_poses(1)[0];
+    let r = Renderer::new(scene.cloud, scene.intrinsics);
+    let (_, bins) = r.plan(&pose, BinOptions::default());
+    let mut counts = Vec::new();
+    bins.per_tile_counts_into(&mut counts); // warm the capacity
+    let before = ALLOCS.load(Ordering::SeqCst);
+    bins.per_tile_counts_into(&mut counts);
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(after - before, 0, "warm per_tile_counts_into allocated");
+    assert_eq!(counts.len(), bins.num_tiles());
+    assert_eq!(counts, bins.per_tile_counts(), "into-variant diverged");
+}
