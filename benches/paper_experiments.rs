@@ -104,4 +104,10 @@ fn main() {
     let out = "bench_report.json";
     std::fs::write(out, report.to_string_pretty()).expect("writing report");
     println!("\nwrote {out}");
+
+    // When the run was traced (LSG_TRACE=<path>), persist the Perfetto
+    // timeline of everything above.
+    if let Some(path) = ls_gaussian::telemetry::flush_trace() {
+        println!("wrote stage trace to {} (load in ui.perfetto.dev)", path.display());
+    }
 }

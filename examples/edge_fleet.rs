@@ -140,4 +140,13 @@ fn main() {
             s.evicted_by_peers
         );
     }
+
+    // Full node telemetry at exit, in Prometheus text exposition —
+    // counters, frame/lateness percentiles, per-scene size-class load
+    // latency, per-session window digests (see docs/OBSERVABILITY.md).
+    println!("\n--- telemetry (prometheus text exposition) ---");
+    print!("{}", server.telemetry_snapshot().to_prometheus());
+    if let Some(path) = ls_gaussian::telemetry::flush_trace() {
+        println!("--- LSG_TRACE written to {} ---", path.display());
+    }
 }

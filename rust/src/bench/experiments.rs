@@ -715,12 +715,23 @@ pub fn streaming_sessions(opts: &ExpOptions) -> Json {
             f2(sort / total_frames * 1e3),
             f2(raster / total_frames * 1e3),
         ]);
+        // Per-step percentiles from the sessions' telemetry rings
+        // (additive keys; the mean of the per-session window digests
+        // over the measured frames).
+        let (mut p50_ms, mut p99_ms) = (0.0f64, 0.0f64);
+        for sid in 0..n_sessions {
+            let w = server.session(sid).ring().summary(measured);
+            p50_ms += w.step_ms_p50 / n_sessions as f64;
+            p99_ms += w.step_ms_p99 / n_sessions as f64;
+        }
         let mut m = Json::obj();
         m.set("fps_total", fps_total)
             .set("fps_per_session", fps_per_session)
             .set("preprocess_ms", pre / total_frames * 1e3)
             .set("sort_ms", sort / total_frames * 1e3)
-            .set("rasterize_ms", raster / total_frames * 1e3);
+            .set("rasterize_ms", raster / total_frames * 1e3)
+            .set("step_ms_p50", p50_ms)
+            .set("step_ms_p99", p99_ms);
         sessions_rep.set(&format!("{n_sessions}"), m);
     }
     report.set("sessions", sessions_rep);
@@ -844,6 +855,24 @@ pub fn streaming_sessions(opts: &ExpOptions) -> Json {
         .set("cull_ms", cull_s / shard_frames * 1e3)
         .set("lifetime_loads", total_loads as f64)
         .set("lifetime_evictions", total_evictions as f64);
+    // Per-size-class shard load latency (additive): the percentile
+    // refinement behind the prefetch cap's expected-latency estimate.
+    let mut classes = Json::obj();
+    for (label, s) in crate::telemetry::SIZE_CLASS_LABELS
+        .iter()
+        .zip(sharded.load_class_summary().iter())
+    {
+        if s.count == 0 {
+            continue;
+        }
+        let mut c = Json::obj();
+        c.set("count", s.count)
+            .set("mean_ms", s.mean / 1e6)
+            .set("p50_ms", s.p50 as f64 / 1e6)
+            .set("p99_ms", s.p99 as f64 / 1e6);
+        classes.set(label, c);
+    }
+    sh.set("load_latency_classes", classes);
     report
         .set("baseline_alloc_fps", fps_alloc)
         .set("reused_scratch_fps", fps_reuse)

@@ -71,18 +71,19 @@ const DEFAULT_PREFETCH_CAP: u32 = 8;
 const MAX_PREFETCH_CAP: u32 = 64;
 
 /// Largest speculative shard count whose store IO fits in `headroom`,
-/// sized from the scene's *measured* mean `ShardStore::load` wall-clock
-/// (lifetime ns / lifetime loads). Falls back to
-/// [`DEFAULT_PREFETCH_CAP`] before the first load; always at least 1 —
-/// an idle worker can afford one shard — and at most
+/// sized from the scene's *measured* per-shard `ShardStore::load`
+/// wall-clock — the catalog-mix-weighted mean of the per-size-class
+/// latency histograms ([`ShardedScene::expected_load_ns`]), so a
+/// catalog of mostly-large shards sizes its cap from large-shard
+/// latency even when the recent loads happened to be small. Falls back
+/// to [`DEFAULT_PREFETCH_CAP`] before the first load; always at least
+/// 1 — an idle worker can afford one shard — and at most
 /// [`MAX_PREFETCH_CAP`].
 fn prefetch_cap(headroom: Duration, scene: &ShardedScene) -> u32 {
-    let (mem_ns, file_ns) = scene.load_latency_ns();
-    let (loads, _) = scene.residency_counters();
-    if loads == 0 {
-        return DEFAULT_PREFETCH_CAP;
-    }
-    let per_shard_ns = ((mem_ns + file_ns) / loads).max(1);
+    let per_shard_ns = match scene.expected_load_ns() {
+        Some(ns) => ns.max(1),
+        None => return DEFAULT_PREFETCH_CAP,
+    };
     (headroom.as_nanos() as u64 / per_shard_ns).clamp(1, MAX_PREFETCH_CAP as u64) as u32
 }
 
@@ -782,6 +783,21 @@ fn submit_step(
         summary.sched = sched;
         if let Some(r) = result.as_mut() {
             r.trace.sched = sched;
+        }
+        if paced {
+            // Telemetry: hub lateness/queue-wait histograms + ring
+            // annotation (brief session re-lock — the step itself already
+            // committed, so this never blocks the render path), plus a
+            // queue-wait interval on the session's virtual trace track
+            // (it spans worker handoffs, so it must not share a real
+            // thread's span stack).
+            slot.session.lock().unwrap().annotate_sched(&sched);
+            crate::telemetry::complete_on(
+                "sched_queue_wait",
+                crate::telemetry::SCHED_TRACK_BASE + slot.id as u32,
+                due,
+                start,
+            );
         }
         {
             let mut ctl = slot.ctl.lock().unwrap();

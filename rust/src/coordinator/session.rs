@@ -28,6 +28,7 @@ use crate::render::{
 };
 use crate::scene::{Intrinsics, Pose};
 use crate::shard::SceneHandle;
+use crate::telemetry::{FrameRecord, FrameRing};
 use crate::util::pool::WorkerPool;
 use crate::warp::{
     classify_and_inpaint, predict_depth_limits_into, reproject_into, InpaintScratch,
@@ -180,6 +181,9 @@ pub struct StreamSession {
     has_prev: bool,
     frame_idx: usize,
     last: StepSummary,
+    /// Bounded history of committed frames (telemetry; preallocated, so
+    /// steady-state pushes stay allocation-free).
+    ring: FrameRing,
 }
 
 impl StreamSession {
@@ -223,6 +227,7 @@ impl StreamSession {
             has_prev: false,
             frame_idx: 0,
             last: StepSummary::default(),
+            ring: FrameRing::with_capacity(crate::telemetry::DEFAULT_RING_CAP),
         }
     }
 
@@ -262,6 +267,7 @@ impl StreamSession {
     /// frame performs zero heap allocations (buffers are reused, the
     /// worker pool is persistent, and no trace vectors are cloned).
     pub fn step(&mut self, pose: &Pose) -> FrameKind {
+        let t_step = std::time::Instant::now();
         // Double-buffer: self.frame (last output) becomes the warp
         // reference, the older buffer becomes the render target.
         std::mem::swap(&mut self.frame, &mut self.prev);
@@ -280,10 +286,72 @@ impl StreamSession {
             }
         };
         self.last.kind = Some(kind);
+        self.record_step(kind, t_step.elapsed());
         self.frame_idx += 1;
         self.last_pose = *pose;
         self.has_prev = true;
         kind
+    }
+
+    /// Telemetry commit for one step: feed the process-wide hub and push
+    /// a [`FrameRecord`] into the session ring. Allocation-free (relaxed
+    /// atomics + a preallocated ring slot), so the lean `step` path keeps
+    /// its zero-alloc steady state.
+    fn record_step(&mut self, kind: FrameKind, elapsed: std::time::Duration) {
+        let pass = &self.last.pass;
+        let step_ns = elapsed.as_nanos().min(u64::MAX as u128) as u64;
+        let full = kind == FrameKind::Full;
+        let hub = crate::telemetry::hub();
+        hub.record_frame(full, step_ns);
+        let imbalance_pm = if pass.balance.planned && pass.balance.measured_imbalance > 0.0 {
+            (pass.balance.measured_imbalance as f64 * 1000.0) as u32
+        } else {
+            0
+        };
+        if imbalance_pm > 0 {
+            hub.imbalance_pm.record(imbalance_pm as u64);
+        }
+        let masked_lane_pm = (pass.kernels.masked_fraction() * 1000.0) as u32;
+        if pass.kernels.lanes > 0 {
+            hub.masked_lane_pm.record(masked_lane_pm as u64);
+        }
+        self.ring.push(FrameRecord {
+            frame_idx: self.frame_idx as u64,
+            warped: !full,
+            step_ns,
+            preprocess_ns: pass.t_preprocess.as_nanos() as u64,
+            sort_ns: pass.t_sort.as_nanos() as u64,
+            rasterize_ns: pass.t_rasterize.as_nanos() as u64,
+            lateness_ns: 0,
+            queue_ns: 0,
+            stalled: false,
+            pairs: pass.pairs as u64,
+            shards_loaded: pass.shards.loaded as u32,
+            imbalance_pm,
+            masked_lane_pm,
+            warped_fraction: self.last.warped_fraction,
+        });
+    }
+
+    /// The session's bounded frame-record history (telemetry read side).
+    pub fn ring(&self) -> &FrameRing {
+        &self.ring
+    }
+
+    /// Stamp scheduling stats onto the most recent ring record and the
+    /// hub — called by the paced scheduler after it computes
+    /// lateness/queue-wait for the step it just committed.
+    pub(crate) fn annotate_sched(&mut self, sched: &super::SchedStats) {
+        crate::telemetry::hub().record_sched(
+            sched.lateness.as_nanos() as u64,
+            sched.t_queue.as_nanos() as u64,
+            sched.stalled,
+        );
+        if let Some(rec) = self.ring.latest_mut() {
+            rec.lateness_ns = sched.lateness.as_nanos() as u64;
+            rec.queue_ns = sched.t_queue.as_nanos() as u64;
+            rec.stalled = sched.stalled;
+        }
     }
 
     /// Process the next viewpoint and assemble the full trace + an owned
@@ -334,6 +402,7 @@ impl StreamSession {
 
     fn tile_warped_frame(&mut self, pose: &Pose) -> FrameKind {
         let intr = *self.renderer.intrinsics();
+        let warp_span = crate::telemetry::span("warp");
         reproject_into(
             &self.prev,
             &intr,
@@ -342,6 +411,7 @@ impl StreamSession {
             &mut self.frame,
             &mut self.warp,
         );
+        drop(warp_span);
         self.last.warped_fraction =
             self.warp.filled as f32 / (intr.width * intr.height) as f32;
 
@@ -351,6 +421,7 @@ impl StreamSession {
             predict_depth_limits_into(&self.frame, &self.warp.trunc_depth, &mut self.depth_limits);
         }
 
+        let inpaint_span = crate::telemetry::span("inpaint");
         self.last.tiles = classify_and_inpaint(
             &mut self.frame,
             &mut self.warp.filled_mask,
@@ -359,6 +430,7 @@ impl StreamSession {
             &mut self.decisions,
             &mut self.inpaint,
         );
+        drop(inpaint_span);
 
         // Carry warped truncation depths into the output frame so the next
         // DPES round chains; sparse rendering overwrites its own tiles.

@@ -50,6 +50,7 @@ pub mod scene;
 pub mod serve;
 pub mod shard;
 pub mod sim;
+pub mod telemetry;
 pub mod util;
 pub mod warp;
 

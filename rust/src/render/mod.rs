@@ -374,6 +374,7 @@ impl Renderer {
         // pre-LDU row-major chunk counter; either way every tile writes
         // its own disjoint pixels, so frames are bit-identical.
         let workload = self.config.dispatch == DispatchMode::Workload;
+        let plan_span = crate::telemetry::span("plan");
         let t_plan0 = Instant::now();
         let mut predicted_imbalance = 0.0f32;
         if workload {
@@ -393,9 +394,11 @@ impl Renderer {
             );
         }
         let t_plan = t_plan0.elapsed();
+        drop(plan_span);
 
         // Stamped after planning so t_rasterize and t_plan partition the
         // dispatch stage instead of overlapping.
+        let raster_span = crate::telemetry::span("rasterize");
         let t2 = Instant::now();
         let mut steals = 0u32;
         {
@@ -453,6 +456,7 @@ impl Renderer {
             }
         }
         summary.t_rasterize = t2.elapsed();
+        drop(raster_span);
 
         // Fold the blend kernel's per-tile lane counters into the pass
         // kernel stats (preprocess lanes were stamped by plan_pass).
@@ -516,6 +520,7 @@ impl Renderer {
         let grid = self.intrinsics().tile_grid();
         let kmode = self.config.kernel.resolve();
 
+        let preprocess_span = crate::telemetry::span("preprocess");
         let t0 = Instant::now();
         let shards = match &self.handle {
             SceneHandle::Monolithic(assets) => {
@@ -537,7 +542,9 @@ impl Renderer {
         };
         global_depth_cull(&mut scratch.splats, tile_mask, depth_limits);
         let t_preprocess = t0.elapsed();
+        drop(preprocess_span);
 
+        let sort_span = crate::telemetry::span("sort");
         let t1 = Instant::now();
         bin_splats_into(
             &scratch.splats,
@@ -553,6 +560,7 @@ impl Renderer {
             &mut scratch.cursor,
         );
         let t_sort = t1.elapsed();
+        drop(sort_span);
 
         PassSummary {
             n_gaussians: self.handle.num_gaussians(),

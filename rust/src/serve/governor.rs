@@ -217,6 +217,11 @@ impl ResidencyGovernor {
 /// per-node shard counts outgrow it. `requester` attributes cross-scene
 /// evictions.
 fn shed(inner: &mut GovInner, budget: u64, requester: usize) {
+    // Trace the whole victim sweep as one span: the interesting signal
+    // is "how long did cross-scene arbitration stall this commit", not
+    // the individual evictions. (The trace buffer is a leaf lock —
+    // safe to touch under the governor lock.)
+    let _span = crate::telemetry::span("governor_shed");
     // Shards a scene refused to release this shed (re-scanning them
     // would livelock the victim loop).
     let mut refused: Vec<(usize, u64)> = Vec::new();
@@ -260,6 +265,9 @@ fn shed(inner: &mut GovInner, budget: u64, requester: usize) {
                 }
                 inner.resident_bytes -= freed as u64;
                 inner.counters.evictions += 1;
+                crate::telemetry::hub()
+                    .governor_evictions
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             }
             None => refused.push((s, id as u64)),
         }

@@ -35,7 +35,8 @@ use super::ResidencyGovernor;
 use crate::coordinator::scheduler::{SchedConfig, SessionGuard, SessionId, SessionScheduler};
 use crate::coordinator::session::{CoordinatorConfig, FrameResult, StepSummary, StreamSession};
 use crate::scene::Pose;
-use crate::shard::SceneHandle;
+use crate::shard::{SceneHandle, StoreKind};
+use crate::telemetry::{NodeTelemetry, SceneTelemetry, SessionTelemetry, TelemetrySnapshot};
 use crate::util::pool::{default_threads, WorkerPool};
 use anyhow::{ensure, Result};
 use std::sync::Arc;
@@ -177,6 +178,67 @@ impl StreamServer {
     /// eviction counters).
     pub fn governor(&self) -> &Arc<ResidencyGovernor> {
         self.registry.governor()
+    }
+
+    /// Aggregate the node's full telemetry: process-wide hub totals and
+    /// distributions, per-scene residency + size-class load latency,
+    /// and per-session frame-ring window digests. Briefly locks each
+    /// session in turn (never two at once) and allocates — a snapshot
+    /// path, not a render path. Exposition via
+    /// [`TelemetrySnapshot::to_json`] /
+    /// [`TelemetrySnapshot::to_prometheus`].
+    pub fn telemetry_snapshot(&self) -> TelemetrySnapshot {
+        let scenes = self
+            .registry
+            .ids()
+            .into_iter()
+            .map(|id| {
+                let stats = self.registry.scene_stats(id);
+                let handle = self.registry.get(id).expect("live scene id");
+                let (store, load_by_class) = match handle {
+                    SceneHandle::Monolithic(_) => ("monolithic", Default::default()),
+                    SceneHandle::Sharded(s) => (
+                        match s.store_kind() {
+                            StoreKind::Memory => "memory",
+                            StoreKind::File => "file",
+                        },
+                        s.load_class_summary(),
+                    ),
+                };
+                SceneTelemetry {
+                    scene: stats.scene,
+                    store,
+                    sessions: stats.sessions,
+                    shards: stats.shards,
+                    resident_bytes: stats.resident_bytes,
+                    pinned_bytes: stats.pinned_bytes,
+                    lifetime_loads: stats.lifetime_loads,
+                    lifetime_evictions: stats.lifetime_evictions,
+                    evicted_by_peers: stats.evicted_by_peers,
+                    load_by_class,
+                }
+            })
+            .collect();
+        let sessions = self
+            .scheduler
+            .ids()
+            .into_iter()
+            .map(|id| {
+                let guard = self.scheduler.session(id);
+                let ring = guard.ring();
+                SessionTelemetry {
+                    session: id,
+                    scene: self.scene_of(id),
+                    frames: ring.total(),
+                    window: ring.summary(ring.capacity()),
+                }
+            })
+            .collect();
+        TelemetrySnapshot {
+            node: NodeTelemetry::capture(),
+            scenes,
+            sessions,
+        }
     }
 
     /// The scene registry (read access).
@@ -471,6 +533,68 @@ mod tests {
         assert_eq!(done.len(), poses.len());
         let c = server.scheduler().counters(id).unwrap();
         assert_eq!(c.steps as usize, poses.len());
+    }
+
+    #[test]
+    fn telemetry_snapshot_covers_scenes_and_sessions() {
+        let room = generate("room", 0.03, 96, 96);
+        let chair = generate("chair", 0.03, 96, 96);
+        let mut server = StreamServer::multi(CoordinatorConfig::default(), None);
+        let a = server.add_scene(SceneAssets::from_scene(&room)).unwrap();
+        let b = server
+            .add_scene(ShardedScene::partition(
+                &chair.cloud,
+                chair.intrinsics,
+                &ShardConfig {
+                    target_splats: 200,
+                    ..Default::default()
+                },
+            ))
+            .unwrap();
+        let sa = server.add_session_on(a);
+        let sb = server.add_session_on(b);
+        let poses = [room.sample_poses(1)[0], chair.sample_poses(1)[0]];
+        for _ in 0..4 {
+            server.advance_all(&poses);
+        }
+        let snap = server.telemetry_snapshot();
+        // Node totals are process-wide (other tests contribute too):
+        // only monotone lower bounds are assertable.
+        assert!(snap.node.frames >= 8);
+        assert_eq!(snap.scenes.len(), 2);
+        let mono = snap.scenes.iter().find(|s| s.scene == a as u32).unwrap();
+        assert_eq!(mono.store, "monolithic");
+        assert_eq!(mono.shards, 0);
+        assert_eq!(mono.sessions, 1);
+        assert!(mono.load_by_class.iter().all(|s| s.count == 0));
+        let shrd = snap.scenes.iter().find(|s| s.scene == b as u32).unwrap();
+        assert_eq!(shrd.store, "memory");
+        assert!(shrd.shards > 0);
+        assert!(shrd.resident_bytes > 0);
+        assert!(shrd.lifetime_loads > 0);
+        let class_obs: u64 = shrd.load_by_class.iter().map(|s| s.count).sum();
+        // Every performed store load lands in exactly one class histogram;
+        // lifetime_loads only counts loads whose commit won the slot, so
+        // racing loads (prefetch vs frame path) can push class_obs higher.
+        assert!(
+            class_obs >= shrd.lifetime_loads && class_obs > 0,
+            "class observations {class_obs} vs committed loads {}",
+            shrd.lifetime_loads
+        );
+        assert_eq!(snap.sessions.len(), 2);
+        for (sid, scene) in [(sa, a), (sb, b)] {
+            let se = snap.sessions.iter().find(|s| s.session == sid).unwrap();
+            assert_eq!(se.scene, Some(scene));
+            assert_eq!(se.frames, 4);
+            assert_eq!(se.window.frames, 4);
+            assert!(se.window.step_ms_p50 > 0.0);
+            assert!(se.window.warped_frames >= 3, "frames 1..3 warp");
+        }
+        // Both writers accept the snapshot.
+        let text = snap.to_prometheus();
+        assert!(text.contains(&format!("lsg_scene_shards{{scene=\"{b}\"}}")));
+        let json = snap.to_json().to_string_pretty();
+        assert!(crate::util::json::Json::parse(&json).is_ok());
     }
 
     #[test]

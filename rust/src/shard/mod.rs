@@ -43,4 +43,4 @@ pub use partition::{partition_cloud, ShardConfig};
 pub use residency::{
     EnsureOutcome, FileShardStore, MemoryShardStore, ShardResidency, ShardStore, StoreKind,
 };
-pub use scene::{ResidencyArbiter, SceneHandle, ShardStats, ShardedScene};
+pub use scene::{ResidencyArbiter, SceneHandle, ShardStats, ShardedScene, SizeClass};

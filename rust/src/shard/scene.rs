@@ -7,6 +7,7 @@ use super::catalog::ShardCatalog;
 use super::partition::{partition_cloud, ShardConfig};
 use super::residency::{MemoryShardStore, ShardResidency, ShardStore, StoreKind};
 use crate::scene::{GaussianCloud, Intrinsics, Pose, SceneAssets};
+use crate::telemetry::{HistSummary, Histogram};
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -41,6 +42,45 @@ pub struct ShardStats {
     /// file-backed store — the *measured* IO-latency signal the
     /// store-latency-aware prefetch budget consumes.
     pub t_load_file: Duration,
+}
+
+/// Shard size classes for the per-class load-latency histograms: a
+/// 50 KiB shard and a 5 MiB shard have very different store latencies,
+/// so a single lifetime mean mis-sizes the prefetch cap whenever the
+/// recently-loaded mix differs from the catalog mix. Index-aligned with
+/// [`SIZE_CLASS_LABELS`](crate::telemetry::SIZE_CLASS_LABELS).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SizeClass {
+    /// Under 64 KiB.
+    Small,
+    /// 64 KiB up to 1 MiB.
+    Medium,
+    /// 1 MiB and above.
+    Large,
+}
+
+impl SizeClass {
+    /// Number of classes (histogram array length).
+    pub const COUNT: usize = 3;
+
+    /// Classify a shard by its serialized byte size.
+    pub fn of_bytes(bytes: usize) -> SizeClass {
+        if bytes < 64 << 10 {
+            SizeClass::Small
+        } else if bytes < 1 << 20 {
+            SizeClass::Medium
+        } else {
+            SizeClass::Large
+        }
+    }
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn label(self) -> &'static str {
+        crate::telemetry::SIZE_CLASS_LABELS[self.index()]
+    }
 }
 
 /// External residency arbiter: the serve layer's governor implements
@@ -101,6 +141,14 @@ pub struct ShardedScene {
     /// the per-frame `ShardStats` latency split.
     load_ns_mem: AtomicU64,
     load_ns_file: AtomicU64,
+    /// Per-shard load latency histograms by [`SizeClass`] — the
+    /// percentile-capable refinement of the lifetime counters above,
+    /// feeding [`ShardedScene::expected_load_ns`] (prefetch cap) and the
+    /// serve layer's telemetry snapshot.
+    load_hist: [Histogram; SizeClass::COUNT],
+    /// Catalog composition by size class, fixed at construction —
+    /// the weights for the expected-latency estimate.
+    class_counts: [u64; SizeClass::COUNT],
 }
 
 impl std::fmt::Debug for ShardedScene {
@@ -137,6 +185,10 @@ impl ShardedScene {
         let total_gaussians = catalog.total_gaussians();
         let total_bytes = catalog.total_bytes();
         let residency = Mutex::new(ShardResidency::new(budget_bytes, catalog.len()));
+        let mut class_counts = [0u64; SizeClass::COUNT];
+        for meta in store.metas() {
+            class_counts[SizeClass::of_bytes(meta.bytes).index()] += 1;
+        }
         ShardedScene {
             catalog,
             store,
@@ -147,6 +199,8 @@ impl ShardedScene {
             arbiter: Mutex::new(None),
             load_ns_mem: AtomicU64::new(0),
             load_ns_file: AtomicU64::new(0),
+            load_hist: [Histogram::new(), Histogram::new(), Histogram::new()],
+            class_counts,
         }
     }
 
@@ -204,15 +258,19 @@ impl ShardedScene {
         let mut t_load = Duration::ZERO;
         let mut outcome = {
             let mut res = self.residency.lock().unwrap();
+            let pin_span = crate::telemetry::span("shard_pin");
             res.pin_warm(ids, out, &mut cold);
+            drop(pin_span);
             if cold.is_empty() {
                 res.commit(&[], out)
             } else {
                 drop(res);
                 let tl = Instant::now();
-                let loaded = super::residency::load_shards(self.store.as_ref(), &cold)
+                let loaded = self
+                    .load_shards_timed(&cold)
                     .expect("shard store failed to materialize a visible shard");
                 t_load = tl.elapsed();
+                let _commit_span = crate::telemetry::span("shard_commit");
                 let mut res = self.residency.lock().unwrap();
                 res.commit(&loaded, out)
             }
@@ -339,7 +397,7 @@ impl ShardedScene {
     /// documented last-frame-equivalent protection).
     fn load_and_commit(&self, ids: &[usize], speculative: bool) -> Option<u32> {
         let tl = Instant::now();
-        let loaded = super::residency::load_shards(self.store.as_ref(), ids).ok()?;
+        let loaded = self.load_shards_timed(ids).ok()?;
         self.record_load_ns(tl.elapsed());
         let mut res = self.residency.lock().unwrap();
         if speculative {
@@ -348,6 +406,34 @@ impl ShardedScene {
             let mut scratch = Vec::new();
             Some(res.commit(&loaded, &mut scratch).loaded)
         }
+    }
+
+    /// Timed twin of [`super::residency::load_shards`]: load `ids` from
+    /// the store (retrying each failure once), banking every shard's
+    /// latency into its size-class histogram and the global telemetry
+    /// hub, and — when `LSG_TRACE` is set — emitting one `shard_load`
+    /// trace span per shard. Latencies are floored at 1 ns so even
+    /// sub-tick memory-store loads register as observations (the
+    /// prefetch cap keys off "has a load ever been measured").
+    fn load_shards_timed(&self, ids: &[usize]) -> Result<Vec<(usize, Arc<ShardAssets>)>> {
+        use anyhow::Context;
+        let file = self.store.kind() == StoreKind::File;
+        let mut loaded = Vec::with_capacity(ids.len());
+        for &id in ids {
+            let _span = crate::telemetry::span("shard_load");
+            let t0 = Instant::now();
+            let assets = self
+                .store
+                .load(id)
+                .or_else(|_| self.store.load(id))
+                .with_context(|| format!("loading shard {id} (after one retry)"))?;
+            let ns = (t0.elapsed().as_nanos() as u64).max(1);
+            let class = SizeClass::of_bytes(self.catalog.meta(id).bytes);
+            self.load_hist[class.index()].record(ns);
+            crate::telemetry::hub().record_shard_load(file, ns);
+            loaded.push((id, assets));
+        }
+        Ok(loaded)
     }
 
     /// Bank `ShardStore::load` wall-clock into the lifetime per-kind
@@ -371,6 +457,54 @@ impl ShardedScene {
             self.load_ns_mem.load(Ordering::Relaxed),
             self.load_ns_file.load(Ordering::Relaxed),
         )
+    }
+
+    /// Expected per-shard load latency in ns for this scene's *catalog
+    /// mix*: each size class's observed mean latency, weighted by how
+    /// many catalog shards fall in that class (classes never loaded
+    /// borrow the overall observed mean). `None` until at least one
+    /// shard load has been measured — callers fall back to a fixed
+    /// default prefetch cap. This replaces the single lifetime mean: a
+    /// burst of small-shard loads no longer talks the cap into
+    /// over-committing when the catalog is mostly large shards.
+    pub fn expected_load_ns(&self) -> Option<u64> {
+        let mut obs = [0u64; SizeClass::COUNT];
+        let mut total_obs = 0u64;
+        let mut total_ns = 0u64;
+        for (i, h) in self.load_hist.iter().enumerate() {
+            obs[i] = h.count();
+            total_obs += obs[i];
+            total_ns += h.sum();
+        }
+        if total_obs == 0 {
+            return None;
+        }
+        let overall_mean = (total_ns / total_obs).max(1);
+        let mut weighted = 0u128;
+        let mut weight = 0u128;
+        for (i, h) in self.load_hist.iter().enumerate() {
+            let n = self.class_counts[i];
+            if n == 0 {
+                continue;
+            }
+            let mean = if obs[i] > 0 { (h.sum() / obs[i]).max(1) } else { overall_mean };
+            weighted += u128::from(n) * u128::from(mean);
+            weight += u128::from(n);
+        }
+        if weight == 0 {
+            return Some(overall_mean);
+        }
+        Some(((weighted / weight) as u64).max(1))
+    }
+
+    /// Per-size-class load-latency digests, indexed like
+    /// [`SIZE_CLASS_LABELS`](crate::telemetry::SIZE_CLASS_LABELS).
+    pub fn load_class_summary(&self) -> [HistSummary; SizeClass::COUNT] {
+        [
+            self.load_hist[0].summary(),
+            self.load_hist[1].summary(),
+            self.load_hist[2].summary(),
+        ]
     }
 
     /// Latency class of the backing store.
@@ -645,5 +779,48 @@ mod tests {
         assert_eq!(h.num_gaussians(), scene.cloud.len());
         assert!(h.monolithic().is_some());
         assert!(h.sharded().is_none());
+    }
+
+    #[test]
+    fn size_classes_partition_the_byte_range() {
+        assert_eq!(SizeClass::of_bytes(0), SizeClass::Small);
+        assert_eq!(SizeClass::of_bytes((64 << 10) - 1), SizeClass::Small);
+        assert_eq!(SizeClass::of_bytes(64 << 10), SizeClass::Medium);
+        assert_eq!(SizeClass::of_bytes((1 << 20) - 1), SizeClass::Medium);
+        assert_eq!(SizeClass::of_bytes(1 << 20), SizeClass::Large);
+        assert_eq!(SizeClass::Small.label(), "small");
+        assert_eq!(SizeClass::Large.index(), 2);
+    }
+
+    #[test]
+    fn expected_load_ns_tracks_measured_loads() {
+        let scene = generate("room", 0.04, 96, 96);
+        let pose = scene.sample_poses(1)[0];
+        let sharded = ShardedScene::partition(
+            &scene.cloud,
+            scene.intrinsics,
+            &ShardConfig {
+                target_splats: 200,
+                ..Default::default()
+            },
+        );
+        assert_eq!(
+            sharded.expected_load_ns(),
+            None,
+            "estimate must be None before any load is measured"
+        );
+        assert!(sharded.prefetch(&pose) > 0);
+        let est = sharded.expected_load_ns().expect("prefetch measured loads");
+        assert!(est >= 1);
+        let classes = sharded.load_class_summary();
+        let observed: u64 = classes.iter().map(|s| s.count).sum();
+        assert!(observed > 0, "no per-class load observations recorded");
+        // Every observed class digest carries a usable percentile. The
+        // p50 may exceed the recorded max by up to one bucket width
+        // (upper in-bucket interpolation), never more.
+        for s in classes.iter().filter(|s| s.count > 0) {
+            assert!(s.p50 >= 1);
+            assert!(s.p50 <= s.max + s.max / 8 + 1, "p50 {} vs max {}", s.p50, s.max);
+        }
     }
 }

@@ -1,0 +1,425 @@
+//! Snapshot assembly + exposition writers.
+//!
+//! [`TelemetrySnapshot`] is the read-side aggregate over the whole
+//! serving stack — process-wide hub totals, per-scene residency and
+//! size-class load latency, per-session ring windows — assembled by
+//! [`StreamServer::telemetry_snapshot`](crate::serve::StreamServer::telemetry_snapshot).
+//! Two writers, no new crates: [`TelemetrySnapshot::to_json`] on the
+//! in-repo [`Json`] tree, and [`TelemetrySnapshot::to_prometheus`]
+//! emitting Prometheus text exposition (counters as `_total`, histogram
+//! digests as `quantile`-labelled gauges).
+
+use super::hist::HistSummary;
+use super::hub::{hub, MetricsHub};
+use super::ring::RingSummary;
+use crate::util::json::Json;
+use std::fmt::Write as _;
+use std::sync::atomic::Ordering;
+
+/// Labels for the shard size classes, index-aligned with
+/// [`SizeClass`](crate::shard::SizeClass).
+pub const SIZE_CLASS_LABELS: [&str; 3] = ["small", "medium", "large"];
+
+/// Process-wide totals and distributions captured from the hub.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NodeTelemetry {
+    pub frames: u64,
+    pub full_frames: u64,
+    pub warped_frames: u64,
+    pub stalled_steps: u64,
+    pub shard_loads: u64,
+    pub governor_evictions: u64,
+    pub frame_ns: HistSummary,
+    pub lateness_ns: HistSummary,
+    pub queue_wait_ns: HistSummary,
+    pub imbalance_pm: HistSummary,
+    pub masked_lane_pm: HistSummary,
+    pub load_ns_mem: HistSummary,
+    pub load_ns_file: HistSummary,
+}
+
+impl NodeTelemetry {
+    /// Digest the process-wide [`hub`].
+    pub fn capture() -> NodeTelemetry {
+        NodeTelemetry::from_hub(hub())
+    }
+
+    /// Digest an explicit hub (tests use a private one).
+    pub fn from_hub(h: &MetricsHub) -> NodeTelemetry {
+        NodeTelemetry {
+            frames: h.frames.load(Ordering::Relaxed),
+            full_frames: h.full_frames.load(Ordering::Relaxed),
+            warped_frames: h.warped_frames.load(Ordering::Relaxed),
+            stalled_steps: h.stalled_steps.load(Ordering::Relaxed),
+            shard_loads: h.shard_loads.load(Ordering::Relaxed),
+            governor_evictions: h.governor_evictions.load(Ordering::Relaxed),
+            frame_ns: h.frame_ns.summary(),
+            lateness_ns: h.lateness_ns.summary(),
+            queue_wait_ns: h.queue_wait_ns.summary(),
+            imbalance_pm: h.imbalance_pm.summary(),
+            masked_lane_pm: h.masked_lane_pm.summary(),
+            load_ns_mem: h.load_ns_mem.summary(),
+            load_ns_file: h.load_ns_file.summary(),
+        }
+    }
+}
+
+/// Per-scene aggregate: registry/residency stats plus size-class load
+/// latency digests (all-zero summaries for monolithic scenes).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SceneTelemetry {
+    pub scene: u32,
+    /// `"monolithic"`, `"memory"`, or `"file"`.
+    pub store: &'static str,
+    pub sessions: u32,
+    pub shards: u32,
+    pub resident_bytes: u64,
+    pub pinned_bytes: u64,
+    pub lifetime_loads: u64,
+    pub lifetime_evictions: u64,
+    pub evicted_by_peers: u64,
+    /// Shard load latency by size class, index-aligned with
+    /// [`SIZE_CLASS_LABELS`] (nanoseconds).
+    pub load_by_class: [HistSummary; 3],
+}
+
+/// Per-session aggregate: ring totals plus one window digest.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SessionTelemetry {
+    pub session: usize,
+    /// Scene this session renders (multi-scene servers).
+    pub scene: Option<usize>,
+    /// Lifetime frames stepped by this session.
+    pub frames: u64,
+    /// Aggregates over the ring window.
+    pub window: RingSummary,
+}
+
+/// The full cross-layer aggregate; see module docs.
+#[derive(Clone, Debug, Default)]
+pub struct TelemetrySnapshot {
+    pub node: NodeTelemetry,
+    pub scenes: Vec<SceneTelemetry>,
+    pub sessions: Vec<SessionTelemetry>,
+}
+
+fn ns_hist_json(s: &HistSummary) -> Json {
+    let ms = |v: u64| v as f64 / 1e6;
+    let mut j = Json::obj();
+    j.set("count", s.count)
+        .set("mean_ms", s.mean / 1e6)
+        .set("p50_ms", ms(s.p50))
+        .set("p95_ms", ms(s.p95))
+        .set("p99_ms", ms(s.p99))
+        .set("max_ms", ms(s.max));
+    j
+}
+
+fn ratio_hist_json(s: &HistSummary) -> Json {
+    let r = |v: u64| v as f64 / 1e3;
+    let mut j = Json::obj();
+    j.set("count", s.count)
+        .set("mean", s.mean / 1e3)
+        .set("p50", r(s.p50))
+        .set("p95", r(s.p95))
+        .set("p99", r(s.p99))
+        .set("max", r(s.max));
+    j
+}
+
+/// Emit one quantile-labelled gauge family from a summary.
+fn prom_hist(out: &mut String, name: &str, labels: &str, s: &HistSummary, scale: f64) {
+    if s.count == 0 {
+        return;
+    }
+    let sep = if labels.is_empty() { "" } else { "," };
+    for (q, v) in [(0.5, s.p50), (0.95, s.p95), (0.99, s.p99)] {
+        let _ = writeln!(
+            out,
+            "{name}{{{labels}{sep}quantile=\"{q}\"}} {:.6}",
+            v as f64 * scale
+        );
+    }
+    if labels.is_empty() {
+        let _ = writeln!(out, "{name}_count {}", s.count);
+    } else {
+        let _ = writeln!(out, "{name}_count{{{labels}}} {}", s.count);
+    }
+}
+
+impl TelemetrySnapshot {
+    /// JSON exposition over the in-repo [`Json`] tree.
+    pub fn to_json(&self) -> Json {
+        let n = &self.node;
+        let mut node = Json::obj();
+        node.set("frames", n.frames)
+            .set("full_frames", n.full_frames)
+            .set("warped_frames", n.warped_frames)
+            .set("stalled_steps", n.stalled_steps)
+            .set("shard_loads", n.shard_loads)
+            .set("governor_evictions", n.governor_evictions)
+            .set("frame_ms", ns_hist_json(&n.frame_ns))
+            .set("lateness_ms", ns_hist_json(&n.lateness_ns))
+            .set("queue_wait_ms", ns_hist_json(&n.queue_wait_ns))
+            .set("imbalance", ratio_hist_json(&n.imbalance_pm))
+            .set("masked_lane_fraction", ratio_hist_json(&n.masked_lane_pm))
+            .set("load_ms_mem", ns_hist_json(&n.load_ns_mem))
+            .set("load_ms_file", ns_hist_json(&n.load_ns_file));
+
+        let scenes: Vec<Json> = self
+            .scenes
+            .iter()
+            .map(|sc| {
+                let mut j = Json::obj();
+                j.set("scene", sc.scene as usize)
+                    .set("store", sc.store)
+                    .set("sessions", sc.sessions as usize)
+                    .set("shards", sc.shards as usize)
+                    .set("resident_bytes", sc.resident_bytes)
+                    .set("pinned_bytes", sc.pinned_bytes)
+                    .set("lifetime_loads", sc.lifetime_loads)
+                    .set("lifetime_evictions", sc.lifetime_evictions)
+                    .set("evicted_by_peers", sc.evicted_by_peers);
+                let mut classes = Json::obj();
+                for (label, s) in SIZE_CLASS_LABELS.iter().zip(sc.load_by_class.iter()) {
+                    if s.count > 0 {
+                        classes.set(label, ns_hist_json(s));
+                    }
+                }
+                j.set("load_ms_by_class", classes);
+                j
+            })
+            .collect();
+
+        let sessions: Vec<Json> = self
+            .sessions
+            .iter()
+            .map(|se| {
+                let w = &se.window;
+                let mut j = Json::obj();
+                j.set("session", se.session)
+                    .set("frames", se.frames)
+                    .set("window_frames", w.frames)
+                    .set("warped_frames", w.warped_frames)
+                    .set("stalled", w.stalled)
+                    .set("shards_loaded", w.shards_loaded)
+                    .set("step_ms_mean", w.step_ms_mean)
+                    .set("step_ms_p50", w.step_ms_p50)
+                    .set("step_ms_p95", w.step_ms_p95)
+                    .set("step_ms_p99", w.step_ms_p99)
+                    .set("lateness_ms_p50", w.lateness_ms_p50)
+                    .set("lateness_ms_p99", w.lateness_ms_p99)
+                    .set("queue_ms_p50", w.queue_ms_p50)
+                    .set("queue_ms_p99", w.queue_ms_p99)
+                    .set("imbalance_mean", w.imbalance_mean)
+                    .set("masked_lane_fraction_mean", w.masked_lane_fraction_mean)
+                    .set("warped_fraction_mean", w.warped_fraction_mean)
+                    .set("pairs_mean", w.pairs_mean);
+                if let Some(scene) = se.scene {
+                    j.set("scene", scene);
+                }
+                j
+            })
+            .collect();
+
+        let mut root = Json::obj();
+        root.set("node", node).set("scenes", scenes).set("sessions", sessions);
+        root
+    }
+
+    /// Prometheus text exposition (the `lsg_` metric family).
+    pub fn to_prometheus(&self) -> String {
+        const NS_TO_MS: f64 = 1e-6;
+        const PM_TO_RATIO: f64 = 1e-3;
+        let mut out = String::with_capacity(2048);
+        let n = &self.node;
+        for (name, v) in [
+            ("lsg_frames_total", n.frames),
+            ("lsg_full_frames_total", n.full_frames),
+            ("lsg_warped_frames_total", n.warped_frames),
+            ("lsg_stalled_steps_total", n.stalled_steps),
+            ("lsg_shard_loads_total", n.shard_loads),
+            ("lsg_governor_evictions_total", n.governor_evictions),
+        ] {
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {v}");
+        }
+        prom_hist(&mut out, "lsg_frame_ms", "", &n.frame_ns, NS_TO_MS);
+        prom_hist(&mut out, "lsg_lateness_ms", "", &n.lateness_ns, NS_TO_MS);
+        prom_hist(&mut out, "lsg_queue_wait_ms", "", &n.queue_wait_ns, NS_TO_MS);
+        prom_hist(&mut out, "lsg_imbalance", "", &n.imbalance_pm, PM_TO_RATIO);
+        prom_hist(
+            &mut out,
+            "lsg_masked_lane_fraction",
+            "",
+            &n.masked_lane_pm,
+            PM_TO_RATIO,
+        );
+        prom_hist(&mut out, "lsg_load_ms", "store=\"memory\"", &n.load_ns_mem, NS_TO_MS);
+        prom_hist(&mut out, "lsg_load_ms", "store=\"file\"", &n.load_ns_file, NS_TO_MS);
+
+        for sc in &self.scenes {
+            let scene = sc.scene;
+            let l = format!("scene=\"{scene}\"");
+            for (name, v) in [
+                ("lsg_scene_sessions", sc.sessions as u64),
+                ("lsg_scene_shards", sc.shards as u64),
+                ("lsg_scene_resident_bytes", sc.resident_bytes),
+                ("lsg_scene_pinned_bytes", sc.pinned_bytes),
+                ("lsg_scene_loads_total", sc.lifetime_loads),
+                ("lsg_scene_evictions_total", sc.lifetime_evictions),
+                ("lsg_scene_evicted_by_peers_total", sc.evicted_by_peers),
+            ] {
+                let _ = writeln!(out, "{name}{{{l}}} {v}");
+            }
+            for (label, s) in SIZE_CLASS_LABELS.iter().zip(sc.load_by_class.iter()) {
+                let labels = format!("scene=\"{scene}\",class=\"{label}\"");
+                prom_hist(&mut out, "lsg_scene_load_ms", &labels, s, NS_TO_MS);
+            }
+        }
+
+        for se in &self.sessions {
+            let session = se.session;
+            let l = format!("session=\"{session}\"");
+            let w = &se.window;
+            let _ = writeln!(out, "lsg_session_frames_total{{{l}}} {}", se.frames);
+            let _ = writeln!(out, "lsg_session_window_stalls{{{l}}} {}", w.stalled);
+            for (name, v) in [
+                ("lsg_session_step_ms", [w.step_ms_p50, w.step_ms_p95, w.step_ms_p99]),
+                (
+                    "lsg_session_lateness_ms",
+                    [w.lateness_ms_p50, w.lateness_ms_p99, w.lateness_ms_p99],
+                ),
+                (
+                    "lsg_session_queue_ms",
+                    [w.queue_ms_p50, w.queue_ms_p99, w.queue_ms_p99],
+                ),
+            ] {
+                for (q, v) in [(0.5, v[0]), (0.95, v[1]), (0.99, v[2])] {
+                    let _ = writeln!(out, "{name}{{{l},quantile=\"{q}\"}} {v:.6}");
+                }
+            }
+            let _ = writeln!(
+                out,
+                "lsg_session_warped_fraction{{{l}}} {:.6}",
+                w.warped_fraction_mean
+            );
+            let _ = writeln!(out, "lsg_session_imbalance{{{l}}} {:.6}", w.imbalance_mean);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::hist::Histogram;
+
+    fn sample_snapshot() -> TelemetrySnapshot {
+        let hub = MetricsHub::new();
+        for i in 1..=100u64 {
+            hub.record_frame(i % 5 == 0, i * 1_000_000);
+            hub.record_sched(i * 10_000, i * 1_000, i > 95);
+            hub.record_shard_load(i % 2 == 0, i * 50_000);
+        }
+        hub.imbalance_pm.record(1_250);
+        hub.masked_lane_pm.record(120);
+        let class_hist = Histogram::new();
+        for i in 1..=10u64 {
+            class_hist.record(i * 100_000);
+        }
+        let mut ring = crate::telemetry::FrameRing::with_capacity(64);
+        for i in 1..=50u64 {
+            ring.push(crate::telemetry::FrameRecord {
+                frame_idx: i,
+                warped: i % 5 != 0,
+                step_ns: i * 2_000_000,
+                lateness_ns: i * 10_000,
+                stalled: i > 48,
+                imbalance_pm: 1_100,
+                pairs: 1_000,
+                ..Default::default()
+            });
+        }
+        TelemetrySnapshot {
+            node: NodeTelemetry::from_hub(&hub),
+            scenes: vec![SceneTelemetry {
+                scene: 0,
+                store: "memory",
+                sessions: 2,
+                shards: 16,
+                resident_bytes: 1 << 20,
+                pinned_bytes: 1 << 18,
+                lifetime_loads: 40,
+                lifetime_evictions: 8,
+                evicted_by_peers: 1,
+                load_by_class: [class_hist.summary(), HistSummary::default(), HistSummary::default()],
+            }],
+            sessions: vec![SessionTelemetry {
+                session: 0,
+                scene: Some(0),
+                frames: ring.total(),
+                window: ring.summary(64),
+            }],
+        }
+    }
+
+    #[test]
+    fn json_writer_round_trips_and_carries_percentiles() {
+        let snap = sample_snapshot();
+        let j = snap.to_json();
+        // Round-trip through the in-repo parser.
+        let parsed = Json::parse(&j.to_string_pretty()).expect("self-emitted json parses");
+        let node = parsed.get("node").expect("node section");
+        assert_eq!(node.get("frames").and_then(Json::as_f64), Some(100.0));
+        let frame_ms = node.get("frame_ms").expect("frame_ms digest");
+        let p50 = frame_ms.get("p50_ms").and_then(Json::as_f64).unwrap();
+        let p99 = frame_ms.get("p99_ms").and_then(Json::as_f64).unwrap();
+        assert!(p50 > 40.0 && p50 < 60.0, "p50_ms {p50}");
+        assert!(p99 > 90.0 && p99 <= 115.0, "p99_ms {p99}");
+        let scenes = parsed.get("scenes").and_then(Json::as_arr).unwrap();
+        assert_eq!(scenes.len(), 1);
+        let classes = scenes[0].get("load_ms_by_class").unwrap();
+        assert!(classes.get("small").is_some(), "measured class present");
+        assert!(classes.get("large").is_none(), "empty class omitted");
+        let sessions = parsed.get("sessions").and_then(Json::as_arr).unwrap();
+        let s0 = &sessions[0];
+        assert_eq!(s0.get("window_frames").and_then(Json::as_f64), Some(50.0));
+        assert!(s0.get("step_ms_p99").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(s0.get("lateness_ms_p50").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn prometheus_writer_emits_expected_families() {
+        let snap = sample_snapshot();
+        let text = snap.to_prometheus();
+        for needle in [
+            "# TYPE lsg_frames_total counter",
+            "lsg_frames_total 100",
+            "lsg_stalled_steps_total 5",
+            "lsg_frame_ms{quantile=\"0.5\"}",
+            "lsg_lateness_ms{quantile=\"0.99\"}",
+            "lsg_load_ms{store=\"memory\",quantile=\"0.5\"}",
+            "lsg_load_ms{store=\"file\",quantile=\"0.99\"}",
+            "lsg_scene_resident_bytes{scene=\"0\"}",
+            "lsg_scene_load_ms{scene=\"0\",class=\"small\",quantile=\"0.5\"}",
+            "lsg_session_step_ms{session=\"0\",quantile=\"0.99\"}",
+            "lsg_session_lateness_ms{session=\"0\",quantile=\"0.5\"}",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        // Unmeasured families stay silent (no NaN/zero-count spam).
+        assert!(!text.contains("class=\"large\""));
+        // Every line is `name{labels} value` or a comment.
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#')
+                    || line
+                        .split_once(' ')
+                        .map(|(_, v)| v.parse::<f64>().is_ok())
+                        .unwrap_or(false),
+                "malformed exposition line: {line}"
+            );
+        }
+    }
+}

@@ -1,0 +1,355 @@
+//! Fixed-bucket log-linear histograms: the percentile primitive under
+//! every aggregated latency/imbalance signal in the telemetry layer.
+//!
+//! Layout: values `0..8` get unit-width buckets; every octave above that
+//! is split into 8 linear sub-buckets, so relative quantization error is
+//! bounded by 1/8 across the whole range. Values are clamped to
+//! [`MAX_VALUE`] (~18 minutes in nanoseconds) — far beyond any per-frame
+//! or per-shard latency this system produces. The bucket count is a
+//! compile-time constant, so both variants preallocate everything:
+//!
+//! * [`Histogram`] — atomic buckets, `&self` recording with relaxed
+//!   ordering only. Safe to share as a `static` and feed from the render
+//!   hot path (one `fetch_add` per array slot, no locks, no allocation).
+//! * [`LocalHistogram`] — plain-`u64` twin for single-owner accumulators
+//!   ([`StageTimes`](crate::util::timer::StageTimes)); same bucket math,
+//!   mergeable.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of sub-buckets per octave (power-of-two value range).
+pub const SUBS_PER_OCTAVE: usize = 8;
+
+/// Largest recordable value; everything above clamps into the top bucket.
+/// `2^40 - 1` ns is ≈ 18.3 minutes.
+pub const MAX_VALUE: u64 = (1 << 40) - 1;
+
+/// Total bucket count: 8 unit buckets + 8 sub-buckets for each octave
+/// `[2^3, 2^4) .. [2^39, 2^40)`.
+pub const NUM_BUCKETS: usize = SUBS_PER_OCTAVE + (40 - 3) * SUBS_PER_OCTAVE;
+
+/// Map a value (already clamped to [`MAX_VALUE`]) to its bucket index.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUBS_PER_OCTAVE as u64 {
+        v as usize
+    } else {
+        let msb = 63 - v.leading_zeros() as u64; // >= 3
+        let sub = (v >> (msb - 3)) - SUBS_PER_OCTAVE as u64;
+        (SUBS_PER_OCTAVE as u64 + (msb - 3) * SUBS_PER_OCTAVE as u64 + sub) as usize
+    }
+}
+
+/// Inclusive-lower / exclusive-upper value bounds of bucket `i`.
+#[inline]
+pub fn bucket_bounds(i: usize) -> (u64, u64) {
+    if i < SUBS_PER_OCTAVE {
+        (i as u64, i as u64 + 1)
+    } else {
+        let oct = (i - SUBS_PER_OCTAVE) / SUBS_PER_OCTAVE + 3;
+        let sub = ((i - SUBS_PER_OCTAVE) % SUBS_PER_OCTAVE) as u64;
+        let width = 1u64 << (oct - 3);
+        let lo = (SUBS_PER_OCTAVE as u64 + sub) << (oct - 3);
+        (lo, lo + width)
+    }
+}
+
+/// Nearest-rank percentile with linear interpolation inside the bucket,
+/// shared by both histogram variants. `counts(i)` yields bucket `i`'s
+/// population; `total` is the overall count.
+fn percentile_from(counts: impl Fn(usize) -> u64, total: u64, q: f64) -> u64 {
+    if total == 0 {
+        return 0;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+    let mut cum = 0u64;
+    for i in 0..NUM_BUCKETS {
+        let c = counts(i);
+        if c == 0 {
+            continue;
+        }
+        if cum + c >= target {
+            let (lo, hi) = bucket_bounds(i);
+            let frac = (target - cum) as f64 / c as f64;
+            return lo + ((hi - lo) as f64 * frac) as u64;
+        }
+        cum += c;
+    }
+    MAX_VALUE
+}
+
+/// Point-in-time digest of a histogram (raw value units — the owning
+/// field's name carries the unit, e.g. `frame_ns`, `imbalance_pm`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct HistSummary {
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+    pub mean: f64,
+    pub p50: u64,
+    pub p95: u64,
+    pub p99: u64,
+}
+
+/// Lock-free shared histogram: relaxed atomic buckets, `&self` recording.
+pub struct Histogram {
+    buckets: [AtomicU64; NUM_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Histogram {
+    pub const fn new() -> Histogram {
+        Histogram {
+            buckets: [const { AtomicU64::new(0) }; NUM_BUCKETS],
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation. Allocation-free, lock-free: four relaxed
+    /// `fetch_add`s and one relaxed `fetch_max`.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        let v = v.min(MAX_VALUE);
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Record a duration in nanoseconds.
+    #[inline]
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_nanos().min(MAX_VALUE as u128) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    /// Approximate percentile (`q` in `[0, 1]`), ≤ 1/8 relative error.
+    pub fn percentile(&self, q: f64) -> u64 {
+        percentile_from(|i| self.buckets[i].load(Ordering::Relaxed), self.count(), q)
+    }
+
+    pub fn summary(&self) -> HistSummary {
+        HistSummary {
+            count: self.count(),
+            sum: self.sum(),
+            max: self.max(),
+            mean: self.mean(),
+            p50: self.percentile(0.50),
+            p95: self.percentile(0.95),
+            p99: self.percentile(0.99),
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+/// Single-owner histogram: identical bucket math, no atomics, mergeable.
+#[derive(Clone)]
+pub struct LocalHistogram {
+    buckets: [u64; NUM_BUCKETS],
+    count: u64,
+    sum: u64,
+    max: u64,
+}
+
+impl LocalHistogram {
+    pub const fn new() -> LocalHistogram {
+        LocalHistogram {
+            buckets: [0; NUM_BUCKETS],
+            count: 0,
+            sum: 0,
+            max: 0,
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        let v = v.min(MAX_VALUE);
+        self.buckets[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.max = self.max.max(v);
+    }
+
+    #[inline]
+    pub fn record_duration(&mut self, d: Duration) {
+        self.record(d.as_nanos().min(MAX_VALUE as u128) as u64);
+    }
+
+    pub fn merge(&mut self, other: &LocalHistogram) {
+        for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += *o;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    pub fn percentile(&self, q: f64) -> u64 {
+        percentile_from(|i| self.buckets[i], self.count, q)
+    }
+
+    pub fn summary(&self) -> HistSummary {
+        HistSummary {
+            count: self.count,
+            sum: self.sum,
+            max: self.max,
+            mean: self.mean(),
+            p50: self.percentile(0.50),
+            p95: self.percentile(0.95),
+            p99: self.percentile(0.99),
+        }
+    }
+}
+
+impl Default for LocalHistogram {
+    fn default() -> LocalHistogram {
+        LocalHistogram::new()
+    }
+}
+
+impl std::fmt::Debug for LocalHistogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LocalHistogram")
+            .field("count", &self.count)
+            .field("sum", &self.sum)
+            .field("max", &self.max)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_monotone_and_in_range() {
+        let mut prev = 0usize;
+        let mut v = 0u64;
+        while v <= MAX_VALUE {
+            let i = bucket_index(v);
+            assert!(i < NUM_BUCKETS, "index {i} out of range for {v}");
+            assert!(i >= prev, "bucket index regressed at {v}");
+            prev = i;
+            v = (v * 2).max(v + 1); // sample every octave boundary ±
+        }
+        assert_eq!(bucket_index(MAX_VALUE), NUM_BUCKETS - 1);
+    }
+
+    #[test]
+    fn bucket_bounds_partition_the_range() {
+        let mut expected_lo = 0u64;
+        for i in 0..NUM_BUCKETS {
+            let (lo, hi) = bucket_bounds(i);
+            assert_eq!(lo, expected_lo, "gap before bucket {i}");
+            assert!(hi > lo);
+            // Every value in [lo, hi) maps back to bucket i.
+            assert_eq!(bucket_index(lo), i);
+            assert_eq!(bucket_index(hi - 1), i);
+            expected_lo = hi;
+        }
+        assert_eq!(expected_lo, MAX_VALUE + 1);
+    }
+
+    #[test]
+    fn percentiles_are_within_relative_error() {
+        let h = Histogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        for (q, exact) in [(0.50, 5_000.0), (0.95, 9_500.0), (0.99, 9_900.0)] {
+            let got = h.percentile(q) as f64;
+            let rel = (got - exact).abs() / exact;
+            assert!(rel <= 0.125, "p{q}: got {got}, exact {exact}, rel {rel}");
+        }
+        assert_eq!(h.count(), 10_000);
+        assert_eq!(h.max(), 10_000);
+        assert!((h.mean() - 5_000.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn clamps_at_max_value() {
+        let h = Histogram::new();
+        h.record(u64::MAX);
+        assert_eq!(h.max(), MAX_VALUE);
+        assert_eq!(h.percentile(1.0), MAX_VALUE);
+    }
+
+    #[test]
+    fn local_merge_matches_combined() {
+        let mut a = LocalHistogram::new();
+        let mut b = LocalHistogram::new();
+        let mut c = LocalHistogram::new();
+        for v in 0..1_000u64 {
+            if v % 2 == 0 {
+                a.record(v * 3);
+            } else {
+                b.record(v * 3);
+            }
+            c.record(v * 3);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), c.count());
+        assert_eq!(a.sum(), c.sum());
+        assert_eq!(a.max(), c.max());
+        assert_eq!(a.percentile(0.5), c.percentile(0.5));
+        assert_eq!(a.percentile(0.99), c.percentile(0.99));
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let h = Histogram::new();
+        let s = h.summary();
+        assert_eq!(s, HistSummary::default());
+    }
+}

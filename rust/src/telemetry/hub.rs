@@ -1,0 +1,149 @@
+//! Process-wide metrics hub: one static struct of atomic counters and
+//! [`Histogram`]s that every layer records into as frames commit.
+//!
+//! The hub is intentionally a *fixed* set of fields rather than a string
+//! registry: the hot paths that feed it (session step, scheduler commit,
+//! shard load) must stay allocation-free and lock-free, and a static
+//! struct of atomics is the cheapest thing that is. Aggregation across
+//! sessions/scenes happens read-side in
+//! [`StreamServer::telemetry_snapshot`](crate::serve::StreamServer::telemetry_snapshot)
+//! via [`NodeTelemetry::capture`](crate::telemetry::NodeTelemetry::capture).
+//!
+//! Units are encoded in field names: `_ns` nanoseconds, `_pm` permille
+//! (ratios × 1000, so imbalance 1.25 records as 1250).
+
+use super::hist::Histogram;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// All cross-layer aggregated signals. Fields are public: call sites
+/// record straight into the histogram/counter they own.
+pub struct MetricsHub {
+    /// Wall-clock of `StreamSession::step` (full + warped frames).
+    pub frame_ns: Histogram,
+    /// Scheduler lateness of paced steps (finish − deadline).
+    pub lateness_ns: Histogram,
+    /// Queue wait of paced steps (start − deadline).
+    pub queue_wait_ns: Histogram,
+    /// Measured plan imbalance (max/mean partition time, permille) of
+    /// planned passes.
+    pub imbalance_pm: Histogram,
+    /// Masked-lane waste of SIMD passes (masked/total lanes, permille).
+    pub masked_lane_pm: Histogram,
+    /// Per-shard load latency, memory-backed stores.
+    pub load_ns_mem: Histogram,
+    /// Per-shard load latency, file-backed stores.
+    pub load_ns_file: Histogram,
+    /// Total frames stepped.
+    pub frames: AtomicU64,
+    /// Dense (window-boundary) frames.
+    pub full_frames: AtomicU64,
+    /// Warped (TWSR / pixel) frames.
+    pub warped_frames: AtomicU64,
+    /// Paced steps whose lateness exceeded their interval.
+    pub stalled_steps: AtomicU64,
+    /// Individual shard loads (frame-critical + prefetch).
+    pub shard_loads: AtomicU64,
+    /// Shards evicted by the cross-scene residency governor.
+    pub governor_evictions: AtomicU64,
+}
+
+impl MetricsHub {
+    pub const fn new() -> MetricsHub {
+        MetricsHub {
+            frame_ns: Histogram::new(),
+            lateness_ns: Histogram::new(),
+            queue_wait_ns: Histogram::new(),
+            imbalance_pm: Histogram::new(),
+            masked_lane_pm: Histogram::new(),
+            load_ns_mem: Histogram::new(),
+            load_ns_file: Histogram::new(),
+            frames: AtomicU64::new(0),
+            full_frames: AtomicU64::new(0),
+            warped_frames: AtomicU64::new(0),
+            stalled_steps: AtomicU64::new(0),
+            shard_loads: AtomicU64::new(0),
+            governor_evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one committed frame (every `StreamSession::step`).
+    #[inline]
+    pub fn record_frame(&self, full: bool, step_ns: u64) {
+        self.frames.fetch_add(1, Ordering::Relaxed);
+        if full {
+            self.full_frames.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.warped_frames.fetch_add(1, Ordering::Relaxed);
+        }
+        self.frame_ns.record(step_ns);
+    }
+
+    /// Record one paced scheduler commit.
+    #[inline]
+    pub fn record_sched(&self, lateness_ns: u64, queue_ns: u64, stalled: bool) {
+        self.lateness_ns.record(lateness_ns);
+        self.queue_wait_ns.record(queue_ns);
+        if stalled {
+            self.stalled_steps.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record one shard load (`file` selects the store-kind histogram).
+    #[inline]
+    pub fn record_shard_load(&self, file: bool, load_ns: u64) {
+        self.shard_loads.fetch_add(1, Ordering::Relaxed);
+        if file {
+            self.load_ns_file.record(load_ns);
+        } else {
+            self.load_ns_mem.record(load_ns);
+        }
+    }
+}
+
+impl Default for MetricsHub {
+    fn default() -> MetricsHub {
+        MetricsHub::new()
+    }
+}
+
+static HUB: MetricsHub = MetricsHub::new();
+
+/// The process-wide hub. Counters are lifetime totals for this process;
+/// read-side consumers take deltas if they need windows.
+#[inline]
+pub fn hub() -> &'static MetricsHub {
+    &HUB
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The hub is process-global, so tests assert monotonic deltas only.
+    #[test]
+    fn frame_and_sched_records_accumulate() {
+        let h = MetricsHub::new();
+        h.record_frame(true, 1_000_000);
+        h.record_frame(false, 500_000);
+        h.record_sched(10_000, 2_000, true);
+        h.record_shard_load(false, 30_000);
+        h.record_shard_load(true, 400_000);
+        assert_eq!(h.frames.load(Ordering::Relaxed), 2);
+        assert_eq!(h.full_frames.load(Ordering::Relaxed), 1);
+        assert_eq!(h.warped_frames.load(Ordering::Relaxed), 1);
+        assert_eq!(h.stalled_steps.load(Ordering::Relaxed), 1);
+        assert_eq!(h.shard_loads.load(Ordering::Relaxed), 2);
+        assert_eq!(h.frame_ns.count(), 2);
+        assert_eq!(h.lateness_ns.count(), 1);
+        assert_eq!(h.load_ns_mem.count(), 1);
+        assert_eq!(h.load_ns_file.count(), 1);
+        assert!(h.frame_ns.percentile(0.99) >= 900_000);
+    }
+
+    #[test]
+    fn global_hub_is_reachable() {
+        let before = hub().frames.load(Ordering::Relaxed);
+        hub().record_frame(true, 1);
+        assert!(hub().frames.load(Ordering::Relaxed) > before);
+    }
+}

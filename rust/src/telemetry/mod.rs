@@ -1,0 +1,36 @@
+//! Unified telemetry: metrics hub, percentile histograms, per-session
+//! frame rings, and a Chrome-trace span tracer across the serving stack.
+//!
+//! Four pieces, one invariant — *recording never allocates or locks in
+//! steady state* (enforced by `rust/tests/zero_alloc.rs`):
+//!
+//! * [`hist`] — fixed-bucket log-linear [`Histogram`]s (atomic) and
+//!   [`LocalHistogram`]s (single-owner), the percentile primitive.
+//! * [`hub`] — the process-wide [`MetricsHub`] of counters + histograms
+//!   fed by session steps, scheduler commits, shard loads, and governor
+//!   evictions.
+//! * [`ring`] — per-session bounded [`FrameRing`]s of committed
+//!   [`FrameRecord`]s with windowed queries.
+//! * [`trace`] — `LSG_TRACE=<path>` scoped [`span`]s over the real
+//!   pipeline stages, flushed as Perfetto-loadable JSON; one relaxed
+//!   atomic load per span when disabled.
+//!
+//! Read-side aggregation lives in [`expo`]:
+//! [`StreamServer::telemetry_snapshot`](crate::serve::StreamServer::telemetry_snapshot)
+//! assembles a [`TelemetrySnapshot`] with JSON and Prometheus writers.
+//! Env knobs and the Perfetto how-to are documented in
+//! `docs/OBSERVABILITY.md`.
+
+pub mod expo;
+pub mod hist;
+pub mod hub;
+pub mod ring;
+pub mod trace;
+
+pub use expo::{
+    NodeTelemetry, SceneTelemetry, SessionTelemetry, TelemetrySnapshot, SIZE_CLASS_LABELS,
+};
+pub use hist::{HistSummary, Histogram, LocalHistogram};
+pub use hub::{hub, MetricsHub};
+pub use ring::{FrameRecord, FrameRing, RingSummary, DEFAULT_RING_CAP};
+pub use trace::{complete, complete_on, flush as flush_trace, span, Span, SCHED_TRACK_BASE};

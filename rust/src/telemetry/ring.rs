@@ -1,0 +1,281 @@
+//! Per-session bounded ring of committed frame records.
+//!
+//! Each [`StreamSession`](crate::coordinator::StreamSession) owns one
+//! [`FrameRing`]: a preallocated circular buffer of `Copy` records, so
+//! steady-state pushes are a slot overwrite — no allocation, ever. The
+//! read side ([`FrameRing::summary`]) computes *exact* percentiles over
+//! the last N frames by sorting a scratch copy; that path allocates and
+//! is meant for snapshots/benches, not the frame loop. This replaces the
+//! benches' ad-hoc per-frame accumulation with windowed queries any
+//! consumer (snapshot exposition, future QoS loop) can share.
+
+/// One committed frame, distilled from the step's `StepSummary`.
+/// Scheduling fields are zero unless the step ran under the paced
+/// [`SessionScheduler`](crate::coordinator::SessionScheduler), which
+/// annotates the latest record after each commit.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FrameRecord {
+    /// Session-local frame index.
+    pub frame_idx: u64,
+    /// True for warped (TWSR / pixel) frames, false for dense renders.
+    pub warped: bool,
+    /// Wall-clock of the whole `step`.
+    pub step_ns: u64,
+    /// Pipeline stage splits (from `PassSummary`).
+    pub preprocess_ns: u64,
+    pub sort_ns: u64,
+    pub rasterize_ns: u64,
+    /// Scheduler lateness (finish − deadline), paced steps only.
+    pub lateness_ns: u64,
+    /// Scheduler queue wait (start − deadline), paced steps only.
+    pub queue_ns: u64,
+    /// Lateness exceeded the session interval.
+    pub stalled: bool,
+    /// Tile-splat pairs rasterized.
+    pub pairs: u64,
+    /// Shards loaded on the critical path of this frame.
+    pub shards_loaded: u32,
+    /// Measured plan imbalance, permille (0 when unplanned).
+    pub imbalance_pm: u32,
+    /// Masked SIMD lanes, permille of total lanes.
+    pub masked_lane_pm: u32,
+    /// Fraction of pixels carried by warping.
+    pub warped_fraction: f32,
+}
+
+/// Default ring capacity (frames) for a streaming session — at 30 FPS
+/// about 17 seconds of history.
+pub const DEFAULT_RING_CAP: usize = 512;
+
+/// Bounded circular buffer of [`FrameRecord`]s.
+pub struct FrameRing {
+    buf: Vec<FrameRecord>,
+    next: usize,
+    len: usize,
+    total: u64,
+}
+
+impl FrameRing {
+    /// Preallocate a ring holding the last `cap` frames (min 1).
+    pub fn with_capacity(cap: usize) -> FrameRing {
+        FrameRing {
+            buf: vec![FrameRecord::default(); cap.max(1)],
+            next: 0,
+            len: 0,
+            total: 0,
+        }
+    }
+
+    /// Append a record, overwriting the oldest once full. Allocation-free.
+    #[inline]
+    pub fn push(&mut self, rec: FrameRecord) {
+        self.buf[self.next] = rec;
+        self.next = (self.next + 1) % self.buf.len();
+        self.len = (self.len + 1).min(self.buf.len());
+        self.total += 1;
+    }
+
+    /// Records currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Lifetime frames pushed (including overwritten ones).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// The most recently pushed record.
+    pub fn latest(&self) -> Option<&FrameRecord> {
+        if self.len == 0 {
+            return None;
+        }
+        Some(&self.buf[(self.next + self.buf.len() - 1) % self.buf.len()])
+    }
+
+    /// Mutable access to the most recent record (scheduler annotation).
+    pub fn latest_mut(&mut self) -> Option<&mut FrameRecord> {
+        if self.len == 0 {
+            return None;
+        }
+        let i = (self.next + self.buf.len() - 1) % self.buf.len();
+        Some(&mut self.buf[i])
+    }
+
+    /// The last `n` records, oldest → newest.
+    pub fn iter_recent(&self, n: usize) -> impl Iterator<Item = &FrameRecord> + '_ {
+        let n = n.min(self.len);
+        let cap = self.buf.len();
+        let start = (self.next + cap - n) % cap;
+        (0..n).map(move |i| &self.buf[(start + i) % cap])
+    }
+
+    /// Windowed aggregates over the last `window` frames (exact
+    /// percentiles — sorts a scratch copy, allocates; snapshot path).
+    pub fn summary(&self, window: usize) -> RingSummary {
+        let n = window.min(self.len);
+        if n == 0 {
+            return RingSummary::default();
+        }
+        let mut step = Vec::with_capacity(n);
+        let mut late = Vec::with_capacity(n);
+        let mut queue = Vec::with_capacity(n);
+        let mut out = RingSummary {
+            frames: n,
+            ..RingSummary::default()
+        };
+        let mut planned = 0usize;
+        for r in self.iter_recent(n) {
+            step.push(r.step_ns);
+            late.push(r.lateness_ns);
+            queue.push(r.queue_ns);
+            if r.warped {
+                out.warped_frames += 1;
+            }
+            if r.stalled {
+                out.stalled += 1;
+            }
+            out.shards_loaded += r.shards_loaded as u64;
+            out.pairs_mean += r.pairs as f64;
+            out.warped_fraction_mean += r.warped_fraction as f64;
+            out.masked_lane_fraction_mean += r.masked_lane_pm as f64 / 1000.0;
+            if r.imbalance_pm > 0 {
+                out.imbalance_mean += r.imbalance_pm as f64 / 1000.0;
+                planned += 1;
+            }
+        }
+        let nf = n as f64;
+        out.pairs_mean /= nf;
+        out.warped_fraction_mean /= nf;
+        out.masked_lane_fraction_mean /= nf;
+        if planned > 0 {
+            out.imbalance_mean /= planned as f64;
+        }
+        step.sort_unstable();
+        late.sort_unstable();
+        queue.sort_unstable();
+        let ms = |v: u64| v as f64 / 1e6;
+        out.step_ms_mean = ms(step.iter().sum::<u64>() / n as u64);
+        out.step_ms_p50 = ms(rank(&step, 0.50));
+        out.step_ms_p95 = ms(rank(&step, 0.95));
+        out.step_ms_p99 = ms(rank(&step, 0.99));
+        out.lateness_ms_p50 = ms(rank(&late, 0.50));
+        out.lateness_ms_p99 = ms(rank(&late, 0.99));
+        out.queue_ms_p50 = ms(rank(&queue, 0.50));
+        out.queue_ms_p99 = ms(rank(&queue, 0.99));
+        out
+    }
+}
+
+/// Nearest-rank percentile over a sorted slice.
+fn rank(sorted: &[u64], q: f64) -> u64 {
+    let n = sorted.len();
+    if n == 0 {
+        return 0;
+    }
+    let i = ((q * n as f64).ceil() as usize).clamp(1, n) - 1;
+    sorted[i]
+}
+
+/// Aggregates over one ring window (milliseconds / plain ratios).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RingSummary {
+    /// Frames in the window.
+    pub frames: usize,
+    pub warped_frames: usize,
+    /// Paced steps that missed by more than their interval.
+    pub stalled: usize,
+    /// Shards loaded on frame critical paths in the window.
+    pub shards_loaded: u64,
+    pub step_ms_mean: f64,
+    pub step_ms_p50: f64,
+    pub step_ms_p95: f64,
+    pub step_ms_p99: f64,
+    pub lateness_ms_p50: f64,
+    pub lateness_ms_p99: f64,
+    pub queue_ms_p50: f64,
+    pub queue_ms_p99: f64,
+    /// Mean measured imbalance ratio over *planned* frames (0 if none).
+    pub imbalance_mean: f64,
+    /// Mean masked-lane fraction over the window.
+    pub masked_lane_fraction_mean: f64,
+    /// Mean warped-pixel fraction over the window.
+    pub warped_fraction_mean: f64,
+    /// Mean tile-splat pairs per frame.
+    pub pairs_mean: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(i: u64, step_ns: u64) -> FrameRecord {
+        FrameRecord {
+            frame_idx: i,
+            step_ns,
+            warped: i % 5 != 0,
+            ..FrameRecord::default()
+        }
+    }
+
+    #[test]
+    fn wraps_and_keeps_newest() {
+        let mut ring = FrameRing::with_capacity(4);
+        for i in 0..10u64 {
+            ring.push(rec(i, i * 100));
+        }
+        assert_eq!(ring.len(), 4);
+        assert_eq!(ring.total(), 10);
+        assert_eq!(ring.latest().unwrap().frame_idx, 9);
+        let idxs: Vec<u64> = ring.iter_recent(4).map(|r| r.frame_idx).collect();
+        assert_eq!(idxs, vec![6, 7, 8, 9]);
+        let idxs: Vec<u64> = ring.iter_recent(2).map(|r| r.frame_idx).collect();
+        assert_eq!(idxs, vec![8, 9]);
+    }
+
+    #[test]
+    fn summary_percentiles_are_exact_over_window() {
+        let mut ring = FrameRing::with_capacity(128);
+        for i in 1..=100u64 {
+            ring.push(rec(i, i * 1_000_000)); // 1..=100 ms
+        }
+        let s = ring.summary(100);
+        assert_eq!(s.frames, 100);
+        assert_eq!(s.step_ms_p50, 50.0);
+        assert_eq!(s.step_ms_p95, 95.0);
+        assert_eq!(s.step_ms_p99, 99.0);
+        assert!((s.step_ms_mean - 50.5).abs() < 0.51);
+        // Window narrower than history: only the newest 10 count.
+        let s10 = ring.summary(10);
+        assert_eq!(s10.frames, 10);
+        assert_eq!(s10.step_ms_p50, 95.0);
+    }
+
+    #[test]
+    fn empty_ring_summary_is_zero() {
+        let ring = FrameRing::with_capacity(8);
+        assert!(ring.is_empty());
+        assert_eq!(ring.summary(32), RingSummary::default());
+        assert!(ring.latest().is_none());
+    }
+
+    #[test]
+    fn annotation_reaches_latest() {
+        let mut ring = FrameRing::with_capacity(8);
+        ring.push(rec(0, 100));
+        ring.push(rec(1, 200));
+        let r = ring.latest_mut().unwrap();
+        r.lateness_ns = 77;
+        r.stalled = true;
+        assert_eq!(ring.latest().unwrap().lateness_ns, 77);
+        assert_eq!(ring.iter_recent(1).next().unwrap().frame_idx, 1);
+    }
+}

@@ -1,0 +1,174 @@
+//! Chrome trace-event span tracer (`LSG_TRACE=<path>`), loadable in
+//! Perfetto / `chrome://tracing`.
+//!
+//! Disabled (the default) it costs one relaxed atomic load per span —
+//! no `Instant::now`, no allocation, no lock — so it can sit on the
+//! render hot path permanently. Set `LSG_TRACE=out.json` and every
+//! scoped [`span`] records a complete (`"ph":"X"`) event into a global
+//! buffer; [`flush`] writes the whole buffer as a well-formed JSON
+//! object. The environment is read once, at the first span of the
+//! process (same latch idiom as `LSG_FORCE_SCALAR`).
+//!
+//! Conventions: `pid` is always 1; real threads get dense `tid`s in
+//! creation order; retrospective scheduler events ride per-session
+//! virtual tracks at [`SCHED_TRACK_BASE`]` + session` so queue-wait
+//! intervals (which span worker handoffs) never break same-thread span
+//! nesting. Timestamps are microseconds (fractional, ns precision) from
+//! a process-local epoch.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU32, AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Virtual `tid` base for per-session scheduler tracks.
+pub const SCHED_TRACK_BASE: u32 = 1_000_000;
+
+const UNINIT: u8 = 0;
+const OFF: u8 = 1;
+const ON: u8 = 2;
+
+static STATE: AtomicU8 = AtomicU8::new(UNINIT);
+static PATH: OnceLock<String> = OnceLock::new();
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static EVENTS: Mutex<Vec<TraceEvent>> = Mutex::new(Vec::new());
+static NEXT_TID: AtomicU32 = AtomicU32::new(1);
+
+thread_local! {
+    static TID: u32 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+#[derive(Clone, Copy)]
+struct TraceEvent {
+    name: &'static str,
+    tid: u32,
+    ts_ns: u64,
+    dur_ns: u64,
+}
+
+/// Whether tracing is active (latched from `LSG_TRACE` on first call).
+#[inline]
+pub fn enabled() -> bool {
+    match STATE.load(Ordering::Relaxed) {
+        ON => true,
+        OFF => false,
+        _ => init(),
+    }
+}
+
+#[cold]
+fn init() -> bool {
+    let on = match std::env::var("LSG_TRACE") {
+        Ok(p) if !p.is_empty() => {
+            let _ = PATH.set(p);
+            true
+        }
+        _ => false,
+    };
+    let _ = EPOCH.set(Instant::now());
+    STATE.store(if on { ON } else { OFF }, Ordering::Relaxed);
+    on
+}
+
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn push_event(name: &'static str, tid: u32, start: Instant, end: Instant) {
+    let ts_ns = start.saturating_duration_since(epoch()).as_nanos() as u64;
+    let dur_ns = end.saturating_duration_since(start).as_nanos() as u64;
+    if let Ok(mut events) = EVENTS.lock() {
+        events.push(TraceEvent {
+            name,
+            tid,
+            ts_ns,
+            dur_ns,
+        });
+    }
+}
+
+/// Scoped span guard: records a complete event on drop when tracing is
+/// enabled, does nothing otherwise.
+#[must_use]
+pub struct Span {
+    name: &'static str,
+    start: Option<Instant>,
+}
+
+/// Open a span over the enclosing scope. With tracing disabled this is
+/// one relaxed atomic load and an inert guard.
+#[inline]
+pub fn span(name: &'static str) -> Span {
+    Span {
+        name,
+        start: if enabled() { Some(Instant::now()) } else { None },
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            let end = Instant::now();
+            TID.with(|t| push_event(self.name, *t, start, end));
+        }
+    }
+}
+
+/// Record a retrospective complete event on the calling thread's track
+/// (for intervals measured before the tracer could scope them).
+pub fn complete(name: &'static str, start: Instant, end: Instant) {
+    if enabled() {
+        let start = start.min(end);
+        TID.with(|t| push_event(name, *t, start, end));
+    }
+}
+
+/// Record a retrospective complete event on an explicit virtual track
+/// (e.g. [`SCHED_TRACK_BASE`]` + session` for queue-wait intervals that
+/// span worker-thread handoffs).
+pub fn complete_on(name: &'static str, track: u32, start: Instant, end: Instant) {
+    if enabled() {
+        let start = start.min(end);
+        push_event(name, track, start, end);
+    }
+}
+
+/// Write every event recorded so far to the `LSG_TRACE` path as a
+/// Chrome trace-event JSON object. Keeps the buffer, so a later flush
+/// rewrites a strictly larger file — call at process exit (benches,
+/// examples) or after the workload of interest. Returns the path
+/// written, or `None` when tracing is disabled or the write failed.
+pub fn flush() -> Option<PathBuf> {
+    use std::fmt::Write as _;
+    if !enabled() {
+        return None;
+    }
+    let path = PATH.get()?.clone();
+    let events: Vec<TraceEvent> = EVENTS.lock().ok()?.clone();
+    let mut out = String::with_capacity(events.len() * 96 + 64);
+    out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+    for (i, e) in events.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(
+            out,
+            "{{\"name\":\"{}\",\"cat\":\"lsg\",\"ph\":\"X\",\"pid\":1,\"tid\":{},\
+             \"ts\":{}.{:03},\"dur\":{}.{:03}}}",
+            e.name,
+            e.tid,
+            e.ts_ns / 1_000,
+            e.ts_ns % 1_000,
+            e.dur_ns / 1_000,
+            e.dur_ns % 1_000,
+        );
+    }
+    out.push_str("]}");
+    std::fs::write(&path, out).ok()?;
+    Some(PathBuf::from(path))
+}
+
+/// Events currently buffered (0 when disabled). Test/diagnostic hook.
+pub fn buffered_events() -> usize {
+    EVENTS.lock().map(|e| e.len()).unwrap_or(0)
+}

@@ -1,7 +1,15 @@
 //! Per-stage timing: scoped timers and an accumulating breakdown used by
 //! the pipeline to report preprocessing / sorting / rasterization splits
 //! (paper Fig. 3) and by the bench harness for the speedup tables.
+//!
+//! Backed by the telemetry histogram primitive
+//! ([`LocalHistogram`](crate::telemetry::LocalHistogram)): every `add`
+//! records into a per-stage log-linear histogram, so the Fig. 3
+//! breakdown reports counts and percentiles, not just totals — and
+//! [`StageTimes::time`] opens a telemetry span, so stage splits and
+//! `LSG_TRACE` tracing share one clock path.
 
+use crate::telemetry::{HistSummary, LocalHistogram};
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
@@ -9,7 +17,7 @@ use std::time::{Duration, Instant};
 #[derive(Default, Debug, Clone)]
 pub struct StageTimes {
     totals: BTreeMap<&'static str, Duration>,
-    counts: BTreeMap<&'static str, u64>,
+    hists: BTreeMap<&'static str, LocalHistogram>,
 }
 
 impl StageTimes {
@@ -17,8 +25,10 @@ impl StageTimes {
         Self::default()
     }
 
-    /// Time a closure under `stage`.
+    /// Time a closure under `stage` (and a telemetry span of the same
+    /// name when `LSG_TRACE` is set).
     pub fn time<T>(&mut self, stage: &'static str, f: impl FnOnce() -> T) -> T {
+        let _span = crate::telemetry::span(stage);
         let start = Instant::now();
         let out = f();
         self.add(stage, start.elapsed());
@@ -27,15 +37,15 @@ impl StageTimes {
 
     pub fn add(&mut self, stage: &'static str, d: Duration) {
         *self.totals.entry(stage).or_default() += d;
-        *self.counts.entry(stage).or_default() += 1;
+        self.hists.entry(stage).or_default().record_duration(d);
     }
 
     pub fn merge(&mut self, other: &StageTimes) {
         for (k, v) in &other.totals {
             *self.totals.entry(k).or_default() += *v;
         }
-        for (k, c) in &other.counts {
-            *self.counts.entry(k).or_default() += *c;
+        for (k, h) in &other.hists {
+            self.hists.entry(k).or_default().merge(h);
         }
     }
 
@@ -47,6 +57,26 @@ impl StageTimes {
         self.total(stage).as_secs_f64()
     }
 
+    /// Observations recorded under `stage`.
+    pub fn count(&self, stage: &str) -> u64 {
+        self.hists.get(stage).map(LocalHistogram::count).unwrap_or(0)
+    }
+
+    /// Approximate per-observation percentile for `stage` (`q` in
+    /// `[0, 1]`, ≤ 1/8 relative error from the log-linear buckets).
+    pub fn percentile(&self, stage: &str, q: f64) -> Duration {
+        self.hists
+            .get(stage)
+            .map(|h| Duration::from_nanos(h.percentile(q)))
+            .unwrap_or_default()
+    }
+
+    /// Full digest (count / mean / p50 / p95 / p99 / max, nanoseconds)
+    /// for `stage`, if it was ever recorded.
+    pub fn summary(&self, stage: &str) -> Option<HistSummary> {
+        self.hists.get(stage).map(LocalHistogram::summary)
+    }
+
     pub fn grand_total(&self) -> Duration {
         self.totals.values().sum()
     }
@@ -55,14 +85,26 @@ impl StageTimes {
         self.totals.iter().map(|(k, v)| (*k, *v))
     }
 
-    /// Render a one-line breakdown like `preprocess 12.1ms (18%) | sort ...`.
+    /// Render a one-line breakdown like
+    /// `preprocess 12.1ms (18%, n=10, p50 1.1ms, p95 2.3ms) | sort ...`.
     pub fn breakdown(&self) -> String {
         let total = self.grand_total().as_secs_f64().max(1e-12);
         self.totals
             .iter()
             .map(|(k, v)| {
+                let (n, p50, p95) = self
+                    .hists
+                    .get(k)
+                    .map(|h| {
+                        (
+                            h.count(),
+                            h.percentile(0.50) as f64 / 1e6,
+                            h.percentile(0.95) as f64 / 1e6,
+                        )
+                    })
+                    .unwrap_or((0, 0.0, 0.0));
                 format!(
-                    "{k} {:.2}ms ({:.0}%)",
+                    "{k} {:.2}ms ({:.0}%, n={n}, p50 {p50:.2}ms, p95 {p95:.2}ms)",
                     v.as_secs_f64() * 1e3,
                     v.as_secs_f64() / total * 100.0
                 )
@@ -101,6 +143,9 @@ mod tests {
         t.add("raster", Duration::from_millis(3));
         assert_eq!(t.total("sort"), Duration::from_millis(12));
         assert_eq!(t.grand_total(), Duration::from_millis(15));
+        assert_eq!(t.count("sort"), 2);
+        assert_eq!(t.count("raster"), 1);
+        assert_eq!(t.count("absent"), 0);
     }
 
     #[test]
@@ -109,6 +154,7 @@ mod tests {
         let v = t.time("x", || 42);
         assert_eq!(v, 42);
         assert!(t.total("x") > Duration::ZERO);
+        assert_eq!(t.count("x"), 1);
     }
 
     #[test]
@@ -121,6 +167,7 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.total("s"), Duration::from_millis(3));
         assert_eq!(a.total("t"), Duration::from_millis(4));
+        assert_eq!(a.count("s"), 2);
     }
 
     #[test]
@@ -130,6 +177,23 @@ mod tests {
         t.add("sort", Duration::from_millis(1));
         let s = t.breakdown();
         assert!(s.contains("preprocess") && s.contains("sort"));
+        assert!(s.contains("n=1"), "breakdown lost counts: {s}");
+        assert!(s.contains("p50"), "breakdown lost percentiles: {s}");
+    }
+
+    #[test]
+    fn percentiles_track_observations() {
+        let mut t = StageTimes::new();
+        for ms in 1..=100u64 {
+            t.add("stage", Duration::from_millis(ms));
+        }
+        let p50 = t.percentile("stage", 0.50).as_secs_f64() * 1e3;
+        let p95 = t.percentile("stage", 0.95).as_secs_f64() * 1e3;
+        assert!((p50 - 50.0).abs() / 50.0 <= 0.125, "p50 {p50}");
+        assert!((p95 - 95.0).abs() / 95.0 <= 0.125, "p95 {p95}");
+        let s = t.summary("stage").unwrap();
+        assert_eq!(s.count, 100);
+        assert!(t.summary("absent").is_none());
     }
 
     #[test]

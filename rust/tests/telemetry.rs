@@ -1,0 +1,150 @@
+//! End-to-end telemetry integration (ISSUE 7): a multi-scene
+//! [`StreamServer`] over a *file-backed* sharded scene plus a monolithic
+//! one, checked through [`StreamServer::telemetry_snapshot`] and both
+//! exposition writers; and the governor-eviction counter path under a
+//! cross-scene budget squeeze.
+//!
+//! The metrics hub is process-global, so every assertion against it is a
+//! monotone lower bound (tests in this binary run concurrently and only
+//! ever add).
+
+use ls_gaussian::coordinator::{CoordinatorConfig, StreamServer};
+use ls_gaussian::scene::{generate, SceneAssets};
+use ls_gaussian::shard::{partition_cloud, FileShardStore, ShardConfig, ShardedScene};
+use ls_gaussian::telemetry::hub;
+use ls_gaussian::util::json::Json;
+use std::sync::atomic::Ordering;
+
+fn sharded(name: &str, target_splats: usize) -> ShardedScene {
+    let s = generate(name, 0.04, 96, 96);
+    ShardedScene::partition(
+        &s.cloud,
+        s.intrinsics,
+        &ShardConfig {
+            target_splats,
+            ..Default::default()
+        },
+    )
+}
+
+#[test]
+fn snapshot_aggregates_file_store_and_sessions() {
+    let room = generate("room", 0.04, 96, 96);
+    let chair = generate("chair", 0.04, 96, 96);
+    let dir = std::env::temp_dir().join(format!("lsg_telemetry_{}", std::process::id()));
+    let store = FileShardStore::export(&dir, &partition_cloud(&room.cloud, 200))
+        .expect("export shards to disk");
+    let file_scene = ShardedScene::from_store(Box::new(store), room.intrinsics, usize::MAX);
+    assert_eq!(
+        file_scene.expected_load_ns(),
+        None,
+        "no loads measured yet"
+    );
+
+    let mut server = StreamServer::multi(CoordinatorConfig::default(), None);
+    let a = server.add_scene(file_scene).unwrap();
+    let b = server.add_scene(SceneAssets::from_scene(&chair)).unwrap();
+    let s0 = server.add_session_on(a);
+    let s1 = server.add_session_on(a);
+    let s2 = server.add_session_on(b);
+    let frames_before = hub().frames.load(Ordering::Relaxed);
+    let poses = [
+        room.sample_poses(1)[0],
+        room.sample_poses(2)[1],
+        chair.sample_poses(1)[0],
+    ];
+    for _ in 0..5 {
+        server.advance_all(&poses);
+    }
+
+    let snap = server.telemetry_snapshot();
+    assert!(hub().frames.load(Ordering::Relaxed) - frames_before >= 15);
+    assert!(snap.node.shard_loads > 0);
+    assert!(
+        snap.node.load_ns_file.count > 0,
+        "file-store loads missed the hub's file histogram"
+    );
+
+    let file_tele = snap.scenes.iter().find(|s| s.scene == a as u32).unwrap();
+    assert_eq!(file_tele.store, "file");
+    assert_eq!(file_tele.sessions, 2);
+    assert!(file_tele.shards > 0);
+    assert!(file_tele.lifetime_loads > 0);
+    let class_obs: u64 = file_tele.load_by_class.iter().map(|s| s.count).sum();
+    // Every performed store load lands in one class histogram. It can
+    // exceed lifetime_loads: two sessions (or prefetch vs frame path)
+    // racing on the same cold shard both load and record, but only the
+    // commit that won the slot counts as a residency load.
+    assert!(
+        class_obs >= file_tele.lifetime_loads && class_obs > 0,
+        "class observations {class_obs} vs committed loads {}",
+        file_tele.lifetime_loads
+    );
+    for s in file_tele.load_by_class.iter().filter(|s| s.count > 0) {
+        assert!(s.p99 >= s.p50 && s.p50 >= 1, "degenerate class digest {s:?}");
+    }
+    let mono_tele = snap.scenes.iter().find(|s| s.scene == b as u32).unwrap();
+    assert_eq!(mono_tele.store, "monolithic");
+    assert_eq!(mono_tele.sessions, 1);
+
+    // The scene now has a measured latency estimate for the prefetch cap.
+    let handle = server.scene_handle(a).unwrap();
+    let est = handle
+        .sharded()
+        .unwrap()
+        .expected_load_ns()
+        .expect("loads were measured");
+    assert!(est >= 1);
+
+    assert_eq!(snap.sessions.len(), 3);
+    for sid in [s0, s1, s2] {
+        let se = snap.sessions.iter().find(|s| s.session == sid).unwrap();
+        assert_eq!(se.frames, 5);
+        assert_eq!(se.window.frames, 5);
+        assert!(se.window.step_ms_p50 > 0.0);
+    }
+
+    // Both writers handle the live snapshot.
+    let text = snap.to_prometheus();
+    assert!(text.contains("lsg_load_ms{store=\"file\",quantile=\"0.5\"}"));
+    assert!(text.contains(&format!("lsg_scene_loads_total{{scene=\"{a}\"}}")));
+    let parsed = Json::parse(&snap.to_json().to_string_pretty()).expect("json writer parses");
+    let scenes = parsed.get("scenes").and_then(Json::as_arr).unwrap();
+    assert_eq!(scenes.len(), 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn governor_evictions_reach_the_hub() {
+    let a = sharded("room", 200);
+    let b = sharded("garden", 200);
+    // Global budget = exactly scene A's bytes: once A is fully warm,
+    // B's pinned visible set can only be fed by shedding A.
+    let budget = a.total_bytes();
+    let mut server = StreamServer::multi(CoordinatorConfig::default(), Some(budget));
+    let scene_a = server.add_scene(a).unwrap();
+    let scene_b = server.add_scene(b).unwrap();
+    let room = generate("room", 0.04, 96, 96);
+    let garden = generate("garden", 0.04, 96, 96);
+    let sa = server.add_session_on(scene_a);
+    server.add_session_on(scene_b);
+    assert_eq!(server.scene_of(sa), Some(scene_a));
+
+    let before = hub().governor_evictions.load(Ordering::Relaxed);
+    for i in 0..4 {
+        let poses = [
+            room.sample_poses(4)[i % 4],
+            garden.sample_poses(4)[i % 4],
+        ];
+        server.advance_all(&poses);
+    }
+    let evicted = hub().governor_evictions.load(Ordering::Relaxed) - before;
+    assert!(
+        evicted > 0,
+        "shared-budget squeeze produced no governor evictions in the hub"
+    );
+    let snap = server.telemetry_snapshot();
+    assert!(snap.node.governor_evictions >= evicted);
+    let total_evictions: u64 = snap.scenes.iter().map(|s| s.lifetime_evictions).sum();
+    assert!(total_evictions > 0, "scene stats disagree with the hub");
+}

@@ -1,0 +1,123 @@
+//! Schema validation for the `LSG_TRACE` span tracer (ISSUE 7): drive a
+//! real paced pipeline over a sharded scene with tracing enabled, flush,
+//! and check the emitted file is a well-formed Chrome trace-event JSON —
+//! loadable by Perfetto / `chrome://tracing` — whose spans cover every
+//! pipeline stage and nest properly per thread.
+//!
+//! One `#[test]` only: `LSG_TRACE` is read once per process (env latch),
+//! so a second test in this binary could not choose a different path.
+
+use ls_gaussian::coordinator::{CoordinatorConfig, StreamServer};
+use ls_gaussian::scene::generate;
+use ls_gaussian::shard::{ShardConfig, ShardedScene};
+use ls_gaussian::util::json::Json;
+use std::time::Duration;
+
+#[test]
+fn trace_file_is_valid_and_spans_nest() {
+    let path = std::env::temp_dir().join(format!("lsg_trace_test_{}.json", std::process::id()));
+    // Must precede the first telemetry call in this process: the tracer
+    // latches the env var once.
+    std::env::set_var("LSG_TRACE", &path);
+
+    let scene = generate("room", 0.04, 96, 96);
+    let poses = scene.sample_poses(8);
+    let sharded = ShardedScene::partition(
+        &scene.cloud,
+        scene.intrinsics,
+        &ShardConfig {
+            target_splats: 200,
+            ..Default::default()
+        },
+    );
+    let mut server = StreamServer::new(sharded, CoordinatorConfig::default());
+    // Paced session: exercises the scheduler queue so the virtual
+    // `sched_queue_wait` track gets events.
+    let id = server.add_paced_session(CoordinatorConfig::default(), Duration::from_millis(1));
+    for pose in &poses {
+        server.scheduler_mut().push_pose(id, *pose);
+    }
+    let done = server.scheduler_mut().run_for(Duration::from_secs(60));
+    assert_eq!(done.len(), poses.len(), "paced session did not drain");
+
+    let written = ls_gaussian::telemetry::flush_trace().expect("LSG_TRACE was set");
+    assert_eq!(written, path);
+    let text = std::fs::read_to_string(&path).expect("trace file readable");
+    let root = Json::parse(&text).expect("trace file is valid JSON");
+    let _ = std::fs::remove_file(&path);
+
+    assert_eq!(
+        root.get("displayTimeUnit").and_then(Json::as_str),
+        Some("ms")
+    );
+    let events = root
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array");
+    assert!(!events.is_empty(), "tracer emitted no events");
+
+    // Per-event schema: the complete-event shape Perfetto requires.
+    // ts/dur are µs with 3 decimals (exact ns) — recover integer ns so
+    // the nesting check needs no epsilon.
+    let mut names = std::collections::BTreeSet::new();
+    let mut by_tid: std::collections::BTreeMap<u64, Vec<(u64, u64, String)>> =
+        std::collections::BTreeMap::new();
+    for e in events {
+        let name = e.get("name").and_then(Json::as_str).expect("name").to_string();
+        assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"), "{name}");
+        assert_eq!(e.get("cat").and_then(Json::as_str), Some("lsg"), "{name}");
+        assert_eq!(e.get("pid").and_then(Json::as_f64), Some(1.0), "{name}");
+        let tid = e.get("tid").and_then(Json::as_f64).expect("tid") as u64;
+        let ts = e.get("ts").and_then(Json::as_f64).expect("ts");
+        let dur = e.get("dur").and_then(Json::as_f64).expect("dur");
+        assert!(ts >= 0.0 && dur >= 0.0, "{name}: ts {ts} dur {dur}");
+        let ts_ns = (ts * 1e3).round() as u64;
+        let dur_ns = (dur * 1e3).round() as u64;
+        names.insert(name.clone());
+        by_tid.entry(tid).or_default().push((ts_ns, ts_ns + dur_ns, name));
+    }
+
+    // Every acceptance-listed stage shows up.
+    for required in [
+        "plan",
+        "preprocess",
+        "sort",
+        "rasterize",
+        "warp",
+        "shard_load",
+        "sched_queue_wait",
+    ] {
+        assert!(names.contains(required), "no {required:?} span in {names:?}");
+    }
+
+    // Spans on real threads form a proper nesting (each span is either
+    // disjoint from or fully contained in any earlier-opened one).
+    // Virtual scheduler tracks are exempt: queue-wait intervals are
+    // retrospective deadline→start annotations, not a call stack, and
+    // a late frame's wait legitimately overlaps its predecessor's.
+    let virtual_base = u64::from(ls_gaussian::telemetry::SCHED_TRACK_BASE);
+    for (tid, spans) in &mut by_tid {
+        if *tid >= virtual_base {
+            assert!(
+                spans.iter().all(|(_, _, n)| n == "sched_queue_wait"),
+                "unexpected span on virtual track {tid}"
+            );
+            continue;
+        }
+        // Same start: treat the longer span as the parent.
+        spans.sort_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)));
+        let mut stack: Vec<(u64, u64)> = Vec::new();
+        for &(s, t, ref name) in spans.iter() {
+            while stack.last().is_some_and(|&(_, pend)| pend <= s) {
+                stack.pop();
+            }
+            if let Some(&(ps, pe)) = stack.last() {
+                assert!(
+                    t <= pe,
+                    "span {name} [{s},{t}]ns on tid {tid} crosses enclosing span [{ps},{pe}]ns"
+                );
+            }
+            stack.push((s, t));
+        }
+    }
+}
