@@ -39,6 +39,7 @@ fn main() {
             v.push("balance".to_string());
             v.push("fleet".to_string());
             v.push("kernels".to_string());
+            v.push("qos".to_string());
             v
         }
     };
@@ -91,6 +92,13 @@ fn main() {
                     std::fs::write("BENCH_kernels.json", json.to_string_pretty())
                         .expect("writing BENCH_kernels.json");
                     println!("wrote BENCH_kernels.json");
+                }
+                if id == "qos" {
+                    // Closed-loop QoS overload record (controller off vs
+                    // on + ladder PSNR floors), gated alongside streaming.
+                    std::fs::write("BENCH_qos.json", json.to_string_pretty())
+                        .expect("writing BENCH_qos.json");
+                    println!("wrote BENCH_qos.json");
                 }
                 report.set(id, json);
             }

@@ -141,6 +141,70 @@ fn main() {
         );
     }
 
+    // ---- overload phase: drive the node past feasibility ----------
+    //
+    // Re-attach the cameras as deadline-PACED sessions at an interval no
+    // frame can meet, with the closed-loop QoS controller armed and a
+    // bounded pose backlog (shed_depth). The controller walks each
+    // session down the degradation ladder (longer warp window, wider
+    // TWSR interpolation) and shedding drops the stale backlog, so p99
+    // lateness stays bounded instead of growing with the queue — see
+    // docs/QOS.md. `LSG_QOS=off` disarms all of it.
+    println!("\n--- overload phase (QoS ladder + shedding) ---");
+    let qos_cfg = CoordinatorConfig {
+        mode: IntersectMode::Tait,
+        threads: 1,
+        qos: ls_gaussian::serve::QosConfig {
+            sense_window: 8,
+            dwell: 4,
+            shed_depth: 4,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let interval = std::time::Duration::from_micros(200); // infeasible by design
+    let paced: Vec<_> = cam_scene
+        .iter()
+        .map(|&s| {
+            server
+                .try_add_paced_session_on(scene_ids[s], qos_cfg, interval)
+                .expect("admission")
+        })
+        .collect();
+    let overload_frames = (frames * 2).max(40);
+    for f in 0..overload_frames {
+        for (c, &id) in paced.iter().enumerate() {
+            server
+                .scheduler_mut()
+                .push_pose(id, cam_poses[c][f % frames]);
+        }
+    }
+    let done = server
+        .scheduler_mut()
+        .run_for(std::time::Duration::from_secs(120));
+    let mut lateness_ms: Vec<f32> = done
+        .iter()
+        .map(|(_, s)| s.sched.lateness.as_secs_f32() * 1e3)
+        .collect();
+    lateness_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p99 = lateness_ms[(lateness_ms.len() * 99 / 100).min(lateness_ms.len() - 1)];
+    for (c, &id) in paced.iter().enumerate() {
+        let counters = server.scheduler().counters(id).unwrap();
+        println!(
+            "cam {c} [{}]: QoS level {} after overload, {} steps, {} poses shed",
+            scene_names[cam_scene[c]],
+            server.session(id).qos_level(),
+            counters.steps,
+            counters.shed_frames
+        );
+    }
+    println!(
+        "overload: {} paced frames at {:?} cadence, p99 lateness {p99:.1} ms \
+         (ladder + shedding keep it bounded; try LSG_QOS=off to compare)",
+        done.len(),
+        interval
+    );
+
     // Full node telemetry at exit, in Prometheus text exposition —
     // counters, frame/lateness percentiles, per-scene size-class load
     // latency, per-session window digests (see docs/OBSERVABILITY.md).

@@ -909,6 +909,13 @@ pub fn sched_pacing(opts: &ExpOptions) -> Json {
         window: opts.window,
         threads: 1, // one core per stream step: the pool slots are the
         // session-level parallelism under test
+        // Fixed per-frame work is the point of this comparison: keep the
+        // QoS controller from adapting the big session's window mid-run
+        // (the adaptive arm has its own benchmark, `qos`).
+        qos: crate::serve::QosConfig {
+            enabled: false,
+            ..Default::default()
+        },
         ..Default::default()
     };
     let pool_threads = default_threads().saturating_sub(1).max(2);
@@ -1594,5 +1601,269 @@ pub fn tab1_utilization(opts: &ExpOptions) -> Json {
         report.set(label, m);
     }
     table.print();
+    report
+}
+
+/// `qos` closed-loop overload: a paced node driven past saturation,
+/// QoS controller off vs on. Each pool slot carries one session paced
+/// at an interval *between* the measured full-quality (L0) and
+/// bottom-rung (L3) step costs — structurally infeasible at full
+/// quality, feasible once the ladder cuts per-frame work — so the
+/// controller-off arm's lateness grows with the backlog while the
+/// controller-on arm (ladder + bounded-backlog shedding) must hold its
+/// steady-state p99 lateness near the pacing interval. A second pass
+/// pins each ladder rung's operating point over a shared pose orbit and
+/// measures its PSNR floor against fully dense renders — the quality
+/// price of each rung, reported next to the lateness it buys. Written
+/// to `BENCH_qos.json`, gated on the controller-on tail p99.
+pub fn qos_overload(opts: &ExpOptions) -> Json {
+    use crate::coordinator::{SchedConfig, SessionScheduler, StreamSession};
+    use crate::serve::{QosConfig, LADDER, MAX_LEVEL};
+    use crate::util::pool::{default_threads, WorkerPool};
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    let scene_name = "train";
+    let scene = generate(scene_name, opts.scale, opts.width, opts.height);
+    let assets = SceneAssets::from_scene(&scene);
+    // The controller needs a full sense window (32) plus dwell periods
+    // to walk the ladder, and a tail to prove the steady state.
+    let frames = (opts.frames * 8).max(96);
+    let base_cfg = CoordinatorConfig {
+        window: opts.window,
+        threads: 1, // one core per stream: pool slots are the capacity
+        ..Default::default()
+    };
+    let pool_threads = default_threads().saturating_sub(1).max(2);
+    let n_sessions = pool_threads; // one session per slot: overload is
+                                   // per-session infeasible pacing
+    let poses = scene.sample_poses(frames);
+
+    // Rung operating points relative to the configured base.
+    let rung_cfg = |level: u8| -> CoordinatorConfig {
+        let r = &LADDER[level as usize];
+        CoordinatorConfig {
+            window: (base_cfg.window * r.window_mul as usize).max(1),
+            policy: TileWarpPolicy {
+                missing_threshold: base_cfg.policy.missing_threshold.max(r.threshold_floor),
+                ..base_cfg.policy
+            },
+            ..base_cfg
+        }
+    };
+
+    // Calibrate the solo steady-state step cost at both ladder
+    // endpoints, then pace at their midpoint: infeasible at L0,
+    // feasible at the bottom rung on any machine.
+    let calib = |cfg: CoordinatorConfig| -> Duration {
+        let pool = Arc::new(WorkerPool::new(pool_threads));
+        let mut s = StreamSession::new(Arc::clone(&assets), pool, cfg);
+        for p in &poses {
+            s.step(p); // warm arenas + caches
+        }
+        let t0 = Instant::now();
+        for p in &poses {
+            s.step(p);
+        }
+        t0.elapsed() / poses.len() as u32
+    };
+    let l0_step = calib(rung_cfg(0));
+    let l3_step = calib(rung_cfg(MAX_LEVEL));
+    let interval = (l0_step + l3_step) / 2;
+    let interval_ms = interval.as_secs_f64() * 1e3;
+
+    // One arm: fresh pool + scheduler, n sessions paced at `interval`,
+    // all poses queued up front. Returns per-session lateness series
+    // (completion order) plus counters.
+    let hub = crate::telemetry::hub();
+    let run_arm = |qos: QosConfig| -> (Vec<Vec<f32>>, u64, u64, Vec<u8>) {
+        let cfg = CoordinatorConfig { qos, ..base_cfg };
+        let pool = Arc::new(WorkerPool::new(pool_threads));
+        let mut sched = SessionScheduler::new(
+            Arc::clone(&pool),
+            SchedConfig {
+                frame_interval: interval,
+                prefetch: false,
+            },
+        );
+        let ids: Vec<usize> = (0..n_sessions)
+            .map(|_| {
+                sched.add_paced(
+                    StreamSession::new(Arc::clone(&assets), Arc::clone(&pool), cfg),
+                    interval,
+                )
+            })
+            .collect();
+        for p in &poses {
+            for &id in &ids {
+                sched.push_pose(id, *p);
+            }
+        }
+        // Generous cap: the off arm renders everything at L0 cost.
+        let cap = l0_step * frames as u32 * 4 + Duration::from_secs(2);
+        let done = sched.run_for(cap);
+        let mut late: Vec<Vec<f32>> = vec![Vec::new(); n_sessions];
+        let mut stalls = 0u64;
+        for (id, s) in &done {
+            late[*id].push(s.sched.lateness.as_secs_f32() * 1e3);
+            if s.sched.stalled {
+                stalls += 1;
+            }
+        }
+        let shed: u64 = ids
+            .iter()
+            .filter_map(|&id| sched.counters(id))
+            .map(|c| c.shed_frames)
+            .sum();
+        let levels: Vec<u8> = ids.iter().map(|&id| sched.session(id).qos_level()).collect();
+        (late, stalls, shed, levels)
+    };
+
+    // p99 over every session's series, and over the last-third tail
+    // (the steady state after the controller settles).
+    let p99_of = |series: &[Vec<f32>], tail: bool| -> f32 {
+        let mut all: Vec<f32> = Vec::new();
+        for s in series {
+            let from = if tail { s.len() - s.len() / 3 } else { 0 };
+            all.extend_from_slice(&s[from..]);
+        }
+        if all.is_empty() {
+            all.push(0.0);
+        }
+        crate::metrics::percentile(&all, 99.0)
+    };
+
+    let (off_late, off_stalls, _, _) = run_arm(QosConfig {
+        enabled: false,
+        ..QosConfig::default()
+    });
+    let downs0 = hub.qos_level_downs.load(std::sync::atomic::Ordering::Relaxed);
+    let ups0 = hub.qos_level_ups.load(std::sync::atomic::Ordering::Relaxed);
+    let (on_late, on_stalls, on_shed, on_levels) = run_arm(QosConfig {
+        enabled: true,
+        shed_depth: 4,
+        ..QosConfig::default()
+    });
+    let downs = hub.qos_level_downs.load(std::sync::atomic::Ordering::Relaxed) - downs0;
+    let ups = hub.qos_level_ups.load(std::sync::atomic::Ordering::Relaxed) - ups0;
+
+    let off_steps: usize = off_late.iter().map(Vec::len).sum();
+    let on_steps: usize = on_late.iter().map(Vec::len).sum();
+    let off_p99_all = p99_of(&off_late, false);
+    let off_p99_tail = p99_of(&off_late, true);
+    let on_p99_all = p99_of(&on_late, false);
+    let on_p99_tail = p99_of(&on_late, true);
+
+    let mut table = Table::new(
+        "qos — overloaded pacing (interval between L0 and L3 step cost), controller off vs on",
+        &["controller", "p99 lateness all/tail (ms)", "target (ms)", "steps", "shed", "level moves"],
+    );
+    table.row(&[
+        "off".into(),
+        format!("{off_p99_all:.2} / {off_p99_tail:.2}"),
+        f2(interval_ms),
+        off_steps.to_string(),
+        "0".into(),
+        "-".into(),
+    ]);
+    table.row(&[
+        "on".into(),
+        format!("{on_p99_all:.2} / {on_p99_tail:.2}"),
+        f2(interval_ms),
+        on_steps.to_string(),
+        on_shed.to_string(),
+        format!("{downs} down / {ups} up"),
+    ]);
+    table.print();
+    println!(
+        "(sessions: {n_sessions} x {frames} frames on {pool_threads} slots; \
+         solo step L0 {:.2} ms, L{MAX_LEVEL} {:.2} ms; final levels {:?})",
+        l0_step.as_secs_f64() * 1e3,
+        l3_step.as_secs_f64() * 1e3,
+        on_levels
+    );
+
+    // Quality price of each rung: PSNR floor vs fully dense renders
+    // over a shared pose sweep, rung configs pinned (no controller).
+    let q_frames = opts.frames.max(12);
+    let q_poses = scene.sample_poses(q_frames);
+    let q_pool = Arc::new(WorkerPool::new(pool_threads));
+    let mut dense = StreamSession::new(
+        Arc::clone(&assets),
+        Arc::clone(&q_pool),
+        CoordinatorConfig {
+            warp: WarpMode::None,
+            ..base_cfg
+        },
+    );
+    let dense_frames: Vec<Vec<f32>> = q_poses
+        .iter()
+        .map(|p| {
+            dense.step(p);
+            dense.frame().rgb.clone()
+        })
+        .collect();
+    let mut ladder_rep = Json::obj();
+    let mut qtable = Table::new(
+        "qos ladder — quality price per rung (vs dense renders)",
+        &["level", "window", "threshold", "min PSNR (dB)", "mean PSNR (dB)"],
+    );
+    for level in 0..=MAX_LEVEL {
+        let cfg = rung_cfg(level);
+        let mut s = StreamSession::new(Arc::clone(&assets), Arc::clone(&q_pool), cfg);
+        let mut min_db = f64::INFINITY;
+        let mut sum_db = 0.0f64;
+        for (p, reference) in q_poses.iter().zip(&dense_frames) {
+            s.step(p);
+            let db = psnr(&s.frame().rgb, reference);
+            min_db = min_db.min(db);
+            sum_db += db;
+        }
+        let mean_db = sum_db / q_poses.len() as f64;
+        qtable.row(&[
+            format!("L{level}"),
+            cfg.window.to_string(),
+            f2(cfg.policy.missing_threshold as f64),
+            f1(min_db),
+            f1(mean_db),
+        ]);
+        let mut m = Json::obj();
+        m.set("window", cfg.window)
+            .set("missing_threshold", cfg.policy.missing_threshold as f64)
+            .set("min_psnr_db", min_db)
+            .set("mean_psnr_db", mean_db);
+        ladder_rep.set(&format!("level{level}"), m);
+    }
+    qtable.print();
+
+    let mut report = Json::obj();
+    report
+        .set("scene", scene_name)
+        .set("sessions", n_sessions)
+        .set("pool_threads", pool_threads)
+        .set("frames_per_session", frames)
+        .set("interval_ms", interval_ms)
+        .set("l0_step_ms", l0_step.as_secs_f64() * 1e3)
+        .set("l3_step_ms", l3_step.as_secs_f64() * 1e3);
+    let mut off = Json::obj();
+    off.set("p99_lateness_ms", off_p99_tail)
+        .set("p99_lateness_ms_all", off_p99_all)
+        .set("steps", off_steps)
+        .set("stalls", off_stalls);
+    report.set("off", off);
+    let mut on = Json::obj();
+    on.set("p99_lateness_ms", on_p99_tail)
+        .set("p99_lateness_ms_all", on_p99_all)
+        .set("steps", on_steps)
+        .set("stalls", on_stalls)
+        .set("shed_frames", on_shed)
+        .set("level_downs", downs)
+        .set("level_ups", ups)
+        .set(
+            "final_levels",
+            Json::Arr(on_levels.iter().map(|&l| Json::Num(l as f64)).collect()),
+        );
+    report.set("on", on);
+    report.set("ladder", ladder_rep);
     report
 }

@@ -2,9 +2,9 @@
 //! records.
 //!
 //! The bench binary writes `BENCH_streaming.json` (and
-//! `BENCH_balance.json` / `BENCH_fleet.json` / `BENCH_kernels.json`,
-//! merged by the `bench_gate` binary under the `"balance"` / `"fleet"` /
-//! `"kernels"` keys) every run; the repo
+//! `BENCH_balance.json` / `BENCH_fleet.json` / `BENCH_kernels.json` /
+//! `BENCH_qos.json`, merged by the `bench_gate` binary under the
+//! `"balance"` / `"fleet"` / `"kernels"` / `"qos"` keys) every run; the repo
 //! commits a `BENCH_baseline.json` snapshot of a known-good run at the
 //! same (quick-mode) options.
 //! [`compare`] extracts the steady-state ms/frame metrics from both and
@@ -139,6 +139,19 @@ pub fn extract_metrics(report: &Json) -> Vec<(String, f64)> {
                 if ms > 0.0 {
                     out.push((format!("fleet ms/frame ({scene})"), ms));
                 }
+            }
+        }
+    }
+    // Closed-loop QoS overload (BENCH_qos.json, merged under "qos"):
+    // gate the controller-on arm's p99 lateness so the degradation
+    // ladder silently losing its grip on an overloaded node trips CI.
+    // The controller-off arm is deliberately ungated — its lateness
+    // grows with the backlog and is the unstable thing the controller
+    // exists to bound.
+    if let Some(on) = report.get("qos").and_then(|q| q.get("on")) {
+        if let Some(ms) = on.get("p99_lateness_ms").and_then(Json::as_f64) {
+            if ms > 0.0 {
+                out.push(("qos p99 lateness (controller on)".to_string(), ms));
             }
         }
     }
@@ -352,6 +365,23 @@ mod tests {
         let get = |name: &str| m.iter().find(|(n, _)| n == name).unwrap().1;
         assert!((get("fleet ms/frame (train)") - 7.5).abs() < 1e-9);
         assert!((get("fleet ms/frame (garden)") - 9.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn extracts_qos_on_arm_only() {
+        let mut r = report(100.0, 50.0, 25.0);
+        let mut on = Json::obj();
+        on.set("p99_lateness_ms", 6.5);
+        let mut off = Json::obj();
+        off.set("p99_lateness_ms", 180.0);
+        let mut q = Json::obj();
+        q.set("on", on).set("off", off);
+        r.set("qos", q);
+        let m = extract_metrics(&r);
+        let get = |name: &str| m.iter().find(|(n, _)| n == name).unwrap().1;
+        assert!((get("qos p99 lateness (controller on)") - 6.5).abs() < 1e-9);
+        // The unbounded off arm is never gated.
+        assert!(m.iter().all(|(n, _)| !n.contains("controller off")));
     }
 
     #[test]

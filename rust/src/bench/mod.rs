@@ -114,8 +114,10 @@ pub const ALL_EXPERIMENTS: [&str; 13] = [
 // state, written to BENCH_sched.json), "balance" (naive vs
 // workload-aware tile dispatch, written to BENCH_balance.json), "fleet"
 // (two scenes x mixed sessions under one global residency budget,
-// written to BENCH_fleet.json) and "kernels" (scalar vs 8-wide SIMD
-// per-pair kernels, written to BENCH_kernels.json) are addressable and
+// written to BENCH_fleet.json), "kernels" (scalar vs 8-wide SIMD
+// per-pair kernels, written to BENCH_kernels.json) and "qos"
+// (closed-loop overload: QoS controller off vs on + ladder PSNR floors,
+// written to BENCH_qos.json) are addressable and
 // in the bench binary's default set but are not paper figures.
 
 /// Run one experiment by id; returns its JSON report.
@@ -141,6 +143,7 @@ pub fn run_experiment(id: &str, opts: &ExpOptions) -> Option<Json> {
         "balance" => e::balance_dispatch(opts),
         "fleet" => e::fleet_serving(opts),
         "kernels" => e::kernels_simd(opts),
+        "qos" => e::qos_overload(opts),
         _ => return None,
     };
     Some(json)

@@ -12,8 +12,9 @@
 //!   cargo run --release --bin bench_gate -- --update        # refresh baseline
 //!
 //! `--update` copies the current merged record (streaming + the
-//! `"balance"`/`"fleet"`/`"kernels"` sections when `BENCH_balance.json` /
-//! `BENCH_fleet.json` / `BENCH_kernels.json` exist) into
+//! `"balance"`/`"fleet"`/`"kernels"`/`"qos"` sections when
+//! `BENCH_balance.json` / `BENCH_fleet.json` / `BENCH_kernels.json` /
+//! `BENCH_qos.json` exist) into
 //! `BENCH_baseline.json` — run it after
 //! intentional perf changes and commit the result. CI runs `--update`
 //! after the gate and uploads the refreshed baseline as an artifact, so
@@ -30,6 +31,7 @@ fn main() {
     let balance_path = args.get_or("balance", "BENCH_balance.json");
     let fleet_path = args.get_or("fleet", "BENCH_fleet.json");
     let kernels_path = args.get_or("kernels", "BENCH_kernels.json");
+    let qos_path = args.get_or("qos", "BENCH_qos.json");
     let threshold = args.f32_or("threshold", 0.20) as f64;
 
     let current_text = match std::fs::read_to_string(current_path) {
@@ -56,6 +58,7 @@ fn main() {
         ("balance", balance_path),
         ("fleet", fleet_path),
         ("kernels", kernels_path),
+        ("qos", qos_path),
     ] {
         match std::fs::read_to_string(path) {
             Ok(t) => match Json::parse(&t) {

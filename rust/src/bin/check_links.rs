@@ -1,0 +1,241 @@
+//! CI markdown link checker: verifies every relative link and heading
+//! anchor in `README.md` and `docs/*.md` resolves. No crates beyond the
+//! standard library — a ~150-line walker, not a lychee replacement.
+//!
+//! Checked:
+//!   - `[text](relative/path.md)` — target file exists
+//!   - `[text](path.md#anchor)`   — file exists AND has the heading
+//!   - `[text](#anchor)`          — same-file heading exists
+//!   - images `![alt](path)`      — same rules
+//!
+//! Skipped: `http(s)://`, `mailto:` (offline CI cannot vouch for the
+//! network), and anything inside fenced code blocks.
+//!
+//! Anchors follow GitHub's slug rules: lowercase, drop everything but
+//! alphanumerics/spaces/hyphens, spaces to hyphens, `-N` suffixes on
+//! duplicates.
+//!
+//! Usage:
+//!   cargo run --bin check_links              # repo root = cwd
+//!   cargo run --bin check_links -- --root ..
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+fn main() {
+    let mut root = String::from(".");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--root" && i + 1 < args.len() {
+            root = args[i + 1].clone();
+            i += 2;
+        } else {
+            eprintln!("usage: check_links [--root DIR]");
+            std::process::exit(2);
+        }
+    }
+    let root = PathBuf::from(root);
+
+    let mut files: Vec<PathBuf> = Vec::new();
+    let readme = root.join("README.md");
+    if readme.is_file() {
+        files.push(readme);
+    }
+    let docs = root.join("docs");
+    if let Ok(entries) = std::fs::read_dir(&docs) {
+        let mut md: Vec<PathBuf> = entries
+            .flatten()
+            .map(|e| e.path())
+            .filter(|p| p.extension().is_some_and(|e| e == "md"))
+            .collect();
+        md.sort();
+        files.extend(md);
+    }
+    if files.is_empty() {
+        eprintln!("check_links: nothing to check under {}", root.display());
+        std::process::exit(2);
+    }
+
+    // Pass 1: heading anchors per file (targets may point at any file).
+    let mut anchors: HashMap<PathBuf, Vec<String>> = HashMap::new();
+    for f in &files {
+        let text = std::fs::read_to_string(f).unwrap_or_default();
+        anchors.insert(canon(f), heading_anchors(&text));
+    }
+
+    // Pass 2: resolve every link.
+    let mut errors: Vec<String> = Vec::new();
+    let mut checked = 0usize;
+    for f in &files {
+        let text = std::fs::read_to_string(f).unwrap_or_default();
+        let dir = f.parent().unwrap_or(Path::new("."));
+        for (line_no, target) in links(&text) {
+            if target.starts_with("http://")
+                || target.starts_with("https://")
+                || target.starts_with("mailto:")
+            {
+                continue;
+            }
+            checked += 1;
+            let at = format!("{}:{line_no}", f.display());
+            let (path_part, anchor) = match target.split_once('#') {
+                Some((p, a)) => (p, Some(a.to_string())),
+                None => (target.as_str(), None),
+            };
+            let resolved = if path_part.is_empty() {
+                f.clone() // same-file `#anchor`
+            } else {
+                dir.join(path_part)
+            };
+            if !resolved.exists() {
+                errors.push(format!("{at}: broken link `{target}` (no {})", resolved.display()));
+                continue;
+            }
+            if let Some(a) = anchor {
+                let key = canon(&resolved);
+                match anchors.get(&key) {
+                    Some(list) if list.iter().any(|h| h == &a) => {}
+                    Some(_) => errors.push(format!("{at}: `{target}` — no heading `#{a}`")),
+                    // Anchor into a file outside the checked set (e.g. a
+                    // source file): existence is all we can verify.
+                    None => {}
+                }
+            }
+        }
+    }
+
+    if errors.is_empty() {
+        println!(
+            "check_links: {} files, {} relative links, all resolve",
+            files.len(),
+            checked
+        );
+    } else {
+        for e in &errors {
+            eprintln!("{e}");
+        }
+        eprintln!("check_links: {} broken link(s)", errors.len());
+        std::process::exit(1);
+    }
+}
+
+/// Canonical key for anchor lookup (no symlink resolution — just
+/// normalized `.`/`..` components so `docs/../README.md` == `README.md`).
+fn canon(p: &Path) -> PathBuf {
+    let mut out = PathBuf::new();
+    for c in p.components() {
+        match c {
+            std::path::Component::CurDir => {}
+            std::path::Component::ParentDir => {
+                if !out.pop() {
+                    out.push("..");
+                }
+            }
+            other => out.push(other),
+        }
+    }
+    out
+}
+
+/// `(line, target)` for every inline markdown link outside fenced code.
+fn links(text: &str) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    let mut in_fence = false;
+    for (idx, line) in text.lines().enumerate() {
+        if line.trim_start().starts_with("```") {
+            in_fence = !in_fence;
+            continue;
+        }
+        if in_fence {
+            continue;
+        }
+        let bytes = line.as_bytes();
+        let mut i = 0;
+        while i < bytes.len() {
+            // Find `](` then scan to the matching `)`.
+            if bytes[i] == b']' && i + 1 < bytes.len() && bytes[i + 1] == b'(' {
+                // Require a matching `[` earlier on the line (cheap guard
+                // against stray `](` in prose).
+                if line[..i].contains('[') {
+                    if let Some(close) = line[i + 2..].find(')') {
+                        let target = line[i + 2..i + 2 + close].trim();
+                        // Drop an optional `"title"` suffix.
+                        let target = target.split_whitespace().next().unwrap_or("");
+                        if !target.is_empty() {
+                            out.push((idx + 1, target.to_string()));
+                        }
+                        i += 2 + close;
+                        continue;
+                    }
+                }
+            }
+            i += 1;
+        }
+    }
+    out
+}
+
+/// GitHub-style heading slugs, with `-N` dedup suffixes.
+fn heading_anchors(text: &str) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    let mut seen: HashMap<String, usize> = HashMap::new();
+    let mut in_fence = false;
+    for line in text.lines() {
+        if line.trim_start().starts_with("```") {
+            in_fence = !in_fence;
+            continue;
+        }
+        if in_fence || !line.starts_with('#') {
+            continue;
+        }
+        let title = line.trim_start_matches('#').trim();
+        let mut slug = String::new();
+        for ch in title.chars() {
+            if ch.is_alphanumeric() {
+                slug.extend(ch.to_lowercase());
+            } else if ch == ' ' || ch == '-' {
+                slug.push('-');
+            } // everything else (punctuation, backticks) is dropped
+        }
+        let n = seen.entry(slug.clone()).or_insert(0);
+        let anchor = if *n == 0 { slug.clone() } else { format!("{slug}-{n}") };
+        *n += 1;
+        out.push(anchor);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_extraction_skips_fences_and_urls_kept() {
+        let md = "see [a](docs/A.md) and [b](#intro)\n```\n[not](a-link.md)\n```\n![img](x.png)\n";
+        let l = links(md);
+        assert_eq!(
+            l,
+            vec![
+                (1, "docs/A.md".to_string()),
+                (1, "#intro".to_string()),
+                (5, "x.png".to_string())
+            ]
+        );
+    }
+
+    #[test]
+    fn anchors_follow_github_slugs() {
+        let md = "# Big Title!\n## `code` & things\n## Big Title!\n";
+        assert_eq!(
+            heading_anchors(md),
+            vec!["big-title", "code--things", "big-title-1"]
+        );
+    }
+
+    #[test]
+    fn canon_normalizes_dots() {
+        assert_eq!(canon(Path::new("docs/../README.md")), Path::new("README.md"));
+        assert_eq!(canon(Path::new("./docs/QOS.md")), Path::new("docs/QOS.md"));
+    }
+}

@@ -60,6 +60,11 @@ pub struct SchedCounters {
     /// idle tick was allowed to speculatively load, sized so the IO fits
     /// the session's pacing headroom (0 until the first capped prefetch).
     pub prefetch_cap: u32,
+    /// Queued poses dropped by QoS load shedding: after a stalled step,
+    /// the oldest poses beyond the session's `shed_depth` backlog are
+    /// discarded so the session renders *recent* viewpoints near its
+    /// cadence instead of replaying a stale backlog ever later.
+    pub shed_frames: u64,
 }
 
 /// Speculative shards allowed per idle tick before any store load has
@@ -185,6 +190,10 @@ struct SlotCtl {
     /// A prefetch warmed ≥1 shard since the last completed step (the
     /// next step's cold-load count decides hit vs miss).
     prefetch_warmed: bool,
+    /// QoS load shedding: max queued poses kept after a stalled step
+    /// (0 = shedding off). Resolved from the session's `QosConfig` at
+    /// add time, honoring the `LSG_QOS` kill switch.
+    shed_depth: usize,
 }
 
 /// One scheduled session: the session itself behind its own lock, the
@@ -305,6 +314,11 @@ impl SessionScheduler {
     pub fn add_paced(&mut self, session: StreamSession, interval: Duration) -> SessionId {
         let id = self.slots.len();
         let scene = session.renderer().handle.clone();
+        let shed_depth = if crate::serve::qos::env_enabled() && session.config.qos.enabled {
+            session.config.qos.shed_depth
+        } else {
+            0
+        };
         self.slots.push(Some(Arc::new(Slot {
             id,
             session: Mutex::new(session),
@@ -320,6 +334,7 @@ impl SessionScheduler {
                 counters: SchedCounters::default(),
                 prefetch_inflight: false,
                 prefetch_warmed: false,
+                shed_depth,
             }),
             scene,
         })));
@@ -791,7 +806,9 @@ fn submit_step(
             // queue-wait interval on the session's virtual trace track
             // (it spans worker handoffs, so it must not share a real
             // thread's span stack).
-            slot.session.lock().unwrap().annotate_sched(&sched);
+            // The interval rides along so the session's QoS controller
+            // can sense lateness-vs-budget and actuate its ladder.
+            slot.session.lock().unwrap().annotate_sched(&sched, interval);
             crate::telemetry::complete_on(
                 "sched_queue_wait",
                 crate::telemetry::SCHED_TRACK_BASE + slot.id as u32,
@@ -833,6 +850,25 @@ fn submit_step(
                 c.total_lateness += lateness;
                 if lateness > c.max_lateness {
                     c.max_lateness = lateness;
+                }
+            }
+            // QoS load shedding: a stalled session drops the OLDEST
+            // queued poses beyond its bounded backlog, so the frames it
+            // does render are recent viewpoints near its cadence instead
+            // of an ever-staler replay. Shedding only ever drops pending
+            // work — never the step that just committed.
+            if paced && sched.stalled && ctl.shed_depth > 0 {
+                let _span = crate::telemetry::span("qos_shed");
+                let mut shed = 0u64;
+                while ctl.poses.len() > ctl.shed_depth {
+                    ctl.poses.pop_front();
+                    shed += 1;
+                }
+                if shed > 0 {
+                    ctl.counters.shed_frames += shed;
+                    crate::telemetry::hub()
+                        .qos_shed_frames
+                        .fetch_add(shed, std::sync::atomic::Ordering::Relaxed);
                 }
             }
         }

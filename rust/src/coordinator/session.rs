@@ -27,6 +27,7 @@ use crate::render::{
     RenderPass, RenderStats, Renderer,
 };
 use crate::scene::{Intrinsics, Pose};
+use crate::serve::qos::{self, QosConfig, QosController, QosDecision, QosStats};
 use crate::shard::SceneHandle;
 use crate::telemetry::{FrameRecord, FrameRing};
 use crate::util::pool::WorkerPool;
@@ -89,6 +90,9 @@ pub struct CoordinatorConfig {
     /// Per-pair kernel implementation (SIMD default). Frames are
     /// bit-identical either way; `LSG_FORCE_SCALAR=1` overrides.
     pub kernel: KernelMode,
+    /// Closed-loop QoS controller knobs (paced sessions only; see
+    /// `serve/qos.rs` and `docs/QOS.md`). `LSG_QOS=off` overrides.
+    pub qos: QosConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -102,6 +106,7 @@ impl Default for CoordinatorConfig {
             threads: 0,
             dispatch: DispatchMode::default(),
             kernel: KernelMode::default(),
+            qos: QosConfig::default(),
         }
     }
 }
@@ -127,6 +132,9 @@ pub struct FrameTrace {
     /// [`StreamServer`](crate::serve::StreamServer)'s traced driver;
     /// all zeros for frames produced outside one.
     pub scene: crate::serve::SceneStats,
+    /// QoS controller snapshot (ladder level, actuated knobs, headroom);
+    /// `active` only for paced steps with the controller enabled.
+    pub qos: QosStats,
 }
 
 /// One produced frame.
@@ -152,6 +160,9 @@ pub struct StepSummary {
     /// [`SessionScheduler`](super::SessionScheduler) when the step ran
     /// under it; all zeros otherwise.
     pub sched: super::SchedStats,
+    /// QoS controller snapshot, stamped alongside `sched` on paced
+    /// steps; default (inactive, level 0) otherwise.
+    pub qos: QosStats,
 }
 
 /// A per-viewer streaming session over shared scene assets.
@@ -184,6 +195,10 @@ pub struct StreamSession {
     /// Bounded history of committed frames (telemetry; preallocated, so
     /// steady-state pushes stay allocation-free).
     ring: FrameRing,
+    /// Closed-loop QoS controller state (ladder level + captured base
+    /// operating point). Only actuates on paced commits, and only when
+    /// `config.qos.enabled` and `LSG_QOS` allow it.
+    qos: QosController,
 }
 
 impl StreamSession {
@@ -210,6 +225,23 @@ impl StreamSession {
             ..renderer.config
         };
         let (w, h) = (renderer.intrinsics().width, renderer.intrinsics().height);
+        // The controller's rungs are defined relative to the *configured*
+        // operating point, captured here. A non-zero `start_level`
+        // (admission down-tiering) applies its rung immediately — but
+        // only when the controller is live: a disabled controller must
+        // neither actuate nor *report* a degraded level.
+        let live = qos::env_enabled() && config.qos.enabled;
+        let mut qos_cfg = config.qos;
+        if !live {
+            qos_cfg.start_level = 0;
+        }
+        let qos_ctl = QosController::new(&qos_cfg, config.window, config.policy.missing_threshold);
+        let mut config = config;
+        if live && qos_ctl.level() > 0 {
+            let (win, thr) = qos_ctl.current();
+            config.window = win;
+            config.policy.missing_threshold = thr;
+        }
         StreamSession {
             renderer,
             config,
@@ -228,6 +260,7 @@ impl StreamSession {
             frame_idx: 0,
             last: StepSummary::default(),
             ring: FrameRing::with_capacity(crate::telemetry::DEFAULT_RING_CAP),
+            qos: qos_ctl,
         }
     }
 
@@ -330,7 +363,22 @@ impl StreamSession {
             imbalance_pm,
             masked_lane_pm,
             warped_fraction: self.last.warped_fraction,
+            qos_level: self.qos.level(),
         });
+        // Stamp the (possibly inactive) controller state so every
+        // StepSummary/FrameTrace carries the operating point the frame
+        // was rendered at; paced commits overwrite this in
+        // `annotate_sched` with the post-observation state.
+        let (downs, ups) = self.qos.transitions();
+        self.last.qos = QosStats {
+            active: false,
+            level: self.qos.level(),
+            window: self.config.window as u32,
+            missing_threshold: self.config.policy.missing_threshold,
+            headroom_pm: 0,
+            level_downs: downs,
+            level_ups: ups,
+        };
     }
 
     /// The session's bounded frame-record history (telemetry read side).
@@ -340,18 +388,64 @@ impl StreamSession {
 
     /// Stamp scheduling stats onto the most recent ring record and the
     /// hub — called by the paced scheduler after it computes
-    /// lateness/queue-wait for the step it just committed.
-    pub(crate) fn annotate_sched(&mut self, sched: &super::SchedStats) {
-        crate::telemetry::hub().record_sched(
+    /// lateness/queue-wait for the step it just committed — then run one
+    /// QoS controller observation over the updated ring. The controller
+    /// actuates by mutating `config.window` / `config.policy.
+    /// missing_threshold`, which the *next* frames render under; the
+    /// whole path is allocation-free (it runs inside the paced commit,
+    /// which keeps the zero-alloc steady state).
+    pub(crate) fn annotate_sched(&mut self, sched: &super::SchedStats, interval: std::time::Duration) {
+        let hub = crate::telemetry::hub();
+        hub.record_sched(
             sched.lateness.as_nanos() as u64,
             sched.t_queue.as_nanos() as u64,
             sched.stalled,
         );
+        let mut step_ns = 0u64;
         if let Some(rec) = self.ring.latest_mut() {
             rec.lateness_ns = sched.lateness.as_nanos() as u64;
             rec.queue_ns = sched.t_queue.as_nanos() as u64;
             rec.stalled = sched.stalled;
+            step_ns = rec.step_ns;
         }
+        let active = qos::env_enabled() && self.config.qos.enabled;
+        let headroom = qos::headroom_pm(step_ns, interval);
+        if active {
+            hub.qos_headroom_pm.record(headroom as u64);
+            match self.qos.observe(&self.config.qos, &self.ring, interval) {
+                QosDecision::Hold => {}
+                decision => {
+                    use std::sync::atomic::Ordering;
+                    let counter = if decision == QosDecision::Degrade {
+                        &hub.qos_level_downs
+                    } else {
+                        &hub.qos_level_ups
+                    };
+                    counter.fetch_add(1, Ordering::Relaxed);
+                    let (win, thr) = self.qos.current();
+                    self.config.window = win;
+                    self.config.policy.missing_threshold = thr;
+                }
+            }
+        }
+        let (downs, ups) = self.qos.transitions();
+        self.last.qos = QosStats {
+            active,
+            level: self.qos.level(),
+            window: self.config.window as u32,
+            missing_threshold: self.config.policy.missing_threshold,
+            headroom_pm: headroom,
+            level_downs: downs,
+            level_ups: ups,
+        };
+        if let Some(rec) = self.ring.latest_mut() {
+            rec.qos_level = self.qos.level();
+        }
+    }
+
+    /// Current QoS ladder level (0 = full quality).
+    pub fn qos_level(&self) -> u8 {
+        self.qos.level()
     }
 
     /// Process the next viewpoint and assemble the full trace + an owned
@@ -383,6 +477,7 @@ impl StreamSession {
                 warped_fraction: self.last.warped_fraction,
                 sched: super::SchedStats::default(),
                 scene: crate::serve::SceneStats::default(),
+                qos: self.last.qos,
             },
         }
     }

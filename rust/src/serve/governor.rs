@@ -95,6 +95,8 @@ pub struct ResidencyGovernor {
 }
 
 impl ResidencyGovernor {
+    /// New governor enforcing one global `budget_bytes` bound across
+    /// every scene later attached.
     pub fn new(budget_bytes: usize) -> ResidencyGovernor {
         ResidencyGovernor {
             budget_bytes,
@@ -102,6 +104,7 @@ impl ResidencyGovernor {
         }
     }
 
+    /// The global byte budget this governor enforces.
     pub fn budget_bytes(&self) -> usize {
         self.budget_bytes
     }
@@ -112,6 +115,7 @@ impl ResidencyGovernor {
         self.inner.lock().unwrap().resident_bytes
     }
 
+    /// Lifetime eviction/overshoot/load counters.
     pub fn counters(&self) -> GovernorCounters {
         self.inner.lock().unwrap().counters
     }

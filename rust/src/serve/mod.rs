@@ -26,6 +26,13 @@
 //!   [`FrameTrace`](crate::coordinator::FrameTrace) →
 //!   [`WorkloadTrace`](crate::sim::WorkloadTrace) like `ShardStats` and
 //!   `SchedStats` before them.
+//! * [`qos`] — the closed QoS loop (PR 8): a per-session
+//!   [`QosController`] senses the frame ring each paced commit and walks
+//!   an explicit degradation [`LADDER`] (longer warp windows, wider
+//!   sparse-rendering thresholds) with hysteresis; an [`AdmissionPolicy`]
+//!   rejects or down-tiers sessions past a ceiling, and the paced
+//!   scheduler sheds stale queued poses from stalled sessions. Kill
+//!   switch: `LSG_QOS=off` (see `docs/QOS.md`).
 //!
 //! Correctness stance, inherited from `shard/`: residency decides only
 //! *when* bytes are loaded, never what is rendered — frames produced by
@@ -34,9 +41,14 @@
 //! servers (`rust/tests/serve.rs`).
 
 pub mod governor;
+pub mod qos;
 pub mod registry;
 pub mod server;
 
 pub use governor::{GovernorCounters, ResidencyGovernor};
+pub use qos::{
+    Admission, AdmissionPolicy, LadderRung, QosConfig, QosController, QosDecision, QosStats,
+    LADDER, MAX_LEVEL,
+};
 pub use registry::{SceneId, SceneRegistry, SceneStats};
 pub use server::StreamServer;

@@ -1,0 +1,483 @@
+//! Closed-loop QoS: per-session quality adaptation plus server-level
+//! admission control and load shedding.
+//!
+//! The serving stack has grown all the *sensors* a control loop needs —
+//! per-session [`FrameRing`] windows with exact lateness percentiles,
+//! [`SchedStats`](crate::coordinator::SchedStats) per paced commit,
+//! lifetime [`SchedCounters`](crate::coordinator::SchedCounters) — but
+//! until now nothing *acted* on them: an overloaded node stretched every
+//! session's lateness without bound. This module closes the loop:
+//!
+//! * [`QosController`] — one per session; each paced commit it reads the
+//!   session's recent ring window (allocation-free) and walks an
+//!   explicit, ordered degradation [`LADDER`]: under sustained lateness
+//!   it steps *down* in quality (longer warp window → fewer dense
+//!   renders; wider TWSR `missing_threshold` → more tiles interpolated
+//!   instead of re-rendered), and steps back *up* with hysteresis once
+//!   the session shows headroom. Each move is one rung per dwell period,
+//!   so the loop cannot oscillate frame-to-frame.
+//! * [`AdmissionPolicy`] — a `StreamServer` knob: above a session-count
+//!   capacity, new sessions are rejected or admitted pre-degraded at the
+//!   bottom rung ("down-tiered") instead of dragging every resident
+//!   session into overload.
+//! * Load shedding — the paced scheduler drops the *oldest* queued poses
+//!   of a stalled session past a bounded backlog (`shed_depth`),
+//!   trading dropped frames for bounded lateness of the frames it does
+//!   render (see `coordinator/scheduler/`).
+//!
+//! Everything is observable: [`QosStats`] ride
+//! [`StepSummary`](crate::coordinator::StepSummary) →
+//! [`FrameTrace`](crate::coordinator::FrameTrace), the hub gains
+//! level-transition / shed / admission counters and a headroom
+//! histogram, and the `qos` bench (`cargo bench -- --exp qos`,
+//! `BENCH_qos.json`) measures bounded-p99-lateness-under-overload with
+//! the controller on vs off plus a PSNR floor per ladder rung. Operator
+//! documentation lives in `docs/QOS.md`.
+//!
+//! ## Kill switch
+//!
+//! `LSG_QOS=off` (or `0`) disables the controller process-wide,
+//! regardless of per-session config — the same once-per-process
+//! resolution as `LSG_FORCE_SCALAR`. With the controller disabled the
+//! actuated knobs (`window`, `missing_threshold`) are never touched, so
+//! frames are bit-identical to a build without this module
+//! (`rust/tests/qos.rs` enforces it across `ALL_SCENES`).
+//!
+//! ## Why *longer* windows degrade quality
+//!
+//! The warp window `n` means one dense render every `n` frames with the
+//! `n − 1` in between warped (TWSR) from it. A longer window therefore
+//! *cuts cost* (fewer dense renders) and *costs quality* (warped frames
+//! drift further from their source render before the next dense anchor).
+//! The ladder accordingly lengthens the window and widens the
+//! interpolation threshold as it degrades — the direction that reduces
+//! per-frame work, which is the only direction that can bound lateness
+//! under overload. Stepping "up" in quality restores the configured
+//! base window/threshold.
+
+use crate::telemetry::FrameRing;
+use std::sync::OnceLock;
+use std::time::Duration;
+
+/// Process-wide kill switch: `LSG_QOS=off` (or `0`) disables every
+/// controller regardless of per-session config. Resolved **once per
+/// process** on first use, like `LSG_FORCE_SCALAR`.
+pub fn env_enabled() -> bool {
+    static ENABLED: OnceLock<bool> = OnceLock::new();
+    *ENABLED.get_or_init(|| {
+        !matches!(std::env::var("LSG_QOS").as_deref(), Ok("off") | Ok("0"))
+    })
+}
+
+/// Per-session controller knobs; rides
+/// [`CoordinatorConfig`](crate::coordinator::CoordinatorConfig) (field
+/// `qos`). The controller is on by default and a no-op for un-paced
+/// (drain-mode) sessions: it only observes scheduler-annotated commits,
+/// which carry a real deadline.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QosConfig {
+    /// Master switch for this session ([`env_enabled`] gates all
+    /// sessions process-wide on top).
+    pub enabled: bool,
+    /// Ring window (frames) each decision observes. A decision needs a
+    /// full window of history, so this also sets the reaction latency.
+    pub sense_window: usize,
+    /// Minimum frames between two level moves (hysteresis dwell).
+    pub dwell: u32,
+    /// Degrade one rung when more than this fraction of the sensed
+    /// window's frames were late (lateness > pacing interval).
+    pub degrade_late_fraction: f32,
+    /// Promote one rung only when the window has *zero* late frames and
+    /// every step finished within this fraction of the interval.
+    pub promote_headroom: f32,
+    /// Highest ladder rung this session may degrade to
+    /// (clamped to [`MAX_LEVEL`]).
+    pub max_level: u8,
+    /// Ladder rung the session starts at (admission down-tiering admits
+    /// over-capacity sessions at `max_level`). 0 = full quality.
+    pub start_level: u8,
+    /// Paced-queue backlog (poses) beyond which a stalled session's
+    /// oldest queued poses are shed. 0 disables shedding.
+    pub shed_depth: usize,
+}
+
+impl Default for QosConfig {
+    fn default() -> QosConfig {
+        QosConfig {
+            enabled: true,
+            sense_window: 32,
+            dwell: 16,
+            degrade_late_fraction: 0.25,
+            promote_headroom: 0.70,
+            max_level: MAX_LEVEL,
+            start_level: 0,
+            shed_depth: 0,
+        }
+    }
+}
+
+/// One rung of the degradation ladder: multipliers/overrides applied to
+/// the session's *configured base* window and TWSR threshold.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LadderRung {
+    /// Warp-window multiplier (dense render every `base × mul` frames).
+    pub window_mul: u32,
+    /// TWSR `missing_threshold` floor at this rung; the effective value
+    /// is `max(base, floor)` so a user-widened base is never narrowed.
+    pub threshold_floor: f32,
+}
+
+/// The ordered degradation ladder, full quality first. Both actuated
+/// knobs are non-decreasing with the rung index — enforced by a
+/// property test in `rust/tests/qos.rs` — so a higher level is always a
+/// cheaper, lower-quality operating point.
+pub const LADDER: [LadderRung; 4] = [
+    // L0: the session's configured operating point, untouched.
+    LadderRung {
+        window_mul: 1,
+        threshold_floor: 0.0,
+    },
+    // L1: interpolate up to 1/3-missing tiles instead of re-rendering.
+    LadderRung {
+        window_mul: 1,
+        threshold_floor: 1.0 / 3.0,
+    },
+    // L2: halve the dense-render rate, interpolate up to 1/2.
+    LadderRung {
+        window_mul: 2,
+        threshold_floor: 0.5,
+    },
+    // L3: a third of the dense renders, interpolate up to 2/3.
+    LadderRung {
+        window_mul: 3,
+        threshold_floor: 2.0 / 3.0,
+    },
+];
+
+/// Highest ladder rung ([`LADDER`]`.len() - 1`).
+pub const MAX_LEVEL: u8 = (LADDER.len() - 1) as u8;
+
+/// What one controller observation decided.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QosDecision {
+    /// Stay at the current rung (in dwell, or no trigger).
+    Hold,
+    /// Degraded one rung (quality down, cost down).
+    Degrade,
+    /// Promoted one rung (quality up, cost up).
+    Promote,
+}
+
+/// Per-commit controller snapshot; rides
+/// [`StepSummary`](crate::coordinator::StepSummary) →
+/// [`FrameTrace`](crate::coordinator::FrameTrace) and the telemetry
+/// snapshot so every actuation is attributable.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct QosStats {
+    /// Controller ran for this commit (env + config enabled, paced).
+    pub active: bool,
+    /// Ladder rung after this commit's observation.
+    pub level: u8,
+    /// Actuated warp window (frames between dense renders).
+    pub window: u32,
+    /// Actuated TWSR missing threshold.
+    pub missing_threshold: f32,
+    /// Headroom of this step, permille of the pacing interval
+    /// (`(interval − step) / interval`; 0 when the step overran).
+    pub headroom_pm: u32,
+    /// Lifetime degradations of this session.
+    pub level_downs: u32,
+    /// Lifetime promotions of this session.
+    pub level_ups: u32,
+}
+
+/// The per-session feedback controller. Owns only control *state*; the
+/// actuated knobs live in the session's `CoordinatorConfig`, which the
+/// session mutates by [`QosController::rung`] after each
+/// [`QosController::observe`]. Every method is allocation-free — it
+/// runs inside the paced commit path, which must stay zero-alloc.
+#[derive(Clone, Copy, Debug)]
+pub struct QosController {
+    level: u8,
+    /// The session's configured operating point, captured at creation:
+    /// rungs are defined relative to it.
+    base_window: usize,
+    base_threshold: f32,
+    /// Frames remaining before the next move is allowed.
+    cooldown: u32,
+    level_downs: u32,
+    level_ups: u32,
+}
+
+impl QosController {
+    /// Capture the session's configured base operating point. The
+    /// controller starts at `cfg.start_level` (admission down-tiering).
+    pub fn new(cfg: &QosConfig, base_window: usize, base_threshold: f32) -> QosController {
+        QosController {
+            level: cfg.start_level.min(cfg.max_level).min(MAX_LEVEL),
+            base_window,
+            base_threshold,
+            cooldown: 0,
+            level_downs: 0,
+            level_ups: 0,
+        }
+    }
+
+    /// Current ladder rung.
+    pub fn level(&self) -> u8 {
+        self.level
+    }
+
+    /// Lifetime (downs, ups) of this controller.
+    pub fn transitions(&self) -> (u32, u32) {
+        (self.level_downs, self.level_ups)
+    }
+
+    /// The actuated `(window, missing_threshold)` at `level`, relative
+    /// to the captured base. Monotone in `level` by construction of
+    /// [`LADDER`].
+    pub fn rung(&self, level: u8) -> (usize, f32) {
+        let r = &LADDER[level.min(MAX_LEVEL) as usize];
+        (
+            (self.base_window * r.window_mul as usize).max(1),
+            self.base_threshold.max(r.threshold_floor),
+        )
+    }
+
+    /// The actuated operating point at the *current* rung.
+    pub fn current(&self) -> (usize, f32) {
+        self.rung(self.level)
+    }
+
+    /// One observation per paced commit: read the last
+    /// `cfg.sense_window` ring records and decide. Degrades when the
+    /// late fraction exceeds `degrade_late_fraction`; promotes when the
+    /// window is clean *and* every step fit in `promote_headroom` of
+    /// the interval; otherwise holds. Moves are rate-limited to one
+    /// rung per `dwell` frames. Allocation-free.
+    pub fn observe(&mut self, cfg: &QosConfig, ring: &FrameRing, interval: Duration) -> QosDecision {
+        let in_dwell = self.cooldown > 0;
+        self.cooldown = self.cooldown.saturating_sub(1);
+        let interval_ns = interval.as_nanos() as u64;
+        if interval_ns == 0 {
+            return QosDecision::Hold;
+        }
+        let mut observed = 0u32;
+        let mut late = 0u32;
+        let mut max_step_ns = 0u64;
+        for r in ring.iter_recent(cfg.sense_window) {
+            observed += 1;
+            if r.lateness_ns > interval_ns {
+                late += 1;
+            }
+            max_step_ns = max_step_ns.max(r.step_ns);
+        }
+        // Decisions need a full window: a half-filled ring right after a
+        // level change (or session start) must not trigger the next move.
+        if in_dwell || (observed as usize) < cfg.sense_window.max(1) {
+            return QosDecision::Hold;
+        }
+        let max_level = cfg.max_level.min(MAX_LEVEL);
+        let late_fraction = late as f32 / observed as f32;
+        if late_fraction > cfg.degrade_late_fraction && self.level < max_level {
+            self.level += 1;
+            self.level_downs += 1;
+            self.cooldown = cfg.dwell;
+            return QosDecision::Degrade;
+        }
+        let headroom_ns = (interval_ns as f64 * cfg.promote_headroom as f64) as u64;
+        if late == 0 && max_step_ns < headroom_ns && self.level > 0 {
+            self.level -= 1;
+            self.level_ups += 1;
+            self.cooldown = cfg.dwell;
+            return QosDecision::Promote;
+        }
+        QosDecision::Hold
+    }
+}
+
+/// Headroom of one paced step, permille of its interval (0 when the
+/// step overran the interval).
+pub fn headroom_pm(step_ns: u64, interval: Duration) -> u32 {
+    let interval_ns = interval.as_nanos() as u64;
+    if interval_ns == 0 || step_ns >= interval_ns {
+        return 0;
+    }
+    ((interval_ns - step_ns) * 1000 / interval_ns) as u32
+}
+
+/// Server-level admission control: what to do with `add_session` when
+/// the node already serves `max_sessions`. The default policy admits
+/// everything (today's behavior).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AdmissionPolicy {
+    /// Sessions beyond this count are rejected or down-tiered;
+    /// `None` = unlimited.
+    pub max_sessions: Option<usize>,
+    /// Over-capacity sessions are admitted at the session's `max_level`
+    /// rung instead of rejected.
+    pub down_tier: bool,
+}
+
+/// Outcome of an admission check.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Under capacity: admit at the configured `start_level`.
+    Admit,
+    /// Over capacity, `down_tier` set: admit at the bottom rung.
+    DownTier,
+    /// Over capacity: refuse the session.
+    Reject,
+}
+
+impl AdmissionPolicy {
+    /// Admit everything (the default).
+    pub fn open() -> AdmissionPolicy {
+        AdmissionPolicy::default()
+    }
+
+    /// Decide for a server currently holding `active` sessions.
+    pub fn decide(&self, active: usize) -> Admission {
+        match self.max_sessions {
+            Some(cap) if active >= cap => {
+                if self.down_tier {
+                    Admission::DownTier
+                } else {
+                    Admission::Reject
+                }
+            }
+            _ => Admission::Admit,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{FrameRecord, FrameRing};
+
+    fn cfg() -> QosConfig {
+        QosConfig {
+            sense_window: 4,
+            dwell: 2,
+            ..QosConfig::default()
+        }
+    }
+
+    fn ring_with(lateness_ns: &[u64], step_ns: u64) -> FrameRing {
+        let mut ring = FrameRing::with_capacity(64);
+        for (i, &l) in lateness_ns.iter().enumerate() {
+            ring.push(FrameRecord {
+                frame_idx: i as u64,
+                step_ns,
+                lateness_ns: l,
+                ..FrameRecord::default()
+            });
+        }
+        ring
+    }
+
+    #[test]
+    fn degrades_under_sustained_lateness_and_respects_dwell() {
+        let cfg = cfg();
+        let mut c = QosController::new(&cfg, 5, 1.0 / 6.0);
+        let interval = Duration::from_millis(10);
+        let ring = ring_with(&[20_000_000; 8], 30_000_000); // all late
+        assert_eq!(c.observe(&cfg, &ring, interval), QosDecision::Degrade);
+        assert_eq!(c.level(), 1);
+        // Dwell: the next two observations hold even though still late.
+        assert_eq!(c.observe(&cfg, &ring, interval), QosDecision::Hold);
+        assert_eq!(c.observe(&cfg, &ring, interval), QosDecision::Hold);
+        assert_eq!(c.observe(&cfg, &ring, interval), QosDecision::Degrade);
+        assert_eq!(c.level(), 2);
+        assert_eq!(c.transitions(), (2, 0));
+    }
+
+    #[test]
+    fn promotes_only_on_clean_window_with_headroom() {
+        let cfg = QosConfig {
+            start_level: 2,
+            ..cfg()
+        };
+        let mut c = QosController::new(&cfg, 5, 1.0 / 6.0);
+        let interval = Duration::from_millis(10);
+        // Clean but slow (no headroom): hold.
+        let slow = ring_with(&[0; 8], 9_000_000);
+        assert_eq!(c.observe(&cfg, &slow, interval), QosDecision::Hold);
+        // Clean and fast: promote.
+        let fast = ring_with(&[0; 8], 2_000_000);
+        assert_eq!(c.observe(&cfg, &fast, interval), QosDecision::Promote);
+        assert_eq!(c.level(), 1);
+    }
+
+    #[test]
+    fn never_leaves_ladder_bounds() {
+        let cfg = QosConfig {
+            dwell: 0,
+            max_level: 1,
+            ..cfg()
+        };
+        let mut c = QosController::new(&cfg, 5, 1.0 / 6.0);
+        let interval = Duration::from_millis(10);
+        let late = ring_with(&[20_000_000; 8], 30_000_000);
+        for _ in 0..10 {
+            c.observe(&cfg, &late, interval);
+        }
+        assert_eq!(c.level(), 1, "clamped to max_level");
+        let fast = ring_with(&[0; 8], 1_000_000);
+        for _ in 0..10 {
+            c.observe(&cfg, &fast, interval);
+        }
+        assert_eq!(c.level(), 0, "never below 0");
+    }
+
+    #[test]
+    fn short_history_never_triggers() {
+        let cfg = cfg();
+        let mut c = QosController::new(&cfg, 5, 1.0 / 6.0);
+        let ring = ring_with(&[20_000_000; 2], 30_000_000); // < sense_window
+        assert_eq!(
+            c.observe(&cfg, &ring, Duration::from_millis(10)),
+            QosDecision::Hold
+        );
+        assert_eq!(c.level(), 0);
+    }
+
+    #[test]
+    fn rungs_are_monotone_and_anchored_at_base() {
+        let c = QosController::new(&QosConfig::default(), 5, 1.0 / 6.0);
+        assert_eq!(c.rung(0), (5, 1.0 / 6.0));
+        let mut prev = c.rung(0);
+        for l in 1..=MAX_LEVEL {
+            let r = c.rung(l);
+            assert!(r.0 >= prev.0 && r.1 >= prev.1, "ladder must be ordered");
+            prev = r;
+        }
+    }
+
+    #[test]
+    fn headroom_is_permille_and_clamped() {
+        let i = Duration::from_millis(10);
+        assert_eq!(headroom_pm(0, i), 1000);
+        assert_eq!(headroom_pm(5_000_000, i), 500);
+        assert_eq!(headroom_pm(10_000_000, i), 0);
+        assert_eq!(headroom_pm(20_000_000, i), 0);
+        assert_eq!(headroom_pm(1, Duration::ZERO), 0);
+    }
+
+    #[test]
+    fn admission_policy_decides() {
+        assert_eq!(AdmissionPolicy::open().decide(usize::MAX - 1), Admission::Admit);
+        let cap = AdmissionPolicy {
+            max_sessions: Some(2),
+            down_tier: false,
+        };
+        assert_eq!(cap.decide(1), Admission::Admit);
+        assert_eq!(cap.decide(2), Admission::Reject);
+        let tier = AdmissionPolicy {
+            max_sessions: Some(2),
+            down_tier: true,
+        };
+        assert_eq!(tier.decide(2), Admission::DownTier);
+    }
+}

@@ -75,6 +75,7 @@ impl SceneRegistry {
         }
     }
 
+    /// The shared residency governor every registered scene reports to.
     pub fn governor(&self) -> &Arc<ResidencyGovernor> {
         &self.governor
     }
@@ -117,10 +118,12 @@ impl SceneRegistry {
         Ok(reg.handle)
     }
 
+    /// Look up a live scene's handle (`None` if removed or unknown).
     pub fn get(&self, id: SceneId) -> Option<&SceneHandle> {
         self.scenes.get(id).and_then(|s| s.as_ref()).map(|r| &r.handle)
     }
 
+    /// Whether `id` names a live scene.
     pub fn contains(&self, id: SceneId) -> bool {
         self.scenes.get(id).is_some_and(Option::is_some)
     }
@@ -130,6 +133,7 @@ impl SceneRegistry {
         self.scenes.iter().flatten().count()
     }
 
+    /// No live scenes.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

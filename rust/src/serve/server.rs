@@ -29,7 +29,35 @@
 //!   independent single-scene servers: residency decides only *when*
 //!   bytes are loaded, never what is rendered (enforced in
 //!   `rust/tests/serve.rs`).
+//!
+//! **Overload posture** (PR 8): an [`AdmissionPolicy`] guards session
+//! creation — beyond a configured ceiling new sessions are refused
+//! ([`Admission::Reject`]) or admitted pre-degraded at the bottom QoS
+//! ladder rung ([`Admission::DownTier`]); per-session quality adaptation
+//! and paced-queue shedding then live in [`qos`](super::qos) and the
+//! scheduler. The default policy is [`AdmissionPolicy::open`]: nothing
+//! changes unless an operator opts in via
+//! [`StreamServer::set_admission`].
+//!
+//! # Example
+//!
+//! Single-scene quickstart — serve one scene to one viewer and read the
+//! frame back:
+//!
+//! ```
+//! use ls_gaussian::coordinator::CoordinatorConfig;
+//! use ls_gaussian::scene::{generate, SceneAssets};
+//! use ls_gaussian::serve::StreamServer;
+//!
+//! let scene = generate("room", 0.02, 64, 64);
+//! let mut server = StreamServer::new(SceneAssets::from_scene(&scene), CoordinatorConfig::default());
+//! let id = server.add_session();
+//! let results = server.step_all(&[scene.sample_poses(1)[0]]);
+//! assert_eq!(results.len(), 1);
+//! assert!(server.session(id).frame().rgb.iter().any(|&v| v > 0.0));
+//! ```
 
+use super::qos::{self, Admission, AdmissionPolicy};
 use super::registry::{SceneId, SceneRegistry, SceneStats};
 use super::ResidencyGovernor;
 use crate::coordinator::scheduler::{SchedConfig, SessionGuard, SessionId, SessionScheduler};
@@ -38,7 +66,7 @@ use crate::scene::Pose;
 use crate::shard::{SceneHandle, StoreKind};
 use crate::telemetry::{NodeTelemetry, SceneTelemetry, SessionTelemetry, TelemetrySnapshot};
 use crate::util::pool::{default_threads, WorkerPool};
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 use std::sync::Arc;
 
 /// Serves M concurrent [`StreamSession`]s over N registered scenes and
@@ -55,6 +83,8 @@ pub struct StreamServer {
     default_scene: Option<SceneId>,
     /// Scene each session is attached to, indexed by [`SessionId`].
     session_scene: Vec<Option<SceneId>>,
+    /// Gate on session creation; [`AdmissionPolicy::open`] by default.
+    admission: AdmissionPolicy,
 }
 
 impl StreamServer {
@@ -114,7 +144,20 @@ impl StreamServer {
             scheduler: SessionScheduler::new(pool, SchedConfig::default()),
             default_scene: None,
             session_scene: Vec::new(),
+            admission: AdmissionPolicy::open(),
         }
+    }
+
+    /// Install an [`AdmissionPolicy`] gating future session creation
+    /// (existing sessions are untouched). The default is
+    /// [`AdmissionPolicy::open`] — everything admitted at full quality.
+    pub fn set_admission(&mut self, policy: AdmissionPolicy) {
+        self.admission = policy;
+    }
+
+    /// The active admission policy.
+    pub fn admission(&self) -> AdmissionPolicy {
+        self.admission
     }
 
     // ---- scenes ----------------------------------------------------
@@ -187,6 +230,24 @@ impl StreamServer {
     /// path, not a render path. Exposition via
     /// [`TelemetrySnapshot::to_json`] /
     /// [`TelemetrySnapshot::to_prometheus`].
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use ls_gaussian::coordinator::CoordinatorConfig;
+    /// use ls_gaussian::scene::{generate, SceneAssets};
+    /// use ls_gaussian::serve::StreamServer;
+    ///
+    /// let scene = generate("chair", 0.02, 64, 64);
+    /// let mut server = StreamServer::new(SceneAssets::from_scene(&scene), CoordinatorConfig::default());
+    /// server.add_session();
+    /// server.step_all(&[scene.sample_poses(1)[0]]);
+    /// let snap = server.telemetry_snapshot();
+    /// assert_eq!(snap.sessions.len(), 1);
+    /// assert_eq!(snap.sessions[0].frames, 1);
+    /// assert!(snap.to_prometheus().contains("lsg_session_frames_total"));
+    /// assert!(snap.to_json().to_string_pretty().contains("\"sessions\""));
+    /// ```
     pub fn telemetry_snapshot(&self) -> TelemetrySnapshot {
         let scenes = self
             .registry
@@ -225,11 +286,13 @@ impl StreamServer {
             .into_iter()
             .map(|id| {
                 let guard = self.scheduler.session(id);
+                let qos_level = guard.qos_level();
                 let ring = guard.ring();
                 SessionTelemetry {
                     session: id,
                     scene: self.scene_of(id),
                     frames: ring.total(),
+                    qos_level,
                     window: ring.summary(ring.capacity()),
                 }
             })
@@ -249,12 +312,21 @@ impl StreamServer {
     // ---- sessions --------------------------------------------------
 
     /// Open a new viewer session on the default scene; returns its id.
+    /// Panics when the admission policy rejects — use
+    /// [`StreamServer::try_add_session`] where rejection is expected.
     pub fn add_session(&mut self) -> SessionId {
-        self.add_session_with(self.config)
+        self.try_add_session().expect("admission")
+    }
+
+    /// Fallible [`StreamServer::add_session`]: `Err` when the admission
+    /// policy rejects the node's (`active + 1`)-th session.
+    pub fn try_add_session(&mut self) -> Result<SessionId> {
+        let scene = self.default_scene.expect("no scene registered");
+        self.try_add_session_on_with(scene, self.config)
     }
 
     /// Open a session on the default scene with a per-viewer config
-    /// override.
+    /// override. Panics on admission rejection.
     pub fn add_session_with(&mut self, config: CoordinatorConfig) -> SessionId {
         let scene = self.default_scene.expect("no scene registered");
         self.add_session_on_with(scene, config)
@@ -262,6 +334,7 @@ impl StreamServer {
 
     /// Open a session on the default scene with a per-viewer config
     /// *and* target frame interval (the paced mode's deadline cadence).
+    /// Panics on admission rejection.
     pub fn add_paced_session(
         &mut self,
         config: CoordinatorConfig,
@@ -272,30 +345,85 @@ impl StreamServer {
     }
 
     /// Open a session on a specific scene. Panics on unknown scene ids,
-    /// like indexing.
+    /// like indexing, and on admission rejection.
     pub fn add_session_on(&mut self, scene: SceneId) -> SessionId {
         self.add_session_on_with(scene, self.config)
     }
 
     /// Open a session on a specific scene with a per-viewer config.
+    /// Panics on admission rejection.
     pub fn add_session_on_with(&mut self, scene: SceneId, config: CoordinatorConfig) -> SessionId {
+        self.try_add_session_on_with(scene, config).expect("admission")
+    }
+
+    /// Fallible session creation on a named scene: the single admission
+    /// gate every `add_session*` constructor funnels through.
+    /// [`Admission::DownTier`] admits the session pre-degraded at the
+    /// bottom QoS ladder rung (takes effect when the controller is
+    /// enabled); [`Admission::Reject`] returns `Err` and bumps
+    /// `qos_rejected_sessions` in the [`hub`](crate::telemetry::hub).
+    pub fn try_add_session_on_with(
+        &mut self,
+        scene: SceneId,
+        config: CoordinatorConfig,
+    ) -> Result<SessionId> {
+        let config = self.admit(config)?;
         let session = self.make_session(scene, config);
         let id = self.scheduler.add(session);
         self.bind(id, scene);
-        id
+        Ok(id)
     }
 
-    /// Open a paced session on a specific scene.
+    /// Open a paced session on a specific scene. Panics on admission
+    /// rejection.
     pub fn add_paced_session_on(
         &mut self,
         scene: SceneId,
         config: CoordinatorConfig,
         interval: std::time::Duration,
     ) -> SessionId {
+        self.try_add_paced_session_on(scene, config, interval)
+            .expect("admission")
+    }
+
+    /// Fallible [`StreamServer::add_paced_session_on`] (same admission
+    /// gate as [`StreamServer::try_add_session_on_with`]).
+    pub fn try_add_paced_session_on(
+        &mut self,
+        scene: SceneId,
+        config: CoordinatorConfig,
+        interval: std::time::Duration,
+    ) -> Result<SessionId> {
+        let config = self.admit(config)?;
         let session = self.make_session(scene, config);
         let id = self.scheduler.add_paced(session, interval);
         self.bind(id, scene);
-        id
+        Ok(id)
+    }
+
+    /// Apply the admission policy to one candidate session's config.
+    fn admit(&self, mut config: CoordinatorConfig) -> Result<CoordinatorConfig> {
+        use std::sync::atomic::Ordering;
+        match self.admission.decide(self.scheduler.num_sessions()) {
+            Admission::Admit => Ok(config),
+            Admission::DownTier => {
+                crate::telemetry::hub()
+                    .qos_downtiered_sessions
+                    .fetch_add(1, Ordering::Relaxed);
+                config.qos.start_level = config.qos.max_level.min(qos::MAX_LEVEL);
+                Ok(config)
+            }
+            Admission::Reject => {
+                crate::telemetry::hub()
+                    .qos_rejected_sessions
+                    .fetch_add(1, Ordering::Relaxed);
+                bail!(
+                    "admission rejected: {} sessions at or over the ceiling {:?}",
+                    self.scheduler.num_sessions(),
+                    self.admission.max_sessions
+                )
+            }
+        }
     }
 
     /// Close a session: it stops being scheduled (in-flight steps are
@@ -325,10 +453,12 @@ impl StreamServer {
         self.session_scene[session] = Some(scene);
     }
 
+    /// Live sessions across all scenes.
     pub fn num_sessions(&self) -> usize {
         self.scheduler.num_sessions()
     }
 
+    /// The shared worker pool every session renders on.
     pub fn pool(&self) -> &Arc<WorkerPool> {
         self.scheduler.pool()
     }
@@ -338,6 +468,7 @@ impl StreamServer {
         &self.scheduler
     }
 
+    /// Mutable scheduler access (push poses, `pump`/`run_for`).
     pub fn scheduler_mut(&mut self) -> &mut SessionScheduler {
         &mut self.scheduler
     }

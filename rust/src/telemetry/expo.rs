@@ -29,6 +29,17 @@ pub struct NodeTelemetry {
     pub stalled_steps: u64,
     pub shard_loads: u64,
     pub governor_evictions: u64,
+    /// QoS ladder degradations across all sessions (see
+    /// [`qos`](crate::serve::qos)).
+    pub qos_level_downs: u64,
+    /// QoS ladder promotions across all sessions.
+    pub qos_level_ups: u64,
+    /// Queued poses shed by the paced scheduler from stalled sessions.
+    pub qos_shed_frames: u64,
+    /// Sessions refused by the admission policy.
+    pub qos_rejected_sessions: u64,
+    /// Sessions admitted pre-degraded at the bottom ladder rung.
+    pub qos_downtiered_sessions: u64,
     pub frame_ns: HistSummary,
     pub lateness_ns: HistSummary,
     pub queue_wait_ns: HistSummary,
@@ -36,6 +47,9 @@ pub struct NodeTelemetry {
     pub masked_lane_pm: HistSummary,
     pub load_ns_mem: HistSummary,
     pub load_ns_file: HistSummary,
+    /// Headroom left in the pacing interval per paced step, permille
+    /// (QoS-enabled sessions only; 0 = overran).
+    pub qos_headroom_pm: HistSummary,
 }
 
 impl NodeTelemetry {
@@ -53,6 +67,11 @@ impl NodeTelemetry {
             stalled_steps: h.stalled_steps.load(Ordering::Relaxed),
             shard_loads: h.shard_loads.load(Ordering::Relaxed),
             governor_evictions: h.governor_evictions.load(Ordering::Relaxed),
+            qos_level_downs: h.qos_level_downs.load(Ordering::Relaxed),
+            qos_level_ups: h.qos_level_ups.load(Ordering::Relaxed),
+            qos_shed_frames: h.qos_shed_frames.load(Ordering::Relaxed),
+            qos_rejected_sessions: h.qos_rejected_sessions.load(Ordering::Relaxed),
+            qos_downtiered_sessions: h.qos_downtiered_sessions.load(Ordering::Relaxed),
             frame_ns: h.frame_ns.summary(),
             lateness_ns: h.lateness_ns.summary(),
             queue_wait_ns: h.queue_wait_ns.summary(),
@@ -60,6 +79,7 @@ impl NodeTelemetry {
             masked_lane_pm: h.masked_lane_pm.summary(),
             load_ns_mem: h.load_ns_mem.summary(),
             load_ns_file: h.load_ns_file.summary(),
+            qos_headroom_pm: h.qos_headroom_pm.summary(),
         }
     }
 }
@@ -91,6 +111,9 @@ pub struct SessionTelemetry {
     pub scene: Option<usize>,
     /// Lifetime frames stepped by this session.
     pub frames: u64,
+    /// Current QoS ladder level (0 = full quality; see
+    /// [`LADDER`](crate::serve::qos::LADDER)).
+    pub qos_level: u8,
     /// Aggregates over the ring window.
     pub window: RingSummary,
 }
@@ -158,6 +181,12 @@ impl TelemetrySnapshot {
             .set("stalled_steps", n.stalled_steps)
             .set("shard_loads", n.shard_loads)
             .set("governor_evictions", n.governor_evictions)
+            .set("qos_level_downs", n.qos_level_downs)
+            .set("qos_level_ups", n.qos_level_ups)
+            .set("qos_shed_frames", n.qos_shed_frames)
+            .set("qos_rejected_sessions", n.qos_rejected_sessions)
+            .set("qos_downtiered_sessions", n.qos_downtiered_sessions)
+            .set("qos_headroom", ratio_hist_json(&n.qos_headroom_pm))
             .set("frame_ms", ns_hist_json(&n.frame_ns))
             .set("lateness_ms", ns_hist_json(&n.lateness_ns))
             .set("queue_wait_ms", ns_hist_json(&n.queue_wait_ns))
@@ -199,6 +228,7 @@ impl TelemetrySnapshot {
                 let mut j = Json::obj();
                 j.set("session", se.session)
                     .set("frames", se.frames)
+                    .set("qos_level", se.qos_level as usize)
                     .set("window_frames", w.frames)
                     .set("warped_frames", w.warped_frames)
                     .set("stalled", w.stalled)
@@ -240,10 +270,16 @@ impl TelemetrySnapshot {
             ("lsg_stalled_steps_total", n.stalled_steps),
             ("lsg_shard_loads_total", n.shard_loads),
             ("lsg_governor_evictions_total", n.governor_evictions),
+            ("lsg_qos_level_downs_total", n.qos_level_downs),
+            ("lsg_qos_level_ups_total", n.qos_level_ups),
+            ("lsg_qos_shed_frames_total", n.qos_shed_frames),
+            ("lsg_qos_rejected_sessions_total", n.qos_rejected_sessions),
+            ("lsg_qos_downtiered_sessions_total", n.qos_downtiered_sessions),
         ] {
             let _ = writeln!(out, "# TYPE {name} counter");
             let _ = writeln!(out, "{name} {v}");
         }
+        prom_hist(&mut out, "lsg_qos_headroom", "", &n.qos_headroom_pm, PM_TO_RATIO);
         prom_hist(&mut out, "lsg_frame_ms", "", &n.frame_ns, NS_TO_MS);
         prom_hist(&mut out, "lsg_lateness_ms", "", &n.lateness_ns, NS_TO_MS);
         prom_hist(&mut out, "lsg_queue_wait_ms", "", &n.queue_wait_ns, NS_TO_MS);
@@ -283,6 +319,7 @@ impl TelemetrySnapshot {
             let l = format!("session=\"{session}\"");
             let w = &se.window;
             let _ = writeln!(out, "lsg_session_frames_total{{{l}}} {}", se.frames);
+            let _ = writeln!(out, "lsg_session_qos_level{{{l}}} {}", se.qos_level);
             let _ = writeln!(out, "lsg_session_window_stalls{{{l}}} {}", w.stalled);
             for (name, v) in [
                 ("lsg_session_step_ms", [w.step_ms_p50, w.step_ms_p95, w.step_ms_p99]),
@@ -324,6 +361,11 @@ mod tests {
         }
         hub.imbalance_pm.record(1_250);
         hub.masked_lane_pm.record(120);
+        hub.qos_level_downs.fetch_add(3, Ordering::Relaxed);
+        hub.qos_level_ups.fetch_add(2, Ordering::Relaxed);
+        hub.qos_shed_frames.fetch_add(7, Ordering::Relaxed);
+        hub.qos_rejected_sessions.fetch_add(1, Ordering::Relaxed);
+        hub.qos_headroom_pm.record(450);
         let class_hist = Histogram::new();
         for i in 1..=10u64 {
             class_hist.record(i * 100_000);
@@ -359,6 +401,7 @@ mod tests {
                 session: 0,
                 scene: Some(0),
                 frames: ring.total(),
+                qos_level: 1,
                 window: ring.summary(64),
             }],
         }
@@ -385,8 +428,13 @@ mod tests {
         let sessions = parsed.get("sessions").and_then(Json::as_arr).unwrap();
         let s0 = &sessions[0];
         assert_eq!(s0.get("window_frames").and_then(Json::as_f64), Some(50.0));
+        assert_eq!(s0.get("qos_level").and_then(Json::as_f64), Some(1.0));
         assert!(s0.get("step_ms_p99").and_then(Json::as_f64).unwrap() > 0.0);
         assert!(s0.get("lateness_ms_p50").and_then(Json::as_f64).unwrap() > 0.0);
+        assert_eq!(node.get("qos_level_downs").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(node.get("qos_shed_frames").and_then(Json::as_f64), Some(7.0));
+        let headroom = node.get("qos_headroom").expect("qos_headroom digest");
+        assert_eq!(headroom.get("p50").and_then(Json::as_f64), Some(0.45));
     }
 
     #[test]
@@ -405,6 +453,11 @@ mod tests {
             "lsg_scene_load_ms{scene=\"0\",class=\"small\",quantile=\"0.5\"}",
             "lsg_session_step_ms{session=\"0\",quantile=\"0.99\"}",
             "lsg_session_lateness_ms{session=\"0\",quantile=\"0.5\"}",
+            "lsg_qos_level_downs_total 3",
+            "lsg_qos_shed_frames_total 7",
+            "lsg_qos_rejected_sessions_total 1",
+            "lsg_qos_headroom{quantile=\"0.5\"}",
+            "lsg_session_qos_level{session=\"0\"} 1",
         ] {
             assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
         }

@@ -128,18 +128,22 @@ impl Histogram {
         self.record(d.as_nanos().min(MAX_VALUE as u128) as u64);
     }
 
+    /// Observations recorded.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Sum of recorded values (saturating).
     pub fn sum(&self) -> u64 {
         self.sum.load(Ordering::Relaxed)
     }
 
+    /// Largest recorded value.
     pub fn max(&self) -> u64 {
         self.max.load(Ordering::Relaxed)
     }
 
+    /// Mean of recorded values (0 when empty).
     pub fn mean(&self) -> f64 {
         let n = self.count();
         if n == 0 {
@@ -154,6 +158,7 @@ impl Histogram {
         percentile_from(|i| self.buckets[i].load(Ordering::Relaxed), self.count(), q)
     }
 
+    /// One-shot digest: count/sum/max/mean + p50/p95/p99.
     pub fn summary(&self) -> HistSummary {
         HistSummary {
             count: self.count(),
@@ -206,6 +211,7 @@ impl LocalHistogram {
         self.record(d.as_nanos().min(MAX_VALUE as u128) as u64);
     }
 
+    /// Fold another histogram's buckets into this one.
     pub fn merge(&mut self, other: &LocalHistogram) {
         for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
             *b += *o;
@@ -215,18 +221,22 @@ impl LocalHistogram {
         self.max = self.max.max(other.max);
     }
 
+    /// Observations recorded.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Sum of recorded values (saturating).
     pub fn sum(&self) -> u64 {
         self.sum
     }
 
+    /// Largest recorded value.
     pub fn max(&self) -> u64 {
         self.max
     }
 
+    /// Mean of recorded values (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -235,10 +245,12 @@ impl LocalHistogram {
         }
     }
 
+    /// Approximate percentile (`q` in `[0, 1]`), ≤ 1/8 relative error.
     pub fn percentile(&self, q: f64) -> u64 {
         percentile_from(|i| self.buckets[i], self.count, q)
     }
 
+    /// One-shot digest: count/sum/max/mean + p50/p95/p99.
     pub fn summary(&self) -> HistSummary {
         HistSummary {
             count: self.count,

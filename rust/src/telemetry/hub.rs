@@ -45,6 +45,19 @@ pub struct MetricsHub {
     pub shard_loads: AtomicU64,
     /// Shards evicted by the cross-scene residency governor.
     pub governor_evictions: AtomicU64,
+    /// QoS ladder degradations (quality stepped down one rung).
+    pub qos_level_downs: AtomicU64,
+    /// QoS ladder promotions (quality stepped back up one rung).
+    pub qos_level_ups: AtomicU64,
+    /// Queued poses shed by the paced scheduler from stalled sessions.
+    pub qos_shed_frames: AtomicU64,
+    /// Sessions refused by the server's admission policy.
+    pub qos_rejected_sessions: AtomicU64,
+    /// Sessions admitted pre-degraded at the bottom ladder rung.
+    pub qos_downtiered_sessions: AtomicU64,
+    /// Per paced step: headroom left in the pacing interval, permille
+    /// (0 = the step overran its interval). QoS-enabled sessions only.
+    pub qos_headroom_pm: Histogram,
 }
 
 impl MetricsHub {
@@ -63,6 +76,12 @@ impl MetricsHub {
             stalled_steps: AtomicU64::new(0),
             shard_loads: AtomicU64::new(0),
             governor_evictions: AtomicU64::new(0),
+            qos_level_downs: AtomicU64::new(0),
+            qos_level_ups: AtomicU64::new(0),
+            qos_shed_frames: AtomicU64::new(0),
+            qos_rejected_sessions: AtomicU64::new(0),
+            qos_downtiered_sessions: AtomicU64::new(0),
+            qos_headroom_pm: Histogram::new(),
         }
     }
 

@@ -20,6 +20,26 @@
 //! assembles a [`TelemetrySnapshot`] with JSON and Prometheus writers.
 //! Env knobs and the Perfetto how-to are documented in
 //! `docs/OBSERVABILITY.md`.
+//!
+//! The hub and rings also feed the closed QoS loop
+//! ([`serve::qos`](crate::serve::qos), PR 8): the controller senses
+//! [`FrameRing::iter_recent`] each paced commit (allocation-free), and
+//! its decisions flow back as `qos_*` hub counters, the
+//! `qos_headroom_pm` histogram, and the `qos_level` stamped on
+//! [`FrameRecord`] / [`SessionTelemetry`].
+//!
+//! # Example
+//!
+//! Digest the process-wide hub without a server:
+//!
+//! ```
+//! use ls_gaussian::telemetry::{hub, NodeTelemetry};
+//!
+//! hub().record_frame(true, 2_000_000); // 2 ms dense frame
+//! let node = NodeTelemetry::capture();
+//! assert!(node.frames >= 1);
+//! assert!(node.frame_ns.count >= 1);
+//! ```
 
 pub mod expo;
 pub mod hist;

@@ -41,6 +41,8 @@ pub struct FrameRecord {
     pub masked_lane_pm: u32,
     /// Fraction of pixels carried by warping.
     pub warped_fraction: f32,
+    /// QoS ladder level the frame was rendered at (0 = full quality).
+    pub qos_level: u8,
 }
 
 /// Default ring capacity (frames) for a streaming session — at 30 FPS
@@ -80,10 +82,12 @@ impl FrameRing {
         self.len
     }
 
+    /// No records yet.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
+    /// Fixed slot count (oldest records overwritten past this).
     pub fn capacity(&self) -> usize {
         self.buf.len()
     }

@@ -1,0 +1,366 @@
+//! Integration tests for the closed-loop QoS layer (PR 8): the
+//! `LSG_QOS` kill switch and the config-level `enabled` flag must keep
+//! frames bit-identical to the uncontrolled pipeline on every
+//! `ALL_SCENES` entry; the degradation ladder is monotone; overload
+//! engages the ladder end to end (controller state visible in
+//! `StepSummary`/`FrameTrace`, hub counters, and the telemetry
+//! snapshot); admission control rejects or down-tiers; and load
+//! shedding bounds a stalled session's backlog.
+//!
+//! CI runs this binary twice: once normally (controller live) and once
+//! under `LSG_QOS=off`, which flips the env-dependent branches below —
+//! the overload/shedding tests skip, and the kill-switch test asserts
+//! bit-parity even with an *enabled* config.
+
+use ls_gaussian::coordinator::{
+    CoordinatorConfig, SchedConfig, SessionScheduler, StepSummary, StreamServer, StreamSession,
+};
+use ls_gaussian::scene::{generate, Pose, SceneAssets};
+use ls_gaussian::serve::qos::{self, AdmissionPolicy, QosConfig, QosController, LADDER, MAX_LEVEL};
+use ls_gaussian::util::pool::WorkerPool;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Small fixed pool: QoS behavior must not depend on machine width, and
+/// the overload tests below *want* contention.
+fn pool(threads: usize) -> Arc<WorkerPool> {
+    Arc::new(WorkerPool::new(threads.max(1)))
+}
+
+/// An interval no real step can meet: every paced frame is late, every
+/// completion stalls — structural overload on any machine.
+const INFEASIBLE: Duration = Duration::from_micros(50);
+
+/// A QoS config that reacts fast enough for short test runs.
+fn fast_qos(enabled: bool) -> QosConfig {
+    QosConfig {
+        enabled,
+        sense_window: 8,
+        dwell: 4,
+        ..Default::default()
+    }
+}
+
+/// Drive one paced session pose by pose, returning each committed
+/// frame's RGB plus the per-step summaries.
+fn run_paced(
+    sched: &mut SessionScheduler,
+    id: ls_gaussian::coordinator::SessionId,
+    poses: &[Pose],
+) -> (Vec<Vec<f32>>, Vec<StepSummary>) {
+    let mut frames = Vec::with_capacity(poses.len());
+    let mut summaries = Vec::with_capacity(poses.len());
+    for pose in poses {
+        assert!(sched.push_pose(id, *pose));
+        let done = sched.run_for(Duration::from_secs(60));
+        assert_eq!(done.len(), 1, "paced step did not complete");
+        summaries.push(done[0].1.clone());
+        frames.push(sched.session(id).frame().rgb.clone());
+    }
+    (frames, summaries)
+}
+
+/// With the controller disabled *by config*, the paced pipeline must be
+/// bit-identical to the uncontrolled drain pipeline on every scene —
+/// the same guarantee `LSG_QOS=off` gives for enabled configs. The
+/// config uses a hair-trigger sense window so that, were the controller
+/// live, it would certainly have actuated within the run.
+#[test]
+fn config_disabled_controller_is_bit_identical_on_all_scenes() {
+    let cfg = CoordinatorConfig {
+        threads: 1,
+        qos: QosConfig {
+            sense_window: 4,
+            dwell: 1,
+            ..fast_qos(false)
+        },
+        ..Default::default()
+    };
+    for name in ls_gaussian::scene::ALL_SCENES {
+        let scene = generate(name, 0.02, 64, 64);
+        let poses = scene.sample_poses(12);
+        let assets = SceneAssets::from_scene(&scene);
+
+        let p = pool(2);
+        let mut sched = SessionScheduler::new(
+            Arc::clone(&p),
+            SchedConfig {
+                prefetch: false,
+                ..Default::default()
+            },
+        );
+        let id = sched.add_paced(
+            StreamSession::new(Arc::clone(&assets), Arc::clone(&p), cfg),
+            INFEASIBLE,
+        );
+        let (frames, summaries) = run_paced(&mut sched, id, &poses);
+
+        // Reference: plain drain stepping, no scheduler, no pacing.
+        let mut reference = StreamSession::new(assets, Arc::clone(&p), cfg);
+        for (f, pose) in poses.iter().enumerate() {
+            let expect = reference.process(pose);
+            assert_eq!(
+                frames[f], expect.frame.rgb,
+                "{name} frame {f}: disabled QoS changed pixels"
+            );
+        }
+        assert_eq!(sched.session(id).qos_level(), 0, "{name}: level moved");
+        for s in &summaries {
+            assert!(!s.qos.active, "{name}: disabled controller reported active");
+            assert_eq!(s.qos.level, 0);
+            assert_eq!(s.qos.level_downs, 0);
+        }
+    }
+}
+
+/// The `LSG_QOS` kill switch gates even *enabled* configs. Under
+/// structural overload: env on → the ladder engages (level rises, hub
+/// counter bumps); env off (`LSG_QOS=off` CI rerun) → frames stay
+/// bit-identical to the uncontrolled pipeline and the level never moves.
+#[test]
+fn env_kill_switch_gates_an_enabled_controller() {
+    let cfg = CoordinatorConfig {
+        threads: 1,
+        qos: fast_qos(true),
+        ..Default::default()
+    };
+    let scene = generate("room", 0.03, 96, 64);
+    let poses = scene.sample_poses(40);
+    let assets = SceneAssets::from_scene(&scene);
+
+    let p = pool(2);
+    let downs_before = ls_gaussian::telemetry::hub()
+        .qos_level_downs
+        .load(Ordering::Relaxed);
+    let mut sched = SessionScheduler::new(Arc::clone(&p), SchedConfig::default());
+    let id = sched.add_paced(
+        StreamSession::new(Arc::clone(&assets), Arc::clone(&p), cfg),
+        INFEASIBLE,
+    );
+    let (frames, summaries) = run_paced(&mut sched, id, &poses);
+    let level = sched.session(id).qos_level();
+
+    if qos::env_enabled() {
+        // Every frame late at an infeasible cadence: the controller must
+        // have walked down the ladder within 40 frames.
+        assert!(level > 0, "controller never engaged under overload");
+        let last = summaries.last().unwrap();
+        assert!(last.qos.active);
+        assert_eq!(last.qos.level, level);
+        assert!(last.qos.level_downs >= 1);
+        assert!(
+            ls_gaussian::telemetry::hub()
+                .qos_level_downs
+                .load(Ordering::Relaxed)
+                > downs_before,
+            "hub qos_level_downs did not move"
+        );
+    } else {
+        // Kill switch: enabled config, yet bit-identical frames.
+        assert_eq!(level, 0, "LSG_QOS=off but the level moved");
+        let mut reference = StreamSession::new(assets, Arc::clone(&p), cfg);
+        for (f, pose) in poses.iter().enumerate() {
+            let expect = reference.process(pose);
+            assert_eq!(
+                frames[f], expect.frame.rgb,
+                "frame {f}: LSG_QOS=off changed pixels"
+            );
+        }
+        for s in &summaries {
+            assert!(!s.qos.active, "LSG_QOS=off but QosStats claim active");
+        }
+    }
+}
+
+/// Property: the ladder degrades monotonically from any base operating
+/// point — each rung's window and missing-threshold are no smaller than
+/// the rung above, rung 0 is exactly the configured base, and the
+/// `LADDER` table itself is non-decreasing in both knobs.
+#[test]
+fn ladder_rungs_degrade_monotonically() {
+    use ls_gaussian::util::proptest::check;
+
+    for w in 1..LADDER.len() {
+        assert!(LADDER[w].window_mul >= LADDER[w - 1].window_mul);
+        assert!(LADDER[w].threshold_floor >= LADDER[w - 1].threshold_floor);
+    }
+    check("qos ladder monotone over bases", 128, |rng| {
+        let base_window = 1 + rng.below(8);
+        let base_threshold = rng.below(101) as f32 / 100.0;
+        let ctl = QosController::new(&QosConfig::default(), base_window, base_threshold);
+        assert_eq!(
+            ctl.rung(0),
+            (base_window, base_threshold),
+            "rung 0 must be the configured base"
+        );
+        for level in 1..=MAX_LEVEL {
+            let (w0, t0) = ctl.rung(level - 1);
+            let (w1, t1) = ctl.rung(level);
+            assert!(w1 >= w0, "window shrank from level {} to {}", level - 1, level);
+            assert!(t1 >= t0, "threshold shrank from level {} to {}", level - 1, level);
+            assert!(w1 >= 1);
+        }
+    });
+}
+
+/// End-to-end overload through the server: the ladder engages, and the
+/// controller's state is visible everywhere the ISSUE requires — the
+/// session guard, `StepSummary.qos`, `FrameTrace.qos`, hub counters,
+/// and both telemetry snapshot encodings.
+#[test]
+fn overload_engages_the_ladder_end_to_end() {
+    if !qos::env_enabled() {
+        eprintln!("skipped: LSG_QOS=off");
+        return;
+    }
+    let cfg = CoordinatorConfig {
+        threads: 1,
+        qos: fast_qos(true),
+        ..Default::default()
+    };
+    let base_window = cfg.window;
+    let scene = generate("train", 0.03, 96, 64);
+    let poses = scene.sample_poses(48);
+    let assets = SceneAssets::from_scene(&scene);
+
+    let mut server = StreamServer::multi_with_pool(cfg, None, pool(2));
+    let scene_id = server.add_scene(assets).unwrap();
+    let id = server
+        .try_add_paced_session_on(scene_id, cfg, INFEASIBLE)
+        .unwrap();
+    for p in &poses {
+        server.scheduler_mut().push_pose(id, *p);
+    }
+    let done = server.scheduler_mut().run_for(Duration::from_secs(120));
+    assert_eq!(done.len(), poses.len());
+
+    let level = server.session(id).qos_level();
+    assert!(level > 0, "overload did not engage the ladder");
+
+    // StepSummary carries live controller state.
+    let last = &done.last().unwrap().1;
+    assert!(last.qos.active);
+    assert_eq!(last.qos.level, level);
+    assert!(last.qos.window >= base_window, "ladder shrank the window");
+    assert!(
+        last.qos.missing_threshold >= ls_gaussian::RERENDER_MISSING_FRACTION,
+        "ladder lowered the interpolation threshold"
+    );
+    assert!(last.qos.level_downs >= 1);
+
+    // FrameTrace carries it too (drain step on the same session).
+    let trace = server.session(id).process(&poses[0]).trace;
+    assert_eq!(trace.qos.level, level, "FrameTrace.qos diverged");
+
+    // And the snapshot: per-session gauge in both encodings.
+    let snap = server.telemetry_snapshot();
+    assert!(
+        snap.sessions.iter().any(|s| s.qos_level > 0),
+        "snapshot lost the session's QoS level"
+    );
+    assert!(snap.to_prometheus().contains("lsg_session_qos_level"));
+    assert!(snap.to_json().to_string_pretty().contains("qos_level"));
+}
+
+/// Admission control: a full node rejects (error, counter) or down-tiers
+/// (admitted at the bottom rung) new sessions; existing sessions are
+/// untouched.
+#[test]
+fn admission_rejects_then_down_tiers() {
+    let cfg = CoordinatorConfig {
+        threads: 1,
+        ..Default::default()
+    };
+    let scene = generate("chair", 0.02, 64, 64);
+    let assets = SceneAssets::from_scene(&scene);
+    let hub = ls_gaussian::telemetry::hub();
+    let rejected_before = hub.qos_rejected_sessions.load(Ordering::Relaxed);
+    let downtiered_before = hub.qos_downtiered_sessions.load(Ordering::Relaxed);
+
+    let mut server = StreamServer::multi_with_pool(cfg, None, pool(2));
+    server.add_scene(assets).unwrap();
+    server.set_admission(AdmissionPolicy {
+        max_sessions: Some(2),
+        down_tier: false,
+    });
+    let a = server.try_add_session().unwrap();
+    let b = server.try_add_session().unwrap();
+    assert_ne!(a, b);
+
+    // Third session: hard reject.
+    let err = server.try_add_session().unwrap_err().to_string();
+    assert!(err.contains("admission rejected"), "unexpected error: {err}");
+    assert_eq!(server.num_sessions(), 2);
+    assert!(hub.qos_rejected_sessions.load(Ordering::Relaxed) > rejected_before);
+
+    // Same pressure with down-tiering: admitted, but at the bottom rung
+    // (when the controller is live; under LSG_QOS=off the session must
+    // come up at full quality instead — a dead controller never reports
+    // a degraded level).
+    server.set_admission(AdmissionPolicy {
+        max_sessions: Some(2),
+        down_tier: true,
+    });
+    let c = server.try_add_session().unwrap();
+    assert_eq!(server.num_sessions(), 3);
+    assert!(hub.qos_downtiered_sessions.load(Ordering::Relaxed) > downtiered_before);
+    let expect_level = if qos::env_enabled() {
+        cfg.qos.max_level.min(MAX_LEVEL)
+    } else {
+        0
+    };
+    assert_eq!(server.session(c).qos_level(), expect_level);
+    // Existing sessions keep their operating point.
+    assert_eq!(server.session(a).qos_level(), 0);
+}
+
+/// Load shedding bounds a stalled session's backlog: every queued pose
+/// is either rendered or shed (none lost, none replayed stale), and the
+/// per-session + hub counters agree.
+#[test]
+fn shedding_bounds_the_backlog() {
+    if !qos::env_enabled() {
+        eprintln!("skipped: LSG_QOS=off");
+        return;
+    }
+    let cfg = CoordinatorConfig {
+        threads: 1,
+        qos: QosConfig {
+            shed_depth: 2,
+            ..fast_qos(true)
+        },
+        ..Default::default()
+    };
+    let scene = generate("room", 0.03, 96, 64);
+    let poses = scene.sample_poses(30);
+    let assets = SceneAssets::from_scene(&scene);
+
+    let p = pool(1);
+    let shed_before = ls_gaussian::telemetry::hub()
+        .qos_shed_frames
+        .load(Ordering::Relaxed);
+    let mut sched = SessionScheduler::new(Arc::clone(&p), SchedConfig::default());
+    let id = sched.add_paced(StreamSession::new(assets, Arc::clone(&p), cfg), INFEASIBLE);
+    for pose in &poses {
+        sched.push_pose(id, *pose);
+    }
+    let done = sched.run_for(Duration::from_secs(120));
+
+    let c = sched.counters(id).unwrap();
+    assert!(c.shed_frames > 0, "overloaded backlog was never shed");
+    assert!(c.steps < poses.len() as u64, "nothing was actually dropped");
+    assert_eq!(
+        c.steps + c.shed_frames,
+        poses.len() as u64,
+        "poses lost: {} stepped + {} shed != {} pushed",
+        c.steps,
+        c.shed_frames,
+        poses.len()
+    );
+    assert_eq!(done.len() as u64, c.steps);
+    let shed_after = ls_gaussian::telemetry::hub()
+        .qos_shed_frames
+        .load(Ordering::Relaxed);
+    assert!(shed_after >= shed_before + c.shed_frames);
+}
