@@ -40,6 +40,7 @@ fn main() {
             v.push("fleet".to_string());
             v.push("kernels".to_string());
             v.push("qos".to_string());
+            v.push("temporal".to_string());
             v
         }
     };
@@ -99,6 +100,13 @@ fn main() {
                     std::fs::write("BENCH_qos.json", json.to_string_pretty())
                         .expect("writing BENCH_qos.json");
                     println!("wrote BENCH_qos.json");
+                }
+                if id == "temporal" {
+                    // Temporal plan-cache record (cache off vs on over a
+                    // small-delta orbit creep), gated alongside streaming.
+                    std::fs::write("BENCH_temporal.json", json.to_string_pretty())
+                        .expect("writing BENCH_temporal.json");
+                    println!("wrote BENCH_temporal.json");
                 }
                 report.set(id, json);
             }

@@ -1867,3 +1867,111 @@ pub fn qos_overload(opts: &ExpOptions) -> Json {
     report.set("ladder", ladder_rep);
     report
 }
+
+/// `temporal` steady state: a TWSR streaming session creeping along the
+/// shared surround orbit — one step of a 20 000-sample orbit per frame,
+/// so the inter-frame pose delta stays inside the plan cache's
+/// guard-band drift gate — with the temporal plan cache off vs on.
+/// Frames are bit-identical across arms (`rust/tests/temporal.rs`); only
+/// planning work differs. The headline metric is planning-stage ms/frame
+/// (preprocess + bin/sort wall-clock from `PassSummary`); end-to-end
+/// ms/frame, the hit rate over masked frames and the mean rebinned-tile
+/// fraction on hits are reported alongside. Written to
+/// `BENCH_temporal.json` by the bench binary and merged by `bench_gate`.
+pub fn temporal_reuse(opts: &ExpOptions) -> Json {
+    use crate::coordinator::StreamSession;
+    use crate::scene::orbit_poses;
+    use crate::util::pool::{default_threads, WorkerPool};
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    let frames = opts.frames.max(12);
+    // Warm past the first window boundary so the measured span starts
+    // with a filled candidate map (arm on frame 1, fill on the first
+    // dense frame after it).
+    let warmup = (opts.window + 1).min(frames / 2);
+    let threads = default_threads().clamp(2, 8);
+    let mut table = Table::new(
+        "temporal — plan cache on small-delta orbit creep (cache off vs on)",
+        &["scene", "cache", "plan ms/frame", "ms/frame", "hit rate", "rebin", "saved ms/hit"],
+    );
+    let mut report = Json::obj();
+    report
+        .set("frames", frames)
+        .set("threads", threads)
+        .set("warmup", warmup)
+        .set("window", opts.window);
+    let mut scenes_rep = Json::obj();
+    for name in ["room", "train"] {
+        let scene = generate(name, opts.scale, opts.width, opts.height);
+        let assets = SceneAssets::from_scene(&scene);
+        // A dense orbit sampled far below the viewer's angular velocity:
+        // consecutive poses differ by 1/20000 of the circle.
+        let orbit = orbit_poses(scene.preset.extent, 20_000, 0.0);
+        let poses = &orbit[..frames];
+        let mut scene_rep = Json::obj();
+        let mut plan_by_arm = [0.0f64; 2];
+        for (ai, (label, plan_cache)) in [("off", false), ("on", true)].iter().enumerate() {
+            let cfg = CoordinatorConfig {
+                warp: WarpMode::Tile, // TWSR: masked frames are the reuse target
+                window: opts.window,
+                threads,
+                plan_cache: *plan_cache,
+                ..Default::default()
+            };
+            let pool = Arc::new(WorkerPool::new(threads.saturating_sub(1).max(1)));
+            let mut session = StreamSession::new(Arc::clone(&assets), pool, cfg);
+            for pose in poses.iter().take(warmup) {
+                session.step(pose); // warm arenas; arm + fill the cache
+            }
+            let measured = frames - warmup;
+            let (mut plan_ns, mut hits, mut masked, mut saved_ns) = (0u64, 0u64, 0u64, 0u64);
+            let mut rebin_sum = 0.0f64;
+            let t0 = Instant::now();
+            for pose in poses.iter().skip(warmup) {
+                let kind = session.step(pose);
+                let p = session.last_summary().pass;
+                plan_ns += (p.t_preprocess + p.t_sort).as_nanos() as u64;
+                if kind != crate::coordinator::FrameKind::Full {
+                    masked += 1;
+                }
+                if p.plan.hit() {
+                    hits += 1;
+                    saved_ns += p.plan.t_saved.as_nanos() as u64;
+                    rebin_sum += p.plan.rebin_fraction();
+                }
+            }
+            let ms_frame = t0.elapsed().as_secs_f64() * 1e3 / measured as f64;
+            let plan_ms = plan_ns as f64 / 1e6 / measured as f64;
+            plan_by_arm[ai] = plan_ms;
+            let hit_rate = hits as f64 / (masked as f64).max(1.0);
+            let rebin = rebin_sum / (hits as f64).max(1.0);
+            let saved_ms = saved_ns as f64 / 1e6 / (hits as f64).max(1.0);
+            table.row(&[
+                name.to_string(),
+                label.to_string(),
+                f2(plan_ms),
+                f2(ms_frame),
+                pct(hit_rate),
+                pct(rebin),
+                f2(saved_ms),
+            ]);
+            let mut m = Json::obj();
+            m.set("plan_ms_per_frame", plan_ms)
+                .set("ms_per_frame", ms_frame)
+                .set("masked_frames", masked)
+                .set("hits", hits)
+                .set("hit_rate", hit_rate)
+                .set("rebin_fraction_mean", rebin)
+                .set("t_saved_ms_per_hit", saved_ms);
+            scene_rep.set(label, m);
+        }
+        // The acceptance metric: planning-stage time with the cache on
+        // relative to off (ms/frame dilutes it with rasterization).
+        scene_rep.set("plan_speedup", plan_by_arm[0] / plan_by_arm[1].max(1e-9));
+        scenes_rep.set(name, scene_rep);
+    }
+    report.set("scenes", scenes_rep);
+    table.print();
+    report
+}

@@ -3,8 +3,9 @@
 //!
 //! The bench binary writes `BENCH_streaming.json` (and
 //! `BENCH_balance.json` / `BENCH_fleet.json` / `BENCH_kernels.json` /
-//! `BENCH_qos.json`, merged by the `bench_gate` binary under the
-//! `"balance"` / `"fleet"` / `"kernels"` / `"qos"` keys) every run; the repo
+//! `BENCH_qos.json` / `BENCH_temporal.json`, merged by the `bench_gate`
+//! binary under the `"balance"` / `"fleet"` / `"kernels"` / `"qos"` /
+//! `"temporal"` keys) every run; the repo
 //! commits a `BENCH_baseline.json` snapshot of a known-good run at the
 //! same (quick-mode) options.
 //! [`compare`] extracts the steady-state ms/frame metrics from both and
@@ -155,6 +156,37 @@ pub fn extract_metrics(report: &Json) -> Vec<(String, f64)> {
             }
         }
     }
+    // Temporal plan cache (BENCH_temporal.json, merged under "temporal"):
+    // gate both arms' end-to-end ms/frame per orbit scene, plus the
+    // cache-on arm's planning-stage ms/frame — the metric the cache
+    // exists to shrink. A hit path silently decaying back to full
+    // re-plans shows up here before it shows up end-to-end.
+    if let Some(temporal) = report.get("temporal").and_then(|t| t.get("scenes")) {
+        for scene in ["room", "train"] {
+            for arm in ["off", "on"] {
+                if let Some(ms) = temporal
+                    .get(scene)
+                    .and_then(|s| s.get(arm))
+                    .and_then(|a| a.get("ms_per_frame"))
+                    .and_then(Json::as_f64)
+                {
+                    if ms > 0.0 {
+                        out.push((format!("temporal ms/frame ({scene}, cache {arm})"), ms));
+                    }
+                }
+            }
+            if let Some(ms) = temporal
+                .get(scene)
+                .and_then(|s| s.get("on"))
+                .and_then(|a| a.get("plan_ms_per_frame"))
+                .and_then(Json::as_f64)
+            {
+                if ms > 0.0 {
+                    out.push((format!("temporal plan ms/frame ({scene}, cache on)"), ms));
+                }
+            }
+        }
+    }
     out
 }
 
@@ -219,12 +251,17 @@ pub fn markdown(outcome: &GateOutcome, threshold: f64) -> String {
         GateOutcome::Bootstrap { current } => {
             let _ = writeln!(
                 md,
-                "Baseline is a bootstrap placeholder — recording current metrics, gate passes."
+                "> ⚠️ **WARNING: the perf gate is DISARMED.** The committed \
+                 `BENCH_baseline.json` is still a bootstrap placeholder, so no \
+                 regression is being compared — this run records current metrics \
+                 and passes unconditionally."
             );
             let _ = writeln!(
                 md,
-                "Refresh it with `cargo run --release --bin bench_gate -- --update` \
-                 (after the quick-mode streaming bench) and commit `BENCH_baseline.json`.\n"
+                ">\n> Arm it by committing the refreshed baseline from CI's \
+                 `bench-baseline` artifact, or locally with \
+                 `cargo run --release --bin bench_gate -- --update` \
+                 (after the quick-mode streaming bench).\n"
             );
             let _ = writeln!(md, "| metric | current |");
             let _ = writeln!(md, "|---|---|");
@@ -385,6 +422,30 @@ mod tests {
     }
 
     #[test]
+    fn extracts_temporal_arm_metrics() {
+        let mut r = report(100.0, 50.0, 25.0);
+        let mut off = Json::obj();
+        off.set("ms_per_frame", 9.0).set("plan_ms_per_frame", 3.0);
+        let mut on = Json::obj();
+        on.set("ms_per_frame", 7.0).set("plan_ms_per_frame", 1.2);
+        let mut room = Json::obj();
+        room.set("off", off).set("on", on).set("plan_speedup", 2.5);
+        let mut scenes = Json::obj();
+        scenes.set("room", room);
+        let mut t = Json::obj();
+        t.set("scenes", scenes);
+        r.set("temporal", t);
+        let m = extract_metrics(&r);
+        let get = |name: &str| m.iter().find(|(n, _)| n == name).unwrap().1;
+        assert!((get("temporal ms/frame (room, cache off)") - 9.0).abs() < 1e-9);
+        assert!((get("temporal ms/frame (room, cache on)") - 7.0).abs() < 1e-9);
+        assert!((get("temporal plan ms/frame (room, cache on)") - 1.2).abs() < 1e-9);
+        // The off arm's planning stage is deliberately ungated: it is the
+        // slow reference the cache-on arm is measured against.
+        assert!(m.iter().all(|(n, _)| !n.contains("plan ms/frame (room, cache off)")));
+    }
+
+    #[test]
     fn passes_within_threshold_fails_beyond() {
         let base = report(100.0, 50.0, 25.0);
         // 10% slower everywhere: within a 20% gate.
@@ -433,6 +494,9 @@ mod tests {
         let md = markdown(&out, 0.20);
         assert!(md.contains("bootstrap"));
         assert!(md.contains("--update"));
+        // The disarmed-gate warning must be loud, not a footnote.
+        assert!(md.contains("WARNING"));
+        assert!(md.contains("DISARMED"));
     }
 
     #[test]

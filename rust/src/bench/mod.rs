@@ -115,10 +115,12 @@ pub const ALL_EXPERIMENTS: [&str; 13] = [
 // workload-aware tile dispatch, written to BENCH_balance.json), "fleet"
 // (two scenes x mixed sessions under one global residency budget,
 // written to BENCH_fleet.json), "kernels" (scalar vs 8-wide SIMD
-// per-pair kernels, written to BENCH_kernels.json) and "qos"
+// per-pair kernels, written to BENCH_kernels.json), "qos"
 // (closed-loop overload: QoS controller off vs on + ladder PSNR floors,
-// written to BENCH_qos.json) are addressable and
-// in the bench binary's default set but are not paper figures.
+// written to BENCH_qos.json) and "temporal" (plan cache off vs on over
+// a small-delta orbit creep, written to BENCH_temporal.json) are
+// addressable and in the bench binary's default set but are not paper
+// figures.
 
 /// Run one experiment by id; returns its JSON report.
 pub fn run_experiment(id: &str, opts: &ExpOptions) -> Option<Json> {
@@ -144,6 +146,7 @@ pub fn run_experiment(id: &str, opts: &ExpOptions) -> Option<Json> {
         "fleet" => e::fleet_serving(opts),
         "kernels" => e::kernels_simd(opts),
         "qos" => e::qos_overload(opts),
+        "temporal" => e::temporal_reuse(opts),
         _ => return None,
     };
     Some(json)

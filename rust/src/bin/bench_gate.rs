@@ -12,13 +12,16 @@
 //!   cargo run --release --bin bench_gate -- --update        # refresh baseline
 //!
 //! `--update` copies the current merged record (streaming + the
-//! `"balance"`/`"fleet"`/`"kernels"`/`"qos"` sections when
+//! `"balance"`/`"fleet"`/`"kernels"`/`"qos"`/`"temporal"` sections when
 //! `BENCH_balance.json` / `BENCH_fleet.json` / `BENCH_kernels.json` /
-//! `BENCH_qos.json` exist) into
+//! `BENCH_qos.json` / `BENCH_temporal.json` exist) into
 //! `BENCH_baseline.json` — run it after
 //! intentional perf changes and commit the result. CI runs `--update`
 //! after the gate and uploads the refreshed baseline as an artifact, so
 //! a committed bootstrap placeholder can be replaced from a real run.
+//! While the committed baseline is still that placeholder, every gate
+//! run warns loudly (stderr + step summary) that no regression gating is
+//! actually happening.
 
 use ls_gaussian::bench::gate::{compare, markdown, GateOutcome};
 use ls_gaussian::util::cli::Args;
@@ -32,6 +35,7 @@ fn main() {
     let fleet_path = args.get_or("fleet", "BENCH_fleet.json");
     let kernels_path = args.get_or("kernels", "BENCH_kernels.json");
     let qos_path = args.get_or("qos", "BENCH_qos.json");
+    let temporal_path = args.get_or("temporal", "BENCH_temporal.json");
     let threshold = args.f32_or("threshold", 0.20) as f64;
 
     let current_text = match std::fs::read_to_string(current_path) {
@@ -59,6 +63,7 @@ fn main() {
         ("fleet", fleet_path),
         ("kernels", kernels_path),
         ("qos", qos_path),
+        ("temporal", temporal_path),
     ] {
         match std::fs::read_to_string(path) {
             Ok(t) => match Json::parse(&t) {
@@ -98,6 +103,17 @@ fn main() {
     let outcome = compare(&baseline, &current, threshold);
     let md = markdown(&outcome, threshold);
     println!("{md}");
+    // The bootstrap path passes by design, but a committed placeholder
+    // means NO perf regression is being gated — shout on stderr (in
+    // addition to the step-summary warning) until someone arms the gate.
+    if let GateOutcome::Bootstrap { .. } = outcome {
+        eprintln!(
+            "bench_gate: WARNING: {baseline_path} is still a bootstrap placeholder — \
+             the perf gate is NOT comparing anything. Arm it by committing the \
+             refreshed baseline from CI's bench-baseline artifact (or run \
+             `cargo run --release --bin bench_gate -- --update` locally)."
+        );
+    }
     if let Ok(summary_path) = std::env::var("GITHUB_STEP_SUMMARY") {
         use std::io::Write as _;
         if let Ok(mut f) = std::fs::OpenOptions::new()

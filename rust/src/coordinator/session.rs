@@ -90,6 +90,10 @@ pub struct CoordinatorConfig {
     /// Per-pair kernel implementation (SIMD default). Frames are
     /// bit-identical either way; `LSG_FORCE_SCALAR=1` overrides.
     pub kernel: KernelMode,
+    /// Temporal plan cache: serve small-delta sparse frames from the last
+    /// dense frame's candidate map (default on). Frames are bit-identical
+    /// either way; `LSG_PLAN_CACHE=off` overrides.
+    pub plan_cache: bool,
     /// Closed-loop QoS controller knobs (paced sessions only; see
     /// `serve/qos.rs` and `docs/QOS.md`). `LSG_QOS=off` overrides.
     pub qos: QosConfig,
@@ -106,6 +110,7 @@ impl Default for CoordinatorConfig {
             threads: 0,
             dispatch: DispatchMode::default(),
             kernel: KernelMode::default(),
+            plan_cache: true,
             qos: QosConfig::default(),
         }
     }
@@ -222,6 +227,7 @@ impl StreamSession {
             threads: config.threads,
             dispatch: config.dispatch,
             kernel: config.kernel,
+            plan_cache: config.plan_cache,
             ..renderer.config
         };
         let (w, h) = (renderer.intrinsics().width, renderer.intrinsics().height);
@@ -347,6 +353,15 @@ impl StreamSession {
         let masked_lane_pm = (pass.kernels.masked_fraction() * 1000.0) as u32;
         if pass.kernels.lanes > 0 {
             hub.masked_lane_pm.record(masked_lane_pm as u64);
+        }
+        {
+            use std::sync::atomic::Ordering;
+            if pass.plan.hit() {
+                hub.plan_cache_hits.fetch_add(1, Ordering::Relaxed);
+                hub.plan_rebin_pm.record((pass.plan.rebin_fraction() * 1000.0) as u64);
+            } else if pass.plan.fallback() {
+                hub.plan_cache_fallbacks.fetch_add(1, Ordering::Relaxed);
+            }
         }
         self.ring.push(FrameRecord {
             frame_idx: self.frame_idx as u64,

@@ -51,6 +51,14 @@ impl F32x8 {
         imp::to_array(self.0)
     }
 
+    /// Lane-wise IEEE-754 bit pattern of each lane. A pure bitcast —
+    /// bit-identical to `f32::to_bits` per lane on every backend — used
+    /// by the binning stage to pack depth sort keys.
+    #[inline(always)]
+    pub fn to_bits(self) -> [u32; 8] {
+        imp::to_array(self.0).map(f32::to_bits)
+    }
+
     /// `[0.0, 1.0, …, 7.0]` — exact small integers, so
     /// `splat(base as f32) + iota()` is bitwise `(base + k) as f32` for
     /// any pixel coordinate (all well below 2²⁴).

@@ -11,7 +11,9 @@
 //!   early-stop depth are dropped from that tile's list before sorting.
 
 use super::intersect::{tiles_for_splat, IntersectCost, IntersectMode};
+use super::kernel::KernelMode;
 use super::preprocess::Splat;
+use crate::math::simd::F32x8;
 
 /// Per-tile splat lists, depth-sorted.
 #[derive(Clone, Debug, Default)]
@@ -96,6 +98,44 @@ pub fn bin_splats_into(
     tile_ids: &mut Vec<u32>,
     cursor: &mut Vec<u32>,
 ) {
+    bin_impl(splats, mode, grid, opts, out, pairs, tile_ids, cursor, |s| {
+        quantize_depth(splats[s].depth)
+    })
+}
+
+/// [`bin_splats_into`] with the per-splat depth sort keys precomputed by
+/// [`pack_depth_keys`] (`keys[s] == quantize_depth(splats[s].depth)`, so
+/// the output is bit-identical). The streaming hot path uses this variant
+/// to pack the keys once per frame through the SIMD lane layer instead of
+/// re-quantizing inside every per-tile sort comparator.
+#[allow(clippy::too_many_arguments)]
+pub fn bin_splats_into_keyed(
+    splats: &[Splat],
+    keys: &[u32],
+    mode: IntersectMode,
+    grid: (usize, usize),
+    opts: BinOptions,
+    out: &mut TileBins,
+    pairs: &mut Vec<(u32, u32)>,
+    tile_ids: &mut Vec<u32>,
+    cursor: &mut Vec<u32>,
+) {
+    debug_assert_eq!(keys.len(), splats.len());
+    bin_impl(splats, mode, grid, opts, out, pairs, tile_ids, cursor, |s| keys[s])
+}
+
+#[allow(clippy::too_many_arguments)]
+fn bin_impl(
+    splats: &[Splat],
+    mode: IntersectMode,
+    grid: (usize, usize),
+    opts: BinOptions,
+    out: &mut TileBins,
+    pairs: &mut Vec<(u32, u32)>,
+    tile_ids: &mut Vec<u32>,
+    cursor: &mut Vec<u32>,
+    key: impl Fn(usize) -> u32,
+) {
     let num_tiles = grid.0 * grid.1;
     if let Some(m) = opts.tile_mask {
         assert_eq!(m.len(), num_tiles, "tile mask size mismatch");
@@ -153,9 +193,35 @@ pub fn bin_splats_into(
     // `sort_unstable` is in-place and does not allocate).
     for t in 0..num_tiles {
         let seg = &mut entries[offsets[t] as usize..offsets[t + 1] as usize];
-        seg.sort_unstable_by_key(|&s| quantize_depth(splats[s as usize].depth));
+        seg.sort_unstable_by_key(|&s| key(s as usize));
     }
     out.cost = cost;
+}
+
+/// Pack every splat's quantized depth sort key into `keys` (cleared
+/// first). Under the SIMD kernel the pack runs 8 lanes at a time through
+/// [`F32x8::to_bits`]; since quantization is a pure bitcast, both paths
+/// are bit-identical and the scalar arm of `kernel_parity` covers them.
+pub fn pack_depth_keys(splats: &[Splat], kernel: KernelMode, keys: &mut Vec<u32>) {
+    keys.clear();
+    match kernel.resolve() {
+        KernelMode::Scalar => keys.extend(splats.iter().map(|s| quantize_depth(s.depth))),
+        KernelMode::Simd => {
+            keys.resize(splats.len(), 0);
+            let mut lane = [0.0f32; F32x8::LANES];
+            let mut i = 0;
+            while i + F32x8::LANES <= splats.len() {
+                for (j, l) in lane.iter_mut().enumerate() {
+                    *l = splats[i + j].depth;
+                }
+                keys[i..i + F32x8::LANES].copy_from_slice(&F32x8::from_array(lane).to_bits());
+                i += F32x8::LANES;
+            }
+            for (k, s) in keys[i..].iter_mut().zip(&splats[i..]) {
+                *k = quantize_depth(s.depth);
+            }
+        }
+    }
 }
 
 /// Monotone quantization of depth to u32 (positive depths; matches the
@@ -270,6 +336,35 @@ mod tests {
             for &s in culled.tile(t) {
                 assert!(splats[s as usize].depth <= med);
             }
+        }
+    }
+
+    #[test]
+    fn keyed_binning_matches_reference() {
+        let (splats, grid) = test_setup();
+        let reference = bin_splats(&splats, IntersectMode::Tait, grid, BinOptions::default());
+        for kernel in [KernelMode::Scalar, KernelMode::Simd] {
+            let mut keys = Vec::new();
+            pack_depth_keys(&splats, kernel, &mut keys);
+            assert_eq!(keys.len(), splats.len());
+            for (k, s) in keys.iter().zip(&splats) {
+                assert_eq!(*k, quantize_depth(s.depth), "key pack diverged");
+            }
+            let mut out = TileBins::default();
+            let (mut pairs, mut tile_ids, mut cursor) = (Vec::new(), Vec::new(), Vec::new());
+            bin_splats_into_keyed(
+                &splats,
+                &keys,
+                IntersectMode::Tait,
+                grid,
+                BinOptions::default(),
+                &mut out,
+                &mut pairs,
+                &mut tile_ids,
+                &mut cursor,
+            );
+            assert_eq!(out.offsets, reference.offsets, "{kernel:?}");
+            assert_eq!(out.entries, reference.entries, "{kernel:?}");
         }
     }
 

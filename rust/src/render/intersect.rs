@@ -80,12 +80,32 @@ pub struct IntersectCost {
 /// Tile circumcircle radius (half-diagonal of a 16 px tile).
 pub const TILE_CIRCUM_R: f32 = (TILE as f32) * std::f32::consts::SQRT_2 * 0.5;
 
-#[derive(Clone, Copy)]
-struct TileRange {
-    x0: i32,
-    y0: i32,
-    x1: i32, // inclusive
-    y1: i32, // inclusive
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) struct TileRange {
+    pub(crate) x0: i32,
+    pub(crate) y0: i32,
+    pub(crate) x1: i32, // inclusive
+    pub(crate) y1: i32, // inclusive
+}
+
+impl TileRange {
+    /// Canonical empty range (off-screen splats): covers no tile.
+    pub(crate) const EMPTY: TileRange = TileRange {
+        x0: 0,
+        y0: 0,
+        x1: -1,
+        y1: -1,
+    };
+
+    pub(crate) fn is_empty(&self) -> bool {
+        self.x1 < self.x0 || self.y1 < self.y0
+    }
+}
+
+impl Default for TileRange {
+    fn default() -> Self {
+        TileRange::EMPTY
+    }
 }
 
 /// Tiles covered by an axis-aligned pixel box, clamped to the grid.
@@ -118,6 +138,149 @@ fn tile_center(col: i32, row: i32) -> Vec2 {
     )
 }
 
+/// Mode-specific per-tile refinement applied inside a splat's candidate
+/// rect. `All` (AABB/AdR) accepts every candidate; the others carry the
+/// precomputed geometry their per-tile test needs.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum TestKind {
+    All,
+    Obb { u: Vec2, a: f32, b: f32 },
+    Tait { minor: Vec2, r_min: f32 },
+    Exact { rho2: f32 },
+}
+
+impl TestKind {
+    /// Heavy-op cost charged per candidate tile (Exact's per-tile
+    /// analytical geometry; the other modes are setup-only).
+    #[inline]
+    fn heavy_per_candidate(&self) -> u64 {
+        match self {
+            TestKind::Exact { .. } => 4,
+            _ => 0,
+        }
+    }
+}
+
+/// The per-splat half of an intersection test: the axis-aligned candidate
+/// pixel box plus the refinement parameters, precomputed once so callers
+/// (the from-scratch binner AND the temporal plan cache) evaluate the
+/// *same* float ops in the same order per (splat, tile) pair — that shared
+/// implementation is what makes incremental re-binning bit-identical.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct SplatTest {
+    lo: Vec2,
+    hi: Vec2,
+    heavy_setup: u8,
+    kind: TestKind,
+}
+
+impl SplatTest {
+    pub(crate) fn new(mode: IntersectMode, splat: &Splat) -> SplatTest {
+        match mode {
+            IntersectMode::Aabb => {
+                // Reference 3DGS: circumscribed square of the 3σ circle.
+                let r = splat.radius3_sigma();
+                SplatTest {
+                    lo: splat.mean - Vec2::new(r, r),
+                    hi: splat.mean + Vec2::new(r, r),
+                    heavy_setup: 1, // sqrt
+                    kind: TestKind::All,
+                }
+            }
+            IntersectMode::Adr => {
+                let (r_maj, _) = splat.effective_radii();
+                SplatTest {
+                    lo: splat.mean - Vec2::new(r_maj, r_maj),
+                    hi: splat.mean + Vec2::new(r_maj, r_maj),
+                    heavy_setup: 2, // ln + sqrt
+                    kind: TestKind::All,
+                }
+            }
+            IntersectMode::Obb => {
+                // GSCore: OBB with 3σ half-extents, SAT per candidate tile.
+                let r_maj = 3.0 * splat.l1.sqrt();
+                let r_min = 3.0 * splat.l2.sqrt();
+                let u = splat.axis; // major dir
+                let v = u.perp();
+                // AABB of the OBB.
+                let ex = (u.x * r_maj).abs() + (v.x * r_min).abs();
+                let ey = (u.y * r_maj).abs() + (v.y * r_min).abs();
+                SplatTest {
+                    lo: splat.mean - Vec2::new(ex, ey),
+                    hi: splat.mean + Vec2::new(ex, ey),
+                    heavy_setup: 2,
+                    kind: TestKind::Obb {
+                        u,
+                        a: r_maj,
+                        b: r_min,
+                    },
+                }
+            }
+            IntersectMode::Tait => {
+                // Stage 1: opacity-aware tight bbox (Eqs. 4–6).
+                let rho = splat.trunc_rho();
+                let half_w = rho * splat.cov.0.max(0.0).sqrt();
+                let half_h = rho * splat.cov.2.max(0.0).sqrt();
+                let r_min = rho * splat.l2.sqrt();
+                let minor = splat.axis.perp();
+                SplatTest {
+                    lo: splat.mean - Vec2::new(half_w, half_h),
+                    hi: splat.mean + Vec2::new(half_w, half_h),
+                    // ln, sqrt ×3 (paper replaces GSCore's dual OIU with
+                    // sqrt+log units)
+                    heavy_setup: 4,
+                    kind: TestKind::Tait { minor, r_min },
+                }
+            }
+            IntersectMode::Exact => {
+                // Oracle: exact ellipse { d : dᵀ Σ'⁻¹ d ≤ ρ² } vs tile rect.
+                let rho = splat.trunc_rho();
+                let rho2 = rho * rho;
+                let half_w = rho * splat.cov.0.max(0.0).sqrt();
+                let half_h = rho * splat.cov.2.max(0.0).sqrt();
+                SplatTest {
+                    lo: splat.mean - Vec2::new(half_w, half_h),
+                    hi: splat.mean + Vec2::new(half_w, half_h),
+                    heavy_setup: 8, // full analytical geometry per splat
+                    kind: TestKind::Exact { rho2 },
+                }
+            }
+        }
+    }
+
+    /// Candidate tile rect on `grid` ([`TileRange::EMPTY`] if off-screen).
+    pub(crate) fn rect(&self, grid: (usize, usize)) -> TileRange {
+        range_from_box(self.lo, self.hi, grid).unwrap_or(TileRange::EMPTY)
+    }
+
+    pub(crate) fn heavy_setup(&self) -> u64 {
+        self.heavy_setup as u64
+    }
+
+    pub(crate) fn heavy_per_candidate(&self) -> u64 {
+        self.kind.heavy_per_candidate()
+    }
+
+    /// Does the splat pass the mode's refinement for tile (col, row)?
+    /// Bit-exact replica of the per-tile branches `tiles_for_splat` ran
+    /// before the refactor.
+    #[inline]
+    pub(crate) fn accepts(&self, splat: &Splat, col: i32, row: i32) -> bool {
+        match self.kind {
+            TestKind::All => true,
+            TestKind::Obb { u, a, b } => obb_intersects_tile(splat.mean, u, a, b, col, row),
+            TestKind::Tait { minor, r_min } => {
+                // Stage 2 (Eq. 7, sound form): minimal distance of the tile
+                // to the major axis exceeds R_minor ⇒ out.
+                let l = tile_center(col, row) - splat.mean;
+                let d_minor = l.dot(minor).abs();
+                !(d_minor - TILE_CIRCUM_R > r_min)
+            }
+            TestKind::Exact { rho2 } => ellipse_intersects_tile(splat, rho2, col, row),
+        }
+    }
+}
+
 /// Emit the tile indices `splat` maps to under `mode` into `out`
 /// (as row-major tile indices), returning cost counters.
 pub fn tiles_for_splat(
@@ -128,120 +291,17 @@ pub fn tiles_for_splat(
 ) -> IntersectCost {
     let mut cost = IntersectCost::default();
     let (tx, _) = grid;
-    match mode {
-        IntersectMode::Aabb => {
-            let r = splat.radius3_sigma();
-            cost.heavy_ops += 1; // sqrt
-            if let Some(tr) = range_from_box(
-                splat.mean - Vec2::new(r, r),
-                splat.mean + Vec2::new(r, r),
-                grid,
-            ) {
-                for row in tr.y0..=tr.y1 {
-                    for col in tr.x0..=tr.x1 {
-                        out.push((row as u32) * tx as u32 + col as u32);
-                    }
-                }
-                let n = ((tr.x1 - tr.x0 + 1) * (tr.y1 - tr.y0 + 1)) as u64;
-                cost.candidates += n;
-                cost.emitted += n;
-            }
-        }
-        IntersectMode::Adr => {
-            let (r_maj, _) = splat.effective_radii();
-            cost.heavy_ops += 2; // ln + sqrt
-            if let Some(tr) = range_from_box(
-                splat.mean - Vec2::new(r_maj, r_maj),
-                splat.mean + Vec2::new(r_maj, r_maj),
-                grid,
-            ) {
-                for row in tr.y0..=tr.y1 {
-                    for col in tr.x0..=tr.x1 {
-                        out.push((row as u32) * tx as u32 + col as u32);
-                    }
-                }
-                let n = ((tr.x1 - tr.x0 + 1) * (tr.y1 - tr.y0 + 1)) as u64;
-                cost.candidates += n;
-                cost.emitted += n;
-            }
-        }
-        IntersectMode::Obb => {
-            // GSCore: OBB with 3σ half-extents, SAT per candidate tile.
-            let r_maj = 3.0 * splat.l1.sqrt();
-            let r_min = 3.0 * splat.l2.sqrt();
-            cost.heavy_ops += 2;
-            let u = splat.axis; // major dir
-            let v = u.perp();
-            // AABB of the OBB.
-            let ex = (u.x * r_maj).abs() + (v.x * r_min).abs();
-            let ey = (u.y * r_maj).abs() + (v.y * r_min).abs();
-            if let Some(tr) = range_from_box(
-                splat.mean - Vec2::new(ex, ey),
-                splat.mean + Vec2::new(ex, ey),
-                grid,
-            ) {
-                for row in tr.y0..=tr.y1 {
-                    for col in tr.x0..=tr.x1 {
-                        cost.candidates += 1;
-                        if obb_intersects_tile(splat.mean, u, r_maj, r_min, col, row) {
-                            out.push((row as u32) * tx as u32 + col as u32);
-                            cost.emitted += 1;
-                        }
-                    }
-                }
-            }
-        }
-        IntersectMode::Tait => {
-            // Stage 1: opacity-aware tight bbox (Eqs. 4–6).
-            let rho = splat.trunc_rho();
-            cost.heavy_ops += 4; // ln, sqrt ×3 (paper replaces GSCore's dual OIU with sqrt+log units)
-            let half_w = rho * splat.cov.0.max(0.0).sqrt();
-            let half_h = rho * splat.cov.2.max(0.0).sqrt();
-            let r_min = rho * splat.l2.sqrt();
-            let minor = splat.axis.perp();
-            if let Some(tr) = range_from_box(
-                splat.mean - Vec2::new(half_w, half_h),
-                splat.mean + Vec2::new(half_w, half_h),
-                grid,
-            ) {
-                for row in tr.y0..=tr.y1 {
-                    for col in tr.x0..=tr.x1 {
-                        cost.candidates += 1;
-                        // Stage 2 (Eq. 7, sound form): minimal distance of
-                        // the tile to the major axis exceeds R_minor ⇒ out.
-                        let l = tile_center(col, row) - splat.mean;
-                        let d_minor = l.dot(minor).abs();
-                        if d_minor - TILE_CIRCUM_R > r_min {
-                            continue;
-                        }
-                        out.push((row as u32) * tx as u32 + col as u32);
-                        cost.emitted += 1;
-                    }
-                }
-            }
-        }
-        IntersectMode::Exact => {
-            // Oracle: exact ellipse { d : dᵀ Σ'⁻¹ d ≤ ρ² } vs tile rect.
-            let rho = splat.trunc_rho();
-            let rho2 = rho * rho;
-            cost.heavy_ops += 8; // full analytical geometry per splat
-            let half_w = rho * splat.cov.0.max(0.0).sqrt();
-            let half_h = rho * splat.cov.2.max(0.0).sqrt();
-            if let Some(tr) = range_from_box(
-                splat.mean - Vec2::new(half_w, half_h),
-                splat.mean + Vec2::new(half_w, half_h),
-                grid,
-            ) {
-                for row in tr.y0..=tr.y1 {
-                    for col in tr.x0..=tr.x1 {
-                        cost.candidates += 1;
-                        cost.heavy_ops += 4;
-                        if ellipse_intersects_tile(splat, rho2, col, row) {
-                            out.push((row as u32) * tx as u32 + col as u32);
-                            cost.emitted += 1;
-                        }
-                    }
-                }
+    let test = SplatTest::new(mode, splat);
+    cost.heavy_ops += test.heavy_setup();
+    let per_tile = test.heavy_per_candidate();
+    let tr = test.rect(grid);
+    for row in tr.y0..=tr.y1 {
+        for col in tr.x0..=tr.x1 {
+            cost.candidates += 1;
+            cost.heavy_ops += per_tile;
+            if test.accepts(splat, col, row) {
+                out.push((row as u32) * tx as u32 + col as u32);
+                cost.emitted += 1;
             }
         }
     }
@@ -457,6 +517,17 @@ mod tests {
         s.mean = Vec2::new(-500.0, -500.0);
         for mode in IntersectMode::ALL {
             assert!(run(mode, &s).is_empty(), "{}", mode.name());
+        }
+    }
+
+    #[test]
+    fn offscreen_rect_is_empty() {
+        let mut s = splat_for(Vec3::splat(0.05), 0.0, 0.9, Vec2::ZERO);
+        s.mean = Vec2::new(-500.0, -500.0);
+        for mode in IntersectMode::ALL {
+            let rect = SplatTest::new(mode, &s).rect((40, 30));
+            assert!(rect.is_empty(), "{}", mode.name());
+            assert_eq!(rect, TileRange::EMPTY, "{}", mode.name());
         }
     }
 

@@ -18,16 +18,20 @@ pub mod framebuffer;
 pub mod intersect;
 pub mod kernel;
 pub mod pass;
+pub mod plan_cache;
 pub mod preprocess;
 pub mod rasterize;
 pub mod scratch;
 
-pub use binning::{bin_splats, bin_splats_into, BinOptions, TileBins};
+pub use binning::{
+    bin_splats, bin_splats_into, bin_splats_into_keyed, pack_depth_keys, BinOptions, TileBins,
+};
 pub use dispatch::{BalanceStats, DispatchMode};
 pub use framebuffer::{Frame, INVALID_DEPTH};
 pub use intersect::{IntersectCost, IntersectMode};
 pub use kernel::{KernelMode, KernelStats};
 pub use pass::{PassSummary, RenderPass};
+pub use plan_cache::{PlanCache, PlanCacheOutcome, PlanCacheStats};
 pub use preprocess::{preprocess, preprocess_into, preprocess_into_simd, PreprocessStage, Splat};
 pub use rasterize::{rasterize_tile, rasterize_tile_simd, rasterize_tile_with, TileRasterOut};
 pub use scratch::FrameScratch;
@@ -57,6 +61,11 @@ pub struct RenderConfig {
     /// Inner-loop kernels for the two per-pair hot loops (default `Simd`;
     /// bit-identical to `Scalar`, `LSG_FORCE_SCALAR=1` overrides).
     pub kernel: KernelMode,
+    /// Temporal plan cache: serve masked (sparse/pixel) passes from the
+    /// previous dense frame's candidate map when the pose delta is small
+    /// (default on; bit-identical to off by construction,
+    /// `LSG_PLAN_CACHE=off` overrides — see [`plan_cache`]).
+    pub plan_cache: bool,
     /// Background color blended under residual transmittance.
     pub background: Vec3,
 }
@@ -68,6 +77,7 @@ impl Default for RenderConfig {
             threads: 0,
             dispatch: DispatchMode::default(),
             kernel: KernelMode::default(),
+            plan_cache: true,
             background: Vec3::ZERO,
         }
     }
@@ -100,6 +110,8 @@ pub struct RenderStats {
     pub balance: BalanceStats,
     /// Kernel-layer counters (mode, lanes, masked-lane waste, time split).
     pub kernels: KernelStats,
+    /// Temporal plan-cache counters (outcome, rebinned tiles, t_saved).
+    pub plan: PlanCacheStats,
     /// Wall-clock per stage.
     pub times: StageTimes,
 }
@@ -546,14 +558,20 @@ impl Renderer {
 
         let sort_span = crate::telemetry::span("sort");
         let t1 = Instant::now();
-        bin_splats_into(
+        pack_depth_keys(&scratch.splats, kmode, &mut scratch.depth_keys);
+        let plan = plan_cache::bin_with_cache(
+            &mut scratch.plan_cache,
+            self.config.plan_cache && plan_cache::env_enabled(),
             &scratch.splats,
+            &scratch.depth_keys,
             self.config.mode,
             grid,
             BinOptions {
                 tile_mask,
                 depth_limits,
             },
+            pose,
+            self.intrinsics(),
             &mut scratch.bins,
             &mut scratch.pairs,
             &mut scratch.tile_ids,
@@ -579,6 +597,7 @@ impl Renderer {
                 t_preprocess,
                 t_blend: std::time::Duration::ZERO,
             },
+            plan,
         }
     }
 
@@ -798,6 +817,7 @@ pub fn stats_from_scratch(summary: &PassSummary, scratch: &FrameScratch) -> Rend
         shards: summary.shards,
         balance: summary.balance,
         kernels: summary.kernels,
+        plan: summary.plan,
         times,
     }
 }

@@ -16,6 +16,7 @@
 use super::dispatch::BalanceStats;
 use super::intersect::IntersectCost;
 use super::kernel::KernelStats;
+use super::plan_cache::PlanCacheStats;
 use crate::shard::ShardStats;
 use std::time::Duration;
 
@@ -65,6 +66,8 @@ pub struct PassSummary {
     /// Kernel-layer counters (mode, lanes dispatched, masked-lane waste,
     /// preprocess/blend time split).
     pub kernels: KernelStats,
+    /// Temporal plan-cache counters (outcome, rebinned tiles, t_saved).
+    pub plan: PlanCacheStats,
 }
 
 impl PassSummary {

@@ -1,0 +1,547 @@
+//! Temporal plan cache (ISSUE 9): reuse tile binning across small-delta
+//! frames.
+//!
+//! The paper eliminates *pixel* redundancy across frames (TWSR); this
+//! module applies the same no-redundancy idea one level up, to the
+//! planning stage. A streaming camera re-plans the same scene from a
+//! slightly different viewpoint every frame, yet the per-tile candidate
+//! structure — which splats' screen footprints can touch which tiles —
+//! barely moves between poses (TemporalGS in PAPERS.md).
+//!
+//! # Design: bit-identical by construction
+//!
+//! Preprocessing always runs (splat parameters are pose-dependent and
+//! feed rasterization); what the cache carries forward is the *candidate
+//! map* of the binning stage. On dense (window-boundary) frames the
+//! cache records, per surviving splat, its candidate tile rect
+//! ([`SplatTest::rect`]) plus an **unfiltered** tile → candidate CSR
+//! built from those rects. On masked frames (the TWSR sparse path, whose
+//! active-tile set is small) the incremental path:
+//!
+//! 1. recomputes each current splat's [`SplatTest`] + rect (cheap,
+//!    setup-only — no per-tile work) and id-matches the current stream
+//!    against the cached one with a two-pointer walk; splats whose rect
+//!    is unchanged are *stable*, all others (new, or rect drifted) are
+//!    *dirty*;
+//! 2. scatters the dirty splats' rects over the **active tiles only**;
+//! 3. per active tile, merges the cached stable candidates (remapped to
+//!    current indices) with the dirty list — both ascending in current
+//!    splat index, so the merged order equals the from-scratch pair
+//!    order — then applies the *identical* refinement predicate
+//!    ([`SplatTest::accepts`]), tile mask and DPES depth-limit filter,
+//!    and the identical per-tile key sort.
+//!
+//! Same candidate set, same order, same predicates, same deterministic
+//! sort ⇒ the produced [`TileBins`] segments are **bitwise equal** to a
+//! from-scratch [`bin_splats_into_keyed`] on every active tile, for
+//! *any* cached state (`rust/tests/temporal.rs` enforces this across
+//! the full scene × mode × warp × thread matrix). What is skipped is
+//! the refinement testing and pair traffic for every *inactive* tile —
+//! most of the binning stage when the active set is small.
+//!
+//! The pose-delta gate below is therefore purely an economics heuristic
+//! (skip attempts unlikely to have many stable splats); correctness
+//! never depends on it. Any gate failure falls back to a counted full
+//! re-plan — never a wrong frame. `LSG_PLAN_CACHE=off` (or per-session
+//! `RenderConfig::plan_cache = false`) kills the whole path, mirroring
+//! `LSG_FORCE_SCALAR`/`LSG_QOS`.
+
+use super::binning::{bin_splats_into_keyed, BinOptions, TileBins};
+use super::intersect::{IntersectCost, IntersectMode, SplatTest, TileRange};
+use super::preprocess::{Splat, GUARD_BAND_FRAC};
+use crate::scene::{Intrinsics, Pose};
+use crate::TILE;
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+/// `LSG_PLAN_CACHE=off` (or `0`) disables temporal plan reuse process-wide
+/// (read once — `std::env::var` allocates and this sits on the zero-alloc
+/// frame path).
+pub fn env_enabled() -> bool {
+    static ENABLED: OnceLock<bool> = OnceLock::new();
+    *ENABLED.get_or_init(|| {
+        !matches!(
+            std::env::var("LSG_PLAN_CACHE").ok().as_deref(),
+            Some("off") | Some("0")
+        )
+    })
+}
+
+/// What the plan cache did for one pass.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PlanCacheOutcome {
+    /// Caching disabled (config or `LSG_PLAN_CACHE=off`).
+    #[default]
+    Off,
+    /// Unmasked pass: full plan ran and (re)filled the candidate map.
+    Filled,
+    /// Masked pass before any candidate map existed: full plan.
+    Cold,
+    /// Masked pass but the pose drifted past the guard-band bound since
+    /// the cached fill: full plan (counted fallback, never wrong).
+    Delta,
+    /// Masked pass served incrementally from the cached candidate map.
+    Hit,
+}
+
+/// Per-pass plan-cache counters, riding `PassSummary` → `StepSummary` →
+/// `FrameTrace` like `KernelStats` and `BalanceStats`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlanCacheStats {
+    pub outcome: PlanCacheOutcome,
+    /// Tiles in the grid.
+    pub tiles: u32,
+    /// Tiles whose lists were (re)built this pass: the active set on a
+    /// hit, the whole grid on a full plan.
+    pub rebinned_tiles: u32,
+    /// Splats that failed the footprint-stability predicate on a hit
+    /// (new since the fill, or candidate rect drifted).
+    pub dirty_splats: u32,
+    /// Estimated planning time avoided on a hit (EWMA of recent full
+    /// masked re-plans minus this pass's measured bin time; informational).
+    pub t_saved: Duration,
+}
+
+impl PlanCacheStats {
+    #[inline]
+    pub fn hit(&self) -> bool {
+        self.outcome == PlanCacheOutcome::Hit
+    }
+
+    /// Counted fallback: reuse was wanted (masked pass, cache enabled)
+    /// but a full re-plan ran instead.
+    #[inline]
+    pub fn fallback(&self) -> bool {
+        matches!(
+            self.outcome,
+            PlanCacheOutcome::Cold | PlanCacheOutcome::Delta
+        )
+    }
+
+    /// Fraction of the grid that was re-binned (1.0 on a full plan).
+    pub fn rebin_fraction(&self) -> f64 {
+        if self.tiles == 0 {
+            0.0
+        } else {
+            self.rebinned_tiles as f64 / self.tiles as f64
+        }
+    }
+}
+
+/// Cached candidate map + persistent working buffers. Lives in
+/// [`crate::render::FrameScratch`], so each `StreamSession` carries its
+/// own across frames and the one-shot render wrappers stay cold (their
+/// fresh scratch never arms, so they pay zero fill overhead). All
+/// buffers are reused — the steady state allocates nothing once warm
+/// (`tests/zero_alloc.rs`).
+#[derive(Clone, Debug)]
+pub struct PlanCache {
+    /// Set by the first masked pass: only sessions that actually render
+    /// sparse frames pay the dense-frame fill cost.
+    armed: bool,
+    /// A candidate map is present.
+    ready: bool,
+    mode: IntersectMode,
+    grid: (usize, usize),
+    /// Pose of the fill frame (the drift gate measures against it).
+    pose: Pose,
+    /// Min cached splat depth — the drift gate's parallax denominator.
+    min_depth: f32,
+    /// Cached splat ids, ascending (preprocess emits cloud order).
+    ids: Vec<u32>,
+    /// Candidate rect of each cached splat at fill time.
+    rects: Vec<TileRange>,
+    /// Unfiltered tile → cached-splat-index CSR (ascending per tile).
+    cand_offsets: Vec<u32>,
+    cand_entries: Vec<u32>,
+    /// EWMA of measured full masked re-plan bin time (ns) — the
+    /// comparator behind `PlanCacheStats::t_saved`.
+    ewma_full_ns: f32,
+    // ---- per-frame working buffers (persistent, reused) ----
+    tests: Vec<SplatTest>,
+    new_rects: Vec<TileRange>,
+    stable: Vec<bool>,
+    remap: Vec<u32>,
+    dirty: Vec<u32>,
+    dirty_offsets: Vec<u32>,
+    dirty_entries: Vec<u32>,
+    scatter_cursor: Vec<u32>,
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        PlanCache {
+            armed: false,
+            ready: false,
+            mode: IntersectMode::Aabb,
+            grid: (0, 0),
+            pose: Pose::IDENTITY,
+            min_depth: f32::INFINITY,
+            ids: Vec::new(),
+            rects: Vec::new(),
+            cand_offsets: Vec::new(),
+            cand_entries: Vec::new(),
+            ewma_full_ns: 0.0,
+            tests: Vec::new(),
+            new_rects: Vec::new(),
+            stable: Vec::new(),
+            remap: Vec::new(),
+            dirty: Vec::new(),
+            dirty_offsets: Vec::new(),
+            dirty_entries: Vec::new(),
+            scatter_cursor: Vec::new(),
+        }
+    }
+}
+
+impl PlanCache {
+    /// Reuse bound: the predicted screen-space drift a pose delta may
+    /// induce before an attempt is considered uneconomical — the same
+    /// guard-band fraction preprocessing uses, scaled to one tile
+    /// (≈ 2.4 px at `TILE = 16`).
+    pub fn max_drift_px() -> f32 {
+        GUARD_BAND_FRAC * TILE as f32
+    }
+
+    /// Conservative screen-drift estimate for moving from the cached
+    /// fill pose to `pose`: focal length × (rotation angle + parallax of
+    /// the nearest cached splat). Economics only — exactness never
+    /// depends on this bound.
+    fn drift_px(&self, pose: &Pose, intr: &Intrinsics) -> f32 {
+        let (dt, dr) = self.pose.delta(pose);
+        let f = intr.fx.max(intr.fy);
+        let z = self.min_depth.max(intr.near).max(1e-3);
+        f * (dr + dt / z)
+    }
+
+    /// Record the candidate map of an unmasked (dense) plan frame: per
+    /// splat its id + candidate rect, plus the unfiltered tile →
+    /// candidate CSR those rects induce.
+    fn fill(&mut self, splats: &[Splat], mode: IntersectMode, grid: (usize, usize), pose: &Pose) {
+        self.mode = mode;
+        self.grid = grid;
+        self.pose = *pose;
+        self.min_depth = f32::INFINITY;
+        self.ids.clear();
+        self.rects.clear();
+        for s in splats {
+            self.ids.push(s.id);
+            self.rects.push(SplatTest::new(mode, s).rect(grid));
+            self.min_depth = self.min_depth.min(s.depth);
+        }
+        let num_tiles = grid.0 * grid.1;
+        self.cand_offsets.clear();
+        self.cand_offsets.resize(num_tiles + 1, 0);
+        for r in &self.rects {
+            for row in r.y0..=r.y1 {
+                for col in r.x0..=r.x1 {
+                    self.cand_offsets[row as usize * grid.0 + col as usize + 1] += 1;
+                }
+            }
+        }
+        for i in 1..self.cand_offsets.len() {
+            self.cand_offsets[i] += self.cand_offsets[i - 1];
+        }
+        let total = *self.cand_offsets.last().unwrap() as usize;
+        self.cand_entries.clear();
+        self.cand_entries.resize(total, 0);
+        self.scatter_cursor.clear();
+        self.scatter_cursor.extend_from_slice(&self.cand_offsets);
+        for (si, r) in self.rects.iter().enumerate() {
+            for row in r.y0..=r.y1 {
+                for col in r.x0..=r.x1 {
+                    let t = row as usize * grid.0 + col as usize;
+                    let at = self.scatter_cursor[t] as usize;
+                    self.cand_entries[at] = si as u32;
+                    self.scatter_cursor[t] += 1;
+                }
+            }
+        }
+        self.ready = true;
+    }
+
+    /// The incremental re-bin (see module docs): rebuild only the active
+    /// tiles from cached-stable + dirty candidates, bitwise-equal to a
+    /// from-scratch keyed bin. Returns (active tiles, dirty splats).
+    #[allow(clippy::too_many_arguments)]
+    fn reuse_into(
+        &mut self,
+        splats: &[Splat],
+        keys: &[u32],
+        mode: IntersectMode,
+        grid: (usize, usize),
+        mask: &[bool],
+        depth_limits: Option<&[f32]>,
+        out: &mut TileBins,
+    ) -> (u32, u32) {
+        let num_tiles = grid.0 * grid.1;
+        let mut cost = IntersectCost::default();
+
+        // 1. Footprint-stability classification: recompute each current
+        // splat's test + rect and two-pointer match against the cached
+        // id stream. Matching is order-preserving over two ascending id
+        // sequences, so the stable remap is strictly increasing — the
+        // key fact that keeps merged per-tile candidate order identical
+        // to from-scratch (ascending splat index).
+        self.tests.clear();
+        self.new_rects.clear();
+        self.dirty.clear();
+        self.stable.clear();
+        self.stable.resize(self.ids.len(), false);
+        self.remap.clear();
+        self.remap.resize(self.ids.len(), 0);
+        let mut j = 0usize;
+        for (si, s) in splats.iter().enumerate() {
+            let test = SplatTest::new(mode, s);
+            cost.heavy_ops += test.heavy_setup();
+            let rect = test.rect(grid);
+            self.tests.push(test);
+            self.new_rects.push(rect);
+            // Cached splats culled from the current stream stay unstable.
+            while j < self.ids.len() && self.ids[j] < s.id {
+                j += 1;
+            }
+            if j < self.ids.len() && self.ids[j] == s.id {
+                if self.rects[j] == rect {
+                    self.stable[j] = true;
+                    self.remap[j] = si as u32;
+                } else {
+                    self.dirty.push(si as u32);
+                }
+                j += 1;
+            } else {
+                self.dirty.push(si as u32);
+            }
+        }
+        let dirty_splats = self.dirty.len() as u32;
+
+        // 2. Scatter dirty splats' rects into a CSR over active tiles
+        // only (inactive tiles produce no pairs either way).
+        self.dirty_offsets.clear();
+        self.dirty_offsets.resize(num_tiles + 1, 0);
+        for &si in &self.dirty {
+            let r = self.new_rects[si as usize];
+            for row in r.y0..=r.y1 {
+                for col in r.x0..=r.x1 {
+                    let t = row as usize * grid.0 + col as usize;
+                    if mask[t] {
+                        self.dirty_offsets[t + 1] += 1;
+                    }
+                }
+            }
+        }
+        for i in 1..self.dirty_offsets.len() {
+            self.dirty_offsets[i] += self.dirty_offsets[i - 1];
+        }
+        let total = *self.dirty_offsets.last().unwrap() as usize;
+        self.dirty_entries.clear();
+        self.dirty_entries.resize(total, 0);
+        self.scatter_cursor.clear();
+        self.scatter_cursor.extend_from_slice(&self.dirty_offsets);
+        for &si in &self.dirty {
+            let r = self.new_rects[si as usize];
+            for row in r.y0..=r.y1 {
+                for col in r.x0..=r.x1 {
+                    let t = row as usize * grid.0 + col as usize;
+                    if mask[t] {
+                        let at = self.scatter_cursor[t] as usize;
+                        self.dirty_entries[at] = si;
+                        self.scatter_cursor[t] += 1;
+                    }
+                }
+            }
+        }
+
+        // 3. Per-tile rebuild: merge cached-stable + dirty candidates in
+        // ascending current-index order, filter with the identical
+        // predicates, sort with the identical keys.
+        out.offsets.clear();
+        out.offsets.resize(num_tiles + 1, 0);
+        out.entries.clear();
+        let mut active = 0u32;
+        for t in 0..num_tiles {
+            out.offsets[t] = out.entries.len() as u32;
+            if !mask[t] {
+                continue; // masked-out tile: empty segment, like from-scratch
+            }
+            active += 1;
+            let seg_start = out.entries.len();
+            let (col, row) = ((t % grid.0) as i32, (t / grid.0) as i32);
+            let (c0, c1) = (self.cand_offsets[t] as usize, self.cand_offsets[t + 1] as usize);
+            let cached = &self.cand_entries[c0..c1];
+            let (d0, d1) = (self.dirty_offsets[t] as usize, self.dirty_offsets[t + 1] as usize);
+            let dirty = &self.dirty_entries[d0..d1];
+            let mut a = 0usize; // cursor over cached (old indices)
+            let mut b = 0usize; // cursor over dirty (current indices)
+            loop {
+                // Advance past cached candidates that are gone or dirty
+                // (their current contribution, if any, rides the dirty
+                // list with their new rect).
+                while a < cached.len() && !self.stable[cached[a] as usize] {
+                    a += 1;
+                }
+                let next_stable = (a < cached.len()).then(|| self.remap[cached[a] as usize]);
+                let next_dirty = (b < dirty.len()).then(|| dirty[b]);
+                let si = match (next_stable, next_dirty) {
+                    (Some(s), Some(d)) => {
+                        // A splat is stable xor dirty, never both.
+                        if s < d {
+                            a += 1;
+                            s
+                        } else {
+                            b += 1;
+                            d
+                        }
+                    }
+                    (Some(s), None) => {
+                        a += 1;
+                        s
+                    }
+                    (None, Some(d)) => {
+                        b += 1;
+                        d
+                    }
+                    (None, None) => break,
+                };
+                let splat = &splats[si as usize];
+                let test = &self.tests[si as usize];
+                cost.candidates += 1;
+                cost.heavy_ops += test.heavy_per_candidate();
+                if let Some(d) = depth_limits {
+                    if splat.depth > d[t] {
+                        continue;
+                    }
+                }
+                if test.accepts(splat, col, row) {
+                    out.entries.push(si);
+                }
+            }
+            let seg = &mut out.entries[seg_start..];
+            seg.sort_unstable_by_key(|&s| keys[s as usize]);
+        }
+        out.offsets[num_tiles] = out.entries.len() as u32;
+        cost.emitted = out.entries.len() as u64;
+        out.cost = cost;
+        (active, dirty_splats)
+    }
+}
+
+/// The plan-cache-managed binning stage: drop-in replacement for the
+/// [`bin_splats_into_keyed`] call in `plan_pass`. Decides fill / reuse /
+/// fallback, runs the chosen path, and returns the pass's
+/// [`PlanCacheStats`]. With `enabled == false` it degenerates to the
+/// plain keyed bin with zero bookkeeping.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn bin_with_cache(
+    cache: &mut PlanCache,
+    enabled: bool,
+    splats: &[Splat],
+    keys: &[u32],
+    mode: IntersectMode,
+    grid: (usize, usize),
+    opts: BinOptions,
+    pose: &Pose,
+    intr: &Intrinsics,
+    out: &mut TileBins,
+    pairs: &mut Vec<(u32, u32)>,
+    tile_ids: &mut Vec<u32>,
+    cursor: &mut Vec<u32>,
+) -> PlanCacheStats {
+    let num_tiles = (grid.0 * grid.1) as u32;
+    let mut stats = PlanCacheStats {
+        tiles: num_tiles,
+        rebinned_tiles: num_tiles,
+        ..Default::default()
+    };
+    if !enabled {
+        bin_splats_into_keyed(splats, keys, mode, grid, opts, out, pairs, tile_ids, cursor);
+        return stats;
+    }
+    let Some(mask) = opts.tile_mask else {
+        // Unmasked (dense) pass: full plan; refresh the candidate map if
+        // a masked pass ever armed this scratch (one-shot renders never
+        // arm, so they pay no fill cost).
+        bin_splats_into_keyed(splats, keys, mode, grid, opts, out, pairs, tile_ids, cursor);
+        if cache.armed {
+            cache.fill(splats, mode, grid, pose);
+        }
+        stats.outcome = PlanCacheOutcome::Filled;
+        return stats;
+    };
+    cache.armed = true;
+    let usable = cache.ready && cache.mode == mode && cache.grid == grid;
+    if usable && cache.drift_px(pose, intr) <= PlanCache::max_drift_px() {
+        let _reuse_span = crate::telemetry::span("plan_reuse");
+        let t0 = Instant::now();
+        let (active, dirty) =
+            cache.reuse_into(splats, keys, mode, grid, mask, opts.depth_limits, out);
+        let dt = t0.elapsed().as_nanos() as f32;
+        stats.outcome = PlanCacheOutcome::Hit;
+        stats.rebinned_tiles = active;
+        stats.dirty_splats = dirty;
+        if cache.ewma_full_ns > dt {
+            stats.t_saved = Duration::from_nanos((cache.ewma_full_ns - dt) as u64);
+        }
+    } else {
+        let t0 = Instant::now();
+        bin_splats_into_keyed(splats, keys, mode, grid, opts, out, pairs, tile_ids, cursor);
+        let dt = t0.elapsed().as_nanos() as f32;
+        // The t_saved comparator: what a full masked re-plan costs here.
+        cache.ewma_full_ns = if cache.ewma_full_ns == 0.0 {
+            dt
+        } else {
+            0.8 * cache.ewma_full_ns + 0.2 * dt
+        };
+        stats.outcome = if usable {
+            PlanCacheOutcome::Delta
+        } else {
+            PlanCacheOutcome::Cold
+        };
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_classify_outcomes() {
+        let mut s = PlanCacheStats {
+            outcome: PlanCacheOutcome::Hit,
+            tiles: 100,
+            rebinned_tiles: 25,
+            ..Default::default()
+        };
+        assert!(s.hit());
+        assert!(!s.fallback());
+        assert!((s.rebin_fraction() - 0.25).abs() < 1e-12);
+        s.outcome = PlanCacheOutcome::Delta;
+        assert!(!s.hit());
+        assert!(s.fallback());
+        s.outcome = PlanCacheOutcome::Filled;
+        assert!(!s.fallback());
+        assert_eq!(PlanCacheStats::default().rebin_fraction(), 0.0);
+    }
+
+    #[test]
+    fn drift_gate_scales_with_guard_band() {
+        // One tile's worth of guard band at TILE = 16.
+        let b = PlanCache::max_drift_px();
+        assert!((b - 2.4).abs() < 1e-6, "bound {b}");
+    }
+
+    #[test]
+    fn identical_pose_has_zero_drift() {
+        let cache = PlanCache {
+            min_depth: 2.0,
+            ..Default::default()
+        };
+        let intr = Intrinsics::from_fov(192, 128, 1.2);
+        let d = cache.drift_px(&Pose::IDENTITY, &intr);
+        assert_eq!(d, 0.0);
+        let mut moved = Pose::IDENTITY;
+        moved.position.x += 0.5;
+        assert!(cache.drift_px(&moved, &intr) > PlanCache::max_drift_px());
+    }
+}

@@ -12,6 +12,7 @@
 //! call, reproducing the seed behavior bit-for-bit.
 
 use super::binning::TileBins;
+use super::plan_cache::PlanCache;
 use super::preprocess::{PreprocessStage, Splat};
 use crate::shard::ShardAssets;
 use std::sync::Arc;
@@ -47,6 +48,14 @@ pub struct FrameScratch {
     pub(crate) tile_ids: Vec<u32>,
     /// Counting-sort cursor.
     pub(crate) cursor: Vec<u32>,
+    /// Per-splat quantized depth sort keys, packed once per pass through
+    /// the SIMD lane layer ([`crate::render::binning::pack_depth_keys`]).
+    pub(crate) depth_keys: Vec<u32>,
+    /// Temporal plan cache: the cached candidate map plus the working
+    /// buffers of the incremental re-bin path. Persists with the scratch,
+    /// so each `StreamSession` carries its own across frames
+    /// ([`crate::render::plan_cache`]).
+    pub(crate) plan_cache: PlanCache,
     /// Per-tile splats traversed before early stop (VRU workload).
     pub traversed: Vec<u32>,
     /// Per-tile actually-contributing splat counts.

@@ -40,6 +40,11 @@ pub struct NodeTelemetry {
     pub qos_rejected_sessions: u64,
     /// Sessions admitted pre-degraded at the bottom ladder rung.
     pub qos_downtiered_sessions: u64,
+    /// Masked passes served incrementally from the temporal plan cache.
+    pub plan_cache_hits: u64,
+    /// Masked passes that fell back to a full re-plan (cold cache or
+    /// pose drift beyond the guard-band bound).
+    pub plan_cache_fallbacks: u64,
     pub frame_ns: HistSummary,
     pub lateness_ns: HistSummary,
     pub queue_wait_ns: HistSummary,
@@ -50,6 +55,8 @@ pub struct NodeTelemetry {
     /// Headroom left in the pacing interval per paced step, permille
     /// (QoS-enabled sessions only; 0 = overran).
     pub qos_headroom_pm: HistSummary,
+    /// Fraction of active tiles re-binned per plan-cache hit, permille.
+    pub plan_rebin_pm: HistSummary,
 }
 
 impl NodeTelemetry {
@@ -72,6 +79,8 @@ impl NodeTelemetry {
             qos_shed_frames: h.qos_shed_frames.load(Ordering::Relaxed),
             qos_rejected_sessions: h.qos_rejected_sessions.load(Ordering::Relaxed),
             qos_downtiered_sessions: h.qos_downtiered_sessions.load(Ordering::Relaxed),
+            plan_cache_hits: h.plan_cache_hits.load(Ordering::Relaxed),
+            plan_cache_fallbacks: h.plan_cache_fallbacks.load(Ordering::Relaxed),
             frame_ns: h.frame_ns.summary(),
             lateness_ns: h.lateness_ns.summary(),
             queue_wait_ns: h.queue_wait_ns.summary(),
@@ -80,6 +89,7 @@ impl NodeTelemetry {
             load_ns_mem: h.load_ns_mem.summary(),
             load_ns_file: h.load_ns_file.summary(),
             qos_headroom_pm: h.qos_headroom_pm.summary(),
+            plan_rebin_pm: h.plan_rebin_pm.summary(),
         }
     }
 }
@@ -186,6 +196,9 @@ impl TelemetrySnapshot {
             .set("qos_shed_frames", n.qos_shed_frames)
             .set("qos_rejected_sessions", n.qos_rejected_sessions)
             .set("qos_downtiered_sessions", n.qos_downtiered_sessions)
+            .set("plan_cache_hits", n.plan_cache_hits)
+            .set("plan_cache_fallbacks", n.plan_cache_fallbacks)
+            .set("plan_rebin_fraction", ratio_hist_json(&n.plan_rebin_pm))
             .set("qos_headroom", ratio_hist_json(&n.qos_headroom_pm))
             .set("frame_ms", ns_hist_json(&n.frame_ns))
             .set("lateness_ms", ns_hist_json(&n.lateness_ns))
@@ -275,11 +288,14 @@ impl TelemetrySnapshot {
             ("lsg_qos_shed_frames_total", n.qos_shed_frames),
             ("lsg_qos_rejected_sessions_total", n.qos_rejected_sessions),
             ("lsg_qos_downtiered_sessions_total", n.qos_downtiered_sessions),
+            ("lsg_plan_cache_hits_total", n.plan_cache_hits),
+            ("lsg_plan_cache_fallbacks_total", n.plan_cache_fallbacks),
         ] {
             let _ = writeln!(out, "# TYPE {name} counter");
             let _ = writeln!(out, "{name} {v}");
         }
         prom_hist(&mut out, "lsg_qos_headroom", "", &n.qos_headroom_pm, PM_TO_RATIO);
+        prom_hist(&mut out, "lsg_plan_rebin_fraction", "", &n.plan_rebin_pm, PM_TO_RATIO);
         prom_hist(&mut out, "lsg_frame_ms", "", &n.frame_ns, NS_TO_MS);
         prom_hist(&mut out, "lsg_lateness_ms", "", &n.lateness_ns, NS_TO_MS);
         prom_hist(&mut out, "lsg_queue_wait_ms", "", &n.queue_wait_ns, NS_TO_MS);
@@ -366,6 +382,9 @@ mod tests {
         hub.qos_shed_frames.fetch_add(7, Ordering::Relaxed);
         hub.qos_rejected_sessions.fetch_add(1, Ordering::Relaxed);
         hub.qos_headroom_pm.record(450);
+        hub.plan_cache_hits.fetch_add(12, Ordering::Relaxed);
+        hub.plan_cache_fallbacks.fetch_add(4, Ordering::Relaxed);
+        hub.plan_rebin_pm.record(250);
         let class_hist = Histogram::new();
         for i in 1..=10u64 {
             class_hist.record(i * 100_000);
@@ -435,6 +454,10 @@ mod tests {
         assert_eq!(node.get("qos_shed_frames").and_then(Json::as_f64), Some(7.0));
         let headroom = node.get("qos_headroom").expect("qos_headroom digest");
         assert_eq!(headroom.get("p50").and_then(Json::as_f64), Some(0.45));
+        assert_eq!(node.get("plan_cache_hits").and_then(Json::as_f64), Some(12.0));
+        assert_eq!(node.get("plan_cache_fallbacks").and_then(Json::as_f64), Some(4.0));
+        let rebin = node.get("plan_rebin_fraction").expect("plan_rebin_fraction digest");
+        assert_eq!(rebin.get("p50").and_then(Json::as_f64), Some(0.25));
     }
 
     #[test]
@@ -458,6 +481,9 @@ mod tests {
             "lsg_qos_rejected_sessions_total 1",
             "lsg_qos_headroom{quantile=\"0.5\"}",
             "lsg_session_qos_level{session=\"0\"} 1",
+            "lsg_plan_cache_hits_total 12",
+            "lsg_plan_cache_fallbacks_total 4",
+            "lsg_plan_rebin_fraction{quantile=\"0.5\"}",
         ] {
             assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
         }

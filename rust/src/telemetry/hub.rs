@@ -58,6 +58,13 @@ pub struct MetricsHub {
     /// Per paced step: headroom left in the pacing interval, permille
     /// (0 = the step overran its interval). QoS-enabled sessions only.
     pub qos_headroom_pm: Histogram,
+    /// Masked passes served incrementally from the temporal plan cache.
+    pub plan_cache_hits: AtomicU64,
+    /// Masked passes that fell back to a full re-plan (cold cache or
+    /// pose drift beyond the guard-band bound).
+    pub plan_cache_fallbacks: AtomicU64,
+    /// Per plan-cache hit: fraction of active tiles re-binned, permille.
+    pub plan_rebin_pm: Histogram,
 }
 
 impl MetricsHub {
@@ -82,6 +89,9 @@ impl MetricsHub {
             qos_rejected_sessions: AtomicU64::new(0),
             qos_downtiered_sessions: AtomicU64::new(0),
             qos_headroom_pm: Histogram::new(),
+            plan_cache_hits: AtomicU64::new(0),
+            plan_cache_fallbacks: AtomicU64::new(0),
+            plan_rebin_pm: Histogram::new(),
         }
     }
 

@@ -1,0 +1,273 @@
+//! Integration tests for the temporal plan cache (ISSUE 9): serving a
+//! masked pass incrementally from the cached candidate map must be
+//! **bit-identical** to a from-scratch plan — on every scene, every
+//! intersection mode, both warp paths and both ends of the thread
+//! spectrum, and for *any* mask / pose-delta / depth-limit combination
+//! (the cache may only change how much planning work happens, never its
+//! result).
+//!
+//! CI re-runs this file under `LSG_PLAN_CACHE=off` (every outcome must
+//! degenerate to `Off`, proving the kill switch reaches the planning
+//! stage) and under `LSG_POOL_THREADS=2`.
+
+use ls_gaussian::coordinator::{CoordinatorConfig, StreamSession, WarpMode};
+use ls_gaussian::render::{
+    Frame, FrameScratch, IntersectMode, PlanCacheOutcome, RenderPass, Renderer,
+};
+use ls_gaussian::scene::{generate, Pose, SceneAssets, ALL_SCENES};
+use ls_gaussian::util::pool::{default_threads, WorkerPool};
+use ls_gaussian::util::Rng;
+use std::sync::Arc;
+
+/// Pool sized by `LSG_POOL_THREADS` (CI matrix) or the machine.
+fn test_pool() -> Arc<WorkerPool> {
+    let threads = std::env::var("LSG_POOL_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or_else(|| default_threads().saturating_sub(1))
+        .max(1);
+    Arc::new(WorkerPool::new(threads))
+}
+
+/// Mirrors `plan_cache::env_enabled`: outcome assertions flip when the CI
+/// matrix re-runs this file with the kill switch thrown.
+fn env_on() -> bool {
+    !matches!(
+        std::env::var("LSG_PLAN_CACHE").ok().as_deref(),
+        Some("off") | Some("0")
+    )
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The full streaming loop must produce bit-identical frames with the
+/// plan cache on and off: every scene, every intersection mode, the TWSR
+/// and PWSR warp paths, inline (threads = 1) and parallel (threads = 2).
+/// The pose track is micro-interpolated so the drift gate passes and the
+/// cache actually serves hits past the second window boundary.
+#[test]
+fn plan_cache_is_bit_identical_on_all_scenes() {
+    let pool = test_pool();
+    for name in ALL_SCENES {
+        let scene = generate(name, 0.02, 96, 64);
+        let anchors = scene.sample_poses(2);
+        // 8 frames cross one window boundary (window = 5): dense frames at
+        // 0 and 5, the fill at 5, so frames 6..8 can be served from cache.
+        let poses: Vec<Pose> = (0..8)
+            .map(|f| anchors[0].interpolate(&anchors[1], f as f32 * 5e-5))
+            .collect();
+        let assets = SceneAssets::from_scene(&scene);
+        for mode in [IntersectMode::Aabb, IntersectMode::Tait, IntersectMode::Exact] {
+            for warp in [WarpMode::Tile, WarpMode::Pixel] {
+                for threads in [1usize, 2] {
+                    let mk = |plan_cache: bool| {
+                        StreamSession::new(
+                            Arc::clone(&assets),
+                            Arc::clone(&pool),
+                            CoordinatorConfig {
+                                warp,
+                                mode,
+                                threads,
+                                plan_cache,
+                                ..Default::default()
+                            },
+                        )
+                    };
+                    let mut on = mk(true);
+                    let mut off = mk(false);
+                    let mut hits = 0usize;
+                    for (f, pose) in poses.iter().enumerate() {
+                        let k1 = on.step(pose);
+                        let k2 = off.step(pose);
+                        let ctx = format!("{name} {mode:?} {warp:?} threads={threads} frame {f}");
+                        assert_eq!(k1, k2, "{ctx}: kind diverged");
+                        assert_eq!(
+                            bits(&on.frame().rgb),
+                            bits(&off.frame().rgb),
+                            "{ctx}: rgb diverged"
+                        );
+                        assert_eq!(
+                            bits(&on.frame().depth),
+                            bits(&off.frame().depth),
+                            "{ctx}: depth diverged"
+                        );
+                        assert_eq!(
+                            bits(&on.frame().trunc_depth),
+                            bits(&off.frame().trunc_depth),
+                            "{ctx}: trunc_depth diverged"
+                        );
+                        assert_eq!(on.frame().valid, off.frame().valid, "{ctx}: validity diverged");
+                        let (ps, pv) = (on.last_summary().pass, off.last_summary().pass);
+                        assert_eq!(ps.n_splats, pv.n_splats, "{ctx}: splat count diverged");
+                        assert_eq!(ps.pairs, pv.pairs, "{ctx}: pair count diverged");
+                        // The cache-off arm must never engage the cache.
+                        assert_eq!(pv.plan.outcome, PlanCacheOutcome::Off, "{ctx}");
+                        if !env_on() {
+                            let o = ps.plan.outcome;
+                            assert_eq!(o, PlanCacheOutcome::Off, "{ctx}: kill switch");
+                        }
+                        if ps.plan.hit() {
+                            hits += 1;
+                            assert!(ps.plan.rebinned_tiles <= ps.plan.tiles, "{ctx}");
+                            let r = ps.plan.rebin_fraction();
+                            assert!((0.0..=1.0).contains(&r), "{ctx}: rebin fraction {r}");
+                        }
+                    }
+                    if env_on() {
+                        assert!(
+                            hits > 0,
+                            "{name} {mode:?} {warp:?} threads={threads}: no hits in 8 frames"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The property-test harness state: a cached and an uncached renderer arm
+/// stepped in lockstep over identical pass sequences.
+struct Arms {
+    on: Renderer,
+    off: Renderer,
+    s_on: FrameScratch,
+    s_off: FrameScratch,
+    f_on: Frame,
+    f_off: Frame,
+}
+
+impl Arms {
+    fn new(assets: Arc<SceneAssets>) -> Arms {
+        let mut on = Renderer::from_assets(assets);
+        on.config.threads = 1;
+        let mut off = on.clone();
+        off.config.plan_cache = false;
+        let (w, h) = (on.intrinsics().width, on.intrinsics().height);
+        Arms {
+            on,
+            off,
+            s_on: FrameScratch::new(),
+            s_off: FrameScratch::new(),
+            f_on: Frame::new(w, h),
+            f_off: Frame::new(w, h),
+        }
+    }
+
+    /// Execute the same pass on both arms and compare the *planning
+    /// output* (tile bins) bitwise, plus the blended frame. Returns the
+    /// cached arm's plan outcome.
+    fn step(&mut self, pose: &Pose, pass: RenderPass, ctx: &str) -> PlanCacheOutcome {
+        let a = self.on.execute(pose, &mut self.f_on, pass, &mut self.s_on);
+        let b = self.off.execute(pose, &mut self.f_off, pass, &mut self.s_off);
+        assert_eq!(b.plan.outcome, PlanCacheOutcome::Off, "{ctx}: off arm engaged the cache");
+        assert_eq!(self.s_on.bins.offsets, self.s_off.bins.offsets, "{ctx}: offsets diverged");
+        assert_eq!(self.s_on.bins.entries, self.s_off.bins.entries, "{ctx}: entries diverged");
+        assert_eq!(a.n_splats, b.n_splats, "{ctx}: splat count diverged");
+        assert_eq!(a.pairs, b.pairs, "{ctx}: pair count diverged");
+        assert_eq!(bits(&self.f_on.rgb), bits(&self.f_off.rgb), "{ctx}: rgb diverged");
+        assert_eq!(bits(&self.f_on.depth), bits(&self.f_off.depth), "{ctx}: depth diverged");
+        assert_eq!(self.f_on.valid, self.f_off.valid, "{ctx}: validity diverged");
+        assert!(a.plan.dirty_splats as usize <= a.n_splats, "{ctx}: dirty > survivors");
+        a.plan.outcome
+    }
+}
+
+/// Property harness over the incremental re-bin itself: random pose-delta
+/// sequences and adversarial masks (empty, full, single-tile, random,
+/// with and without DPES depth limits) must yield tile bins bitwise
+/// equal to the from-scratch plan, including after pose jumps that void
+/// the drift gate and after refills. Exactness is structural — it must
+/// hold for *any* cached state, so the sequence deliberately serves hits
+/// from both fresh and aged candidate maps.
+#[test]
+fn incremental_rebin_matches_from_scratch_for_any_mask() {
+    let scene = generate("room", 0.03, 128, 96);
+    let mut pose = scene.sample_poses(1)[0];
+    let assets = SceneAssets::from_scene(&scene);
+    let (tx, ty) = assets.intrinsics.tile_grid();
+    let num_tiles = tx * ty;
+    let mut arms = Arms::new(assets);
+    let mut rng = Rng::new(0x1517);
+    let mut outcomes = Vec::new();
+
+    // Dense cold start (never-armed scratch: no fill yet), then a masked
+    // pass before any candidate map exists (arms the cache, Cold), then a
+    // dense frame the armed cache records its candidate map from.
+    let empty = vec![false; num_tiles];
+    outcomes.push(arms.step(&pose, RenderPass::Dense, "dense cold start"));
+    let before_fill = RenderPass::SparseTiles { mask: &empty, depth_limits: None };
+    outcomes.push(arms.step(&pose, before_fill, "masked before fill"));
+    outcomes.push(arms.step(&pose, RenderPass::Dense, "dense fill"));
+
+    // Small-delta masked frames over adversarial masks. The micro-steps
+    // keep accumulated drift far under the guard-band bound, so with the
+    // cache enabled every one of these is served incrementally.
+    let mut mask = vec![false; num_tiles];
+    let mut limits = vec![f32::INFINITY; num_tiles];
+    for round in 0..12 {
+        pose.position.x += 5e-5;
+        let label = match round % 4 {
+            0 => {
+                mask.fill(false);
+                "empty mask"
+            }
+            1 => {
+                mask.fill(true);
+                "full mask"
+            }
+            2 => {
+                mask.fill(false);
+                let t = (rng.range(0.0, num_tiles as f32 - 0.5) as usize).min(num_tiles - 1);
+                mask[t] = true;
+                "single tile"
+            }
+            _ => {
+                mask.iter_mut().for_each(|m| *m = rng.range(0.0, 1.0) < 0.4);
+                "random mask"
+            }
+        };
+        let with_limits = round % 3 == 0;
+        for (t, l) in limits.iter_mut().enumerate() {
+            *l = if with_limits && mask[t] {
+                rng.range(0.5, 6.0)
+            } else {
+                f32::INFINITY
+            };
+        }
+        let dl = with_limits.then_some(&limits[..]);
+        let ctx = format!("round {round} ({label}, limits={with_limits})");
+        let pass = RenderPass::SparseTiles { mask: &mask, depth_limits: dl };
+        outcomes.push(arms.step(&pose, pass, &ctx));
+    }
+
+    // A pose jump past the drift gate: the cache must fall back to the
+    // full plan (Delta), then refill on the next dense frame and resume
+    // serving hits from the new anchor.
+    pose.position.x += 2.0;
+    mask.iter_mut().for_each(|m| *m = rng.range(0.0, 1.0) < 0.4);
+    let jumped = RenderPass::SparseTiles { mask: &mask, depth_limits: None };
+    outcomes.push(arms.step(&pose, jumped, "post-jump masked"));
+    outcomes.push(arms.step(&pose, RenderPass::Dense, "dense refill"));
+    pose.position.x += 5e-5;
+    outcomes.push(arms.step(&pose, jumped, "post-refill masked"));
+
+    if env_on() {
+        use PlanCacheOutcome::{Cold, Delta, Filled, Hit};
+        assert_eq!(outcomes[0], Filled, "cold-start dense");
+        assert_eq!(outcomes[1], Cold, "masked before any fill");
+        assert_eq!(outcomes[2], Filled, "armed dense fills");
+        for (i, o) in outcomes[3..15].iter().enumerate() {
+            assert_eq!(*o, Hit, "small-delta round {i} not served from cache");
+        }
+        assert_eq!(outcomes[15], Delta, "drift past the gate must fall back");
+        assert_eq!(outcomes[16], Filled, "refill after the jump");
+        assert_eq!(outcomes[17], Hit, "hit from the refilled map");
+    } else {
+        assert!(
+            outcomes.iter().all(|o| *o == PlanCacheOutcome::Off),
+            "kill switch must reach the planning stage"
+        );
+    }
+}
