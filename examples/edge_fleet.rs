@@ -17,6 +17,7 @@ use ls_gaussian::scene::{generate, orbit_poses, Pose};
 use ls_gaussian::serve::StreamServer;
 use ls_gaussian::shard::{partition_cloud, MemoryShardStore, ShardedScene};
 use ls_gaussian::sim::{GpuModel, WorkloadTrace};
+use ls_gaussian::telemetry::AdminConfig;
 use ls_gaussian::util::cli::Args;
 use std::sync::Arc;
 use std::time::Instant;
@@ -68,11 +69,44 @@ fn main() {
         .iter()
         .map(|s| server.add_scene(Arc::clone(s)).expect("register scene"))
         .collect();
+
+    // Live introspection plane (docs/OBSERVABILITY.md): admin endpoint
+    // on a loopback socket — `LSG_ADMIN=host:port` pins the port — and
+    // an online quality probe on camera 0: every 3rd warped frame is
+    // re-rendered dense on pool idle capacity and scored PSNR/SSIM
+    // against the frame that was actually served.
+    let admin_addr = server
+        .enable_admin(AdminConfig {
+            addr: "127.0.0.1:0".to_string(),
+            enabled: true,
+        })
+        .expect("bind admin endpoint");
+    if let Some(addr) = admin_addr {
+        println!(
+            "admin endpoint: http://{addr}/  (/metrics /healthz /readyz \
+             /sessions /snapshot.json /flightrecord /trace/start /trace/stop)"
+        );
+    }
+
     // Cameras round-robin across the scenes (a mixed fleet load).
     let cam_scene: Vec<usize> = (0..cameras).map(|c| c % scene_names.len()).collect();
-    for &s in &cam_scene {
-        server.add_session_on(scene_ids[s]);
-    }
+    let probe_cfg = CoordinatorConfig {
+        mode: IntersectMode::Tait,
+        threads: 1,
+        probe_interval: 3,
+        ..Default::default()
+    };
+    let session_ids: Vec<_> = cam_scene
+        .iter()
+        .enumerate()
+        .map(|(c, &s)| {
+            if c == 0 {
+                server.add_session_on_with(scene_ids[s], probe_cfg)
+            } else {
+                server.add_session_on(scene_ids[s])
+            }
+        })
+        .collect();
     let cam_poses: Vec<Vec<Pose>> = cam_scene
         .iter()
         .enumerate()
@@ -97,6 +131,9 @@ fn main() {
                 &r.trace,
                 &scenes[cam_scene[c]].intrinsics,
             ));
+        }
+        if f % 8 == 0 {
+            server.publish_admin(); // keep scrapes fresh mid-run
         }
     }
     let wall = t0.elapsed().as_secs_f64();
@@ -204,6 +241,28 @@ fn main() {
         done.len(),
         interval
     );
+    // Detach the deliberately-infeasible paced sessions: the health
+    // gates judge the *current* session population, and the overload
+    // experiment is over — the held admin endpoint below should report
+    // the steady fleet, not the stress test.
+    for &id in &paced {
+        server.remove_session(id);
+    }
+
+    // Probe verdict for camera 0: what quality did the warp loop
+    // actually serve, per the dense-reference probe?
+    {
+        let sess = server.session(session_ids[0]);
+        sess.drain_probe();
+        if let Some(d) = sess.probe_digest() {
+            println!(
+                "probe cam 0: {} warped frames scored | PSNR mean {:.1} dB \
+                 (min {:.1}) | SSIM mean {:.3}",
+                d.frames, d.psnr_mean_db, d.psnr_min_db, d.ssim_mean
+            );
+        }
+    }
+    server.publish_admin();
 
     // Full node telemetry at exit, in Prometheus text exposition —
     // counters, frame/lateness percentiles, per-scene size-class load
@@ -212,5 +271,16 @@ fn main() {
     print!("{}", server.telemetry_snapshot().to_prometheus());
     if let Some(path) = ls_gaussian::telemetry::flush_trace() {
         println!("--- LSG_TRACE written to {} ---", path.display());
+    }
+
+    // `--hold N` keeps the admin endpoint up for N more seconds after
+    // the run so external scrapers (the CI smoke step, a curl on the
+    // printed URL) can interrogate the finished node.
+    let hold = args.usize_or("hold", 0);
+    if hold > 0 {
+        if let Some(addr) = server.admin_addr() {
+            println!("holding admin endpoint at http://{addr}/ for {hold}s");
+        }
+        std::thread::sleep(std::time::Duration::from_secs(hold as u64));
     }
 }

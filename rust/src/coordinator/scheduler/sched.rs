@@ -808,7 +808,33 @@ fn submit_step(
             // thread's span stack).
             // The interval rides along so the session's QoS controller
             // can sense lateness-vs-budget and actuate its ladder.
-            slot.session.lock().unwrap().annotate_sched(&sched, interval);
+            let (level_before, level_after) = {
+                let mut sess = slot.session.lock().unwrap();
+                let before = sess.qos_level();
+                sess.annotate_sched(&sched, interval);
+                (before, sess.qos_level())
+            };
+            if level_after != level_before {
+                crate::telemetry::flight::note_qos_transition(
+                    slot.id as u32,
+                    level_before,
+                    level_after,
+                );
+            }
+            // Black box: every paced commit lands in the flight
+            // recorder's ring and anomaly window (alloc-free; an
+            // anomaly trigger auto-dumps, see `telemetry/flight.rs`).
+            crate::telemetry::flight::note_paced(
+                slot.id as u32,
+                sched.t_step.as_nanos() as u64,
+                sched.lateness.as_nanos() as u64,
+                interval.as_nanos() as u64,
+                summary
+                    .kind
+                    .is_some_and(|k| k != crate::coordinator::session::FrameKind::Full),
+                sched.stalled,
+                summary.qos.level,
+            );
             crate::telemetry::complete_on(
                 "sched_queue_wait",
                 crate::telemetry::SCHED_TRACK_BASE + slot.id as u32,
@@ -869,6 +895,7 @@ fn submit_step(
                     crate::telemetry::hub()
                         .qos_shed_frames
                         .fetch_add(shed, std::sync::atomic::Ordering::Relaxed);
+                    crate::telemetry::flight::note_shed(slot.id as u32, shed);
                 }
             }
         }

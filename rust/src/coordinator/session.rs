@@ -29,7 +29,7 @@ use crate::render::{
 use crate::scene::{Intrinsics, Pose};
 use crate::serve::qos::{self, QosConfig, QosController, QosDecision, QosStats};
 use crate::shard::SceneHandle;
-use crate::telemetry::{FrameRecord, FrameRing};
+use crate::telemetry::{FrameRecord, FrameRing, ProbeDigest, QualityProbe};
 use crate::util::pool::WorkerPool;
 use crate::warp::{
     classify_and_inpaint, predict_depth_limits_into, reproject_into, InpaintScratch,
@@ -97,6 +97,11 @@ pub struct CoordinatorConfig {
     /// Closed-loop QoS controller knobs (paced sessions only; see
     /// `serve/qos.rs` and `docs/QOS.md`). `LSG_QOS=off` overrides.
     pub qos: QosConfig,
+    /// Online quality probe: score every Nth warped frame against the
+    /// dense reference on idle pool capacity (`telemetry/probe.rs`).
+    /// 0 (the default) disables probing entirely — no probe state is
+    /// allocated and the step path stays bit-parity + zero-alloc.
+    pub probe_interval: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -112,6 +117,7 @@ impl Default for CoordinatorConfig {
             kernel: KernelMode::default(),
             plan_cache: true,
             qos: QosConfig::default(),
+            probe_interval: 0,
         }
     }
 }
@@ -204,6 +210,9 @@ pub struct StreamSession {
     /// operating point). Only actuates on paced commits, and only when
     /// `config.qos.enabled` and `LSG_QOS` allow it.
     qos: QosController,
+    /// Online served-vs-reference quality scorer; `None` (the default,
+    /// `probe_interval == 0`) keeps the step path probe-free.
+    probe: Option<QualityProbe>,
 }
 
 impl StreamSession {
@@ -248,6 +257,11 @@ impl StreamSession {
             config.window = win;
             config.policy.missing_threshold = thr;
         }
+        let probe = if config.probe_interval > 0 {
+            Some(QualityProbe::new(config.probe_interval, &renderer))
+        } else {
+            None
+        };
         StreamSession {
             renderer,
             config,
@@ -267,6 +281,7 @@ impl StreamSession {
             last: StepSummary::default(),
             ring: FrameRing::with_capacity(crate::telemetry::DEFAULT_RING_CAP),
             qos: qos_ctl,
+            probe,
         }
     }
 
@@ -326,6 +341,15 @@ impl StreamSession {
         };
         self.last.kind = Some(kind);
         self.record_step(kind, t_step.elapsed());
+        // Online quality probe: on warped frames only (full frames ARE
+        // the reference), every Nth one, scored off-thread. `None` by
+        // default — the lean path pays a single branch.
+        if kind != FrameKind::Full {
+            if let Some(probe) = self.probe.as_mut() {
+                let level = self.qos.level();
+                probe.observe_warped(&self.frame, pose, level);
+            }
+        }
         self.frame_idx += 1;
         self.last_pose = *pose;
         self.has_prev = true;
@@ -399,6 +423,19 @@ impl StreamSession {
     /// The session's bounded frame-record history (telemetry read side).
     pub fn ring(&self) -> &FrameRing {
         &self.ring
+    }
+
+    /// Digest of the session's scored quality probes (`None` when the
+    /// probe is disabled, all-zero before the first score lands).
+    pub fn probe_digest(&self) -> Option<ProbeDigest> {
+        self.probe.as_ref().map(|p| p.digest())
+    }
+
+    /// Block until no probe render is in flight (shutdown/reporting).
+    pub fn drain_probe(&self) {
+        if let Some(p) = self.probe.as_ref() {
+            p.drain();
+        }
     }
 
     /// Stamp scheduling stats onto the most recent ring record and the

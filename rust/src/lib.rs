@@ -65,3 +65,42 @@ pub const TRANSMITTANCE_EPS: f32 = 1e-4;
 /// Default re-render threshold: re-render a tile when more than 1/6 of its
 /// pixels are missing after reprojection (Sec. IV-A / V-A).
 pub const RERENDER_MISSING_FRACTION: f32 = 1.0 / 6.0;
+
+// Guard against silently unregistered integration tests: cargo only runs
+// `rust/tests/*.rs` files that have a matching `[[test]]` entry in
+// Cargo.toml (the crate moves them out of the default `tests/` dir), and
+// PR 8 shipped `kernel_parity` without one — it looked green without ever
+// running. This parses the manifest and diffs it against the directory.
+#[cfg(test)]
+mod test_registration {
+    #[test]
+    fn every_integration_test_is_registered_in_cargo_toml() {
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+        let manifest =
+            std::fs::read_to_string(root.join("Cargo.toml")).expect("read Cargo.toml");
+        let registered: Vec<&str> = manifest
+            .lines()
+            .filter_map(|l| l.trim().strip_prefix("path = "))
+            .filter_map(|p| p.trim_matches('"').strip_prefix("rust/tests/"))
+            .filter_map(|p| p.strip_suffix(".rs"))
+            .collect();
+        let mut missing = Vec::new();
+        for entry in std::fs::read_dir(root.join("rust/tests")).expect("list rust/tests") {
+            let path = entry.expect("dir entry").path();
+            let Some(stem) = path.file_stem().and_then(|s| s.to_str()) else {
+                continue;
+            };
+            if path.extension().and_then(|e| e.to_str()) != Some("rs") {
+                continue;
+            }
+            if !registered.contains(&stem) {
+                missing.push(stem.to_string());
+            }
+        }
+        assert!(
+            missing.is_empty(),
+            "rust/tests/*.rs without a [[test]] entry in Cargo.toml \
+             (they would never run): {missing:?}"
+        );
+    }
+}

@@ -291,6 +291,13 @@ impl Renderer {
             .get_or_init(|| Arc::new(WorkerPool::new(default_threads().saturating_sub(1).max(1))))
     }
 
+    /// The worker pool this renderer fans out on (materializing it if no
+    /// pool was shared yet). Lets sidecar consumers — e.g. the quality
+    /// probe — ride the same pool instead of spawning their own threads.
+    pub fn worker_pool(&self) -> Arc<WorkerPool> {
+        Arc::clone(self.pool())
+    }
+
     /// Dense render of a full frame.
     pub fn render(&self, pose: &Pose) -> (Frame, RenderStats) {
         let mut frame = Frame::new(self.intrinsics().width, self.intrinsics().height);

@@ -272,6 +272,7 @@ fn shed(inner: &mut GovInner, budget: u64, requester: usize) {
                 crate::telemetry::hub()
                     .governor_evictions
                     .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                crate::telemetry::flight::note_governor_evict(s as u32, freed as u64);
             }
             None => refused.push((s, id as u64)),
         }

@@ -364,6 +364,14 @@ mod tests {
         }
     }
 
+    // The probe histograms attribute quality per ladder rung; the hub
+    // cannot depend on `serve`, so the count is pinned there and
+    // cross-checked here.
+    #[test]
+    fn ladder_matches_probe_rung_count() {
+        assert_eq!(LADDER.len(), crate::telemetry::QUALITY_RUNGS);
+    }
+
     fn ring_with(lateness_ns: &[u64], step_ns: u64) -> FrameRing {
         let mut ring = FrameRing::with_capacity(64);
         for (i, &l) in lateness_ns.iter().enumerate() {

@@ -64,7 +64,9 @@ use crate::coordinator::scheduler::{SchedConfig, SessionGuard, SessionId, Sessio
 use crate::coordinator::session::{CoordinatorConfig, FrameResult, StepSummary, StreamSession};
 use crate::scene::Pose;
 use crate::shard::{SceneHandle, StoreKind};
-use crate::telemetry::{NodeTelemetry, SceneTelemetry, SessionTelemetry, TelemetrySnapshot};
+use crate::telemetry::admin::{AdminConfig, AdminServer, HealthReport, HealthThresholds};
+use crate::telemetry::{flight, NodeTelemetry, SceneTelemetry, SessionTelemetry, TelemetrySnapshot};
+use crate::util::json::Json;
 use crate::util::pool::{default_threads, WorkerPool};
 use anyhow::{bail, ensure, Result};
 use std::sync::Arc;
@@ -85,6 +87,11 @@ pub struct StreamServer {
     session_scene: Vec<Option<SceneId>>,
     /// Gate on session creation; [`AdmissionPolicy::open`] by default.
     admission: AdmissionPolicy,
+    /// Live introspection endpoint (PR 10); `None` until
+    /// [`StreamServer::enable_admin`] binds one.
+    admin: Option<AdminServer>,
+    /// Gates [`StreamServer::publish_admin`]'s health verdict.
+    health_thresholds: HealthThresholds,
 }
 
 impl StreamServer {
@@ -145,6 +152,8 @@ impl StreamServer {
             default_scene: None,
             session_scene: Vec::new(),
             admission: AdmissionPolicy::open(),
+            admin: None,
+            health_thresholds: HealthThresholds::default(),
         }
     }
 
@@ -294,6 +303,7 @@ impl StreamServer {
                     frames: ring.total(),
                     qos_level,
                     window: ring.summary(ring.capacity()),
+                    probe: guard.probe_digest(),
                 }
             })
             .collect();
@@ -307,6 +317,89 @@ impl StreamServer {
     /// The scene registry (read access).
     pub fn registry(&self) -> &SceneRegistry {
         &self.registry
+    }
+
+    // ---- admin endpoint (live introspection plane, PR 10) ----------
+
+    /// Bind the admin HTTP endpoint. The `LSG_ADMIN=<addr>` env
+    /// override is applied on top of `config`; with the endpoint
+    /// disabled either way this is a no-op returning `None`. The
+    /// first snapshot is published immediately, then the caller keeps
+    /// it fresh with [`StreamServer::publish_admin`] at whatever cadence
+    /// suits it (scrapes between publishes serve the previous one).
+    pub fn enable_admin(
+        &mut self,
+        config: AdminConfig,
+    ) -> std::io::Result<Option<std::net::SocketAddr>> {
+        let config = config.from_env();
+        self.admin = AdminServer::start(&config)?;
+        let addr = self.admin.as_ref().map(|a| a.local_addr());
+        if addr.is_some() {
+            flight::install_panic_hook();
+            self.publish_admin();
+        }
+        Ok(addr)
+    }
+
+    /// The bound admin address (`None` when the endpoint is disabled).
+    pub fn admin_addr(&self) -> Option<std::net::SocketAddr> {
+        self.admin.as_ref().map(|a| a.local_addr())
+    }
+
+    /// Replace the health gates evaluated by
+    /// [`StreamServer::publish_admin`].
+    pub fn set_health_thresholds(&mut self, t: HealthThresholds) {
+        self.health_thresholds = t;
+    }
+
+    /// Render the current [`StreamServer::telemetry_snapshot`] into the
+    /// admin endpoint's published state (Prometheus text, snapshot JSON,
+    /// per-session digests) and evaluate the health gates. No-op when
+    /// the endpoint is disabled. Handler threads only ever read what
+    /// this published — an admin scrape can never touch a session lock.
+    pub fn publish_admin(&self) {
+        let Some(admin) = self.admin.as_ref() else {
+            return;
+        };
+        let snap = self.telemetry_snapshot();
+        let prometheus = snap.to_prometheus();
+        let json = snap.to_json();
+        let sessions_json = json
+            .get("sessions")
+            .cloned()
+            .unwrap_or_else(|| Json::Arr(Vec::new()))
+            .to_string_compact();
+        let health = self.evaluate_health(&snap);
+        admin.publish(prometheus, json.to_string_compact(), sessions_json, health);
+    }
+
+    /// Gate the snapshot against [`HealthThresholds`]: stalled-session
+    /// fraction, governor budget pressure, admission-ceiling fill.
+    fn evaluate_health(&self, snap: &TelemetrySnapshot) -> HealthReport {
+        let sessions = snap.sessions.len();
+        let stalled = snap
+            .sessions
+            .iter()
+            .filter(|s| s.window.stalled > 0)
+            .count();
+        let stalled_pm = if sessions > 0 {
+            (stalled * 1000 / sessions) as u32
+        } else {
+            0
+        };
+        let governor = self.registry.governor();
+        let budget = governor.budget_bytes();
+        let budget_pm = if budget > 0 && budget != usize::MAX {
+            ((governor.resident_bytes().saturating_mul(1000)) / budget as u64).min(u32::MAX as u64)
+                as u32
+        } else {
+            0
+        };
+        let session_fill_pm = match self.admission.max_sessions {
+            Some(max) if max > 0 => ((sessions * 1000) / max).min(u32::MAX as usize) as u32,
+            _ => 0,
+        };
+        HealthReport::evaluate(&self.health_thresholds, stalled_pm, budget_pm, session_fill_pm)
     }
 
     // ---- sessions --------------------------------------------------
@@ -410,6 +503,7 @@ impl StreamServer {
                 crate::telemetry::hub()
                     .qos_downtiered_sessions
                     .fetch_add(1, Ordering::Relaxed);
+                flight::note_admission(false, self.scheduler.num_sessions());
                 config.qos.start_level = config.qos.max_level.min(qos::MAX_LEVEL);
                 Ok(config)
             }
@@ -417,6 +511,7 @@ impl StreamServer {
                 crate::telemetry::hub()
                     .qos_rejected_sessions
                     .fetch_add(1, Ordering::Relaxed);
+                flight::note_admission(true, self.scheduler.num_sessions());
                 bail!(
                     "admission rejected: {} sessions at or over the ceiling {:?}",
                     self.scheduler.num_sessions(),

@@ -523,7 +523,13 @@ pub fn load_shards(
     for &id in ids {
         let assets = store
             .load(id)
-            .or_else(|_| store.load(id))
+            .or_else(|_| {
+                // Black box: record the first failure even when the
+                // retry rescues the load — a burst of these is exactly
+                // the early warning a post-mortem wants.
+                crate::telemetry::flight::note_shard_load_fail(id as u64);
+                store.load(id)
+            })
             .with_context(|| format!("loading shard {id} (after one retry)"))?;
         loaded.push((id, assets));
     }

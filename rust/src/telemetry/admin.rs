@@ -1,0 +1,558 @@
+//! Admin HTTP endpoint: the node's live introspection surface.
+//!
+//! A minimal, std-only HTTP/1.1 server (`std::net::TcpListener`, one
+//! accept thread + a small bounded handler pool) that exposes what the
+//! telemetry layer already computes — it performs **no** aggregation of
+//! its own and never takes a render-path lock. The serving tier
+//! ([`StreamServer::publish_admin`](crate::serve::StreamServer::publish_admin))
+//! periodically renders its snapshot into the endpoint's published
+//! state; handler threads serve those strings verbatim. A scrape
+//! therefore costs one small mutex clone, and a stalled or hostile
+//! client can never back-pressure the frame loop.
+//!
+//! Routes:
+//!
+//! | route                 | serves                                        |
+//! |-----------------------|-----------------------------------------------|
+//! | `GET /metrics`        | Prometheus exposition (last publish)          |
+//! | `GET /snapshot.json`  | full [`TelemetrySnapshot`] JSON               |
+//! | `GET /sessions`       | per-session ring digests + QoS level          |
+//! | `GET /healthz`        | liveness (503 on sustained overload)          |
+//! | `GET /readyz`         | readiness (budget / admission / stall gates)  |
+//! | `GET /flightrecord`   | black-box dump ([`flight::dump_json`])        |
+//! | `POST /trace/start`   | arm the span tracer (`?path=out.json`)        |
+//! | `POST /trace/stop`    | flush + disarm the tracer                     |
+//!
+//! Enable via [`AdminConfig`] (`enabled`, default **off**) or the
+//! `LSG_ADMIN=<addr>` env override; `docs/OBSERVABILITY.md` documents
+//! every route with curl examples.
+//!
+//! [`TelemetrySnapshot`]: crate::telemetry::TelemetrySnapshot
+
+use super::{flight, trace};
+use crate::util::json::Json;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Handler threads serving parsed connections.
+const HANDLER_THREADS: usize = 2;
+/// Accepted connections queued for a handler before new ones get 503.
+const QUEUE_DEPTH: usize = 8;
+/// Per-connection socket timeout (read and write).
+const IO_TIMEOUT: Duration = Duration::from_secs(2);
+/// Request head (request line + headers) size cap.
+const MAX_HEAD_BYTES: usize = 8 * 1024;
+
+/// Endpoint configuration. Disabled by default: enabling it binds a
+/// socket, which a render-only deployment should have to opt into.
+#[derive(Clone, Debug)]
+pub struct AdminConfig {
+    /// Bind address, e.g. `127.0.0.1:9151`. Port 0 picks an ephemeral
+    /// port (the bound address is reported by [`AdminServer::local_addr`]).
+    pub addr: String,
+    pub enabled: bool,
+}
+
+impl Default for AdminConfig {
+    fn default() -> AdminConfig {
+        AdminConfig {
+            addr: "127.0.0.1:0".to_string(),
+            enabled: false,
+        }
+    }
+}
+
+impl AdminConfig {
+    /// Apply the `LSG_ADMIN=<addr>` env override: when set (non-empty),
+    /// the endpoint is enabled on that address regardless of config.
+    pub fn from_env(mut self) -> AdminConfig {
+        if let Ok(addr) = std::env::var("LSG_ADMIN") {
+            if !addr.is_empty() {
+                self.addr = addr;
+                self.enabled = true;
+            }
+        }
+        self
+    }
+}
+
+/// Readiness/liveness gates, permille. A publish evaluates the node
+/// against these (see [`HealthReport::evaluate`]); the endpoint serves
+/// the verdict.
+#[derive(Clone, Copy, Debug)]
+pub struct HealthThresholds {
+    /// `/readyz` fails when resident bytes exceed this fraction of the
+    /// governor budget (residency pressure ⇒ imminent eviction storms).
+    pub max_budget_pm: u32,
+    /// `/readyz` fails when active sessions reach this fraction of the
+    /// admission ceiling (`max_sessions`); unlimited ceilings never trip.
+    pub max_session_fill_pm: u32,
+    /// `/readyz` fails when this fraction of sessions stalled within
+    /// their recent ring window.
+    pub max_stalled_pm: u32,
+    /// `/healthz` (liveness) fails only past this harsher stall bound —
+    /// the node is up but no longer meeting deadlines at all.
+    pub live_stalled_pm: u32,
+}
+
+impl Default for HealthThresholds {
+    fn default() -> HealthThresholds {
+        HealthThresholds {
+            max_budget_pm: 950,
+            max_session_fill_pm: 1000,
+            max_stalled_pm: 500,
+            live_stalled_pm: 900,
+        }
+    }
+}
+
+/// One evaluated health verdict, published alongside the snapshot.
+#[derive(Clone, Debug)]
+pub struct HealthReport {
+    /// Liveness: the node is serving frames sanely.
+    pub healthy: bool,
+    /// Readiness: the node can take more load.
+    pub ready: bool,
+    /// Human-readable reason for the first failed gate (empty when ok).
+    pub reason: String,
+    /// Observed stalled-session fraction, permille.
+    pub stalled_pm: u32,
+    /// Observed governor budget utilization, permille.
+    pub budget_pm: u32,
+    /// Observed admission fill (sessions / max_sessions), permille;
+    /// 0 when the ceiling is unlimited.
+    pub session_fill_pm: u32,
+}
+
+impl Default for HealthReport {
+    fn default() -> HealthReport {
+        HealthReport {
+            healthy: true,
+            ready: true,
+            reason: String::new(),
+            stalled_pm: 0,
+            budget_pm: 0,
+            session_fill_pm: 0,
+        }
+    }
+}
+
+impl HealthReport {
+    /// Gate the observed permille signals against `t`.
+    pub fn evaluate(
+        t: &HealthThresholds,
+        stalled_pm: u32,
+        budget_pm: u32,
+        session_fill_pm: u32,
+    ) -> HealthReport {
+        let mut r = HealthReport {
+            stalled_pm,
+            budget_pm,
+            session_fill_pm,
+            ..HealthReport::default()
+        };
+        if stalled_pm > t.live_stalled_pm {
+            r.healthy = false;
+            r.reason = format!(
+                "stalled-session fraction {stalled_pm}pm past liveness bound {}pm",
+                t.live_stalled_pm
+            );
+        }
+        if r.reason.is_empty() && stalled_pm > t.max_stalled_pm {
+            r.reason = format!(
+                "stalled-session fraction {stalled_pm}pm past {}pm",
+                t.max_stalled_pm
+            );
+        }
+        if r.reason.is_empty() && budget_pm > t.max_budget_pm {
+            r.reason = format!("governor budget {budget_pm}pm past {}pm", t.max_budget_pm);
+        }
+        if r.reason.is_empty() && session_fill_pm >= t.max_session_fill_pm && session_fill_pm > 0 {
+            r.reason = format!(
+                "admission fill {session_fill_pm}pm at ceiling {}pm",
+                t.max_session_fill_pm
+            );
+        }
+        r.ready = r.healthy && r.reason.is_empty();
+        r
+    }
+
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("healthy", self.healthy);
+        j.set("ready", self.ready);
+        j.set("reason", self.reason.as_str());
+        j.set("stalled_pm", self.stalled_pm as f64);
+        j.set("budget_pm", self.budget_pm as f64);
+        j.set("session_fill_pm", self.session_fill_pm as f64);
+        j
+    }
+}
+
+/// Snapshot strings the serving tier last published. Handlers clone the
+/// field they serve under a short lock; publishes replace wholesale.
+#[derive(Default)]
+struct Published {
+    prometheus: String,
+    snapshot_json: String,
+    sessions_json: String,
+    health: HealthReport,
+    seq: u64,
+}
+
+/// The running endpoint: accept thread + handler pool + published state.
+pub struct AdminServer {
+    addr: SocketAddr,
+    published: Arc<Mutex<Published>>,
+    requests: Arc<AtomicU64>,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    handlers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl AdminServer {
+    /// Bind and start serving. Returns `Ok(None)` when the config (after
+    /// any env override the caller applied) leaves the endpoint disabled.
+    pub fn start(config: &AdminConfig) -> std::io::Result<Option<AdminServer>> {
+        if !config.enabled {
+            return Ok(None);
+        }
+        let listener = TcpListener::bind(&config.addr)?;
+        let addr = listener.local_addr()?;
+        let published = Arc::new(Mutex::new(Published::default()));
+        let requests = Arc::new(AtomicU64::new(0));
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        let (tx, rx) = sync_channel::<TcpStream>(QUEUE_DEPTH);
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handlers = Vec::new();
+        for _ in 0..HANDLER_THREADS {
+            let rx = Arc::clone(&rx);
+            let published = Arc::clone(&published);
+            let requests = Arc::clone(&requests);
+            handlers.push(std::thread::spawn(move || handler_loop(&rx, &published, &requests)));
+        }
+
+        let accept = {
+            let shutdown = Arc::clone(&shutdown);
+            std::thread::spawn(move || accept_loop(&listener, &tx, &shutdown))
+        };
+
+        Ok(Some(AdminServer {
+            addr,
+            published,
+            requests,
+            shutdown,
+            accept: Some(accept),
+            handlers,
+        }))
+    }
+
+    /// The bound address (resolves port 0 to the actual ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Requests answered so far (all routes, including 404/503).
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    /// Replace the published introspection state. Called by the serving
+    /// tier after each `telemetry_snapshot()` render; scrapes between
+    /// publishes serve the previous snapshot.
+    pub fn publish(
+        &self,
+        prometheus: String,
+        snapshot_json: String,
+        sessions_json: String,
+        health: HealthReport,
+    ) {
+        let mut p = self.published.lock().unwrap();
+        p.prometheus = prometheus;
+        p.snapshot_json = snapshot_json;
+        p.sessions_json = sessions_json;
+        p.health = health;
+        p.seq += 1;
+    }
+}
+
+impl Drop for AdminServer {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Wake the blocking accept() with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // Accept thread dropped its sender; handlers drain and exit.
+        for h in self.handlers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(listener: &TcpListener, tx: &SyncSender<TcpStream>, shutdown: &AtomicBool) {
+    for stream in listener.incoming() {
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+        let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+        match tx.try_send(stream) {
+            Ok(()) => {}
+            Err(TrySendError::Full(mut s)) => {
+                // All handlers busy and the queue is full: shed the
+                // scrape instead of queueing unboundedly.
+                let _ = write_response(&mut s, 503, "text/plain", "overloaded\n");
+            }
+            Err(TrySendError::Disconnected(_)) => return,
+        }
+    }
+}
+
+fn handler_loop(
+    rx: &Mutex<Receiver<TcpStream>>,
+    published: &Mutex<Published>,
+    requests: &AtomicU64,
+) {
+    loop {
+        let stream = match rx.lock().unwrap().recv() {
+            Ok(s) => s,
+            Err(_) => return, // sender gone: shutting down
+        };
+        requests.fetch_add(1, Ordering::Relaxed);
+        let mut stream = stream;
+        let _ = handle_connection(&mut stream, published);
+    }
+}
+
+/// Parsed request head: method + path + query (body is ignored; no
+/// admin route consumes one).
+struct Request {
+    method: String,
+    path: String,
+    query: String,
+}
+
+fn read_request(stream: &mut TcpStream) -> std::io::Result<Option<Request>> {
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    loop {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        buf.extend_from_slice(&chunk[..n]);
+        if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() > MAX_HEAD_BYTES {
+            break;
+        }
+    }
+    let head = String::from_utf8_lossy(&buf);
+    let line = match head.lines().next() {
+        Some(l) => l,
+        None => return Ok(None),
+    };
+    let mut parts = line.split_whitespace();
+    let (method, target) = match (parts.next(), parts.next()) {
+        (Some(m), Some(t)) => (m.to_string(), t),
+        _ => return Ok(None),
+    };
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+    Ok(Some(Request {
+        method,
+        path,
+        query,
+    }))
+}
+
+fn handle_connection(stream: &mut TcpStream, published: &Mutex<Published>) -> std::io::Result<()> {
+    let req = match read_request(stream)? {
+        Some(r) => r,
+        None => return write_response(stream, 400, "text/plain", "bad request\n"),
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/metrics") => {
+            let (mut body, seq) = {
+                let p = published.lock().unwrap();
+                (p.prometheus.clone(), p.seq)
+            };
+            // Endpoint-own families, so the exposition is never empty —
+            // a scrape before the first publish still yields metrics.
+            let (events, anomalies, dumps) = flight::stats();
+            body.push_str(&format!(
+                "# TYPE lsg_admin_publish_seq gauge\nlsg_admin_publish_seq {seq}\n\
+                 # TYPE lsg_flight_events_total counter\nlsg_flight_events_total {events}\n\
+                 # TYPE lsg_flight_anomaly_triggers_total counter\n\
+                 lsg_flight_anomaly_triggers_total {anomalies}\n\
+                 # TYPE lsg_flight_dumps_total counter\nlsg_flight_dumps_total {dumps}\n"
+            ));
+            write_response(stream, 200, "text/plain; version=0.0.4", &body)
+        }
+        ("GET", "/snapshot.json") => {
+            let body = {
+                let p = published.lock().unwrap();
+                if p.seq == 0 {
+                    "{}".to_string()
+                } else {
+                    p.snapshot_json.clone()
+                }
+            };
+            write_response(stream, 200, "application/json", &body)
+        }
+        ("GET", "/sessions") => {
+            let body = {
+                let p = published.lock().unwrap();
+                if p.seq == 0 {
+                    "[]".to_string()
+                } else {
+                    p.sessions_json.clone()
+                }
+            };
+            write_response(stream, 200, "application/json", &body)
+        }
+        ("GET", "/healthz") => {
+            let (health, _seq) = {
+                let p = published.lock().unwrap();
+                (p.health.clone(), p.seq)
+            };
+            let body = health.to_json().to_string_compact();
+            // Liveness: answering at all is most of it; a published
+            // report of sustained overload flips it to 503.
+            let status = if health.healthy { 200 } else { 503 };
+            write_response(stream, status, "application/json", &body)
+        }
+        ("GET", "/readyz") => {
+            let (health, seq) = {
+                let p = published.lock().unwrap();
+                (p.health.clone(), p.seq)
+            };
+            if seq == 0 {
+                return write_response(
+                    stream,
+                    503,
+                    "application/json",
+                    "{\"ready\":false,\"reason\":\"no snapshot published yet\"}",
+                );
+            }
+            let body = health.to_json().to_string_compact();
+            let status = if health.ready { 200 } else { 503 };
+            write_response(stream, status, "application/json", &body)
+        }
+        ("GET", "/flightrecord") => {
+            let body = flight::dump_json().to_string_compact();
+            write_response(stream, 200, "application/json", &body)
+        }
+        ("POST", "/trace/start") => {
+            let path = req
+                .query
+                .split('&')
+                .find_map(|kv| kv.strip_prefix("path="))
+                .filter(|p| !p.is_empty())
+                .unwrap_or("lsg_admin_trace.json")
+                .to_string();
+            trace::start(&path);
+            flight::note_trace_toggle(true);
+            let mut j = Json::obj();
+            j.set("tracing", true);
+            j.set("path", path.as_str());
+            write_response(stream, 200, "application/json", &j.to_string_compact())
+        }
+        ("POST", "/trace/stop") => {
+            let written = trace::stop();
+            flight::note_trace_toggle(false);
+            let mut j = Json::obj();
+            j.set("tracing", false);
+            match &written {
+                Some(p) => j.set("written", p.to_string_lossy().as_ref()),
+                None => j.set("written", Json::Null),
+            }
+            write_response(stream, 200, "application/json", &j.to_string_compact())
+        }
+        _ => write_response(stream, 404, "text/plain", "not found\n"),
+    }
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        503 => "Service Unavailable",
+        _ => "OK",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_config_starts_nothing() {
+        let server = AdminServer::start(&AdminConfig::default()).unwrap();
+        assert!(server.is_none());
+    }
+
+    #[test]
+    fn health_gates_fire_in_order() {
+        let t = HealthThresholds::default();
+        let ok = HealthReport::evaluate(&t, 0, 0, 0);
+        assert!(ok.healthy && ok.ready && ok.reason.is_empty());
+
+        let stalled = HealthReport::evaluate(&t, 600, 0, 0);
+        assert!(stalled.healthy && !stalled.ready);
+        assert!(stalled.reason.contains("stalled"));
+
+        let dead = HealthReport::evaluate(&t, 950, 0, 0);
+        assert!(!dead.healthy && !dead.ready);
+
+        let squeezed = HealthReport::evaluate(&t, 0, 990, 0);
+        assert!(squeezed.healthy && !squeezed.ready);
+        assert!(squeezed.reason.contains("budget"));
+
+        let full = HealthReport::evaluate(&t, 0, 0, 1000);
+        assert!(full.healthy && !full.ready);
+        assert!(full.reason.contains("admission"));
+    }
+
+    #[test]
+    fn env_override_enables_and_retargets() {
+        // Read-only check of the combinator (no env mutation: tests in
+        // this binary run concurrently).
+        let cfg = AdminConfig {
+            addr: "127.0.0.1:7".into(),
+            enabled: false,
+        };
+        assert!(!cfg.enabled);
+        let on = AdminConfig {
+            enabled: true,
+            ..cfg.clone()
+        };
+        assert!(AdminServer::start(&AdminConfig::default()).unwrap().is_none());
+        assert_eq!(on.addr, "127.0.0.1:7");
+    }
+}

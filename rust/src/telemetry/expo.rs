@@ -10,7 +10,8 @@
 //! digests as `quantile`-labelled gauges).
 
 use super::hist::HistSummary;
-use super::hub::{hub, MetricsHub};
+use super::hub::{hub, MetricsHub, QUALITY_RUNGS};
+use super::probe::ProbeDigest;
 use super::ring::RingSummary;
 use crate::util::json::Json;
 use std::fmt::Write as _;
@@ -57,6 +58,14 @@ pub struct NodeTelemetry {
     pub qos_headroom_pm: HistSummary,
     /// Fraction of active tiles re-binned per plan-cache hit, permille.
     pub plan_rebin_pm: HistSummary,
+    /// Quality probes scored (dense reference rendered + compared).
+    pub probe_frames: u64,
+    /// Probes skipped for lack of idle pool capacity.
+    pub probe_skipped: u64,
+    /// Probe PSNR (served vs dense reference) per QoS rung, centi-dB.
+    pub probe_psnr_cdb: [HistSummary; QUALITY_RUNGS],
+    /// Probe SSIM per QoS rung, permille.
+    pub probe_ssim_pm: [HistSummary; QUALITY_RUNGS],
 }
 
 impl NodeTelemetry {
@@ -90,6 +99,10 @@ impl NodeTelemetry {
             load_ns_file: h.load_ns_file.summary(),
             qos_headroom_pm: h.qos_headroom_pm.summary(),
             plan_rebin_pm: h.plan_rebin_pm.summary(),
+            probe_frames: h.probe_frames.load(Ordering::Relaxed),
+            probe_skipped: h.probe_skipped.load(Ordering::Relaxed),
+            probe_psnr_cdb: std::array::from_fn(|r| h.probe_psnr_cdb[r].summary()),
+            probe_ssim_pm: std::array::from_fn(|r| h.probe_ssim_pm[r].summary()),
         }
     }
 }
@@ -126,6 +139,9 @@ pub struct SessionTelemetry {
     pub qos_level: u8,
     /// Aggregates over the ring window.
     pub window: RingSummary,
+    /// Online quality probe digest, when the session has scored probes
+    /// (`probe_interval > 0`; see [`probe`](crate::telemetry::probe)).
+    pub probe: Option<ProbeDigest>,
 }
 
 /// The full cross-layer aggregate; see module docs.
@@ -145,6 +161,18 @@ fn ns_hist_json(s: &HistSummary) -> Json {
         .set("p95_ms", ms(s.p95))
         .set("p99_ms", ms(s.p99))
         .set("max_ms", ms(s.max));
+    j
+}
+
+fn db_hist_json(s: &HistSummary) -> Json {
+    let db = |v: u64| v as f64 / 1e2;
+    let mut j = Json::obj();
+    j.set("count", s.count)
+        .set("mean_db", s.mean / 1e2)
+        .set("p50_db", db(s.p50))
+        .set("p95_db", db(s.p95))
+        .set("p99_db", db(s.p99))
+        .set("max_db", db(s.max));
     j
 }
 
@@ -207,6 +235,22 @@ impl TelemetrySnapshot {
             .set("masked_lane_fraction", ratio_hist_json(&n.masked_lane_pm))
             .set("load_ms_mem", ns_hist_json(&n.load_ns_mem))
             .set("load_ms_file", ns_hist_json(&n.load_ns_file));
+        let mut probe = Json::obj();
+        probe
+            .set("frames", n.probe_frames)
+            .set("skipped", n.probe_skipped);
+        let mut psnr = Json::obj();
+        let mut ssim = Json::obj();
+        for rung in 0..QUALITY_RUNGS {
+            if n.probe_psnr_cdb[rung].count > 0 {
+                psnr.set(&format!("rung{rung}"), db_hist_json(&n.probe_psnr_cdb[rung]));
+            }
+            if n.probe_ssim_pm[rung].count > 0 {
+                ssim.set(&format!("rung{rung}"), ratio_hist_json(&n.probe_ssim_pm[rung]));
+            }
+        }
+        probe.set("psnr_db_by_rung", psnr).set("ssim_by_rung", ssim);
+        node.set("probe", probe);
 
         let scenes: Vec<Json> = self
             .scenes
@@ -261,6 +305,12 @@ impl TelemetrySnapshot {
                 if let Some(scene) = se.scene {
                     j.set("scene", scene);
                 }
+                if let Some(p) = se.probe.filter(|p| p.frames > 0) {
+                    j.set("probe_frames", p.frames)
+                        .set("probe_psnr_mean_db", p.psnr_mean_db)
+                        .set("probe_psnr_min_db", p.psnr_min_db)
+                        .set("probe_ssim_mean", p.ssim_mean);
+                }
                 j
             })
             .collect();
@@ -290,9 +340,23 @@ impl TelemetrySnapshot {
             ("lsg_qos_downtiered_sessions_total", n.qos_downtiered_sessions),
             ("lsg_plan_cache_hits_total", n.plan_cache_hits),
             ("lsg_plan_cache_fallbacks_total", n.plan_cache_fallbacks),
+            ("lsg_probe_frames_total", n.probe_frames),
+            ("lsg_probe_skipped_total", n.probe_skipped),
         ] {
             let _ = writeln!(out, "# TYPE {name} counter");
             let _ = writeln!(out, "{name} {v}");
+        }
+        const CDB_TO_DB: f64 = 1e-2;
+        for rung in 0..QUALITY_RUNGS {
+            let labels = format!("rung=\"{rung}\"");
+            prom_hist(
+                &mut out,
+                "lsg_probe_psnr_db",
+                &labels,
+                &n.probe_psnr_cdb[rung],
+                CDB_TO_DB,
+            );
+            prom_hist(&mut out, "lsg_probe_ssim", &labels, &n.probe_ssim_pm[rung], 1e-3);
         }
         prom_hist(&mut out, "lsg_qos_headroom", "", &n.qos_headroom_pm, PM_TO_RATIO);
         prom_hist(&mut out, "lsg_plan_rebin_fraction", "", &n.plan_rebin_pm, PM_TO_RATIO);
@@ -358,6 +422,20 @@ impl TelemetrySnapshot {
                 w.warped_fraction_mean
             );
             let _ = writeln!(out, "lsg_session_imbalance{{{l}}} {:.6}", w.imbalance_mean);
+            if let Some(p) = se.probe.filter(|p| p.frames > 0) {
+                let _ = writeln!(out, "lsg_session_probe_frames_total{{{l}}} {}", p.frames);
+                let _ = writeln!(
+                    out,
+                    "lsg_session_probe_psnr_mean_db{{{l}}} {:.6}",
+                    p.psnr_mean_db
+                );
+                let _ = writeln!(
+                    out,
+                    "lsg_session_probe_psnr_min_db{{{l}}} {:.6}",
+                    p.psnr_min_db
+                );
+                let _ = writeln!(out, "lsg_session_probe_ssim_mean{{{l}}} {:.6}", p.ssim_mean);
+            }
         }
         out
     }
@@ -385,6 +463,9 @@ mod tests {
         hub.plan_cache_hits.fetch_add(12, Ordering::Relaxed);
         hub.plan_cache_fallbacks.fetch_add(4, Ordering::Relaxed);
         hub.plan_rebin_pm.record(250);
+        hub.record_probe(0, 3_400, 980); // 34 dB / 0.98 at full quality
+        hub.record_probe(2, 2_800, 910); // degraded rung pays in PSNR
+        hub.probe_skipped.fetch_add(1, Ordering::Relaxed);
         let class_hist = Histogram::new();
         for i in 1..=10u64 {
             class_hist.record(i * 100_000);
@@ -422,6 +503,12 @@ mod tests {
                 frames: ring.total(),
                 qos_level: 1,
                 window: ring.summary(64),
+                probe: Some(ProbeDigest {
+                    frames: 2,
+                    psnr_mean_db: 31.0,
+                    psnr_min_db: 28.0,
+                    ssim_mean: 0.945,
+                }),
             }],
         }
     }
@@ -458,6 +545,36 @@ mod tests {
         assert_eq!(node.get("plan_cache_fallbacks").and_then(Json::as_f64), Some(4.0));
         let rebin = node.get("plan_rebin_fraction").expect("plan_rebin_fraction digest");
         assert_eq!(rebin.get("p50").and_then(Json::as_f64), Some(0.25));
+        // Probe attribution: measured rungs present, unmeasured omitted.
+        let probe = node.get("probe").expect("probe section");
+        assert_eq!(probe.get("frames").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(probe.get("skipped").and_then(Json::as_f64), Some(1.0));
+        let psnr = probe.get("psnr_db_by_rung").unwrap();
+        let rung0_p50 = psnr
+            .get("rung0")
+            .unwrap()
+            .get("p50_db")
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!(
+            (30.0..40.0).contains(&rung0_p50),
+            "rung0 p50_db {rung0_p50} (recorded 34 dB, ≤1/8 bucket error)"
+        );
+        assert_eq!(
+            psnr.get("rung0").unwrap().get("mean_db").and_then(Json::as_f64),
+            Some(34.0),
+            "mean is exact"
+        );
+        assert!(psnr.get("rung2").is_some());
+        assert!(psnr.get("rung1").is_none(), "unmeasured rung omitted");
+        let ssim = probe.get("ssim_by_rung").unwrap();
+        assert_eq!(
+            ssim.get("rung0").unwrap().get("mean").and_then(Json::as_f64),
+            Some(0.98)
+        );
+        // Per-session probe digest rides the session object.
+        assert_eq!(s0.get("probe_frames").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(s0.get("probe_psnr_min_db").and_then(Json::as_f64), Some(28.0));
     }
 
     #[test]
@@ -484,11 +601,19 @@ mod tests {
             "lsg_plan_cache_hits_total 12",
             "lsg_plan_cache_fallbacks_total 4",
             "lsg_plan_rebin_fraction{quantile=\"0.5\"}",
+            "lsg_probe_frames_total 2",
+            "lsg_probe_skipped_total 1",
+            "lsg_probe_psnr_db{rung=\"0\",quantile=\"0.5\"}",
+            "lsg_probe_psnr_db{rung=\"2\",quantile=\"0.99\"}",
+            "lsg_probe_ssim{rung=\"0\",quantile=\"0.5\"}",
+            "lsg_session_probe_frames_total{session=\"0\"} 2",
+            "lsg_session_probe_psnr_mean_db{session=\"0\"} 31.0",
         ] {
             assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
         }
         // Unmeasured families stay silent (no NaN/zero-count spam).
         assert!(!text.contains("class=\"large\""));
+        assert!(!text.contains("rung=\"1\""), "unmeasured probe rung emitted");
         // Every line is `name{labels} value` or a comment.
         for line in text.lines() {
             assert!(

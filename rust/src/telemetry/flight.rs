@@ -1,0 +1,523 @@
+//! Black-box flight recorder: a process-global bounded event ring that
+//! is always on, so the last few seconds of node behavior can be
+//! reconstructed *after* something went wrong — without having had
+//! `LSG_TRACE` armed in advance.
+//!
+//! Design mirrors [`FrameRing`](crate::telemetry::FrameRing): a fixed
+//! [`FLIGHT_CAP`]-slot buffer of `Copy` events, overwritten in place
+//! (alloc-free steady state; the one-time buffer reservation happens on
+//! the first record). Producers are the paced scheduler (frame
+//! completions, sheds), the QoS controller (ladder transitions), the
+//! server admission gate, the residency governor (evictions), and the
+//! shard load path (failures) — each a single short mutex push, never
+//! on the session-lock or render-path critical sections.
+//!
+//! Three ways the box is opened:
+//! * **on demand** — `GET /flightrecord` on the admin endpoint renders
+//!   [`dump_json`];
+//! * **on panic** — [`install_panic_hook`] chains a hook that writes the
+//!   dump to the configured dump path before the process dies;
+//! * **on anomaly** — [`note_paced`] keeps a sliding window of paced
+//!   completions and auto-dumps when the window's p99 lateness breaches
+//!   [`ANOMALY_LATENESS_MULT`]× the pacing interval or a stall burst
+//!   exceeds [`ANOMALY_STALL_FRACTION`], rate-limited to one dump per
+//!   fresh window.
+//!
+//! The dump path comes from `LSG_FLIGHT_DUMP=<path>` (boot default) or
+//! [`set_dump_path`] at runtime; with no path configured, anomaly and
+//! panic triggers still record [`FlightKind::AnomalyTrigger`] events and
+//! bump counters, they just write no file.
+
+use crate::util::json::Json;
+use std::path::PathBuf;
+use std::sync::{Mutex, Once, OnceLock};
+use std::time::Instant;
+
+/// Ring capacity: enough for several seconds of a busy node (every paced
+/// frame is one event) while keeping the dump small enough to eyeball.
+pub const FLIGHT_CAP: usize = 2048;
+
+/// Sliding anomaly window, in paced completions.
+pub const ANOMALY_WINDOW: usize = 64;
+
+/// p99-lateness trigger: fires when the window's p99 lateness exceeds
+/// this multiple of the session's pacing interval.
+pub const ANOMALY_LATENESS_MULT: u64 = 4;
+
+/// Stall-burst trigger: fires when more than this fraction (permille)
+/// of the window stalled.
+pub const ANOMALY_STALL_FRACTION_PM: u64 = 500;
+
+/// Session id stamped on node-level events that have no session.
+pub const NO_SESSION: u32 = u32::MAX;
+
+/// What happened. Payload fields of [`FlightEvent`] are interpreted per
+/// kind (see [`FlightEvent::value`] / [`FlightEvent::aux`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlightKind {
+    /// Paced frame completion: `value` = step ns, `aux` = lateness ns,
+    /// `level` = QoS rung, `warped`/`stalled` flags.
+    Frame,
+    /// QoS ladder move: `level` = new rung, `aux` = old rung.
+    QosTransition,
+    /// Admission refused a session: `value` = active sessions.
+    AdmissionReject,
+    /// Admission admitted at the bottom rung: `value` = active sessions.
+    AdmissionDownTier,
+    /// Scheduler load shedding dropped queued poses: `value` = count.
+    Shed,
+    /// Governor evicted a shard: `session` = scene slot, `value` =
+    /// freed bytes.
+    GovernorEvict,
+    /// A shard store load failed (before retry): `value` = shard id.
+    ShardLoadFail,
+    /// The anomaly detector fired: `value` = window p99 lateness ns (or
+    /// stall count), `aux` = interval ns; `stalled` set for the
+    /// stall-burst trigger.
+    AnomalyTrigger,
+    /// Runtime tracing toggled via the admin endpoint: `warped` flag
+    /// reused as "now on".
+    TraceToggle,
+}
+
+impl FlightKind {
+    fn name(self) -> &'static str {
+        match self {
+            FlightKind::Frame => "frame",
+            FlightKind::QosTransition => "qos_transition",
+            FlightKind::AdmissionReject => "admission_reject",
+            FlightKind::AdmissionDownTier => "admission_down_tier",
+            FlightKind::Shed => "shed",
+            FlightKind::GovernorEvict => "governor_evict",
+            FlightKind::ShardLoadFail => "shard_load_fail",
+            FlightKind::AnomalyTrigger => "anomaly_trigger",
+            FlightKind::TraceToggle => "trace_toggle",
+        }
+    }
+}
+
+/// One ring slot. `Copy`, fixed size, no heap.
+#[derive(Clone, Copy, Debug)]
+pub struct FlightEvent {
+    /// Monotone per-process sequence number (total events ever recorded
+    /// reaches `seq + 1` at this event).
+    pub seq: u64,
+    /// Nanoseconds since the recorder's first event.
+    pub ts_ns: u64,
+    pub kind: FlightKind,
+    /// Session (or scene slot for governor events); [`NO_SESSION`] for
+    /// node-level events.
+    pub session: u32,
+    /// Primary payload, kind-specific (see [`FlightKind`]).
+    pub value: u64,
+    /// Secondary payload, kind-specific.
+    pub aux: u64,
+    /// QoS rung where meaningful.
+    pub level: u8,
+    pub warped: bool,
+    pub stalled: bool,
+}
+
+struct FlightInner {
+    buf: Vec<FlightEvent>,
+    next: usize,
+    len: usize,
+    total: u64,
+    // Anomaly sliding window (paced completions).
+    window_lateness: [u64; ANOMALY_WINDOW],
+    window_stalled: [bool; ANOMALY_WINDOW],
+    window_next: usize,
+    window_filled: usize,
+    anomaly_triggers: u64,
+    dumps_written: u64,
+}
+
+impl FlightInner {
+    const fn new() -> FlightInner {
+        FlightInner {
+            buf: Vec::new(),
+            next: 0,
+            len: 0,
+            total: 0,
+            window_lateness: [0; ANOMALY_WINDOW],
+            window_stalled: [false; ANOMALY_WINDOW],
+            window_next: 0,
+            window_filled: 0,
+            anomaly_triggers: 0,
+            dumps_written: 0,
+        }
+    }
+
+    fn push(&mut self, mut ev: FlightEvent) {
+        if self.buf.capacity() == 0 {
+            // One-time reservation; every later push overwrites in place.
+            self.buf.reserve_exact(FLIGHT_CAP);
+        }
+        ev.seq = self.total;
+        self.total += 1;
+        if self.len < FLIGHT_CAP {
+            self.buf.push(ev);
+            self.len += 1;
+        } else {
+            self.buf[self.next] = ev;
+        }
+        self.next = (self.next + 1) % FLIGHT_CAP;
+    }
+
+    /// Events oldest-first.
+    fn iter_ordered(&self) -> impl Iterator<Item = &FlightEvent> {
+        let start = if self.len < FLIGHT_CAP { 0 } else { self.next };
+        (0..self.len).map(move |i| &self.buf[(start + i) % self.len.max(1)])
+    }
+}
+
+static FLIGHT: Mutex<FlightInner> = Mutex::new(FlightInner::new());
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static DUMP_PATH: Mutex<Option<String>> = Mutex::new(None);
+static DUMP_PATH_ENV: Once = Once::new();
+static PANIC_HOOK: Once = Once::new();
+
+fn now_ns() -> u64 {
+    EPOCH
+        .get_or_init(Instant::now)
+        .elapsed()
+        .as_nanos() as u64
+}
+
+fn event(kind: FlightKind, session: u32) -> FlightEvent {
+    FlightEvent {
+        seq: 0, // stamped by push
+        ts_ns: now_ns(),
+        kind,
+        session,
+        value: 0,
+        aux: 0,
+        level: 0,
+        warped: false,
+        stalled: false,
+    }
+}
+
+/// Record an arbitrary event. The cheap producers below are preferred;
+/// this is the escape hatch for one-off sites.
+pub fn record(ev: FlightEvent) {
+    if let Ok(mut f) = FLIGHT.lock() {
+        f.push(ev);
+    }
+}
+
+/// Paced frame completion (the scheduler's per-commit hook). Also feeds
+/// the anomaly window; returns `true` when this observation fired the
+/// anomaly trigger (and the auto-dump, when a dump path is configured).
+pub fn note_paced(
+    session: u32,
+    step_ns: u64,
+    lateness_ns: u64,
+    interval_ns: u64,
+    warped: bool,
+    stalled: bool,
+    level: u8,
+) -> bool {
+    let mut fired = false;
+    let mut dump_path: Option<String> = None;
+    if let Ok(mut f) = FLIGHT.lock() {
+        let mut ev = event(FlightKind::Frame, session);
+        ev.value = step_ns;
+        ev.aux = lateness_ns;
+        ev.level = level;
+        ev.warped = warped;
+        ev.stalled = stalled;
+        f.push(ev);
+
+        let i = f.window_next;
+        f.window_lateness[i] = lateness_ns;
+        f.window_stalled[i] = stalled;
+        f.window_next = (f.window_next + 1) % ANOMALY_WINDOW;
+        f.window_filled += 1;
+        // Rate limit: only judge (and reset) on a full fresh window, so
+        // one sustained incident produces one dump per window, not one
+        // per frame.
+        if f.window_filled >= ANOMALY_WINDOW && interval_ns > 0 {
+            f.window_filled = 0;
+            let mut lat = f.window_lateness;
+            lat.sort_unstable();
+            let p99 = lat[(ANOMALY_WINDOW * 99).div_ceil(100).min(ANOMALY_WINDOW) - 1];
+            let stalls = f.window_stalled.iter().filter(|&&s| s).count() as u64;
+            let stall_burst = stalls * 1000 > ANOMALY_STALL_FRACTION_PM * ANOMALY_WINDOW as u64;
+            let late_breach = p99 > ANOMALY_LATENESS_MULT * interval_ns;
+            if late_breach || stall_burst {
+                fired = true;
+                f.anomaly_triggers += 1;
+                let mut ev = event(FlightKind::AnomalyTrigger, session);
+                ev.value = if late_breach { p99 } else { stalls };
+                ev.aux = interval_ns;
+                ev.stalled = stall_burst && !late_breach;
+                f.push(ev);
+                dump_path = configured_dump_path();
+            }
+        }
+    }
+    if fired {
+        if let Some(path) = dump_path {
+            let _ = dump_to(&path);
+        }
+    }
+    fired
+}
+
+/// QoS ladder transition.
+pub fn note_qos_transition(session: u32, from: u8, to: u8) {
+    let mut ev = event(FlightKind::QosTransition, session);
+    ev.level = to;
+    ev.aux = from as u64;
+    record(ev);
+}
+
+/// Admission decision that bounded the node (reject or down-tier).
+pub fn note_admission(rejected: bool, active_sessions: usize) {
+    let kind = if rejected {
+        FlightKind::AdmissionReject
+    } else {
+        FlightKind::AdmissionDownTier
+    };
+    let mut ev = event(kind, NO_SESSION);
+    ev.value = active_sessions as u64;
+    record(ev);
+}
+
+/// Scheduler load shedding dropped `count` queued poses of `session`.
+pub fn note_shed(session: u32, count: u64) {
+    let mut ev = event(FlightKind::Shed, session);
+    ev.value = count;
+    record(ev);
+}
+
+/// Governor evicted a shard from scene slot `slot`, freeing `bytes`.
+pub fn note_governor_evict(slot: u32, bytes: u64) {
+    let mut ev = event(FlightKind::GovernorEvict, slot);
+    ev.value = bytes;
+    record(ev);
+}
+
+/// A shard store load failed (first attempt; the caller retries once).
+pub fn note_shard_load_fail(shard_id: u64) {
+    let mut ev = event(FlightKind::ShardLoadFail, NO_SESSION);
+    ev.value = shard_id;
+    record(ev);
+}
+
+/// Runtime trace toggle (admin endpoint).
+pub fn note_trace_toggle(on: bool) {
+    let mut ev = event(FlightKind::TraceToggle, NO_SESSION);
+    ev.warped = on;
+    record(ev);
+}
+
+/// Lifetime `(events, anomaly_triggers, dumps_written)`.
+pub fn stats() -> (u64, u64, u64) {
+    FLIGHT
+        .lock()
+        .map(|f| (f.total, f.anomaly_triggers, f.dumps_written))
+        .unwrap_or((0, 0, 0))
+}
+
+/// Reset the anomaly sliding window to empty (test/diagnostic hook —
+/// the window is process-global, so a test asserting exact trigger
+/// behavior clears residue from unrelated paced activity first). The
+/// event ring and counters are untouched.
+pub fn reset_anomaly_window() {
+    if let Ok(mut f) = FLIGHT.lock() {
+        f.window_lateness = [0; ANOMALY_WINDOW];
+        f.window_stalled = [false; ANOMALY_WINDOW];
+        f.window_next = 0;
+        f.window_filled = 0;
+    }
+}
+
+/// Set (or clear) the auto-dump path at runtime, overriding the
+/// `LSG_FLIGHT_DUMP` boot default. Tests use this to avoid process-wide
+/// env races.
+pub fn set_dump_path(path: Option<&str>) {
+    latch_env_dump_path();
+    *DUMP_PATH.lock().unwrap() = path.map(str::to_string);
+}
+
+fn latch_env_dump_path() {
+    DUMP_PATH_ENV.call_once(|| {
+        if let Ok(p) = std::env::var("LSG_FLIGHT_DUMP") {
+            if !p.is_empty() {
+                *DUMP_PATH.lock().unwrap() = Some(p);
+            }
+        }
+    });
+}
+
+/// The path anomaly/panic dumps write to, if any.
+pub fn configured_dump_path() -> Option<String> {
+    latch_env_dump_path();
+    DUMP_PATH.lock().ok()?.clone()
+}
+
+/// Render the ring as a JSON document (oldest event first). Allocates;
+/// strictly off the render path.
+pub fn dump_json() -> Json {
+    let mut doc = Json::obj();
+    let mut events = Vec::new();
+    if let Ok(f) = FLIGHT.lock() {
+        doc.set("total_events", f.total)
+            .set("dropped_events", f.total - f.len as u64)
+            .set("anomaly_triggers", f.anomaly_triggers)
+            .set("dumps_written", f.dumps_written);
+        for e in f.iter_ordered() {
+            let mut j = Json::obj();
+            j.set("seq", e.seq)
+                .set("t_ms", e.ts_ns as f64 / 1e6)
+                .set("kind", e.kind.name());
+            if e.session != NO_SESSION {
+                j.set("session", e.session as u64);
+            }
+            match e.kind {
+                FlightKind::Frame => {
+                    j.set("step_ms", e.value as f64 / 1e6)
+                        .set("lateness_ms", e.aux as f64 / 1e6)
+                        .set("qos_level", e.level as u64)
+                        .set("warped", e.warped)
+                        .set("stalled", e.stalled);
+                }
+                FlightKind::QosTransition => {
+                    j.set("from_level", e.aux).set("to_level", e.level as u64);
+                }
+                FlightKind::AdmissionReject | FlightKind::AdmissionDownTier => {
+                    j.set("active_sessions", e.value);
+                }
+                FlightKind::Shed => {
+                    j.set("dropped_poses", e.value);
+                }
+                FlightKind::GovernorEvict => {
+                    j.set("scene", e.session as u64).set("freed_bytes", e.value);
+                }
+                FlightKind::ShardLoadFail => {
+                    j.set("shard", e.value);
+                }
+                FlightKind::AnomalyTrigger => {
+                    j.set("interval_ms", e.aux as f64 / 1e6).set(
+                        if e.stalled { "window_stalls" } else { "p99_lateness_ms" },
+                        if e.stalled {
+                            Json::Num(e.value as f64)
+                        } else {
+                            Json::Num(e.value as f64 / 1e6)
+                        },
+                    );
+                }
+                FlightKind::TraceToggle => {
+                    j.set("tracing_on", e.warped);
+                }
+            }
+            events.push(j);
+        }
+    }
+    doc.set("events", Json::Arr(events));
+    doc
+}
+
+/// Write [`dump_json`] to `path` (pretty-printed) and count the dump.
+pub fn dump_to(path: &str) -> std::io::Result<PathBuf> {
+    let doc = dump_json();
+    std::fs::write(path, doc.to_string_pretty())?;
+    if let Ok(mut f) = FLIGHT.lock() {
+        f.dumps_written += 1;
+    }
+    Ok(PathBuf::from(path))
+}
+
+/// Install a panic hook that writes the flight record to the configured
+/// dump path before unwinding continues (chains the previous hook).
+/// Idempotent; a no-op panic-time when no dump path is configured.
+pub fn install_panic_hook() {
+    PANIC_HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if let Some(path) = configured_dump_path() {
+                let _ = dump_to(&path);
+            }
+            prev(info);
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The ring is process-global and other tests in this binary may
+    // record concurrently, so assertions are monotone (counts only grow)
+    // or keyed by the distinct payloads this test writes.
+
+    #[test]
+    fn ring_overwrites_in_place_and_keeps_order() {
+        let (total_before, _, _) = stats();
+        for i in 0..(FLIGHT_CAP as u64 + 10) {
+            note_shed(7_777, i);
+        }
+        let (total, _, _) = stats();
+        assert!(total - total_before >= FLIGHT_CAP as u64 + 10);
+        let doc = dump_json();
+        let events = doc.get("events").and_then(Json::as_arr).unwrap();
+        assert!(events.len() <= FLIGHT_CAP);
+        // Our shed events appear in increasing payload order.
+        let mine: Vec<f64> = events
+            .iter()
+            .filter(|e| {
+                e.str_or("kind", "") == "shed"
+                    && e.f64_or("session", -1.0) == 7_777.0
+            })
+            .map(|e| e.f64_or("dropped_poses", -1.0))
+            .collect();
+        assert!(mine.len() > 2);
+        assert!(mine.windows(2).all(|w| w[0] < w[1]), "ring order broken");
+        // seq is monotone across the whole dump.
+        let seqs: Vec<f64> = events.iter().map(|e| e.f64_or("seq", -1.0)).collect();
+        assert!(seqs.windows(2).all(|w| w[0] < w[1]), "seq order broken");
+    }
+
+    // Exact anomaly-trigger behavior (one trigger per full dirty
+    // window, none on clean windows) is asserted in `rust/tests/admin.rs`
+    // where no other paced traffic shares the process-global window —
+    // this binary's scheduler unit tests pace real sessions concurrently.
+    #[test]
+    fn note_paced_records_frame_events() {
+        let (total_before, _, _) = stats();
+        note_paced(11, 2_000_000, 0, 33_000_000, true, false, 1);
+        let (total, _, _) = stats();
+        assert!(total > total_before);
+        let doc = dump_json();
+        let events = doc.get("events").and_then(Json::as_arr).unwrap();
+        assert!(events
+            .iter()
+            .any(|e| e.str_or("kind", "") == "frame" && e.f64_or("session", -1.0) == 11.0));
+    }
+
+    #[test]
+    fn dump_round_trips_through_the_parser() {
+        note_qos_transition(3, 0, 1);
+        note_admission(true, 9);
+        note_governor_evict(1, 4096);
+        note_shard_load_fail(17);
+        note_trace_toggle(true);
+        let text = dump_json().to_string_pretty();
+        let parsed = Json::parse(&text).expect("flight dump parses");
+        let events = parsed.get("events").and_then(Json::as_arr).unwrap();
+        for kind in [
+            "qos_transition",
+            "admission_reject",
+            "governor_evict",
+            "shard_load_fail",
+            "trace_toggle",
+        ] {
+            assert!(
+                events.iter().any(|e| e.str_or("kind", "") == kind),
+                "missing {kind} event in dump"
+            );
+        }
+    }
+}

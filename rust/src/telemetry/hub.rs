@@ -65,7 +65,22 @@ pub struct MetricsHub {
     pub plan_cache_fallbacks: AtomicU64,
     /// Per plan-cache hit: fraction of active tiles re-binned, permille.
     pub plan_rebin_pm: Histogram,
+    /// Quality probes scored (dense reference rendered + compared).
+    pub probe_frames: AtomicU64,
+    /// Probes skipped because the pool had no idle capacity.
+    pub probe_skipped: AtomicU64,
+    /// Probe PSNR of served vs dense-reference frames, centi-dB
+    /// (34.17 dB records as 3417), attributed to the QoS rung the
+    /// session occupied when the frame was served.
+    pub probe_psnr_cdb: [Histogram; QUALITY_RUNGS],
+    /// Probe SSIM, permille, per QoS rung.
+    pub probe_ssim_pm: [Histogram; QUALITY_RUNGS],
 }
+
+/// Number of QoS ladder rungs the probe histograms attribute quality
+/// to. Must equal `serve::qos::LADDER.len()` — asserted by a unit test
+/// on the qos side (the hub cannot depend on `serve`).
+pub const QUALITY_RUNGS: usize = 4;
 
 impl MetricsHub {
     pub const fn new() -> MetricsHub {
@@ -92,7 +107,20 @@ impl MetricsHub {
             plan_cache_hits: AtomicU64::new(0),
             plan_cache_fallbacks: AtomicU64::new(0),
             plan_rebin_pm: Histogram::new(),
+            probe_frames: AtomicU64::new(0),
+            probe_skipped: AtomicU64::new(0),
+            probe_psnr_cdb: [const { Histogram::new() }; QUALITY_RUNGS],
+            probe_ssim_pm: [const { Histogram::new() }; QUALITY_RUNGS],
         }
+    }
+
+    /// Record one scored quality probe, attributed to QoS rung `level`.
+    #[inline]
+    pub fn record_probe(&self, level: u8, psnr_cdb: u64, ssim_pm: u64) {
+        let rung = (level as usize).min(QUALITY_RUNGS - 1);
+        self.probe_frames.fetch_add(1, Ordering::Relaxed);
+        self.probe_psnr_cdb[rung].record(psnr_cdb);
+        self.probe_ssim_pm[rung].record(ssim_pm);
     }
 
     /// Record one committed frame (every `StreamSession::step`).

@@ -13,7 +13,19 @@
 //!   [`FrameRecord`]s with windowed queries.
 //! * [`trace`] — `LSG_TRACE=<path>` scoped [`span`]s over the real
 //!   pipeline stages, flushed as Perfetto-loadable JSON; one relaxed
-//!   atomic load per span when disabled.
+//!   atomic load per span when disabled. Runtime-toggleable since PR 10
+//!   ([`start_trace`]/[`stop_trace`], driven by `POST /trace/start|stop`).
+//!
+//! PR 10 adds the live introspection plane on top:
+//!
+//! * [`flight`] — a process-global black-box ring of recent frame
+//!   summaries + discrete node events, dumped as JSON on demand, from a
+//!   panic hook, or when an anomaly trigger fires.
+//! * [`probe`] — online served-vs-dense-reference PSNR/SSIM scoring on
+//!   idle pool capacity, attributed per QoS rung.
+//! * [`admin`] — a std-only HTTP/1.1 admin endpoint (`LSG_ADMIN=addr`)
+//!   serving `/metrics`, `/snapshot.json`, `/healthz`, `/readyz`,
+//!   `/sessions`, `/flightrecord`, and the trace toggle.
 //!
 //! Read-side aggregation lives in [`expo`]:
 //! [`StreamServer::telemetry_snapshot`](crate::serve::StreamServer::telemetry_snapshot)
@@ -41,16 +53,24 @@
 //! assert!(node.frame_ns.count >= 1);
 //! ```
 
+pub mod admin;
 pub mod expo;
+pub mod flight;
 pub mod hist;
 pub mod hub;
+pub mod probe;
 pub mod ring;
 pub mod trace;
 
+pub use admin::{AdminConfig, AdminServer, HealthReport, HealthThresholds};
 pub use expo::{
     NodeTelemetry, SceneTelemetry, SessionTelemetry, TelemetrySnapshot, SIZE_CLASS_LABELS,
 };
 pub use hist::{HistSummary, Histogram, LocalHistogram};
-pub use hub::{hub, MetricsHub};
+pub use hub::{hub, MetricsHub, QUALITY_RUNGS};
+pub use probe::{ProbeDigest, QualityProbe};
 pub use ring::{FrameRecord, FrameRing, RingSummary, DEFAULT_RING_CAP};
-pub use trace::{complete, complete_on, flush as flush_trace, span, Span, SCHED_TRACK_BASE};
+pub use trace::{
+    complete, complete_on, flush as flush_trace, span, start as start_trace, stop as stop_trace,
+    Span, SCHED_TRACK_BASE,
+};

@@ -1,0 +1,258 @@
+//! Online quality probes: score what the node actually served.
+//!
+//! The QoS ladder (`serve/qos.rs`, PR 8) senses *lateness* and trades
+//! quality for deadline headroom — but until this PR the quality side of
+//! that trade was only priced offline in the bench. A [`QualityProbe`]
+//! closes the gap at runtime: every Nth **warped** frame (configurable
+//! `probe_interval` on [`CoordinatorConfig`](crate::coordinator::CoordinatorConfig),
+//! default 0 = off), it copies the served RGB, then — on a worker-pool
+//! job, off the session thread — renders the dense reference into a
+//! dedicated probe scratch and scores PSNR + SSIM (the [`crate::metrics`]
+//! implementations) of served vs reference. Scores feed the hub's
+//! per-QoS-rung histograms
+//! ([`MetricsHub::record_probe`](crate::telemetry::MetricsHub::record_probe)) so the
+//! snapshot and both exposition writers can attribute visual quality to
+//! the ladder rung that produced it.
+//!
+//! Design constraints, in order:
+//!
+//! * **Default off, bit-parity preserved.** With `probe_interval = 0`
+//!   the session never constructs a probe; the step path pays one
+//!   `Option` branch. The zero-alloc steady-state test runs the default
+//!   config and is unaffected.
+//! * **Never stall the serving path.** At most one probe is in flight
+//!   (an atomic latch); a probe only launches when the pool reports
+//!   idle capacity. Busy node ⇒ probes are *skipped* (counted in
+//!   `probe_skipped`), never queued behind frame work.
+//! * **Alloc-light.** The probe renderer, reference [`Frame`],
+//!   [`FrameScratch`] and the served-RGB copy buffer are persistent;
+//!   a firing probe allocates only the boxed pool job. Non-firing
+//!   warped frames cost a counter increment.
+//!
+//! The dense reference is rendered through the same
+//! [`Renderer::execute`] pipeline with the session's *base* config, so
+//! the probe measures exactly the reference the warp approximates
+//! (paper Sec. VI-B's PSNR-vs-dense methodology, moved online).
+
+use crate::render::{Frame, FrameScratch, RenderPass, Renderer};
+use crate::scene::Pose;
+use crate::telemetry::hub;
+use crate::util::pool::WorkerPool;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// PSNR is clamped here before scaling to centi-dB: identical frames
+/// would otherwise score +inf.
+const PSNR_CAP_DB: f64 = 99.0;
+
+/// Per-session digest of every probe scored so far — the compact view
+/// carried by [`SessionTelemetry`](crate::telemetry::SessionTelemetry)
+/// and printed by `examples/edge_fleet.rs`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ProbeDigest {
+    /// Probes scored (not skipped).
+    pub frames: u64,
+    /// Mean PSNR (dB) of served vs dense reference.
+    pub psnr_mean_db: f64,
+    /// Worst PSNR (dB) observed.
+    pub psnr_min_db: f64,
+    /// Mean SSIM of served vs dense reference.
+    pub ssim_mean: f64,
+}
+
+#[derive(Default)]
+struct DigestAccum {
+    frames: u64,
+    psnr_sum_db: f64,
+    psnr_min_db: f64,
+    ssim_sum: f64,
+}
+
+/// Everything the async probe job needs, behind one mutex: its own
+/// renderer clone (shares scene + pool with the session), persistent
+/// reference frame + scratch, and the copied served RGB + pose + rung.
+struct ProbeState {
+    renderer: Renderer,
+    reference: Frame,
+    scratch: FrameScratch,
+    served: Vec<f32>,
+    pose: Pose,
+    level: u8,
+}
+
+/// Asynchronous served-vs-reference quality scorer for one session.
+pub struct QualityProbe {
+    /// Score every Nth warped frame (≥ 1 once constructed).
+    interval: u64,
+    warped_seen: u64,
+    pool: Arc<WorkerPool>,
+    /// At most one probe render in flight; `swap` is the launch gate.
+    inflight: Arc<AtomicBool>,
+    state: Arc<Mutex<ProbeState>>,
+    accum: Arc<Mutex<DigestAccum>>,
+}
+
+impl QualityProbe {
+    /// Build a probe over the session's renderer. The clone shares the
+    /// scene handle and worker pool; buffers are allocated up front so
+    /// steady-state probing reuses them.
+    pub fn new(interval: usize, renderer: &Renderer) -> QualityProbe {
+        let (w, h) = (renderer.intrinsics().width, renderer.intrinsics().height);
+        let renderer = renderer.clone();
+        let pool = renderer.worker_pool();
+        QualityProbe {
+            interval: interval.max(1) as u64,
+            warped_seen: 0,
+            pool,
+            inflight: Arc::new(AtomicBool::new(false)),
+            state: Arc::new(Mutex::new(ProbeState {
+                renderer,
+                reference: Frame::new(w, h),
+                scratch: FrameScratch::new(),
+                served: Vec::with_capacity(w * h * 3),
+                pose: Pose::IDENTITY,
+                level: 0,
+            })),
+            accum: Arc::new(Mutex::new(DigestAccum::default())),
+        }
+    }
+
+    /// Observe one served warped frame; every `interval`th call tries to
+    /// launch a probe. Skips (and counts the skip) when a probe is
+    /// already in flight or the pool has no idle worker — the serving
+    /// path is never made to wait on quality accounting.
+    pub fn observe_warped(&mut self, served: &Frame, pose: &Pose, level: u8) {
+        self.warped_seen += 1;
+        if self.warped_seen % self.interval != 0 {
+            return;
+        }
+        if self.inflight.swap(true, Ordering::AcqRel) {
+            hub().probe_skipped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        if self.pool.idle_capacity() == 0 {
+            self.inflight.store(false, Ordering::Release);
+            hub().probe_skipped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        {
+            let mut st = self.state.lock().unwrap();
+            st.served.clear();
+            st.served.extend_from_slice(&served.rgb);
+            st.pose = *pose;
+            st.level = level;
+        }
+        let state = Arc::clone(&self.state);
+        let accum = Arc::clone(&self.accum);
+        let inflight = Arc::clone(&self.inflight);
+        self.pool.submit(move || {
+            score_probe(&state, &accum);
+            inflight.store(false, Ordering::Release);
+        });
+    }
+
+    /// Digest of every probe scored so far (all-zero before the first).
+    pub fn digest(&self) -> ProbeDigest {
+        let a = self.accum.lock().unwrap();
+        if a.frames == 0 {
+            return ProbeDigest::default();
+        }
+        ProbeDigest {
+            frames: a.frames,
+            psnr_mean_db: a.psnr_sum_db / a.frames as f64,
+            psnr_min_db: a.psnr_min_db,
+            ssim_mean: a.ssim_sum / a.frames as f64,
+        }
+    }
+
+    /// Spin until no probe is in flight (tests / example shutdown).
+    pub fn drain(&self) {
+        while self.inflight.load(Ordering::Acquire) {
+            std::thread::yield_now();
+        }
+    }
+}
+
+/// The pool-side half: render the dense reference and score it against
+/// the copied served frame, feeding the hub and the digest accumulator.
+/// Nested `parallel_for` inside a boxed pool job is safe — it falls back
+/// inline when the gang is busy (`util/pool.rs`).
+fn score_probe(state: &Mutex<ProbeState>, accum: &Mutex<DigestAccum>) {
+    let mut guard = state.lock().unwrap();
+    let st = &mut *guard;
+    let pose = st.pose;
+    st.renderer
+        .execute(&pose, &mut st.reference, RenderPass::Dense, &mut st.scratch);
+    let (w, h) = (st.reference.width, st.reference.height);
+    let psnr_db = crate::metrics::psnr(&st.served, &st.reference.rgb).clamp(0.0, PSNR_CAP_DB);
+    let ssim = crate::metrics::ssim(&st.served, &st.reference.rgb, w, h).clamp(0.0, 1.0);
+    hub().record_probe(
+        st.level,
+        (psnr_db * 100.0).round() as u64,
+        (ssim * 1000.0).round() as u64,
+    );
+    drop(guard);
+    let mut a = accum.lock().unwrap();
+    a.frames += 1;
+    a.psnr_sum_db += psnr_db;
+    a.psnr_min_db = if a.frames == 1 {
+        psnr_db
+    } else {
+        a.psnr_min_db.min(psnr_db)
+    };
+    a.ssim_sum += ssim;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scene::generate;
+
+    #[test]
+    fn probe_scores_identical_frames_at_the_cap() {
+        let scene = generate("probe_unit", 0.05, 48, 48);
+        let renderer =
+            Renderer::from_assets(std::sync::Arc::new(crate::scene::SceneAssets::from_scene(&scene)));
+        let pose = scene.sample_poses(1)[0];
+        let (frame, _) = renderer.render(&pose);
+
+        let mut probe = QualityProbe::new(1, &renderer);
+        let before = hub().probe_frames.load(Ordering::Relaxed);
+        probe.observe_warped(&frame, &pose, 2);
+        probe.drain();
+        probe.pool.wait_idle();
+        assert!(hub().probe_frames.load(Ordering::Relaxed) > before);
+
+        let d = probe.digest();
+        assert_eq!(d.frames, 1);
+        // Served == reference: PSNR saturates at the cap, SSIM at 1.
+        assert!(
+            d.psnr_mean_db > 90.0 && d.ssim_mean > 0.99,
+            "identical-frame probe scored psnr={} ssim={}",
+            d.psnr_mean_db,
+            d.ssim_mean
+        );
+        assert_eq!(d.psnr_min_db, d.psnr_mean_db);
+    }
+
+    #[test]
+    fn interval_gates_launches() {
+        let scene = generate("probe_gate", 0.05, 48, 48);
+        let renderer =
+            Renderer::from_assets(std::sync::Arc::new(crate::scene::SceneAssets::from_scene(&scene)));
+        let pose = scene.sample_poses(1)[0];
+        let (frame, _) = renderer.render(&pose);
+
+        let mut probe = QualityProbe::new(4, &renderer);
+        for _ in 0..3 {
+            probe.observe_warped(&frame, &pose, 0);
+        }
+        probe.drain();
+        probe.pool.wait_idle();
+        assert_eq!(probe.digest().frames, 0, "interval 4 must not fire in 3 frames");
+        probe.observe_warped(&frame, &pose, 0);
+        probe.drain();
+        probe.pool.wait_idle();
+        assert_eq!(probe.digest().frames, 1);
+    }
+}

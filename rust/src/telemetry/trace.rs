@@ -6,8 +6,15 @@
 //! render hot path permanently. Set `LSG_TRACE=out.json` and every
 //! scoped [`span`] records a complete (`"ph":"X"`) event into a global
 //! buffer; [`flush`] writes the whole buffer as a well-formed JSON
-//! object. The environment is read once, at the first span of the
-//! process (same latch idiom as `LSG_FORCE_SCALAR`).
+//! object.
+//!
+//! Since PR 10 the tracer is **runtime-toggleable**: [`start`] begins a
+//! fresh recording to a new path and [`stop`] flushes and disarms it —
+//! this is what the admin endpoint's `POST /trace/start|stop` drives
+//! (`docs/OBSERVABILITY.md`). The `LSG_TRACE` environment variable is
+//! now only the *boot-time default* (consulted once, at the first span
+//! or toggle), not a process-lifetime latch; the off-path cost is still
+//! a single relaxed load.
 //!
 //! Conventions: `pid` is always 1; real threads get dense `tid`s in
 //! creation order; retrospective scheduler events ride per-session
@@ -29,7 +36,7 @@ const OFF: u8 = 1;
 const ON: u8 = 2;
 
 static STATE: AtomicU8 = AtomicU8::new(UNINIT);
-static PATH: OnceLock<String> = OnceLock::new();
+static PATH: Mutex<Option<String>> = Mutex::new(None);
 static EPOCH: OnceLock<Instant> = OnceLock::new();
 static EVENTS: Mutex<Vec<TraceEvent>> = Mutex::new(Vec::new());
 static NEXT_TID: AtomicU32 = AtomicU32::new(1);
@@ -46,7 +53,9 @@ struct TraceEvent {
     dur_ns: u64,
 }
 
-/// Whether tracing is active (latched from `LSG_TRACE` on first call).
+/// Whether tracing is active right now. The boot-time default comes
+/// from `LSG_TRACE` (consulted on the first call); [`start`]/[`stop`]
+/// flip it at runtime.
 #[inline]
 pub fn enabled() -> bool {
     match STATE.load(Ordering::Relaxed) {
@@ -60,7 +69,7 @@ pub fn enabled() -> bool {
 fn init() -> bool {
     let on = match std::env::var("LSG_TRACE") {
         Ok(p) if !p.is_empty() => {
-            let _ = PATH.set(p);
+            *PATH.lock().unwrap() = Some(p);
             true
         }
         _ => false,
@@ -85,6 +94,33 @@ fn push_event(name: &'static str, tid: u32, start: Instant, end: Instant) {
             dur_ns,
         });
     }
+}
+
+/// Begin (or retarget) a recording: clears the event buffer, points the
+/// tracer at `path`, and enables span capture. Safe to call whether or
+/// not tracing was already on; the env default is latched first so a
+/// later [`stop`] returns to OFF, not to the env state.
+pub fn start(path: &str) {
+    enabled(); // latch the env default + epoch exactly once
+    if let Ok(mut events) = EVENTS.lock() {
+        events.clear();
+    }
+    *PATH.lock().unwrap() = Some(path.to_string());
+    STATE.store(ON, Ordering::Relaxed);
+}
+
+/// Stop recording: flush buffered events to the active path, then
+/// disable span capture. Returns the path written, or `None` when
+/// tracing was not on (or the write failed). The buffer is kept, so a
+/// later [`start`]-less [`flush`] call sees nothing new but loses
+/// nothing either.
+pub fn stop() -> Option<PathBuf> {
+    if !enabled() {
+        return None;
+    }
+    let written = flush();
+    STATE.store(OFF, Ordering::Relaxed);
+    written
 }
 
 /// Scoped span guard: records a complete event on drop when tracing is
@@ -133,7 +169,7 @@ pub fn complete_on(name: &'static str, track: u32, start: Instant, end: Instant)
     }
 }
 
-/// Write every event recorded so far to the `LSG_TRACE` path as a
+/// Write every event recorded so far to the active trace path as a
 /// Chrome trace-event JSON object. Keeps the buffer, so a later flush
 /// rewrites a strictly larger file — call at process exit (benches,
 /// examples) or after the workload of interest. Returns the path
@@ -143,7 +179,7 @@ pub fn flush() -> Option<PathBuf> {
     if !enabled() {
         return None;
     }
-    let path = PATH.get()?.clone();
+    let path = PATH.lock().ok()?.clone()?;
     let events: Vec<TraceEvent> = EVENTS.lock().ok()?.clone();
     let mut out = String::with_capacity(events.len() * 96 + 64);
     out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");

@@ -1,0 +1,284 @@
+//! Live introspection plane, end-to-end over real sockets (ISSUE 10):
+//! the admin HTTP endpoint's routes (`/metrics` exposition format,
+//! `/healthz` flipping under induced overload, `/sessions`, the trace
+//! toggle), and the flight recorder's anomaly trigger + JSON dump
+//! round-trip.
+//!
+//! Flight-recorder state (ring + anomaly window) and the tracer are
+//! process-global; tests that run paced sessions or assert exact
+//! anomaly-window behavior serialize on [`PACED`] so they cannot feed
+//! each other's windows. (The lib test binary is a separate process, so
+//! its paced unit tests never interfere here.)
+
+use ls_gaussian::coordinator::{CoordinatorConfig, StreamServer};
+use ls_gaussian::scene::{generate, SceneAssets};
+use ls_gaussian::telemetry::admin::AdminConfig;
+use ls_gaussian::telemetry::{flight, trace};
+use ls_gaussian::util::json::Json;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Mutex;
+
+/// Serializes tests that feed the process-global anomaly window.
+static PACED: Mutex<()> = Mutex::new(());
+
+fn admin_on() -> AdminConfig {
+    AdminConfig {
+        addr: "127.0.0.1:0".to_string(),
+        enabled: true,
+    }
+}
+
+/// Raw HTTP/1.1 request over a plain `TcpStream`; returns (status, body).
+fn http(addr: SocketAddr, method: &str, target: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).expect("connect admin");
+    let req = format!("{method} {target} HTTP/1.1\r\nHost: admin\r\nConnection: close\r\n\r\n");
+    s.write_all(req.as_bytes()).expect("send request");
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).expect("read response");
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .expect("status code")
+        .parse()
+        .expect("numeric status");
+    let body = raw
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    (status, body)
+}
+
+fn serving_server() -> (StreamServer, SocketAddr, Vec<ls_gaussian::scene::Pose>) {
+    let scene = generate("room", 0.04, 96, 96);
+    let poses = scene.sample_poses(6);
+    let mut server =
+        StreamServer::new(SceneAssets::from_scene(&scene), CoordinatorConfig::default());
+    let addr = server
+        .enable_admin(admin_on())
+        .expect("bind admin")
+        .expect("enabled config yields an address");
+    server.add_session();
+    server.add_session();
+    (server, addr, poses)
+}
+
+#[test]
+fn metrics_scrape_is_well_formed_prometheus() {
+    let (mut server, addr, poses) = serving_server();
+    for pose in &poses {
+        server.advance_all(&[*pose, *pose]);
+    }
+    server.publish_admin();
+
+    let (status, body) = http(addr, "GET", "/metrics");
+    assert_eq!(status, 200);
+    assert!(!body.is_empty(), "exposition must never be empty");
+
+    // Families + counters from the node writer.
+    assert!(body.contains("# TYPE lsg_frames_total counter"), "{body}");
+    assert!(body.contains("# TYPE lsg_admin_publish_seq gauge"));
+    assert!(body.contains("lsg_flight_events_total"));
+    // Quantile-labelled summary lines.
+    assert!(body.contains("lsg_frame_ms{quantile=\"0.5\"}"));
+    assert!(body.contains("lsg_frame_ms{quantile=\"0.99\"}"));
+    assert!(body.contains("lsg_frame_ms_count"));
+    // Per-session labels survive the socket round-trip.
+    assert!(body.contains("lsg_session_frames_total{session=\"0\"} "));
+    assert!(body.contains("lsg_session_frames_total{session=\"1\"} "));
+
+    // Every non-comment line is `name value` or `name{labels} value`
+    // with a parseable float — the format contract a scraper needs.
+    for line in body.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+        let (metric, value) = line.rsplit_once(' ').expect("name value");
+        assert!(
+            value.parse::<f64>().is_ok(),
+            "unparseable sample value in {line:?}"
+        );
+        if let Some(open) = metric.find('{') {
+            assert!(metric.ends_with('}'), "unbalanced labels in {line:?}");
+            let labels = &metric[open + 1..metric.len() - 1];
+            for pair in labels.split(',') {
+                let (_, v) = pair.split_once('=').expect("label pair");
+                assert!(
+                    v.starts_with('"') && v.ends_with('"'),
+                    "unquoted label value in {line:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn snapshot_and_sessions_routes_serve_parseable_json() {
+    let (mut server, addr, poses) = serving_server();
+    server.advance_all(&[poses[0], poses[1]]);
+    server.publish_admin();
+
+    let (status, body) = http(addr, "GET", "/snapshot.json");
+    assert_eq!(status, 200);
+    let snap = Json::parse(&body).expect("snapshot parses");
+    assert!(snap.get("node").is_some());
+    assert!(snap.get("sessions").is_some());
+
+    let (status, body) = http(addr, "GET", "/sessions");
+    assert_eq!(status, 200);
+    let sessions = Json::parse(&body).expect("sessions parse");
+    let arr = sessions.as_arr().expect("sessions is an array");
+    assert_eq!(arr.len(), 2);
+    for s in arr {
+        assert!(s.get("session").is_some());
+        assert!(s.get("qos_level").is_some());
+        assert!(s.get("window_frames").is_some());
+    }
+
+    let (status, _) = http(addr, "GET", "/nope");
+    assert_eq!(status, 404);
+}
+
+#[test]
+fn healthz_flips_under_induced_overload() {
+    let _guard = PACED.lock().unwrap_or_else(|e| e.into_inner());
+    let scene = generate("chair", 0.04, 96, 96);
+    let poses = scene.sample_poses(8);
+    let mut server =
+        StreamServer::new(SceneAssets::from_scene(&scene), CoordinatorConfig::default());
+    let addr = server
+        .enable_admin(admin_on())
+        .expect("bind admin")
+        .expect("address");
+
+    // Readiness before any snapshot publish is a refusal, not a panic.
+    // (enable_admin published once, so /readyz is already answerable.)
+    let (status, _) = http(addr, "GET", "/readyz");
+    assert_eq!(status, 200, "idle node is ready");
+    let (status, _) = http(addr, "GET", "/healthz");
+    assert_eq!(status, 200, "idle node is live");
+
+    // Induce overload: a 1 ns frame interval means every paced step
+    // finishes more than one interval late — a permanently stalled
+    // session by the scheduler's own definition.
+    let id = server.add_paced_session(
+        CoordinatorConfig::default(),
+        std::time::Duration::from_nanos(1),
+    );
+    for p in &poses {
+        server.scheduler_mut().push_pose(id, *p);
+    }
+    let done = server
+        .scheduler_mut()
+        .run_for(std::time::Duration::from_secs(30));
+    assert_eq!(done.len(), poses.len());
+    server.publish_admin();
+
+    // 1/1 sessions stalled (1000 pm) breaches both the readiness gate
+    // (500 pm) and the liveness gate (900 pm).
+    let (status, body) = http(addr, "GET", "/healthz");
+    assert_eq!(status, 503, "stalled node must flip /healthz: {body}");
+    let health = Json::parse(&body).expect("health json");
+    assert_eq!(health.get("healthy").and_then(Json::as_bool), Some(false));
+    assert!(health.str_or("reason", "").contains("stalled"));
+    let (status, _) = http(addr, "GET", "/readyz");
+    assert_eq!(status, 503);
+}
+
+#[test]
+fn trace_toggle_round_trips_over_the_socket() {
+    let (mut server, addr, poses) = serving_server();
+    let dir = std::env::temp_dir().join(format!("lsg_admin_trace_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("trace dir");
+    let path = dir.join("toggle.json");
+    let target = format!("/trace/start?path={}", path.display());
+
+    let (status, body) = http(addr, "POST", &target);
+    assert_eq!(status, 200);
+    assert_eq!(
+        Json::parse(&body).unwrap().get("tracing").and_then(Json::as_bool),
+        Some(true)
+    );
+    assert!(trace::enabled(), "POST /trace/start arms the tracer");
+
+    // Produce real spans while armed.
+    server.advance_all(&[poses[0], poses[1]]);
+    assert!(trace::buffered_events() > 0, "spans recorded while armed");
+
+    let (status, body) = http(addr, "POST", "/trace/stop");
+    assert_eq!(status, 200);
+    let stop = Json::parse(&body).unwrap();
+    assert_eq!(stop.get("tracing").and_then(Json::as_bool), Some(false));
+    assert!(!trace::enabled(), "POST /trace/stop disarms the tracer");
+    let written = stop.str_or("written", "");
+    assert_eq!(written, path.to_string_lossy());
+
+    // The flushed file is a well-formed Chrome trace document.
+    let text = std::fs::read_to_string(&path).expect("trace file written");
+    let doc = Json::parse(&text).expect("trace file parses");
+    assert!(!doc.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+}
+
+#[test]
+fn anomaly_trigger_dumps_a_parseable_flight_record() {
+    let _guard = PACED.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = std::env::temp_dir().join(format!("lsg_admin_flight_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("dump dir");
+    let dump = dir.join("flightrecord.json");
+    flight::set_dump_path(Some(dump.to_str().expect("utf-8 temp path")));
+    flight::reset_anomaly_window();
+
+    // A full window of maximally-late stalled frames: every gate (p99
+    // lateness breach AND stall burst) fires on the window's last
+    // observation, exactly once.
+    let interval_ns = 1_000_000; // 1 ms cadence
+    let lateness_ns = 10 * interval_ns; // 10 ms late every frame
+    let mut fired = 0;
+    for _ in 0..flight::ANOMALY_WINDOW {
+        if flight::note_paced(7, 2 * interval_ns, lateness_ns, interval_ns, true, true, 1) {
+            fired += 1;
+        }
+    }
+    assert_eq!(fired, 1, "one full bad window → exactly one trigger");
+
+    // The auto-dump landed and round-trips through the JSON parser.
+    let text = std::fs::read_to_string(&dump).expect("anomaly auto-dump written");
+    let doc = Json::parse(&text).expect("flight dump parses");
+    let events = doc.get("events").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    assert!(
+        events
+            .iter()
+            .any(|e| e.str_or("kind", "") == "anomaly_trigger"),
+        "dump must contain the trigger event"
+    );
+    assert!(
+        events
+            .iter()
+            .any(|e| e.str_or("kind", "") == "frame" && e.f64_or("session", -1.0) == 7.0),
+        "dump must contain the frames that caused it"
+    );
+
+    // A clean window does not re-trigger.
+    flight::reset_anomaly_window();
+    for _ in 0..flight::ANOMALY_WINDOW {
+        assert!(!flight::note_paced(7, 1_000, 0, interval_ns, true, false, 0));
+    }
+    flight::set_dump_path(None);
+
+    // And the same record is served over the endpoint.
+    let scene = generate("room", 0.04, 64, 64);
+    let mut server =
+        StreamServer::new(SceneAssets::from_scene(&scene), CoordinatorConfig::default());
+    let addr = server
+        .enable_admin(admin_on())
+        .expect("bind admin")
+        .expect("address");
+    let (status, body) = http(addr, "GET", "/flightrecord");
+    assert_eq!(status, 200);
+    let doc = Json::parse(&body).expect("endpoint flight record parses");
+    assert!(doc
+        .get("events")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .any(|e| e.str_or("kind", "") == "anomaly_trigger"));
+}
